@@ -1,0 +1,7 @@
+"""Pytest bootstrap: make `compile` importable when running from the repo root
+(`pytest python/tests/`), matching `cd python && pytest tests/`."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,82 @@
+//! Planner: describe any hierarchical cluster in TOML, get the model-guided
+//! HybridEP deployment plan and the predicted speedup over vanilla EP.
+//!
+//!   cargo run --release --example planner -- --config configs/cluster_4dc.toml \
+//!       --data-mb 48 --expert-mb 8 --cr 50
+
+use anyhow::Result;
+use hybrid_ep::cluster::ClusterSpec;
+use hybrid_ep::model::solver;
+use hybrid_ep::moe::{GpuSpec, Routing};
+use hybrid_ep::report::experiments::workload_from_sizes;
+use hybrid_ep::report::Table;
+use hybrid_ep::systems::hybrid_ep::HybridEp;
+use hybrid_ep::systems::{ep, SchedCtx, System};
+use hybrid_ep::topology::Topology;
+use hybrid_ep::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let cluster = match args.get("config") {
+        Some(path) => {
+            let v = hybrid_ep::config::load(std::path::Path::new(path))?;
+            ClusterSpec::from_config(&v)?
+        }
+        None => hybrid_ep::report::experiments::paper_cluster_l(),
+    };
+    let d = args.f64_or("data-mb", 48.0)? * 1e6;
+    let e = args.f64_or("expert-mb", 8.0)? * 1e6;
+    let cr = args.f64_or("cr", 50.0)?;
+    let layers = args.usize_or("layers", 12)?;
+
+    let w = workload_from_sizes(d, e, layers, true);
+    let gpu = GpuSpec::a800();
+    let input = w.plan_input(&gpu, cluster.total_gpus(), w.pe_bytes() / cr);
+    let plan = solver::plan_multilevel(&cluster, &input)?;
+
+    println!(
+        "cluster {:?}: {} GPUs across {} levels",
+        cluster.name,
+        cluster.total_gpus(),
+        cluster.levels.len()
+    );
+    let mut t = Table::new("Plan", &["level", "name", "fanout", "bw", "S_ED", "p", "case"]);
+    for (lp, spec) in plan.levels.iter().zip(&cluster.levels) {
+        t.row(vec![
+            lp.level.to_string(),
+            spec.name.clone(),
+            spec.fanout.to_string(),
+            format!("{:.1} Gbps", spec.bandwidth * 8.0 / 1e9),
+            lp.s_ed.to_string(),
+            format!("{:.3}", lp.p),
+            format!("{:?}", lp.case),
+        ]);
+    }
+    t.print();
+
+    // validate the plan end-to-end on the simulator
+    let routing = Routing::uniform(
+        cluster.total_gpus(),
+        cluster.total_gpus() * w.experts_per_gpu,
+        w.tokens_per_gpu,
+        w.k,
+    );
+    let ctx = SchedCtx::new(&cluster, &w, &routing);
+    let ep_time = ep::Tutel::default().iteration_time(&ctx);
+    let hybrid = HybridEp {
+        partition: Some(plan.partition_sizes.clone()),
+        migration: Some(Default::default()),
+    };
+    let hy_time = hybrid.iteration_time(&ctx);
+    println!(
+        "simulated iteration: Tutel-EP {} vs HybridEP {} → {:.2}× speedup",
+        hybrid_ep::util::fmt_secs(ep_time),
+        hybrid_ep::util::fmt_secs(hy_time),
+        ep_time / hy_time
+    );
+
+    let topo = Topology::build(cluster.multilevel(), hybrid.resolve_partition(&ctx));
+    let f = topo.frequency();
+    println!("topology: {} A2A pairs, {} AG pairs (Table VII semantics)", f.a2a, f.ag);
+    Ok(())
+}

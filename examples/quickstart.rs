@@ -1,0 +1,85 @@
+//! Quickstart: the three layers in one page.
+//!
+//! 1. Load an AOT Pallas artifact and run the expert FFN on the PJRT runtime.
+//! 2. Plan a cross-DC deployment with the stream model.
+//! 3. Inspect the resulting communication topology.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use anyhow::Result;
+use hybrid_ep::cluster::Multilevel;
+use hybrid_ep::model::solver;
+use hybrid_ep::model::StreamConfig;
+use hybrid_ep::runtime::exec::literal_f32;
+use hybrid_ep::runtime::{Artifacts, Engine};
+use hybrid_ep::topology::{DomainPartition, Topology};
+use hybrid_ep::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // --- 1. Layer-1/2: run the Pallas expert-FFN kernel through PJRT -------
+    let arts = Artifacts::discover()?;
+    let mut engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    let demo = arts.demo_config()?;
+    let (e, h, m) = (
+        demo.req("e")?.as_usize()?,
+        demo.req("h")?.as_usize()?,
+        demo.req("m")?.as_usize()?,
+    );
+    let c = arts.manifest.at(&["demo", "capacity"])?.as_usize()?;
+    let ffn = engine.load(&arts.demo_entry("expert_ffn")?)?;
+    let mut rng = Rng::new(0);
+    let mut rand = |n: usize| (0..n).map(|_| rng.normal() as f32 * 0.1).collect::<Vec<_>>();
+    let x = rand(e * c * h);
+    let w1 = rand(e * h * m);
+    let w2 = rand(e * m * h);
+    let t0 = std::time::Instant::now();
+    let out = ffn.run(&[
+        literal_f32(&x, &[e, c, h])?,
+        literal_f32(&w1, &[e, h, m])?,
+        literal_f32(&w2, &[e, m, h])?,
+    ])?;
+    println!(
+        "expert_ffn (Pallas, AOT): [{e}, {c}, {h}] in {:.2} ms → output sum {:.4}",
+        t0.elapsed().as_secs_f64() * 1e3,
+        out[0].to_vec::<f32>()?.iter().sum::<f32>()
+    );
+
+    // --- 2. Layer-3: plan a 4-DC deployment with the stream model ----------
+    let stream = StreamConfig {
+        g: 4,                          // 4 DCs
+        d_bytes: 48e6,                 // 48 MB activations leave each DC
+        pe_bytes: 8e6 / 50.0,          // 8 MB experts, SR-compressed 50×
+        n_experts: 2,
+        bandwidth: 10e9 / 8.0,         // 10 Gbps inter-DC
+        lat_pe: 2e-3,
+        lat_ep: 0.5e-3,
+    };
+    let sol = solver::solve_continuous(&stream);
+    let grid = solver::solve_grid(&stream);
+    println!(
+        "\nstream model: continuous p* = {:.3} ({:?}), deployable S_ED = {} (p = {:.2})",
+        sol.p_star, sol.case, grid.s_ed, grid.p
+    );
+    println!(
+        "predicted: EP = {:.1} ms vs HybridEP = {:.1} ms ({:.2}× speedup)",
+        stream.lat_final(1.0) * 1e3,
+        grid.latency * 1e3,
+        stream.lat_final(1.0) / grid.latency
+    );
+
+    // --- 3. The communication topology it implies ---------------------------
+    let ml = Multilevel::new(vec![4])?;
+    let part = DomainPartition::new(&ml, vec![grid.s_ed])?;
+    let topo = Topology::build(ml, part);
+    let f = topo.frequency();
+    println!("\ntopology: {} A2A pairs, {} AG pairs", f.a2a, f.ag);
+    for gpu in 0..4 {
+        println!(
+            "  DC {gpu}: expert group {:?}, A2A peers {:?}",
+            topo.expert_group(gpu),
+            topo.a2a_peers(gpu).collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}

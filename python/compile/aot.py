@@ -1,0 +1,250 @@
+"""AOT compile path: lower every Layer-2/Layer-1 entry point to HLO text.
+
+Run once by ``make artifacts`` (never on the request path):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Produces in ``artifacts/``:
+
+* ``train_step_<profile>.hlo.txt`` / ``eval_<profile>.hlo.txt`` — full training
+  step (fwd + bwd + Adam, Pallas expert kernels inside) and eval loss, for the
+  ``test``/``small``/``large`` model profiles.
+* ``params_<profile>.bin`` — initial parameters, flat f32 concatenation in
+  ``flatten_spec`` order (little-endian), so Rust reproduces python init
+  exactly.
+* ``expert_ffn_demo.hlo.txt`` / ``sr_decode_ffn_demo.hlo.txt`` /
+  ``pre_expert_demo.hlo.txt`` — standalone stages for the Rust multi-worker
+  cross-DC runtime and the Fig. 11/12/15 benches.
+* ``gemm_<L>x<H>x<M>.hlo.txt`` — bare GeMMs for Fig. 11 compute verification.
+* ``manifest.json`` — input names/shapes/dtypes per artifact, model configs,
+  expert-weight slot indices (for SR migration), parameter counts.
+* ``golden_sr.json`` — reference SR-codec vectors for the Rust codec tests.
+
+Interchange format is HLO **text**: jax ≥ 0.5 serialized HloModuleProto uses
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import moe_ffn, ref
+
+# ---------------------------------------------------------------------------
+# Model profiles (paper Table II analogues, scaled for this testbed)
+# ---------------------------------------------------------------------------
+
+PROFILES: dict[str, model.MoEConfig] = {
+    # tiny: python tests + rust integration tests (sub-second everything);
+    # high lr so learning is visible within a ~30-step test horizon
+    "test": model.MoEConfig(
+        vocab=64, seq=16, batch=2, h=32, m=64, e=4, k=2, n_layers=2, n_heads=2,
+        lr=1e-2,
+    ),
+    # default end-to-end profile (~20M params), a few hundred steps in minutes
+    "small": model.MoEConfig(
+        vocab=512, seq=64, batch=8, h=256, m=768, e=24, k=2, n_layers=4,
+        n_heads=4, moe_every=2,
+    ),
+    # ~100M-param profile for the headline train_e2e run
+    "large": model.MoEConfig(
+        vocab=1024, seq=64, batch=8, h=512, m=768, e=40, k=1, n_layers=6,
+        n_heads=8, moe_every=2,
+    ),
+}
+
+# Demo stage dimensions for the multi-worker cross-DC runtime: one MoE block
+# worth of work per worker (B=4 local batch).
+DEMO = model.MoEConfig(
+    vocab=256, seq=32, batch=4, h=128, m=256, e=8, k=1, n_layers=1, n_heads=4
+)
+
+GEMM_SIZES = [(128, 128, 128), (256, 256, 256), (512, 512, 512), (1024, 1024, 1024)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by text parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_of(x) -> dict:
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def lower_artifact(out_dir: str, name: str, fn, example_args, input_names=None) -> dict:
+    """Lower ``fn`` at ``example_args``, write HLO text, return manifest entry."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_tree = jax.eval_shape(fn, *example_args)
+    outputs = [_spec_of(o) for o in jax.tree_util.tree_leaves(out_tree)]
+    names = input_names or [f"arg{i}" for i in range(len(example_args))]
+    inputs = [{"name": n, **_spec_of(a)} for n, a in zip(names, example_args)]
+    print(f"  {fname}: {len(text) / 1e6:.2f} MB HLO, {len(inputs)} inputs, {len(outputs)} outputs")
+    return {"file": fname, "inputs": inputs, "outputs": outputs}
+
+
+def build_profile(out_dir: str, pname: str, cfg: model.MoEConfig) -> dict:
+    """Lower train_step + eval for one profile; dump init params."""
+    print(f"profile {pname}: {dataclasses.asdict(cfg)}")
+    params = model.init_params(cfg, jax.random.PRNGKey(42))
+    leaves = jax.tree_util.tree_leaves(params)
+    spec = model.flatten_spec(cfg)
+    assert len(leaves) == len(spec)
+
+    # init params binary (flat f32 LE concat in flatten order)
+    flat = np.concatenate([np.asarray(l, np.float32).reshape(-1) for l in leaves])
+    flat.tofile(os.path.join(out_dir, f"params_{pname}.bin"))
+
+    batch = jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)
+    t0 = jax.ShapeDtypeStruct((), jnp.float32)
+    state_shapes = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+
+    flat_step, n = model.make_flat_train_step(cfg)
+    step_names = (
+        ["batch", "t"]
+        + [f"params/{s['name']}" for s in spec]
+        + [f"m/{s['name']}" for s in spec]
+        + [f"v/{s['name']}" for s in spec]
+    )
+    train_entry = lower_artifact(
+        out_dir,
+        f"train_step_{pname}",
+        flat_step,
+        [batch, t0, *state_shapes, *state_shapes, *state_shapes],
+        step_names,
+    )
+
+    flat_eval, _ = model.make_flat_eval(cfg)
+    eval_entry = lower_artifact(
+        out_dir,
+        f"eval_{pname}",
+        flat_eval,
+        [batch, *state_shapes],
+        ["batch"] + [f"params/{s['name']}" for s in spec],
+    )
+
+    return {
+        "config": dataclasses.asdict(cfg),
+        "param_count": int(flat.size),
+        "n_leaves": n,
+        "capacity": cfg.capacity,
+        "expert_param_bytes": 4 * cfg.expert_params,
+        "params_file": f"params_{pname}.bin",
+        "param_spec": spec,
+        "expert_slots": [i for i, s in enumerate(spec) if s["expert_weight"]],
+        "train_step": train_entry,
+        "eval": eval_entry,
+    }
+
+
+def build_demo(out_dir: str) -> dict:
+    """Standalone stage artifacts for the multi-worker runtime + benches."""
+    cfg = DEMO
+    e, c, h, m = cfg.e, cfg.capacity, cfg.h, cfg.m
+    x = jax.ShapeDtypeStruct((e, c, h), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((e, h, m), jnp.float32)
+    w2 = jax.ShapeDtypeStruct((e, m, h), jnp.float32)
+    sw1 = jax.ShapeDtypeStruct((h, m), jnp.float32)
+    sw2 = jax.ShapeDtypeStruct((m, h), jnp.float32)
+
+    entries = {
+        "expert_ffn": lower_artifact(
+            out_dir, "expert_ffn_demo",
+            lambda a, b, c_: (moe_ffn.expert_ffn_tiled(a, b, c_),),
+            [x, w1, w2], ["x", "w1", "w2"],
+        ),
+        "sr_decode_ffn": lower_artifact(
+            out_dir, "sr_decode_ffn_demo",
+            lambda a, s1, r1, s2, r2: (moe_ffn.sr_decode_ffn(a, s1, r1, s2, r2),),
+            [x, sw1, w1, sw2, w2], ["x", "shared_w1", "res_w1", "shared_w2", "res_w2"],
+        ),
+    }
+
+    pre = model.make_pre_expert(cfg)
+    xx = jax.ShapeDtypeStruct((cfg.batch, cfg.seq, h), jnp.float32)
+    ww = jax.ShapeDtypeStruct((h, h), jnp.float32)
+    gg = jax.ShapeDtypeStruct((h, cfg.e), jnp.float32)
+    entries["pre_expert"] = lower_artifact(
+        out_dir, "pre_expert_demo", pre,
+        [xx, ww, ww, ww, ww, gg], ["x", "wq", "wk", "wv", "wo", "gate"],
+    )
+    return {"config": dataclasses.asdict(cfg), "capacity": cfg.capacity, "entries": entries}
+
+
+def build_gemms(out_dir: str) -> dict:
+    entries = {}
+    for (l, h, m) in GEMM_SIZES:
+        a = jax.ShapeDtypeStruct((l, h), jnp.float32)
+        b = jax.ShapeDtypeStruct((h, m), jnp.float32)
+        entries[f"{l}x{h}x{m}"] = lower_artifact(
+            out_dir, f"gemm_{l}x{h}x{m}", lambda x, y: (x @ y,), [a, b], ["x", "y"]
+        )
+    return entries
+
+
+def build_golden_sr(out_dir: str) -> None:
+    """Golden vectors so the Rust SR codec can be cross-checked bit-for-bit."""
+    rng = np.random.default_rng(7)
+    cases = []
+    for n, k in [(16, 4), (64, 8), (256, 32), (256, 256)]:
+        w = rng.standard_normal(n).astype(np.float32)
+        shared = rng.standard_normal(n).astype(np.float32) * 0.5
+        vals, idx = ref.sr_encode_ref(jnp.array(w), jnp.array(shared), k)
+        dec = ref.sr_decode_dense_ref(jnp.array(shared), vals, idx)
+        cases.append(
+            {
+                "n": n,
+                "k": k,
+                "w": w.tolist(),
+                "shared": shared.tolist(),
+                "values": np.asarray(vals).tolist(),
+                "indices": np.asarray(idx).tolist(),
+                "decoded": np.asarray(dec).tolist(),
+            }
+        )
+    with open(os.path.join(out_dir, "golden_sr.json"), "w") as f:
+        json.dump({"cases": cases}, f)
+    print(f"  golden_sr.json: {len(cases)} cases")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--profiles", default="test,small,large",
+        help="comma-separated subset of profiles to lower",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest: dict = {"profiles": {}, "demo": None, "gemm": {}}
+    for pname in args.profiles.split(","):
+        manifest["profiles"][pname] = build_profile(args.out, pname, PROFILES[pname])
+    manifest["demo"] = build_demo(args.out)
+    manifest["gemm"] = build_gemms(args.out)
+    build_golden_sr(args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest.json written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,350 @@
+"""Layer-2: the MoE transformer in JAX (build-time only).
+
+Implements the model family of HybridEP's evaluation (Table II): a GPT-style
+decoder where every ``moe_every``-th block replaces the dense FFN with an MoE
+layer (gate network + Top-K routing + capacity dispatch + grouped expert FFN).
+The expert FFN is the Layer-1 Pallas kernel (``kernels.moe_ffn.expert_ffn``),
+so the AOT lowering of any function here carries the kernel in the same HLO.
+
+Everything a training iteration needs — forward, loss, backward, Adam — is a
+single pure function ``train_step`` so the Rust coordinator can drive training
+by repeatedly executing one PJRT executable with Python fully out of the loop.
+
+Parameters travel as a flat list of arrays; ``flatten_spec`` publishes the
+canonical (name, shape, dtype) order that ``aot.py`` writes into
+``artifacts/manifest.json`` and the Rust runtime replays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    """Model/training configuration (paper Table II/III vocabulary).
+
+    E = num experts, K = activated experts, H/M = the two expert dimensions,
+    B = batch, L = sequence length.
+    """
+
+    vocab: int = 256
+    seq: int = 64
+    batch: int = 8
+    h: int = 128
+    m: int = 256
+    e: int = 8
+    k: int = 2
+    n_layers: int = 2
+    n_heads: int = 4
+    moe_every: int = 1  # every n-th block is MoE (1 = all blocks MoE)
+    capacity_factor: float = 1.25
+    lr: float = 1e-3
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+
+    @property
+    def tokens(self) -> int:
+        return self.batch * self.seq
+
+    @property
+    def capacity(self) -> int:
+        """Per-expert token capacity, rounded up to a multiple of 8."""
+        c = math.ceil(self.tokens * self.k * self.capacity_factor / self.e)
+        return max(8, (c + 7) // 8 * 8)
+
+    @property
+    def expert_params(self) -> int:
+        """P_E of the stream model: parameters of one expert."""
+        return 2 * self.h * self.m
+
+    def is_moe_block(self, i: int) -> bool:
+        return (i + 1) % self.moe_every == 0
+
+    def param_count(self, params=None) -> int:
+        p = params if params is not None else init_params(self, jax.random.PRNGKey(0))
+        return sum(int(x.size) for x in jax.tree_util.tree_leaves(p))
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: MoEConfig, key: jax.Array) -> dict[str, Any]:
+    """Initialize all parameters as a (sorted-key) nested dict pytree."""
+    h, m = cfg.h, cfg.m
+    keys = iter(jax.random.split(key, 8 + 16 * cfg.n_layers))
+
+    def dense(k, shape, scale=None):
+        scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+        return (jax.random.normal(k, shape) * scale).astype(jnp.float32)
+
+    params: dict[str, Any] = {
+        "embed": dense(next(keys), (cfg.vocab, h), scale=0.02),
+        "pos": dense(next(keys), (cfg.seq, h), scale=0.02),
+        "ln_f": {"g": jnp.ones((h,)), "b": jnp.zeros((h,))},
+    }
+    blocks = []
+    for i in range(cfg.n_layers):
+        blk: dict[str, Any] = {
+            "ln1": {"g": jnp.ones((h,)), "b": jnp.zeros((h,))},
+            "ln2": {"g": jnp.ones((h,)), "b": jnp.zeros((h,))},
+            "attn": {
+                "wq": dense(next(keys), (h, h)),
+                "wk": dense(next(keys), (h, h)),
+                "wv": dense(next(keys), (h, h)),
+                "wo": dense(next(keys), (h, h)),
+            },
+        }
+        if cfg.is_moe_block(i):
+            blk["moe"] = {
+                "gate": dense(next(keys), (h, cfg.e), scale=0.02),
+                "w1": dense(next(keys), (cfg.e, h, m)),
+                "w2": dense(next(keys), (cfg.e, m, h)),
+            }
+        else:
+            blk["ffn"] = {
+                "w1": dense(next(keys), (h, m)),
+                "w2": dense(next(keys), (m, h)),
+            }
+        blocks.append(blk)
+    params["blocks"] = blocks
+    return params
+
+
+def flatten_spec(cfg: MoEConfig) -> list[dict[str, Any]]:
+    """Canonical flat parameter order: [{name, shape, dtype, expert_weight}]."""
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    leaves, _ = jax.tree_util.tree_flatten_with_path(params)
+    spec = []
+    for path, leaf in leaves:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        spec.append(
+            {
+                "name": name,
+                "shape": list(leaf.shape),
+                "dtype": str(leaf.dtype),
+                # expert FFN weights are the ones SR-migration compresses
+                "expert_weight": ("moe/w1" in name or "moe/w2" in name),
+            }
+        )
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(cfg: MoEConfig, p, x):
+    """Causal multi-head attention. x: [B, S, H]."""
+    b, s, h = x.shape
+    nh, hd = cfg.n_heads, h // cfg.n_heads
+
+    def split(w):
+        return (x @ w).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(p["wq"]), split(p["wk"]), split(p["wv"])
+    att = jnp.einsum("bnqd,bnkd->bnqk", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bnqk,bnkd->bnqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h)
+    return out @ p["wo"]
+
+
+def _topk_iterative(x: jax.Array, k: int):
+    """Top-k along the last axis via k argmax+mask rounds.
+
+    ``jax.lax.top_k`` lowers to the modern HLO ``topk`` op, which the
+    xla_extension 0.5.1 text parser used by the Rust runtime rejects;
+    iterative argmax lowers to plain reduces and round-trips cleanly.
+    K is small (1–4) in every paper configuration, so the cost is negligible.
+    """
+    vals, idxs = [], []
+    cur = x
+    for _ in range(k):
+        i = jnp.argmax(cur, axis=-1)  # [T]
+        v = jnp.take_along_axis(cur, i[:, None], axis=-1)[:, 0]
+        idxs.append(i)
+        vals.append(v)
+        mask = jax.nn.one_hot(i, x.shape[-1], dtype=jnp.bool_)
+        cur = jnp.where(mask, -jnp.inf, cur)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def moe_dispatch(cfg: MoEConfig, gate_logits: jax.Array):
+    """Top-K capacity-constrained routing (Switch/GShard style).
+
+    gate_logits: [T, E]. Returns (dispatch [T,E,C] f32 0/1, combine [T,E,C]).
+    Tokens overflowing an expert's capacity are dropped (standard EP
+    semantics; HybridEP's modeling assumes even activation, §III).
+    """
+    t, e = gate_logits.shape
+    c = cfg.capacity
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    gate_vals, idx = _topk_iterative(probs, cfg.k)  # [T, K]
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # [T, K, E]
+    # position of each (token, k) within its expert queue, counting k-major
+    flat = onehot.transpose(1, 0, 2).reshape(cfg.k * t, e)  # [K*T, E]
+    pos_flat = jnp.cumsum(flat, axis=0) - flat  # [K*T, E]
+    pos = pos_flat.reshape(cfg.k, t, e).transpose(1, 0, 2)  # [T, K, E]
+    pos = jnp.sum(pos * onehot, axis=-1)  # [T, K]
+    keep = pos < c
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), c, dtype=jnp.float32) * keep[..., None]  # [T,K,C]
+    dispatch = jnp.einsum("tke,tkc->tec", onehot, pos_oh)
+    combine = jnp.einsum("tk,tke,tkc->tec", gate_vals, onehot, pos_oh)
+    return dispatch, combine
+
+
+def _moe_layer(cfg: MoEConfig, p, x):
+    """MoE block body: gate → dispatch → Pallas expert FFN → combine.
+
+    x: [B, S, H] → [B, S, H].
+    """
+    b, s, h = x.shape
+    xt = x.reshape(b * s, h)
+    dispatch, combine = moe_dispatch(cfg, xt @ p["gate"])
+    xin = jnp.einsum("tec,th->ech", dispatch, xt)  # [E, C, H]
+    out = moe_ffn.expert_ffn(xin, p["w1"], p["w2"])  # Pallas L1 kernel
+    y = jnp.einsum("tec,ech->th", combine, out)
+    return y.reshape(b, s, h)
+
+
+def _dense_ffn(p, x):
+    return jax.nn.gelu(x @ p["w1"]) @ p["w2"]
+
+
+def forward(cfg: MoEConfig, params, tokens: jax.Array) -> jax.Array:
+    """tokens [B, S] int32 → logits [B, S, vocab]."""
+    x = params["embed"][tokens] + params["pos"][None, : tokens.shape[1]]
+    for blk in params["blocks"]:
+        x = x + _attention(cfg, blk["attn"], _layer_norm(x, blk["ln1"]["g"], blk["ln1"]["b"]))
+        xn = _layer_norm(x, blk["ln2"]["g"], blk["ln2"]["b"])
+        if "moe" in blk:
+            x = x + _moe_layer(cfg, blk["moe"], xn)
+        else:
+            x = x + _dense_ffn(blk["ffn"], xn)
+    x = _layer_norm(x, params["ln_f"]["g"], params["ln_f"]["b"])
+    return x @ params["embed"].T  # tied LM head
+
+
+def loss_fn(cfg: MoEConfig, params, batch: jax.Array) -> jax.Array:
+    """Next-token cross-entropy. batch: [B, S+1] int32."""
+    inp, tgt = batch[:, :-1], batch[:, 1:]
+    logits = forward(cfg, params, inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+# ---------------------------------------------------------------------------
+# Training step (fwd + bwd + Adam in one jittable function)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: MoEConfig):
+    """Returns ``step(params, m, v, t, batch) -> (params', m', v', t+1, loss)``.
+
+    All states are pytrees with the ``flatten_spec`` structure; ``t`` is a
+    float32 scalar step counter (for Adam bias correction).
+    """
+
+    def train_step(params, m, v, t, batch):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+        t1 = t + 1.0
+        b1, b2, eps, lr = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps, cfg.lr
+
+        def upd(p, g, mi, vi):
+            mi = b1 * mi + (1 - b1) * g
+            vi = b2 * vi + (1 - b2) * g * g
+            mhat = mi / (1 - b1**t1)
+            vhat = vi / (1 - b2**t1)
+            return p - lr * mhat / (jnp.sqrt(vhat) + eps), mi, vi
+
+        out = jax.tree_util.tree_map(upd, params, grads, m, v)
+        new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, new_m, new_v, t1, loss
+
+    return train_step
+
+
+def make_flat_train_step(cfg: MoEConfig):
+    """Flat-list variant for AOT: inputs/outputs are positional arrays.
+
+    Signature: ``(batch_i32[B,S+1], t_f32[], *params, *m, *v) ->
+    (loss_f32[], t+1, *params', *m', *v')``.
+    """
+    treedef = jax.tree_util.tree_structure(init_params(cfg, jax.random.PRNGKey(0)))
+    n = treedef.num_leaves
+    step = make_train_step(cfg)
+
+    def flat_step(batch, t, *flat):
+        assert len(flat) == 3 * n, f"expected {3 * n} state arrays, got {len(flat)}"
+        params = jax.tree_util.tree_unflatten(treedef, flat[:n])
+        m = jax.tree_util.tree_unflatten(treedef, flat[n : 2 * n])
+        v = jax.tree_util.tree_unflatten(treedef, flat[2 * n :])
+        params, m, v, t1, loss = step(params, m, v, t, batch)
+        return (
+            loss,
+            t1,
+            *jax.tree_util.tree_leaves(params),
+            *jax.tree_util.tree_leaves(m),
+            *jax.tree_util.tree_leaves(v),
+        )
+
+    return flat_step, n
+
+
+def make_flat_eval(cfg: MoEConfig):
+    """Flat eval loss: ``(batch, *params) -> (loss,)``."""
+    treedef = jax.tree_util.tree_structure(init_params(cfg, jax.random.PRNGKey(0)))
+    n = treedef.num_leaves
+
+    def flat_eval(batch, *flat):
+        params = jax.tree_util.tree_unflatten(treedef, flat[:n])
+        return (loss_fn(cfg, params, batch),)
+
+    return flat_eval, n
+
+
+# ---------------------------------------------------------------------------
+# Standalone pieces for the Rust multi-worker runtime (cross_dc_demo)
+# ---------------------------------------------------------------------------
+
+
+def make_pre_expert(cfg: MoEConfig):
+    """Pre-expert stage of one block: LN + attention + LN + gate logits.
+
+    ``(x[B,S,H], wq, wk, wv, wo, gate[H,E]) -> (h[B,S,H], gate_logits[T,E])``
+    This is ``Lat_comp^PE`` of the stream model, runnable per-worker.
+    """
+
+    def pre_expert(x, wq, wk, wv, wo, gate):
+        p = {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+        g = jnp.ones((cfg.h,))
+        b = jnp.zeros((cfg.h,))
+        h = x + _attention(cfg, p, _layer_norm(x, g, b))
+        hn = _layer_norm(h, g, b)
+        logits = hn.reshape(-1, cfg.h) @ gate
+        return h, logits
+
+    return pre_expert

@@ -1,0 +1,83 @@
+"""Manifest/artifact consistency (requires `make artifacts` to have run)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_files_exist():
+    m = manifest()
+    for prof in m["profiles"].values():
+        for entry in (prof["train_step"], prof["eval"]):
+            assert os.path.exists(os.path.join(ART, entry["file"]))
+        assert os.path.exists(os.path.join(ART, prof["params_file"]))
+    for entry in m["demo"]["entries"].values():
+        assert os.path.exists(os.path.join(ART, entry["file"]))
+    for entry in m["gemm"].values():
+        assert os.path.exists(os.path.join(ART, entry["file"]))
+
+
+def test_params_bin_matches_spec_size():
+    m = manifest()
+    for prof in m["profiles"].values():
+        total = sum(int(np.prod(s["shape"])) for s in prof["param_spec"])
+        assert total == prof["param_count"]
+        data = np.fromfile(os.path.join(ART, prof["params_file"]), np.float32)
+        assert data.size == total
+        assert np.isfinite(data).all()
+
+
+def test_train_step_io_arity():
+    m = manifest()
+    for prof in m["profiles"].values():
+        n = prof["n_leaves"]
+        ts = prof["train_step"]
+        assert len(ts["inputs"]) == 2 + 3 * n
+        assert len(ts["outputs"]) == 2 + 3 * n
+        assert ts["inputs"][0]["name"] == "batch"
+        assert ts["inputs"][1]["name"] == "t"
+        # output arity mirrors input state: loss, t, then state
+        for i, s in zip(ts["inputs"][2:], ts["outputs"][2:]):
+            assert i["shape"] == s["shape"], i
+
+
+def test_expert_slots_shapes():
+    m = manifest()
+    for prof in m["profiles"].values():
+        e = prof["config"]["e"]
+        for i in prof["expert_slots"]:
+            assert prof["param_spec"][i]["shape"][0] == e
+
+
+def test_golden_sr_cases_well_formed():
+    with open(os.path.join(ART, "golden_sr.json")) as f:
+        g = json.load(f)
+    for case in g["cases"]:
+        assert len(case["w"]) == case["n"]
+        assert len(case["values"]) == case["k"]
+        assert len(case["indices"]) == case["k"]
+        assert sorted(case["indices"]) == case["indices"]
+        dec = np.array(case["decoded"])
+        w = np.array(case["w"])
+        sh = np.array(case["shared"])
+        if case["k"] == case["n"]:
+            np.testing.assert_allclose(dec, w, atol=1e-6)
+        # decoded equals w at encoded indices, shared elsewhere
+        idx = set(case["indices"])
+        for j in range(case["n"]):
+            target = w[j] if j in idx else sh[j]
+            assert abs(dec[j] - target) < 1e-5

@@ -1,0 +1,130 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/tilings; every case asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import moe_ffn, ref
+
+ATOL = 2e-4
+RTOL = 2e-4
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    e=st.integers(1, 5),
+    c_blocks=st.integers(1, 4),
+    bt=st.sampled_from([1, 2, 4, 8]),
+    h=st.sampled_from([4, 8, 16, 32]),
+    m=st.sampled_from([4, 12, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_expert_ffn_matches_ref(e, c_blocks, bt, h, m, seed):
+    rng = np.random.default_rng(seed)
+    c = c_blocks * bt
+    x, w1, w2 = rand(rng, e, c, h), rand(rng, e, h, m), rand(rng, e, m, h)
+    got = moe_ffn.expert_ffn_tiled(x, w1, w2, block_tokens=bt)
+    want = ref.expert_ffn_ref(x, w1, w2)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    e=st.integers(1, 4),
+    c=st.sampled_from([8, 16]),
+    h=st.sampled_from([8, 16]),
+    m=st.sampled_from([8, 24]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sr_decode_ffn_matches_ref(e, c, h, m, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, e, c, h)
+    sw1, rw1 = rand(rng, h, m), rand(rng, e, h, m)
+    sw2, rw2 = rand(rng, m, h), rand(rng, e, m, h)
+    got = moe_ffn.sr_decode_ffn(x, sw1, rw1, sw2, rw2)
+    want = ref.sr_decode_ffn_ref(x, sw1, rw1, sw2, rw2)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_sr_decode_ffn_equals_plain_ffn_on_reconstructed_weights():
+    """decode-then-ffn == fused kernel (the fusion is exact, not approximate)."""
+    rng = np.random.default_rng(0)
+    e, c, h, m = 3, 8, 16, 24
+    x = rand(rng, e, c, h)
+    sw1, rw1 = rand(rng, h, m), rand(rng, e, h, m)
+    sw2, rw2 = rand(rng, m, h), rand(rng, e, m, h)
+    fused = moe_ffn.sr_decode_ffn(x, sw1, rw1, sw2, rw2)
+    plain = moe_ffn.expert_ffn_tiled(x, sw1[None] + rw1, sw2[None] + rw2)
+    np.testing.assert_allclose(fused, plain, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    e=st.integers(1, 3),
+    c=st.sampled_from([4, 8]),
+    h=st.sampled_from([4, 8]),
+    m=st.sampled_from([4, 12]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_expert_ffn_grads_match_ref(e, c, h, m, seed):
+    rng = np.random.default_rng(seed)
+    x, w1, w2 = rand(rng, e, c, h), rand(rng, e, h, m), rand(rng, e, m, h)
+
+    def f(fn):
+        return lambda a, b, cc: jnp.sum(jnp.sin(fn(a, b, cc)))
+
+    g = jax.grad(f(moe_ffn.expert_ffn), argnums=(0, 1, 2))(x, w1, w2)
+    gr = jax.grad(f(ref.expert_ffn_ref), argnums=(0, 1, 2))(x, w1, w2)
+    for a, b in zip(g, gr):
+        np.testing.assert_allclose(a, b, atol=5e-3, rtol=5e-3)
+
+
+def test_choose_token_tile_divides_and_fits():
+    for c in [8, 16, 24, 64]:
+        for h, m in [(64, 128), (512, 1024), (1024, 4096)]:
+            bt = moe_ffn.choose_token_tile(c, h, m)
+            assert c % bt == 0
+            assert moe_ffn.vmem_bytes(bt, h, m) <= moe_ffn.VMEM_BUDGET or bt == 1
+
+
+def test_mxu_utilization_bounds():
+    assert moe_ffn.mxu_utilization(128, 128, 128) == pytest.approx(1.0)
+    u = moe_ffn.mxu_utilization(7, 100, 100)
+    assert 0.0 < u < 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([16, 64, 256]),
+    frac=st.sampled_from([0.1, 0.25, 0.5, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sr_roundtrip_error_monotone(n, frac, seed):
+    """Roundtrip error is bounded and k=n is exact."""
+    rng = np.random.default_rng(seed)
+    w = jnp.array(rng.standard_normal(n).astype(np.float32))
+    shared = jnp.array(rng.standard_normal(n).astype(np.float32))
+    k = max(1, int(n * frac))
+    rt = ref.sr_roundtrip_ref(w, shared, k)
+    err = float(jnp.max(jnp.abs(rt - w)))
+    res_max = float(jnp.max(jnp.abs(w - shared)))
+    assert err <= res_max + 1e-6
+    full = ref.sr_roundtrip_ref(w, shared, n)
+    np.testing.assert_allclose(full, w, atol=1e-6)
+
+
+def test_sr_encode_picks_largest_residuals():
+    w = jnp.array([0.0, 10.0, 0.1, -7.0], jnp.float32)
+    shared = jnp.zeros(4, jnp.float32)
+    vals, idx = ref.sr_encode_ref(w, shared, 2)
+    assert set(np.asarray(idx).tolist()) == {1, 3}
+    np.testing.assert_allclose(np.sort(np.asarray(vals)), [-7.0, 10.0])

@@ -1,0 +1,131 @@
+//! Fig. 11 — latency verification: estimated (stream model) vs real latency
+//! for computation (GeMM via PJRT), A2A and AG (real bytes over throttled
+//! links). The model is validated when estimates track measurements.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use hybrid_ep::bench::{black_box, header};
+use hybrid_ep::cluster::presets;
+use hybrid_ep::comm::collectives::all_to_all;
+use hybrid_ep::comm::{run_workers, Fabric};
+use hybrid_ep::model::gemm_latency;
+use hybrid_ep::report::Table;
+use hybrid_ep::runtime::exec::literal_f32;
+use hybrid_ep::runtime::{Artifacts, Engine};
+use hybrid_ep::util::fmt_secs;
+
+fn main() {
+    header("fig11_latency_verification", "Fig. 11 (estimated vs real latency)");
+    let fast = std::env::var("BENCH_FAST").is_ok();
+
+    // ---- computation: GeMM artifacts vs Eq. 1 ------------------------------
+    let Ok(arts) = Artifacts::discover() else {
+        eprintln!("artifacts missing — run `make artifacts`");
+        return;
+    };
+    let mut engine = Engine::cpu().expect("pjrt");
+    let mut table = Table::new(
+        "Fig. 11(a) — computation latency: PJRT GeMM vs linear model (Eq. 1)",
+        &["shape", "real", "estimated", "ratio"],
+    );
+    // calibrate C on the largest GeMM (the paper calibrates its C too)
+    let sizes = arts.gemm_sizes().expect("gemm sizes");
+    let mut c_est = 0.0;
+    let mut results = Vec::new();
+    for &(l, h, m) in &sizes {
+        let exe = engine.load(&arts.gemm(l, h, m).unwrap()).unwrap();
+        let x = literal_f32(&vec![1.0f32; l * h], &[l, h]).unwrap();
+        let y = literal_f32(&vec![1.0f32; h * m], &[h, m]).unwrap();
+        let _ = exe.run(&[x.clone(), y.clone()]).unwrap(); // warm
+        let reps = if fast { 3 } else { 10 };
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            black_box(exe.run(&[x.clone(), y.clone()]).unwrap());
+        }
+        let real = t0.elapsed().as_secs_f64() / reps as f64;
+        results.push((l, h, m, real));
+        c_est = (l * h * m) as f64 / real; // effective MAC/s from this size
+    }
+    for (l, h, m, real) in results {
+        let est = gemm_latency(l, h, m, c_est);
+        table.row(vec![
+            format!("{l}×{h}×{m}"),
+            fmt_secs(real),
+            fmt_secs(est),
+            format!("{:.2}", real / est),
+        ]);
+    }
+    table.print();
+
+    // ---- A2A / AG: real collectives on throttled links vs Eq. 3/4 ---------
+    let scale = 1.0; // real-time pacing: payloads are large enough to dwarf sleep granularity
+    let gpus = 4usize;
+    // keep the simulated link well below host memcpy throughput so pacing,
+    // not copying, dominates (single-core sandbox)
+    let bw_gbps = 2.0;
+    let mut table = Table::new(
+        "Fig. 11(b,c) — communication latency: measured collectives vs Eq. 3/Eq. 4",
+        &["op", "payload/GPU", "real", "estimated", "ratio"],
+    );
+    let sizes_mb: &[f64] = if fast { &[64.0] } else { &[64.0, 128.0] };
+    for &mb in sizes_mb {
+        let bytes = (mb * 1e6) as usize;
+        // A2A: each GPU sends (G-1)/G of `bytes`, all through one shared link
+        let fabric = Arc::new(Fabric::new(presets::dcs_x_gpus(gpus, 1, bw_gbps, 1000.0), scale));
+        let walls = run_workers(fabric, move |mut ctx| {
+            let chunk = bytes / gpus;
+            let chunks: Vec<Vec<u8>> = (0..gpus).map(|_| vec![0u8; chunk]).collect();
+            ctx.barrier();
+            let t0 = Instant::now();
+            black_box(all_to_all(&mut ctx, 5, chunks));
+            ctx.barrier();
+            t0.elapsed().as_secs_f64()
+        });
+        let real = walls.iter().cloned().fold(0.0, f64::max) * scale;
+        // Eq. 3: each DC link carries (G-1) chunks (egress and ingress
+        // queues drain in parallel) ⇒ (G-1)·(D/G)/B
+        let b = presets::gbps(bw_gbps);
+        let est = (gpus as f64 - 1.0) * (bytes as f64 / gpus as f64) / b;
+        table.row(vec![
+            "A2A".into(),
+            format!("{mb} MB"),
+            fmt_secs(real),
+            fmt_secs(est),
+            format!("{:.2}", real / est),
+        ]);
+
+        // AG: every GPU broadcasts `bytes` to the other G-1, through the
+        // asynchronous communicator (the paper's §IV-B design — sends do not
+        // serialize on the compute thread)
+        let fabric = Arc::new(Fabric::new(presets::dcs_x_gpus(gpus, 1, bw_gbps, 1000.0), scale));
+        let walls = run_workers(fabric, move |mut ctx| {
+            let payload = vec![0u8; bytes];
+            ctx.barrier();
+            let t0 = Instant::now();
+            let (id, fabric, peers) = ctx.endpoints();
+            let comm = hybrid_ep::comm::AsyncCommunicator::start(id, fabric, peers);
+            for p in 0..gpus {
+                if p != id {
+                    comm.enqueue(hybrid_ep::comm::Outbound { to: p, tag: 6, bytes: payload.clone() });
+                }
+            }
+            black_box(ctx.recv_n(6, gpus - 1));
+            comm.finish();
+            ctx.barrier();
+            t0.elapsed().as_secs_f64()
+        });
+        let real = walls.iter().cloned().fold(0.0, f64::max) * scale;
+        // Eq. 4: P_E·(G-1) per GPU through its DC link
+        let est = (gpus as f64 - 1.0) * bytes as f64 / b;
+        table.row(vec![
+            "AG".into(),
+            format!("{mb} MB"),
+            fmt_secs(real),
+            fmt_secs(est),
+            format!("{:.2}", real / est),
+        ]);
+    }
+    table.print();
+    println!("PASS if ratios ≈ 1 (model tracks reality); see EXPERIMENTS.md");
+}

@@ -1,0 +1,24 @@
+//! Fig. 12 + Table IV — modeling verification: for each configuration the
+//! model-chosen proportion `p` must have the lowest simulated iteration time
+//! among all candidates.
+
+use hybrid_ep::bench::header;
+use hybrid_ep::report::experiments;
+
+fn main() {
+    header("fig12_modeling_verification", "Table IV + Fig. 12 (optimal p)");
+    let (table, rows) = experiments::fig12();
+    table.print();
+    let mut ok = true;
+    for case in ["Mix-1", "Mix-2", "AG-only-1", "AG-only-2"] {
+        let model: Vec<_> = rows.iter().filter(|r| r.case == case && r.model_choice).collect();
+        let best_is_model = model.len() == 1 && model[0].measured_best;
+        println!(
+            "  {case:<10} model p = {:.2} → {}",
+            model.first().map(|r| r.p).unwrap_or(f64::NAN),
+            if best_is_model { "measured optimum ✓" } else { "NOT the measured optimum ✗" }
+        );
+        ok &= best_is_model;
+    }
+    println!("{}", if ok { "REPRODUCED: model finds the optimal p in all 4 cases" } else { "MISMATCH" });
+}

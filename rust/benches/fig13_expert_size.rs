@@ -1,0 +1,37 @@
+//! Fig. 13 — iteration time vs expert size (32 → 2 MB) at fixed 16 MB data
+//! traffic, SR compression disabled (as in the paper's setup).
+
+use hybrid_ep::bench::header;
+use hybrid_ep::report::experiments;
+
+fn main() {
+    header("fig13_expert_size", "Fig. 13 (iteration time vs expert size)");
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let sizes: Vec<f64> = if fast { vec![32.0, 8.0, 2.0] } else { vec![32.0, 16.0, 8.0, 4.0, 2.0] };
+    let (table, cells) = experiments::fig13(&sizes);
+    table.print();
+    for cl in ["Cluster-M", "Cluster-L"] {
+        let hy = |mb: f64| {
+            cells
+                .iter()
+                .find(|c| c.system == "HybridEP" && c.cluster == cl && c.expert_mb == mb)
+                .unwrap()
+                .secs
+        };
+        let base = |mb: f64| {
+            cells
+                .iter()
+                .find(|c| c.system == "Tutel" && c.cluster == cl && c.expert_mb == mb)
+                .unwrap()
+                .secs
+        };
+        let s_small = base(*sizes.last().unwrap()) / hy(*sizes.last().unwrap());
+        let s_big = base(sizes[0]) / hy(sizes[0]);
+        println!(
+            "{cl}: speedup {s_big:.2}× at {} MB → {s_small:.2}× at {} MB \
+             (paper: 1.18×–2.57×, growing as experts shrink)",
+            sizes[0],
+            sizes.last().unwrap()
+        );
+    }
+}

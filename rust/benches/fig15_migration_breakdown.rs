@@ -1,0 +1,67 @@
+//! Fig. 15 — time breakdown of parameter-efficient migration's two phases:
+//! SREncode standalone vs fused with the optimizer step, and SRDecode
+//! standalone vs fused with expert-weight packing, across expert sizes.
+
+use hybrid_ep::bench::{header, Bench};
+use hybrid_ep::migration::{fused, sr_codec};
+use hybrid_ep::report::Table;
+use hybrid_ep::util::rng::Rng;
+
+fn main() {
+    header("fig15_migration_breakdown", "Fig. 15 (SREncode/SRDecode fusion)");
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let sizes_mb: Vec<usize> = if fast { vec![2, 8] } else { vec![2, 4, 8, 16, 32] };
+    let cr = 50usize;
+
+    let mut table = Table::new(
+        "Fig. 15 — codec phase time vs expert size (CR 50×)",
+        &["expert", "encode", "enc fused", "saved", "decode", "dec fused", "saved"],
+    );
+    for mb in sizes_mb {
+        let n = mb * 1_000_000 / 4;
+        let k = (n / (2 * cr)).max(1);
+        let mut rng = Rng::new(1);
+        let w0: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let grad: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.01).collect();
+        let shared: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+
+        // encode: unfused (update pass + encode pass) vs fused single pass
+        let mut w = w0.clone();
+        let enc_plain = Bench::new("encode").run(|| {
+            let e = fused::update_then_encode(&mut w, &grad, 1e-4, &shared, k);
+            hybrid_ep::bench::black_box(e.values.len());
+        });
+        let mut w = w0.clone();
+        let mut scratch = Vec::new();
+        let enc_fused = Bench::new("encode_fused").run(|| {
+            let e = fused::fused_update_encode(&mut w, &grad, 1e-4, &shared, k, &mut scratch);
+            hybrid_ep::bench::black_box(e.values.len());
+        });
+
+        // decode: decode-then-pack vs fused decode-into-pack
+        let enc = sr_codec::encode(&w0, &shared, k);
+        let mut dst = vec![0.0f32; n];
+        let dec_plain = Bench::new("decode").run(|| {
+            fused::decode_then_pack(&shared, &enc, &mut dst);
+            hybrid_ep::bench::black_box(dst[0]);
+        });
+        let dec_fused = Bench::new("decode_fused").run(|| {
+            fused::fused_decode_pack(&shared, &enc, &mut dst);
+            hybrid_ep::bench::black_box(dst[0]);
+        });
+
+        let enc_save = 100.0 * (1.0 - enc_fused.median / enc_plain.median);
+        let dec_save = 100.0 * (1.0 - dec_fused.median / dec_plain.median);
+        table.row(vec![
+            format!("{mb} MB"),
+            hybrid_ep::util::fmt_secs(enc_plain.median),
+            hybrid_ep::util::fmt_secs(enc_fused.median),
+            format!("{enc_save:.0}%"),
+            hybrid_ep::util::fmt_secs(dec_plain.median),
+            hybrid_ep::util::fmt_secs(dec_fused.median),
+            format!("{dec_save:.0}%"),
+        ]);
+    }
+    table.print();
+    println!("paper: fusion saves ~30% (encode) and ~45% (decode)");
+}

@@ -1,0 +1,22 @@
+//! Fig. 16 — traffic scalability: EP traffic grows linearly with token
+//! count while HybridEP's is bounded (expert transmission only). Also prints
+//! the Fig. 2(b) motivation series (EP overhead share vs bandwidth).
+
+use hybrid_ep::bench::header;
+use hybrid_ep::report::experiments;
+
+fn main() {
+    header("fig16_traffic_scalability", "Fig. 16 (traffic vs tokens) + Fig. 2(b)");
+    let (t2b, _) = experiments::fig2b();
+    t2b.print();
+    let (table, rows) = experiments::fig16();
+    table.print();
+    for cfg in ["(8,1024,4096)", "(16,1024,2048)", "(32,768,3072)"] {
+        let series: Vec<_> = rows.iter().filter(|r| r.config == cfg).collect();
+        let ep_growth = series.last().unwrap().ep_mb / series[0].ep_mb;
+        let hy_growth = series.last().unwrap().hybrid_mb / series[0].hybrid_mb.max(1e-12);
+        println!(
+            "{cfg}: 64× more tokens → EP traffic ×{ep_growth:.1}, HybridEP ×{hy_growth:.2} (bounded)"
+        );
+    }
+}

@@ -1,0 +1,37 @@
+//! Fig. 17 — large-scale simulation: HybridEP vs EP speedup with up to
+//! 1000 DCs under 1.25–10 Gbps inter-DC bandwidth, (a) fixed `S_ED` and
+//! (b) fixed `p`.
+
+use hybrid_ep::bench::header;
+use hybrid_ep::report::experiments;
+
+fn main() {
+    header("fig17_large_scale", "Fig. 17 (1000-DC simulation)");
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let counts: Vec<usize> = if fast { vec![100, 1000] } else { vec![50, 100, 200, 500, 1000] };
+    let t0 = std::time::Instant::now();
+    let (table, rows) = experiments::fig17(&counts);
+    table.print();
+    let at_1000a: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.dcs == 1000 && r.fixed.starts_with("fixed S"))
+        .map(|r| r.speedup)
+        .collect();
+    let at_1000b: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.dcs == 1000 && r.fixed.starts_with("fixed p"))
+        .map(|r| r.speedup)
+        .collect();
+    let minmax = |v: &[f64]| {
+        (v.iter().cloned().fold(f64::INFINITY, f64::min), v.iter().cloned().fold(0.0, f64::max))
+    };
+    if !at_1000a.is_empty() {
+        let (lo, hi) = minmax(&at_1000a);
+        println!("1000 DCs, fixed S_ED: {lo:.2}×–{hi:.2}× (paper: 1.05×–1.45×)");
+    }
+    if !at_1000b.is_empty() {
+        let (lo, hi) = minmax(&at_1000b);
+        println!("1000 DCs, fixed p:    {lo:.2}×–{hi:.2}× (paper: 1.31×–3.76×)");
+    }
+    println!("[{:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,94 @@
+//! Hot-path micro-benchmarks for the §Perf optimization pass:
+//! SR codec (encode/decode across sizes), max-min flow allocation, netsim
+//! event loop, schedule generation, JSON/manifest parsing.
+
+use hybrid_ep::bench::{black_box, header, Bench};
+use hybrid_ep::cluster::presets;
+use hybrid_ep::migration::sr_codec;
+use hybrid_ep::moe::{MoEWorkload, Routing};
+use hybrid_ep::netsim::flow::{max_min_rates, FlowSpec};
+use hybrid_ep::netsim::Simulator;
+use hybrid_ep::systems::hybrid_ep::HybridEp;
+use hybrid_ep::systems::{ep, SchedCtx, System};
+use hybrid_ep::util::rng::Rng;
+
+fn main() {
+    header("hotpath_micro", "§Perf hot paths (not a paper table)");
+
+    // --- SR codec ------------------------------------------------------------
+    for mb in [1usize, 8, 32] {
+        let n = mb * 1_000_000 / 4;
+        let k = n / 100;
+        let mut rng = Rng::new(2);
+        let w: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let shared: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let r = Bench::new(&format!("sr_encode/{mb}MB")).run(|| {
+            black_box(sr_codec::encode(&w, &shared, k).values.len());
+        });
+        r.print();
+        println!(
+            "    encode throughput: {:.2} GB/s",
+            (n * 4) as f64 / r.median / 1e9
+        );
+        let enc = sr_codec::encode(&w, &shared, k);
+        let mut dst = vec![0.0f32; n];
+        let r = Bench::new(&format!("sr_decode/{mb}MB")).run(|| {
+            sr_codec::decode_into(&shared, &enc, &mut dst);
+            black_box(dst[0]);
+        });
+        r.print();
+        println!(
+            "    decode throughput: {:.2} GB/s",
+            (n * 4) as f64 / r.median / 1e9
+        );
+    }
+
+    // --- max-min fair allocation ----------------------------------------------
+    for nf in [100usize, 1000] {
+        let caps: Vec<f64> = (0..64).map(|i| 1e9 + i as f64).collect();
+        let mut rng = Rng::new(3);
+        let flows: Vec<FlowSpec> = (0..nf)
+            .map(|_| FlowSpec {
+                resources: vec![rng.below(64), rng.below(64)],
+                bytes_remaining: 1e6,
+            })
+            .collect();
+        Bench::new(&format!("max_min_rates/{nf}flows")).run(|| {
+            black_box(max_min_rates(&caps, &flows).len());
+        })
+        .print();
+    }
+
+    // --- netsim end-to-end -----------------------------------------------------
+    let cluster = presets::dcs_x_gpus(4, 8, 10.0, 128.0);
+    let w = MoEWorkload::default_paper();
+    let routing = Routing::uniform(32, 32, w.tokens_per_gpu, w.k);
+    let ctx = SchedCtx::new(&cluster, &w, &routing);
+    Bench::new("schedule_gen/tutel_32gpu_12layer").run(|| {
+        black_box(ep::Tutel::default().build_iteration(&ctx).len());
+    })
+    .print();
+    Bench::new("schedule_gen/hybrid_32gpu_12layer").run(|| {
+        black_box(HybridEp::with_migration().build_iteration(&ctx).len());
+    })
+    .print();
+    let dag = ep::Tutel::default().build_iteration(&ctx);
+    Bench::new("netsim_run/tutel_32gpu_12layer").run(|| {
+        black_box(Simulator::new(&cluster).run(&dag).makespan);
+    })
+    .print();
+    let hdag = HybridEp::with_migration().build_iteration(&ctx);
+    Bench::new("netsim_run/hybrid_32gpu_12layer").run(|| {
+        black_box(Simulator::new(&cluster).run(&hdag).makespan);
+    })
+    .print();
+
+    // --- manifest parsing --------------------------------------------------------
+    if let Ok(arts) = hybrid_ep::runtime::Artifacts::discover() {
+        let text = std::fs::read_to_string(arts.root.join("manifest.json")).unwrap();
+        Bench::new("json_parse/manifest").run(|| {
+            black_box(hybrid_ep::util::json::Value::parse(&text).unwrap());
+        })
+        .print();
+    }
+}

@@ -1,0 +1,39 @@
+//! Table V — end-to-end iteration time vs data traffic (6–192 MB) on
+//! Cluster-M (16 GPUs / 2 DCs) and Cluster-L (32 GPUs / 4 DCs), comparing
+//! Tutel / FasterMoE / SmartMoE / HybridEP.
+
+use hybrid_ep::bench::header;
+use hybrid_ep::report::experiments;
+use hybrid_ep::util::stats::geomean;
+
+fn main() {
+    header("table5_data_traffic", "Table V (iteration time vs data traffic)");
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let sizes: Vec<f64> =
+        if fast { vec![6.0, 48.0, 192.0] } else { vec![6.0, 12.0, 24.0, 48.0, 96.0, 192.0] };
+    let t0 = std::time::Instant::now();
+    let (table, cells) = experiments::table5(&sizes);
+    table.print();
+    // headline: speedup at the largest traffic on Cluster-L
+    let at = |sys: &str, cl: &str, mb: f64| {
+        cells
+            .iter()
+            .find(|c| c.system == sys && c.cluster == cl && c.data_mb == mb)
+            .map(|c| c.secs)
+            .unwrap()
+    };
+    let mut speedups = Vec::new();
+    for cl in ["Cluster-M", "Cluster-L"] {
+        for &mb in &sizes {
+            let base =
+                (at("Tutel", cl, mb) + at("FasterMoE", cl, mb) + at("SmartMoE", cl, mb)) / 3.0;
+            speedups.push(base / at("HybridEP", cl, mb));
+        }
+    }
+    let max = speedups.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "max avg speedup {max:.2}× (paper: up to 5.60×), geomean {:.2}×  [{:.1}s]",
+        geomean(&speedups),
+        t0.elapsed().as_secs_f64()
+    );
+}

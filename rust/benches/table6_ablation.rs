@@ -1,0 +1,16 @@
+//! Table VI — ablation: domain-based partition alone vs + parameter-efficient
+//! migration, on Cluster-S/M/L at 24&8 MB and 48&2 MB.
+
+use hybrid_ep::bench::header;
+use hybrid_ep::report::experiments;
+
+fn main() {
+    header("table6_ablation", "Table VI (partition vs +migration)");
+    let (table, rows) = experiments::table6();
+    table.print();
+    let max = rows
+        .iter()
+        .map(|r| r.partition_secs / r.migration_secs)
+        .fold(0.0f64, f64::max);
+    println!("max +Migration speedup {max:.2}× (paper: 1.25×–2.82×)");
+}

@@ -1,0 +1,182 @@
+//! Micro-benchmark harness (in-repo substitute for `criterion`, which is not
+//! vendored in this offline image).
+//!
+//! Usage in a `harness = false` bench target:
+//!
+//! ```no_run
+//! use hybrid_ep::bench::Bench;
+//! let mut b = Bench::new("sr_encode/1MB");
+//! let report = b.run(|| { /* measured body */ });
+//! report.print();
+//! ```
+//!
+//! The harness warms up, picks an iteration count targeting a fixed measuring
+//! window, runs batches, and reports mean/median/p95/std. `BENCH_FAST=1`
+//! shrinks the windows for CI smoke runs.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        if std::env::var("BENCH_FAST").is_ok() {
+            Self {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(100),
+                min_samples: 5,
+                max_samples: 50,
+            }
+        } else {
+            Self {
+                warmup: Duration::from_millis(200),
+                measure: Duration::from_secs(1),
+                min_samples: 10,
+                max_samples: 1000,
+            }
+        }
+    }
+}
+
+pub struct Bench {
+    name: String,
+    cfg: BenchConfig,
+}
+
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub name: String,
+    pub samples: Summary,
+    /// seconds per iteration
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub std: f64,
+}
+
+impl Report {
+    pub fn print(&self) {
+        println!(
+            "{:<44} mean {:>12} | median {:>12} | p95 {:>12} | ±{:>10} | n={}",
+            self.name,
+            crate::util::fmt_secs(self.mean),
+            crate::util::fmt_secs(self.median),
+            crate::util::fmt_secs(self.p95),
+            crate::util::fmt_secs(self.std),
+            self.samples.n(),
+        );
+    }
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), cfg: BenchConfig::default() }
+    }
+
+    pub fn with_config(name: &str, cfg: BenchConfig) -> Self {
+        Self { name: name.to_string(), cfg }
+    }
+
+    /// Measure `f` repeatedly; each sample is one call.
+    pub fn run<F: FnMut()>(&mut self, mut f: F) -> Report {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.cfg.warmup {
+            f();
+        }
+        let mut samples = Summary::new();
+        let m0 = Instant::now();
+        while (m0.elapsed() < self.cfg.measure || samples.n() < self.cfg.min_samples)
+            && samples.n() < self.cfg.max_samples
+        {
+            let t = Instant::now();
+            f();
+            samples.add(t.elapsed().as_secs_f64());
+        }
+        self.report(samples)
+    }
+
+    /// Measure with a per-sample setup that is excluded from timing.
+    pub fn run_with_setup<S, T, F: FnMut(T)>(&mut self, mut setup: S, mut f: F) -> Report
+    where
+        S: FnMut() -> T,
+    {
+        let input = setup();
+        let mut hold = Some(input);
+        // warmup (one call)
+        f(hold.take().unwrap());
+        let mut samples = Summary::new();
+        let m0 = Instant::now();
+        while (m0.elapsed() < self.cfg.measure || samples.n() < self.cfg.min_samples)
+            && samples.n() < self.cfg.max_samples
+        {
+            let input = setup();
+            let t = Instant::now();
+            f(input);
+            samples.add(t.elapsed().as_secs_f64());
+        }
+        self.report(samples)
+    }
+
+    fn report(&self, samples: Summary) -> Report {
+        Report {
+            name: self.name.clone(),
+            mean: samples.mean(),
+            median: samples.median(),
+            p95: samples.percentile(95.0),
+            std: samples.std(),
+            samples,
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print the standard bench header used by all `rust/benches/*` targets.
+pub fn header(name: &str, paper_ref: &str) {
+    println!();
+    println!("### {name}");
+    println!("    reproduces: {paper_ref}");
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::with_config(
+            "busy",
+            BenchConfig {
+                warmup: Duration::from_millis(1),
+                measure: Duration::from_millis(10),
+                min_samples: 3,
+                max_samples: 100,
+            },
+        );
+        let r = b.run(|| {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.samples.n() >= 3);
+        assert!(r.mean > 0.0);
+        assert!(r.median <= r.p95 + 1e-12);
+    }
+}

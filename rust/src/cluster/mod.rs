@@ -1,0 +1,250 @@
+//! Multilevel cluster description and location renumbering (HybridEP §IV-A).
+//!
+//! A *worker* is a physical entity (DC, node, or GPU); a *level* is a set of
+//! workers connected with homogeneous bandwidth. The *scaling factor* `SF^i`
+//! says a worker at level `i-1` expands into `SF^i` sub-workers at level `i`
+//! (`SF^0` = number of workers at level 0). *Location renumbering* (Eq. 13)
+//! maps a global GPU index `m` to its multilevel location
+//! `(x_0, …, x_{L-1})`.
+
+pub mod presets;
+
+use anyhow::{bail, Result};
+
+/// The multilevel description: scaling factors from outermost (level 0, e.g.
+/// DCs) to innermost (level L-1, e.g. GPUs within a node).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Multilevel {
+    scaling: Vec<usize>,
+}
+
+impl Multilevel {
+    pub fn new(scaling: Vec<usize>) -> Result<Self> {
+        if scaling.is_empty() {
+            bail!("multilevel needs at least one level");
+        }
+        if scaling.iter().any(|&s| s == 0) {
+            bail!("scaling factors must be positive: {scaling:?}");
+        }
+        Ok(Self { scaling })
+    }
+
+    /// `SF^i` list.
+    pub fn scaling(&self) -> &[usize] {
+        &self.scaling
+    }
+
+    pub fn levels(&self) -> usize {
+        self.scaling.len()
+    }
+
+    /// Total number of GPUs `G = Π SF^i`.
+    pub fn total_gpus(&self) -> usize {
+        self.scaling.iter().product()
+    }
+
+    /// Number of GPUs inside one level-`l` worker (`Π_{j>l} SF^j`).
+    pub fn gpus_per_worker(&self, level: usize) -> usize {
+        self.scaling[level + 1..].iter().product()
+    }
+
+    /// Location renumbering `f(m) = (x_0, …, x_{L-1})` — Eq. 13:
+    /// `x_i = ⌊m / Π_{j>i} SF^j⌋ mod SF^i`, `x_{L-1} = m mod SF^{L-1}`.
+    pub fn locate(&self, m: usize) -> Vec<usize> {
+        assert!(m < self.total_gpus(), "GPU {m} out of range");
+        let l = self.levels();
+        let mut loc = vec![0; l];
+        for i in 0..l {
+            let inner: usize = self.scaling[i + 1..].iter().product();
+            loc[i] = (m / inner) % self.scaling[i];
+        }
+        loc
+    }
+
+    /// Inverse of [`locate`](Self::locate).
+    pub fn index_of(&self, loc: &[usize]) -> usize {
+        assert_eq!(loc.len(), self.levels());
+        let mut m = 0;
+        for (i, &x) in loc.iter().enumerate() {
+            assert!(x < self.scaling[i], "coordinate {x} out of range at level {i}");
+            let inner: usize = self.scaling[i + 1..].iter().product();
+            m += x * inner;
+        }
+        m
+    }
+
+    /// The level-`l` worker index a GPU belongs to, counted globally
+    /// (flattening levels `0..=l`).
+    pub fn worker_of(&self, m: usize, level: usize) -> usize {
+        let inner: usize = self.scaling[level + 1..].iter().product();
+        m / inner
+    }
+}
+
+/// One level of the physical hierarchy with its interconnect properties.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LevelSpec {
+    pub name: String,
+    /// `SF` at this level.
+    pub fanout: usize,
+    /// Bandwidth between sibling workers at this level, bytes/second
+    /// (per-GPU share of the interconnect at that level).
+    pub bandwidth: f64,
+    /// One-way latency in seconds for messages crossing this level.
+    pub latency: f64,
+}
+
+/// A concrete cluster: hierarchy levels from outermost to innermost.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub levels: Vec<LevelSpec>,
+}
+
+impl ClusterSpec {
+    pub fn multilevel(&self) -> Multilevel {
+        Multilevel::new(self.levels.iter().map(|l| l.fanout).collect()).expect("valid levels")
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.levels.iter().map(|l| l.fanout).product()
+    }
+
+    /// The outermost level at which two GPUs differ — the bottleneck level of
+    /// their communication — or `None` if `m == n`.
+    pub fn bottleneck_level(&self, m: usize, n: usize) -> Option<usize> {
+        if m == n {
+            return None;
+        }
+        let ml = self.multilevel();
+        let (a, b) = (ml.locate(m), ml.locate(n));
+        (0..self.levels.len()).find(|&i| a[i] != b[i])
+    }
+
+    /// Bandwidth (bytes/s) for a transfer between GPUs `m` and `n`.
+    pub fn bandwidth_between(&self, m: usize, n: usize) -> f64 {
+        match self.bottleneck_level(m, n) {
+            Some(l) => self.levels[l].bandwidth,
+            None => f64::INFINITY,
+        }
+    }
+
+    pub fn latency_between(&self, m: usize, n: usize) -> f64 {
+        match self.bottleneck_level(m, n) {
+            Some(l) => self.levels[l].latency,
+            None => 0.0,
+        }
+    }
+
+    /// Parse from a config `Value` (see `configs/*.toml`):
+    /// `[[levels]] name/fanout/bw_gbps/latency_us`.
+    pub fn from_config(v: &crate::util::json::Value) -> Result<Self> {
+        let name =
+            v.get("name").and_then(|x| x.as_str().ok().map(str::to_string)).unwrap_or_default();
+        let mut levels = Vec::new();
+        for lv in v.req("levels")?.as_arr()? {
+            levels.push(LevelSpec {
+                name: lv.req("name")?.as_str()?.to_string(),
+                fanout: lv.req("fanout")?.as_usize()?,
+                bandwidth: lv.req("bw_gbps")?.as_f64()? * 1e9 / 8.0,
+                latency: lv.get("latency_us").map(|x| x.as_f64()).transpose()?.unwrap_or(0.0)
+                    * 1e-6,
+            });
+        }
+        if levels.is_empty() {
+            bail!("cluster config has no levels");
+        }
+        Ok(Self { name, levels })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testkit;
+
+    #[test]
+    fn paper_fig8b_example() {
+        // 4 DCs × 4 GPUs: SF^0 = 4, SF^1 = 4 (Fig. 8(b))
+        let ml = Multilevel::new(vec![4, 4]).unwrap();
+        assert_eq!(ml.total_gpus(), 16);
+        assert_eq!(ml.locate(0), vec![0, 0]);
+        assert_eq!(ml.locate(5), vec![1, 1]);
+        assert_eq!(ml.locate(15), vec![3, 3]);
+        assert_eq!(ml.index_of(&[2, 3]), 11);
+    }
+
+    #[test]
+    fn locate_roundtrip_property() {
+        testkit::check("locate-bijection", 100, |g| {
+            let scaling = g.vec(|r| r.range(1, 6));
+            let scaling = scaling.into_iter().take(4).collect::<Vec<_>>();
+            let ml = Multilevel::new(scaling.clone()).map_err(|e| e.to_string())?;
+            for m in 0..ml.total_gpus() {
+                let loc = ml.locate(m);
+                prop_assert!(
+                    ml.index_of(&loc) == m,
+                    "roundtrip failed: {m} -> {loc:?} -> {} (scaling {scaling:?})",
+                    ml.index_of(&loc)
+                );
+                for (i, &x) in loc.iter().enumerate() {
+                    prop_assert!(x < scaling[i], "coordinate out of range");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn worker_of_matches_locate_prefix() {
+        let ml = Multilevel::new(vec![3, 2, 4]).unwrap();
+        for m in 0..ml.total_gpus() {
+            let loc = ml.locate(m);
+            // global worker index at level 1 = x0 * SF^1 + x1
+            assert_eq!(ml.worker_of(m, 1), loc[0] * 2 + loc[1]);
+            assert_eq!(ml.worker_of(m, 0), loc[0]);
+        }
+    }
+
+    #[test]
+    fn bottleneck_levels() {
+        let c = presets::cluster_m(); // 2 DCs × 2 nodes × 4 GPUs
+        assert_eq!(c.total_gpus(), 16);
+        assert_eq!(c.bottleneck_level(0, 1), Some(2)); // same node
+        assert_eq!(c.bottleneck_level(0, 4), Some(1)); // same DC, diff node
+        assert_eq!(c.bottleneck_level(0, 8), Some(0)); // diff DC
+        assert_eq!(c.bottleneck_level(3, 3), None);
+        assert!(c.bandwidth_between(0, 8) < c.bandwidth_between(0, 1));
+    }
+
+    #[test]
+    fn from_config_parses() {
+        let v = crate::config::parse(
+            r#"
+name = "toy"
+[[levels]]
+name = "dc"
+fanout = 2
+bw_gbps = 10.0
+latency_us = 500.0
+[[levels]]
+name = "gpu"
+fanout = 8
+bw_gbps = 128.0
+"#,
+        )
+        .unwrap();
+        let c = ClusterSpec::from_config(&v).unwrap();
+        assert_eq!(c.total_gpus(), 16);
+        assert!((c.levels[0].bandwidth - 10.0e9 / 8.0).abs() < 1.0);
+        assert!((c.levels[0].latency - 500e-6).abs() < 1e-12);
+        assert_eq!(c.levels[1].latency, 0.0);
+    }
+
+    #[test]
+    fn invalid_multilevel_rejected() {
+        assert!(Multilevel::new(vec![]).is_err());
+        assert!(Multilevel::new(vec![4, 0]).is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! Testbed presets mirroring the paper's clusters (§V-A): a "DC" is a node
+//! internally connected by PCIe3.0 x16 (128 Gbps), DCs are connected by
+//! 10 Gbps Ethernet.
+
+use super::{ClusterSpec, LevelSpec};
+
+/// Gbps → bytes/second.
+pub const fn gbps(x: f64) -> f64 {
+    x * 1e9 / 8.0
+}
+
+pub const PCIE_GBPS: f64 = 128.0;
+pub const ETH_GBPS: f64 = 10.0;
+
+fn level(name: &str, fanout: usize, bw_gbps: f64, latency_us: f64) -> LevelSpec {
+    LevelSpec { name: name.to_string(), fanout, bandwidth: gbps(bw_gbps), latency: latency_us * 1e-6 }
+}
+
+/// Cluster-S: 8 GPUs in a single DC (PCIe only).
+pub fn cluster_s() -> ClusterSpec {
+    ClusterSpec { name: "Cluster-S".into(), levels: vec![level("gpu", 8, PCIE_GBPS, 10.0)] }
+}
+
+/// Cluster-M: 16 GPUs on 2 DCs (2 × 2 nodes × 4 GPUs).
+pub fn cluster_m() -> ClusterSpec {
+    ClusterSpec {
+        name: "Cluster-M".into(),
+        levels: vec![
+            level("dc", 2, ETH_GBPS, 500.0),
+            level("node", 2, PCIE_GBPS, 20.0),
+            level("gpu", 4, PCIE_GBPS, 10.0),
+        ],
+    }
+}
+
+/// Cluster-L: 32 GPUs on 4 DCs (4 × 2 nodes × 4 GPUs).
+pub fn cluster_l() -> ClusterSpec {
+    ClusterSpec {
+        name: "Cluster-L".into(),
+        levels: vec![
+            level("dc", 4, ETH_GBPS, 500.0),
+            level("node", 2, PCIE_GBPS, 20.0),
+            level("gpu", 4, PCIE_GBPS, 10.0),
+        ],
+    }
+}
+
+/// Flat multi-DC cluster for large-scale simulation (Fig. 17): one GPU per DC
+/// (the paper's modeling granularity), `dcs` DCs at `bw_gbps` interconnect.
+pub fn flat_dcs(dcs: usize, bw_gbps: f64) -> ClusterSpec {
+    ClusterSpec {
+        name: format!("{dcs}xDC@{bw_gbps}Gbps"),
+        levels: vec![level("dc", dcs, bw_gbps, 1000.0)],
+    }
+}
+
+/// Two-level generic: `dcs` DCs × `gpus` GPUs.
+pub fn dcs_x_gpus(dcs: usize, gpus: usize, inter_gbps: f64, intra_gbps: f64) -> ClusterSpec {
+    ClusterSpec {
+        name: format!("{dcs}DCx{gpus}GPU"),
+        levels: vec![level("dc", dcs, inter_gbps, 500.0), level("gpu", gpus, intra_gbps, 10.0)],
+    }
+}
+
+pub fn by_name(name: &str) -> Option<ClusterSpec> {
+    match name {
+        "cluster-s" | "S" => Some(cluster_s()),
+        "cluster-m" | "M" => Some(cluster_m()),
+        "cluster-l" | "L" => Some(cluster_l()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_paper() {
+        assert_eq!(cluster_s().total_gpus(), 8);
+        assert_eq!(cluster_m().total_gpus(), 16);
+        assert_eq!(cluster_l().total_gpus(), 32);
+    }
+
+    #[test]
+    fn bandwidth_ordering() {
+        let c = cluster_l();
+        assert!(c.levels[0].bandwidth < c.levels[1].bandwidth);
+        assert_eq!(c.levels[1].bandwidth, c.levels[2].bandwidth);
+    }
+
+    #[test]
+    fn presets_by_name() {
+        assert!(by_name("cluster-s").is_some());
+        assert!(by_name("M").is_some());
+        assert!(by_name("zzz").is_none());
+    }
+
+    #[test]
+    fn flat_cluster_levels() {
+        let c = flat_dcs(100, 5.0);
+        assert_eq!(c.total_gpus(), 100);
+        assert!((c.levels[0].bandwidth - gbps(5.0)).abs() < 1.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! In-process worker cluster: N OS threads ("GPUs") exchanging real payloads
+//! through the throttled [`Fabric`](super::fabric::Fabric).
+//!
+//! This is the runnable substitute for the paper's NCCL testbed: every byte
+//! of dispatch data and (compressed) expert weights actually crosses a
+//! rate-limited link, so measured iteration times reproduce the paper's
+//! bandwidth-ratio effects (DESIGN.md §Substitutions).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+
+use crate::comm::fabric::Fabric;
+
+/// A message between workers. `tag` disambiguates phases/collectives.
+#[derive(Clone, Debug)]
+pub struct Message {
+    pub from: usize,
+    pub tag: u32,
+    pub bytes: Vec<u8>,
+}
+
+/// Per-worker context handed to the worker body.
+pub struct WorkerCtx {
+    pub id: usize,
+    pub fabric: Arc<Fabric>,
+    senders: Vec<Sender<Message>>,
+    inbox: Receiver<Message>,
+    stash: Vec<Message>,
+    barrier: Arc<Barrier>,
+}
+
+impl WorkerCtx {
+    /// Synchronous send: blocks for the transfer time, then delivers.
+    pub fn send(&self, to: usize, tag: u32, bytes: Vec<u8>) {
+        self.fabric.transmit(self.id, to, bytes.len());
+        // receiver may have exited only at teardown; ignore then
+        let _ = self.senders[to].send(Message { from: self.id, tag, bytes });
+    }
+
+    /// Hand out an independent sender handle + fabric for async use
+    /// (the asynchronous communicator owns one).
+    pub fn endpoints(&self) -> (usize, Arc<Fabric>, Vec<Sender<Message>>) {
+        (self.id, self.fabric.clone(), self.senders.clone())
+    }
+
+    /// Receive the next message matching `tag` (stashing others).
+    pub fn recv(&mut self, tag: u32) -> Message {
+        if let Some(pos) = self.stash.iter().position(|m| m.tag == tag) {
+            return self.stash.swap_remove(pos);
+        }
+        loop {
+            let m = self.inbox.recv().expect("cluster torn down while receiving");
+            if m.tag == tag {
+                return m;
+            }
+            self.stash.push(m);
+        }
+    }
+
+    /// Receive exactly `n` messages with `tag`.
+    pub fn recv_n(&mut self, tag: u32, n: usize) -> Vec<Message> {
+        (0..n).map(|_| self.recv(tag)).collect()
+    }
+
+    /// Full-cluster barrier.
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.senders.len()
+    }
+}
+
+/// Spawn one worker thread per GPU and run `body` to completion on each.
+/// Returns the per-worker results in id order.
+pub fn run_workers<T, F>(fabric: Arc<Fabric>, body: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(WorkerCtx) -> T + Send + Sync + 'static,
+{
+    let n = fabric.gpus();
+    let (senders, inboxes): (Vec<_>, Vec<_>) = (0..n).map(|_| channel::<Message>()).unzip();
+    let barrier = Arc::new(Barrier::new(n));
+    let body = Arc::new(body);
+    let mut handles = Vec::with_capacity(n);
+    for (id, inbox) in inboxes.into_iter().enumerate() {
+        let ctx = WorkerCtx {
+            id,
+            fabric: fabric.clone(),
+            senders: senders.clone(),
+            inbox,
+            stash: Vec::new(),
+            barrier: barrier.clone(),
+        };
+        let body = body.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("worker-{id}"))
+                .spawn(move || body(ctx))
+                .expect("spawn worker"),
+        );
+    }
+    drop(senders);
+    handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    fn small_fabric() -> Arc<Fabric> {
+        Arc::new(Fabric::new(presets::dcs_x_gpus(2, 2, 100.0, 1000.0), 100.0))
+    }
+
+    #[test]
+    fn ring_message_passing() {
+        let f = small_fabric();
+        let out = run_workers(f, |mut ctx| {
+            let n = ctx.n_workers();
+            let next = (ctx.id + 1) % n;
+            ctx.send(next, 1, vec![ctx.id as u8]);
+            let m = ctx.recv(1);
+            (m.from, m.bytes[0])
+        });
+        for (id, (from, payload)) in out.iter().enumerate() {
+            let want = (id + 4 - 1) % 4;
+            assert_eq!(*from, want);
+            assert_eq!(*payload as usize, want);
+        }
+    }
+
+    #[test]
+    fn tag_stashing_handles_out_of_order() {
+        let f = small_fabric();
+        let out = run_workers(f, |mut ctx| {
+            if ctx.id == 0 {
+                // send tag 2 first, then tag 1
+                ctx.send(1, 2, vec![2]);
+                ctx.send(1, 1, vec![1]);
+                0
+            } else if ctx.id == 1 {
+                let a = ctx.recv(1); // must stash the tag-2 message
+                let b = ctx.recv(2);
+                (a.bytes[0] + b.bytes[0]) as usize
+            } else {
+                0
+            }
+        });
+        assert_eq!(out[1], 3);
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        let f = small_fabric();
+        let out = run_workers(f, |ctx| {
+            if ctx.id == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            ctx.barrier();
+            std::time::Instant::now()
+        });
+        let spread = out
+            .iter()
+            .map(|t| t.elapsed().as_secs_f64())
+            .fold((f64::INFINITY, 0.0f64), |(lo, hi), x| (lo.min(x), hi.max(x)));
+        assert!(spread.1 - spread.0 < 0.02, "barrier spread too large");
+    }
+}

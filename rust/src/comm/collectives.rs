@@ -1,0 +1,174 @@
+//! Collectives over the in-process cluster: A2A, AG, All-Reduce.
+//!
+//! These are the real-bytes counterparts of the patterns the stream model
+//! reasons about (Eq. 3/4): `all_to_all` sends per-peer chunks, `all_gather`
+//! collects a payload from a peer set, `all_reduce_f32` ring-reduces a
+//! buffer. Used by the Fig. 11 latency-verification bench and the
+//! cross-DC demo.
+
+use crate::comm::cluster::WorkerCtx;
+
+/// Exchange per-destination chunks with every other worker (A2A, Eq. 3).
+/// `chunks[j]` is sent to worker `j` (`chunks[self]` is kept local).
+/// Returns the received chunks indexed by source.
+pub fn all_to_all(ctx: &mut WorkerCtx, tag: u32, mut chunks: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+    let n = ctx.n_workers();
+    assert_eq!(chunks.len(), n, "need one chunk per worker");
+    let me = ctx.id;
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
+    // stagger destinations to avoid all-senders-hit-one-receiver bursts;
+    // chunks are moved, not cloned (§Perf: halves memcpy on the send path)
+    for step in 1..n {
+        let dst = (me + step) % n;
+        ctx.send(dst, tag, std::mem::take(&mut chunks[dst]));
+    }
+    out[me] = std::mem::take(&mut chunks[me]);
+    for m in ctx.recv_n(tag, n - 1) {
+        out[m.from] = m.bytes;
+    }
+    out
+}
+
+/// Gather `payload` from each worker in `peers` (AG, Eq. 4): everyone sends
+/// its payload to all peers in the set; returns (src, payload) pairs.
+pub fn all_gather(
+    ctx: &mut WorkerCtx,
+    tag: u32,
+    peers: &[usize],
+    payload: &[u8],
+) -> Vec<(usize, Vec<u8>)> {
+    let me = ctx.id;
+    for &p in peers {
+        if p != me {
+            ctx.send(p, tag, payload.to_vec());
+        }
+    }
+    let expect = peers.iter().filter(|&&p| p != me).count();
+    ctx.recv_n(tag, expect).into_iter().map(|m| (m.from, m.bytes)).collect()
+}
+
+/// Ring All-Reduce (sum) of an f32 buffer across all workers.
+pub fn all_reduce_f32(ctx: &mut WorkerCtx, tag: u32, buf: &mut [f32]) {
+    let n = ctx.n_workers();
+    if n == 1 {
+        return;
+    }
+    let me = ctx.id;
+    let next = (me + 1) % n;
+    // reduce-scatter + all-gather ring, chunked by rank
+    let chunks: Vec<std::ops::Range<usize>> = (0..n)
+        .map(|i| {
+            let per = buf.len().div_ceil(n);
+            (i * per).min(buf.len())..((i + 1) * per).min(buf.len())
+        })
+        .collect();
+    // reduce-scatter
+    for step in 0..n - 1 {
+        let send_idx = (me + n - step) % n;
+        let bytes = f32s_to_bytes(&buf[chunks[send_idx].clone()]);
+        ctx.send(next, tag, bytes);
+        let m = ctx.recv(tag);
+        let recv_idx = (me + n - step - 1) % n;
+        let vals = bytes_to_f32s(&m.bytes);
+        for (b, v) in buf[chunks[recv_idx].clone()].iter_mut().zip(vals) {
+            *b += v;
+        }
+    }
+    // all-gather
+    for step in 0..n - 1 {
+        let send_idx = (me + 1 + n - step) % n;
+        let bytes = f32s_to_bytes(&buf[chunks[send_idx].clone()]);
+        ctx.send(next, tag + 1, bytes);
+        let m = ctx.recv(tag + 1);
+        let recv_idx = (me + n - step) % n;
+        let vals = bytes_to_f32s(&m.bytes);
+        buf[chunks[recv_idx].clone()].copy_from_slice(&vals);
+    }
+}
+
+pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    assert!(b.len() % 4 == 0);
+    b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::comm::cluster::run_workers;
+    use crate::comm::fabric::Fabric;
+    use std::sync::Arc;
+
+    fn fast_fabric(gpus: usize) -> Arc<Fabric> {
+        Arc::new(Fabric::new(presets::dcs_x_gpus(2, gpus / 2, 1000.0, 8000.0), 1000.0))
+    }
+
+    #[test]
+    fn a2a_delivers_correct_chunks() {
+        let f = fast_fabric(4);
+        let out = run_workers(f, |mut ctx| {
+            let me = ctx.id as u8;
+            let chunks: Vec<Vec<u8>> =
+                (0..4).map(|dst| vec![me, dst as u8]).collect();
+            all_to_all(&mut ctx, 10, chunks)
+        });
+        for (me, rows) in out.iter().enumerate() {
+            for (src, chunk) in rows.iter().enumerate() {
+                assert_eq!(chunk, &vec![src as u8, me as u8], "worker {me} from {src}");
+            }
+        }
+    }
+
+    #[test]
+    fn ag_gathers_peer_set_only() {
+        let f = fast_fabric(4);
+        let out = run_workers(f, |mut ctx| {
+            // two domains: {0,1} and {2,3}
+            let peers: Vec<usize> =
+                if ctx.id < 2 { vec![0, 1] } else { vec![2, 3] };
+            let me = ctx.id as u8;
+            let mut got = all_gather(&mut ctx, 20, &peers, &[me]);
+            got.sort();
+            got
+        });
+        assert_eq!(out[0], vec![(1, vec![1u8])]);
+        assert_eq!(out[3], vec![(2, vec![2u8])]);
+    }
+
+    #[test]
+    fn all_reduce_sums() {
+        let f = fast_fabric(4);
+        let out = run_workers(f, |mut ctx| {
+            let mut buf: Vec<f32> = (0..10).map(|i| (ctx.id * 10 + i) as f32).collect();
+            all_reduce_f32(&mut ctx, 30, &mut buf);
+            buf
+        });
+        // sum over workers of (id*10 + i) = 60 + 4i
+        for rank in &out {
+            for (i, v) in rank.iter().enumerate() {
+                assert_eq!(*v, 60.0 + 4.0 * i as f32, "index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_uneven_lengths() {
+        let f = fast_fabric(4);
+        let out = run_workers(f, |mut ctx| {
+            let mut buf = vec![1.0f32; 7]; // not divisible by 4
+            all_reduce_f32(&mut ctx, 40, &mut buf);
+            buf
+        });
+        for rank in &out {
+            assert!(rank.iter().all(|&v| v == 4.0), "{rank:?}");
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! The cluster fabric: hierarchical throttled links + message delivery.
+//!
+//! Maps a [`ClusterSpec`] to per-container [`Link`]s exactly like the
+//! flow simulator does (egress/ingress at the bottleneck level), but with
+//! real wall-clock pacing. `time_scale` > 1 shrinks sleep times uniformly so
+//! demos of multi-second paper iterations finish quickly while preserving
+//! all bandwidth *ratios*.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cluster::{ClusterSpec, Multilevel};
+use crate::comm::throttle::Link;
+
+pub struct Fabric {
+    pub cluster: ClusterSpec,
+    ml: Multilevel,
+    /// `links[level][container]` = (egress, ingress)
+    links: Vec<Vec<(Arc<Link>, Arc<Link>)>>,
+    pub time_scale: f64,
+}
+
+impl Fabric {
+    pub fn new(cluster: ClusterSpec, time_scale: f64) -> Self {
+        assert!(time_scale > 0.0);
+        let ml = cluster.multilevel();
+        let mut links = Vec::new();
+        for (l, spec) in cluster.levels.iter().enumerate() {
+            let containers: usize = ml.scaling()[..=l].iter().product();
+            let latency = Duration::from_secs_f64(spec.latency / time_scale);
+            links.push(
+                (0..containers)
+                    .map(|_| {
+                        (
+                            Arc::new(Link::new(spec.bandwidth * time_scale, latency)),
+                            Arc::new(Link::new(spec.bandwidth * time_scale, latency)),
+                        )
+                    })
+                    .collect(),
+            );
+        }
+        Self { cluster, ml, links, time_scale }
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.ml.total_gpus()
+    }
+
+    /// Block the caller for the transfer time of `bytes` from `src` to `dst`
+    /// (shared-link contention included). Loopback returns immediately.
+    pub fn transmit(&self, src: usize, dst: usize, bytes: usize) {
+        let Some(level) = self.cluster.bottleneck_level(src, dst) else {
+            return;
+        };
+        let e = &self.links[level][self.ml.worker_of(src, level)].0;
+        let i = &self.links[level][self.ml.worker_of(dst, level)].1;
+        Link::transmit_multi(&[e, i], bytes);
+    }
+
+    /// Wall-clock seconds → simulated seconds (undo `time_scale`).
+    pub fn to_sim_time(&self, wall: f64) -> f64 {
+        wall * self.time_scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use std::time::Instant;
+
+    #[test]
+    fn cross_dc_slower_than_intra() {
+        let f = Fabric::new(presets::dcs_x_gpus(2, 2, 10.0, 1280.0), 10.0);
+        let bytes = 40_000_000; // 3.2 ms inter vs 0.025 ms intra at scale 10
+        let t0 = Instant::now();
+        f.transmit(0, 1, bytes); // intra
+        let intra = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        f.transmit(0, 2, bytes); // inter
+        let inter = t1.elapsed().as_secs_f64();
+        assert!(inter > 4.0 * intra, "inter {inter} vs intra {intra}");
+    }
+
+    #[test]
+    fn loopback_free() {
+        let f = Fabric::new(presets::cluster_s(), 1.0);
+        let t0 = Instant::now();
+        f.transmit(3, 3, 100_000_000);
+        assert!(t0.elapsed().as_secs_f64() < 0.01);
+    }
+
+    #[test]
+    fn time_scale_speeds_up() {
+        let slow = Fabric::new(presets::dcs_x_gpus(2, 1, 10.0, 128.0), 1.0);
+        let fast = Fabric::new(presets::dcs_x_gpus(2, 1, 10.0, 128.0), 50.0);
+        let bytes = 2_000_000; // 1.6 ms at 10 Gbps
+        let t0 = Instant::now();
+        slow.transmit(0, 1, bytes);
+        let t_slow = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        fast.transmit(0, 1, bytes);
+        let t_fast = t1.elapsed().as_secs_f64();
+        assert!(t_slow > 3.0 * t_fast, "scale 50 should be much faster: {t_slow} vs {t_fast}");
+    }
+}

@@ -1,0 +1,20 @@
+//! Real-bytes communication runtime: bandwidth-throttled links ([`throttle`]),
+//! the hierarchical [`fabric`], the in-process worker [`cluster`], collective
+//! operations ([`collectives`]) and the paper's asynchronous communicator
+//! ([`async_comm`], §IV-B Fig. 10).
+//!
+//! Unlike [`netsim`](crate::netsim) (fluid simulation for large scales), this
+//! module moves actual payload bytes through rate-limited channels so the
+//! cross-DC demo and the Fig. 11/12/15 benches measure genuine wall-clock
+//! behaviour, including overlap and contention.
+
+pub mod async_comm;
+pub mod cluster;
+pub mod collectives;
+pub mod fabric;
+pub mod throttle;
+
+pub use async_comm::{AsyncCommunicator, Outbound};
+pub use cluster::{run_workers, Message, WorkerCtx};
+pub use fabric::Fabric;
+pub use throttle::Link;

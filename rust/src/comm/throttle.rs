@@ -1,0 +1,114 @@
+//! Bandwidth-throttled links: real bytes, real wall-clock pacing.
+//!
+//! A [`Link`] models one serializing interconnect (a DC uplink, a node's
+//! PCIe switch port): transfers reserve FIFO time slots sized
+//! `bytes / bandwidth` and the sender sleeps until the slot ends (+ one-way
+//! latency). Concurrent senders therefore share the link serially, which is
+//! the paper's 10 Gbps-Ethernet bottleneck behaviour at in-process scale.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+pub struct Link {
+    bytes_per_sec: f64,
+    latency: Duration,
+    busy_until: Mutex<Option<Instant>>,
+}
+
+impl Link {
+    pub fn new(bytes_per_sec: f64, latency: Duration) -> Self {
+        assert!(bytes_per_sec > 0.0);
+        Self { bytes_per_sec, latency, busy_until: Mutex::new(None) }
+    }
+
+    pub fn bandwidth(&self) -> f64 {
+        self.bytes_per_sec
+    }
+
+    /// Reserve a FIFO slot for `bytes`; returns the slot end (excl. latency).
+    pub fn reserve(&self, bytes: usize) -> Instant {
+        let dur = Duration::from_secs_f64(bytes as f64 / self.bytes_per_sec);
+        let now = Instant::now();
+        let mut busy = self.busy_until.lock().unwrap();
+        let start = busy.map_or(now, |b| b.max(now));
+        let end = start + dur;
+        *busy = Some(end);
+        end
+    }
+
+    /// Reserve and block until delivery time (slot end + latency).
+    pub fn transmit(&self, bytes: usize) {
+        let end = self.reserve(bytes) + self.latency;
+        sleep_until(end);
+    }
+
+    /// Delivery time for a transfer that must traverse several links
+    /// (reserves all, returns the latest end + max latency).
+    pub fn transmit_multi(links: &[&Link], bytes: usize) {
+        let mut end = Instant::now();
+        let mut lat = Duration::ZERO;
+        for l in links {
+            end = end.max(l.reserve(bytes));
+            lat = lat.max(l.latency);
+        }
+        sleep_until(end + lat);
+    }
+}
+
+pub fn sleep_until(t: Instant) {
+    let now = Instant::now();
+    if t > now {
+        std::thread::sleep(t - now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_takes_bytes_over_bandwidth() {
+        let link = Link::new(1e8, Duration::ZERO); // 100 MB/s
+        let t0 = Instant::now();
+        link.transmit(5_000_000); // 50 ms
+        let dt = t0.elapsed().as_secs_f64();
+        assert!((0.045..0.2).contains(&dt), "took {dt}s");
+    }
+
+    #[test]
+    fn concurrent_senders_serialize() {
+        use std::sync::Arc;
+        let link = Arc::new(Link::new(1e8, Duration::ZERO));
+        let t0 = Instant::now();
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let l = link.clone();
+                std::thread::spawn(move || l.transmit(2_500_000)) // 25 ms each
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt > 0.09, "4 × 25 ms must serialize, took {dt}s");
+    }
+
+    #[test]
+    fn latency_added() {
+        let link = Link::new(1e12, Duration::from_millis(30));
+        let t0 = Instant::now();
+        link.transmit(8);
+        assert!(t0.elapsed().as_secs_f64() >= 0.028);
+    }
+
+    #[test]
+    fn multi_link_takes_slowest() {
+        let fast = Link::new(1e9, Duration::ZERO);
+        let slow = Link::new(1e8, Duration::ZERO);
+        let t0 = Instant::now();
+        Link::transmit_multi(&[&fast, &slow], 5_000_000); // 50 ms on slow
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt >= 0.045, "took {dt}s");
+    }
+}

@@ -1,0 +1,248 @@
+//! Configuration system: a TOML-subset parser materializing into
+//! [`util::json::Value`](crate::util::json::Value) trees, plus typed views
+//! for cluster and experiment descriptions.
+//!
+//! Supported grammar (the subset our configs use — see `configs/*.toml`):
+//! `[section]`, `[section.sub]`, `[[array-of-tables]]`, `key = value` with
+//! strings, integers, floats, booleans and homogeneous/heterogeneous arrays,
+//! `#` comments. In-repo substitute for the `toml` crate (not vendored).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Parse TOML-subset text into a JSON value tree.
+pub fn parse(text: &str) -> Result<Value> {
+    let mut root = BTreeMap::new();
+    // current insertion path (section), e.g. ["cluster", "levels", "<idx>"]
+    let mut section: Vec<String> = Vec::new();
+
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let ctx = || format!("line {}: {raw:?}", ln + 1);
+        if let Some(inner) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let path = split_key(inner).with_context(ctx)?;
+            let arr = resolve_array(&mut root, &path).with_context(ctx)?;
+            arr.push(Value::Obj(BTreeMap::new()));
+            // keys following [[x]] resolve into the array's last element
+            // (resolve_table descends into Arr::last_mut).
+            section = path;
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let path = split_key(inner).with_context(ctx)?;
+            resolve_table(&mut root, &path).with_context(ctx)?;
+            section = path;
+        } else if let Some((k, v)) = line.split_once('=') {
+            let mut path = section.clone();
+            path.extend(split_key(k.trim()).with_context(ctx)?);
+            let val = parse_value(v.trim()).with_context(ctx)?;
+            insert(&mut root, &path, val).with_context(ctx)?;
+        } else {
+            bail!("{}: expected section or key=value", ctx());
+        }
+    }
+    Ok(Value::Obj(root))
+}
+
+/// Load and parse a config file.
+pub fn load(path: &std::path::Path) -> Result<Value> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading config {}", path.display()))?;
+    parse(&text).with_context(|| format!("parsing config {}", path.display()))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but correct for our configs: '#' inside strings not supported
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn split_key(k: &str) -> Result<Vec<String>> {
+    if k.is_empty() {
+        bail!("empty key");
+    }
+    k.split('.')
+        .map(|part| {
+            let part = part.trim();
+            if part.is_empty() {
+                bail!("empty key segment in {k:?}");
+            }
+            Ok(part.trim_matches('"').to_string())
+        })
+        .collect()
+}
+
+fn resolve_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Value>> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur.entry(part.clone()).or_insert_with(|| Value::Obj(BTreeMap::new()));
+        cur = match entry {
+            Value::Obj(m) => m,
+            Value::Arr(a) => match a.last_mut() {
+                Some(Value::Obj(m)) => m,
+                _ => bail!("cannot descend into non-table array {part:?}"),
+            },
+            _ => bail!("key {part:?} already holds a scalar"),
+        };
+    }
+    Ok(cur)
+}
+
+fn resolve_array<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+) -> Result<&'a mut Vec<Value>> {
+    let (last, prefix) = path.split_last().ok_or_else(|| anyhow!("empty path"))?;
+    let parent = resolve_table(root, prefix)?;
+    let entry = parent.entry(last.clone()).or_insert_with(|| Value::Arr(Vec::new()));
+    match entry {
+        Value::Arr(a) => Ok(a),
+        _ => bail!("key {last:?} is not an array of tables"),
+    }
+}
+
+fn insert(root: &mut BTreeMap<String, Value>, path: &[String], val: Value) -> Result<()> {
+    let (last, prefix) = path.split_last().ok_or_else(|| anyhow!("empty path"))?;
+    let parent = resolve_table(root, prefix)?;
+    if parent.contains_key(last) {
+        bail!("duplicate key {last:?}");
+    }
+    parent.insert(last.clone(), val);
+    Ok(())
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.starts_with('[') {
+        return parse_array(s);
+    }
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    cleaned
+        .parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| anyhow!("cannot parse value {s:?}"))
+}
+
+fn parse_array(s: &str) -> Result<Value> {
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|x| x.strip_suffix(']'))
+        .ok_or_else(|| anyhow!("unterminated array"))?;
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let bytes = inner.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'[' => depth += 1,
+            b']' => depth -= 1,
+            b',' if depth == 0 => {
+                let part = inner[start..i].trim();
+                if !part.is_empty() {
+                    items.push(parse_value(part)?);
+                }
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let last = inner[start..].trim();
+    if !last.is_empty() {
+        items.push(parse_value(last)?);
+    }
+    Ok(Value::Arr(items))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_sections() {
+        let v = parse(
+            r#"
+# experiment config
+name = "table5"
+steps = 100
+lr = 1.5e-3
+fast = true
+
+[cluster]
+gpus = 8
+bandwidths = [128.0, 10.0]
+"#,
+        )
+        .unwrap();
+        assert_eq!(v.at(&["name"]).unwrap().as_str().unwrap(), "table5");
+        assert_eq!(v.at(&["steps"]).unwrap().as_usize().unwrap(), 100);
+        assert_eq!(v.at(&["cluster", "gpus"]).unwrap().as_usize().unwrap(), 8);
+        assert_eq!(
+            v.at(&["cluster", "bandwidths"]).unwrap().as_f64_vec().unwrap(),
+            vec![128.0, 10.0]
+        );
+        assert!(v.at(&["fast"]).unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let v = parse(
+            r#"
+[[levels]]
+name = "dc"
+fanout = 4
+bw_gbps = 10.0
+
+[[levels]]
+name = "gpu"
+fanout = 8
+bw_gbps = 128.0
+"#,
+        )
+        .unwrap();
+        let levels = v.at(&["levels"]).unwrap().as_arr().unwrap();
+        assert_eq!(levels.len(), 2);
+        assert_eq!(levels[0].get("name").unwrap().as_str().unwrap(), "dc");
+        assert_eq!(levels[1].get("fanout").unwrap().as_usize().unwrap(), 8);
+    }
+
+    #[test]
+    fn nested_sections_and_dotted_keys() {
+        let v = parse("[a.b]\nc.d = 3\n").unwrap();
+        assert_eq!(v.at(&["a", "b", "c", "d"]).unwrap().as_usize().unwrap(), 3);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+        assert!(parse("nonsense line\n").is_err());
+        assert!(parse("x = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let v = parse("n = 1_000_000\n").unwrap();
+        assert_eq!(v.at(&["n"]).unwrap().as_usize().unwrap(), 1_000_000);
+    }
+}

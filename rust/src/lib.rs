@@ -1,0 +1,48 @@
+//! # HybridEP — scaling expert parallelism across datacenters
+//!
+//! Production-quality reproduction of *HybridEP: Scaling Expert Parallelism to
+//! Cross-Datacenter Scenario via Hybrid Expert/Data Transmission* (CS.DC 2025).
+//!
+//! HybridEP structurally reduces Expert-Parallelism (EP) communication under
+//! constrained cross-DC bandwidth by **migrating experts** (All-Gather, `AG`)
+//! instead of always **routing data** (All-to-All, `A2A`). The crate provides:
+//!
+//! * [`model`] — the paper's *stream-based modeling* (§III): computation,
+//!   communication and overlap streams, plus the optimal-proportion solver.
+//! * [`cluster`] / [`topology`] — *domain-based partition* (§IV-A): multilevel
+//!   cluster description, location renumbering (Eq. 13) and communication
+//!   topology construction (Algorithm 1).
+//! * [`migration`] — *parameter-efficient migration* (§IV-B): the SR
+//!   (shared + residual Top-k) expert codec.
+//! * [`comm`] — bandwidth-throttled in-process cluster with real A2A/AG/
+//!   All-Reduce collectives and the asynchronous communicator (Fig. 10).
+//! * [`netsim`] — flow-level max-min-fair network simulator + compute-DAG
+//!   scheduler (the SimAI-substitute substrate for large-scale studies).
+//! * [`systems`] — schedule generators for HybridEP and the compared systems
+//!   (vanilla EP, Tutel-, FasterMoE-, SmartMoE-style).
+//! * [`runtime`] — PJRT runtime executing the AOT-compiled JAX/Pallas
+//!   artifacts (Python never runs on the request path).
+//! * [`trainer`] — end-to-end training driver over the `train_step` artifact.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod migration;
+pub mod model;
+pub mod moe;
+pub mod netsim;
+pub mod report;
+pub mod runtime;
+pub mod systems;
+pub mod testkit;
+pub mod topology;
+pub mod trainer;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

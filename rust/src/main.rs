@@ -1,0 +1,205 @@
+//! `hybrid-ep` — CLI for the HybridEP coordinator.
+//!
+//! Subcommands:
+//!   plan         model-guided partition plan for a cluster + workload
+//!   topo         communication topology / frequency (Algorithm 1, Table VII)
+//!   simulate     one simulated training iteration for a chosen system
+//!   train        run real training through the PJRT runtime
+//!   experiments  regenerate paper tables/figures (fig2b, fig12, table5,
+//!                fig13, table6, fig16, table7, fig17, or `all`)
+
+use anyhow::{bail, Context, Result};
+use hybrid_ep::cluster::presets;
+use hybrid_ep::model::solver;
+use hybrid_ep::moe::{GpuSpec, Routing};
+use hybrid_ep::report::experiments as exp;
+use hybrid_ep::report::Table;
+use hybrid_ep::runtime::{Artifacts, Engine};
+use hybrid_ep::systems::hybrid_ep::HybridEp;
+use hybrid_ep::systems::{ep, faster_moe, smart_moe, SchedCtx, System};
+use hybrid_ep::topology::{DomainPartition, Topology};
+use hybrid_ep::trainer::{Compression, Trainer};
+use hybrid_ep::util::args::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cluster_arg(args: &Args) -> Result<hybrid_ep::cluster::ClusterSpec> {
+    let name = args.get_or("cluster", "M");
+    if let Some(path) = args.get("cluster-config") {
+        let v = hybrid_ep::config::load(std::path::Path::new(path))?;
+        return hybrid_ep::cluster::ClusterSpec::from_config(&v);
+    }
+    match name {
+        "S" => Ok(presets::cluster_s()),
+        "M" => Ok(exp::paper_cluster_m()),
+        "L" => Ok(exp::paper_cluster_l()),
+        other => bail!("unknown cluster {other:?} (use S/M/L or --cluster-config <toml>)"),
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args.positionals.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "plan" => cmd_plan(&args),
+        "topo" => cmd_topo(&args),
+        "simulate" => cmd_simulate(&args),
+        "train" => cmd_train(&args),
+        "experiments" => cmd_experiments(&args),
+        _ => {
+            println!(
+                "hybrid-ep — cross-DC expert parallelism (paper reproduction)\n\n\
+                 usage: hybrid-ep <plan|topo|simulate|train|experiments> [--flags]\n\
+                   plan        --cluster S|M|L --data-mb D --expert-mb E [--cr CR]\n\
+                   topo        --gpus G --s-ed S\n\
+                   simulate    --cluster S|M|L --data-mb D --expert-mb E --system NAME\n\
+                   train       --profile test|small|large --steps N [--compression ws|wos --cr CR]\n\
+                   experiments --exp fig2b|fig12|table5|fig13|table6|fig16|table7|fig17|all"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let cluster = cluster_arg(args)?;
+    let d = args.f64_or("data-mb", 24.0)? * 1e6;
+    let e = args.f64_or("expert-mb", 8.0)? * 1e6;
+    let layers = args.usize_or("layers", 12)?;
+    let cr = args.f64_or("cr", 50.0)?;
+    let w = exp::workload_from_sizes(d, e, layers, true);
+    let gpu = GpuSpec::a800();
+    let pe_tx = w.pe_bytes() / cr;
+    let input = w.plan_input(&gpu, cluster.total_gpus(), pe_tx);
+    let plan = solver::plan_multilevel(&cluster, &input)?;
+    println!(
+        "cluster {} ({} GPUs), D = {} MB, P_E = {} MB (tx {:.3} MB @ CR {cr}×)",
+        cluster.name,
+        cluster.total_gpus(),
+        d / 1e6,
+        e / 1e6,
+        pe_tx / 1e6
+    );
+    let mut t = Table::new(
+        "Model-guided plan",
+        &["level", "name", "fanout", "S_ED", "p", "case", "pred. latency"],
+    );
+    for (lp, spec) in plan.levels.iter().zip(&cluster.levels) {
+        t.row(vec![
+            lp.level.to_string(),
+            spec.name.clone(),
+            spec.fanout.to_string(),
+            lp.s_ed.to_string(),
+            format!("{:.3}", lp.p),
+            format!("{:?}", lp.case),
+            hybrid_ep::util::fmt_secs(lp.latency),
+        ]);
+    }
+    t.print();
+    println!("predicted per-layer latency: {}", hybrid_ep::util::fmt_secs(plan.predicted_latency));
+    Ok(())
+}
+
+fn cmd_topo(args: &Args) -> Result<()> {
+    let g = args.usize_or("gpus", 8)?;
+    let s = args.usize_or("s-ed", 2)?;
+    let ml = hybrid_ep::cluster::Multilevel::new(vec![g])?;
+    let part = DomainPartition::new(&ml, vec![s])?;
+    let topo = Topology::build(ml, part);
+    let f = topo.frequency();
+    println!("G = {g}, S_ED = {s}: A2A pairs = {}, AG pairs = {}", f.a2a, f.ag);
+    exp::table7().print();
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cluster = cluster_arg(args)?;
+    let d = args.f64_or("data-mb", 24.0)? * 1e6;
+    let e = args.f64_or("expert-mb", 8.0)? * 1e6;
+    let layers = args.usize_or("layers", 12)?;
+    let w = exp::workload_from_sizes(d, e, layers, !args.bool("forward-only"));
+    let routing = Routing::uniform(
+        cluster.total_gpus(),
+        cluster.total_gpus() * w.experts_per_gpu,
+        w.tokens_per_gpu,
+        w.k,
+    );
+    let ctx = SchedCtx::new(&cluster, &w, &routing);
+    let sys: Box<dyn System> = match args.get_or("system", "hybrid") {
+        "ep" => Box::new(ep::VanillaEp),
+        "tutel" => Box::new(ep::Tutel::default()),
+        "fastermoe" => Box::new(faster_moe::FasterMoe::default()),
+        "smartmoe" => Box::new(smart_moe::SmartMoe::default()),
+        "hybrid" => Box::new(HybridEp::with_migration()),
+        "hybrid-nomig" => Box::new(HybridEp::partition_only()),
+        other => bail!("unknown system {other:?}"),
+    };
+    let t = sys.iteration_time(&ctx);
+    println!(
+        "{} on {} ({} GPUs): simulated iteration = {}",
+        sys.name(),
+        cluster.name,
+        cluster.total_gpus(),
+        hybrid_ep::util::fmt_secs(t)
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let arts = Artifacts::discover()?;
+    let profile = args.get_or("profile", "test");
+    let steps = args.usize_or("steps", 50)?;
+    let cr = args.usize_or("cr", 50)?;
+    let mut engine = Engine::cpu()?;
+    let mut trainer = Trainer::new(&mut engine, &arts, profile, args.usize_or("seed", 42)? as u64)
+        .context("building trainer")?;
+    trainer.compression = match args.get("compression") {
+        None => Compression::None,
+        Some("ws") => Compression::WithShared { cr },
+        Some("wos") => Compression::WithoutShared { cr },
+        Some(other) => bail!("unknown compression {other:?} (ws|wos)"),
+    };
+    println!(
+        "training profile {profile} ({} params, corpus entropy floor {:.3} nats)",
+        trainer.profile.param_count,
+        trainer.corpus_entropy()
+    );
+    trainer.train(steps, args.usize_or("log-every", 10)?)?;
+    println!("final loss (avg last 5): {:.4}", trainer.recent_loss(5));
+    Ok(())
+}
+
+fn cmd_experiments(args: &Args) -> Result<()> {
+    let which = args.get_or("exp", "all");
+    let all = which == "all";
+    if all || which == "fig2b" {
+        exp::fig2b().0.print();
+    }
+    if all || which == "fig12" {
+        exp::fig12().0.print();
+    }
+    if all || which == "table5" {
+        exp::table5(&[6.0, 12.0, 24.0, 48.0, 96.0, 192.0]).0.print();
+    }
+    if all || which == "fig13" {
+        exp::fig13(&[32.0, 16.0, 8.0, 4.0, 2.0]).0.print();
+    }
+    if all || which == "table6" {
+        exp::table6().0.print();
+    }
+    if all || which == "fig16" {
+        exp::fig16().0.print();
+    }
+    if all || which == "table7" {
+        exp::table7().print();
+    }
+    if all || which == "fig17" {
+        exp::fig17(&[50, 100, 200, 500, 1000]).0.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Operator fusion for the SR codec (§IV-B, Fig. 15).
+//!
+//! * **SREncode ⊕ optimizer step** — the residual is computed in the same
+//!   pass that applies the parameter update, saving one full traversal of
+//!   the expert weights (the paper reports ~30% encode-overhead reduction).
+//! * **SRDecode ⊕ expert-weight packing** — the reconstruction is written
+//!   straight into the compute-layout destination buffer instead of
+//!   decode-then-copy (paper: ~45% decode-overhead reduction, fused into
+//!   expert computation).
+//!
+//! The *unfused* variants exist purely as the Fig. 15 baselines.
+
+use super::sr_codec::{encode, SrEncoded};
+
+/// Unfused baseline: apply the optimizer update, then encode in a second
+/// pass over the weights.
+pub fn update_then_encode(
+    w: &mut [f32],
+    grad: &[f32],
+    lr: f32,
+    shared: &[f32],
+    k: usize,
+) -> SrEncoded {
+    assert_eq!(w.len(), grad.len());
+    for (x, g) in w.iter_mut().zip(grad) {
+        *x -= lr * g;
+    }
+    encode(w, shared, k)
+}
+
+/// Fused: one traversal applies the update *and* materializes the residual;
+/// Top-k selection then runs on the residual scratch (no second read of the
+/// weights or shared expert).
+pub fn fused_update_encode(
+    w: &mut [f32],
+    grad: &[f32],
+    lr: f32,
+    shared: &[f32],
+    k: usize,
+    residual_scratch: &mut Vec<f32>,
+) -> SrEncoded {
+    assert_eq!(w.len(), grad.len());
+    assert_eq!(w.len(), shared.len());
+    let n = w.len();
+    residual_scratch.clear();
+    residual_scratch.reserve(n);
+    for i in 0..n {
+        let updated = w[i] - lr * grad[i];
+        w[i] = updated;
+        residual_scratch.push(updated - shared[i]);
+    }
+    // Top-k on the precomputed residual (selection identical to `encode`)
+    let res = &residual_scratch[..];
+    let k = k.min(n);
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    if k < n {
+        idx.select_nth_unstable_by_key(k.saturating_sub(1), |i| {
+            std::cmp::Reverse(res[*i as usize].abs().to_bits())
+        });
+        idx.truncate(k);
+    }
+    idx.sort_unstable();
+    let values = idx.iter().map(|&i| res[i as usize]).collect();
+    SrEncoded { n: n as u32, values, indices: idx }
+}
+
+/// Unfused baseline: decode to a scratch vector, then copy into the packed
+/// compute buffer.
+pub fn decode_then_pack(shared: &[f32], enc: &SrEncoded, dst: &mut [f32]) {
+    let tmp = super::sr_codec::decode(shared, enc);
+    dst.copy_from_slice(&tmp);
+}
+
+/// Fused: reconstruct straight into the destination (one pass + sparse adds).
+pub fn fused_decode_pack(shared: &[f32], enc: &SrEncoded, dst: &mut [f32]) {
+    super::sr_codec::decode_into(shared, enc, dst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(5);
+        let gen = |rng: &mut Rng| (0..n).map(|_| rng.normal() as f32).collect::<Vec<_>>();
+        (gen(&mut rng), gen(&mut rng), gen(&mut rng))
+    }
+
+    #[test]
+    fn fused_encode_equals_unfused() {
+        let n = 1024;
+        let (w0, grad, shared) = setup(n);
+        let k = 64;
+        let mut w1 = w0.clone();
+        let a = update_then_encode(&mut w1, &grad, 0.01, &shared, k);
+        let mut w2 = w0.clone();
+        let mut scratch = Vec::new();
+        let b = fused_update_encode(&mut w2, &grad, 0.01, &shared, k, &mut scratch);
+        assert_eq!(w1, w2, "updated weights must match");
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.values, b.values);
+    }
+
+    #[test]
+    fn fused_decode_equals_unfused() {
+        let n = 512;
+        let (w, _, shared) = setup(n);
+        let enc = encode(&w, &shared, 32);
+        let mut a = vec![0.0f32; n];
+        let mut b = vec![0.0f32; n];
+        decode_then_pack(&shared, &enc, &mut a);
+        fused_decode_pack(&shared, &enc, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,15 @@
+//! Parameter-efficient migration (HybridEP §IV-B): the SR (shared + residual)
+//! expert codec and the shared-expert store.
+//!
+//! Experts learn largely redundant knowledge; the differences concentrate in
+//! few parameters (Fig. 9(a)). Migration therefore transmits
+//! `Top-k(w − shared)` in a value+index wire format against a cluster-wide
+//! *shared expert* (the mean), giving ~`CR×` traffic reduction with loss
+//! curves matching uncompressed training (Fig. 14).
+
+pub mod fused;
+pub mod shared;
+pub mod sr_codec;
+
+pub use shared::SharedExpert;
+pub use sr_codec::{decode, decode_into, encode, SrEncoded};

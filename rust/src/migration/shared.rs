@@ -1,0 +1,169 @@
+//! The shared expert (§IV-B): initialized as the mean of all experts,
+//! synchronized with an (asynchronous) All-Reduce each iteration.
+//!
+//! Compressing against the shared expert is what keeps accuracy at high
+//! compression ratios (Fig. 14: *w/ S* tracks the uncompressed baseline,
+//! *w/o S* diverges).
+
+use anyhow::{bail, Result};
+
+/// Cluster-wide shared expert for one (w1 ‖ w2) expert tensor pair.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SharedExpert {
+    weights: Vec<f32>,
+    /// EMA factor for iteration-to-iteration refresh (1.0 = replace by mean).
+    pub alpha: f32,
+}
+
+impl SharedExpert {
+    /// Initialize as the element-wise mean of `experts` (Fig. 9(b) init).
+    pub fn from_mean(experts: &[&[f32]]) -> Result<Self> {
+        let Some(first) = experts.first() else {
+            bail!("no experts to average");
+        };
+        let n = first.len();
+        if experts.iter().any(|e| e.len() != n) {
+            bail!("expert shapes differ");
+        }
+        let mut weights = vec![0.0f32; n];
+        for e in experts {
+            for (w, x) in weights.iter_mut().zip(*e) {
+                *w += x;
+            }
+        }
+        let inv = 1.0 / experts.len() as f32;
+        for w in &mut weights {
+            *w *= inv;
+        }
+        Ok(Self { weights, alpha: 1.0 })
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.weights
+    }
+
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    /// Refresh from the current local experts (the All-Reduce step: every
+    /// rank contributes its experts' mean; reducing means of equal-sized
+    /// groups equals the global mean).
+    pub fn refresh(&mut self, experts: &[&[f32]]) -> Result<()> {
+        let mean = Self::from_mean(experts)?;
+        if mean.len() != self.len() {
+            bail!("shape changed");
+        }
+        let a = self.alpha;
+        for (w, m) in self.weights.iter_mut().zip(mean.weights) {
+            *w = (1.0 - a) * *w + a * m;
+        }
+        Ok(())
+    }
+
+    /// Combine per-rank partial means (simulated All-Reduce): average the
+    /// stores of all ranks in place, writing the same result everywhere.
+    pub fn all_reduce(stores: &mut [Self]) -> Result<()> {
+        let Some(first) = stores.first() else {
+            return Ok(());
+        };
+        let n = first.len();
+        if stores.iter().any(|s| s.len() != n) {
+            bail!("store shapes differ");
+        }
+        let mut acc = vec![0.0f32; n];
+        for s in stores.iter() {
+            for (a, w) in acc.iter_mut().zip(&s.weights) {
+                *a += w;
+            }
+        }
+        let inv = 1.0 / stores.len() as f32;
+        for a in &mut acc {
+            *a *= inv;
+        }
+        for s in stores.iter_mut() {
+            s.weights.copy_from_slice(&acc);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_init() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 6.0];
+        let s = SharedExpert::from_mean(&[&a, &b]).unwrap();
+        assert_eq!(s.weights(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32];
+        assert!(SharedExpert::from_mean(&[&a, &b]).is_err());
+        assert!(SharedExpert::from_mean(&[]).is_err());
+    }
+
+    #[test]
+    fn refresh_ema() {
+        let a = [0.0f32; 2];
+        let mut s = SharedExpert::from_mean(&[&a]).unwrap();
+        s.alpha = 0.5;
+        let b = [4.0f32, 8.0];
+        s.refresh(&[&b]).unwrap();
+        assert_eq!(s.weights(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn all_reduce_converges_ranks() {
+        let mut stores = vec![
+            SharedExpert::from_mean(&[&[0.0f32, 0.0][..]]).unwrap(),
+            SharedExpert::from_mean(&[&[2.0f32, 4.0][..]]).unwrap(),
+        ];
+        SharedExpert::all_reduce(&mut stores).unwrap();
+        assert_eq!(stores[0].weights(), &[1.0, 2.0]);
+        assert_eq!(stores[0], stores[1]);
+    }
+
+    #[test]
+    fn shared_expert_improves_compressibility() {
+        // experts = shared structure + sparse noise: residual top-k against
+        // the mean reconstructs better than top-k against zero (w/o S)
+        use crate::migration::sr_codec::roundtrip;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(9);
+        let n = 512;
+        let base: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let experts: Vec<Vec<f32>> = (0..4)
+            .map(|_| {
+                base.iter()
+                    .map(|&b| b + if rng.f64() < 0.05 { rng.normal() as f32 } else { 0.0 })
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = experts.iter().map(|e| e.as_slice()).collect();
+        let s = SharedExpert::from_mean(&refs).unwrap();
+        let zeros = vec![0.0f32; n];
+        let k = n / 16;
+        let mut err_s = 0.0f64;
+        let mut err_z = 0.0f64;
+        for e in &experts {
+            let rs = roundtrip(e, s.weights(), k);
+            let rz = roundtrip(e, &zeros, k);
+            err_s += rs.iter().zip(e).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>();
+            err_z += rz.iter().zip(e).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>();
+        }
+        assert!(
+            err_s < err_z * 0.5,
+            "shared expert should halve reconstruction error: {err_s} vs {err_z}"
+        );
+    }
+}

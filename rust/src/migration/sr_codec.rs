@@ -1,0 +1,329 @@
+//! SR-based expert compression: Top-k residual in value+index format.
+//!
+//! * **SREncode** (Fig. 9(b) left): `residual = w − shared`; keep the `k`
+//!   entries with the largest |residual| as `(values, indices)`.
+//! * **SRDecode** (right): `w ≈ shared + scatter(values, indices)`. The
+//!   recover + add steps are fused (`decode_into` writes the reconstruction
+//!   in one pass, and the Pallas `sr_decode_ffn` kernel fuses the add with
+//!   the expert GeMMs).
+//!
+//! The wire format matches `python/compile/kernels/ref.py` exactly (indices
+//! ascending), cross-checked against `artifacts/golden_sr.json`.
+
+use anyhow::{bail, Result};
+
+/// Encoded expert residual (value+index wire format).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SrEncoded {
+    /// Original element count (for validation / densification).
+    pub n: u32,
+    /// Residual values at the kept positions.
+    pub values: Vec<f32>,
+    /// Flat indices of the kept positions, strictly ascending.
+    pub indices: Vec<u32>,
+}
+
+impl SrEncoded {
+    /// Bytes on the wire: header + 4B value + 4B index per kept entry.
+    pub fn wire_bytes(&self) -> usize {
+        8 + 8 * self.values.len()
+    }
+
+    /// Effective compression ratio versus the dense expert.
+    pub fn compression_ratio(&self) -> f64 {
+        (4 * self.n as usize) as f64 / self.wire_bytes() as f64
+    }
+
+    /// Serialize to bytes (LE): [n: u32][k: u32][values][indices].
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let k = self.values.len() as u32;
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        out.extend_from_slice(&self.n.to_le_bytes());
+        out.extend_from_slice(&k.to_le_bytes());
+        for v in &self.values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for i in &self.indices {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Self> {
+        if b.len() < 8 {
+            bail!("SR frame too short: {} bytes", b.len());
+        }
+        let n = u32::from_le_bytes(b[0..4].try_into().unwrap());
+        let k = u32::from_le_bytes(b[4..8].try_into().unwrap()) as usize;
+        if b.len() != 8 + 8 * k {
+            bail!("SR frame length {} inconsistent with k={k}", b.len());
+        }
+        let mut values = Vec::with_capacity(k);
+        let mut indices = Vec::with_capacity(k);
+        for i in 0..k {
+            let o = 8 + 4 * i;
+            values.push(f32::from_le_bytes(b[o..o + 4].try_into().unwrap()));
+        }
+        for i in 0..k {
+            let o = 8 + 4 * k + 4 * i;
+            indices.push(u32::from_le_bytes(b[o..o + 4].try_into().unwrap()));
+        }
+        let enc = Self { n, values, indices };
+        enc.validate()?;
+        Ok(enc)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.values.len() != self.indices.len() {
+            bail!("values/indices length mismatch");
+        }
+        let mut prev: Option<u32> = None;
+        for &i in &self.indices {
+            if i >= self.n {
+                bail!("index {i} out of range (n = {})", self.n);
+            }
+            if let Some(p) = prev {
+                if i <= p {
+                    bail!("indices not strictly ascending at {i}");
+                }
+            }
+            prev = Some(i);
+        }
+        Ok(())
+    }
+}
+
+/// SREncode: Top-k |w − shared| in value+index format.
+///
+/// Selection uses quickselect (`select_nth_unstable_by`) — O(n) expected —
+/// then restores ascending index order for the canonical wire layout.
+pub fn encode(w: &[f32], shared: &[f32], k: usize) -> SrEncoded {
+    assert_eq!(w.len(), shared.len(), "expert/shared shape mismatch");
+    let n = w.len();
+    let k = k.min(n);
+    if k == 0 {
+        return SrEncoded { n: n as u32, values: vec![], indices: vec![] };
+    }
+    // §Perf: pack (|residual| bits, index) into one u64 so the quickselect
+    // partitions a single contiguous array instead of chasing two gathers
+    // per comparison (EXPERIMENTS.md §Perf). |residual| is non-negative, so
+    // its IEEE-754 bits order correctly.
+    let mut keys: Vec<u64> = (0..n)
+        .map(|i| {
+            let r = (w[i] - shared[i]).abs();
+            ((r.to_bits() as u64) << 32) | i as u64
+        })
+        .collect();
+    if k < n {
+        // k-th largest: select on Reverse order
+        keys.select_nth_unstable_by_key(k - 1, |&x| std::cmp::Reverse(x));
+        keys.truncate(k);
+    }
+    let mut idx: Vec<u32> = keys.iter().map(|&x| x as u32).collect();
+    idx.sort_unstable();
+    let values = idx.iter().map(|&i| w[i as usize] - shared[i as usize]).collect();
+    SrEncoded { n: n as u32, values, indices: idx }
+}
+
+#[allow(dead_code)]
+/// Total-order wrapper for f32 magnitudes (NaN sorts last).
+fn ordered(x: f32) -> impl Ord {
+    // f32 bit tricks: for non-negative floats the IEEE bits order correctly
+    debug_assert!(!x.is_sign_negative() || x == 0.0);
+    x.to_bits()
+}
+
+/// SRDecode into a fresh buffer.
+pub fn decode(shared: &[f32], enc: &SrEncoded) -> Vec<f32> {
+    let mut out = shared.to_vec();
+    apply_residual(&mut out, enc);
+    out
+}
+
+/// Fused SRDecode: write `shared + residual` directly into `out` (single
+/// pass, no intermediate dense residual — the §IV-B "fused" decode).
+pub fn decode_into(shared: &[f32], enc: &SrEncoded, out: &mut [f32]) {
+    assert_eq!(shared.len(), enc.n as usize);
+    assert_eq!(out.len(), shared.len());
+    out.copy_from_slice(shared);
+    apply_residual(out, enc);
+}
+
+fn apply_residual(out: &mut [f32], enc: &SrEncoded) {
+    for (&i, &v) in enc.indices.iter().zip(&enc.values) {
+        out[i as usize] += v;
+    }
+}
+
+/// decode(encode(w)) — the lossy view a remote GPU reconstructs.
+pub fn roundtrip(w: &[f32], shared: &[f32], k: usize) -> Vec<f32> {
+    decode(shared, &encode(w, shared, k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testkit;
+    use crate::util::rng::Rng;
+
+    fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn picks_largest_residuals() {
+        let w = [0.0, 10.0, 0.1, -7.0];
+        let shared = [0.0; 4];
+        let enc = encode(&w, &shared, 2);
+        assert_eq!(enc.indices, vec![1, 3]);
+        assert_eq!(enc.values, vec![10.0, -7.0]);
+    }
+
+    #[test]
+    fn full_k_is_lossless() {
+        let mut rng = Rng::new(1);
+        let w = randvec(&mut rng, 257);
+        let shared = randvec(&mut rng, 257);
+        let rt = roundtrip(&w, &shared, 257);
+        // shared + (w − shared) re-rounds: exact to one ulp-ish tolerance
+        for (a, b) in rt.iter().zip(&w) {
+            assert!((a - b).abs() <= 1e-6 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn k_zero_is_shared() {
+        let mut rng = Rng::new(2);
+        let w = randvec(&mut rng, 64);
+        let shared = randvec(&mut rng, 64);
+        assert_eq!(roundtrip(&w, &shared, 0), shared);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_and_monotone() {
+        testkit::check("sr-monotone", 60, |g| {
+            let n = g.usize_in(8, 256);
+            let w = randvec(&mut g.rng, n);
+            let shared = randvec(&mut g.rng, n);
+            let err = |k: usize| -> f32 {
+                roundtrip(&w, &shared, k)
+                    .iter()
+                    .zip(&w)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0, f32::max)
+            };
+            let res_max =
+                w.iter().zip(&shared).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+            let mut prev = f32::INFINITY;
+            for k in [0usize, n / 4, n / 2, n] {
+                let e = err(k);
+                prop_assert!(e <= res_max + 1e-6, "error {e} exceeds max residual {res_max}");
+                prop_assert!(e <= prev + 1e-6, "error not monotone in k at k={k}");
+                prev = e;
+            }
+            // encoded error is optimal for its sparsity: kept entries exact
+            let enc = encode(&w, &shared, n / 2);
+            let dec = decode(&shared, &enc);
+            for (&i, _) in enc.indices.iter().zip(&enc.values) {
+                prop_assert!(
+                    (dec[i as usize] - w[i as usize]).abs() < 1e-6,
+                    "kept index {i} not exact"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        testkit::check("sr-wire", 40, |g| {
+            let n = g.usize_in(4, 128);
+            let w = randvec(&mut g.rng, n);
+            let shared = randvec(&mut g.rng, n);
+            let enc = encode(&w, &shared, n / 3 + 1);
+            let bytes = enc.to_bytes();
+            prop_assert!(bytes.len() == enc.wire_bytes(), "wire length mismatch");
+            let back = SrEncoded::from_bytes(&bytes).map_err(|e| e.to_string())?;
+            prop_assert!(back == enc, "wire roundtrip changed payload");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn from_bytes_rejects_corruption() {
+        let enc = encode(&[1.0, 2.0, 3.0], &[0.0; 3], 2);
+        let mut b = enc.to_bytes();
+        b.truncate(b.len() - 1);
+        assert!(SrEncoded::from_bytes(&b).is_err());
+        // out-of-range index
+        let bad = SrEncoded { n: 3, values: vec![1.0], indices: vec![7] };
+        assert!(bad.validate().is_err());
+        // non-ascending
+        let bad = SrEncoded { n: 9, values: vec![1.0, 2.0], indices: vec![5, 5] };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn compression_ratio_scaling() {
+        let n = 10_000;
+        let mut rng = Rng::new(3);
+        let w = randvec(&mut rng, n);
+        let shared = randvec(&mut rng, n);
+        // CR 50× ⇒ wire ≈ dense/50 ⇒ k ≈ n·4/(8·50)
+        let k = n * 4 / (8 * 50);
+        let enc = encode(&w, &shared, k);
+        let cr = enc.compression_ratio();
+        assert!((cr - 50.0).abs() / 50.0 < 0.05, "CR = {cr}");
+    }
+
+    /// Golden vectors from python (jax reference) — bit-exact cross-check.
+    #[test]
+    fn matches_python_golden_vectors() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts")
+            .join("golden_sr.json");
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            eprintln!("skipping golden test: {} not built", path.display());
+            return;
+        };
+        let v = crate::util::json::Value::parse(&text).unwrap();
+        for case in v.at(&["cases"]).unwrap().as_arr().unwrap() {
+            let w: Vec<f32> =
+                case.req("w").unwrap().as_f64_vec().unwrap().iter().map(|&x| x as f32).collect();
+            let shared: Vec<f32> = case
+                .req("shared")
+                .unwrap()
+                .as_f64_vec()
+                .unwrap()
+                .iter()
+                .map(|&x| x as f32)
+                .collect();
+            let k = case.req("k").unwrap().as_usize().unwrap();
+            let enc = encode(&w, &shared, k);
+            let want_idx = case.req("indices").unwrap().as_usize_vec().unwrap();
+            assert_eq!(
+                enc.indices.iter().map(|&i| i as usize).collect::<Vec<_>>(),
+                want_idx,
+                "indices diverge from jax reference (n={} k={k})",
+                w.len()
+            );
+            let want_vals: Vec<f32> = case
+                .req("values")
+                .unwrap()
+                .as_f64_vec()
+                .unwrap()
+                .iter()
+                .map(|&x| x as f32)
+                .collect();
+            for (a, b) in enc.values.iter().zip(&want_vals) {
+                assert!((a - b).abs() < 1e-6, "value mismatch: {a} vs {b}");
+            }
+            let dec = decode(&shared, &enc);
+            let want_dec = case.req("decoded").unwrap().as_f64_vec().unwrap();
+            for (a, &b) in dec.iter().zip(&want_dec) {
+                assert!((*a as f64 - b).abs() < 1e-5);
+            }
+        }
+    }
+}

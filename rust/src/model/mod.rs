@@ -1,0 +1,174 @@
+//! Stream-based modeling (HybridEP §III).
+//!
+//! MoE training is decoupled into a **computation stream** (Eq. 1–2) and a
+//! **communication stream** (Eq. 3–5); their **overlap** (Eq. 6–7) joins them
+//! into the end-to-end latency (Eq. 8). The solver ([`solver`]) minimizes the
+//! final latency over the proportion `p` of data chunks kept on A2A
+//! (Eq. 9–12, Fig. 6).
+//!
+//! Notation (Table I): `D` data bytes per GPU, `P_E` expert bytes, `C`
+//! computation throughput, `B` bandwidth, `G` GPUs, `n` experts per GPU.
+
+pub mod solver;
+
+/// Latency of one GeMM of shape `(l, h) × (h, m)` — Eq. 1: `L·M·H / C`.
+///
+/// `c` is the effective throughput in multiply-accumulate/s (the paper's
+/// linear model; the factor 2 for FLOPs is absorbed into `C`).
+pub fn gemm_latency(l: usize, h: usize, m: usize, c: f64) -> f64 {
+    (l as f64) * (m as f64) * (h as f64) / c
+}
+
+/// Stream-model inputs for one homogeneous GPU group (one level).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StreamConfig {
+    /// Number of GPUs `G` in the group (> 1 for anything to transmit).
+    pub g: usize,
+    /// Data bytes `D` leaving one GPU per MoE layer.
+    pub d_bytes: f64,
+    /// Bytes of one expert `P_E` *as transmitted* (post-compression when
+    /// parameter-efficient migration is on).
+    pub pe_bytes: f64,
+    /// Experts per GPU `n`.
+    pub n_experts: usize,
+    /// Bandwidth `B`, bytes/s.
+    pub bandwidth: f64,
+    /// Pre-expert computation latency `Lat_comp^PE` (Eq. 2).
+    pub lat_pe: f64,
+    /// Per-expert computation latency `Lat_comp^Ep`.
+    pub lat_ep: f64,
+}
+
+impl StreamConfig {
+    /// A2A traffic for proportion `p` — Eq. 3 scaled by `p` (Def. 1):
+    /// `V^A2A(p) = p · D · (G−1)/G`.
+    pub fn v_a2a(&self, p: f64) -> f64 {
+        p * self.d_bytes * (self.g as f64 - 1.0) / self.g as f64
+    }
+
+    /// AG traffic for proportion `p` — Eq. 4: the `(1−p)` share of the `G−1`
+    /// remote chunks is covered by migrating experts instead:
+    /// `V^AG(p) = (1−p) · (G−1) · P_E · n`.
+    pub fn v_ag(&self, p: f64) -> f64 {
+        (1.0 - p) * (self.g as f64 - 1.0) * self.pe_bytes * self.n_experts as f64
+    }
+
+    pub fn lat_a2a(&self, p: f64) -> f64 {
+        self.v_a2a(p) / self.bandwidth
+    }
+
+    pub fn lat_ag(&self, p: f64) -> f64 {
+        self.v_ag(p) / self.bandwidth
+    }
+
+    /// Computation stream — Eq. 2: `Lat_comp = Lat^PE + n · Lat^Ep`.
+    pub fn lat_comp(&self) -> f64 {
+        self.lat_pe + self.n_experts as f64 * self.lat_ep
+    }
+
+    /// Communication stream — Eq. 5: `Lat^AG + 2·Lat^A2A` (A2A runs before
+    /// and after expert computation; AG runs once — experts are not sent
+    /// back).
+    pub fn lat_comm(&self, p: f64) -> f64 {
+        self.lat_ag(p) + 2.0 * self.lat_a2a(p)
+    }
+
+    /// Overlap — Eq. 7: expert computation fully overlaps with AG/A2A
+    /// (pipelined, per [35], [46]); pre-expert computation overlaps with AG
+    /// up to `min(Lat^PE, Lat^AG)`. A2A cannot overlap pre-expert compute
+    /// (data dependency).
+    pub fn lat_ovlp(&self, p: f64) -> f64 {
+        self.lat_pe.min(self.lat_ag(p)) + self.n_experts as f64 * self.lat_ep
+    }
+
+    /// End-to-end latency — Eq. 8, which simplifies to
+    /// `max(Lat^PE, Lat^AG(p)) + 2·Lat^A2A(p)` (see `solver` docs).
+    pub fn lat_final(&self, p: f64) -> f64 {
+        self.lat_comp() + self.lat_comm(p) - self.lat_ovlp(p)
+    }
+
+    /// The paper's Case-2 discriminant `2D − G·P_E·n` (Fig. 6): negative →
+    /// a mixed optimum exists (Case 2.1); non-negative → AG-only (Case 2.2).
+    pub fn case2_discriminant(&self) -> f64 {
+        2.0 * self.d_bytes - self.g as f64 * self.pe_bytes * self.n_experts as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testkit;
+
+    fn cfg() -> StreamConfig {
+        StreamConfig {
+            g: 8,
+            d_bytes: 8e6,
+            pe_bytes: 4.7e6,
+            n_experts: 1,
+            bandwidth: 128.0e9 / 8.0,
+            lat_pe: 0.049e-3,
+            lat_ep: 0.02e-3,
+        }
+    }
+
+    #[test]
+    fn gemm_eq1() {
+        assert_eq!(gemm_latency(2, 3, 4, 1.0), 24.0);
+        assert_eq!(gemm_latency(100, 100, 100, 1e6), 1.0);
+    }
+
+    #[test]
+    fn traffic_extremes() {
+        let c = cfg();
+        // p = 1: pure EP — Eq. 3 exactly, no AG
+        assert!((c.v_a2a(1.0) - 8e6 * 7.0 / 8.0).abs() < 1.0);
+        assert_eq!(c.v_ag(1.0), 0.0);
+        // p = 0: AG only — Eq. 4 exactly, no A2A
+        assert_eq!(c.v_a2a(0.0), 0.0);
+        assert!((c.v_ag(0.0) - 7.0 * 4.7e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn traffic_exchange_rate() {
+        // §III-B: when A2A traffic decreases by D/G, AG increases by P_E.
+        let c = cfg();
+        let dp = 1.0 / (c.g as f64 - 1.0); // one chunk
+        let da2a = c.v_a2a(1.0) - c.v_a2a(1.0 - dp);
+        let dag = c.v_ag(1.0 - dp) - c.v_ag(1.0);
+        assert!((da2a - c.d_bytes / c.g as f64).abs() < 1.0, "ΔA2A = {da2a}");
+        assert!((dag - c.pe_bytes).abs() < 1.0, "ΔAG = {dag}");
+    }
+
+    #[test]
+    fn final_latency_closed_form() {
+        // Lat_final(p) == max(lat_pe, lat_ag) + 2·lat_a2a for all p
+        testkit::check("latfinal-closed-form", 100, |g| {
+            let c = StreamConfig {
+                g: g.usize_in(2, 64),
+                d_bytes: g.rng.f64() * 1e8 + 1.0,
+                pe_bytes: g.rng.f64() * 1e7 + 1.0,
+                n_experts: g.usize_in(1, 8),
+                bandwidth: g.rng.f64() * 1e10 + 1e6,
+                lat_pe: g.rng.f64() * 1e-2,
+                lat_ep: g.rng.f64() * 1e-3,
+            };
+            let p = g.rng.f64();
+            let direct = c.lat_final(p);
+            let closed = c.lat_pe.max(c.lat_ag(p)) + 2.0 * c.lat_a2a(p);
+            prop_assert!(
+                testkit::close(direct, closed, 1e-9),
+                "direct {direct} != closed {closed} at p={p}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ep_is_special_case() {
+        // p = 1 (pure EP): no AG; latency = lat_pe + 2·A2A latency
+        let c = cfg();
+        let want = c.lat_pe + 2.0 * c.lat_a2a(1.0);
+        assert!((c.lat_final(1.0) - want).abs() < 1e-12);
+    }
+}

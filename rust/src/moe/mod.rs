@@ -1,0 +1,167 @@
+//! MoE workload description: model/iteration parameters (paper Tables II/III
+//! vocabulary), gate routing distributions, and token/traffic accounting.
+
+pub mod routing;
+
+pub use routing::Routing;
+
+/// One MoE training workload as the schedulers and the stream model see it.
+///
+/// `D` (data leaving one GPU per MoE layer) = `tokens_per_gpu · hidden · 4`;
+/// `P_E` (one expert) = `2 · hidden · ffn · 4`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MoEWorkload {
+    /// Tokens produced per GPU per iteration (B·L of Table III).
+    pub tokens_per_gpu: usize,
+    /// Hidden dimension `H`.
+    pub hidden: usize,
+    /// Expert FFN dimension `M`.
+    pub ffn: usize,
+    /// Experts hosted per GPU (`n`).
+    pub experts_per_gpu: usize,
+    /// Activated experts per token (`K`).
+    pub k: usize,
+    /// MoE blocks per iteration (`#Layers` of Table II that carry MoE).
+    pub moe_layers: usize,
+    /// Transformer blocks before each MoE block (`m` of Eq. 2).
+    pub pre_blocks: usize,
+    /// Include the backward pass (2× compute, mirrored comms, + DDP
+    /// All-Reduce for the dense part).
+    pub backward: bool,
+}
+
+/// GPU compute capability for the linear GeMM model (Eq. 1): effective
+/// multiply-accumulate throughput `C` in MAC/s.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpuSpec {
+    pub macs_per_sec: f64,
+}
+
+impl GpuSpec {
+    /// A800-class effective throughput for the paper's workload mix.
+    pub fn a800() -> Self {
+        Self { macs_per_sec: 60e12 }
+    }
+}
+
+pub const BYTES_PER_ELEM: f64 = 4.0; // f32 on the wire, as in the paper
+
+impl MoEWorkload {
+    /// Paper-default shape used by several benches (Table III mid-point).
+    pub fn default_paper() -> Self {
+        Self {
+            tokens_per_gpu: 16 * 256, // B=16, L=256
+            hidden: 1024,
+            ffn: 2048,
+            experts_per_gpu: 1,
+            k: 2,
+            moe_layers: 12,
+            pre_blocks: 1,
+            backward: true,
+        }
+    }
+
+    /// `D`: bytes of activations leaving one GPU per MoE layer.
+    pub fn d_bytes(&self) -> f64 {
+        self.tokens_per_gpu as f64 * self.hidden as f64 * BYTES_PER_ELEM
+    }
+
+    /// `P_E`: bytes of one (uncompressed) expert.
+    pub fn pe_bytes(&self) -> f64 {
+        2.0 * self.hidden as f64 * self.ffn as f64 * BYTES_PER_ELEM
+    }
+
+    /// MACs of one token through one expert (two GeMMs: H×M + M×H).
+    pub fn expert_macs_per_token(&self) -> f64 {
+        2.0 * self.hidden as f64 * self.ffn as f64
+    }
+
+    /// Pre-expert computation MACs per GPU per MoE layer: `m+1` attention
+    /// blocks + `m` dense FFNs (Eq. 2's `Lat^PE` numerator), linearized.
+    pub fn pre_expert_macs(&self) -> f64 {
+        let t = self.tokens_per_gpu as f64;
+        let h = self.hidden as f64;
+        let attn = 4.0 * t * h * h; // qkv+o projections dominate
+        let ffn = 2.0 * t * h * self.ffn as f64;
+        (self.pre_blocks as f64 + 1.0) * attn + self.pre_blocks as f64 * ffn
+    }
+
+    pub fn lat_pre_expert(&self, gpu: &GpuSpec) -> f64 {
+        self.pre_expert_macs() / gpu.macs_per_sec
+    }
+
+    /// Per-expert computation latency `Lat^Ep` for an even token share
+    /// (`tokens·K/E_total` tokens per expert), Eq. 1 linear model.
+    pub fn lat_per_expert(&self, gpu: &GpuSpec, total_gpus: usize) -> f64 {
+        let total_experts = (self.experts_per_gpu * total_gpus) as f64;
+        let tokens_per_expert =
+            self.tokens_per_gpu as f64 * total_gpus as f64 * self.k as f64 / total_experts;
+        tokens_per_expert * self.expert_macs_per_token() / gpu.macs_per_sec
+    }
+
+    /// View as stream-model planner input (`model::solver::PlanInput`).
+    pub fn plan_input(
+        &self,
+        gpu: &GpuSpec,
+        total_gpus: usize,
+        pe_tx_bytes: f64,
+    ) -> crate::model::solver::PlanInput {
+        crate::model::solver::PlanInput {
+            d_bytes: self.d_bytes() * self.k as f64,
+            pe_bytes: pe_tx_bytes,
+            n_experts: self.experts_per_gpu,
+            lat_pe: self.lat_pre_expert(gpu),
+            lat_ep: self.lat_per_expert(gpu, total_gpus),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_accounting() {
+        let w = MoEWorkload {
+            tokens_per_gpu: 1024,
+            hidden: 512,
+            ffn: 1024,
+            experts_per_gpu: 2,
+            k: 1,
+            moe_layers: 4,
+            pre_blocks: 1,
+            backward: false,
+        };
+        assert_eq!(w.d_bytes(), 1024.0 * 512.0 * 4.0);
+        assert_eq!(w.pe_bytes(), 2.0 * 512.0 * 1024.0 * 4.0);
+    }
+
+    #[test]
+    fn per_expert_latency_scales_with_tokens() {
+        let gpu = GpuSpec::a800();
+        let mut w = MoEWorkload::default_paper();
+        let a = w.lat_per_expert(&gpu, 8);
+        w.tokens_per_gpu *= 2;
+        assert!((w.lat_per_expert(&gpu, 8) - 2.0 * a).abs() < 1e-15);
+    }
+
+    #[test]
+    fn total_expert_compute_invariant_under_gpus() {
+        // tokens/expert × total experts is constant per GPU count scaling
+        let gpu = GpuSpec::a800();
+        let w = MoEWorkload::default_paper();
+        let l8 = w.lat_per_expert(&gpu, 8) * (8 * w.experts_per_gpu) as f64;
+        let l16 = w.lat_per_expert(&gpu, 16) * (16 * w.experts_per_gpu) as f64;
+        assert!((l16 / l8 - 2.0).abs() < 1e-12); // 2× tokens overall
+    }
+
+    #[test]
+    fn plan_input_consistent() {
+        let w = MoEWorkload::default_paper();
+        let gpu = GpuSpec::a800();
+        let pi = w.plan_input(&gpu, 16, w.pe_bytes());
+        assert_eq!(pi.n_experts, w.experts_per_gpu);
+        assert!(pi.lat_pe > 0.0 && pi.lat_ep > 0.0);
+        assert_eq!(pi.d_bytes, w.d_bytes() * w.k as f64);
+    }
+}

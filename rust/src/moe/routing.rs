@@ -1,0 +1,194 @@
+//! Gate-routing distributions: how many tokens each GPU sends to each expert.
+//!
+//! The stream model assumes even activation (§III); real gates skew. The
+//! schedulers consume a token matrix `tokens[src_gpu][global_expert]`, which
+//! we generate uniform (paper assumption), Zipf-skewed (FasterMoE's shadowing
+//! case) or from an explicit matrix.
+
+use crate::util::rng::Rng;
+
+/// Token routing for one iteration: `tokens[src_gpu][expert]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Routing {
+    pub tokens: Vec<Vec<f64>>,
+}
+
+impl Routing {
+    /// Even activation: every token slot splits uniformly over all experts.
+    pub fn uniform(gpus: usize, experts: usize, tokens_per_gpu: usize, k: usize) -> Self {
+        let per = (tokens_per_gpu * k) as f64 / experts as f64;
+        Self { tokens: vec![vec![per; experts]; gpus] }
+    }
+
+    /// Zipf-skewed activation with exponent `s` (hot experts emerge); every
+    /// GPU shares the same popularity ranking, sampled once.
+    pub fn zipf(gpus: usize, experts: usize, tokens_per_gpu: usize, k: usize, s: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut weights = Rng::zipf_weights(experts, s);
+        // random rank→expert assignment so the hot expert isn't always #0
+        let mut perm: Vec<usize> = (0..experts).collect();
+        rng.shuffle(&mut perm);
+        let mut w2 = vec![0.0; experts];
+        for (rank, &e) in perm.iter().enumerate() {
+            w2[e] = weights[rank];
+        }
+        weights = w2;
+        let total = (tokens_per_gpu * k) as f64;
+        let tokens = (0..gpus)
+            .map(|_| weights.iter().map(|w| w * total).collect())
+            .collect();
+        Self { tokens }
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn experts(&self) -> usize {
+        self.tokens.first().map(|t| t.len()).unwrap_or(0)
+    }
+
+    /// Tokens arriving at each expert (column sums).
+    pub fn per_expert_load(&self) -> Vec<f64> {
+        let e = self.experts();
+        let mut load = vec![0.0; e];
+        for row in &self.tokens {
+            for (i, t) in row.iter().enumerate() {
+                load[i] += t;
+            }
+        }
+        load
+    }
+
+    /// Tokens sent from `src` to experts hosted on GPU `dst` under a
+    /// placement (expert → host GPU).
+    pub fn tokens_to_gpu(&self, src: usize, dst: usize, placement: &Placement) -> f64 {
+        placement.experts_on(dst).iter().map(|&e| self.tokens[src][e]).sum()
+    }
+
+    /// Total tokens leaving each GPU (row sums) — conservation checks.
+    pub fn per_gpu_tokens(&self) -> Vec<f64> {
+        self.tokens.iter().map(|r| r.iter().sum()).collect()
+    }
+}
+
+/// Expert placement: which GPU hosts each expert.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    /// `host[e]` = GPU hosting global expert `e`.
+    pub host: Vec<usize>,
+    by_gpu: Vec<Vec<usize>>,
+}
+
+impl Placement {
+    pub fn new(host: Vec<usize>, gpus: usize) -> Self {
+        let mut by_gpu = vec![Vec::new(); gpus];
+        for (e, &g) in host.iter().enumerate() {
+            by_gpu[g].push(e);
+        }
+        Self { host, by_gpu }
+    }
+
+    /// Canonical EP placement: expert `e` on GPU `e / experts_per_gpu`.
+    pub fn round_robin(gpus: usize, experts_per_gpu: usize) -> Self {
+        let host = (0..gpus * experts_per_gpu).map(|e| e / experts_per_gpu).collect();
+        Self::new(host, gpus)
+    }
+
+    pub fn experts_on(&self, gpu: usize) -> &[usize] {
+        &self.by_gpu[gpu]
+    }
+
+    pub fn gpus(&self) -> usize {
+        self.by_gpu.len()
+    }
+
+    pub fn total_experts(&self) -> usize {
+        self.host.len()
+    }
+
+    /// Swap hosts of two experts (SmartMoE-style placement search).
+    pub fn swap(&mut self, e1: usize, e2: usize) {
+        let (g1, g2) = (self.host[e1], self.host[e2]);
+        if g1 == g2 {
+            return;
+        }
+        self.by_gpu[g1].retain(|&e| e != e1);
+        self.by_gpu[g2].retain(|&e| e != e2);
+        self.by_gpu[g1].push(e2);
+        self.by_gpu[g2].push(e1);
+        self.by_gpu[g1].sort_unstable();
+        self.by_gpu[g2].sort_unstable();
+        self.host[e1] = g2;
+        self.host[e2] = g1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testkit;
+
+    #[test]
+    fn uniform_conserves_tokens() {
+        let r = Routing::uniform(4, 8, 100, 2);
+        for row in &r.per_gpu_tokens() {
+            assert!((row - 200.0).abs() < 1e-9);
+        }
+        for l in r.per_expert_load() {
+            assert!((l - 100.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zipf_conserves_and_skews() {
+        let r = Routing::zipf(4, 8, 100, 2, 1.5, 7);
+        for row in &r.per_gpu_tokens() {
+            assert!((row - 200.0).abs() < 1e-6);
+        }
+        let load = r.per_expert_load();
+        let max = load.iter().cloned().fold(0.0, f64::max);
+        let min = load.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max > 3.0 * min, "zipf 1.5 should skew: {load:?}");
+    }
+
+    #[test]
+    fn round_robin_placement() {
+        let p = Placement::round_robin(4, 2);
+        assert_eq!(p.host, vec![0, 0, 1, 1, 2, 2, 3, 3]);
+        assert_eq!(p.experts_on(2), &[4, 5]);
+    }
+
+    #[test]
+    fn swap_keeps_partition() {
+        testkit::check("placement-swap", 50, |g| {
+            let gpus = g.usize_in(2, 6);
+            let epg = g.usize_in(1, 4);
+            let mut p = Placement::round_robin(gpus, epg);
+            let total = p.total_experts();
+            for _ in 0..10 {
+                let (a, b) = (g.rng.below(total), g.rng.below(total));
+                p.swap(a, b);
+            }
+            // every expert hosted exactly once
+            let mut seen = vec![0usize; total];
+            for gpu in 0..gpus {
+                for &e in p.experts_on(gpu) {
+                    seen[e] += 1;
+                    prop_assert!(p.host[e] == gpu, "host inconsistent for expert {e}");
+                }
+            }
+            prop_assert!(seen.iter().all(|&c| c == 1), "expert lost/duplicated: {seen:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tokens_to_gpu_matches_manual_sum() {
+        let r = Routing::uniform(2, 4, 100, 1);
+        let p = Placement::round_robin(2, 2);
+        // experts 2,3 on GPU 1; uniform 25 tokens each
+        assert!((r.tokens_to_gpu(0, 1, &p) - 50.0).abs() < 1e-9);
+    }
+}

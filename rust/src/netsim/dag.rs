@@ -1,0 +1,138 @@
+//! Task DAGs: the schedule representation every `System` produces.
+
+/// Communication tag for traffic accounting (Fig. 16 / Fig. 2(b)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tag {
+    /// Data routing (dispatch/combine).
+    A2A,
+    /// Expert migration.
+    AG,
+    /// Dense-parameter gradient synchronization.
+    AllReduce,
+    Other,
+}
+
+pub type TaskId = usize;
+
+#[derive(Clone, Debug)]
+pub enum TaskKind {
+    /// Occupies `gpu` exclusively for `seconds`.
+    Compute { gpu: usize, seconds: f64 },
+    /// Moves `bytes` from `src` GPU to `dst` GPU through the hierarchy.
+    Transfer { src: usize, dst: usize, bytes: f64, tag: Tag },
+    /// Zero-cost synchronization point / label.
+    Barrier,
+}
+
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub kind: TaskKind,
+    pub deps: Vec<TaskId>,
+    pub label: &'static str,
+}
+
+/// A schedule DAG. Tasks are appended; dependencies must point backwards
+/// (ids are topologically ordered by construction).
+#[derive(Clone, Debug, Default)]
+pub struct Dag {
+    pub tasks: Vec<Task>,
+}
+
+impl Dag {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, kind: TaskKind, deps: Vec<TaskId>, label: &'static str) -> TaskId {
+        for &d in &deps {
+            assert!(d < self.tasks.len(), "dependency {d} on unknown task");
+        }
+        self.tasks.push(Task { kind, deps, label });
+        self.tasks.len() - 1
+    }
+
+    pub fn compute(&mut self, gpu: usize, seconds: f64, deps: Vec<TaskId>, label: &'static str) -> TaskId {
+        assert!(seconds >= 0.0, "negative compute duration");
+        self.add(TaskKind::Compute { gpu, seconds }, deps, label)
+    }
+
+    pub fn transfer(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        tag: Tag,
+        deps: Vec<TaskId>,
+        label: &'static str,
+    ) -> TaskId {
+        assert!(bytes >= 0.0, "negative transfer size");
+        self.add(TaskKind::Transfer { src, dst, bytes, tag }, deps, label)
+    }
+
+    pub fn barrier(&mut self, deps: Vec<TaskId>, label: &'static str) -> TaskId {
+        self.add(TaskKind::Barrier, deps, label)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Total bytes by tag (static accounting, independent of simulation).
+    pub fn traffic_by_tag(&self, tag: Tag) -> f64 {
+        self.tasks
+            .iter()
+            .filter_map(|t| match t.kind {
+                TaskKind::Transfer { bytes, tag: tg, .. } if tg == tag => Some(bytes),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Number of GPU-to-GPU transfers by tag (frequency accounting,
+    /// Table VII semantics). Zero-byte transfers are not counted.
+    pub fn frequency_by_tag(&self, tag: Tag) -> usize {
+        self.tasks
+            .iter()
+            .filter(|t| {
+                matches!(t.kind, TaskKind::Transfer { bytes, tag: tg, .. } if tg == tag && bytes > 0.0)
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_accounts() {
+        let mut d = Dag::new();
+        let a = d.compute(0, 1.0, vec![], "pre");
+        let b = d.transfer(0, 1, 100.0, Tag::A2A, vec![a], "disp");
+        let c = d.transfer(0, 1, 50.0, Tag::AG, vec![], "mig");
+        let _ = d.barrier(vec![b, c], "end");
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.traffic_by_tag(Tag::A2A), 100.0);
+        assert_eq!(d.traffic_by_tag(Tag::AG), 50.0);
+        assert_eq!(d.frequency_by_tag(Tag::A2A), 1);
+    }
+
+    #[test]
+    fn zero_byte_transfers_not_counted_as_frequency() {
+        let mut d = Dag::new();
+        d.transfer(0, 1, 0.0, Tag::A2A, vec![], "empty");
+        assert_eq!(d.frequency_by_tag(Tag::A2A), 0);
+        assert_eq!(d.traffic_by_tag(Tag::A2A), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "dependency")]
+    fn forward_deps_rejected() {
+        let mut d = Dag::new();
+        d.compute(0, 1.0, vec![5], "bad");
+    }
+}

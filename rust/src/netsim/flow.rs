@@ -1,0 +1,194 @@
+//! Max-min fair fluid bandwidth allocation.
+//!
+//! Resources are capacity pools (bytes/s); each flow consumes one unit of
+//! demand on every resource it touches. Allocation is the classic water-
+//! filling: repeatedly find the resource(s) with the smallest fair share,
+//! freeze their flows at that rate, subtract, repeat. Symmetric patterns
+//! (uniform A2A) converge in one round, keeping large simulations cheap.
+
+/// Index into the resource table.
+pub type ResourceId = usize;
+
+#[derive(Clone, Debug)]
+pub struct FlowSpec {
+    /// Resources this flow traverses (typically egress@src + ingress@dst).
+    pub resources: Vec<ResourceId>,
+    pub bytes_remaining: f64,
+}
+
+/// Compute the max-min fair rate for each flow.
+///
+/// `caps[r]` is the capacity of resource `r`. Returns `rates[f]` for each
+/// flow. Flows with no resources (loopback) get `f64::INFINITY`.
+pub fn max_min_rates(caps: &[f64], flows: &[FlowSpec]) -> Vec<f64> {
+    let nf = flows.len();
+    let mut rates = vec![f64::INFINITY; nf];
+    if nf == 0 {
+        return rates;
+    }
+    let mut residual: Vec<f64> = caps.to_vec();
+    // flows touching each resource
+    let mut users: Vec<Vec<usize>> = vec![Vec::new(); caps.len()];
+    for (fi, f) in flows.iter().enumerate() {
+        for &r in &f.resources {
+            users[r].push(fi);
+        }
+    }
+    let mut active: Vec<usize> = vec![0; caps.len()]; // unfrozen users per resource
+    for (r, u) in users.iter().enumerate() {
+        active[r] = u.len();
+    }
+    let mut frozen = vec![false; nf];
+    let mut remaining: usize = flows.iter().filter(|f| !f.resources.is_empty()).count();
+    // loopback flows are already infinity-rated
+    loop {
+        if remaining == 0 {
+            break;
+        }
+        // find min fair share among resources with active users
+        let mut min_share = f64::INFINITY;
+        for r in 0..caps.len() {
+            if active[r] > 0 {
+                let share = residual[r] / active[r] as f64;
+                if share < min_share {
+                    min_share = share;
+                }
+            }
+        }
+        if !min_share.is_finite() {
+            break;
+        }
+        // freeze all flows on all resources achieving (close to) the min share
+        let mut froze_any = false;
+        for r in 0..caps.len() {
+            if active[r] == 0 {
+                continue;
+            }
+            let share = residual[r] / active[r] as f64;
+            if share <= min_share * (1.0 + 1e-12) {
+                for &fi in &users[r] {
+                    if !frozen[fi] {
+                        frozen[fi] = true;
+                        rates[fi] = min_share;
+                        remaining -= 1;
+                        froze_any = true;
+                        // subtract this flow from all its resources
+                        for &r2 in &flows[fi].resources {
+                            residual[r2] -= min_share;
+                            active[r2] -= 1;
+                        }
+                    }
+                }
+            }
+        }
+        if !froze_any {
+            break; // numerical safety
+        }
+    }
+    rates
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testkit;
+    use crate::util::rng::Rng;
+
+    fn flow(resources: Vec<ResourceId>) -> FlowSpec {
+        FlowSpec { resources, bytes_remaining: 1.0 }
+    }
+
+    #[test]
+    fn single_resource_equal_split() {
+        let rates = max_min_rates(&[9.0], &[flow(vec![0]), flow(vec![0]), flow(vec![0])]);
+        for r in rates {
+            assert!((r - 3.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bottleneck_respected() {
+        // flow0 uses slow resource (cap 1), flow1 only fast (cap 10).
+        let rates = max_min_rates(&[1.0, 10.0], &[flow(vec![0, 1]), flow(vec![1])]);
+        assert!((rates[0] - 1.0).abs() < 1e-9);
+        assert!((rates[1] - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn classic_three_flow_max_min() {
+        // two links cap 1; fA uses both, fB link0, fC link1:
+        // max-min: fA = fB = fC = 0.5
+        let rates = max_min_rates(&[1.0, 1.0], &[flow(vec![0, 1]), flow(vec![0]), flow(vec![1])]);
+        for r in &rates {
+            assert!((*r - 0.5).abs() < 1e-9, "{rates:?}");
+        }
+    }
+
+    #[test]
+    fn loopback_is_infinite() {
+        let rates = max_min_rates(&[1.0], &[flow(vec![])]);
+        assert!(rates[0].is_infinite());
+    }
+
+    #[test]
+    fn feasibility_and_maxmin_property() {
+        testkit::check("maxmin-feasible", 80, |g| {
+            let nr = g.usize_in(1, 8);
+            let caps: Vec<f64> = (0..nr).map(|_| g.rng.f64() * 10.0 + 0.1).collect();
+            let nf = g.usize_in(1, 16);
+            let flows: Vec<FlowSpec> = (0..nf)
+                .map(|_| {
+                    let k = g.rng.range(1, (nr + 1).min(4));
+                    let mut rs: Vec<usize> = (0..nr).collect();
+                    shuffle(&mut rs, &mut g.rng);
+                    rs.truncate(k);
+                    rs.sort_unstable();
+                    rs.dedup();
+                    flow(rs)
+                })
+                .collect();
+            let rates = max_min_rates(&caps, &flows);
+            // feasibility: no resource oversubscribed
+            for (r, &cap) in caps.iter().enumerate() {
+                let used: f64 = flows
+                    .iter()
+                    .zip(&rates)
+                    .filter(|(f, _)| f.resources.contains(&r))
+                    .map(|(_, &rate)| rate)
+                    .sum();
+                prop_assert!(used <= cap * (1.0 + 1e-6), "resource {r} oversubscribed: {used} > {cap}");
+            }
+            // max-min: every flow is bottlenecked somewhere (cannot raise any
+            // flow without lowering a flow of equal-or-smaller rate)
+            for (fi, f) in flows.iter().enumerate() {
+                let bottlenecked = f.resources.iter().any(|&r| {
+                    let used: f64 = flows
+                        .iter()
+                        .zip(&rates)
+                        .filter(|(g2, _)| g2.resources.contains(&r))
+                        .map(|(_, &rate)| rate)
+                        .sum();
+                    // saturated resource where fi has the max rate among users
+                    let is_sat = used >= caps[r] * (1.0 - 1e-6);
+                    let max_user = flows
+                        .iter()
+                        .zip(&rates)
+                        .filter(|(g2, _)| g2.resources.contains(&r))
+                        .map(|(_, &rate)| rate)
+                        .fold(0.0f64, f64::max);
+                    is_sat && rates[fi] >= max_user * (1.0 - 1e-6)
+                });
+                prop_assert!(bottlenecked, "flow {fi} not bottlenecked (rate {})", rates[fi]);
+            }
+            Ok(())
+        });
+    }
+
+    fn shuffle(v: &mut Vec<usize>, rng: &mut Rng) {
+        for i in (1..v.len()).rev() {
+            let j = rng.below(i + 1);
+            v.swap(i, j);
+        }
+    }
+}

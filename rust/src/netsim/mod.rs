@@ -1,0 +1,23 @@
+//! Flow-level discrete-event network + compute simulator.
+//!
+//! This is the in-repo substitute for the paper's physical testbed and for
+//! SimAI (§V-G): schedules produced by [`systems`](crate::systems) are
+//! executed against a hierarchical cluster model with
+//!
+//! * **max-min fair bandwidth sharing** ([`flow`]): every transfer becomes a
+//!   fluid flow constrained by the egress capacity of its source container
+//!   and the ingress capacity of its destination container at the flow's
+//!   *bottleneck level* (the outermost level where the endpoints differ —
+//!   e.g. the 10 Gbps DC uplink for cross-DC flows, PCIe within a node);
+//! * **serial per-GPU compute** ([`dag`]): each GPU executes its compute
+//!   tasks one at a time in ready order.
+//!
+//! The simulator reports the makespan plus per-level / per-tag traffic
+//! accounting (used by the Fig. 2(b)/Fig. 16 reproductions).
+
+pub mod dag;
+pub mod flow;
+pub mod sim;
+
+pub use dag::{Dag, Tag, TaskId, TaskKind};
+pub use sim::{SimResult, Simulator};

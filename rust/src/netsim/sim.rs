@@ -1,0 +1,464 @@
+//! The discrete-event engine: executes a [`Dag`] against a [`ClusterSpec`].
+//!
+//! Compute tasks serialize per GPU; transfers become max-min-fair fluid flows
+//! over hierarchical egress/ingress capacities (see [`flow`](super::flow)).
+//! A transfer between GPUs whose outermost differing level is `l` consumes
+//! the egress capacity of the source's level-`l` container and the ingress
+//! capacity of the destination's level-`l` container (e.g. the shared 10 Gbps
+//! DC uplink for cross-DC flows), plus the level's fixed startup latency.
+
+use std::collections::VecDeque;
+
+use crate::cluster::ClusterSpec;
+use crate::netsim::dag::{Dag, Tag, TaskKind};
+use crate::netsim::flow::{max_min_rates, FlowSpec};
+
+const EPS: f64 = 1e-12;
+
+/// Simulation output.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub makespan: f64,
+    pub finish: Vec<f64>,
+    /// total bytes moved per tag
+    pub bytes_a2a: f64,
+    pub bytes_ag: f64,
+    pub bytes_allreduce: f64,
+    /// total bytes crossing each hierarchy level
+    pub bytes_per_level: Vec<f64>,
+    /// integral of (busy GPUs) dt / (G · makespan)
+    pub gpu_utilization: f64,
+    /// wall-clock events processed (perf accounting)
+    pub events: usize,
+}
+
+impl SimResult {
+    pub fn bytes_tag(&self, tag: Tag) -> f64 {
+        match tag {
+            Tag::A2A => self.bytes_a2a,
+            Tag::AG => self.bytes_ag,
+            Tag::AllReduce => self.bytes_allreduce,
+            Tag::Other => 0.0,
+        }
+    }
+}
+
+pub struct Simulator<'a> {
+    cluster: &'a ClusterSpec,
+}
+
+struct ActiveFlow {
+    task: usize,
+    spec: FlowSpec,
+    rate: f64,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(cluster: &'a ClusterSpec) -> Self {
+        Self { cluster }
+    }
+
+    /// Run the DAG to completion; panics on cyclic or dangling dependencies
+    /// (DAG construction enforces topological ids, so cycles are impossible).
+    pub fn run(&self, dag: &Dag) -> SimResult {
+        let ml = self.cluster.multilevel();
+        let levels = self.cluster.levels.len();
+        let g = ml.total_gpus();
+
+        // resource table: per level, per container: egress + ingress
+        let mut level_offset = vec![0usize; levels];
+        let mut ncaps = 0usize;
+        for l in 0..levels {
+            level_offset[l] = ncaps;
+            let containers: usize = ml.scaling()[..=l].iter().product();
+            ncaps += containers * 2;
+        }
+        let mut caps = vec![0.0f64; ncaps];
+        for l in 0..levels {
+            let containers: usize = ml.scaling()[..=l].iter().product();
+            for c in 0..containers {
+                caps[level_offset[l] + c * 2] = self.cluster.levels[l].bandwidth;
+                caps[level_offset[l] + c * 2 + 1] = self.cluster.levels[l].bandwidth;
+            }
+        }
+        let resource_of = |gpu: usize, level: usize, ingress: bool| -> usize {
+            let container = ml.worker_of(gpu, level);
+            level_offset[level] + container * 2 + ingress as usize
+        };
+
+        let n = dag.tasks.len();
+        let mut indeg = vec![0usize; n];
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, t) in dag.tasks.iter().enumerate() {
+            indeg[i] = t.deps.len();
+            for &d in &t.deps {
+                dependents[d].push(i);
+            }
+        }
+
+        let mut finish = vec![f64::NAN; n];
+        let mut done = vec![false; n];
+        let mut n_done = 0usize;
+
+        // per-GPU compute queues
+        let mut gpu_queue: Vec<VecDeque<usize>> = vec![VecDeque::new(); g];
+        let mut gpu_busy_until = vec![0.0f64; g];
+        let mut gpu_running: Vec<Option<usize>> = vec![None; g];
+        let mut gpu_busy_integral = 0.0f64;
+
+        // pending flow starts (after latency): (start_time, task)
+        let mut flow_starts: Vec<(f64, usize)> = Vec::new();
+        let mut flows: Vec<ActiveFlow> = Vec::new();
+        let mut rates_dirty = false;
+
+        let mut time = 0.0f64;
+        let mut events = 0usize;
+        let (mut bytes_a2a, mut bytes_ag, mut bytes_ar) = (0.0, 0.0, 0.0);
+        let mut bytes_per_level = vec![0.0f64; levels];
+
+        // ready queue: min-heap by task id — tasks dispatch in creation
+        // order (program order), so e.g. an SREncode created before the
+        // pre-expert compute also starts first on its GPU.
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let mut ready: BinaryHeap<Reverse<usize>> = 
+            (0..n).filter(|&i| indeg[i] == 0).map(Reverse).collect();
+
+        macro_rules! complete {
+            ($task:expr, $t:expr, $ready:expr, $finish:expr, $done:expr, $n_done:expr) => {{
+                let task = $task;
+                if !$done[task] {
+                    $done[task] = true;
+                    $finish[task] = $t;
+                    $n_done += 1;
+                    for &dep in &dependents[task] {
+                        indeg[dep] -= 1;
+                        if indeg[dep] == 0 {
+                            $ready.push(std::cmp::Reverse(dep));
+                        }
+                    }
+                }
+            }};
+        }
+
+        while n_done < n {
+            // dispatch everything ready at the current time
+            while let Some(std::cmp::Reverse(task)) = ready.pop() {
+                match dag.tasks[task].kind {
+                    TaskKind::Barrier => {
+                        complete!(task, time, ready, finish, done, n_done);
+                    }
+                    TaskKind::Compute { gpu, seconds } => {
+                        if seconds <= EPS {
+                            complete!(task, time, ready, finish, done, n_done);
+                        } else {
+                            gpu_queue[gpu].push_back(task);
+                        }
+                    }
+                    TaskKind::Transfer { src, dst, bytes, tag } => {
+                        match tag {
+                            Tag::A2A => bytes_a2a += bytes,
+                            Tag::AG => bytes_ag += bytes,
+                            Tag::AllReduce => bytes_ar += bytes,
+                            Tag::Other => {}
+                        }
+                        match self.cluster.bottleneck_level(src, dst) {
+                            None => {
+                                // loopback: instantaneous
+                                complete!(task, time, ready, finish, done, n_done);
+                            }
+                            Some(l) if bytes <= EPS => {
+                                let lat = self.cluster.levels[l].latency;
+                                flow_starts.push((time + lat, task));
+                            }
+                            Some(l) => {
+                                bytes_per_level[l] += bytes;
+                                let lat = self.cluster.levels[l].latency;
+                                flow_starts.push((time + lat, task));
+                            }
+                        }
+                    }
+                }
+            }
+            // start compute on idle GPUs
+            for gpu in 0..g {
+                if gpu_running[gpu].is_none() {
+                    if let Some(task) = gpu_queue[gpu].pop_front() {
+                        let TaskKind::Compute { seconds, .. } = dag.tasks[task].kind else {
+                            unreachable!()
+                        };
+                        gpu_running[gpu] = Some(task);
+                        gpu_busy_until[gpu] = time + seconds;
+                    }
+                }
+            }
+            if n_done == n {
+                break;
+            }
+            // recompute fair-share rates if the flow set changed
+            if rates_dirty {
+                let specs: Vec<FlowSpec> = flows.iter().map(|f| f.spec.clone()).collect();
+                let rates = max_min_rates(&caps, &specs);
+                for (f, r) in flows.iter_mut().zip(rates) {
+                    f.rate = r;
+                }
+                rates_dirty = false;
+            }
+
+            // find the next event time
+            let mut next = f64::INFINITY;
+            for gpu in 0..g {
+                if gpu_running[gpu].is_some() {
+                    next = next.min(gpu_busy_until[gpu]);
+                }
+            }
+            for &(t, _) in &flow_starts {
+                next = next.min(t);
+            }
+            for f in &flows {
+                if f.rate > 0.0 && f.rate.is_finite() {
+                    next = next.min(time + f.spec.bytes_remaining / f.rate);
+                } else if f.rate.is_infinite() {
+                    next = next.min(time);
+                }
+            }
+            assert!(
+                next.is_finite(),
+                "simulation stalled at t={time}: {} of {} tasks done (deadlock in schedule?)",
+                n_done,
+                n
+            );
+            // integrate utilization and advance flows
+            let dt = (next - time).max(0.0);
+            gpu_busy_integral += dt * gpu_running.iter().filter(|r| r.is_some()).count() as f64;
+            for f in &mut flows {
+                if f.rate.is_finite() {
+                    f.spec.bytes_remaining -= f.rate * dt;
+                }
+            }
+            time = next;
+            events += 1;
+
+            // process: compute finishes
+            for gpu in 0..g {
+                if let Some(task) = gpu_running[gpu] {
+                    if gpu_busy_until[gpu] <= time + EPS {
+                        gpu_running[gpu] = None;
+                        complete!(task, time, ready, finish, done, n_done);
+                    }
+                }
+            }
+            // flow starts
+            let mut started = false;
+            flow_starts.retain(|&(t, task)| {
+                if t <= time + EPS {
+                    let TaskKind::Transfer { src, dst, bytes, .. } = dag.tasks[task].kind else {
+                        unreachable!()
+                    };
+                    if bytes <= EPS {
+                        // latency-only transfer completes on arrival
+                        // (handled below via zero-remaining flow)
+                    }
+                    let l = self.cluster.bottleneck_level(src, dst).expect("non-loopback");
+                    flows.push(ActiveFlow {
+                        task,
+                        spec: FlowSpec {
+                            resources: vec![resource_of(src, l, false), resource_of(dst, l, true)],
+                            bytes_remaining: bytes,
+                        },
+                        rate: 0.0,
+                    });
+                    started = true;
+                    false
+                } else {
+                    true
+                }
+            });
+            // flow completions
+            let mut completed_any = false;
+            let mut i = 0;
+            while i < flows.len() {
+                if flows[i].spec.bytes_remaining <= EPS
+                    || (flows[i].rate.is_finite()
+                        && flows[i].rate > 0.0
+                        && flows[i].spec.bytes_remaining / flows[i].rate <= EPS)
+                    || flows[i].rate.is_infinite()
+                {
+                    let task = flows[i].task;
+                    flows.swap_remove(i);
+                    complete!(task, time, ready, finish, done, n_done);
+                    completed_any = true;
+                } else {
+                    i += 1;
+                }
+            }
+            if started || completed_any {
+                rates_dirty = true;
+            }
+        }
+
+        let makespan = time;
+        SimResult {
+            makespan,
+            finish,
+            bytes_a2a,
+            bytes_ag,
+            bytes_allreduce: bytes_ar,
+            bytes_per_level,
+            gpu_utilization: if makespan > 0.0 {
+                gpu_busy_integral / (makespan * g as f64)
+            } else {
+                0.0
+            },
+            events,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::netsim::dag::{Dag, Tag};
+
+    fn flat8() -> ClusterSpec {
+        presets::cluster_s()
+    }
+
+    #[test]
+    fn single_compute() {
+        let c = flat8();
+        let mut d = Dag::new();
+        d.compute(0, 2.5, vec![], "c");
+        let r = Simulator::new(&c).run(&d);
+        assert!((r.makespan - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serial_compute_on_one_gpu() {
+        let c = flat8();
+        let mut d = Dag::new();
+        d.compute(0, 1.0, vec![], "a");
+        d.compute(0, 1.0, vec![], "b");
+        d.compute(1, 1.0, vec![], "c");
+        let r = Simulator::new(&c).run(&d);
+        assert!((r.makespan - 2.0).abs() < 1e-9, "same-GPU tasks serialize: {}", r.makespan);
+    }
+
+    #[test]
+    fn dependency_chains() {
+        let c = flat8();
+        let mut d = Dag::new();
+        let a = d.compute(0, 1.0, vec![], "a");
+        let b = d.compute(1, 1.0, vec![a], "b");
+        d.compute(2, 1.0, vec![b], "c");
+        let r = Simulator::new(&c).run(&d);
+        assert!((r.makespan - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_time_matches_bandwidth() {
+        let c = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let bw = c.levels[0].bandwidth;
+        let lat = c.levels[0].latency;
+        let mut d = Dag::new();
+        let bytes = 10e6;
+        d.transfer(0, 2, bytes, Tag::A2A, vec![], "x"); // cross-DC
+        let r = Simulator::new(&c).run(&d);
+        let want = lat + bytes / bw;
+        assert!((r.makespan - want).abs() / want < 1e-6, "{} vs {want}", r.makespan);
+    }
+
+    #[test]
+    fn shared_uplink_halves_rate() {
+        let c = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let bw = c.levels[0].bandwidth;
+        let lat = c.levels[0].latency;
+        let mut d = Dag::new();
+        // both GPUs of DC0 send cross-DC simultaneously → share 10 Gbps egress
+        d.transfer(0, 2, 10e6, Tag::A2A, vec![], "x");
+        d.transfer(1, 3, 10e6, Tag::A2A, vec![], "y");
+        let r = Simulator::new(&c).run(&d);
+        let want = lat + 2.0 * 10e6 / bw;
+        assert!((r.makespan - want).abs() / want < 1e-6, "{} vs {want}", r.makespan);
+    }
+
+    #[test]
+    fn intra_vs_inter_dc_bandwidth() {
+        let c = presets::dcs_x_gpus(2, 4, 10.0, 128.0);
+        let mk = |src: usize, dst: usize| {
+            let mut d = Dag::new();
+            d.transfer(src, dst, 50e6, Tag::A2A, vec![], "t");
+            Simulator::new(&c).run(&d).makespan
+        };
+        assert!(mk(0, 4) > 10.0 * mk(0, 1), "cross-DC must be much slower");
+    }
+
+    #[test]
+    fn overlap_compute_and_transfer() {
+        let c = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let bw = c.levels[0].bandwidth;
+        let mut d = Dag::new();
+        let bytes = 12.5e7; // 0.1 s at 10 Gbps
+        d.transfer(0, 2, bytes, Tag::AG, vec![], "prefetch");
+        d.compute(0, bytes / bw, vec![], "pre");
+        let r = Simulator::new(&c).run(&d);
+        // they overlap: makespan ≈ max of the two, not the sum
+        let one = bytes / bw + c.levels[0].latency;
+        assert!(r.makespan < one * 1.1, "no overlap: {}", r.makespan);
+    }
+
+    #[test]
+    fn barrier_and_zero_tasks_are_free() {
+        let c = flat8();
+        let mut d = Dag::new();
+        let a = d.compute(0, 1.0, vec![], "a");
+        let b = d.barrier(vec![a], "sync");
+        let z = d.compute(1, 0.0, vec![b], "zero");
+        d.compute(1, 1.0, vec![z], "tail");
+        let r = Simulator::new(&c).run(&d);
+        assert!((r.makespan - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let c = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let mut d = Dag::new();
+        d.transfer(0, 2, 5e6, Tag::A2A, vec![], "a");
+        d.transfer(0, 1, 3e6, Tag::AG, vec![], "g");
+        let r = Simulator::new(&c).run(&d);
+        assert_eq!(r.bytes_a2a, 5e6);
+        assert_eq!(r.bytes_ag, 3e6);
+        assert_eq!(r.bytes_per_level[0], 5e6);
+        assert_eq!(r.bytes_per_level[1], 3e6);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let c = flat8();
+        let mut d = Dag::new();
+        for gpu in 0..8 {
+            d.compute(gpu, 1.0, vec![], "c");
+        }
+        let r = Simulator::new(&c).run(&d);
+        assert!((r.gpu_utilization - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn big_symmetric_a2a_completes_quickly() {
+        // 64 GPUs full A2A: 64*63 flows — smoke for the event loop
+        let c = presets::dcs_x_gpus(8, 8, 10.0, 128.0);
+        let mut d = Dag::new();
+        for i in 0..64usize {
+            for j in 0..64usize {
+                if i != j {
+                    d.transfer(i, j, 1e5, Tag::A2A, vec![], "x");
+                }
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let r = Simulator::new(&c).run(&d);
+        assert!(r.makespan > 0.0);
+        assert!(t0.elapsed().as_secs_f64() < 5.0, "sim too slow: {:?}", t0.elapsed());
+    }
+}

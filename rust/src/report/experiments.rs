@@ -1,0 +1,576 @@
+//! Paper-experiment drivers: one function per table/figure of HybridEP's
+//! evaluation (§V). Each returns a rendered [`Table`] plus machine-readable
+//! series so the bench harness, the CLI (`hybrid-ep experiments`) and the
+//! integration tests share one implementation.
+//!
+//! Shapes (not absolute numbers) are the reproduction target — see
+//! DESIGN.md's per-experiment index and EXPERIMENTS.md for measured results.
+
+use crate::cluster::{presets, ClusterSpec};
+use crate::model::solver;
+use crate::model::StreamConfig;
+use crate::moe::{GpuSpec, MoEWorkload, Routing};
+use crate::netsim::Tag;
+use crate::report::table::{f, speedup, Table};
+use crate::systems::aggregate::AggregateHybrid;
+use crate::systems::hybrid_ep::{HybridEp, MigrationCfg};
+use crate::systems::{ep, faster_moe, smart_moe, SchedCtx, System};
+
+/// Paper testbed: a "DC" is one 8-GPU node; Cluster-M = 2 DCs, Cluster-L = 4.
+pub fn paper_cluster_m() -> ClusterSpec {
+    presets::dcs_x_gpus(2, 8, presets::ETH_GBPS, presets::PCIE_GBPS)
+}
+
+pub fn paper_cluster_l() -> ClusterSpec {
+    presets::dcs_x_gpus(4, 8, presets::ETH_GBPS, presets::PCIE_GBPS)
+}
+
+/// Workload with explicit `D` (bytes) and `P_E` (bytes), paper-style.
+pub fn workload_from_sizes(d_bytes: f64, pe_bytes: f64, layers: usize, backward: bool) -> MoEWorkload {
+    let hidden = 1024usize;
+    let tokens = (d_bytes / (hidden as f64 * 4.0)).round().max(1.0) as usize;
+    let ffn = (pe_bytes / (2.0 * hidden as f64 * 4.0)).round().max(1.0) as usize;
+    MoEWorkload {
+        tokens_per_gpu: tokens,
+        hidden,
+        ffn,
+        experts_per_gpu: 1,
+        k: 1,
+        moe_layers: layers,
+        pre_blocks: 1,
+        backward,
+    }
+}
+
+/// Fixed per-layer framework time (optimizer, data pipeline, non-MoE
+/// blocks), calibrated so the 12-layer iteration intercept matches the
+/// paper's Table V baseline at small data traffic (~1.9 s non-EP time).
+pub const FIXED_LAYER_OVERHEAD: f64 = 0.155;
+
+fn uniform_routing(cluster: &ClusterSpec, w: &MoEWorkload) -> Routing {
+    let g = cluster.total_gpus();
+    Routing::uniform(g, g * w.experts_per_gpu, w.tokens_per_gpu, w.k)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2(b): EP share of iteration time vs bandwidth
+// ---------------------------------------------------------------------------
+
+pub struct Fig2bRow {
+    pub bw_gbps: f64,
+    pub ep_ratio: f64,
+}
+
+pub fn fig2b() -> (Table, Vec<Fig2bRow>) {
+    let w = workload_from_sizes(24e6, 8e6, 12, true);
+    let mut table = Table::new(
+        "Fig. 2(b) — EP overhead ratio vs inter-DC bandwidth (Tutel-style EP, 2 DCs × 8 GPUs)",
+        &["bandwidth", "iteration", "EP overhead share"],
+    );
+    let mut rows = Vec::new();
+    for bw in [1.25, 2.5, 5.0, 10.0, 128.0] {
+        // at 128 Gbps the interconnect is intra-DC PCIe (per-GPU links), not
+        // a shared DC uplink — the paper's single-HPC reference point
+        let cluster = if bw >= 128.0 {
+            ClusterSpec {
+                name: "1DCx16".into(),
+                levels: vec![crate::cluster::LevelSpec {
+                    name: "gpu".into(),
+                    fanout: 16,
+                    bandwidth: presets::gbps(bw),
+                    latency: 10e-6,
+                }],
+            }
+        } else {
+            presets::dcs_x_gpus(2, 8, bw, presets::PCIE_GBPS)
+        };
+        let routing = uniform_routing(&cluster, &w);
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let full = ep::Tutel::default().iteration_time(&ctx);
+        // comm-free reference: same schedule on an infinite-bandwidth cluster
+        let mut free_cluster = cluster.clone();
+        for l in &mut free_cluster.levels {
+            l.bandwidth = 1e18;
+            l.latency = 0.0;
+        }
+        let ctx_free = SchedCtx::new(&free_cluster, &w, &routing);
+        let free = ep::Tutel::default().iteration_time(&ctx_free);
+        let ratio = (full - free) / full;
+        table.row(vec![
+            format!("{bw} Gbps"),
+            crate::util::fmt_secs(full),
+            format!("{:.1}%", 100.0 * ratio),
+        ]);
+        rows.push(Fig2bRow { bw_gbps: bw, ep_ratio: ratio });
+    }
+    (table, rows)
+}
+
+// ---------------------------------------------------------------------------
+// Tab. IV + Fig. 12: modeling verification (optimal p among candidates)
+// ---------------------------------------------------------------------------
+
+pub struct Fig12Case {
+    pub name: &'static str,
+    pub d_mb: f64,
+    pub pe_mb: f64,
+    pub lat_pe_ms: f64,
+    pub expected_p: f64,
+}
+
+/// Table IV with the `Lat_PE` typo corrected (0.49/0.99 ms — see
+/// `model::solver` tests and EXPERIMENTS.md).
+pub fn table_iv_cases() -> Vec<Fig12Case> {
+    vec![
+        Fig12Case { name: "Mix-1", d_mb: 8.0, pe_mb: 4.7, lat_pe_ms: 0.49, expected_p: 0.75 },
+        Fig12Case { name: "Mix-2", d_mb: 8.0, pe_mb: 2.35, lat_pe_ms: 0.49, expected_p: 0.5 },
+        Fig12Case { name: "AG-only-1", d_mb: 3.0, pe_mb: 0.094, lat_pe_ms: 0.99, expected_p: 0.0 },
+        Fig12Case { name: "AG-only-2", d_mb: 3.0, pe_mb: 0.047, lat_pe_ms: 0.99, expected_p: 0.0 },
+    ]
+}
+
+pub struct Fig12Row {
+    pub case: &'static str,
+    pub p: f64,
+    pub s_ed: usize,
+    pub sim_secs: f64,
+    pub model_choice: bool,
+    pub measured_best: bool,
+}
+
+/// For each Table IV case: simulate every candidate `p` on the 8-GPU
+/// single-DC cluster and check the model-chosen `p` has minimal time.
+pub fn fig12() -> (Table, Vec<Fig12Row>) {
+    let g = 8usize;
+    let cluster = presets::cluster_s();
+    let mut table = Table::new(
+        "Fig. 12 — modeling verification: candidate p vs simulated iteration time (G=8, 128 Gbps)",
+        &["case", "p", "S_ED", "sim iter", "model pick", "measured best"],
+    );
+    let mut rows = Vec::new();
+    for case in table_iv_cases() {
+        let w = workload_from_sizes(case.d_mb * 1e6, case.pe_mb * 1e6, 1, false);
+        // calibrate GPU throughput so Lat_PE matches the case exactly
+        let gpu = GpuSpec { macs_per_sec: w.pre_expert_macs() / (case.lat_pe_ms * 1e-3) };
+        let routing = uniform_routing(&cluster, &w);
+        let mut ctx = SchedCtx::new(&cluster, &w, &routing);
+        ctx.gpu = gpu;
+        let stream = StreamConfig {
+            g,
+            d_bytes: w.d_bytes() * w.k as f64,
+            pe_bytes: w.pe_bytes(),
+            n_experts: 1,
+            bandwidth: presets::gbps(presets::PCIE_GBPS),
+            lat_pe: case.lat_pe_ms * 1e-3,
+            lat_ep: w.lat_per_expert(&gpu, g),
+        };
+        let model_pick = solver::solve_grid(&stream);
+        let mut best: Option<(f64, f64)> = None; // (time, p)
+        let mut case_rows = Vec::new();
+        for s_ed in (1..=g).filter(|s| g % s == 0) {
+            let p = solver::p_of_domain(g, s_ed);
+            let hy = HybridEp { partition: Some(vec![s_ed]), migration: None };
+            let t = hy.iteration_time(&ctx);
+            if best.map_or(true, |(bt, _)| t < bt) {
+                best = Some((t, p));
+            }
+            case_rows.push((p, s_ed, t));
+        }
+        let (_, best_p) = best.unwrap();
+        for (p, s_ed, t) in case_rows {
+            let is_model = (p - model_pick.p).abs() < 1e-9;
+            let is_best = (p - best_p).abs() < 1e-9;
+            table.row(vec![
+                case.name.to_string(),
+                f(p, 2),
+                s_ed.to_string(),
+                crate::util::fmt_secs(t),
+                if is_model { "◀ model".into() } else { String::new() },
+                if is_best { "★ best".into() } else { String::new() },
+            ]);
+            rows.push(Fig12Row {
+                case: case.name,
+                p,
+                s_ed,
+                sim_secs: t,
+                model_choice: is_model,
+                measured_best: is_best,
+            });
+        }
+    }
+    (table, rows)
+}
+
+// ---------------------------------------------------------------------------
+// Tab. V: end-to-end iteration time vs data traffic
+// ---------------------------------------------------------------------------
+
+pub struct Table5Cell {
+    pub cluster: &'static str,
+    pub data_mb: f64,
+    pub system: &'static str,
+    pub secs: f64,
+}
+
+pub fn table5(data_mbs: &[f64]) -> (Table, Vec<Table5Cell>) {
+    let expert_mb = 0.36;
+    let mut headers: Vec<String> = vec!["cluster".into(), "system".into()];
+    headers.extend(data_mbs.iter().map(|mb| format!("{mb:.0} MB")));
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Table V — avg iteration time (s) vs data traffic (expert 0.36 MB, 12 layers, fwd+bwd)",
+        &header_refs,
+    );
+    let mut cells = Vec::new();
+    for (cname, cluster) in [("Cluster-M", paper_cluster_m()), ("Cluster-L", paper_cluster_l())] {
+        let mut rows: Vec<(&'static str, Vec<f64>)> = Vec::new();
+        let systems: Vec<(&'static str, Box<dyn System>)> = vec![
+            ("Tutel", Box::new(ep::Tutel::default())),
+            ("FasterMoE", Box::new(faster_moe::FasterMoe::default())),
+            ("SmartMoE", Box::new(smart_moe::SmartMoe::default())),
+            ("HybridEP", Box::new(HybridEp::with_migration())),
+        ];
+        for (sname, sys) in &systems {
+            let mut times = Vec::new();
+            for &mb in data_mbs {
+                let w = workload_from_sizes(mb * 1e6, expert_mb * 1e6, 12, true);
+                let routing = uniform_routing(&cluster, &w);
+                let mut ctx = SchedCtx::new(&cluster, &w, &routing);
+                ctx.fixed_layer_overhead = FIXED_LAYER_OVERHEAD;
+                let t = sys.iteration_time(&ctx);
+                times.push(t);
+                cells.push(Table5Cell { cluster: cname, data_mb: mb, system: sname, secs: t });
+            }
+            rows.push((sname, times));
+        }
+        for (sname, times) in &rows {
+            let mut cells_fmt = vec![cname.to_string(), sname.to_string()];
+            cells_fmt.extend(times.iter().map(|t| f(*t, 2)));
+            table.row(cells_fmt);
+        }
+        // average speedup row (mean baseline / hybrid, as the paper reports)
+        let hybrid = &rows.last().unwrap().1;
+        let mut spd = vec![cname.to_string(), "Avg. Speedup".to_string()];
+        for i in 0..data_mbs.len() {
+            let base = rows[..3].iter().map(|(_, t)| t[i]).sum::<f64>() / 3.0;
+            spd.push(speedup(base / hybrid[i]));
+        }
+        table.row(spd);
+    }
+    (table, cells)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 13: iteration time vs expert size (no SR compression)
+// ---------------------------------------------------------------------------
+
+pub struct Fig13Cell {
+    pub cluster: &'static str,
+    pub expert_mb: f64,
+    pub system: &'static str,
+    pub secs: f64,
+}
+
+pub fn fig13(expert_mbs: &[f64]) -> (Table, Vec<Fig13Cell>) {
+    let data_mb = 16.0;
+    let mut headers: Vec<String> = vec!["cluster".into(), "system".into()];
+    headers.extend(expert_mbs.iter().map(|mb| format!("{mb:.0} MB")));
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Fig. 13 — avg iteration time vs expert size (data 16 MB, no SR compression)",
+        &header_refs,
+    );
+    let mut cells = Vec::new();
+    for (cname, cluster) in [("Cluster-M", paper_cluster_m()), ("Cluster-L", paper_cluster_l())] {
+        let systems: Vec<(&'static str, Box<dyn System>)> = vec![
+            ("Tutel", Box::new(ep::Tutel::default())),
+            ("FasterMoE", Box::new(faster_moe::FasterMoe::default())),
+            ("SmartMoE", Box::new(smart_moe::SmartMoe::default())),
+            ("HybridEP", Box::new(HybridEp::partition_only())),
+        ];
+        for (sname, sys) in &systems {
+            let mut row = vec![cname.to_string(), sname.to_string()];
+            for &mb in expert_mbs {
+                let w = workload_from_sizes(data_mb * 1e6, mb * 1e6, 12, true);
+                let routing = uniform_routing(&cluster, &w);
+                let mut ctx = SchedCtx::new(&cluster, &w, &routing);
+                ctx.fixed_layer_overhead = FIXED_LAYER_OVERHEAD;
+                let t = sys.iteration_time(&ctx);
+                row.push(f(t, 2));
+                cells.push(Fig13Cell { cluster: cname, expert_mb: mb, system: sname, secs: t });
+            }
+            table.row(row);
+        }
+    }
+    (table, cells)
+}
+
+// ---------------------------------------------------------------------------
+// Tab. VI: ablation — Partition vs +Migration
+// ---------------------------------------------------------------------------
+
+pub struct Table6Row {
+    pub cluster: &'static str,
+    pub data_mb: f64,
+    pub expert_mb: f64,
+    pub partition_secs: f64,
+    pub migration_secs: f64,
+}
+
+pub fn table6() -> (Table, Vec<Table6Row>) {
+    let mut table = Table::new(
+        "Table VI — ablation: domain partition alone vs + parameter-efficient migration",
+        &["cluster", "data&expert", "Partition", "+Migration", "speedup"],
+    );
+    let mut rows = Vec::new();
+    let clusters: Vec<(&'static str, ClusterSpec)> = vec![
+        ("Cluster-S", presets::cluster_s()),
+        ("Cluster-M", paper_cluster_m()),
+        ("Cluster-L", paper_cluster_l()),
+    ];
+    for (dmb, emb) in [(24.0, 8.0), (48.0, 2.0)] {
+        for (cname, cluster) in &clusters {
+            let w = workload_from_sizes(dmb * 1e6, emb * 1e6, 12, true);
+            let routing = uniform_routing(cluster, &w);
+            let mut ctx = SchedCtx::new(cluster, &w, &routing);
+            ctx.fixed_layer_overhead = FIXED_LAYER_OVERHEAD;
+            let part = HybridEp::partition_only().iteration_time(&ctx);
+            let mig = HybridEp::with_migration().iteration_time(&ctx);
+            table.row(vec![
+                cname.to_string(),
+                format!("{dmb:.0}&{emb:.0} MB"),
+                f(part, 2),
+                f(mig, 2),
+                speedup(part / mig),
+            ]);
+            rows.push(Table6Row {
+                cluster: cname,
+                data_mb: dmb,
+                expert_mb: emb,
+                partition_secs: part,
+                migration_secs: mig,
+            });
+        }
+    }
+    (table, rows)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 16: traffic vs tokens — EP linear, HybridEP bounded
+// ---------------------------------------------------------------------------
+
+pub struct Fig16Row {
+    pub config: String,
+    pub tokens: usize,
+    pub ep_mb: f64,
+    pub hybrid_mb: f64,
+}
+
+pub fn fig16() -> (Table, Vec<Fig16Row>) {
+    let mut table = Table::new(
+        "Fig. 16 — per-iteration communication traffic vs token count (triplet: EP size, H, M)",
+        &["config", "tokens", "EP traffic", "HybridEP traffic"],
+    );
+    let mut rows = Vec::new();
+    for (g, h, m) in [(8usize, 1024usize, 4096usize), (16, 1024, 2048), (32, 768, 3072)] {
+        let cluster = presets::dcs_x_gpus(g / 8, 8, presets::ETH_GBPS, presets::PCIE_GBPS);
+        let cluster =
+            if g <= 8 { presets::cluster_s() } else { cluster };
+        for tokens in [512usize, 2048, 8192, 32768] {
+            let w = MoEWorkload {
+                tokens_per_gpu: tokens,
+                hidden: h,
+                ffn: m,
+                experts_per_gpu: 1,
+                k: 1,
+                moe_layers: 1,
+                pre_blocks: 1,
+                backward: false,
+            };
+            let routing = uniform_routing(&cluster, &w);
+            let ctx = SchedCtx::new(&cluster, &w, &routing);
+            let ep_dag = ep::VanillaEp.build_iteration(&ctx);
+            let ep_traffic = ep_dag.traffic_by_tag(Tag::A2A) + ep_dag.traffic_by_tag(Tag::AG);
+            // HybridEP at full domain (the input-independent bound)
+            let sizes = cluster.multilevel().scaling().to_vec();
+            let hy = HybridEp {
+                partition: Some(sizes),
+                migration: Some(MigrationCfg::default()),
+            };
+            let hy_dag = hy.build_iteration(&ctx);
+            let hy_traffic = hy_dag.traffic_by_tag(Tag::A2A) + hy_dag.traffic_by_tag(Tag::AG);
+            table.row(vec![
+                format!("({g}, {h}, {m})"),
+                tokens.to_string(),
+                crate::util::fmt_bytes(ep_traffic),
+                crate::util::fmt_bytes(hy_traffic),
+            ]);
+            rows.push(Fig16Row {
+                config: format!("({g},{h},{m})"),
+                tokens,
+                ep_mb: ep_traffic / 1e6,
+                hybrid_mb: hy_traffic / 1e6,
+            });
+        }
+    }
+    (table, rows)
+}
+
+// ---------------------------------------------------------------------------
+// Tab. VII: communication frequency vs S_ED
+// ---------------------------------------------------------------------------
+
+pub fn table7() -> Table {
+    let mut table = Table::new(
+        "Table VII — GPU-to-GPU communication frequency vs expert domain size",
+        &["EP size", "comm", "1 (EP)", "2", "4", "8", "16", "32"],
+    );
+    for g in [8usize, 16, 32] {
+        let rows = crate::topology::frequency::table_vii_row(g);
+        let mut a2a = vec![g.to_string(), "A2A".to_string()];
+        let mut ag = vec![String::new(), "AG".to_string()];
+        for s in [1usize, 2, 4, 8, 16, 32] {
+            match rows.iter().find(|(se, _)| *se == s) {
+                Some((_, f)) => {
+                    a2a.push(f.a2a.to_string());
+                    ag.push(f.ag.to_string());
+                }
+                None => {
+                    a2a.push("-".to_string());
+                    ag.push("-".to_string());
+                }
+            }
+        }
+        table.row(a2a);
+        table.row(ag);
+    }
+    table
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 17: large-scale simulation up to 1000 DCs
+// ---------------------------------------------------------------------------
+
+pub struct Fig17Row {
+    pub dcs: usize,
+    pub bw_gbps: f64,
+    pub fixed: &'static str,
+    pub speedup: f64,
+}
+
+pub fn fig17(dc_counts: &[usize]) -> (Table, Vec<Fig17Row>) {
+    let mut table = Table::new(
+        "Fig. 17 — HybridEP vs EP speedup at DC granularity (SimAI-substitute flow simulation)",
+        &["mode", "bandwidth", "#DCs", "EP iter", "HybridEP iter", "speedup"],
+    );
+    let mut rows = Vec::new();
+    let w = MoEWorkload {
+        tokens_per_gpu: 8192,
+        hidden: 1024,
+        ffn: 2048,
+        experts_per_gpu: 1,
+        k: 2,
+        moe_layers: 4,
+        pre_blocks: 1,
+        backward: false,
+    };
+    let routing = Routing::uniform(1, 1, 1, 1); // aggregate systems ignore it
+    for (mode, fixed_s) in [("fixed S_ED=10", true), ("fixed p=0.9", false)] {
+        for &bw in &[1.25, 2.5, 5.0, 10.0] {
+            for &n in dc_counts {
+                let cluster = presets::flat_dcs(n, bw);
+                let ctx = SchedCtx::new(&cluster, &w, &routing);
+                let s_ed = if fixed_s { 10.min(n) } else { (n / 10).max(2) };
+                if n % s_ed != 0 {
+                    continue;
+                }
+                let ep_t = AggregateHybrid::ep().iteration_time(&ctx);
+                let hy = AggregateHybrid::hybrid(s_ed, w.pe_bytes() / 50.0);
+                let hy_t = hy.iteration_time(&ctx);
+                let sp = ep_t / hy_t;
+                table.row(vec![
+                    mode.to_string(),
+                    format!("{bw} Gbps"),
+                    n.to_string(),
+                    crate::util::fmt_secs(ep_t),
+                    crate::util::fmt_secs(hy_t),
+                    speedup(sp),
+                ]);
+                rows.push(Fig17Row { dcs: n, bw_gbps: bw, fixed: mode, speedup: sp });
+            }
+        }
+    }
+    (table, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2b_ratio_monotone_in_bandwidth() {
+        let (_t, rows) = fig2b();
+        for w in rows.windows(2) {
+            assert!(
+                w[1].ep_ratio <= w[0].ep_ratio + 0.02,
+                "EP share should shrink with bandwidth: {} → {}",
+                w[0].ep_ratio,
+                w[1].ep_ratio
+            );
+        }
+        assert!(rows[0].ep_ratio > 0.5, "at 1.25 Gbps EP must dominate");
+        let last = rows.last().unwrap().ep_ratio;
+        assert!(
+            last < rows[0].ep_ratio * 0.85,
+            "EP share must fall substantially by 128 Gbps: {} → {last}",
+            rows[0].ep_ratio
+        );
+    }
+
+    #[test]
+    fn fig12_model_picks_measured_best() {
+        let (_t, rows) = fig12();
+        for case in ["Mix-1", "Mix-2", "AG-only-1", "AG-only-2"] {
+            let model: Vec<_> = rows.iter().filter(|r| r.case == case && r.model_choice).collect();
+            assert_eq!(model.len(), 1, "{case}: exactly one model choice");
+            assert!(
+                model[0].measured_best,
+                "{case}: model p={} is not the measured best",
+                model[0].p
+            );
+        }
+    }
+
+    #[test]
+    fn table6_migration_always_helps() {
+        let (_t, rows) = table6();
+        let mut helped_somewhere = false;
+        for r in rows {
+            // migration must never hurt materially (codec compute is ≤ 1%)…
+            assert!(
+                r.migration_secs <= r.partition_secs * 1.01,
+                "{} {}&{}: migration {} worse than partition {}",
+                r.cluster,
+                r.data_mb,
+                r.expert_mb,
+                r.migration_secs,
+                r.partition_secs
+            );
+            helped_somewhere |= r.partition_secs / r.migration_secs > 1.2;
+        }
+        // …and must deliver a clear win where partition alone is bottlenecked
+        assert!(helped_somewhere, "migration never gave a >1.2× win");
+    }
+
+    #[test]
+    fn fig16_hybrid_traffic_bounded() {
+        let (_t, rows) = fig16();
+        for cfgname in ["(8,1024,4096)", "(16,1024,2048)", "(32,768,3072)"] {
+            let series: Vec<_> = rows.iter().filter(|r| r.config == cfgname).collect();
+            let ep_growth = series.last().unwrap().ep_mb / series[0].ep_mb;
+            let hy_growth = series.last().unwrap().hybrid_mb / series[0].hybrid_mb.max(1e-9);
+            assert!(ep_growth > 10.0, "{cfgname}: EP should grow ~linearly, got {ep_growth}");
+            assert!(hy_growth < 1.5, "{cfgname}: HybridEP should be bounded, got {hy_growth}");
+        }
+    }
+}

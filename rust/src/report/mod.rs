@@ -1,0 +1,6 @@
+//! Paper-style table/series rendering for the benchmark harness.
+
+pub mod experiments;
+pub mod table;
+
+pub use table::Table;

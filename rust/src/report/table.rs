@@ -1,0 +1,106 @@
+//! Column-aligned text tables, matching the rows/columns of the paper's
+//! tables and figures so `cargo bench` output reads side-by-side with the PDF.
+
+use std::fmt::Write as _;
+
+#[derive(Clone, Debug)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with per-column width alignment.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let total: usize = width.iter().sum::<usize>() + 3 * (ncol - 1);
+        writeln!(out, "{}", self.title).unwrap();
+        writeln!(out, "{}", "=".repeat(total.max(self.title.chars().count()))).unwrap();
+        let line = |cells: &[String], out: &mut String| {
+            let mut parts = Vec::with_capacity(ncol);
+            for (i, c) in cells.iter().enumerate() {
+                parts.push(format!("{:<w$}", c, w = width[i]));
+            }
+            writeln!(out, "{}", parts.join(" | ").trim_end()).unwrap();
+        };
+        line(&self.headers, &mut out);
+        writeln!(out, "{}", "-".repeat(total)).unwrap();
+        for row in &self.rows {
+            line(row, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a float with fixed decimals (table cells).
+pub fn f(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+/// Format a speedup as the paper prints it: `2.15×`.
+pub fn speedup(x: f64) -> String {
+    format!("{x:.2}×")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "long_header", "c"]);
+        t.row(vec!["1".into(), "2".into(), "3".into()]);
+        t.row(vec!["10".into(), "20".into(), "30".into()]);
+        let r = t.render();
+        assert!(r.contains("long_header"));
+        let lines: Vec<&str> = r.lines().collect();
+        // header + separator + 2 rows + title + rule
+        assert_eq!(lines.len(), 6);
+        // columns align: '|' positions identical across data rows
+        let pos: Vec<usize> = lines[4].match_indices('|').map(|(i, _)| i).collect();
+        let pos2: Vec<usize> = lines[5].match_indices('|').map(|(i, _)| i).collect();
+        assert_eq!(pos, pos2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(speedup(2.1), "2.10×");
+    }
+}

@@ -1,0 +1,235 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (input order/shapes/dtypes, parameter layout, expert slots).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// One flat parameter slot of a profile.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    /// true for MoE expert weights (the SR-migration targets)
+    pub expert: bool,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A lowered model profile (train_step + eval + init params).
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub name: String,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub h: usize,
+    pub m: usize,
+    pub e: usize,
+    pub k: usize,
+    pub n_layers: usize,
+    pub capacity: usize,
+    pub param_count: usize,
+    pub n_leaves: usize,
+    pub param_spec: Vec<ParamSpec>,
+    pub expert_slots: Vec<usize>,
+    pub train_file: PathBuf,
+    pub eval_file: PathBuf,
+    pub params_file: PathBuf,
+}
+
+/// The artifacts directory + parsed manifest.
+pub struct Artifacts {
+    pub root: PathBuf,
+    pub manifest: Value,
+}
+
+impl Artifacts {
+    /// Locate artifacts: `$HYBRID_EP_ARTIFACTS`, `./artifacts`, or the crate
+    /// root's `artifacts/` (works from tests, benches and examples).
+    pub fn discover() -> Result<Self> {
+        let mut candidates: Vec<PathBuf> = Vec::new();
+        if let Ok(p) = std::env::var("HYBRID_EP_ARTIFACTS") {
+            candidates.push(PathBuf::from(p));
+        }
+        candidates.push(PathBuf::from("artifacts"));
+        candidates.push(Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+        for c in &candidates {
+            if c.join("manifest.json").exists() {
+                return Self::load(c);
+            }
+        }
+        bail!(
+            "artifacts not found (searched {candidates:?}); run `make artifacts` first"
+        )
+    }
+
+    pub fn available() -> bool {
+        Self::discover().is_ok()
+    }
+
+    pub fn load(root: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(root.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", root.display()))?;
+        let manifest = Value::parse(&text).context("parsing manifest.json")?;
+        Ok(Self { root: root.to_path_buf(), manifest })
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.root.join(file)
+    }
+
+    pub fn profile(&self, name: &str) -> Result<Profile> {
+        let p = self
+            .manifest
+            .at(&["profiles", name])
+            .with_context(|| format!("profile {name:?} not in manifest"))?;
+        let cfg = p.req("config")?;
+        let spec = p
+            .req("param_spec")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok(ParamSpec {
+                    name: s.req("name")?.as_str()?.to_string(),
+                    shape: s.req("shape")?.as_usize_vec()?,
+                    dtype: s.req("dtype")?.as_str()?.to_string(),
+                    expert: s.req("expert_weight")?.as_bool()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Profile {
+            name: name.to_string(),
+            vocab: cfg.req("vocab")?.as_usize()?,
+            seq: cfg.req("seq")?.as_usize()?,
+            batch: cfg.req("batch")?.as_usize()?,
+            h: cfg.req("h")?.as_usize()?,
+            m: cfg.req("m")?.as_usize()?,
+            e: cfg.req("e")?.as_usize()?,
+            k: cfg.req("k")?.as_usize()?,
+            n_layers: cfg.req("n_layers")?.as_usize()?,
+            capacity: p.req("capacity")?.as_usize()?,
+            param_count: p.req("param_count")?.as_usize()?,
+            n_leaves: p.req("n_leaves")?.as_usize()?,
+            expert_slots: p.req("expert_slots")?.as_usize_vec()?,
+            train_file: self.path(p.at(&["train_step", "file"])?.as_str()?),
+            eval_file: self.path(p.at(&["eval", "file"])?.as_str()?),
+            params_file: self.path(p.req("params_file")?.as_str()?),
+            param_spec: spec,
+        })
+    }
+
+    /// Initial parameters as per-slot f32 buffers (flatten_spec order).
+    pub fn load_params(&self, profile: &Profile) -> Result<Vec<Vec<f32>>> {
+        let raw = std::fs::read(&profile.params_file)
+            .with_context(|| format!("reading {}", profile.params_file.display()))?;
+        if raw.len() != 4 * profile.param_count {
+            bail!(
+                "params file {} has {} bytes, expected {}",
+                profile.params_file.display(),
+                raw.len(),
+                4 * profile.param_count
+            );
+        }
+        let mut out = Vec::with_capacity(profile.param_spec.len());
+        let mut off = 0usize;
+        for spec in &profile.param_spec {
+            let n = spec.numel();
+            let mut buf = Vec::with_capacity(n);
+            for i in 0..n {
+                let o = (off + i) * 4;
+                buf.push(f32::from_le_bytes(raw[o..o + 4].try_into().unwrap()));
+            }
+            off += n;
+            out.push(buf);
+        }
+        if off != profile.param_count {
+            bail!("param spec covers {off} of {} elements", profile.param_count);
+        }
+        Ok(out)
+    }
+
+    /// GeMM artifact (Fig. 11): returns (path, l, h, m).
+    pub fn gemm(&self, l: usize, h: usize, m: usize) -> Result<PathBuf> {
+        let key = format!("{l}x{h}x{m}");
+        let e = self.manifest.at(&["gemm", &key])?;
+        Ok(self.path(e.req("file")?.as_str()?))
+    }
+
+    pub fn gemm_sizes(&self) -> Result<Vec<(usize, usize, usize)>> {
+        let mut out = Vec::new();
+        for key in self.manifest.req("gemm")?.as_obj()?.keys() {
+            let parts: Vec<usize> =
+                key.split('x').map(|x| x.parse().unwrap_or(0)).collect();
+            if parts.len() == 3 {
+                out.push((parts[0], parts[1], parts[2]));
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Demo-stage artifact path + its config field.
+    pub fn demo_entry(&self, name: &str) -> Result<PathBuf> {
+        let e = self.manifest.at(&["demo", "entries", name])?;
+        Ok(self.path(e.req("file")?.as_str()?))
+    }
+
+    pub fn demo_config(&self) -> Result<&Value> {
+        self.manifest.at(&["demo", "config"])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arts() -> Option<Artifacts> {
+        match Artifacts::discover() {
+            Ok(a) => Some(a),
+            Err(_) => {
+                eprintln!("skipping: artifacts not built");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn profile_parses_and_params_load() {
+        let Some(a) = arts() else { return };
+        let p = a.profile("test").unwrap();
+        assert_eq!(p.vocab, 64);
+        assert_eq!(p.param_spec.len(), p.n_leaves);
+        assert!(!p.expert_slots.is_empty());
+        let params = a.load_params(&p).unwrap();
+        assert_eq!(params.len(), p.n_leaves);
+        let total: usize = params.iter().map(|b| b.len()).sum();
+        assert_eq!(total, p.param_count);
+        // expert slots lead with the expert dimension
+        for &s in &p.expert_slots {
+            assert_eq!(p.param_spec[s].shape[0], p.e);
+            assert!(p.param_spec[s].expert);
+        }
+    }
+
+    #[test]
+    fn unknown_profile_errors() {
+        let Some(a) = arts() else { return };
+        assert!(a.profile("nonexistent").is_err());
+    }
+
+    #[test]
+    fn gemm_listing() {
+        let Some(a) = arts() else { return };
+        let sizes = a.gemm_sizes().unwrap();
+        assert!(sizes.contains(&(512, 512, 512)));
+        assert!(a.gemm(512, 512, 512).unwrap().exists());
+    }
+}

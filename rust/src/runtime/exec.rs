@@ -1,0 +1,124 @@
+//! PJRT execution: compile HLO text once, execute many times.
+//!
+//! `xla` crate wiring (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. All artifacts are lowered with
+//! `return_tuple=True`, so each execution yields one tuple literal that we
+//! decompose into the output list.
+//!
+//! PJRT handles are not `Send` (raw C pointers); each worker thread owns its
+//! own [`Engine`].
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client + executable cache for one thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&mut self, path: &Path) -> Result<Executable> {
+        let key = path.display().to_string();
+        if let Some(exe) = self.cache.get(&key) {
+            return Ok(Executable { exe: exe.clone() });
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling {}", path.display()))?,
+        );
+        self.cache.insert(key, exe.clone());
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled computation ready to run.
+pub struct Executable {
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs).context("PJRT execute")?;
+        let tuple = result[0][0].to_literal_sync().context("fetching result")?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat buffer.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {shape:?} != {} elements", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {shape:?} != {} elements", data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Zero-filled f32 literal.
+pub fn zeros_f32(shape: &[usize]) -> Result<xla::Literal> {
+    literal_f32(&vec![0.0; shape.iter().product()], shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Artifacts;
+
+    #[test]
+    fn gemm_artifact_multiplies() {
+        let Ok(a) = Artifacts::discover() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut eng = Engine::cpu().unwrap();
+        let exe = eng.load(&a.gemm(128, 128, 128).unwrap()).unwrap();
+        let n = 128usize;
+        let x = literal_f32(&vec![1.0; n * n], &[n, n]).unwrap();
+        let y = literal_f32(&vec![2.0; n * n], &[n, n]).unwrap();
+        let out = exe.run(&[x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        let v = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(v.len(), n * n);
+        assert!(v.iter().all(|&x| (x - 2.0 * n as f32).abs() < 1e-3));
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Ok(a) = Artifacts::discover() else { return };
+        let mut eng = Engine::cpu().unwrap();
+        let p = a.gemm(128, 128, 128).unwrap();
+        let _e1 = eng.load(&p).unwrap();
+        let t0 = std::time::Instant::now();
+        let _e2 = eng.load(&p).unwrap();
+        assert!(t0.elapsed().as_millis() < 50, "second load should be cached");
+    }
+
+    #[test]
+    fn literal_shape_validation() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_i32(&[1, 2, 3, 4], &[2, 2]).is_ok());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! request-path half: [`artifacts`] parses `manifest.json`, [`exec`] loads
+//! HLO **text** (`HloModuleProto::from_text_file` — the text parser reassigns
+//! instruction ids, which is why text, not serialized protos, is the
+//! interchange format with jax ≥ 0.5), compiles on `PjRtClient::cpu()` and
+//! executes with concrete inputs.
+
+pub mod artifacts;
+pub mod exec;
+
+pub use artifacts::{Artifacts, ParamSpec, Profile};
+pub use exec::{Engine, Executable};

@@ -1,0 +1,201 @@
+//! Aggregated-flow schedules for very large clusters (Fig. 17: up to 1000
+//! DCs).
+//!
+//! At DC granularity with uniform routing, per-pair A2A flows are symmetric;
+//! under max-min fairness the pairwise pattern is rate-equivalent to a ring
+//! shift where each GPU's total egress rides one aggregate flow (same egress
+//! and ingress load on every node). That collapses O(G²) transfers to O(G),
+//! keeping 1000-DC simulations tractable — the same modeling granularity the
+//! paper uses for its SimAI study (one GPU per DC, §III).
+
+use super::{SchedCtx, System};
+use crate::netsim::{Dag, Tag, TaskId};
+
+/// Aggregate HybridEP at a single level: domain size `s_ed` over `G` flat
+/// workers; `s_ed = 1` is aggregate vanilla EP.
+#[derive(Clone, Copy, Debug)]
+pub struct AggregateHybrid {
+    pub s_ed: usize,
+    /// transmitted expert bytes (post-compression); `None` = raw `P_E`
+    pub pe_tx_bytes: Option<f64>,
+    /// per-peer message setup overhead (NCCL channel setup / kernel launch /
+    /// connection amortization). This carries Table VII's *frequency* effect:
+    /// EP pays `G−1` setups per A2A round, HybridEP only `G/S_ED − 1`.
+    pub msg_overhead_secs: f64,
+}
+
+/// Cross-DC per-message setup cost (conservative WAN-connection estimate).
+pub const DEFAULT_MSG_OVERHEAD: f64 = 100e-6;
+
+impl AggregateHybrid {
+    pub fn ep() -> Self {
+        Self { s_ed: 1, pe_tx_bytes: None, msg_overhead_secs: DEFAULT_MSG_OVERHEAD }
+    }
+
+    pub fn hybrid(s_ed: usize, pe_tx_bytes: f64) -> Self {
+        Self { s_ed, pe_tx_bytes: Some(pe_tx_bytes), msg_overhead_secs: DEFAULT_MSG_OVERHEAD }
+    }
+
+    /// Data proportion still on A2A (§V-B mapping).
+    pub fn p(&self, g: usize) -> f64 {
+        crate::model::solver::p_of_domain(g, self.s_ed)
+    }
+}
+
+impl System for AggregateHybrid {
+    fn name(&self) -> &'static str {
+        if self.s_ed == 1 {
+            "EP(agg)"
+        } else {
+            "HybridEP(agg)"
+        }
+    }
+
+    fn build_forward(&self, ctx: &SchedCtx, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
+        let g = ctx.gpus();
+        assert!(g % self.s_ed == 0, "S_ED must divide G");
+        let w = ctx.workload;
+        let p = self.p(g);
+        let d = w.d_bytes() * w.k as f64;
+        let pe = self.pe_tx_bytes.unwrap_or_else(|| w.pe_bytes());
+        let a2a_bytes = p * d * (g as f64 - 1.0) / g as f64;
+        let ag_bytes = (self.s_ed as f64 - 1.0) * w.experts_per_gpu as f64 * pe;
+        // tokens each GPU computes: conserved (uniform routing)
+        let expert_secs = ctx.expert_secs((w.tokens_per_gpu * w.k) as f64);
+
+        let domains = g / self.s_ed;
+        // Table VII frequency effect: per-peer setup cost paid serially on
+        // the sender (EP: G−1 peers; HybridEP: domains−1 A2A mirrors and
+        // S_ED−1 AG peers, whose setup rides the asynchronous communicator).
+        let a2a_setup = self.msg_overhead_secs
+            * if self.s_ed == 1 { (g - 1) as f64 } else { (domains - 1) as f64 };
+        let ag_setup = self.msg_overhead_secs * (self.s_ed - 1) as f64;
+
+        let mut cur: Vec<TaskId> = entry.to_vec();
+        for _layer in 0..w.moe_layers {
+            // AG prefetch (ring within domain), overlaps pre-expert compute
+            let ag: Vec<Option<TaskId>> = (0..g)
+                .map(|i| {
+                    if ag_bytes > 0.0 {
+                        let dom = i / self.s_ed;
+                        let off = i % self.s_ed;
+                        let dst = dom * self.s_ed + (off + 1) % self.s_ed;
+                        let setup = dag.compute(i, ag_setup, vec![cur[i]], "ag_setup");
+                        Some(dag.transfer(i, dst, ag_bytes, Tag::AG, vec![setup], "ag"))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            let pre: Vec<TaskId> = (0..g)
+                .map(|i| dag.compute(i, ctx.pre_expert_secs(), vec![cur[i]], "pre_expert"))
+                .collect();
+            // aggregate A2A: ring shift to the same-offset mirror in the next domain
+            let disp: Vec<Option<TaskId>> = (0..g)
+                .map(|i| {
+                    if a2a_bytes > 0.0 && domains > 1 {
+                        let dom = i / self.s_ed;
+                        let off = i % self.s_ed;
+                        let dst = ((dom + 1) % domains) * self.s_ed + off;
+                        let setup = dag.compute(i, a2a_setup, vec![pre[i]], "a2a_setup");
+                        Some(dag.transfer(i, dst, a2a_bytes, Tag::A2A, vec![setup], "dispatch"))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            let expert: Vec<TaskId> = (0..g)
+                .map(|i| {
+                    let mut deps = vec![pre[i]];
+                    if let Some(t) = ag[i] {
+                        deps.push(t);
+                    }
+                    if let Some(t) = disp[i] {
+                        deps.push(t);
+                    }
+                    dag.compute(i, expert_secs, deps, "expert")
+                })
+                .collect();
+            let comb: Vec<TaskId> = (0..g)
+                .map(|i| {
+                    if a2a_bytes > 0.0 && domains > 1 {
+                        let dom = i / self.s_ed;
+                        let off = i % self.s_ed;
+                        let dst = ((dom + domains - 1) % domains) * self.s_ed + off;
+                        dag.transfer(i, dst, a2a_bytes, Tag::A2A, vec![expert[i]], "combine")
+                    } else {
+                        expert[i]
+                    }
+                })
+                .collect();
+            cur = (0..g)
+                .map(|i| dag.barrier(vec![comb[i], expert[i]], "layer_end"))
+                .collect();
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::moe::{MoEWorkload, Routing};
+    use crate::systems::SchedCtx;
+
+    fn w() -> MoEWorkload {
+        MoEWorkload {
+            tokens_per_gpu: 4096,
+            hidden: 1024,
+            ffn: 2048,
+            experts_per_gpu: 1,
+            k: 2,
+            moe_layers: 4,
+            pre_blocks: 1,
+            backward: false,
+        }
+    }
+
+    #[test]
+    fn scales_to_1000_dcs_quickly() {
+        let cluster = presets::flat_dcs(1000, 5.0);
+        let w = w();
+        let routing = Routing::uniform(1, 1, 1, 1); // unused by aggregate
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let t0 = std::time::Instant::now();
+        let ep = AggregateHybrid::ep().iteration_time(&ctx);
+        let hy = AggregateHybrid::hybrid(10, w.pe_bytes() / 50.0).iteration_time(&ctx);
+        assert!(t0.elapsed().as_secs_f64() < 20.0, "sim too slow: {:?}", t0.elapsed());
+        assert!(hy < ep, "hybrid {hy} vs ep {ep}");
+    }
+
+    #[test]
+    fn traffic_matches_eq3_eq4() {
+        let cluster = presets::flat_dcs(100, 5.0);
+        let w = w();
+        let routing = Routing::uniform(1, 1, 1, 1);
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let sys = AggregateHybrid { s_ed: 10, pe_tx_bytes: None, msg_overhead_secs: 0.0 };
+        let dag = sys.build_iteration(&ctx);
+        let g = 100.0;
+        let p = sys.p(100);
+        let d = w.d_bytes() * w.k as f64;
+        let want_a2a = 2.0 * p * d * (g - 1.0) / g * g * w.moe_layers as f64;
+        let want_ag = 9.0 * w.pe_bytes() * g * w.moe_layers as f64;
+        assert!((dag.traffic_by_tag(crate::netsim::Tag::A2A) - want_a2a).abs() / want_a2a < 1e-9);
+        assert!((dag.traffic_by_tag(crate::netsim::Tag::AG) - want_ag).abs() / want_ag < 1e-9);
+    }
+
+    #[test]
+    fn ep_matches_pairwise_ep_at_small_scale() {
+        // aggregate ring A2A ≈ pairwise A2A under uniform symmetric load
+        let cluster = presets::flat_dcs(8, 10.0);
+        let w = w();
+        let routing = Routing::uniform(8, 8, w.tokens_per_gpu, w.k);
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let agg = AggregateHybrid::ep().iteration_time(&ctx);
+        let pair = crate::systems::ep::VanillaEp.iteration_time(&ctx);
+        let ratio = agg / pair;
+        assert!((0.7..1.3).contains(&ratio), "aggregate {agg} vs pairwise {pair}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Vanilla Expert Parallelism and Tutel-style chunked pipelining.
+//!
+//! Vanilla EP (the paper's Fig. 1/Fig. 3(a) baseline): per MoE layer, each
+//! GPU runs pre-expert compute, dispatches tokens to expert hosts with a
+//! blocking A2A, computes its experts on arrivals, and returns results with a
+//! second A2A.
+//!
+//! [`Tutel`] splits dispatch/expert/combine into `r` chunks so chunk `c+1`'s
+//! A2A overlaps chunk `c`'s expert compute (adaptive pipelining of [22],
+//! [46]). `r = 1` degenerates to vanilla EP.
+
+use super::{SchedCtx, System};
+use crate::moe::routing::Placement;
+use crate::netsim::{Dag, Tag, TaskId};
+
+/// Blocking EP baseline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VanillaEp;
+
+impl System for VanillaEp {
+    fn name(&self) -> &'static str {
+        "VanillaEP"
+    }
+
+    fn build_forward(&self, ctx: &SchedCtx, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
+        build_pipelined(ctx, dag, entry, 1, None)
+    }
+}
+
+/// Tutel-style adaptive pipelining ([22]): overlap chunked A2A with expert
+/// compute. The chunk count is the paper's pipeline degree.
+#[derive(Clone, Copy, Debug)]
+pub struct Tutel {
+    pub chunks: usize,
+}
+
+impl Default for Tutel {
+    fn default() -> Self {
+        Self { chunks: 4 }
+    }
+}
+
+impl System for Tutel {
+    fn name(&self) -> &'static str {
+        "Tutel"
+    }
+
+    fn build_forward(&self, ctx: &SchedCtx, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
+        build_pipelined(ctx, dag, entry, self.chunks, None)
+    }
+}
+
+/// Shared EP layer builder, parameterized by pipeline degree and an optional
+/// expert placement (SmartMoE reuses it with a searched placement).
+pub(crate) fn build_pipelined(
+    ctx: &SchedCtx,
+    dag: &mut Dag,
+    entry: &[TaskId],
+    chunks: usize,
+    placement: Option<&Placement>,
+) -> Vec<TaskId> {
+    let g = ctx.gpus();
+    let default_placement = Placement::round_robin(g, ctx.workload.experts_per_gpu);
+    let placement = placement.unwrap_or(&default_placement);
+    let mut cur: Vec<TaskId> = entry.to_vec();
+
+    for _layer in 0..ctx.workload.moe_layers {
+        // pre-expert compute
+        let pre: Vec<TaskId> = (0..g)
+            .map(|i| dag.compute(i, ctx.pre_expert_secs(), vec![cur[i]], "pre_expert"))
+            .collect();
+
+        // token matrix: tokens[i][j] routed from GPU i to experts hosted on j
+        let mut exit_deps: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+        for _c in 0..chunks {
+            let frac = 1.0 / chunks as f64;
+            // dispatch
+            let mut arrive: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+            for i in 0..g {
+                for j in 0..g {
+                    let tokens = ctx.routing.tokens_to_gpu(i, j, placement) * frac;
+                    if i == j || tokens <= 0.0 {
+                        continue;
+                    }
+                    let t = dag.transfer(
+                        i,
+                        j,
+                        ctx.token_bytes(tokens),
+                        Tag::A2A,
+                        vec![pre[i]],
+                        "dispatch",
+                    );
+                    arrive[j].push(t);
+                }
+            }
+            // expert compute on each host (local + arrived tokens)
+            for j in 0..g {
+                let total_tokens: f64 =
+                    (0..g).map(|i| ctx.routing.tokens_to_gpu(i, j, placement)).sum::<f64>() * frac;
+                let mut deps = arrive[j].clone();
+                deps.push(pre[j]);
+                let e = dag.compute(j, ctx.expert_secs(total_tokens), deps, "expert");
+                // combine: send results back to each source
+                for i in 0..g {
+                    let tokens = ctx.routing.tokens_to_gpu(i, j, placement) * frac;
+                    if i == j || tokens <= 0.0 {
+                        exit_deps[i].push(e);
+                        continue;
+                    }
+                    let t = dag.transfer(
+                        j,
+                        i,
+                        ctx.token_bytes(tokens),
+                        Tag::A2A,
+                        vec![e],
+                        "combine",
+                    );
+                    exit_deps[i].push(t);
+                }
+            }
+        }
+        cur = (0..g)
+            .map(|i| {
+                let mut deps = std::mem::take(&mut exit_deps[i]);
+                deps.push(pre[i]);
+                dag.barrier(deps, "layer_end")
+            })
+            .collect();
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::systems::testutil::small_ctx_parts;
+    use crate::netsim::Simulator;
+
+    #[test]
+    fn pipelining_helps_or_matches() {
+        let (cluster, w, routing) = small_ctx_parts();
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let vanilla = VanillaEp.iteration_time(&ctx);
+        let tutel = Tutel { chunks: 4 }.iteration_time(&ctx);
+        assert!(tutel <= vanilla * 1.001, "tutel {tutel} vs vanilla {vanilla}");
+    }
+
+    #[test]
+    fn a2a_traffic_matches_eq3() {
+        // uniform routing: per-GPU dispatch volume = D·K·(G−1)/G, twice
+        // (dispatch + combine), per layer
+        let (cluster, w, routing) = small_ctx_parts();
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let mut dag = Dag::new();
+        let start = dag.barrier(vec![], "s");
+        let entry = vec![start; ctx.gpus()];
+        VanillaEp.build_forward(&ctx, &mut dag, &entry);
+        let g = ctx.gpus() as f64;
+        let d = w.d_bytes() * w.k as f64;
+        let want = 2.0 * d * (g - 1.0) / g * g * w.moe_layers as f64;
+        let got = dag.traffic_by_tag(Tag::A2A);
+        assert!((got - want).abs() / want < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn ep_frequency_matches_table_vii() {
+        // single-level 8-GPU cluster, 1 layer, fwd-only, 1 chunk:
+        // 56 ordered pairs × 2 (dispatch + combine)
+        let cluster = crate::cluster::presets::cluster_s();
+        let w = crate::moe::MoEWorkload {
+            tokens_per_gpu: 64,
+            hidden: 32,
+            ffn: 64,
+            experts_per_gpu: 1,
+            k: 1,
+            moe_layers: 1,
+            pre_blocks: 1,
+            backward: false,
+        };
+        let routing = crate::moe::Routing::uniform(8, 8, 64, 1);
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let dag = VanillaEp.build_iteration(&ctx);
+        assert_eq!(dag.frequency_by_tag(Tag::A2A), 2 * 56);
+        assert_eq!(dag.frequency_by_tag(Tag::AG), 0);
+    }
+
+    #[test]
+    fn iteration_grows_with_data() {
+        let (cluster, mut w, _) = small_ctx_parts();
+        let mk = |w: &crate::moe::MoEWorkload| {
+            let routing = crate::moe::Routing::uniform(
+                cluster.total_gpus(),
+                cluster.total_gpus() * w.experts_per_gpu,
+                w.tokens_per_gpu,
+                w.k,
+            );
+            let ctx = SchedCtx::new(&cluster, w, &routing);
+            let dag = VanillaEp.build_iteration(&ctx);
+            Simulator::new(&cluster).run(&dag).makespan
+        };
+        let t1 = mk(&w);
+        w.tokens_per_gpu *= 4;
+        let t4 = mk(&w);
+        assert!(t4 > 2.5 * t1, "A2A-bound iteration should scale with tokens: {t1} → {t4}");
+    }
+}

@@ -1,0 +1,216 @@
+//! FasterMoE-style dynamic shadowing ([20]).
+//!
+//! FasterMoE observes skewed gates create *hot* experts whose token traffic
+//! dwarfs the expert's own size; it "shadows" those experts by broadcasting
+//! their parameters to all GPUs so hot-expert tokens compute locally, and
+//! pipelines the rest. Under even routing it degenerates to chunked EP.
+
+use super::{SchedCtx, System};
+use crate::moe::routing::Placement;
+use crate::netsim::{Dag, Tag, TaskId};
+
+#[derive(Clone, Copy, Debug)]
+pub struct FasterMoe {
+    /// An expert is shadowed when its load exceeds `hot_factor ×` average.
+    pub hot_factor: f64,
+    /// Pipeline degree for the residual A2A.
+    pub chunks: usize,
+}
+
+impl Default for FasterMoe {
+    fn default() -> Self {
+        Self { hot_factor: 2.0, chunks: 2 }
+    }
+}
+
+impl FasterMoe {
+    /// Experts whose load exceeds the shadowing threshold.
+    pub fn hot_experts(&self, ctx: &SchedCtx) -> Vec<usize> {
+        let load = ctx.routing.per_expert_load();
+        let avg = load.iter().sum::<f64>() / load.len() as f64;
+        load.iter()
+            .enumerate()
+            .filter(|(_, &l)| l > self.hot_factor * avg)
+            .map(|(e, _)| e)
+            .collect()
+    }
+}
+
+impl System for FasterMoe {
+    fn name(&self) -> &'static str {
+        "FasterMoE"
+    }
+
+    fn build_forward(&self, ctx: &SchedCtx, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
+        let g = ctx.gpus();
+        let placement = Placement::round_robin(g, ctx.workload.experts_per_gpu);
+        let hot = self.hot_experts(ctx);
+        let is_hot = {
+            let mut v = vec![false; placement.total_experts()];
+            for &e in &hot {
+                v[e] = true;
+            }
+            v
+        };
+        let pe = ctx.workload.pe_bytes();
+        let mut cur: Vec<TaskId> = entry.to_vec();
+
+        for _layer in 0..ctx.workload.moe_layers {
+            // broadcast shadowed experts (overlaps pre-expert compute)
+            let mut shadow_arrive: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+            for &e in &hot {
+                let h = placement.host[e];
+                for dst in 0..g {
+                    if dst == h {
+                        continue;
+                    }
+                    let t = dag.transfer(h, dst, pe, Tag::AG, vec![cur[h]], "shadow");
+                    shadow_arrive[dst].push(t);
+                }
+            }
+            let pre: Vec<TaskId> = (0..g)
+                .map(|i| dag.compute(i, ctx.pre_expert_secs(), vec![cur[i]], "pre_expert"))
+                .collect();
+
+            let frac = 1.0 / self.chunks as f64;
+            let mut exit_deps: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+            for _c in 0..self.chunks {
+                let mut arrive: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+                for i in 0..g {
+                    for j in 0..g {
+                        // cold tokens only: hot experts compute at the source
+                        let tokens: f64 = placement
+                            .experts_on(j)
+                            .iter()
+                            .filter(|&&e| !is_hot[e])
+                            .map(|&e| ctx.routing.tokens[i][e])
+                            .sum::<f64>()
+                            * frac;
+                        if i == j || tokens <= 0.0 {
+                            continue;
+                        }
+                        let t = dag.transfer(
+                            i,
+                            j,
+                            ctx.token_bytes(tokens),
+                            Tag::A2A,
+                            vec![pre[i]],
+                            "dispatch",
+                        );
+                        arrive[j].push(t);
+                    }
+                }
+                for j in 0..g {
+                    // cold arrivals + own hot-expert tokens (computed locally)
+                    let cold: f64 = (0..g)
+                        .map(|i| {
+                            placement
+                                .experts_on(j)
+                                .iter()
+                                .filter(|&&e| !is_hot[e])
+                                .map(|&e| ctx.routing.tokens[i][e])
+                                .sum::<f64>()
+                        })
+                        .sum::<f64>()
+                        * frac;
+                    let local_hot: f64 =
+                        hot.iter().map(|&e| ctx.routing.tokens[j][e]).sum::<f64>() * frac;
+                    let mut deps = arrive[j].clone();
+                    deps.push(pre[j]);
+                    deps.extend(shadow_arrive[j].iter().copied());
+                    let ex =
+                        dag.compute(j, ctx.expert_secs(cold + local_hot), deps, "expert");
+                    for i in 0..g {
+                        let tokens: f64 = placement
+                            .experts_on(j)
+                            .iter()
+                            .filter(|&&e| !is_hot[e])
+                            .map(|&e| ctx.routing.tokens[i][e])
+                            .sum::<f64>()
+                            * frac;
+                        if i == j || tokens <= 0.0 {
+                            exit_deps[i].push(ex);
+                            continue;
+                        }
+                        let t = dag.transfer(
+                            j,
+                            i,
+                            ctx.token_bytes(tokens),
+                            Tag::A2A,
+                            vec![ex],
+                            "combine",
+                        );
+                        exit_deps[i].push(t);
+                    }
+                }
+            }
+            cur = (0..g)
+                .map(|i| {
+                    let mut deps = std::mem::take(&mut exit_deps[i]);
+                    deps.push(pre[i]);
+                    dag.barrier(deps, "layer_end")
+                })
+                .collect();
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::moe::{MoEWorkload, Routing};
+    use crate::systems::ep::VanillaEp;
+
+    fn skewed_parts() -> (crate::cluster::ClusterSpec, MoEWorkload, Routing) {
+        let cluster = presets::dcs_x_gpus(2, 4, 10.0, 128.0);
+        let w = MoEWorkload {
+            tokens_per_gpu: 2048,
+            hidden: 512,
+            ffn: 512,
+            experts_per_gpu: 1,
+            k: 2,
+            moe_layers: 2,
+            pre_blocks: 1,
+            backward: false,
+        };
+        let routing = Routing::zipf(8, 8, 2048, 2, 1.6, 3);
+        (cluster, w, routing)
+    }
+
+    #[test]
+    fn detects_hot_experts_under_zipf() {
+        let (cluster, w, routing) = skewed_parts();
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let hot = FasterMoe::default().hot_experts(&ctx);
+        assert!(!hot.is_empty(), "zipf 1.6 must produce hot experts");
+        assert!(hot.len() < 4, "not everything is hot: {hot:?}");
+    }
+
+    #[test]
+    fn no_hot_experts_under_uniform() {
+        let cluster = presets::cluster_s();
+        let w = MoEWorkload::default_paper();
+        let routing = Routing::uniform(8, 8, w.tokens_per_gpu, w.k);
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        assert!(FasterMoe::default().hot_experts(&ctx).is_empty());
+    }
+
+    #[test]
+    fn shadowing_beats_vanilla_under_skew() {
+        let (cluster, w, routing) = skewed_parts();
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let vanilla = VanillaEp.iteration_time(&ctx);
+        let fm = FasterMoe::default().iteration_time(&ctx);
+        assert!(fm < vanilla, "shadowing should win under skew: {fm} vs {vanilla}");
+    }
+
+    #[test]
+    fn shadow_traffic_is_ag_tagged() {
+        let (cluster, w, routing) = skewed_parts();
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let dag = FasterMoe::default().build_iteration(&ctx);
+        assert!(dag.traffic_by_tag(Tag::AG) > 0.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! SmartMoE-style offline placement search ([58]).
+//!
+//! SmartMoE combines offline parallelization-plan search with cheap online
+//! adjustment. We reproduce the offline part that matters under constrained
+//! bandwidth: a greedy expert-placement search that minimizes the
+//! bandwidth-weighted A2A cost of the routing histogram, followed by a
+//! Tutel-style pipelined schedule using the found placement. Under even
+//! routing all placements tie and SmartMoE ≈ Tutel (as in the paper's
+//! Table V, where the three baselines are within noise of each other).
+
+use super::ep::build_pipelined;
+use super::{SchedCtx, System};
+use crate::moe::routing::Placement;
+use crate::netsim::{Dag, TaskId};
+
+#[derive(Clone, Copy, Debug)]
+pub struct SmartMoe {
+    /// Greedy improvement passes over all expert pairs.
+    pub passes: usize,
+    /// Pipeline degree of the final schedule.
+    pub chunks: usize,
+}
+
+impl Default for SmartMoe {
+    fn default() -> Self {
+        Self { passes: 2, chunks: 4 }
+    }
+}
+
+impl SmartMoe {
+    /// Bandwidth-weighted A2A cost of a placement: Σ tokens(i→j) / bw(i, j).
+    pub fn placement_cost(ctx: &SchedCtx, placement: &Placement) -> f64 {
+        let g = ctx.gpus();
+        let mut cost = 0.0;
+        for i in 0..g {
+            for j in 0..g {
+                if i == j {
+                    continue;
+                }
+                let tokens = ctx.routing.tokens_to_gpu(i, j, placement);
+                cost += ctx.token_bytes(tokens) / ctx.cluster.bandwidth_between(i, j);
+            }
+        }
+        cost
+    }
+
+    /// Greedy pairwise-swap search from the round-robin placement.
+    pub fn search_placement(&self, ctx: &SchedCtx) -> Placement {
+        let g = ctx.gpus();
+        let mut placement = Placement::round_robin(g, ctx.workload.experts_per_gpu);
+        let total = placement.total_experts();
+        let mut cost = Self::placement_cost(ctx, &placement);
+        for _ in 0..self.passes {
+            let mut improved = false;
+            for e1 in 0..total {
+                for e2 in e1 + 1..total {
+                    if placement.host[e1] == placement.host[e2] {
+                        continue;
+                    }
+                    placement.swap(e1, e2);
+                    let c = Self::placement_cost(ctx, &placement);
+                    if c + 1e-15 < cost {
+                        cost = c;
+                        improved = true;
+                    } else {
+                        placement.swap(e1, e2); // revert
+                    }
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        placement
+    }
+}
+
+impl System for SmartMoe {
+    fn name(&self) -> &'static str {
+        "SmartMoE"
+    }
+
+    fn build_forward(&self, ctx: &SchedCtx, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
+        let placement = self.search_placement(ctx);
+        build_pipelined(ctx, dag, entry, self.chunks, Some(&placement))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::moe::{MoEWorkload, Routing};
+
+    #[test]
+    fn search_never_worsens_cost() {
+        let cluster = presets::dcs_x_gpus(2, 4, 10.0, 128.0);
+        let w = MoEWorkload {
+            tokens_per_gpu: 1024,
+            hidden: 256,
+            ffn: 512,
+            experts_per_gpu: 2,
+            k: 2,
+            moe_layers: 1,
+            pre_blocks: 1,
+            backward: false,
+        };
+        for seed in 0..5u64 {
+            let routing = Routing::zipf(8, 16, 1024, 2, 1.2, seed);
+            let ctx = SchedCtx::new(&cluster, &w, &routing);
+            let base = SmartMoe::placement_cost(
+                &ctx,
+                &Placement::round_robin(8, w.experts_per_gpu),
+            );
+            let found = SmartMoe::default().search_placement(&ctx);
+            let cost = SmartMoe::placement_cost(&ctx, &found);
+            assert!(cost <= base + 1e-12, "seed {seed}: {cost} > {base}");
+        }
+    }
+
+    #[test]
+    fn skew_specific_placement_improves() {
+        // concentrate GPU-0 traffic on experts hosted cross-DC: search should
+        // bring a hot expert into DC 0
+        let cluster = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let w = MoEWorkload {
+            tokens_per_gpu: 1000,
+            hidden: 256,
+            ffn: 512,
+            experts_per_gpu: 1,
+            k: 1,
+            moe_layers: 1,
+            pre_blocks: 1,
+            backward: false,
+        };
+        // GPUs 0,1 (DC0) route everything to expert 3 (hosted on GPU 3, DC1);
+        // GPUs 2,3 route everything to expert 0 (GPU 0, DC0).
+        let mut tokens = vec![vec![0.0; 4]; 4];
+        tokens[0][3] = 1000.0;
+        tokens[1][3] = 1000.0;
+        tokens[2][0] = 1000.0;
+        tokens[3][0] = 1000.0;
+        let routing = Routing { tokens };
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let base = SmartMoe::placement_cost(&ctx, &Placement::round_robin(4, 1));
+        let found = SmartMoe::default().search_placement(&ctx);
+        let cost = SmartMoe::placement_cost(&ctx, &found);
+        // swapping experts 0 and 3 removes all cross-DC traffic
+        assert!(cost < base * 0.2, "expected big win: {cost} vs {base}");
+    }
+
+    #[test]
+    fn uniform_routing_is_a_fixed_point() {
+        let cluster = presets::cluster_s();
+        let w = MoEWorkload::default_paper();
+        let routing = Routing::uniform(8, 8, w.tokens_per_gpu, w.k);
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let found = SmartMoe::default().search_placement(&ctx);
+        assert_eq!(found, Placement::round_robin(8, 1), "uniform: nothing to improve");
+    }
+}

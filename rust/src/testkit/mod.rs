@@ -1,0 +1,128 @@
+//! Lightweight property-based testing (in-repo substitute for `proptest`,
+//! which is not vendored in this offline image — see DESIGN.md §Substitutions).
+//!
+//! A property is a function from a seeded [`Rng`](crate::util::rng::Rng) to
+//! `Result<(), String>`. The runner executes `cases` seeds derived from a base
+//! seed; on failure it retries the failing seed with progressively simpler
+//! generator bounds (callers use [`Gen::size`] to scale their structures,
+//! giving shrink-lite behaviour) and reports the smallest failing seed/size.
+
+use crate::util::rng::Rng;
+
+/// Generator context: seeded RNG + a size bound properties should respect.
+pub struct Gen {
+    pub rng: Rng,
+    /// soft upper bound for generated structure sizes (shrink-lite lever)
+    pub size: usize,
+}
+
+impl Gen {
+    /// Vec of length 1..=size with elements from `f`.
+    pub fn vec<T>(&mut self, f: impl Fn(&mut Rng) -> T) -> Vec<T> {
+        let n = self.rng.range(1, self.size.max(2));
+        (0..n).map(|_| f(&mut self.rng)).collect()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+}
+
+/// Run `prop` for `cases` random cases. Panics with a reproduction line on
+/// the first failure (after shrinking the size bound).
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    let base = base_seed(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let full_size = 16 + case % 48; // grow sizes over the run
+        if let Err(msg) = run_one(&prop, seed, full_size) {
+            // shrink-lite: find the smallest size bound that still fails
+            let mut fail_size = full_size;
+            let mut fail_msg = msg;
+            for size in (2..full_size).rev() {
+                match run_one(&prop, seed, size) {
+                    Err(m) => {
+                        fail_size = size;
+                        fail_msg = m;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed:#x}, size {fail_size}):\n  {fail_msg}\n  \
+                 reproduce: testkit::replay({seed:#x}, {fail_size}, prop)"
+            );
+        }
+    }
+}
+
+fn run_one(
+    prop: &impl Fn(&mut Gen) -> Result<(), String>,
+    seed: u64,
+    size: usize,
+) -> Result<(), String> {
+    let mut g = Gen { rng: Rng::new(seed), size };
+    prop(&mut g)
+}
+
+/// Re-run a single failing case from a `check` panic message.
+pub fn replay(seed: u64, size: usize, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    run_one(&prop, seed, size).expect("replay did not fail");
+}
+
+/// Assert helper returning `Err(String)` instead of panicking.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// `a ≈ b` helper for property bodies.
+pub fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+fn base_seed(name: &str) -> u64 {
+    // FNV-1a over the property name: stable per-property seed streams.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("sum-commutes", 50, |g| {
+            let xs = g.vec(|r| r.below(100) as i64);
+            let fwd: i64 = xs.iter().sum();
+            let rev: i64 = xs.iter().rev().sum();
+            prop_assert!(fwd == rev, "sum not commutative: {fwd} vs {rev}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always-small", 50, |g| {
+            let xs = g.vec(|r| r.below(1000));
+            prop_assert!(xs.iter().all(|&x| x < 500), "found large element");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9));
+        assert!(!close(1.0, 2.0, 1e-9));
+    }
+}

@@ -1,0 +1,105 @@
+//! Communication frequency accounting (paper Table VII).
+
+use crate::cluster::Multilevel;
+use crate::topology::{DomainPartition, Topology};
+
+/// Ordered-pair communication counts.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Freq {
+    pub a2a: usize,
+    pub ag: usize,
+    /// per level: (a2a, ag)
+    pub per_level: Vec<(usize, usize)>,
+}
+
+impl Freq {
+    pub fn total(&self) -> usize {
+        self.a2a + self.ag
+    }
+}
+
+/// Closed-form Table VII counts for a single-level cluster of `g` GPUs with
+/// expert-domain size `s` (used to cross-check `Topology::frequency`):
+///
+/// * AG pairs: `(g / s)` domains × `s·(s−1)` ordered intra-domain pairs.
+/// * A2A pairs: `s` offsets × `(g/s)·(g/s − 1)` ordered cross-domain pairs.
+pub fn closed_form_single_level(g: usize, s: usize) -> Freq {
+    assert!(g % s == 0);
+    let domains = g / s;
+    Freq {
+        ag: domains * s * (s - 1),
+        a2a: s * domains * (domains - 1),
+        per_level: vec![(s * domains * (domains - 1), domains * s * (s - 1))],
+    }
+}
+
+/// Table VII row generator: frequencies for each `S_ED` candidate of an EP
+/// group of size `g` (single level).
+pub fn table_vii_row(g: usize) -> Vec<(usize, Freq)> {
+    let ml = Multilevel::new(vec![g]).unwrap();
+    (0..)
+        .map(|i| 1usize << i)
+        .take_while(|&s| s <= g)
+        .filter(|&s| g % s == 0)
+        .map(|s| {
+            let part = DomainPartition::new(&ml, vec![s]).unwrap();
+            (s, Topology::build(ml.clone(), part).frequency())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_matches_paper_table_vii() {
+        // EP size 8
+        for (s, a2a, ag) in [(1, 56, 0), (2, 24, 8), (4, 8, 24), (8, 0, 56)] {
+            let f = closed_form_single_level(8, s);
+            assert_eq!((f.a2a, f.ag), (a2a, ag), "G=8 S={s}");
+        }
+        // EP size 16
+        for (s, a2a, ag) in [(1, 240, 0), (2, 112, 16), (4, 48, 48), (8, 16, 112), (16, 0, 240)] {
+            let f = closed_form_single_level(16, s);
+            assert_eq!((f.a2a, f.ag), (a2a, ag), "G=16 S={s}");
+        }
+        // EP size 32
+        for (s, a2a, ag) in
+            [(1, 992, 0), (2, 480, 32), (4, 224, 96), (8, 96, 224), (16, 32, 480), (32, 0, 992)]
+        {
+            let f = closed_form_single_level(32, s);
+            assert_eq!((f.a2a, f.ag), (a2a, ag), "G=32 S={s}");
+        }
+    }
+
+    #[test]
+    fn topology_matches_closed_form() {
+        for g in [4usize, 8, 16] {
+            for s in (1..=g).filter(|d| g % d == 0) {
+                let ml = Multilevel::new(vec![g]).unwrap();
+                let part = DomainPartition::new(&ml, vec![s]).unwrap();
+                let topo = Topology::build(ml, part).frequency();
+                let cf = closed_form_single_level(g, s);
+                assert_eq!((topo.a2a, topo.ag), (cf.a2a, cf.ag), "G={g} S={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn table_vii_rows_complete() {
+        let rows = table_vii_row(32);
+        assert_eq!(rows.len(), 6); // S_ED ∈ {1,2,4,8,16,32}
+        assert_eq!(rows[0].1.a2a, 992);
+        assert_eq!(rows[5].1.ag, 992);
+    }
+
+    #[test]
+    fn a2a_falls_quadratically_ag_rises() {
+        let rows = table_vii_row(16);
+        for w in rows.windows(2) {
+            assert!(w[1].1.a2a < w[0].1.a2a || w[0].1.a2a == 0);
+            assert!(w[1].1.ag > w[0].1.ag || w[1].1.ag == w[0].1.ag);
+        }
+    }
+}

@@ -1,0 +1,345 @@
+//! Domain-based partition and communication-topology construction
+//! (HybridEP §IV-A, Algorithm 1, Table VII).
+//!
+//! An *expert domain* is a set of workers that only uses AG (expert
+//! migration) internally; A2A (data routing) only crosses domains. The
+//! *domain-based communication rule*: at each level, two workers communicate
+//! via **AG** iff they are in the same domain at different offsets, and via
+//! **A2A** iff they are in different domains at the same offset; GPUs may only
+//! communicate at level `l` when all their inner (level `> l`) coordinates
+//! match.
+
+pub mod frequency;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::Multilevel;
+
+/// Communication type between a pair of GPUs (Algorithm 1 output).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CommType {
+    /// Expert migration (All-Gather pattern), intra-domain.
+    AllGather,
+    /// Data routing (All-to-All pattern), inter-domain.
+    AllToAll,
+}
+
+/// Expert-domain sizes per level (`S_ED^l`), aligned with a [`Multilevel`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DomainPartition {
+    domain_sizes: Vec<usize>,
+}
+
+impl DomainPartition {
+    /// `domain_sizes[l]` must divide the scaling factor at level `l`.
+    pub fn new(ml: &Multilevel, domain_sizes: Vec<usize>) -> Result<Self> {
+        if domain_sizes.len() != ml.levels() {
+            bail!(
+                "expected {} domain sizes (one per level), got {}",
+                ml.levels(),
+                domain_sizes.len()
+            );
+        }
+        for (l, (&s, &sf)) in domain_sizes.iter().zip(ml.scaling()).enumerate() {
+            if s == 0 || sf % s != 0 {
+                bail!("S_ED^{l} = {s} must divide SF^{l} = {sf}");
+            }
+        }
+        Ok(Self { domain_sizes })
+    }
+
+    /// Vanilla EP: every domain has size 1 (A2A everywhere).
+    pub fn vanilla(ml: &Multilevel) -> Self {
+        Self { domain_sizes: vec![1; ml.levels()] }
+    }
+
+    /// Full AG: each level is one domain.
+    pub fn full(ml: &Multilevel) -> Self {
+        Self { domain_sizes: ml.scaling().to_vec() }
+    }
+
+    pub fn sizes(&self) -> &[usize] {
+        &self.domain_sizes
+    }
+
+    pub fn size_at(&self, level: usize) -> usize {
+        self.domain_sizes[level]
+    }
+
+    /// Proportion `p` of remote data chunks still sent via A2A at `level`
+    /// under this partition — the §V-B mapping `p = 1 − S_ED/G`
+    /// (with `S_ED = 1 ⇒ p = 1`: pure EP).
+    pub fn p_at(&self, ml: &Multilevel, level: usize) -> f64 {
+        let g = ml.scaling()[level] as f64;
+        let s = self.domain_sizes[level] as f64;
+        if s <= 1.0 {
+            1.0
+        } else {
+            1.0 - s / g
+        }
+    }
+}
+
+/// Algorithm 1: communication type between GPUs `m` and `n` at `level`.
+///
+/// Returns `None` when the pair does not communicate at this level: they
+/// must agree at every *other* level (`level` is their single differing
+/// coordinate — communication happens at the outermost level where a pair
+/// diverges, and only between workers embedded in the same context), and at
+/// `level` be either same-domain/different-offset (AG) or
+/// different-domain/same-offset (A2A).
+pub fn comm_type_at(
+    ml: &Multilevel,
+    part: &DomainPartition,
+    m: usize,
+    n: usize,
+    level: usize,
+) -> Option<CommType> {
+    let loc_m = ml.locate(m);
+    let loc_n = ml.locate(n);
+    // "indices of subsequent layers are the same" — and outer layers too:
+    // a pair interacts only at its outermost differing level.
+    if loc_m[level + 1..] != loc_n[level + 1..] || loc_m[..level] != loc_n[..level] {
+        return None;
+    }
+    let (wm, wn) = (loc_m[level], loc_n[level]);
+    let s = part.size_at(level);
+    let (ed_m, off_m) = (wm / s, wm % s);
+    let (ed_n, off_n) = (wn / s, wn % s);
+    if ed_m == ed_n && off_m != off_n {
+        Some(CommType::AllGather)
+    } else if ed_m != ed_n && off_m == off_n {
+        Some(CommType::AllToAll)
+    } else {
+        None
+    }
+}
+
+/// The level at which `m` and `n` communicate directly and the type, if any.
+/// A pair communicates at its single differing level (multi-level divergence
+/// is bridged by relaying through mirrors — see `systems::hybrid_ep`).
+pub fn comm_type(
+    ml: &Multilevel,
+    part: &DomainPartition,
+    m: usize,
+    n: usize,
+) -> Option<(usize, CommType)> {
+    (0..ml.levels()).find_map(|l| comm_type_at(ml, part, m, n, l).map(|t| (l, t)))
+}
+
+/// Fully constructed topology: per-GPU peer lists by type and level.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub ml: Multilevel,
+    pub part: DomainPartition,
+    /// `peers[m]` = (peer GPU, level, type) for all communicating pairs.
+    pub peers: Vec<Vec<(usize, usize, CommType)>>,
+}
+
+impl Topology {
+    pub fn build(ml: Multilevel, part: DomainPartition) -> Self {
+        let g = ml.total_gpus();
+        let mut peers = vec![Vec::new(); g];
+        for m in 0..g {
+            for n in 0..g {
+                if m == n {
+                    continue;
+                }
+                if let Some((l, t)) = comm_type(&ml, &part, m, n) {
+                    peers[m].push((n, l, t));
+                }
+            }
+        }
+        Self { ml, part, peers }
+    }
+
+    /// Ordered-pair counts of each communication type (Table VII semantics:
+    /// "the sum of all GPU-to-GPU communications").
+    pub fn frequency(&self) -> frequency::Freq {
+        let mut f = frequency::Freq::default();
+        for ps in &self.peers {
+            for &(_, level, t) in ps {
+                match t {
+                    CommType::AllGather => f.ag += 1,
+                    CommType::AllToAll => f.a2a += 1,
+                }
+                f.per_level.resize(self.ml.levels().max(f.per_level.len()), (0, 0));
+                match t {
+                    CommType::AllGather => f.per_level[level].1 += 1,
+                    CommType::AllToAll => f.per_level[level].0 += 1,
+                }
+            }
+        }
+        f
+    }
+
+    /// AG peers of GPU `m` (expert sources it gathers from).
+    pub fn ag_peers(&self, m: usize) -> impl Iterator<Item = usize> + '_ {
+        self.peers[m]
+            .iter()
+            .filter(|(_, _, t)| *t == CommType::AllGather)
+            .map(|&(n, _, _)| n)
+    }
+
+    /// A2A peers of GPU `m` (data exchange partners).
+    pub fn a2a_peers(&self, m: usize) -> impl Iterator<Item = usize> + '_ {
+        self.peers[m]
+            .iter()
+            .filter(|(_, _, t)| *t == CommType::AllToAll)
+            .map(|&(n, _, _)| n)
+    }
+
+    /// The *expert group* of GPU `m`: GPUs whose experts `m` will hold after
+    /// intra-domain AG (itself + AG peers, transitively through all levels).
+    ///
+    /// With the domain rule this is the closure of AG edges, which is exactly
+    /// the cartesian product of m's domains at every level.
+    pub fn expert_group(&self, m: usize) -> Vec<usize> {
+        let mut group = vec![m];
+        let mut seen = vec![false; self.ml.total_gpus()];
+        seen[m] = true;
+        let mut head = 0;
+        while head < group.len() {
+            let cur = group[head];
+            head += 1;
+            for &(n, _, t) in &self.peers[cur] {
+                if t == CommType::AllGather && !seen[n] {
+                    seen[n] = true;
+                    group.push(n);
+                }
+            }
+        }
+        group.sort_unstable();
+        group
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testkit;
+
+    fn ml(scaling: &[usize]) -> Multilevel {
+        Multilevel::new(scaling.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn single_level_vanilla_is_all_a2a() {
+        let m = ml(&[8]);
+        let part = DomainPartition::vanilla(&m);
+        let topo = Topology::build(m, part);
+        let f = topo.frequency();
+        assert_eq!(f.a2a, 56); // Table VII, EP size 8, S_ED = 1
+        assert_eq!(f.ag, 0);
+    }
+
+    #[test]
+    fn single_level_full_is_all_ag() {
+        let m = ml(&[8]);
+        let part = DomainPartition::full(&m);
+        let topo = Topology::build(m, part);
+        let f = topo.frequency();
+        assert_eq!(f.ag, 56);
+        assert_eq!(f.a2a, 0);
+    }
+
+    #[test]
+    fn table_vii_ep8() {
+        // (S_ED, A2A, AG) rows of Table VII for EP size 8
+        for (s, a2a, ag) in [(1, 56, 0), (2, 24, 8), (4, 8, 24), (8, 0, 56)] {
+            let m = ml(&[8]);
+            let part = DomainPartition::new(&m, vec![s]).unwrap();
+            let f = Topology::build(m, part).frequency();
+            assert_eq!((f.a2a, f.ag), (a2a, ag), "S_ED = {s}");
+        }
+    }
+
+    #[test]
+    fn domain_partition_validation() {
+        let m = ml(&[8]);
+        assert!(DomainPartition::new(&m, vec![3]).is_err()); // 3 ∤ 8
+        assert!(DomainPartition::new(&m, vec![0]).is_err());
+        assert!(DomainPartition::new(&m, vec![2, 2]).is_err()); // arity
+    }
+
+    #[test]
+    fn comm_requires_matching_inner_coords() {
+        // 2 DCs × 4 GPUs, domains: DC level S=1 (A2A across DCs), GPU level S=4
+        let m = ml(&[2, 4]);
+        let part = DomainPartition::new(&m, vec![1, 4]).unwrap();
+        // GPU 0 (dc0, gpu0) vs GPU 5 (dc1, gpu1): inner coords differ → None
+        assert_eq!(comm_type(&m, &part, 0, 5), None);
+        // GPU 0 vs GPU 4 (dc1, gpu0): A2A at level 0
+        assert_eq!(comm_type(&m, &part, 0, 4), Some((0, CommType::AllToAll)));
+        // GPU 0 vs GPU 1: AG at level 1 (same DC, same domain)
+        assert_eq!(comm_type(&m, &part, 0, 1), Some((1, CommType::AllGather)));
+    }
+
+    #[test]
+    fn symmetry_and_uniqueness_property() {
+        testkit::check("topology-symmetric", 60, |g| {
+            let nlevels = g.usize_in(1, 4);
+            let mut scaling = Vec::new();
+            let mut sizes = Vec::new();
+            for _ in 0..nlevels {
+                // pick fanout with a random divisor as domain size
+                let fanout = [2usize, 4, 6, 8][g.usize_in(0, 4)];
+                let divs: Vec<usize> = (1..=fanout).filter(|d| fanout % d == 0).collect();
+                sizes.push(divs[g.usize_in(0, divs.len())]);
+                scaling.push(fanout);
+            }
+            let m = Multilevel::new(scaling.clone()).unwrap();
+            if m.total_gpus() > 64 {
+                return Ok(()); // bound the quadratic check
+            }
+            let part = DomainPartition::new(&m, sizes.clone()).unwrap();
+            for a in 0..m.total_gpus() {
+                for b in 0..m.total_gpus() {
+                    if a == b {
+                        continue;
+                    }
+                    let ab = comm_type(&m, &part, a, b);
+                    let ba = comm_type(&m, &part, b, a);
+                    prop_assert!(
+                        ab == ba,
+                        "asymmetric: {a}->{b} {ab:?} vs {b}->{a} {ba:?} \
+                         (scaling {scaling:?}, sizes {sizes:?})"
+                    );
+                    // at most one level applies
+                    let levels: Vec<usize> = (0..m.levels())
+                        .filter(|&l| comm_type_at(&m, &part, a, b, l).is_some())
+                        .collect();
+                    prop_assert!(levels.len() <= 1, "multiple levels: {levels:?}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn expert_group_is_domain_product() {
+        // 2 DCs × 8 GPUs, S_ED = [1, 4]: expert group = my half-DC (4 GPUs)
+        let m = ml(&[2, 8]);
+        let part = DomainPartition::new(&m, vec![1, 4]).unwrap();
+        let topo = Topology::build(m, part);
+        assert_eq!(topo.expert_group(0), vec![0, 1, 2, 3]);
+        assert_eq!(topo.expert_group(5), vec![4, 5, 6, 7]);
+        assert_eq!(topo.expert_group(12), vec![12, 13, 14, 15]);
+        // with S_ED = [2, 4]: group spans both DCs
+        let m = ml(&[2, 8]);
+        let part = DomainPartition::new(&m, vec![2, 4]).unwrap();
+        let topo = Topology::build(m, part);
+        assert_eq!(topo.expert_group(0), vec![0, 1, 2, 3, 8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn p_mapping_matches_paper_candidates() {
+        // §V-B: G = 8 → S_ED ∈ {8,4,2,1} ⇔ p ∈ {0, 0.5, 0.75, 1}
+        let m = ml(&[8]);
+        for (s, p) in [(8usize, 0.0), (4, 0.5), (2, 0.75), (1, 1.0)] {
+            let part = DomainPartition::new(&m, vec![s]).unwrap();
+            assert!((part.p_at(&m, 0) - p).abs() < 1e-12, "S_ED = {s}");
+        }
+    }
+}

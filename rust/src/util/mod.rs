@@ -1,0 +1,51 @@
+//! Small infrastructure substrates built in-repo (the offline image vendors
+//! only the `xla` crate closure — see DESIGN.md §Substitutions).
+
+pub mod args;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count in human units (MB with paper-style 1e6 scaling).
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2} KB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Format seconds adaptively (s / ms / µs).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(fmt_bytes(12.0), "12 B");
+        assert_eq!(fmt_bytes(2_500.0), "2.50 KB");
+        assert_eq!(fmt_bytes(8e6), "8.00 MB");
+        assert_eq!(fmt_bytes(3.2e9), "3.20 GB");
+    }
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+        assert_eq!(fmt_secs(0.0025), "2.500 ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.5 µs");
+    }
+}

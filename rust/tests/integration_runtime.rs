@@ -1,0 +1,92 @@
+//! Integration tests over the real runtime: artifacts → PJRT → trainer →
+//! coordinator. Skipped gracefully when `make artifacts` hasn't run.
+
+use hybrid_ep::cluster::presets;
+use hybrid_ep::coordinator::{run_cross_dc, CrossDcCfg};
+use hybrid_ep::runtime::{Artifacts, Engine};
+use hybrid_ep::trainer::{Compression, Trainer};
+
+fn arts() -> Option<Artifacts> {
+    match Artifacts::discover() {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("skipping runtime integration: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn e2e_short_training_loss_decreases() {
+    let Some(arts) = arts() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    let mut t = Trainer::new(&mut engine, &arts, "test", 1).unwrap();
+    for _ in 0..40 {
+        t.step().unwrap();
+    }
+    let first = t.losses()[..5].iter().sum::<f32>() / 5.0;
+    let last = t.recent_loss(5);
+    assert!(last < first, "no learning: {first} → {last}");
+    // eval runs and is in a sane range
+    let ev = t.eval().unwrap();
+    assert!(ev.is_finite() && ev > 0.5 && ev < 8.0);
+}
+
+#[test]
+fn fig14_ordering_holds_on_short_run() {
+    let Some(arts) = arts() else { return };
+    let mut finals = Vec::new();
+    for comp in [
+        Compression::None,
+        Compression::WithShared { cr: 50 },
+        Compression::WithoutShared { cr: 50 },
+    ] {
+        let mut engine = Engine::cpu().unwrap();
+        let mut t = Trainer::new(&mut engine, &arts, "test", 42).unwrap();
+        t.compression = comp;
+        for _ in 0..25 {
+            t.step().unwrap();
+        }
+        finals.push(t.recent_loss(5));
+    }
+    let (base, ws, wos) = (finals[0], finals[1], finals[2]);
+    assert!(
+        (ws - base).abs() <= (wos - base).abs() + 0.05,
+        "w/S ({ws}) should track baseline ({base}) better than w/o S ({wos})"
+    );
+}
+
+#[test]
+fn cross_dc_runtime_full_pipeline() {
+    let Some(arts) = arts() else { return };
+    let cfg = CrossDcCfg {
+        cluster: presets::dcs_x_gpus(2, 4, 40.0, 512.0),
+        time_scale: 40.0,
+        partition: vec![2, 4],
+        compression_ratio: Some(50),
+        iterations: 2,
+        seed: 3,
+    };
+    let stats = run_cross_dc(&arts, &cfg).unwrap();
+    assert_eq!(stats.len(), 2);
+    // full-domain: all data local, only compressed AG bytes move
+    assert_eq!(stats[0].a2a_bytes, 0);
+    assert!(stats[0].ag_bytes > 0);
+    assert!(stats[1].sim_secs > 0.0);
+}
+
+#[test]
+fn train_step_is_deterministic_given_seed() {
+    let Some(arts) = arts() else { return };
+    let run = || {
+        let mut engine = Engine::cpu().unwrap();
+        let mut t = Trainer::new(&mut engine, &arts, "test", 9).unwrap();
+        for _ in 0..5 {
+            t.step().unwrap();
+        }
+        t.losses()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "training must be reproducible from the seed");
+}

@@ -1,0 +1,169 @@
+//! Integration tests over the simulation stack: paper-shape assertions that
+//! span cluster + topology + model + netsim + systems.
+
+use hybrid_ep::cluster::presets;
+use hybrid_ep::moe::{MoEWorkload, Routing};
+use hybrid_ep::report::experiments as exp;
+use hybrid_ep::systems::aggregate::AggregateHybrid;
+use hybrid_ep::systems::hybrid_ep::HybridEp;
+use hybrid_ep::systems::{comparison_set, ep, SchedCtx, System};
+
+fn ctx_parts(
+    d_mb: f64,
+    e_mb: f64,
+    cluster: hybrid_ep::cluster::ClusterSpec,
+) -> (hybrid_ep::cluster::ClusterSpec, MoEWorkload, Routing) {
+    let w = exp::workload_from_sizes(d_mb * 1e6, e_mb * 1e6, 4, true);
+    let routing = Routing::uniform(
+        cluster.total_gpus(),
+        cluster.total_gpus() * w.experts_per_gpu,
+        w.tokens_per_gpu,
+        w.k,
+    );
+    (cluster, w, routing)
+}
+
+#[test]
+fn table5_shape_hybrid_flat_baselines_linear() {
+    // the paper's headline: baselines grow ~linearly in data traffic while
+    // HybridEP stays nearly flat, crossing 2× speedup by 48 MB on Cluster-L
+    let (_, cells) = exp::table5(&[6.0, 48.0, 192.0]);
+    let t = |sys: &str, mb: f64| {
+        cells
+            .iter()
+            .find(|c| c.cluster == "Cluster-L" && c.system == sys && c.data_mb == mb)
+            .unwrap()
+            .secs
+    };
+    // baselines scale strongly with traffic
+    assert!(t("Tutel", 192.0) > 4.0 * t("Tutel", 6.0));
+    // hybrid is nearly flat
+    assert!(t("HybridEP", 192.0) < 1.3 * t("HybridEP", 6.0));
+    // speedup at max traffic lands in the paper's neighbourhood (≥3×)
+    let speedup = t("Tutel", 192.0) / t("HybridEP", 192.0);
+    assert!(speedup > 3.0, "speedup {speedup}");
+}
+
+#[test]
+fn fig13_shape_speedup_grows_as_experts_shrink() {
+    let (_, cells) = exp::fig13(&[32.0, 2.0]);
+    for cl in ["Cluster-M", "Cluster-L"] {
+        let t = |sys: &str, mb: f64| {
+            cells
+                .iter()
+                .find(|c| c.cluster == cl && c.system == sys && c.expert_mb == mb)
+                .unwrap()
+                .secs
+        };
+        let s_big = t("Tutel", 32.0) / t("HybridEP", 32.0);
+        let s_small = t("Tutel", 2.0) / t("HybridEP", 2.0);
+        assert!(
+            s_small > s_big,
+            "{cl}: speedup should grow as experts shrink: {s_big} → {s_small}"
+        );
+        assert!(s_small > 1.1, "{cl}: small experts must win clearly, got {s_small}");
+    }
+}
+
+#[test]
+fn every_system_beats_nothing_and_hybrid_never_loses_badly() {
+    // sanity across the full comparison set on a mid-sized workload
+    let (cluster, w, routing) = ctx_parts(24.0, 4.0, exp::paper_cluster_m());
+    let ctx = SchedCtx::new(&cluster, &w, &routing);
+    let vanilla = ep::VanillaEp.iteration_time(&ctx);
+    for sys in comparison_set() {
+        let t = sys.iteration_time(&ctx);
+        assert!(t <= vanilla * 1.05, "{} ({t}) worse than blocking EP ({vanilla})", sys.name());
+    }
+    let hybrid = HybridEp::with_migration().iteration_time(&ctx);
+    assert!(hybrid <= vanilla, "hybrid must not lose to vanilla EP");
+}
+
+#[test]
+fn fig17_scales_and_shows_modest_gain_at_1000_dcs() {
+    let w = MoEWorkload {
+        tokens_per_gpu: 8192,
+        hidden: 1024,
+        ffn: 2048,
+        experts_per_gpu: 1,
+        k: 2,
+        moe_layers: 2,
+        pre_blocks: 1,
+        backward: false,
+    };
+    let routing = Routing::uniform(1, 1, 1, 1);
+    let cluster = presets::flat_dcs(1000, 5.0);
+    let ctx = SchedCtx::new(&cluster, &w, &routing);
+    let t0 = std::time::Instant::now();
+    let ep_t = AggregateHybrid::ep().iteration_time(&ctx);
+    let hy_t = AggregateHybrid::hybrid(10, w.pe_bytes() / 50.0).iteration_time(&ctx);
+    assert!(t0.elapsed().as_secs_f64() < 30.0, "1000-DC sim too slow");
+    let speedup = ep_t / hy_t;
+    assert!(
+        (1.0..2.5).contains(&speedup),
+        "1000-DC fixed-S speedup {speedup} out of the paper's plausible band"
+    );
+}
+
+#[test]
+fn solver_partition_is_at_least_as_good_as_any_single_candidate() {
+    // the deployed plan must not be beaten by any single-level-uniform rival
+    let (cluster, w, routing) = ctx_parts(48.0, 2.0, exp::paper_cluster_l());
+    let ctx = SchedCtx::new(&cluster, &w, &routing);
+    let solved = HybridEp::with_migration();
+    let t_solved = solved.iteration_time(&ctx);
+    let scaling = cluster.multilevel().scaling().to_vec();
+    let mut best_rival = f64::INFINITY;
+    for s0 in [1usize, 2, 4] {
+        for s1 in [1usize, 2, 4, 8] {
+            if scaling[0] % s0 != 0 || scaling[1] % s1 != 0 {
+                continue;
+            }
+            let rival = HybridEp {
+                partition: Some(vec![s0, s1]),
+                migration: Some(Default::default()),
+            };
+            best_rival = best_rival.min(rival.iteration_time(&ctx));
+        }
+    }
+    assert!(
+        t_solved <= best_rival * 1.15,
+        "solver pick {t_solved} much worse than best grid rival {best_rival}"
+    );
+}
+
+#[test]
+fn skewed_routing_all_systems_still_conserve_tokens() {
+    let cluster = exp::paper_cluster_m();
+    let w = exp::workload_from_sizes(12e6, 2e6, 2, false);
+    let routing = Routing::zipf(
+        cluster.total_gpus(),
+        cluster.total_gpus(),
+        w.tokens_per_gpu,
+        w.k,
+        1.3,
+        17,
+    );
+    let ctx = SchedCtx::new(&cluster, &w, &routing);
+    let mut totals = Vec::new();
+    for sys in comparison_set() {
+        let dag = sys.build_iteration(&ctx);
+        let total: f64 = dag
+            .tasks
+            .iter()
+            .filter(|t| t.label == "expert")
+            .map(|t| match t.kind {
+                hybrid_ep::netsim::TaskKind::Compute { seconds, .. } => seconds,
+                _ => 0.0,
+            })
+            .sum();
+        totals.push((sys.name(), total));
+    }
+    let base = totals[0].1;
+    for (name, t) in &totals {
+        assert!(
+            (t - base).abs() / base < 1e-6,
+            "{name} computes {t} expert-seconds vs {base}"
+        );
+    }
+}
