@@ -1,9 +1,13 @@
 //! Fig. 16 — traffic scalability: EP traffic grows linearly with token
 //! count while HybridEP's is bounded (expert transmission only). Also prints
-//! the Fig. 2(b) motivation series (EP overhead share vs bandwidth).
+//! the Fig. 2(b) motivation series (EP overhead share vs bandwidth) and a
+//! parallel fig16-style sweep over DC count × bandwidth (the `netsim::sweep`
+//! harness with pairwise schedules and seed-deterministic skewed routing).
 
-use hybrid_ep::bench::header;
+use hybrid_ep::bench::{header, time_once};
+use hybrid_ep::netsim::sweep;
 use hybrid_ep::report::experiments;
+use hybrid_ep::util::fmt_bytes;
 
 fn main() {
     header("fig16_traffic_scalability", "Fig. 16 (traffic vs tokens) + Fig. 2(b)");
@@ -17,6 +21,28 @@ fn main() {
         let hy_growth = series.last().unwrap().hybrid_mb / series[0].hybrid_mb.max(1e-12);
         println!(
             "{cfg}: 64× more tokens → EP traffic ×{ep_growth:.1}, HybridEP ×{hy_growth:.2} (bounded)"
+        );
+    }
+
+    // ---- parallel traffic sweep: DC count × bandwidth, skewed routing -----
+    println!();
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let mut grid = sweep::SweepGrid::fig17(if fast { vec![2, 4] } else { vec![2, 4, 8] });
+    grid.mode = sweep::SweepMode::Pairwise { gpus_per_dc: 8, zipf_skew: 1.2 };
+    grid.bandwidths_gbps = vec![2.5, 10.0];
+    grid.hybrid_ps = vec![0.0]; // full-domain hybrid: the traffic bound
+    grid.workload.tokens_per_gpu = 4096;
+    grid.workload.moe_layers = 1;
+    let (outcomes, secs) = time_once(|| sweep::run_sweep(&grid, sweep::default_threads()));
+    println!("fig16-style sweep ({} scenarios in {:.2}s):", outcomes.len(), secs);
+    for o in &outcomes {
+        println!(
+            "  {:>4} DCs @ {:>5} Gbps: EP A2A {:>10}  vs  HybridEP AG {:>10}  (speedup {:.2}×)",
+            o.scenario.dcs,
+            o.scenario.bw_gbps,
+            fmt_bytes(o.ep.bytes_a2a),
+            fmt_bytes(o.hybrid.bytes_ag),
+            o.speedup
         );
     }
 }

@@ -1,8 +1,11 @@
 //! Fig. 17 — large-scale simulation: HybridEP vs EP speedup with up to
 //! 1000 DCs under 1.25–10 Gbps inter-DC bandwidth, (a) fixed `S_ED` and
-//! (b) fixed `p`.
+//! (b) fixed `p`. The scenario grid fans across OS threads through the
+//! `netsim::sweep` harness; serial wall-clock is printed alongside for the
+//! harness speedup.
 
-use hybrid_ep::bench::header;
+use hybrid_ep::bench::{header, time_once};
+use hybrid_ep::netsim::sweep;
 use hybrid_ep::report::experiments;
 
 fn main() {
@@ -33,5 +36,25 @@ fn main() {
         let (lo, hi) = minmax(&at_1000b);
         println!("1000 DCs, fixed p:    {lo:.2}×–{hi:.2}× (paper: 1.31×–3.76×)");
     }
-    println!("[{:.1}s]", t0.elapsed().as_secs_f64());
+    println!("[fig17 grid: {:.1}s across {} threads]", t0.elapsed().as_secs_f64(), sweep::default_threads());
+
+    // ---- sweep-harness scaling: ≥256-DC grid, serial vs parallel ----------
+    println!();
+    let grid = sweep::SweepGrid::fig17(if fast { vec![256] } else { vec![256, 512] });
+    let n_threads = sweep::default_threads();
+    let (serial, t_serial) = time_once(|| sweep::run_sweep(&grid, 1));
+    let (parallel, t_parallel) = time_once(|| sweep::run_sweep(&grid, n_threads));
+    let s = sweep::summarize(&parallel);
+    assert_eq!(serial.len(), parallel.len());
+    println!(
+        "sweep {} scenarios (≥256 DCs): speedup {:.2}×–{:.2}× (geomean {:.2}×), {} events",
+        s.scenarios, s.speedup_min, s.speedup_max, s.speedup_geomean, s.total_events
+    );
+    println!(
+        "harness: serial {:.2}s → parallel {:.2}s on {} threads ({:.2}× faster)",
+        t_serial,
+        t_parallel,
+        n_threads,
+        t_serial / t_parallel.max(1e-9)
+    );
 }

@@ -1,13 +1,15 @@
 //! Hot-path micro-benchmarks for the §Perf optimization pass:
-//! SR codec (encode/decode across sizes), max-min flow allocation, netsim
-//! event loop, schedule generation, JSON/manifest parsing.
+//! SR codec (encode/decode across sizes), max-min flow allocation
+//! (incremental vs reference at 1k-DC scale), netsim event loop
+//! (incremental vs pre-change reference engine), parallel scenario sweeps,
+//! schedule generation, JSON/manifest parsing.
 
-use hybrid_ep::bench::{black_box, header, Bench};
+use hybrid_ep::bench::{black_box, header, time_once, Bench};
 use hybrid_ep::cluster::presets;
 use hybrid_ep::migration::sr_codec;
 use hybrid_ep::moe::{MoEWorkload, Routing};
-use hybrid_ep::netsim::flow::{max_min_rates, FlowSpec};
-use hybrid_ep::netsim::Simulator;
+use hybrid_ep::netsim::flow::{max_min_rates, FlowSpec, IncrementalMaxMin};
+use hybrid_ep::netsim::{sweep, RateMode, Simulator};
 use hybrid_ep::systems::hybrid_ep::HybridEp;
 use hybrid_ep::systems::{ep, SchedCtx, System};
 use hybrid_ep::util::rng::Rng;
@@ -43,7 +45,7 @@ fn main() {
         );
     }
 
-    // --- max-min fair allocation ----------------------------------------------
+    // --- max-min fair allocation (reference oracle) --------------------------
     for nf in [100usize, 1000] {
         let caps: Vec<f64> = (0..64).map(|i| 1e9 + i as f64).collect();
         let mut rng = Rng::new(3);
@@ -57,6 +59,92 @@ fn main() {
             black_box(max_min_rates(&caps, &flows).len());
         })
         .print();
+    }
+
+    // --- rate maintenance at 1k-DC scale: incremental vs full recompute -----
+    // 1000 DCs, each with a shared uplink (egress+ingress) and an intra pool;
+    // 10 intra flows per DC plus a 1000-flow cross-DC ring. One event =
+    // one flow completes and a successor arrives. The reference recomputes
+    // all 11k flows over 4k resources; the incremental allocator re-solves
+    // only the touched DC's component.
+    {
+        let dcs = 1000usize;
+        let intra_per_dc = 10usize;
+        let mut caps = vec![presets::gbps(5.0); 2 * dcs];
+        caps.extend(vec![presets::gbps(128.0); 2 * dcs]);
+        let up_e = |d: usize| 2 * d;
+        let up_i = |d: usize| 2 * d + 1;
+        let in_e = |d: usize| 2 * dcs + 2 * d;
+        let in_i = |d: usize| 2 * dcs + 2 * d + 1;
+        let mut alloc = IncrementalMaxMin::new(caps.clone());
+        let mut specs: Vec<FlowSpec> = Vec::new();
+        let mut intra_ids: Vec<usize> = Vec::new();
+        for d in 0..dcs {
+            for _ in 0..intra_per_dc {
+                let rs = vec![in_e(d), in_i(d)];
+                intra_ids.push(alloc.add(rs.clone()));
+                specs.push(FlowSpec { resources: rs, bytes_remaining: 1e6 });
+            }
+            let rs = vec![up_e(d), up_i((d + 1) % dcs)];
+            alloc.add(rs.clone());
+            specs.push(FlowSpec { resources: rs, bytes_remaining: 1e6 });
+        }
+        alloc.resolve();
+        let mut d = 0usize;
+        let r_inc = Bench::new("rate_maintenance/incremental_1kdc_event").run(|| {
+            let slot = d * intra_per_dc;
+            alloc.remove(intra_ids[slot]);
+            intra_ids[slot] = alloc.add(vec![in_e(d), in_i(d)]);
+            alloc.resolve();
+            black_box(alloc.rate(intra_ids[slot]));
+            d = (d + 1) % dcs;
+        });
+        r_inc.print();
+        let r_ref = Bench::new("rate_maintenance/reference_1kdc_event").run(|| {
+            black_box(max_min_rates(&caps, &specs).len());
+        });
+        r_ref.print();
+        println!(
+            "    rate-update events/sec: incremental {:.0} vs reference {:.0} ({:.1}× more)",
+            1.0 / r_inc.median,
+            1.0 / r_ref.median,
+            r_ref.median / r_inc.median
+        );
+    }
+
+    // --- engine + sweep: fig17 scale (≥256 DCs), pre-change vs current -------
+    // "pre-change" = serial sweep on the Reference (full-recompute) engine;
+    // "current" = parallel sweep on the incremental engine.
+    {
+        let fast = std::env::var("BENCH_FAST").is_ok();
+        let grid = sweep::SweepGrid::fig17(if fast { vec![256] } else { vec![256, 512] });
+        let mut grid_ref = grid.clone();
+        grid_ref.engine = RateMode::Reference;
+        let n_threads = sweep::default_threads();
+        let (out_ref, t_ref) = time_once(|| sweep::run_sweep(&grid_ref, 1));
+        let (out_inc, t_inc) = time_once(|| sweep::run_sweep(&grid, n_threads));
+        let ev = |outs: &[sweep::ScenarioOutcome]| -> usize {
+            outs.iter().map(|o| o.ep.events + o.hybrid.events).sum()
+        };
+        let s = sweep::summarize(&out_inc);
+        println!(
+            "fig17_sweep/{}sc_256dc+: pre-change (reference engine, serial)  {:>8.3}s ({:>7.0} events/s)",
+            out_ref.len(),
+            t_ref,
+            ev(&out_ref) as f64 / t_ref
+        );
+        println!(
+            "fig17_sweep/{}sc_256dc+: current (incremental, {:>2} threads)    {:>8.3}s ({:>7.0} events/s)",
+            out_inc.len(),
+            n_threads,
+            t_inc,
+            ev(&out_inc) as f64 / t_inc
+        );
+        println!(
+            "    sweep speedup over pre-change engine: {:.2}×  (EP-vs-Hybrid geomean {:.2}×)",
+            t_ref / t_inc.max(1e-9),
+            s.speedup_geomean
+        );
     }
 
     // --- netsim end-to-end -----------------------------------------------------
@@ -75,6 +163,10 @@ fn main() {
     let dag = ep::Tutel::default().build_iteration(&ctx);
     Bench::new("netsim_run/tutel_32gpu_12layer").run(|| {
         black_box(Simulator::new(&cluster).run(&dag).makespan);
+    })
+    .print();
+    Bench::new("netsim_run/tutel_32gpu_12layer_reference").run(|| {
+        black_box(Simulator::reference(&cluster).run(&dag).makespan);
     })
     .print();
     let hdag = HybridEp::with_migration().build_iteration(&ctx);

@@ -144,6 +144,14 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Time a single invocation. For one-shot workloads (scenario sweeps, large
+/// simulations) where the sampling loop of [`Bench`] would be too slow.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
 /// Print the standard bench header used by all `rust/benches/*` targets.
 pub fn header(name: &str, paper_ref: &str) {
     println!();
@@ -178,5 +186,12 @@ mod tests {
         assert!(r.samples.n() >= 3);
         assert!(r.mean > 0.0);
         assert!(r.median <= r.p95 + 1e-12);
+    }
+
+    #[test]
+    fn time_once_returns_value_and_duration() {
+        let (v, secs) = time_once(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
     }
 }

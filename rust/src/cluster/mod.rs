@@ -79,6 +79,50 @@ impl Multilevel {
         let inner: usize = self.scaling[level + 1..].iter().product();
         m / inner
     }
+
+    /// Precompute the per-level divisors for allocation-free hierarchy
+    /// queries (the simulator hot path calls these per transfer).
+    pub fn indexer(&self) -> LevelIndexer {
+        let l = self.levels();
+        LevelIndexer {
+            inner: (0..l).map(|i| self.scaling[i + 1..].iter().product()).collect(),
+            total: self.total_gpus(),
+        }
+    }
+}
+
+/// Allocation-free hierarchy queries over a [`Multilevel`]'s numbering.
+///
+/// The global level-`l` container of GPU `m` is `m / Π_{j>l} SF^j` (it
+/// encodes all coordinates `x_0..=x_l`), so the outermost level where two
+/// GPUs' containers differ is exactly the outermost level where their
+/// [`locate`](Multilevel::locate) coordinates differ — without building the
+/// coordinate vectors.
+#[derive(Clone, Debug)]
+pub struct LevelIndexer {
+    inner: Vec<usize>,
+    total: usize,
+}
+
+impl LevelIndexer {
+    pub fn levels(&self) -> usize {
+        self.inner.len()
+    }
+
+    /// Same as [`Multilevel::worker_of`], precomputed.
+    pub fn container_of(&self, gpu: usize, level: usize) -> usize {
+        debug_assert!(gpu < self.total, "GPU {gpu} out of range");
+        gpu / self.inner[level]
+    }
+
+    /// The outermost level at which two GPUs differ, or `None` for loopback.
+    pub fn bottleneck_level(&self, m: usize, n: usize) -> Option<usize> {
+        assert!(m < self.total && n < self.total, "GPU out of range ({m}, {n})");
+        if m == n {
+            return None;
+        }
+        (0..self.inner.len()).find(|&l| m / self.inner[l] != n / self.inner[l])
+    }
 }
 
 /// One level of the physical hierarchy with its interconnect properties.
@@ -114,11 +158,9 @@ impl ClusterSpec {
     /// their communication — or `None` if `m == n`.
     pub fn bottleneck_level(&self, m: usize, n: usize) -> Option<usize> {
         if m == n {
-            return None;
+            return None; // loopback fast path: no allocations
         }
-        let ml = self.multilevel();
-        let (a, b) = (ml.locate(m), ml.locate(n));
-        (0..self.levels.len()).find(|&i| a[i] != b[i])
+        self.multilevel().indexer().bottleneck_level(m, n)
     }
 
     /// Bandwidth (bytes/s) for a transfer between GPUs `m` and `n`.
@@ -216,6 +258,39 @@ mod tests {
         assert_eq!(c.bottleneck_level(0, 8), Some(0)); // diff DC
         assert_eq!(c.bottleneck_level(3, 3), None);
         assert!(c.bandwidth_between(0, 8) < c.bandwidth_between(0, 1));
+    }
+
+    #[test]
+    fn indexer_matches_locate_based_queries() {
+        testkit::check("indexer-equivalence", 60, |g| {
+            let scaling: Vec<usize> =
+                (0..g.usize_in(1, 4)).map(|_| g.rng.range(1, 6)).collect();
+            let ml = Multilevel::new(scaling).map_err(|e| e.to_string())?;
+            let idx = ml.indexer();
+            let total = ml.total_gpus();
+            for m in 0..total.min(32) {
+                for n in 0..total.min(32) {
+                    // bottleneck = outermost differing locate() coordinate
+                    let want = if m == n {
+                        None
+                    } else {
+                        let (a, b) = (ml.locate(m), ml.locate(n));
+                        (0..ml.levels()).find(|&i| a[i] != b[i])
+                    };
+                    prop_assert!(
+                        idx.bottleneck_level(m, n) == want,
+                        "bottleneck({m}, {n}) diverged"
+                    );
+                }
+                for l in 0..ml.levels() {
+                    prop_assert!(
+                        idx.container_of(m, l) == ml.worker_of(m, l),
+                        "container_of({m}, {l}) diverged"
+                    );
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -48,9 +48,15 @@ pub fn cluster_l() -> ClusterSpec {
 /// Flat multi-DC cluster for large-scale simulation (Fig. 17): one GPU per DC
 /// (the paper's modeling granularity), `dcs` DCs at `bw_gbps` interconnect.
 pub fn flat_dcs(dcs: usize, bw_gbps: f64) -> ClusterSpec {
+    flat_dcs_lat(dcs, bw_gbps, 1000.0)
+}
+
+/// [`flat_dcs`] with an explicit inter-DC one-way latency — sweep grids
+/// (`netsim::sweep`) vary bandwidth and latency independently.
+pub fn flat_dcs_lat(dcs: usize, bw_gbps: f64, latency_us: f64) -> ClusterSpec {
     ClusterSpec {
-        name: format!("{dcs}xDC@{bw_gbps}Gbps"),
-        levels: vec![level("dc", dcs, bw_gbps, 1000.0)],
+        name: format!("{dcs}xDC@{bw_gbps}Gbps/{latency_us}us"),
+        levels: vec![level("dc", dcs, bw_gbps, latency_us)],
     }
 }
 

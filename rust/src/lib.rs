@@ -17,7 +17,9 @@
 //! * [`comm`] — bandwidth-throttled in-process cluster with real A2A/AG/
 //!   All-Reduce collectives and the asynchronous communicator (Fig. 10).
 //! * [`netsim`] — flow-level max-min-fair network simulator + compute-DAG
-//!   scheduler (the SimAI-substitute substrate for large-scale studies).
+//!   scheduler (the SimAI-substitute substrate for large-scale studies), with
+//!   incremental component-local rate maintenance and a parallel scenario
+//!   sweep harness ([`netsim::sweep`]).
 //! * [`systems`] — schedule generators for HybridEP and the compared systems
 //!   (vanilla EP, Tutel-, FasterMoE-, SmartMoE-style).
 //! * [`runtime`] — PJRT runtime executing the AOT-compiled JAX/Pallas

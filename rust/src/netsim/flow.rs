@@ -5,9 +5,25 @@
 //! filling: repeatedly find the resource(s) with the smallest fair share,
 //! freeze their flows at that rate, subtract, repeat. Symmetric patterns
 //! (uniform A2A) converge in one round, keeping large simulations cheap.
+//!
+//! Two entry points share the same kernel ([`water_fill`]):
+//!
+//! * [`max_min_rates`] — the **reference oracle**: solve the whole flow set
+//!   from scratch. O(flows × resources) per call; used by the simulator's
+//!   [`Reference`](super::sim::RateMode::Reference) mode and by the
+//!   differential tests.
+//! * [`IncrementalMaxMin`] — the **hot-path allocator**: maintains
+//!   per-resource active-flow sets and, on arrival/completion, re-solves only
+//!   the connected component (of the resource–flow bipartite graph) touched
+//!   by the change. Max-min allocations decompose exactly over connected
+//!   components, so the component-local solve equals the global one for every
+//!   flow inside it while flows outside keep their rates.
 
 /// Index into the resource table.
 pub type ResourceId = usize;
+
+/// Stable handle for a flow registered with [`IncrementalMaxMin`].
+pub type FlowId = usize;
 
 #[derive(Clone, Debug)]
 pub struct FlowSpec {
@@ -16,68 +32,73 @@ pub struct FlowSpec {
     pub bytes_remaining: f64,
 }
 
-/// Compute the max-min fair rate for each flow.
+/// Relative tolerance for "achieves the minimum share" in a freeze round.
+const SHARE_TOL: f64 = 1e-12;
+
+/// Water-filling on a (sub)problem in local index space.
 ///
-/// `caps[r]` is the capacity of resource `r`. Returns `rates[f]` for each
-/// flow. Flows with no resources (loopback) get `f64::INFINITY`.
-pub fn max_min_rates(caps: &[f64], flows: &[FlowSpec]) -> Vec<f64> {
-    let nf = flows.len();
-    let mut rates = vec![f64::INFINITY; nf];
-    if nf == 0 {
-        return rates;
-    }
-    let mut residual: Vec<f64> = caps.to_vec();
-    // flows touching each resource
-    let mut users: Vec<Vec<usize>> = vec![Vec::new(); caps.len()];
-    for (fi, f) in flows.iter().enumerate() {
-        for &r in &f.resources {
-            users[r].push(fi);
-        }
-    }
-    let mut active: Vec<usize> = vec![0; caps.len()]; // unfrozen users per resource
-    for (r, u) in users.iter().enumerate() {
-        active[r] = u.len();
-    }
+/// * `residual[r]` — remaining capacity of local resource `r` (init: caps).
+/// * `active[r]` — number of unfrozen local flows using `r`.
+/// * `users[r]` — local flow indices using `r`.
+/// * `flow_res[f]` — local resource indices of flow `f`.
+/// * `rates[f]` — output; resource-less (loopback) flows get `INFINITY`.
+///
+/// The per-round minimum share is computed on a **snapshot** of the shares,
+/// and residuals are clamped at zero after each subtraction — both guard
+/// against the freeze pass driving residuals slightly negative and handing
+/// later rounds negative fair shares.
+fn water_fill(
+    residual: &mut [f64],
+    active: &mut [usize],
+    users: &[Vec<usize>],
+    flow_res: &[Vec<usize>],
+    rates: &mut [f64],
+) {
+    let nr = residual.len();
+    let nf = rates.len();
     let mut frozen = vec![false; nf];
-    let mut remaining: usize = flows.iter().filter(|f| !f.resources.is_empty()).count();
-    // loopback flows are already infinity-rated
-    loop {
-        if remaining == 0 {
-            break;
+    let mut remaining = 0usize;
+    for f in 0..nf {
+        if flow_res[f].is_empty() {
+            rates[f] = f64::INFINITY;
+            frozen[f] = true;
+        } else {
+            remaining += 1;
         }
-        // find min fair share among resources with active users
+    }
+    let mut share = vec![f64::INFINITY; nr];
+    while remaining > 0 {
+        // snapshot the fair share of every still-contended resource
         let mut min_share = f64::INFINITY;
-        for r in 0..caps.len() {
-            if active[r] > 0 {
-                let share = residual[r] / active[r] as f64;
-                if share < min_share {
-                    min_share = share;
-                }
+        for r in 0..nr {
+            share[r] = if active[r] > 0 { residual[r] / active[r] as f64 } else { f64::INFINITY };
+            if share[r] < min_share {
+                min_share = share[r];
             }
         }
         if !min_share.is_finite() {
             break;
         }
-        // freeze all flows on all resources achieving (close to) the min share
+        let min_share = min_share.max(0.0);
+        // freeze all flows on all resources achieving (close to) the min,
+        // judged on the snapshot so same-round subtractions cannot pull
+        // additional resources under the bar
         let mut froze_any = false;
-        for r in 0..caps.len() {
-            if active[r] == 0 {
+        for r in 0..nr {
+            if active[r] == 0 || share[r] > min_share * (1.0 + SHARE_TOL) {
                 continue;
             }
-            let share = residual[r] / active[r] as f64;
-            if share <= min_share * (1.0 + 1e-12) {
-                for &fi in &users[r] {
-                    if !frozen[fi] {
-                        frozen[fi] = true;
-                        rates[fi] = min_share;
-                        remaining -= 1;
-                        froze_any = true;
-                        // subtract this flow from all its resources
-                        for &r2 in &flows[fi].resources {
-                            residual[r2] -= min_share;
-                            active[r2] -= 1;
-                        }
-                    }
+            for &fi in &users[r] {
+                if frozen[fi] {
+                    continue;
+                }
+                frozen[fi] = true;
+                rates[fi] = min_share;
+                remaining -= 1;
+                froze_any = true;
+                for &r2 in &flow_res[fi] {
+                    residual[r2] = (residual[r2] - min_share).max(0.0);
+                    active[r2] -= 1;
                 }
             }
         }
@@ -85,7 +106,203 @@ pub fn max_min_rates(caps: &[f64], flows: &[FlowSpec]) -> Vec<f64> {
             break; // numerical safety
         }
     }
+}
+
+/// Compute the max-min fair rate for each flow (reference oracle).
+///
+/// `caps[r]` is the capacity of resource `r`. Returns `rates[f]` for each
+/// flow. Flows with no resources (loopback) get `f64::INFINITY`. All finite
+/// rates are guaranteed non-negative.
+pub fn max_min_rates(caps: &[f64], flows: &[FlowSpec]) -> Vec<f64> {
+    let nf = flows.len();
+    let mut rates = vec![0.0f64; nf];
+    if nf == 0 {
+        return rates;
+    }
+    let mut users: Vec<Vec<usize>> = vec![Vec::new(); caps.len()];
+    for (fi, f) in flows.iter().enumerate() {
+        for &r in &f.resources {
+            users[r].push(fi);
+        }
+    }
+    let mut residual: Vec<f64> = caps.to_vec();
+    let mut active: Vec<usize> = users.iter().map(|u| u.len()).collect();
+    let flow_res: Vec<Vec<usize>> = flows.iter().map(|f| f.resources.clone()).collect();
+    water_fill(&mut residual, &mut active, &users, &flow_res, &mut rates);
     rates
+}
+
+/// Incremental max-min allocator: component-local re-solves on flow churn.
+///
+/// Usage: [`add`](Self::add) / [`remove`](Self::remove) mark the touched
+/// resources dirty; [`resolve`](Self::resolve) re-solves every connected
+/// component containing a dirty resource in one pass (so a batch of
+/// arrivals/completions — e.g. all flows coalesced into one simulator event —
+/// costs a single solve). [`rate`](Self::rate) reads the current allocation.
+pub struct IncrementalMaxMin {
+    caps: Vec<f64>,
+    /// slab: resources of each flow (empty for dead slots)
+    resources_of: Vec<Vec<ResourceId>>,
+    live: Vec<bool>,
+    free: Vec<FlowId>,
+    n_live: usize,
+    rates: Vec<f64>,
+    /// per-resource live users (unsorted; swap_remove on removal)
+    users: Vec<Vec<FlowId>>,
+    /// resources whose component must be re-solved
+    dirty: Vec<ResourceId>,
+    dirty_mark: Vec<bool>,
+    // --- epoch-stamped scratch for resolve() ---
+    epoch: u64,
+    res_seen: Vec<u64>,
+    flow_seen: Vec<u64>,
+    res_local: Vec<usize>,
+    flow_local: Vec<usize>,
+}
+
+impl IncrementalMaxMin {
+    pub fn new(caps: Vec<f64>) -> Self {
+        let nr = caps.len();
+        Self {
+            caps,
+            resources_of: Vec::new(),
+            live: Vec::new(),
+            free: Vec::new(),
+            n_live: 0,
+            rates: Vec::new(),
+            users: vec![Vec::new(); nr],
+            dirty: Vec::new(),
+            dirty_mark: vec![false; nr],
+            epoch: 0,
+            res_seen: vec![0; nr],
+            flow_seen: Vec::new(),
+            res_local: vec![0; nr],
+            flow_local: Vec::new(),
+        }
+    }
+
+    pub fn live_flows(&self) -> usize {
+        self.n_live
+    }
+
+    /// Current rate of a live flow. Meaningful after [`resolve`](Self::resolve).
+    pub fn rate(&self, id: FlowId) -> f64 {
+        debug_assert!(self.live[id], "rate of dead flow {id}");
+        self.rates[id]
+    }
+
+    fn mark_dirty(&mut self, r: ResourceId) {
+        if !self.dirty_mark[r] {
+            self.dirty_mark[r] = true;
+            self.dirty.push(r);
+        }
+    }
+
+    /// Register a flow over `resources`. Loopback flows (no resources) are
+    /// rated `INFINITY` immediately and never participate in a solve.
+    pub fn add(&mut self, resources: Vec<ResourceId>) -> FlowId {
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                self.resources_of.push(Vec::new());
+                self.live.push(false);
+                self.rates.push(0.0);
+                self.flow_seen.push(0);
+                self.flow_local.push(0);
+                self.resources_of.len() - 1
+            }
+        };
+        self.live[id] = true;
+        self.n_live += 1;
+        self.rates[id] = if resources.is_empty() { f64::INFINITY } else { 0.0 };
+        for &r in &resources {
+            self.users[r].push(id);
+            self.mark_dirty(r);
+        }
+        self.resources_of[id] = resources;
+        id
+    }
+
+    /// Deregister a flow (completion/abort).
+    pub fn remove(&mut self, id: FlowId) {
+        assert!(self.live[id], "remove of dead flow {id}");
+        self.live[id] = false;
+        self.n_live -= 1;
+        let resources = std::mem::take(&mut self.resources_of[id]);
+        for &r in &resources {
+            if let Some(pos) = self.users[r].iter().position(|&f| f == id) {
+                self.users[r].swap_remove(pos);
+            }
+            self.mark_dirty(r);
+        }
+        self.free.push(id);
+    }
+
+    /// Re-solve every connected component containing a dirty resource.
+    /// No-op when nothing changed since the last resolve.
+    pub fn resolve(&mut self) {
+        if self.dirty.is_empty() {
+            return;
+        }
+        self.epoch += 1;
+        let epoch = self.epoch;
+        // BFS over the resource–flow bipartite graph from all dirty resources
+        let mut comp_res: Vec<ResourceId> = Vec::new();
+        let mut comp_flows: Vec<FlowId> = Vec::new();
+        let mut queue: Vec<ResourceId> = Vec::new();
+        for i in 0..self.dirty.len() {
+            let r = self.dirty[i];
+            if self.res_seen[r] != epoch {
+                self.res_seen[r] = epoch;
+                self.res_local[r] = comp_res.len();
+                comp_res.push(r);
+                queue.push(r);
+            }
+        }
+        while let Some(r) = queue.pop() {
+            for i in 0..self.users[r].len() {
+                let f = self.users[r][i];
+                if self.flow_seen[f] == epoch {
+                    continue;
+                }
+                self.flow_seen[f] = epoch;
+                self.flow_local[f] = comp_flows.len();
+                comp_flows.push(f);
+                for j in 0..self.resources_of[f].len() {
+                    let r2 = self.resources_of[f][j];
+                    if self.res_seen[r2] != epoch {
+                        self.res_seen[r2] = epoch;
+                        self.res_local[r2] = comp_res.len();
+                        comp_res.push(r2);
+                        queue.push(r2);
+                    }
+                }
+            }
+        }
+        for &r in &self.dirty {
+            self.dirty_mark[r] = false;
+        }
+        self.dirty.clear();
+        if comp_flows.is_empty() {
+            return;
+        }
+        // build the component-local problem and solve it
+        let mut residual: Vec<f64> = comp_res.iter().map(|&r| self.caps[r]).collect();
+        let mut active: Vec<usize> = comp_res.iter().map(|&r| self.users[r].len()).collect();
+        let users_local: Vec<Vec<usize>> = comp_res
+            .iter()
+            .map(|&r| self.users[r].iter().map(|&f| self.flow_local[f]).collect())
+            .collect();
+        let flow_res_local: Vec<Vec<usize>> = comp_flows
+            .iter()
+            .map(|&f| self.resources_of[f].iter().map(|&r| self.res_local[r]).collect())
+            .collect();
+        let mut rates_local = vec![0.0f64; comp_flows.len()];
+        water_fill(&mut residual, &mut active, &users_local, &flow_res_local, &mut rates_local);
+        for (i, &f) in comp_flows.iter().enumerate() {
+            self.rates[f] = rates_local[i];
+        }
+    }
 }
 
 #[cfg(test)]
@@ -93,7 +310,6 @@ mod tests {
     use super::*;
     use crate::prop_assert;
     use crate::testkit;
-    use crate::util::rng::Rng;
 
     fn flow(resources: Vec<ResourceId>) -> FlowSpec {
         FlowSpec { resources, bytes_remaining: 1.0 }
@@ -131,23 +347,28 @@ mod tests {
         assert!(rates[0].is_infinite());
     }
 
+    /// Random flow set over `nr` resources; resource subsets of size ≤ 3.
+    fn random_flows(g: &mut testkit::Gen, nr: usize, nf: usize) -> Vec<FlowSpec> {
+        (0..nf)
+            .map(|_| {
+                let k = g.rng.range(1, (nr + 1).min(4));
+                let mut rs: Vec<usize> = (0..nr).collect();
+                g.rng.shuffle(&mut rs);
+                rs.truncate(k);
+                rs.sort_unstable();
+                rs.dedup();
+                flow(rs)
+            })
+            .collect()
+    }
+
     #[test]
     fn feasibility_and_maxmin_property() {
         testkit::check("maxmin-feasible", 80, |g| {
             let nr = g.usize_in(1, 8);
             let caps: Vec<f64> = (0..nr).map(|_| g.rng.f64() * 10.0 + 0.1).collect();
             let nf = g.usize_in(1, 16);
-            let flows: Vec<FlowSpec> = (0..nf)
-                .map(|_| {
-                    let k = g.rng.range(1, (nr + 1).min(4));
-                    let mut rs: Vec<usize> = (0..nr).collect();
-                    shuffle(&mut rs, &mut g.rng);
-                    rs.truncate(k);
-                    rs.sort_unstable();
-                    rs.dedup();
-                    flow(rs)
-                })
-                .collect();
+            let flows = random_flows(g, nr, nf);
             let rates = max_min_rates(&caps, &flows);
             // feasibility: no resource oversubscribed
             for (r, &cap) in caps.iter().enumerate() {
@@ -185,10 +406,179 @@ mod tests {
         });
     }
 
-    fn shuffle(v: &mut Vec<usize>, rng: &mut Rng) {
-        for i in (1..v.len()).rev() {
-            let j = rng.below(i + 1);
-            v.swap(i, j);
-        }
+    /// Regression for the freeze-pass bug: shares judged after same-round
+    /// subtraction could hand later rounds negative residuals and negative
+    /// rates. Every returned rate must be ≥ 0, and finite unless loopback.
+    #[test]
+    fn rates_nonnegative_and_finite_property() {
+        testkit::check("maxmin-nonneg", 120, |g| {
+            let nr = g.usize_in(1, 10);
+            // include near-zero and wildly mismatched capacities to stress
+            // the subtraction cancellation path
+            let caps: Vec<f64> = (0..nr)
+                .map(|_| {
+                    let base = g.rng.f64();
+                    if g.rng.below(4) == 0 {
+                        base * 1e-9 + 1e-12
+                    } else {
+                        base * 1e9 + 0.1
+                    }
+                })
+                .collect();
+            let nf = g.usize_in(1, 24);
+            let mut flows = random_flows(g, nr, nf);
+            if g.rng.below(3) == 0 {
+                flows.push(flow(vec![])); // a loopback flow in the mix
+            }
+            let rates = max_min_rates(&caps, &flows);
+            for (fi, (f, &r)) in flows.iter().zip(&rates).enumerate() {
+                prop_assert!(r >= 0.0, "flow {fi} got negative rate {r}");
+                if f.resources.is_empty() {
+                    prop_assert!(r.is_infinite(), "loopback flow {fi} rate {r}");
+                } else {
+                    prop_assert!(r.is_finite(), "flow {fi} rate not finite: {r}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Drive an [`IncrementalMaxMin`] through the same add/remove history and
+    /// compare against a from-scratch reference solve after every change.
+    #[test]
+    fn incremental_matches_reference_differential() {
+        testkit::check("incremental-vs-reference", 120, |g| {
+            let nr = g.usize_in(2, 12);
+            let caps: Vec<f64> = (0..nr).map(|_| g.rng.f64() * 10.0 + 0.1).collect();
+            let mut alloc = IncrementalMaxMin::new(caps.clone());
+            // (flow id in allocator, resources)
+            let mut live: Vec<(FlowId, Vec<ResourceId>)> = Vec::new();
+            let steps = g.usize_in(4, 30);
+            for _ in 0..steps {
+                let grow = live.is_empty() || g.rng.below(3) < 2;
+                if grow {
+                    let spec = random_flows(g, nr, 1).remove(0);
+                    let id = alloc.add(spec.resources.clone());
+                    live.push((id, spec.resources));
+                } else {
+                    let at = g.rng.below(live.len());
+                    let (id, _) = live.swap_remove(at);
+                    alloc.remove(id);
+                }
+                alloc.resolve();
+                // reference: solve the current live set from scratch
+                let specs: Vec<FlowSpec> =
+                    live.iter().map(|(_, rs)| flow(rs.clone())).collect();
+                let want = max_min_rates(&caps, &specs);
+                for ((id, rs), w) in live.iter().zip(&want) {
+                    let got = alloc.rate(*id);
+                    prop_assert!(
+                        (got - w).abs() <= 1e-9 * (1.0 + w.abs()),
+                        "flow {id} over {rs:?}: incremental {got} vs reference {w}"
+                    );
+                }
+                prop_assert!(alloc.live_flows() == live.len(), "live count drifted");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn incremental_batched_churn_matches_reference() {
+        // several adds/removes between resolves (simulator event batching)
+        testkit::check("incremental-batched", 60, |g| {
+            let nr = g.usize_in(2, 10);
+            let caps: Vec<f64> = (0..nr).map(|_| g.rng.f64() * 5.0 + 0.5).collect();
+            let mut alloc = IncrementalMaxMin::new(caps.clone());
+            let mut live: Vec<(FlowId, Vec<ResourceId>)> = Vec::new();
+            for _ in 0..g.usize_in(2, 8) {
+                let batch = g.usize_in(1, 6);
+                for _ in 0..batch {
+                    if !live.is_empty() && g.rng.below(2) == 0 {
+                        let at = g.rng.below(live.len());
+                        let (id, _) = live.swap_remove(at);
+                        alloc.remove(id);
+                    } else {
+                        let spec = random_flows(g, nr, 1).remove(0);
+                        let id = alloc.add(spec.resources.clone());
+                        live.push((id, spec.resources));
+                    }
+                }
+                alloc.resolve(); // one solve for the whole batch
+                let specs: Vec<FlowSpec> =
+                    live.iter().map(|(_, rs)| flow(rs.clone())).collect();
+                let want = max_min_rates(&caps, &specs);
+                for ((id, _), w) in live.iter().zip(&want) {
+                    let got = alloc.rate(*id);
+                    prop_assert!(
+                        (got - w).abs() <= 1e-9 * (1.0 + w.abs()),
+                        "batched churn diverged: {got} vs {w}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn incremental_slab_reuses_slots() {
+        let mut alloc = IncrementalMaxMin::new(vec![1.0, 1.0]);
+        let a = alloc.add(vec![0]);
+        let b = alloc.add(vec![0, 1]);
+        alloc.resolve();
+        assert!((alloc.rate(a) - 0.5).abs() < 1e-12);
+        alloc.remove(a);
+        let c = alloc.add(vec![1]);
+        assert_eq!(c, a, "freed slot should be reused");
+        alloc.resolve();
+        assert!((alloc.rate(b) - 0.5).abs() < 1e-12, "b shares resource 1 with c");
+        assert!((alloc.rate(c) - 0.5).abs() < 1e-12);
+        assert_eq!(alloc.live_flows(), 2);
+    }
+
+    #[test]
+    fn duplicate_resources_consistent_with_reference() {
+        // a flow may list the same resource twice (double demand); add and
+        // remove must stay symmetric and match the reference oracle
+        let caps = vec![4.0, 8.0];
+        let mut alloc = IncrementalMaxMin::new(caps.clone());
+        let dup = alloc.add(vec![0, 0]);
+        let other = alloc.add(vec![0, 1]);
+        alloc.resolve();
+        let specs = vec![flow(vec![0, 0]), flow(vec![0, 1])];
+        let want = max_min_rates(&caps, &specs);
+        assert!((alloc.rate(dup) - want[0]).abs() < 1e-12, "{} vs {}", alloc.rate(dup), want[0]);
+        assert!((alloc.rate(other) - want[1]).abs() < 1e-12);
+        // removing the duplicate-resource flow clears both user entries
+        alloc.remove(dup);
+        alloc.resolve();
+        let want = max_min_rates(&caps, &[flow(vec![0, 1])]);
+        assert!((alloc.rate(other) - want[0]).abs() < 1e-12, "stale duplicate user left behind");
+    }
+
+    #[test]
+    fn incremental_loopback_infinite() {
+        let mut alloc = IncrementalMaxMin::new(vec![1.0]);
+        let l = alloc.add(vec![]);
+        alloc.resolve();
+        assert!(alloc.rate(l).is_infinite());
+    }
+
+    #[test]
+    fn disjoint_components_solved_independently() {
+        // two islands: {0,1} and {2,3}; churn in one must not touch the other
+        let mut alloc = IncrementalMaxMin::new(vec![4.0, 4.0, 6.0, 6.0]);
+        let a = alloc.add(vec![0, 1]);
+        let b = alloc.add(vec![0]);
+        let c = alloc.add(vec![2, 3]);
+        alloc.resolve();
+        assert!((alloc.rate(a) - 2.0).abs() < 1e-12);
+        assert!((alloc.rate(b) - 2.0).abs() < 1e-12);
+        assert!((alloc.rate(c) - 6.0).abs() < 1e-12);
+        // removing b only dirties island {0,1}; c's rate is untouched
+        alloc.remove(b);
+        alloc.resolve();
+        assert!((alloc.rate(a) - 4.0).abs() < 1e-12);
+        assert!((alloc.rate(c) - 6.0).abs() < 1e-12);
     }
 }

@@ -14,10 +14,16 @@
 //!
 //! The simulator reports the makespan plus per-level / per-tag traffic
 //! accounting (used by the Fig. 2(b)/Fig. 16 reproductions).
+//!
+//! Rate maintenance is incremental by default ([`flow::IncrementalMaxMin`]:
+//! component-local re-solves on flow churn); [`sim::RateMode::Reference`]
+//! keeps the from-scratch oracle. [`sweep`] fans fig16/fig17-style scenario
+//! grids across OS threads with deterministic per-scenario seeds.
 
 pub mod dag;
 pub mod flow;
 pub mod sim;
+pub mod sweep;
 
 pub use dag::{Dag, Tag, TaskId, TaskKind};
-pub use sim::{SimResult, Simulator};
+pub use sim::{RateMode, SimResult, Simulator};

@@ -6,14 +6,61 @@
 //! the egress capacity of the source's level-`l` container and the ingress
 //! capacity of the destination's level-`l` container (e.g. the shared 10 Gbps
 //! DC uplink for cross-DC flows), plus the level's fixed startup latency.
+//!
+//! ## Hot path
+//!
+//! Rate maintenance is **incremental** by default: flow arrivals/completions
+//! mark their resources dirty and [`IncrementalMaxMin`] re-solves only the
+//! affected connected component once per event batch — flows that finish
+//! within [`EPS`] of each other coalesce into a single event, paying one
+//! solve for the whole batch. [`RateMode::Reference`] keeps the pre-change
+//! behaviour (full [`max_min_rates`] recompute per event) as an oracle for
+//! differential tests and as the baseline for the `hotpath_micro` speedup
+//! numbers.
+//!
+//! Byte totals use compensated (Kahan) accumulation so the reported traffic
+//! is invariant under event ordering and task-id permutation.
 
 use std::collections::VecDeque;
 
 use crate::cluster::ClusterSpec;
 use crate::netsim::dag::{Dag, Tag, TaskKind};
-use crate::netsim::flow::{max_min_rates, FlowSpec};
+use crate::netsim::flow::{max_min_rates, FlowSpec, IncrementalMaxMin};
 
 const EPS: f64 = 1e-12;
+
+/// How the engine maintains max-min-fair rates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RateMode {
+    /// Component-local incremental re-solves (the production hot path).
+    #[default]
+    Incremental,
+    /// Full from-scratch recompute on every flow change (the reference
+    /// oracle; O(flows × resources) per event).
+    Reference,
+}
+
+/// Compensated (Kahan) accumulator: byte totals independent of add order.
+#[derive(Clone, Copy, Debug, Default)]
+struct Kahan {
+    sum: f64,
+    c: f64,
+}
+
+impl Kahan {
+    #[inline]
+    fn add(&mut self, x: f64) {
+        let y = x - self.c;
+        let t = self.sum + y;
+        self.c = (t - self.sum) - y;
+        self.sum = t;
+    }
+
+    #[inline]
+    fn get(self) -> f64 {
+        self.sum
+    }
+}
 
 /// Simulation output.
 #[derive(Clone, Debug)]
@@ -45,17 +92,30 @@ impl SimResult {
 
 pub struct Simulator<'a> {
     cluster: &'a ClusterSpec,
+    mode: RateMode,
 }
 
 struct ActiveFlow {
     task: usize,
-    spec: FlowSpec,
+    /// allocator handle (unused in Reference mode)
+    id: usize,
+    resources: Vec<usize>,
+    bytes_remaining: f64,
     rate: f64,
 }
 
 impl<'a> Simulator<'a> {
     pub fn new(cluster: &'a ClusterSpec) -> Self {
-        Self { cluster }
+        Self { cluster, mode: RateMode::Incremental }
+    }
+
+    /// Reference-oracle engine (pre-change rate maintenance).
+    pub fn reference(cluster: &'a ClusterSpec) -> Self {
+        Self { cluster, mode: RateMode::Reference }
+    }
+
+    pub fn with_mode(cluster: &'a ClusterSpec, mode: RateMode) -> Self {
+        Self { cluster, mode }
     }
 
     /// Run the DAG to completion; panics on cyclic or dangling dependencies
@@ -64,6 +124,8 @@ impl<'a> Simulator<'a> {
         let ml = self.cluster.multilevel();
         let levels = self.cluster.levels.len();
         let g = ml.total_gpus();
+        // allocation-free hierarchy queries for the per-transfer hot path
+        let idx = ml.indexer();
 
         // resource table: per level, per container: egress + ingress
         let mut level_offset = vec![0usize; levels];
@@ -81,9 +143,9 @@ impl<'a> Simulator<'a> {
                 caps[level_offset[l] + c * 2 + 1] = self.cluster.levels[l].bandwidth;
             }
         }
+        let bottleneck = |src: usize, dst: usize| -> Option<usize> { idx.bottleneck_level(src, dst) };
         let resource_of = |gpu: usize, level: usize, ingress: bool| -> usize {
-            let container = ml.worker_of(gpu, level);
-            level_offset[level] + container * 2 + ingress as usize
+            level_offset[level] + idx.container_of(gpu, level) * 2 + ingress as usize
         };
 
         let n = dag.tasks.len();
@@ -109,19 +171,22 @@ impl<'a> Simulator<'a> {
         // pending flow starts (after latency): (start_time, task)
         let mut flow_starts: Vec<(f64, usize)> = Vec::new();
         let mut flows: Vec<ActiveFlow> = Vec::new();
+        let mut alloc = IncrementalMaxMin::new(caps.clone());
+        let incremental = self.mode == RateMode::Incremental;
         let mut rates_dirty = false;
 
         let mut time = 0.0f64;
         let mut events = 0usize;
-        let (mut bytes_a2a, mut bytes_ag, mut bytes_ar) = (0.0, 0.0, 0.0);
-        let mut bytes_per_level = vec![0.0f64; levels];
+        let (mut bytes_a2a, mut bytes_ag, mut bytes_ar) =
+            (Kahan::default(), Kahan::default(), Kahan::default());
+        let mut bytes_per_level = vec![Kahan::default(); levels];
 
         // ready queue: min-heap by task id — tasks dispatch in creation
         // order (program order), so e.g. an SREncode created before the
         // pre-expert compute also starts first on its GPU.
         use std::cmp::Reverse;
         use std::collections::BinaryHeap;
-        let mut ready: BinaryHeap<Reverse<usize>> = 
+        let mut ready: BinaryHeap<Reverse<usize>> =
             (0..n).filter(|&i| indeg[i] == 0).map(Reverse).collect();
 
         macro_rules! complete {
@@ -156,23 +221,22 @@ impl<'a> Simulator<'a> {
                         }
                     }
                     TaskKind::Transfer { src, dst, bytes, tag } => {
+                        // per-tag totals count every transfer once (matching
+                        // `Dag::traffic_by_tag`, loopback included);
+                        // per-level totals count wire bytes only
                         match tag {
-                            Tag::A2A => bytes_a2a += bytes,
-                            Tag::AG => bytes_ag += bytes,
-                            Tag::AllReduce => bytes_ar += bytes,
+                            Tag::A2A => bytes_a2a.add(bytes),
+                            Tag::AG => bytes_ag.add(bytes),
+                            Tag::AllReduce => bytes_ar.add(bytes),
                             Tag::Other => {}
                         }
-                        match self.cluster.bottleneck_level(src, dst) {
+                        match bottleneck(src, dst) {
                             None => {
-                                // loopback: instantaneous
+                                // loopback: instantaneous, no wire traffic
                                 complete!(task, time, ready, finish, done, n_done);
                             }
-                            Some(l) if bytes <= EPS => {
-                                let lat = self.cluster.levels[l].latency;
-                                flow_starts.push((time + lat, task));
-                            }
                             Some(l) => {
-                                bytes_per_level[l] += bytes;
+                                bytes_per_level[l].add(bytes);
                                 let lat = self.cluster.levels[l].latency;
                                 flow_starts.push((time + lat, task));
                             }
@@ -195,12 +259,26 @@ impl<'a> Simulator<'a> {
             if n_done == n {
                 break;
             }
-            // recompute fair-share rates if the flow set changed
+            // refresh fair-share rates if the flow set changed: one solve per
+            // event batch (all coalesced starts/completions share it)
             if rates_dirty {
-                let specs: Vec<FlowSpec> = flows.iter().map(|f| f.spec.clone()).collect();
-                let rates = max_min_rates(&caps, &specs);
-                for (f, r) in flows.iter_mut().zip(rates) {
-                    f.rate = r;
+                if incremental {
+                    alloc.resolve();
+                    for f in &mut flows {
+                        f.rate = alloc.rate(f.id);
+                    }
+                } else {
+                    let specs: Vec<FlowSpec> = flows
+                        .iter()
+                        .map(|f| FlowSpec {
+                            resources: f.resources.clone(),
+                            bytes_remaining: f.bytes_remaining,
+                        })
+                        .collect();
+                    let rates = max_min_rates(&caps, &specs);
+                    for (f, r) in flows.iter_mut().zip(rates) {
+                        f.rate = r;
+                    }
                 }
                 rates_dirty = false;
             }
@@ -216,10 +294,10 @@ impl<'a> Simulator<'a> {
                 next = next.min(t);
             }
             for f in &flows {
-                if f.rate > 0.0 && f.rate.is_finite() {
-                    next = next.min(time + f.spec.bytes_remaining / f.rate);
-                } else if f.rate.is_infinite() {
+                if f.bytes_remaining <= EPS || f.rate.is_infinite() {
                     next = next.min(time);
+                } else if f.rate > 0.0 {
+                    next = next.min(time + f.bytes_remaining / f.rate);
                 }
             }
             assert!(
@@ -233,7 +311,7 @@ impl<'a> Simulator<'a> {
             gpu_busy_integral += dt * gpu_running.iter().filter(|r| r.is_some()).count() as f64;
             for f in &mut flows {
                 if f.rate.is_finite() {
-                    f.spec.bytes_remaining -= f.rate * dt;
+                    f.bytes_remaining -= f.rate * dt;
                 }
             }
             time = next;
@@ -248,43 +326,38 @@ impl<'a> Simulator<'a> {
                     }
                 }
             }
-            // flow starts
+            // flow starts due at (or coalesced into) this event
             let mut started = false;
             flow_starts.retain(|&(t, task)| {
                 if t <= time + EPS {
                     let TaskKind::Transfer { src, dst, bytes, .. } = dag.tasks[task].kind else {
                         unreachable!()
                     };
-                    if bytes <= EPS {
-                        // latency-only transfer completes on arrival
-                        // (handled below via zero-remaining flow)
-                    }
-                    let l = self.cluster.bottleneck_level(src, dst).expect("non-loopback");
-                    flows.push(ActiveFlow {
-                        task,
-                        spec: FlowSpec {
-                            resources: vec![resource_of(src, l, false), resource_of(dst, l, true)],
-                            bytes_remaining: bytes,
-                        },
-                        rate: 0.0,
-                    });
+                    let l = bottleneck(src, dst).expect("non-loopback");
+                    let resources = vec![resource_of(src, l, false), resource_of(dst, l, true)];
+                    let id = if incremental { alloc.add(resources.clone()) } else { usize::MAX };
+                    flows.push(ActiveFlow { task, id, resources, bytes_remaining: bytes, rate: 0.0 });
                     started = true;
                     false
                 } else {
                     true
                 }
             });
-            // flow completions
+            // flow completions — everything finishing within EPS of this
+            // event completes together (coalescing), so simultaneous flows
+            // cost one event and one rate solve regardless of their count
             let mut completed_any = false;
             let mut i = 0;
             while i < flows.len() {
-                if flows[i].spec.bytes_remaining <= EPS
-                    || (flows[i].rate.is_finite()
-                        && flows[i].rate > 0.0
-                        && flows[i].spec.bytes_remaining / flows[i].rate <= EPS)
-                    || flows[i].rate.is_infinite()
-                {
+                let f = &flows[i];
+                let finished = f.bytes_remaining <= EPS
+                    || (f.rate.is_finite() && f.rate > 0.0 && f.bytes_remaining / f.rate <= EPS)
+                    || f.rate.is_infinite();
+                if finished {
                     let task = flows[i].task;
+                    if incremental {
+                        alloc.remove(flows[i].id);
+                    }
                     flows.swap_remove(i);
                     complete!(task, time, ready, finish, done, n_done);
                     completed_any = true;
@@ -301,10 +374,10 @@ impl<'a> Simulator<'a> {
         SimResult {
             makespan,
             finish,
-            bytes_a2a,
-            bytes_ag,
-            bytes_allreduce: bytes_ar,
-            bytes_per_level,
+            bytes_a2a: bytes_a2a.get(),
+            bytes_ag: bytes_ag.get(),
+            bytes_allreduce: bytes_ar.get(),
+            bytes_per_level: bytes_per_level.iter().map(|k| k.get()).collect(),
             gpu_utilization: if makespan > 0.0 {
                 gpu_busy_integral / (makespan * g as f64)
             } else {
@@ -320,6 +393,9 @@ mod tests {
     use super::*;
     use crate::cluster::presets;
     use crate::netsim::dag::{Dag, Tag};
+    use crate::prop_assert;
+    use crate::testkit;
+    use crate::util::rng::Rng;
 
     fn flat8() -> ClusterSpec {
         presets::cluster_s()
@@ -460,5 +536,183 @@ mod tests {
         let r = Simulator::new(&c).run(&d);
         assert!(r.makespan > 0.0);
         assert!(t0.elapsed().as_secs_f64() < 5.0, "sim too slow: {:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn simultaneous_finishes_coalesce_into_one_event() {
+        // 4 identical cross-DC transfers start and finish together: the
+        // engine must handle them in a small constant number of events and
+        // count every byte exactly once.
+        let c = presets::dcs_x_gpus(4, 2, 10.0, 128.0);
+        let mut d = Dag::new();
+        for i in 0..4usize {
+            d.transfer(i * 2, ((i + 1) % 4) * 2, 2e6, Tag::A2A, vec![], "ring");
+        }
+        let r = Simulator::new(&c).run(&d);
+        assert_eq!(r.bytes_a2a, 8e6);
+        assert_eq!(r.bytes_per_level[0], 8e6);
+        assert!(r.events <= 4, "simultaneous finishes should coalesce: {} events", r.events);
+        let want = c.levels[0].latency + 2e6 / c.levels[0].bandwidth;
+        assert!((r.makespan - want).abs() / want < 1e-6);
+    }
+
+    // --- randomized DAG machinery for the differential / invariance tests ---
+
+    fn random_dag(g: &mut testkit::Gen, gpus: usize, with_compute: bool) -> Dag {
+        let mut d = Dag::new();
+        let n = g.usize_in(3, 28);
+        for _ in 0..n {
+            let deps: Vec<usize> = if d.is_empty() || g.rng.below(2) == 0 {
+                vec![]
+            } else {
+                let k = g.rng.range(1, 3.min(d.len() + 1));
+                let mut v: Vec<usize> = (0..k).map(|_| g.rng.below(d.len())).collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            };
+            let kinds = if with_compute { 4 } else { 3 };
+            match g.rng.below(kinds) {
+                0 | 1 => {
+                    let src = g.rng.below(gpus);
+                    let dst = g.rng.below(gpus);
+                    let bytes = match g.rng.below(5) {
+                        0 => 0.0, // latency-only transfer
+                        _ => g.rng.f64() * 5e6 + 1.0,
+                    };
+                    let tag = [Tag::A2A, Tag::AG, Tag::AllReduce][g.rng.below(3)];
+                    d.transfer(src, dst, bytes, tag, deps, "t");
+                }
+                2 => {
+                    d.barrier(deps, "b");
+                }
+                _ => {
+                    let gpu = g.rng.below(gpus);
+                    d.compute(gpu, g.rng.f64() * 0.01, deps, "c");
+                }
+            }
+        }
+        d
+    }
+
+    /// Random topological relabeling: perm[old_id] = new_id.
+    fn random_topo_perm(d: &Dag, rng: &mut Rng) -> Vec<usize> {
+        let n = d.tasks.len();
+        let mut indeg = vec![0usize; n];
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, t) in d.tasks.iter().enumerate() {
+            indeg[i] = t.deps.len();
+            for &dep in &t.deps {
+                dependents[dep].push(i);
+            }
+        }
+        let mut avail: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut perm = vec![0usize; n];
+        let mut next_new = 0usize;
+        while !avail.is_empty() {
+            let k = rng.below(avail.len());
+            let old = avail.swap_remove(k);
+            perm[old] = next_new;
+            next_new += 1;
+            for &dep in &dependents[old] {
+                indeg[dep] -= 1;
+                if indeg[dep] == 0 {
+                    avail.push(dep);
+                }
+            }
+        }
+        assert_eq!(next_new, n, "dag has a cycle?");
+        perm
+    }
+
+    fn random_cluster(g: &mut testkit::Gen) -> ClusterSpec {
+        match g.rng.below(3) {
+            0 => presets::cluster_s(),
+            1 => presets::dcs_x_gpus(g.usize_in(2, 4), g.usize_in(1, 4), 10.0, 128.0),
+            _ => presets::cluster_m(),
+        }
+    }
+
+    fn close_rel(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    /// Tentpole differential test: the incremental engine must match the
+    /// reference (full-recompute) engine on randomized DAGs.
+    #[test]
+    fn incremental_and_reference_engines_agree() {
+        testkit::check("sim-incremental-vs-reference", 100, |g| {
+            let cluster = random_cluster(g);
+            let dag = random_dag(g, cluster.total_gpus(), true);
+            let a = Simulator::new(&cluster).run(&dag);
+            let b = Simulator::reference(&cluster).run(&dag);
+            prop_assert!(
+                close_rel(a.makespan, b.makespan),
+                "makespan diverged: incremental {} vs reference {}",
+                a.makespan,
+                b.makespan
+            );
+            for (i, (x, y)) in a.finish.iter().zip(&b.finish).enumerate() {
+                prop_assert!(close_rel(*x, *y), "task {i} finish diverged: {x} vs {y}");
+            }
+            prop_assert!(a.bytes_a2a == b.bytes_a2a, "A2A bytes diverged");
+            prop_assert!(a.bytes_ag == b.bytes_ag, "AG bytes diverged");
+            prop_assert!(a.bytes_allreduce == b.bytes_allreduce, "AR bytes diverged");
+            Ok(())
+        });
+    }
+
+    /// Satellite: byte totals and makespan must be invariant under a
+    /// topological relabeling of the task ids (event-order independence).
+    /// Compute tasks are excluded: same-GPU queue order legitimately follows
+    /// program order, so only communication DAGs are order-free.
+    #[test]
+    fn byte_totals_and_makespan_invariant_under_task_permutation() {
+        testkit::check("sim-permutation-invariance", 80, |g| {
+            let cluster = random_cluster(g);
+            let dag = random_dag(g, cluster.total_gpus(), false);
+            let perm = random_topo_perm(&dag, &mut g.rng);
+            let permuted = dag.permuted(&perm);
+            let a = Simulator::new(&cluster).run(&dag);
+            let b = Simulator::new(&cluster).run(&permuted);
+            prop_assert!(
+                close_rel(a.makespan, b.makespan),
+                "makespan changed under permutation: {} vs {}",
+                a.makespan,
+                b.makespan
+            );
+            // Kahan accumulation keeps totals invariant to accumulation
+            // order up to the last ulp; a genuine double-count or drop
+            // would shift totals by parts in 1e7.
+            let bytes_eq = |x: f64, y: f64| (x - y).abs() <= 1e-12 * (1.0 + x.abs());
+            prop_assert!(
+                bytes_eq(a.bytes_a2a, b.bytes_a2a)
+                    && bytes_eq(a.bytes_ag, b.bytes_ag)
+                    && bytes_eq(a.bytes_allreduce, b.bytes_allreduce),
+                "byte totals changed under permutation: ({}, {}, {}) vs ({}, {}, {})",
+                a.bytes_a2a,
+                a.bytes_ag,
+                a.bytes_allreduce,
+                b.bytes_a2a,
+                b.bytes_ag,
+                b.bytes_allreduce
+            );
+            for l in 0..a.bytes_per_level.len() {
+                prop_assert!(
+                    bytes_eq(a.bytes_per_level[l], b.bytes_per_level[l]),
+                    "level {l} bytes changed under permutation"
+                );
+            }
+            // per-task finish times follow the relabeling exactly
+            for (old, &new) in perm.iter().enumerate() {
+                prop_assert!(
+                    close_rel(a.finish[old], b.finish[new]),
+                    "finish time moved: task {old}→{new}: {} vs {}",
+                    a.finish[old],
+                    b.finish[new]
+                );
+            }
+            Ok(())
+        });
     }
 }

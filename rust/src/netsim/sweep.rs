@@ -1,0 +1,426 @@
+//! Parallel scenario sweeps over the flow simulator (Fig. 16 / Fig. 17
+//! scale studies).
+//!
+//! A [`SweepGrid`] expands a (DC count × bandwidth × hybrid proportion `p`)
+//! grid into [`Scenario`]s with deterministic per-scenario seeds
+//! ([`scenario_seed`]: SplitMix64 over `base_seed` and the scenario index,
+//! so results are reproducible regardless of worker count or completion
+//! order). [`run_sweep`] fans the scenarios across OS threads with
+//! [`parallel_map`] (plain `std::thread::scope`, no external dependencies)
+//! and aggregates per-scenario [`SimResult`]s into [`ScenarioOutcome`]s.
+//!
+//! Two scenario shapes cover the paper's two large-scale studies:
+//!
+//! * [`SweepMode::Aggregate`] — Fig. 17: flat DC-granularity clusters with
+//!   the O(G) aggregated ring schedules; scales to 1000 DCs.
+//! * [`SweepMode::Pairwise`] — Fig. 16: small hierarchical clusters with the
+//!   full pairwise EP vs HybridEP schedules and (optionally Zipf-skewed,
+//!   seed-driven) routing; reports traffic as well as makespans.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::cluster::presets;
+use crate::moe::{MoEWorkload, Routing};
+use crate::netsim::sim::{RateMode, SimResult, Simulator};
+use crate::systems::aggregate::AggregateHybrid;
+use crate::systems::ep::VanillaEp;
+use crate::systems::hybrid_ep::{HybridEp, MigrationCfg};
+use crate::systems::{SchedCtx, System};
+
+/// Worker threads to use by default (one per available core).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Deterministic per-scenario seed: SplitMix64 finalizer over the base seed
+/// and the scenario's grid index.
+pub fn scenario_seed(base: u64, index: u64) -> u64 {
+    let mut z = base ^ index.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Order-preserving parallel map over `items` with a shared work index
+/// (dynamic load balancing — scenario costs vary by orders of magnitude
+/// across DC counts). Falls back to a serial loop for one thread.
+pub fn parallel_map<I, T, F>(items: &[I], threads: usize, f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(usize, &I) -> T + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                done.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut v = done.into_inner().unwrap();
+    v.sort_unstable_by_key(|&(i, _)| i);
+    v.into_iter().map(|(_, r)| r).collect()
+}
+
+/// What each scenario simulates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SweepMode {
+    /// Fig. 17 shape: flat DC-granularity cluster, aggregated ring schedules.
+    Aggregate,
+    /// Fig. 16 shape: `dcs × gpus_per_dc` hierarchical cluster, pairwise
+    /// schedules; `zipf_skew > 0` draws seed-deterministic skewed routing.
+    Pairwise { gpus_per_dc: usize, zipf_skew: f64 },
+}
+
+/// A fig16/fig17-style scenario grid.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    pub dc_counts: Vec<usize>,
+    pub bandwidths_gbps: Vec<f64>,
+    /// Data proportions kept on A2A; `1.0` is the pure-EP reference point.
+    pub hybrid_ps: Vec<f64>,
+    pub workload: MoEWorkload,
+    /// SR compression ratio applied to migrated expert bytes.
+    pub compression_ratio: f64,
+    pub latency_us: f64,
+    pub base_seed: u64,
+    pub mode: SweepMode,
+    pub engine: RateMode,
+}
+
+impl SweepGrid {
+    /// Fig. 17 defaults: the paper's bandwidth ladder and `p = 0.9`.
+    pub fn fig17(dc_counts: Vec<usize>) -> Self {
+        Self {
+            dc_counts,
+            bandwidths_gbps: vec![1.25, 2.5, 5.0, 10.0],
+            hybrid_ps: vec![0.9],
+            workload: MoEWorkload {
+                tokens_per_gpu: 8192,
+                hidden: 1024,
+                ffn: 2048,
+                experts_per_gpu: 1,
+                k: 2,
+                moe_layers: 4,
+                pre_blocks: 1,
+                backward: false,
+            },
+            compression_ratio: 50.0,
+            latency_us: 1000.0,
+            base_seed: 0x48_79_62_72_69_64_45_50, // "HybridEP"
+            mode: SweepMode::Aggregate,
+            engine: RateMode::Incremental,
+        }
+    }
+
+    /// Expand the grid into scenarios with deterministic per-scenario seeds.
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        let mut out = Vec::new();
+        for &dcs in &self.dc_counts {
+            for &bw in &self.bandwidths_gbps {
+                for &p in &self.hybrid_ps {
+                    let index = out.len();
+                    out.push(Scenario {
+                        index,
+                        dcs,
+                        bw_gbps: bw,
+                        p,
+                        seed: scenario_seed(self.base_seed, index as u64),
+                        workload: self.workload,
+                        compression_ratio: self.compression_ratio,
+                        latency_us: self.latency_us,
+                        mode: self.mode,
+                        engine: self.engine,
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One grid point, fully self-describing (safe to ship to a worker thread).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub index: usize,
+    pub dcs: usize,
+    pub bw_gbps: f64,
+    /// data proportion kept on A2A (1.0 = pure EP)
+    pub p: f64,
+    pub seed: u64,
+    pub workload: MoEWorkload,
+    pub compression_ratio: f64,
+    pub latency_us: f64,
+    pub mode: SweepMode,
+    pub engine: RateMode,
+}
+
+/// EP-vs-HybridEP comparison at one grid point.
+#[derive(Clone, Debug)]
+pub struct ScenarioOutcome {
+    pub scenario: Scenario,
+    pub ep: SimResult,
+    pub hybrid: SimResult,
+    /// `ep.makespan / hybrid.makespan`
+    pub speedup: f64,
+}
+
+/// Per-level expert-domain sizes realizing the target data proportion `p`:
+/// at each level, the divisor of the fanout whose `p(S_ED)` (§V-B mapping)
+/// is nearest to `p`. `p = 0` → full domains (the fig16 traffic bound),
+/// `p ≥ 1` → `S_ED = 1` everywhere (pure EP); intermediate `p` genuinely
+/// varies the partition.
+pub fn partition_for_p(cluster: &crate::cluster::ClusterSpec, p: f64) -> Vec<usize> {
+    cluster
+        .levels
+        .iter()
+        .map(|lv| {
+            let g = lv.fanout;
+            let mut best = 1usize;
+            let mut best_d = (crate::model::solver::p_of_domain(g, 1) - p).abs();
+            for s in 2..=g {
+                if g % s != 0 {
+                    continue;
+                }
+                let d = (crate::model::solver::p_of_domain(g, s) - p).abs();
+                if d < best_d {
+                    best_d = d;
+                    best = s;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Simulate one scenario (EP baseline + hybrid at the scenario's `p`).
+pub fn run_scenario(sc: &Scenario) -> ScenarioOutcome {
+    let w = sc.workload;
+    let pe_tx = w.pe_bytes() / sc.compression_ratio;
+    let (ep, hybrid) = match sc.mode {
+        SweepMode::Aggregate => {
+            let cluster = presets::flat_dcs_lat(sc.dcs, sc.bw_gbps, sc.latency_us);
+            let routing = Routing::uniform(1, 1, 1, 1); // aggregate schedules ignore it
+            let ctx = SchedCtx::new(&cluster, &w, &routing);
+            let ep_dag = AggregateHybrid::ep().build_iteration(&ctx);
+            let hy_dag = AggregateHybrid::with_p(sc.dcs, sc.p, pe_tx).build_iteration(&ctx);
+            let sim = |dag| Simulator::with_mode(&cluster, sc.engine).run(dag);
+            (sim(&ep_dag), sim(&hy_dag))
+        }
+        SweepMode::Pairwise { gpus_per_dc, zipf_skew } => {
+            let cluster =
+                presets::dcs_x_gpus(sc.dcs, gpus_per_dc, sc.bw_gbps, presets::PCIE_GBPS);
+            let g = cluster.total_gpus();
+            let experts = g * w.experts_per_gpu;
+            let routing = if zipf_skew > 0.0 {
+                Routing::zipf(g, experts, w.tokens_per_gpu, w.k, zipf_skew, sc.seed)
+            } else {
+                Routing::uniform(g, experts, w.tokens_per_gpu, w.k)
+            };
+            let ctx = SchedCtx::new(&cluster, &w, &routing);
+            let ep_dag = VanillaEp.build_iteration(&ctx);
+            let hy = HybridEp {
+                partition: Some(partition_for_p(&cluster, sc.p)),
+                migration: Some(MigrationCfg {
+                    compression_ratio: sc.compression_ratio,
+                    ..Default::default()
+                }),
+            };
+            let hy_dag = hy.build_iteration(&ctx);
+            let sim = |dag| Simulator::with_mode(&cluster, sc.engine).run(dag);
+            (sim(&ep_dag), sim(&hy_dag))
+        }
+    };
+    let speedup = ep.makespan / hybrid.makespan;
+    ScenarioOutcome { scenario: sc.clone(), ep, hybrid, speedup }
+}
+
+/// Run every scenario of the grid across `threads` workers; outcomes come
+/// back in grid order and are bit-identical for any thread count.
+pub fn run_sweep(grid: &SweepGrid, threads: usize) -> Vec<ScenarioOutcome> {
+    let scenarios = grid.scenarios();
+    parallel_map(&scenarios, threads, |_, sc| run_scenario(sc))
+}
+
+/// Aggregate view over a finished sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepSummary {
+    pub scenarios: usize,
+    pub speedup_min: f64,
+    pub speedup_max: f64,
+    pub speedup_geomean: f64,
+    /// simulator events processed across all scenarios (both systems)
+    pub total_events: usize,
+    /// wire bytes moved across all scenarios (both systems)
+    pub total_bytes: f64,
+}
+
+pub fn summarize(outcomes: &[ScenarioOutcome]) -> SweepSummary {
+    let mut lo = f64::INFINITY;
+    let mut hi = 0.0f64;
+    let mut log_sum = 0.0f64;
+    let mut events = 0usize;
+    let mut bytes = 0.0f64;
+    for o in outcomes {
+        lo = lo.min(o.speedup);
+        hi = hi.max(o.speedup);
+        log_sum += o.speedup.ln();
+        events += o.ep.events + o.hybrid.events;
+        for r in [&o.ep, &o.hybrid] {
+            bytes += r.bytes_per_level.iter().sum::<f64>();
+        }
+    }
+    SweepSummary {
+        scenarios: outcomes.len(),
+        speedup_min: if outcomes.is_empty() { f64::NAN } else { lo },
+        speedup_max: if outcomes.is_empty() { f64::NAN } else { hi },
+        speedup_geomean: if outcomes.is_empty() {
+            f64::NAN
+        } else {
+            (log_sum / outcomes.len() as f64).exp()
+        },
+        total_events: events,
+        total_bytes: bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order_and_coverage() {
+        let items: Vec<usize> = (0..57).collect();
+        for threads in [1, 3, 8] {
+            let out = parallel_map(&items, threads, |i, &x| {
+                assert_eq!(i, x);
+                x * x
+            });
+            assert_eq!(out, items.iter().map(|&x| x * x).collect::<Vec<_>>());
+        }
+        let empty: Vec<usize> = Vec::new();
+        assert!(parallel_map(&empty, 4, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn scenario_seeds_are_deterministic_and_distinct() {
+        let grid = small_grid(SweepMode::Aggregate);
+        let a = grid.scenarios();
+        let b = grid.scenarios();
+        assert_eq!(a.len(), b.len());
+        let mut seeds = Vec::new();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.seed, y.seed, "seeds must be reproducible");
+            seeds.push(x.seed);
+        }
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), a.len(), "per-scenario seeds must be distinct");
+    }
+
+    fn small_grid(mode: SweepMode) -> SweepGrid {
+        let mut g = SweepGrid::fig17(vec![8, 16]);
+        g.bandwidths_gbps = vec![5.0];
+        g.hybrid_ps = vec![0.5, 1.0];
+        g.workload.moe_layers = 1;
+        g.workload.tokens_per_gpu = 512;
+        g.mode = mode;
+        g
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_bitwise() {
+        let grid = small_grid(SweepMode::Aggregate);
+        let serial = run_sweep(&grid, 1);
+        let parallel = run_sweep(&grid, 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.ep.makespan.to_bits(), p.ep.makespan.to_bits());
+            assert_eq!(s.hybrid.makespan.to_bits(), p.hybrid.makespan.to_bits());
+            assert_eq!(s.ep.bytes_a2a.to_bits(), p.ep.bytes_a2a.to_bits());
+            assert_eq!(s.hybrid.bytes_ag.to_bits(), p.hybrid.bytes_ag.to_bits());
+        }
+    }
+
+    #[test]
+    fn aggregate_sweep_speedups_sane() {
+        let grid = small_grid(SweepMode::Aggregate);
+        let out = run_sweep(&grid, default_threads());
+        assert_eq!(out.len(), 4);
+        for o in &out {
+            assert!(o.speedup.is_finite() && o.speedup > 0.0);
+            assert!(o.ep.makespan > 0.0 && o.hybrid.makespan > 0.0);
+            if o.scenario.p >= 1.0 {
+                // p = 1 is EP vs EP: identical schedules, identical makespan
+                assert!((o.speedup - 1.0).abs() < 1e-9, "p=1 speedup {}", o.speedup);
+            }
+        }
+        let s = summarize(&out);
+        assert_eq!(s.scenarios, 4);
+        assert!(s.speedup_min <= s.speedup_geomean && s.speedup_geomean <= s.speedup_max);
+        assert!(s.total_events > 0);
+        assert!(s.total_bytes > 0.0);
+    }
+
+    #[test]
+    fn partition_for_p_spans_the_range() {
+        let cluster = crate::cluster::presets::dcs_x_gpus(2, 4, 10.0, 128.0);
+        assert_eq!(partition_for_p(&cluster, 0.0), vec![2, 4], "p=0: full domains");
+        assert_eq!(partition_for_p(&cluster, 1.0), vec![1, 1], "p=1: pure EP");
+        // p=0.5: level 0 (fanout 2) ties between s=1 (p=1) and s=2 (p=0),
+        // keeping the first; level 1 (fanout 4) has the exact divisor s=2
+        assert_eq!(partition_for_p(&cluster, 0.5), vec![1, 2]);
+        // intermediate p must actually change the hybrid schedule
+        let mut grid = small_grid(SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 });
+        grid.dc_counts = vec![2];
+        grid.hybrid_ps = vec![0.0, 0.5];
+        let out = run_sweep(&grid, 1);
+        assert_eq!(out.len(), 2);
+        assert_ne!(
+            out[0].hybrid.bytes_ag.to_bits(),
+            out[1].hybrid.bytes_ag.to_bits(),
+            "p=0 and p=0.5 must produce different hybrid schedules"
+        );
+    }
+
+    #[test]
+    fn pairwise_sweep_reports_traffic_and_respects_seeds() {
+        let mut grid = small_grid(SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 1.2 });
+        grid.dc_counts = vec![2];
+        grid.hybrid_ps = vec![0.0];
+        let a = run_sweep(&grid, 2);
+        let b = run_sweep(&grid, 1);
+        assert_eq!(a.len(), 1);
+        // deterministic under thread count despite skewed (seeded) routing
+        assert_eq!(a[0].ep.makespan.to_bits(), b[0].ep.makespan.to_bits());
+        // EP moves A2A bytes; full-domain hybrid moves AG instead
+        assert!(a[0].ep.bytes_a2a > 0.0);
+        assert_eq!(a[0].hybrid.bytes_a2a, 0.0);
+        assert!(a[0].hybrid.bytes_ag > 0.0);
+        // a different base seed changes the skewed routing, hence the traffic
+        let mut grid2 = grid.clone();
+        grid2.base_seed ^= 0xDEADBEEF;
+        let c = run_sweep(&grid2, 1);
+        assert_ne!(
+            a[0].ep.makespan.to_bits(),
+            c[0].ep.makespan.to_bits(),
+            "zipf routing must follow the scenario seed"
+        );
+    }
+}

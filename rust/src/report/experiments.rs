@@ -463,7 +463,6 @@ pub fn fig17(dc_counts: &[usize]) -> (Table, Vec<Fig17Row>) {
         "Fig. 17 — HybridEP vs EP speedup at DC granularity (SimAI-substitute flow simulation)",
         &["mode", "bandwidth", "#DCs", "EP iter", "HybridEP iter", "speedup"],
     );
-    let mut rows = Vec::new();
     let w = MoEWorkload {
         tokens_per_gpu: 8192,
         hidden: 1024,
@@ -475,30 +474,49 @@ pub fn fig17(dc_counts: &[usize]) -> (Table, Vec<Fig17Row>) {
         backward: false,
     };
     let routing = Routing::uniform(1, 1, 1, 1); // aggregate systems ignore it
+    struct Spec {
+        mode: &'static str,
+        bw: f64,
+        n: usize,
+        s_ed: usize,
+    }
+    let mut specs = Vec::new();
     for (mode, fixed_s) in [("fixed S_ED=10", true), ("fixed p=0.9", false)] {
         for &bw in &[1.25, 2.5, 5.0, 10.0] {
             for &n in dc_counts {
-                let cluster = presets::flat_dcs(n, bw);
-                let ctx = SchedCtx::new(&cluster, &w, &routing);
                 let s_ed = if fixed_s { 10.min(n) } else { (n / 10).max(2) };
                 if n % s_ed != 0 {
                     continue;
                 }
-                let ep_t = AggregateHybrid::ep().iteration_time(&ctx);
-                let hy = AggregateHybrid::hybrid(s_ed, w.pe_bytes() / 50.0);
-                let hy_t = hy.iteration_time(&ctx);
-                let sp = ep_t / hy_t;
-                table.row(vec![
-                    mode.to_string(),
-                    format!("{bw} Gbps"),
-                    n.to_string(),
-                    crate::util::fmt_secs(ep_t),
-                    crate::util::fmt_secs(hy_t),
-                    speedup(sp),
-                ]);
-                rows.push(Fig17Row { dcs: n, bw_gbps: bw, fixed: mode, speedup: sp });
+                specs.push(Spec { mode, bw, n, s_ed });
             }
         }
+    }
+    // fan the grid across cores: scenarios are independent simulations
+    // (netsim::sweep's harness preserves grid order and determinism)
+    let times = crate::netsim::sweep::parallel_map(
+        &specs,
+        crate::netsim::sweep::default_threads(),
+        |_, s| {
+            let cluster = presets::flat_dcs(s.n, s.bw);
+            let ctx = SchedCtx::new(&cluster, &w, &routing);
+            let ep_t = AggregateHybrid::ep().iteration_time(&ctx);
+            let hy_t = AggregateHybrid::hybrid(s.s_ed, w.pe_bytes() / 50.0).iteration_time(&ctx);
+            (ep_t, hy_t)
+        },
+    );
+    let mut rows = Vec::new();
+    for (s, (ep_t, hy_t)) in specs.iter().zip(times) {
+        let sp = ep_t / hy_t;
+        table.row(vec![
+            s.mode.to_string(),
+            format!("{} Gbps", s.bw),
+            s.n.to_string(),
+            crate::util::fmt_secs(ep_t),
+            crate::util::fmt_secs(hy_t),
+            speedup(sp),
+        ]);
+        rows.push(Fig17Row { dcs: s.n, bw_gbps: s.bw, fixed: s.mode, speedup: sp });
     }
     (table, rows)
 }

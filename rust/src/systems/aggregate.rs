@@ -36,6 +36,33 @@ impl AggregateHybrid {
         Self { s_ed, pe_tx_bytes: Some(pe_tx_bytes), msg_overhead_secs: DEFAULT_MSG_OVERHEAD }
     }
 
+    /// Hybrid configured by target data proportion `p` instead of a domain
+    /// size: picks the divisor `S_ED` of `g` (including `S_ED = 1`, i.e.
+    /// pure EP with `p = 1`) whose `p(S_ED)` per the §V-B mapping is closest
+    /// to the requested `p` (sweep grids vary `p` continuously while only
+    /// divisor domains are deployable). `p ≥ 1` degenerates to EP.
+    pub fn with_p(g: usize, p: f64, pe_tx_bytes: f64) -> Self {
+        if p >= 1.0 || g < 2 {
+            return Self::ep();
+        }
+        let mut best = g; // full domain (p = 0) is always a divisor
+        let mut best_d = (crate::model::solver::p_of_domain(g, g) - p).abs();
+        for s in 1..g {
+            if g % s != 0 {
+                continue;
+            }
+            let d = (crate::model::solver::p_of_domain(g, s) - p).abs();
+            if d < best_d {
+                best_d = d;
+                best = s;
+            }
+        }
+        if best == 1 {
+            return Self::ep();
+        }
+        Self::hybrid(best, pe_tx_bytes)
+    }
+
     /// Data proportion still on A2A (§V-B mapping).
     pub fn p(&self, g: usize) -> f64 {
         crate::model::solver::p_of_domain(g, self.s_ed)
@@ -184,6 +211,23 @@ mod tests {
         let want_ag = 9.0 * w.pe_bytes() * g * w.moe_layers as f64;
         assert!((dag.traffic_by_tag(crate::netsim::Tag::A2A) - want_a2a).abs() / want_a2a < 1e-9);
         assert!((dag.traffic_by_tag(crate::netsim::Tag::AG) - want_ag).abs() / want_ag < 1e-9);
+    }
+
+    #[test]
+    fn with_p_picks_nearest_divisor_domain() {
+        // g = 256: p = 0.9 sits between S_ED = 16 (p = 0.9375) and
+        // S_ED = 32 (p = 0.875); 32 is closer.
+        let sys = AggregateHybrid::with_p(256, 0.9, 1.0);
+        assert_eq!(sys.s_ed, 32);
+        // exact divisor hit
+        assert_eq!(AggregateHybrid::with_p(100, 0.9, 1.0).s_ed, 10);
+        // p = 1 degenerates to EP
+        assert_eq!(AggregateHybrid::with_p(100, 1.0, 1.0).s_ed, 1);
+        // p = 0 wants the full domain
+        assert_eq!(AggregateHybrid::with_p(64, 0.0, 1.0).s_ed, 64);
+        // S_ED = 1 (p = 1) is a candidate too: at g = 8, p = 0.9 is closer
+        // to pure EP (dist 0.1) than to S_ED = 2 (p = 0.75, dist 0.15)
+        assert_eq!(AggregateHybrid::with_p(8, 0.9, 1.0).s_ed, 1);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 use hybrid_ep::cluster::presets;
 use hybrid_ep::moe::{MoEWorkload, Routing};
+use hybrid_ep::netsim::sweep;
 use hybrid_ep::report::experiments as exp;
 use hybrid_ep::systems::aggregate::AggregateHybrid;
 use hybrid_ep::systems::hybrid_ep::HybridEp;
@@ -102,6 +103,50 @@ fn fig17_scales_and_shows_modest_gain_at_1000_dcs() {
     assert!(
         (1.0..2.5).contains(&speedup),
         "1000-DC fixed-S speedup {speedup} out of the paper's plausible band"
+    );
+}
+
+#[test]
+fn fig17_scale_sweep_parallel_deterministic_and_wins() {
+    // acceptance: a ≥256-DC fig17-style sweep completes under the parallel
+    // harness, is bit-identical to the serial run, and the incremental
+    // engine agrees with the reference oracle on the same scenario
+    let mut grid = sweep::SweepGrid::fig17(vec![256]);
+    grid.bandwidths_gbps = vec![2.5];
+    grid.workload.moe_layers = 2;
+    let t0 = std::time::Instant::now();
+    let serial = sweep::run_sweep(&grid, 1);
+    let parallel = sweep::run_sweep(&grid, sweep::default_threads());
+    assert!(t0.elapsed().as_secs_f64() < 60.0, "256-DC sweep too slow");
+    assert_eq!(serial.len(), 1);
+    assert_eq!(parallel.len(), 1);
+    assert_eq!(
+        serial[0].ep.makespan.to_bits(),
+        parallel[0].ep.makespan.to_bits(),
+        "sweep results must not depend on worker count"
+    );
+    let o = &parallel[0];
+    assert!(
+        o.speedup > 0.9 && o.speedup < 4.0,
+        "256-DC speedup {} outside the plausible band",
+        o.speedup
+    );
+    // incremental engine vs reference oracle on the identical scenario
+    let mut grid_ref = grid.clone();
+    grid_ref.engine = hybrid_ep::netsim::RateMode::Reference;
+    let reference = sweep::run_sweep(&grid_ref, 1);
+    let rel = |a: f64, b: f64| (a - b).abs() / b.max(1e-12);
+    assert!(
+        rel(o.ep.makespan, reference[0].ep.makespan) < 1e-9,
+        "incremental EP makespan {} vs reference {}",
+        o.ep.makespan,
+        reference[0].ep.makespan
+    );
+    assert!(
+        rel(o.hybrid.makespan, reference[0].hybrid.makespan) < 1e-9,
+        "incremental hybrid makespan {} vs reference {}",
+        o.hybrid.makespan,
+        reference[0].hybrid.makespan
     );
 }
 

@@ -1,0 +1,163 @@
+//! Minimal in-repo substitute for the `anyhow` crate.
+//!
+//! The offline build image vendors no registry crates, so this path
+//! dependency provides the small subset of anyhow's API the workspace uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait and the `anyhow!`,
+//! `bail!` and `ensure!` macros. Errors are message chains (each `context`
+//! layer prefixes the cause), which is all the callers rely on.
+
+use std::fmt;
+
+/// A string-chain error. Like `anyhow::Error` it deliberately does **not**
+/// implement `std::error::Error`, so the blanket `From<E: Error>` impl below
+/// does not overlap the reflexive `From<T> for T`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: String) -> Self {
+        Self { msg }
+    }
+
+    /// Mirror of `anyhow::Error::msg`.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    /// Prefix the message with a context layer.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Self { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e}` and `{e:#}` both render the full chain.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`: attach context to the error of a `Result` or to a
+/// missing `Option` value.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::new(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::new(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => {
+        $crate::Error::new(format!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/definitely/missing")
+            .context("reading the missing file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().starts_with("reading the missing file: "));
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too large");
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert_eq!(f(-1).unwrap_err().to_string(), "x must be positive, got -1");
+        assert_eq!(f(200).unwrap_err().to_string(), "too large");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        let v = Some(3);
+        assert_eq!(v.with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn parse_error_converts() {
+        fn f() -> Result<f64> {
+            let v: f64 = "nope".parse().map_err(|_| anyhow!("cannot parse"))?;
+            Ok(v)
+        }
+        assert!(f().is_err());
+        // `?` on a std error converts through the blanket From impl
+        fn g() -> Result<i32> {
+            let v: i32 = "nope".parse()?;
+            Ok(v)
+        }
+        assert!(g().is_err());
+    }
+}

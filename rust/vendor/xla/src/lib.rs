@@ -1,0 +1,243 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The build image has no native XLA runtime, so this crate mirrors the small
+//! slice of the real `xla` crate's API that the workspace uses. Host-side
+//! [`Literal`] construction and reshaping work fully (shape validation, data
+//! round-trips); anything that needs the PJRT runtime — [`PjRtClient::cpu`],
+//! compilation, execution — returns a descriptive [`Error`].
+//!
+//! Callers already gate every runtime path on `Artifacts::discover()`, which
+//! fails in this image, so tests and benches skip gracefully rather than hit
+//! these stubs. See DESIGN.md §Substitutions.
+
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "XLA/PJRT runtime not available in this offline build (the `xla` crate is a stub; \
+     see DESIGN.md §Substitutions)";
+
+/// Error type matching the real crate's shape (implements `std::error::Error`
+/// so `?` converts into `anyhow::Error`).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+// ---------------------------------------------------------------------------
+// Literals (fully functional host-side)
+// ---------------------------------------------------------------------------
+
+/// Element storage for [`Literal`].
+#[derive(Debug, Clone, PartialEq)]
+#[doc(hidden)]
+pub enum Data {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    U8(Vec<u8>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::F64(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::I64(v) => v.len(),
+            Data::U8(v) => v.len(),
+        }
+    }
+}
+
+/// Native element types a [`Literal`] can hold.
+pub trait NativeType: Sized + Clone {
+    #[doc(hidden)]
+    fn into_data(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn from_data(d: &Data) -> Option<Vec<Self>>;
+}
+
+macro_rules! native {
+    ($t:ty, $variant:ident) => {
+        impl NativeType for $t {
+            fn into_data(v: Vec<Self>) -> Data {
+                Data::$variant(v)
+            }
+            fn from_data(d: &Data) -> Option<Vec<Self>> {
+                match d {
+                    Data::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(f64, F64);
+native!(i32, I32);
+native!(i64, I64);
+native!(u8, U8);
+
+/// A host literal: flat data plus dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::into_data(data.to_vec()) }
+    }
+
+    /// Rank-0 (scalar) f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { dims: vec![], data: Data::F32(vec![v]) }
+    }
+
+    /// Reshape; errors when the element count does not match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.data.len() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Flat copy of the elements; errors on a dtype mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_data(&self.data).ok_or_else(|| Error("literal dtype mismatch".to_string()))
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (they only
+    /// come from PJRT execution), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT surface (stubbed: constructors error)
+// ---------------------------------------------------------------------------
+
+/// HLO module handle (text-parsed in the real crate).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable()
+    }
+}
+
+/// Computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// PJRT client. `cpu()` fails in this image — callers skip when artifacts
+/// are missing, which is always the case offline.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with host inputs; the result nests device buffers per
+    /// replica/partition like the real API.
+    pub fn execute<T: AsRef<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.dims(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(m.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_validates() {
+        let l = Literal::vec1(&[1i32, 2, 3]);
+        assert!(l.reshape(&[2, 2]).is_err());
+        assert!(l.reshape(&[3, 1]).is_ok());
+    }
+
+    #[test]
+    fn scalar_is_rank0() {
+        let s = Literal::scalar(7.5);
+        assert!(s.dims().is_empty());
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn runtime_paths_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/tmp/x").is_err());
+    }
+}
