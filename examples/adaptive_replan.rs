@@ -1,0 +1,73 @@
+//! Adaptive replanning demo: drifting gate skew on a heterogeneous
+//! (straggler-DC) cluster, comparing never-migrate / always-replan /
+//! adaptive policies, then the per-layer p_l profile for a skew-graded
+//! layer trace.
+//!
+//!   cargo run --release --example adaptive_replan [-- --iters 16 --drift 3.5]
+
+use anyhow::Result;
+use hybrid_ep::cluster::presets;
+use hybrid_ep::moe::MoEWorkload;
+use hybrid_ep::plan::replanner::{self, Policy, ReplanCfg};
+use hybrid_ep::report::Table;
+use hybrid_ep::systems::hybrid_ep::{HybridEp, MigrationCfg};
+use hybrid_ep::systems::SchedCtx;
+use hybrid_ep::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let iters = args.usize_or("iters", 16)?;
+    let drift = args.f64_or("drift", 3.5)?;
+    let window = args.usize_or("window", 2)?;
+
+    // 2 DCs × 4 GPUs; DC 0's uplink is a 2× straggler
+    let cluster = presets::straggler_dc(2, 4, 10.0, 128.0, 0, 5.0);
+    let w = MoEWorkload {
+        tokens_per_gpu: 1024,
+        hidden: 256,
+        ffn: 2048,
+        experts_per_gpu: 1,
+        k: 1,
+        moe_layers: 2,
+        pre_blocks: 1,
+        backward: false,
+    };
+    let g = cluster.total_gpus();
+    let trace = replanner::drift_trace(g, g, w.tokens_per_gpu, w.k, 0.0, drift, 0.3, iters, 7);
+    let cfg = ReplanCfg {
+        migration: MigrationCfg { compression_ratio: 3.0, ..Default::default() },
+        window,
+    };
+
+    println!(
+        "cluster {} — skew ramp 0 → {drift} over {iters} iterations, window {window}",
+        cluster.name
+    );
+    let mut table = Table::new(
+        "Replanning policies over the drift trace",
+        &["policy", "total", "switches", "final partition"],
+    );
+    for policy in [Policy::Never, Policy::Always, Policy::Adaptive] {
+        let report = replanner::run_policy(&cluster, &w, &trace, &cfg, policy);
+        table.row(vec![
+            format!("{policy:?}"),
+            hybrid_ep::util::fmt_secs(report.total_secs),
+            report.switches.to_string(),
+            format!("{:?}", report.records.last().map(|r| r.partition.clone()).unwrap_or_default()),
+        ]);
+    }
+    table.print();
+
+    // per-layer p_l profile over the trace's first few routings
+    let layer_trace = &trace[..trace.len().min(4)];
+    let mut ctx = SchedCtx::new(&cluster, &w, &trace[0]);
+    ctx.layer_routing = Some(layer_trace);
+    let hy = HybridEp::partition_only();
+    let mut profile = Table::new("Per-layer partitions (p_l)", &["layer", "S_ED"]);
+    for l in 0..layer_trace.len() {
+        let part = hy.resolve_partition_for_layer(&ctx, l);
+        profile.row(vec![l.to_string(), format!("{:?}", part.sizes())]);
+    }
+    profile.print();
+    Ok(())
+}

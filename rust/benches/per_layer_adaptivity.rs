@@ -1,0 +1,49 @@
+//! Per-layer adaptive planning + heterogeneous bandwidth drivers.
+//!
+//! Not a paper figure: these exercise the plan → lower → simulate pipeline's
+//! adaptivity — the per-layer `p_l` ablation (skew-graded layer trace) and
+//! the straggler-DC sweep (heterogeneous uplinks). `--quick` / `BENCH_FAST=1`
+//! runs the one-scenario smoke used by CI.
+
+use hybrid_ep::bench::{header, time_once};
+use hybrid_ep::report::experiments;
+use hybrid_ep::util::args::Args;
+
+fn main() {
+    header("per_layer_adaptivity", "per-layer p_l ablation + straggler-DC sweep (not in paper)");
+    let args = Args::from_env().unwrap_or_default();
+    let quick = args.bool("quick") || std::env::var("BENCH_FAST").is_ok();
+
+    let ((table, out), secs) = time_once(experiments::per_layer_p);
+    table.print();
+    let profile: Vec<_> = out.rows.iter().map(|r| r.partition.clone()).collect();
+    assert!(
+        profile.iter().any(|p| p != &profile[0]),
+        "per-layer profile should vary across the skew gradient: {profile:?}"
+    );
+    println!(
+        "per-layer {} vs global {} ({:+.1}%), planned+simulated in {secs:.2}s",
+        hybrid_ep::util::fmt_secs(out.per_layer_secs),
+        hybrid_ep::util::fmt_secs(out.global_secs),
+        100.0 * (out.per_layer_secs / out.global_secs - 1.0),
+    );
+
+    if quick {
+        println!("[--quick] skipping the straggler sweep");
+        return;
+    }
+
+    println!();
+    let ((table, rows), secs) = time_once(experiments::straggler_sweep);
+    table.print();
+    let base = &rows[0];
+    let worst = rows.last().unwrap();
+    println!(
+        "straggler 10 → {} Gbps: EP ×{:.2}, HybridEP ×{:.2}, speedup {:.2}× → {:.2}× ({secs:.2}s)",
+        worst.straggler_gbps,
+        worst.ep_secs / base.ep_secs,
+        worst.hybrid_secs / base.hybrid_secs,
+        base.speedup,
+        worst.speedup,
+    );
+}

@@ -1,0 +1,63 @@
+//! Multi-iteration dynamic replanning over a drifting Zipf routing trace.
+//!
+//! Not a paper figure: compares Never / Always / Adaptive replanning
+//! policies (plan::replanner) on heterogeneous-bandwidth clusters, and runs
+//! a small replanning sweep through the parallel harness. `--quick` /
+//! `BENCH_FAST=1` runs the one-scenario smoke used by CI.
+
+use hybrid_ep::bench::{header, time_once};
+use hybrid_ep::netsim::sweep::{self, SweepGrid, SweepMode};
+use hybrid_ep::report::experiments;
+use hybrid_ep::util::args::Args;
+
+fn main() {
+    header("replanning_drift", "dynamic replanning over routing drift (not in paper)");
+    let args = Args::from_env().unwrap_or_default();
+    let quick = args.bool("quick") || std::env::var("BENCH_FAST").is_ok();
+
+    let ((table, rows), secs) = time_once(experiments::replanning_drift);
+    table.print();
+    let winners = rows.iter().filter(|r| r.adaptive_wins()).count();
+    println!(
+        "{winners}/{} scenarios with adaptive strictly beating both baselines ({secs:.2}s)",
+        rows.len()
+    );
+    assert!(winners > 0, "adaptive replanning should win somewhere");
+
+    if quick {
+        println!("[--quick] skipping the replanning sweep");
+        return;
+    }
+
+    // drift × heterogeneity grid through the parallel sweep harness
+    println!();
+    let mut grid = SweepGrid::fig17(vec![2]);
+    grid.mode = SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 };
+    grid.bandwidths_gbps = vec![10.0];
+    grid.hybrid_ps = vec![1.0];
+    grid.heterogeneity = vec![1.0, 0.5, 0.25];
+    grid.drift_rates = vec![1.5, 3.0];
+    grid.replan_iters = 8;
+    grid.workload.tokens_per_gpu = 1024;
+    grid.workload.hidden = 256;
+    grid.workload.ffn = 2048;
+    grid.workload.k = 1;
+    grid.workload.moe_layers = 2;
+    grid.compression_ratio = 2.0;
+    let threads = sweep::default_threads();
+    let (outcomes, secs) = time_once(|| sweep::run_replan_sweep(&grid, threads));
+    for o in &outcomes {
+        println!(
+            "dcs={} het={} drift={}: never {} | always {} | adaptive {} ({} switches, {:.2}× vs best static)",
+            o.scenario.dcs,
+            o.scenario.heterogeneity,
+            o.scenario.drift,
+            hybrid_ep::util::fmt_secs(o.never_secs),
+            hybrid_ep::util::fmt_secs(o.always_secs),
+            hybrid_ep::util::fmt_secs(o.adaptive_secs),
+            o.adaptive_switches,
+            o.adaptive_speedup(),
+        );
+    }
+    println!("replanning sweep: {} scenarios across {threads} threads in {secs:.2}s", outcomes.len());
+}

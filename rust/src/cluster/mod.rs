@@ -138,20 +138,70 @@ pub struct LevelSpec {
     pub latency: f64,
 }
 
-/// A concrete cluster: hierarchy levels from outermost to innermost.
+/// One per-container capacity override: heterogeneous sibling links at a
+/// level (a straggler DC uplink, mixed 10/40/100 Gbps uplinks). `container`
+/// is the *global* container index at `level` (see
+/// [`Multilevel::worker_of`]); the override replaces the level's default
+/// bandwidth for that container's ingress **and** egress.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkOverride {
+    pub level: usize,
+    pub container: usize,
+    /// bytes/second
+    pub bandwidth: f64,
+}
+
+/// A concrete cluster: hierarchy levels from outermost to innermost, plus
+/// optional per-sibling-link capacity overrides.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterSpec {
     pub name: String,
     pub levels: Vec<LevelSpec>,
+    /// Heterogeneous-bandwidth overrides; later entries win on conflict.
+    pub overrides: Vec<LinkOverride>,
 }
 
 impl ClusterSpec {
+    /// A homogeneous cluster (no link overrides).
+    pub fn homogeneous(name: impl Into<String>, levels: Vec<LevelSpec>) -> Self {
+        Self { name: name.into(), levels, overrides: Vec::new() }
+    }
+
+    /// Builder-style capacity override for one container's link at `level`.
+    pub fn with_override(mut self, level: usize, container: usize, bandwidth: f64) -> Self {
+        assert!(level < self.levels.len(), "override level {level} out of range");
+        assert!(bandwidth > 0.0, "override bandwidth must be positive");
+        self.overrides.push(LinkOverride { level, container, bandwidth });
+        self
+    }
+
     pub fn multilevel(&self) -> Multilevel {
         Multilevel::new(self.levels.iter().map(|l| l.fanout).collect()).expect("valid levels")
     }
 
     pub fn total_gpus(&self) -> usize {
         self.levels.iter().map(|l| l.fanout).product()
+    }
+
+    /// Uplink capacity of one container at `level`: its override if present
+    /// (last one wins), else the level default.
+    pub fn container_bandwidth(&self, level: usize, container: usize) -> f64 {
+        self.overrides
+            .iter()
+            .rev()
+            .find(|o| o.level == level && o.container == container)
+            .map(|o| o.bandwidth)
+            .unwrap_or(self.levels[level].bandwidth)
+    }
+
+    /// Slowest uplink at `level` — the conservative bound planners use under
+    /// heterogeneous bandwidth (min of the level default and any override).
+    pub fn min_bandwidth_at(&self, level: usize) -> f64 {
+        self.overrides
+            .iter()
+            .filter(|o| o.level == level)
+            .map(|o| o.bandwidth)
+            .fold(self.levels[level].bandwidth, f64::min)
     }
 
     /// The outermost level at which two GPUs differ — the bottleneck level of
@@ -163,10 +213,22 @@ impl ClusterSpec {
         self.multilevel().indexer().bottleneck_level(m, n)
     }
 
-    /// Bandwidth (bytes/s) for a transfer between GPUs `m` and `n`.
+    /// Bandwidth (bytes/s) for a transfer between GPUs `m` and `n` — with
+    /// overrides, the slower of the two endpoint containers' links.
     pub fn bandwidth_between(&self, m: usize, n: usize) -> f64 {
-        match self.bottleneck_level(m, n) {
-            Some(l) => self.levels[l].bandwidth,
+        if m == n {
+            return f64::INFINITY; // loopback fast path: no allocations
+        }
+        let idx = self.multilevel().indexer();
+        match idx.bottleneck_level(m, n) {
+            Some(l) => {
+                if self.overrides.is_empty() {
+                    return self.levels[l].bandwidth; // homogeneous fast path
+                }
+                let src = self.container_bandwidth(l, idx.container_of(m, l));
+                let dst = self.container_bandwidth(l, idx.container_of(n, l));
+                src.min(dst)
+            }
             None => f64::INFINITY,
         }
     }
@@ -179,7 +241,8 @@ impl ClusterSpec {
     }
 
     /// Parse from a config `Value` (see `configs/*.toml`):
-    /// `[[levels]] name/fanout/bw_gbps/latency_us`.
+    /// `[[levels]] name/fanout/bw_gbps/latency_us`, plus optional
+    /// heterogeneous-link `[[overrides]] level/container/bw_gbps`.
     pub fn from_config(v: &crate::util::json::Value) -> Result<Self> {
         let name =
             v.get("name").and_then(|x| x.as_str().ok().map(str::to_string)).unwrap_or_default();
@@ -196,7 +259,21 @@ impl ClusterSpec {
         if levels.is_empty() {
             bail!("cluster config has no levels");
         }
-        Ok(Self { name, levels })
+        let mut overrides = Vec::new();
+        if let Some(ovs) = v.get("overrides") {
+            for o in ovs.as_arr()? {
+                let level = o.req("level")?.as_usize()?;
+                if level >= levels.len() {
+                    bail!("override level {level} out of range ({} levels)", levels.len());
+                }
+                overrides.push(LinkOverride {
+                    level,
+                    container: o.req("container")?.as_usize()?,
+                    bandwidth: o.req("bw_gbps")?.as_f64()? * 1e9 / 8.0,
+                });
+            }
+        }
+        Ok(Self { name, levels, overrides })
     }
 }
 
@@ -321,5 +398,53 @@ bw_gbps = 128.0
     fn invalid_multilevel_rejected() {
         assert!(Multilevel::new(vec![]).is_err());
         assert!(Multilevel::new(vec![4, 0]).is_err());
+    }
+
+    #[test]
+    fn link_overrides_shape_bandwidth_queries() {
+        // 2 DCs × 4 GPUs; DC 0's uplink slowed to a quarter
+        let base = presets::dcs_x_gpus(2, 4, 10.0, 128.0);
+        let slow = presets::gbps(2.5);
+        let c = base.clone().with_override(0, 0, slow);
+        assert_eq!(c.container_bandwidth(0, 0), slow);
+        assert_eq!(c.container_bandwidth(0, 1), base.levels[0].bandwidth);
+        assert_eq!(c.min_bandwidth_at(0), slow);
+        assert_eq!(c.min_bandwidth_at(1), base.levels[1].bandwidth);
+        // cross-DC pairs touching the straggler see the slow link
+        assert_eq!(c.bandwidth_between(0, 4), slow);
+        assert_eq!(c.bandwidth_between(4, 0), slow);
+        // intra-DC pairs are unaffected
+        assert_eq!(c.bandwidth_between(0, 1), base.levels[1].bandwidth);
+        // homogeneous clusters keep the fast path exactly
+        assert_eq!(base.bandwidth_between(0, 4), base.levels[0].bandwidth);
+        // last override wins
+        let c2 = c.with_override(0, 0, presets::gbps(40.0));
+        assert_eq!(c2.container_bandwidth(0, 0), presets::gbps(40.0));
+    }
+
+    #[test]
+    fn from_config_parses_overrides() {
+        let v = crate::config::parse(
+            r#"
+name = "straggler"
+[[levels]]
+name = "dc"
+fanout = 4
+bw_gbps = 10.0
+[[levels]]
+name = "gpu"
+fanout = 2
+bw_gbps = 128.0
+[[overrides]]
+level = 0
+container = 2
+bw_gbps = 1.25
+"#,
+        )
+        .unwrap();
+        let c = ClusterSpec::from_config(&v).unwrap();
+        assert_eq!(c.overrides.len(), 1);
+        assert!((c.container_bandwidth(0, 2) - presets::gbps(1.25)).abs() < 1.0);
+        assert!((c.container_bandwidth(0, 1) - presets::gbps(10.0)).abs() < 1.0);
     }
 }

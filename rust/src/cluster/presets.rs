@@ -18,31 +18,31 @@ fn level(name: &str, fanout: usize, bw_gbps: f64, latency_us: f64) -> LevelSpec 
 
 /// Cluster-S: 8 GPUs in a single DC (PCIe only).
 pub fn cluster_s() -> ClusterSpec {
-    ClusterSpec { name: "Cluster-S".into(), levels: vec![level("gpu", 8, PCIE_GBPS, 10.0)] }
+    ClusterSpec::homogeneous("Cluster-S", vec![level("gpu", 8, PCIE_GBPS, 10.0)])
 }
 
 /// Cluster-M: 16 GPUs on 2 DCs (2 × 2 nodes × 4 GPUs).
 pub fn cluster_m() -> ClusterSpec {
-    ClusterSpec {
-        name: "Cluster-M".into(),
-        levels: vec![
+    ClusterSpec::homogeneous(
+        "Cluster-M",
+        vec![
             level("dc", 2, ETH_GBPS, 500.0),
             level("node", 2, PCIE_GBPS, 20.0),
             level("gpu", 4, PCIE_GBPS, 10.0),
         ],
-    }
+    )
 }
 
 /// Cluster-L: 32 GPUs on 4 DCs (4 × 2 nodes × 4 GPUs).
 pub fn cluster_l() -> ClusterSpec {
-    ClusterSpec {
-        name: "Cluster-L".into(),
-        levels: vec![
+    ClusterSpec::homogeneous(
+        "Cluster-L",
+        vec![
             level("dc", 4, ETH_GBPS, 500.0),
             level("node", 2, PCIE_GBPS, 20.0),
             level("gpu", 4, PCIE_GBPS, 10.0),
         ],
-    }
+    )
 }
 
 /// Flat multi-DC cluster for large-scale simulation (Fig. 17): one GPU per DC
@@ -54,18 +54,49 @@ pub fn flat_dcs(dcs: usize, bw_gbps: f64) -> ClusterSpec {
 /// [`flat_dcs`] with an explicit inter-DC one-way latency — sweep grids
 /// (`netsim::sweep`) vary bandwidth and latency independently.
 pub fn flat_dcs_lat(dcs: usize, bw_gbps: f64, latency_us: f64) -> ClusterSpec {
-    ClusterSpec {
-        name: format!("{dcs}xDC@{bw_gbps}Gbps/{latency_us}us"),
-        levels: vec![level("dc", dcs, bw_gbps, latency_us)],
-    }
+    ClusterSpec::homogeneous(
+        format!("{dcs}xDC@{bw_gbps}Gbps/{latency_us}us"),
+        vec![level("dc", dcs, bw_gbps, latency_us)],
+    )
 }
 
 /// Two-level generic: `dcs` DCs × `gpus` GPUs.
 pub fn dcs_x_gpus(dcs: usize, gpus: usize, inter_gbps: f64, intra_gbps: f64) -> ClusterSpec {
-    ClusterSpec {
-        name: format!("{dcs}DCx{gpus}GPU"),
-        levels: vec![level("dc", dcs, inter_gbps, 500.0), level("gpu", gpus, intra_gbps, 10.0)],
+    ClusterSpec::homogeneous(
+        format!("{dcs}DCx{gpus}GPU"),
+        vec![level("dc", dcs, inter_gbps, 500.0), level("gpu", gpus, intra_gbps, 10.0)],
+    )
+}
+
+/// [`dcs_x_gpus`] with one *straggler* DC whose uplink runs at
+/// `straggler_gbps` instead of `inter_gbps` (heterogeneous bandwidth).
+pub fn straggler_dc(
+    dcs: usize,
+    gpus: usize,
+    inter_gbps: f64,
+    intra_gbps: f64,
+    straggler: usize,
+    straggler_gbps: f64,
+) -> ClusterSpec {
+    assert!(straggler < dcs, "straggler DC index out of range");
+    let mut c = dcs_x_gpus(dcs, gpus, inter_gbps, intra_gbps)
+        .with_override(0, straggler, gbps(straggler_gbps));
+    c.name = format!("{dcs}DCx{gpus}GPU/straggler{straggler}@{straggler_gbps}Gbps");
+    c
+}
+
+/// Flat DC-granularity cluster with *mixed* per-DC uplink capacities (e.g.
+/// 10/40/100 Gbps): the level default is the fastest uplink and every DC
+/// gets its own override.
+pub fn mixed_uplinks(uplinks_gbps: &[f64]) -> ClusterSpec {
+    assert!(!uplinks_gbps.is_empty(), "need at least one uplink");
+    let fastest = uplinks_gbps.iter().cloned().fold(0.0f64, f64::max);
+    let mut c = flat_dcs(uplinks_gbps.len(), fastest);
+    c.name = format!("{}xDC@mixed", uplinks_gbps.len());
+    for (i, &bw) in uplinks_gbps.iter().enumerate() {
+        c = c.with_override(0, i, gbps(bw));
     }
+    c
 }
 
 pub fn by_name(name: &str) -> Option<ClusterSpec> {
@@ -107,5 +138,21 @@ mod tests {
         let c = flat_dcs(100, 5.0);
         assert_eq!(c.total_gpus(), 100);
         assert!((c.levels[0].bandwidth - gbps(5.0)).abs() < 1.0);
+    }
+
+    #[test]
+    fn straggler_and_mixed_presets() {
+        let c = straggler_dc(4, 8, 10.0, 128.0, 2, 1.25);
+        assert_eq!(c.total_gpus(), 32);
+        assert_eq!(c.container_bandwidth(0, 2), gbps(1.25));
+        assert_eq!(c.container_bandwidth(0, 0), gbps(10.0));
+        assert_eq!(c.min_bandwidth_at(0), gbps(1.25));
+
+        let m = mixed_uplinks(&[10.0, 40.0, 100.0]);
+        assert_eq!(m.total_gpus(), 3);
+        assert_eq!(m.container_bandwidth(0, 0), gbps(10.0));
+        assert_eq!(m.container_bandwidth(0, 1), gbps(40.0));
+        assert_eq!(m.container_bandwidth(0, 2), gbps(100.0));
+        assert_eq!(m.min_bandwidth_at(0), gbps(10.0));
     }
 }

@@ -20,8 +20,11 @@
 //!   scheduler (the SimAI-substitute substrate for large-scale studies), with
 //!   incremental component-local rate maintenance and a parallel scenario
 //!   sweep harness ([`netsim::sweep`]).
+//! * [`plan`] — the layered Plan IR (per-MoE-layer migrate/dispatch/expert/
+//!   combine phases), the shared Plan-IR → DAG lowering, and the
+//!   multi-iteration dynamic replanner over drifting routing traces.
 //! * [`systems`] — schedule generators for HybridEP and the compared systems
-//!   (vanilla EP, Tutel-, FasterMoE-, SmartMoE-style).
+//!   (vanilla EP, Tutel-, FasterMoE-, SmartMoE-style); each emits Plan IR.
 //! * [`runtime`] — PJRT runtime executing the AOT-compiled JAX/Pallas
 //!   artifacts (Python never runs on the request path).
 //! * [`trainer`] — end-to-end training driver over the `train_step` artifact.
@@ -38,6 +41,7 @@ pub mod migration;
 pub mod model;
 pub mod moe;
 pub mod netsim;
+pub mod plan;
 pub mod report;
 pub mod runtime;
 pub mod systems;

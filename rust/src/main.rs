@@ -49,17 +49,22 @@ fn run() -> Result<()> {
         "plan" => cmd_plan(&args),
         "topo" => cmd_topo(&args),
         "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
         "train" => cmd_train(&args),
         "experiments" => cmd_experiments(&args),
         _ => {
             println!(
                 "hybrid-ep — cross-DC expert parallelism (paper reproduction)\n\n\
-                 usage: hybrid-ep <plan|topo|simulate|train|experiments> [--flags]\n\
+                 usage: hybrid-ep <plan|topo|simulate|sweep|train|experiments> [--flags]\n\
                    plan        --cluster S|M|L --data-mb D --expert-mb E [--cr CR]\n\
                    topo        --gpus G --s-ed S\n\
                    simulate    --cluster S|M|L --data-mb D --expert-mb E --system NAME\n\
+                   sweep       --mode aggregate|pairwise|replan --dcs 8,16 --bw 1.25,10\n\
+                               [--p 0.9] [--het 1.0,0.25] [--drift 2.5] [--iters N]\n\
+                               [--threads N]\n\
                    train       --profile test|small|large --steps N [--compression ws|wos --cr CR]\n\
-                   experiments --exp fig2b|fig12|table5|fig13|table6|fig16|table7|fig17|all"
+                   experiments --exp fig2b|fig12|table5|fig13|table6|fig16|table7|fig17|\n\
+                               perlayer|straggler|replan|all [--threads N]"
             );
             Ok(())
         }
@@ -150,6 +155,88 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use hybrid_ep::netsim::sweep::{self, SweepGrid, SweepMode};
+    let threads = args.usize_or("threads", sweep::default_threads())?;
+    if threads == 0 {
+        bail!("--threads must be at least 1");
+    }
+    let dcs = args.usize_list_or("dcs", &[8, 16])?;
+    let mut grid = SweepGrid::fig17(dcs);
+    grid.bandwidths_gbps = args.f64_list_or("bw", &[1.25, 2.5, 5.0, 10.0])?;
+    grid.hybrid_ps = args.f64_list_or("p", &[0.9])?;
+    grid.heterogeneity = args.f64_list_or("het", &[1.0])?;
+    grid.drift_rates = args.f64_list_or("drift", &[0.0])?;
+    grid.replan_iters = args.usize_or("iters", 8)?;
+    let mode = args.get_or("mode", "aggregate");
+    match mode {
+        "aggregate" => grid.mode = SweepMode::Aggregate,
+        "pairwise" | "replan" => {
+            grid.mode = SweepMode::Pairwise {
+                gpus_per_dc: args.usize_or("gpus-per-dc", 4)?,
+                zipf_skew: args.f64_or("skew", 0.0)?,
+            };
+            if mode == "replan" {
+                // replanning traces need modest workloads to stay interactive
+                grid.workload.moe_layers = args.usize_or("layers", 2)?;
+            }
+        }
+        other => bail!("unknown sweep mode {other:?} (aggregate|pairwise|replan)"),
+    }
+    // collapse axes the selected mode ignores, so the grid doesn't emit
+    // duplicate-looking rows whose only difference is the derived seed
+    if mode == "replan" {
+        grid.hybrid_ps = vec![1.0];
+    } else {
+        grid.drift_rates = vec![0.0];
+    }
+    if mode == "replan" {
+        let outcomes = sweep::run_replan_sweep(&grid, threads);
+        let mut t = Table::new(
+            "Replanning sweep — never / always / adaptive totals",
+            &["#DCs", "bw", "het", "drift", "never", "always", "adaptive", "switches"],
+        );
+        for o in &outcomes {
+            t.row(vec![
+                o.scenario.dcs.to_string(),
+                format!("{} Gbps", o.scenario.bw_gbps),
+                format!("{}", o.scenario.heterogeneity),
+                format!("{}", o.scenario.drift),
+                hybrid_ep::util::fmt_secs(o.never_secs),
+                hybrid_ep::util::fmt_secs(o.always_secs),
+                hybrid_ep::util::fmt_secs(o.adaptive_secs),
+                o.adaptive_switches.to_string(),
+            ]);
+        }
+        t.print();
+        println!("{} scenarios across {threads} threads", outcomes.len());
+    } else {
+        let outcomes = sweep::run_sweep(&grid, threads);
+        let mut t = Table::new(
+            "Scenario sweep — EP vs HybridEP",
+            &["#DCs", "bw", "p", "het", "EP iter", "HybridEP iter", "speedup"],
+        );
+        for o in &outcomes {
+            t.row(vec![
+                o.scenario.dcs.to_string(),
+                format!("{} Gbps", o.scenario.bw_gbps),
+                format!("{}", o.scenario.p),
+                format!("{}", o.scenario.heterogeneity),
+                hybrid_ep::util::fmt_secs(o.ep.makespan),
+                hybrid_ep::util::fmt_secs(o.hybrid.makespan),
+                format!("{:.2}x", o.speedup),
+            ]);
+        }
+        t.print();
+        let s = sweep::summarize(&outcomes);
+        println!(
+            "{} scenarios across {threads} threads: speedup {:.2}x-{:.2}x (geomean {:.2}x)",
+            s.scenarios, s.speedup_min, s.speedup_max, s.speedup_geomean
+        );
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let arts = Artifacts::discover()?;
     let profile = args.get_or("profile", "test");
@@ -177,6 +264,10 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_experiments(args: &Args) -> Result<()> {
     let which = args.get_or("exp", "all");
     let all = which == "all";
+    let threads = args.usize_or("threads", hybrid_ep::netsim::sweep::default_threads())?;
+    if threads == 0 {
+        bail!("--threads must be at least 1");
+    }
     if all || which == "fig2b" {
         exp::fig2b().0.print();
     }
@@ -199,7 +290,16 @@ fn cmd_experiments(args: &Args) -> Result<()> {
         exp::table7().print();
     }
     if all || which == "fig17" {
-        exp::fig17(&[50, 100, 200, 500, 1000]).0.print();
+        exp::fig17_with_threads(&[50, 100, 200, 500, 1000], threads).0.print();
+    }
+    if all || which == "perlayer" {
+        exp::per_layer_p().0.print();
+    }
+    if all || which == "straggler" {
+        exp::straggler_sweep().0.print();
+    }
+    if all || which == "replan" {
+        exp::replanning_drift().0.print();
     }
     Ok(())
 }

@@ -70,6 +70,27 @@ impl Routing {
     pub fn per_gpu_tokens(&self) -> Vec<f64> {
         self.tokens.iter().map(|r| r.iter().sum()).collect()
     }
+
+    /// Worst per-GPU remote token volume under `placement`: the max over
+    /// GPUs of remote tokens *sent* or *received*. Uniform routing gives
+    /// `total · (G−1)/G`; skew concentrating load on one host drives the
+    /// received side toward `total · (G−1)` — the per-layer planner's
+    /// effective-`D` signal (`SchedCtx::plan_input_for_layer`).
+    pub fn bottleneck_remote_tokens(&self, placement: &Placement) -> f64 {
+        let g = placement.gpus();
+        let mut sent = vec![0.0f64; g];
+        let mut recv = vec![0.0f64; g];
+        for (i, row) in self.tokens.iter().enumerate() {
+            for (e, &t) in row.iter().enumerate() {
+                let h = placement.host[e];
+                if h != i {
+                    sent[i] += t;
+                    recv[h] += t;
+                }
+            }
+        }
+        sent.iter().chain(recv.iter()).fold(0.0f64, |a, &b| a.max(b))
+    }
 }
 
 /// Expert placement: which GPU hosts each expert.
@@ -190,5 +211,21 @@ mod tests {
         let p = Placement::round_robin(2, 2);
         // experts 2,3 on GPU 1; uniform 25 tokens each
         assert!((r.tokens_to_gpu(0, 1, &p) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bottleneck_remote_tokens_uniform_and_concentrated() {
+        // uniform: every GPU sends and receives total·(G−1)/G
+        let r = Routing::uniform(8, 8, 100, 2);
+        let p = Placement::round_robin(8, 1);
+        let want = 200.0 * 7.0 / 8.0;
+        assert!((r.bottleneck_remote_tokens(&p) - want).abs() < 1e-9);
+        // everything routed to expert 0: its host receives 7 full rows
+        let mut tokens = vec![vec![0.0; 8]; 8];
+        for row in tokens.iter_mut() {
+            row[0] = 200.0;
+        }
+        let r = Routing { tokens };
+        assert!((r.bottleneck_remote_tokens(&p) - 7.0 * 200.0).abs() < 1e-9);
     }
 }

@@ -139,8 +139,10 @@ impl<'a> Simulator<'a> {
         for l in 0..levels {
             let containers: usize = ml.scaling()[..=l].iter().product();
             for c in 0..containers {
-                caps[level_offset[l] + c * 2] = self.cluster.levels[l].bandwidth;
-                caps[level_offset[l] + c * 2 + 1] = self.cluster.levels[l].bandwidth;
+                // per-container capacity honors heterogeneous link overrides
+                let bw = self.cluster.container_bandwidth(l, c);
+                caps[level_offset[l] + c * 2] = bw;
+                caps[level_offset[l] + c * 2 + 1] = bw;
             }
         }
         let bottleneck = |src: usize, dst: usize| -> Option<usize> { idx.bottleneck_level(src, dst) };
@@ -457,6 +459,33 @@ mod tests {
         let r = Simulator::new(&c).run(&d);
         let want = lat + 2.0 * 10e6 / bw;
         assert!((r.makespan - want).abs() / want < 1e-6, "{} vs {want}", r.makespan);
+    }
+
+    #[test]
+    fn straggler_override_slows_only_its_container() {
+        // 2 DCs × 2 GPUs; DC 0 uplink slowed 4× — flows touching DC 0's
+        // container run at the override rate, DC1↔DC1 loops are untouched
+        let c = presets::dcs_x_gpus(2, 2, 10.0, 128.0).with_override(0, 0, presets::gbps(2.5));
+        let bytes = 10e6;
+        let lat = c.levels[0].latency;
+        let mut d = Dag::new();
+        d.transfer(0, 2, bytes, Tag::A2A, vec![], "via_straggler");
+        let r = Simulator::new(&c).run(&d);
+        let want = lat + bytes / presets::gbps(2.5);
+        assert!((r.makespan - want).abs() / want < 1e-6, "{} vs {want}", r.makespan);
+        // same transfer on the homogeneous cluster is 4× faster on the wire
+        let c_h = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let mut d = Dag::new();
+        d.transfer(0, 2, bytes, Tag::A2A, vec![], "fast");
+        let r_h = Simulator::new(&c_h).run(&d);
+        assert!(r_h.makespan < r.makespan * 0.5, "{} vs {}", r_h.makespan, r.makespan);
+        // reference engine agrees under heterogeneity
+        let mut d = Dag::new();
+        d.transfer(0, 2, bytes, Tag::A2A, vec![], "x");
+        d.transfer(1, 3, bytes, Tag::A2A, vec![], "y");
+        let a = Simulator::new(&c).run(&d);
+        let b = Simulator::reference(&c).run(&d);
+        assert!((a.makespan - b.makespan).abs() < 1e-9 * (1.0 + b.makespan));
     }
 
     #[test]

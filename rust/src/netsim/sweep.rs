@@ -95,6 +95,14 @@ pub struct SweepGrid {
     pub bandwidths_gbps: Vec<f64>,
     /// Data proportions kept on A2A; `1.0` is the pure-EP reference point.
     pub hybrid_ps: Vec<f64>,
+    /// Heterogeneity factors: DC 0's uplink runs at `factor × bw` (1.0 =
+    /// homogeneous, 0.25 = a 4×-slower straggler DC).
+    pub heterogeneity: Vec<f64>,
+    /// Routing-skew drift spans for replanning scenarios
+    /// ([`run_replan_sweep`]); ignored by the plain EP-vs-Hybrid sweep.
+    pub drift_rates: Vec<f64>,
+    /// Iterations per replanning scenario.
+    pub replan_iters: usize,
     pub workload: MoEWorkload,
     /// SR compression ratio applied to migrated expert bytes.
     pub compression_ratio: f64,
@@ -111,6 +119,9 @@ impl SweepGrid {
             dc_counts,
             bandwidths_gbps: vec![1.25, 2.5, 5.0, 10.0],
             hybrid_ps: vec![0.9],
+            heterogeneity: vec![1.0],
+            drift_rates: vec![0.0],
+            replan_iters: 8,
             workload: MoEWorkload {
                 tokens_per_gpu: 8192,
                 hidden: 1024,
@@ -135,19 +146,25 @@ impl SweepGrid {
         for &dcs in &self.dc_counts {
             for &bw in &self.bandwidths_gbps {
                 for &p in &self.hybrid_ps {
-                    let index = out.len();
-                    out.push(Scenario {
-                        index,
-                        dcs,
-                        bw_gbps: bw,
-                        p,
-                        seed: scenario_seed(self.base_seed, index as u64),
-                        workload: self.workload,
-                        compression_ratio: self.compression_ratio,
-                        latency_us: self.latency_us,
-                        mode: self.mode,
-                        engine: self.engine,
-                    });
+                    for &het in &self.heterogeneity {
+                        for &drift in &self.drift_rates {
+                            let index = out.len();
+                            out.push(Scenario {
+                                index,
+                                dcs,
+                                bw_gbps: bw,
+                                p,
+                                heterogeneity: het,
+                                drift,
+                                seed: scenario_seed(self.base_seed, index as u64),
+                                workload: self.workload,
+                                compression_ratio: self.compression_ratio,
+                                latency_us: self.latency_us,
+                                mode: self.mode,
+                                engine: self.engine,
+                            });
+                        }
+                    }
                 }
             }
         }
@@ -163,6 +180,10 @@ pub struct Scenario {
     pub bw_gbps: f64,
     /// data proportion kept on A2A (1.0 = pure EP)
     pub p: f64,
+    /// DC 0's uplink factor (1.0 = homogeneous)
+    pub heterogeneity: f64,
+    /// routing-skew drift span for replanning scenarios
+    pub drift: f64,
     pub seed: u64,
     pub workload: MoEWorkload,
     pub compression_ratio: f64,
@@ -209,13 +230,24 @@ pub fn partition_for_p(cluster: &crate::cluster::ClusterSpec, p: f64) -> Vec<usi
         .collect()
 }
 
+/// DC 0's uplink override realizing a scenario's heterogeneity factor.
+fn apply_heterogeneity(cluster: crate::cluster::ClusterSpec, sc: &Scenario) -> crate::cluster::ClusterSpec {
+    if sc.heterogeneity == 1.0 {
+        cluster
+    } else {
+        let bw = presets::gbps(sc.bw_gbps * sc.heterogeneity);
+        cluster.with_override(0, 0, bw)
+    }
+}
+
 /// Simulate one scenario (EP baseline + hybrid at the scenario's `p`).
 pub fn run_scenario(sc: &Scenario) -> ScenarioOutcome {
     let w = sc.workload;
     let pe_tx = w.pe_bytes() / sc.compression_ratio;
     let (ep, hybrid) = match sc.mode {
         SweepMode::Aggregate => {
-            let cluster = presets::flat_dcs_lat(sc.dcs, sc.bw_gbps, sc.latency_us);
+            let cluster =
+                apply_heterogeneity(presets::flat_dcs_lat(sc.dcs, sc.bw_gbps, sc.latency_us), sc);
             let routing = Routing::uniform(1, 1, 1, 1); // aggregate schedules ignore it
             let ctx = SchedCtx::new(&cluster, &w, &routing);
             let ep_dag = AggregateHybrid::ep().build_iteration(&ctx);
@@ -224,8 +256,10 @@ pub fn run_scenario(sc: &Scenario) -> ScenarioOutcome {
             (sim(&ep_dag), sim(&hy_dag))
         }
         SweepMode::Pairwise { gpus_per_dc, zipf_skew } => {
-            let cluster =
-                presets::dcs_x_gpus(sc.dcs, gpus_per_dc, sc.bw_gbps, presets::PCIE_GBPS);
+            let cluster = apply_heterogeneity(
+                presets::dcs_x_gpus(sc.dcs, gpus_per_dc, sc.bw_gbps, presets::PCIE_GBPS),
+                sc,
+            );
             let g = cluster.total_gpus();
             let experts = g * w.experts_per_gpu;
             let routing = if zipf_skew > 0.0 {
@@ -256,6 +290,82 @@ pub fn run_scenario(sc: &Scenario) -> ScenarioOutcome {
 pub fn run_sweep(grid: &SweepGrid, threads: usize) -> Vec<ScenarioOutcome> {
     let scenarios = grid.scenarios();
     parallel_map(&scenarios, threads, |_, sc| run_scenario(sc))
+}
+
+/// Replanning-over-drift outcome at one grid point: total training time over
+/// [`SweepGrid::replan_iters`] iterations of the drifting trace under each
+/// policy ([`plan::replanner`](crate::plan::replanner)).
+#[derive(Clone, Debug)]
+pub struct ReplanOutcome {
+    pub scenario: Scenario,
+    pub never_secs: f64,
+    pub always_secs: f64,
+    pub adaptive_secs: f64,
+    pub adaptive_switches: usize,
+    pub always_switches: usize,
+}
+
+impl ReplanOutcome {
+    /// Adaptive replanning's speedup over the better static baseline.
+    pub fn adaptive_speedup(&self) -> f64 {
+        self.never_secs.min(self.always_secs) / self.adaptive_secs
+    }
+}
+
+/// Run one replanning scenario: a skew ramp of span `sc.drift` above
+/// `base_skew`, on a `dcs × gpus_per_dc` cluster with the scenario's
+/// heterogeneity, compared across Never/Always/Adaptive policies.
+pub fn run_replan_scenario(
+    sc: &Scenario,
+    gpus_per_dc: usize,
+    base_skew: f64,
+    iters: usize,
+) -> ReplanOutcome {
+    use crate::plan::replanner;
+    use crate::systems::hybrid_ep::MigrationCfg;
+    let cluster = apply_heterogeneity(
+        presets::dcs_x_gpus(sc.dcs, gpus_per_dc, sc.bw_gbps, presets::PCIE_GBPS),
+        sc,
+    );
+    let w = sc.workload;
+    let g = cluster.total_gpus();
+    let trace = replanner::drift_trace(
+        g,
+        g * w.experts_per_gpu,
+        w.tokens_per_gpu,
+        w.k,
+        base_skew,
+        base_skew + sc.drift,
+        sc.drift / 4.0,
+        iters,
+        sc.seed,
+    );
+    let cfg = replanner::ReplanCfg {
+        migration: MigrationCfg { compression_ratio: sc.compression_ratio, ..Default::default() },
+        window: 4,
+    };
+    let [never, always, adaptive] = replanner::compare_policies(&cluster, &w, &trace, &cfg);
+    ReplanOutcome {
+        scenario: sc.clone(),
+        never_secs: never.total_secs,
+        always_secs: always.total_secs,
+        adaptive_secs: adaptive.total_secs,
+        adaptive_switches: adaptive.switches,
+        always_switches: always.switches,
+    }
+}
+
+/// Replanning sweep over the grid (drift and heterogeneity axes): fans
+/// scenarios across `threads` workers, deterministic in grid order.
+pub fn run_replan_sweep(grid: &SweepGrid, threads: usize) -> Vec<ReplanOutcome> {
+    let (gpus_per_dc, base_skew) = match grid.mode {
+        SweepMode::Pairwise { gpus_per_dc, zipf_skew } => (gpus_per_dc, zipf_skew),
+        SweepMode::Aggregate => (1, 0.0),
+    };
+    let scenarios = grid.scenarios();
+    parallel_map(&scenarios, threads, |_, sc| {
+        run_replan_scenario(sc, gpus_per_dc, base_skew, grid.replan_iters)
+    })
 }
 
 /// Aggregate view over a finished sweep.
@@ -397,6 +507,50 @@ mod tests {
             out[1].hybrid.bytes_ag.to_bits(),
             "p=0 and p=0.5 must produce different hybrid schedules"
         );
+    }
+
+    #[test]
+    fn heterogeneity_axis_slows_the_straggler_scenario() {
+        let mut grid = small_grid(SweepMode::Aggregate);
+        grid.dc_counts = vec![8];
+        grid.hybrid_ps = vec![1.0];
+        grid.heterogeneity = vec![1.0, 0.25];
+        let out = run_sweep(&grid, 2);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].scenario.heterogeneity, 1.0);
+        assert_eq!(out[1].scenario.heterogeneity, 0.25);
+        // the straggler DC paces the synchronized A2A: makespan must grow
+        assert!(
+            out[1].ep.makespan > out[0].ep.makespan * 1.5,
+            "straggler should slow EP: {} vs {}",
+            out[0].ep.makespan,
+            out[1].ep.makespan
+        );
+    }
+
+    #[test]
+    fn replan_sweep_is_thread_count_invariant() {
+        let mut grid = small_grid(SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 });
+        grid.dc_counts = vec![2];
+        grid.hybrid_ps = vec![1.0];
+        grid.heterogeneity = vec![1.0, 0.5];
+        grid.drift_rates = vec![2.5];
+        grid.replan_iters = 4;
+        grid.workload.tokens_per_gpu = 1024;
+        grid.workload.ffn = 2048;
+        grid.compression_ratio = 1.0;
+        let serial = run_replan_sweep(&grid, 1);
+        let parallel = run_replan_sweep(&grid, 4);
+        assert_eq!(serial.len(), 2);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.never_secs.to_bits(), p.never_secs.to_bits());
+            assert_eq!(s.always_secs.to_bits(), p.always_secs.to_bits());
+            assert_eq!(s.adaptive_secs.to_bits(), p.adaptive_secs.to_bits());
+            assert_eq!(s.adaptive_switches, p.adaptive_switches);
+            assert!(s.never_secs.is_finite() && s.never_secs > 0.0);
+            assert!(s.adaptive_speedup().is_finite());
+        }
     }
 
     #[test]

@@ -1,0 +1,374 @@
+//! Layered Plan IR: the typed intermediate representation between schedule
+//! *planning* and DAG *lowering* (the plan → lower → simulate pipeline).
+//!
+//! Every [`System`](crate::systems::System) used to hand-build a flat
+//! [`Dag`]; now each system emits a [`Plan`] — per-MoE-layer phases of
+//! **migrate** (AG expert movement), **dispatch** (A2A data routing),
+//! **expert** compute and **combine** (results retracing the dispatch path)
+//! — and one shared lowering pass ([`lower_forward`]) turns the IR into a
+//! `netsim::Dag`. The IR is what per-layer adaptive planning and the
+//! [`replanner`] operate on: a layer's phases carry its own partition-derived
+//! flows, so plans can differ layer to layer (per-layer `p_l`).
+//!
+//! ## Lowering semantics
+//!
+//! * Per layer: optional per-GPU *prologue* compute (fused SREncode), the
+//!   migrate phases, per-GPU pre-expert compute, then the data rounds.
+//! * Migrate phases chain per GPU: a phase's flows depend on the source's
+//!   previous migrate event; arrivals are barriered per destination between
+//!   phases (hierarchical AG). Every migrate arrival gates every expert
+//!   compute on its destination (experts must be present before compute).
+//! * A *round* is one pipeline chunk: its dispatch phases chain per GPU
+//!   starting from pre-expert compute (hierarchical A2A relays through
+//!   mirrors); expert compute waits for the GPU's dispatch stage, its
+//!   pre-expert compute and its migrate arrivals; combine retraces the
+//!   dispatch phases in reverse with endpoints swapped. Rounds are mutually
+//!   independent (chunked A2A/compute overlap à la Tutel).
+//! * Zero-cost barriers synchronize phase boundaries; they change neither
+//!   traffic accounting nor makespan.
+
+pub mod replanner;
+
+use crate::netsim::{Dag, Tag, TaskId};
+
+/// One point-to-point transfer within a phase.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Flow {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: f64,
+}
+
+/// One communication phase: a set of flows released together, plus an
+/// optional per-flow setup compute on the source (message/connection setup,
+/// Table VII frequency semantics).
+#[derive(Clone, Debug, Default)]
+pub struct CommPhase {
+    pub flows: Vec<Flow>,
+    /// Per-flow setup compute seconds on the source, serialized before the
+    /// transfer; `0.0` emits no setup task.
+    pub setup_secs: f64,
+    pub label: &'static str,
+}
+
+impl CommPhase {
+    pub fn new(flows: Vec<Flow>, label: &'static str) -> Self {
+        Self { flows, setup_secs: 0.0, label }
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.flows.iter().map(|f| f.bytes).sum()
+    }
+}
+
+/// Expert-migration (AG) schedule for one layer.
+#[derive(Clone, Debug, Default)]
+pub struct MigratePlan {
+    /// Per-GPU prologue compute (e.g. fused SREncode) gated on layer entry;
+    /// the first migrate phase's flows depend on it. `None` = no prologue.
+    pub prologue_secs: Option<Vec<f64>>,
+    pub prologue_label: &'static str,
+    /// Sequential AG phases, innermost level first (hierarchical AG:
+    /// phase 0 gathers within the innermost domains, later phases carry the
+    /// accumulated holdings across outer levels).
+    pub phases: Vec<CommPhase>,
+}
+
+impl MigratePlan {
+    /// No expert movement this layer.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn ag_bytes(&self) -> f64 {
+        self.phases.iter().map(|p| p.total_bytes()).sum()
+    }
+}
+
+/// One data round (pipeline chunk): hierarchical dispatch, expert compute,
+/// combine retracing dispatch in reverse.
+#[derive(Clone, Debug)]
+pub struct Round {
+    /// Sequential dispatch phases (plain EP has exactly one; hierarchical
+    /// HybridEP has one per diverging level).
+    pub dispatch: Vec<CommPhase>,
+    /// Per-GPU expert compute seconds for this round (includes fused
+    /// SRDecode when parameter-efficient migration is on).
+    pub expert_secs: Vec<f64>,
+}
+
+/// One MoE layer of the plan.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    pub migrate: MigratePlan,
+    /// Per-GPU pre-expert compute seconds.
+    pub pre_secs: Vec<f64>,
+    pub rounds: Vec<Round>,
+}
+
+/// The full layered plan for one forward pass.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub gpus: usize,
+    pub layers: Vec<LayerPlan>,
+}
+
+impl Plan {
+    /// Static A2A traffic the plan will move (dispatch + combine).
+    pub fn a2a_bytes(&self) -> f64 {
+        self.layers
+            .iter()
+            .flat_map(|l| l.rounds.iter())
+            .flat_map(|r| r.dispatch.iter())
+            .map(|p| 2.0 * p.total_bytes())
+            .sum()
+    }
+
+    /// Static AG traffic the plan will move.
+    pub fn ag_bytes(&self) -> f64 {
+        self.layers.iter().map(|l| l.migrate.ag_bytes()).sum()
+    }
+
+    /// Total expert-compute seconds across all GPUs and layers.
+    pub fn expert_secs(&self) -> f64 {
+        self.layers
+            .iter()
+            .flat_map(|l| l.rounds.iter())
+            .map(|r| r.expert_secs.iter().sum::<f64>())
+            .sum()
+    }
+}
+
+/// Shared lowering: Plan IR → task DAG for one forward pass. `entry[g]` are
+/// the per-GPU entry dependencies; returns the per-GPU exit tasks.
+pub fn lower_forward(plan: &Plan, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
+    assert_eq!(entry.len(), plan.gpus, "entry arity must match plan GPUs");
+    let mut cur: Vec<TaskId> = entry.to_vec();
+    for layer in &plan.layers {
+        cur = lower_layer(layer, plan.gpus, dag, &cur);
+    }
+    cur
+}
+
+fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
+    assert_eq!(lp.pre_secs.len(), g, "pre_secs arity");
+    // prologue (fused SREncode)
+    let prologue: Vec<TaskId> = match &lp.migrate.prologue_secs {
+        Some(secs) => {
+            assert_eq!(secs.len(), g, "prologue arity");
+            (0..g)
+                .map(|m| dag.compute(m, secs[m], vec![entry[m]], lp.migrate.prologue_label))
+                .collect()
+        }
+        None => entry.to_vec(),
+    };
+
+    // migrate phases: chained per-GPU stage, arrivals gate every expert
+    let mut mig_stage = prologue;
+    let mut mig_arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+    for phase in &lp.migrate.phases {
+        if phase.flows.is_empty() {
+            continue;
+        }
+        let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+        for f in &phase.flows {
+            let mut dep = mig_stage[f.src];
+            if phase.setup_secs > 0.0 {
+                dep = dag.compute(f.src, phase.setup_secs, vec![dep], "ag_setup");
+            }
+            let t = dag.transfer(f.src, f.dst, f.bytes, Tag::AG, vec![dep], phase.label);
+            arrivals[f.dst].push(t);
+            mig_arrivals[f.dst].push(t);
+        }
+        for m in 0..g {
+            if !arrivals[m].is_empty() {
+                let mut deps = std::mem::take(&mut arrivals[m]);
+                deps.push(mig_stage[m]);
+                mig_stage[m] = dag.barrier(deps, "ag_phase");
+            }
+        }
+    }
+
+    // pre-expert compute
+    let pre: Vec<TaskId> =
+        (0..g).map(|m| dag.compute(m, lp.pre_secs[m], vec![entry[m]], "pre_expert")).collect();
+
+    // data rounds
+    let mut exits: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+    for round in &lp.rounds {
+        assert_eq!(round.expert_secs.len(), g, "expert_secs arity");
+        let mut stage = pre.clone();
+        for phase in &round.dispatch {
+            if phase.flows.is_empty() {
+                continue;
+            }
+            let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+            for f in &phase.flows {
+                let mut dep = stage[f.src];
+                if phase.setup_secs > 0.0 {
+                    dep = dag.compute(f.src, phase.setup_secs, vec![dep], "a2a_setup");
+                }
+                let t = dag.transfer(f.src, f.dst, f.bytes, Tag::A2A, vec![dep], phase.label);
+                arrivals[f.dst].push(t);
+            }
+            for m in 0..g {
+                if !arrivals[m].is_empty() {
+                    let mut deps = std::mem::take(&mut arrivals[m]);
+                    deps.push(stage[m]);
+                    stage[m] = dag.barrier(deps, "disp_phase");
+                }
+            }
+        }
+        // expert compute: dispatch stage + own pre + migrate arrivals
+        let expert: Vec<TaskId> = (0..g)
+            .map(|m| {
+                let mut deps = vec![stage[m], pre[m]];
+                deps.extend(mig_arrivals[m].iter().copied());
+                dag.compute(m, round.expert_secs[m], deps, "expert")
+            })
+            .collect();
+        // combine: retrace dispatch phases in reverse with swapped endpoints
+        let mut cstage = expert.clone();
+        for phase in round.dispatch.iter().rev() {
+            if phase.flows.is_empty() {
+                continue;
+            }
+            let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+            for f in &phase.flows {
+                let t =
+                    dag.transfer(f.dst, f.src, f.bytes, Tag::A2A, vec![cstage[f.dst]], "combine");
+                arrivals[f.src].push(t);
+            }
+            for m in 0..g {
+                if !arrivals[m].is_empty() {
+                    let mut deps = std::mem::take(&mut arrivals[m]);
+                    deps.push(cstage[m]);
+                    cstage[m] = dag.barrier(deps, "comb_phase");
+                }
+            }
+        }
+        for m in 0..g {
+            exits[m].push(cstage[m]);
+            exits[m].push(expert[m]);
+        }
+    }
+
+    // layer end
+    (0..g)
+        .map(|m| {
+            let mut deps = std::mem::take(&mut exits[m]);
+            deps.push(pre[m]);
+            dag.barrier(deps, "layer_end")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::netsim::{Simulator, TaskKind};
+
+    fn two_gpu_layer() -> Plan {
+        Plan {
+            gpus: 2,
+            layers: vec![LayerPlan {
+                migrate: MigratePlan {
+                    prologue_secs: Some(vec![0.1, 0.1]),
+                    prologue_label: "sr_encode",
+                    phases: vec![CommPhase::new(
+                        vec![Flow { src: 0, dst: 1, bytes: 5e6 }],
+                        "ag",
+                    )],
+                },
+                pre_secs: vec![0.2, 0.2],
+                rounds: vec![Round {
+                    dispatch: vec![CommPhase::new(
+                        vec![Flow { src: 1, dst: 0, bytes: 3e6 }],
+                        "dispatch",
+                    )],
+                    expert_secs: vec![0.3, 0.4],
+                }],
+            }],
+        }
+    }
+
+    #[test]
+    fn accounting_matches_between_ir_and_dag() {
+        let plan = two_gpu_layer();
+        let mut dag = Dag::new();
+        let start = dag.barrier(vec![], "s");
+        let exits = lower_forward(&plan, &mut dag, &[start, start]);
+        assert_eq!(exits.len(), 2);
+        assert_eq!(dag.traffic_by_tag(Tag::AG), plan.ag_bytes());
+        assert_eq!(dag.traffic_by_tag(Tag::A2A), plan.a2a_bytes());
+        let expert_total: f64 = dag
+            .tasks
+            .iter()
+            .filter(|t| t.label == "expert")
+            .map(|t| match t.kind {
+                TaskKind::Compute { seconds, .. } => seconds,
+                _ => 0.0,
+            })
+            .sum();
+        assert!((expert_total - plan.expert_secs()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn combine_retraces_dispatch_in_reverse() {
+        let plan = two_gpu_layer();
+        let mut dag = Dag::new();
+        let start = dag.barrier(vec![], "s");
+        lower_forward(&plan, &mut dag, &[start, start]);
+        // dispatch was 1 → 0, so combine must be 0 → 1 with equal bytes
+        let combine: Vec<_> = dag.tasks.iter().filter(|t| t.label == "combine").collect();
+        assert_eq!(combine.len(), 1);
+        match combine[0].kind {
+            TaskKind::Transfer { src, dst, bytes, tag } => {
+                assert_eq!((src, dst), (0, 1));
+                assert_eq!(bytes, 3e6);
+                assert_eq!(tag, Tag::A2A);
+            }
+            _ => panic!("combine must be a transfer"),
+        }
+    }
+
+    #[test]
+    fn lowered_plan_simulates() {
+        let plan = two_gpu_layer();
+        let mut dag = Dag::new();
+        let start = dag.barrier(vec![], "s");
+        let exits = lower_forward(&plan, &mut dag, &[start, start]);
+        dag.barrier(exits, "end");
+        let cluster = presets::dcs_x_gpus(2, 1, 10.0, 128.0);
+        let r = Simulator::new(&cluster).run(&dag);
+        assert!(r.makespan.is_finite() && r.makespan > 0.0);
+        // expert on GPU 0 waits for its migrate arrival (5 MB cross-DC)
+        let bw = cluster.levels[0].bandwidth;
+        let lat = cluster.levels[0].latency;
+        assert!(r.makespan >= 0.1 + lat + 5e6 / bw + 0.3);
+    }
+
+    #[test]
+    fn empty_phases_and_zero_prologue_are_harmless() {
+        let plan = Plan {
+            gpus: 2,
+            layers: vec![LayerPlan {
+                migrate: MigratePlan::none(),
+                pre_secs: vec![0.5, 0.5],
+                rounds: vec![Round {
+                    dispatch: vec![CommPhase::new(Vec::new(), "dispatch")],
+                    expert_secs: vec![0.25, 0.25],
+                }],
+            }],
+        };
+        let mut dag = Dag::new();
+        let start = dag.barrier(vec![], "s");
+        let exits = lower_forward(&plan, &mut dag, &[start, start]);
+        dag.barrier(exits, "end");
+        let cluster = presets::cluster_s();
+        let r = Simulator::new(&cluster).run(&dag);
+        assert!((r.makespan - 0.75).abs() < 1e-9, "pre + expert serialize: {}", r.makespan);
+        assert_eq!(r.bytes_a2a, 0.0);
+    }
+}

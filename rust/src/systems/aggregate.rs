@@ -9,7 +9,7 @@
 //! paper uses for its SimAI study (one GPU per DC, §III).
 
 use super::{SchedCtx, System};
-use crate::netsim::{Dag, Tag, TaskId};
+use crate::plan::{CommPhase, Flow, LayerPlan, MigratePlan, Plan, Round};
 
 /// Aggregate HybridEP at a single level: domain size `s_ed` over `G` flat
 /// workers; `s_ed = 1` is aggregate vanilla EP.
@@ -78,7 +78,7 @@ impl System for AggregateHybrid {
         }
     }
 
-    fn build_forward(&self, ctx: &SchedCtx, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
+    fn plan_forward(&self, ctx: &SchedCtx) -> Plan {
         let g = ctx.gpus();
         assert!(g % self.s_ed == 0, "S_ED must divide G");
         let w = ctx.workload;
@@ -98,68 +98,50 @@ impl System for AggregateHybrid {
             * if self.s_ed == 1 { (g - 1) as f64 } else { (domains - 1) as f64 };
         let ag_setup = self.msg_overhead_secs * (self.s_ed - 1) as f64;
 
-        let mut cur: Vec<TaskId> = entry.to_vec();
-        for _layer in 0..w.moe_layers {
-            // AG prefetch (ring within domain), overlaps pre-expert compute
-            let ag: Vec<Option<TaskId>> = (0..g)
-                .map(|i| {
-                    if ag_bytes > 0.0 {
-                        let dom = i / self.s_ed;
-                        let off = i % self.s_ed;
-                        let dst = dom * self.s_ed + (off + 1) % self.s_ed;
-                        let setup = dag.compute(i, ag_setup, vec![cur[i]], "ag_setup");
-                        Some(dag.transfer(i, dst, ag_bytes, Tag::AG, vec![setup], "ag"))
-                    } else {
-                        None
-                    }
-                })
-                .collect();
-            let pre: Vec<TaskId> = (0..g)
-                .map(|i| dag.compute(i, ctx.pre_expert_secs(), vec![cur[i]], "pre_expert"))
-                .collect();
-            // aggregate A2A: ring shift to the same-offset mirror in the next domain
-            let disp: Vec<Option<TaskId>> = (0..g)
-                .map(|i| {
-                    if a2a_bytes > 0.0 && domains > 1 {
-                        let dom = i / self.s_ed;
-                        let off = i % self.s_ed;
-                        let dst = ((dom + 1) % domains) * self.s_ed + off;
-                        let setup = dag.compute(i, a2a_setup, vec![pre[i]], "a2a_setup");
-                        Some(dag.transfer(i, dst, a2a_bytes, Tag::A2A, vec![setup], "dispatch"))
-                    } else {
-                        None
-                    }
-                })
-                .collect();
-            let expert: Vec<TaskId> = (0..g)
-                .map(|i| {
-                    let mut deps = vec![pre[i]];
-                    if let Some(t) = ag[i] {
-                        deps.push(t);
-                    }
-                    if let Some(t) = disp[i] {
-                        deps.push(t);
-                    }
-                    dag.compute(i, expert_secs, deps, "expert")
-                })
-                .collect();
-            let comb: Vec<TaskId> = (0..g)
-                .map(|i| {
-                    if a2a_bytes > 0.0 && domains > 1 {
-                        let dom = i / self.s_ed;
-                        let off = i % self.s_ed;
-                        let dst = ((dom + domains - 1) % domains) * self.s_ed + off;
-                        dag.transfer(i, dst, a2a_bytes, Tag::A2A, vec![expert[i]], "combine")
-                    } else {
-                        expert[i]
-                    }
-                })
-                .collect();
-            cur = (0..g)
-                .map(|i| dag.barrier(vec![comb[i], expert[i]], "layer_end"))
-                .collect();
+        // AG prefetch: ring within the domain, overlaps pre-expert compute
+        let mut ag_flows = Vec::new();
+        if ag_bytes > 0.0 {
+            for i in 0..g {
+                let dom = i / self.s_ed;
+                let off = i % self.s_ed;
+                let dst = dom * self.s_ed + (off + 1) % self.s_ed;
+                ag_flows.push(Flow { src: i, dst, bytes: ag_bytes });
+            }
         }
-        cur
+        // aggregate A2A: ring shift to the same-offset mirror in the next
+        // domain (combine is the lowering's reverse retrace: the mirror in
+        // the previous domain)
+        let mut disp_flows = Vec::new();
+        if a2a_bytes > 0.0 && domains > 1 {
+            for i in 0..g {
+                let dom = i / self.s_ed;
+                let off = i % self.s_ed;
+                let dst = ((dom + 1) % domains) * self.s_ed + off;
+                disp_flows.push(Flow { src: i, dst, bytes: a2a_bytes });
+            }
+        }
+
+        let layer = LayerPlan {
+            migrate: MigratePlan {
+                prologue_secs: None,
+                prologue_label: "",
+                phases: if ag_flows.is_empty() {
+                    Vec::new()
+                } else {
+                    vec![CommPhase { flows: ag_flows, setup_secs: ag_setup, label: "ag" }]
+                },
+            },
+            pre_secs: vec![ctx.pre_expert_secs(); g],
+            rounds: vec![Round {
+                dispatch: if disp_flows.is_empty() {
+                    Vec::new()
+                } else {
+                    vec![CommPhase { flows: disp_flows, setup_secs: a2a_setup, label: "dispatch" }]
+                },
+                expert_secs: vec![expert_secs; g],
+            }],
+        };
+        Plan { gpus: g, layers: vec![layer; w.moe_layers] }
     }
 }
 

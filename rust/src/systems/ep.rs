@@ -11,7 +11,7 @@
 
 use super::{SchedCtx, System};
 use crate::moe::routing::Placement;
-use crate::netsim::{Dag, Tag, TaskId};
+use crate::plan::{CommPhase, Flow, LayerPlan, MigratePlan, Plan, Round};
 
 /// Blocking EP baseline.
 #[derive(Clone, Copy, Debug, Default)]
@@ -22,8 +22,8 @@ impl System for VanillaEp {
         "VanillaEP"
     }
 
-    fn build_forward(&self, ctx: &SchedCtx, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
-        build_pipelined(ctx, dag, entry, 1, None)
+    fn plan_forward(&self, ctx: &SchedCtx) -> Plan {
+        plan_pipelined(ctx, 1, None)
     }
 }
 
@@ -45,96 +45,66 @@ impl System for Tutel {
         "Tutel"
     }
 
-    fn build_forward(&self, ctx: &SchedCtx, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
-        build_pipelined(ctx, dag, entry, self.chunks, None)
+    fn plan_forward(&self, ctx: &SchedCtx) -> Plan {
+        plan_pipelined(ctx, self.chunks, None)
     }
 }
 
-/// Shared EP layer builder, parameterized by pipeline degree and an optional
-/// expert placement (SmartMoE reuses it with a searched placement).
-pub(crate) fn build_pipelined(
-    ctx: &SchedCtx,
-    dag: &mut Dag,
-    entry: &[TaskId],
-    chunks: usize,
-    placement: Option<&Placement>,
-) -> Vec<TaskId> {
+/// Shared EP layer planner, parameterized by pipeline degree and an optional
+/// expert placement (SmartMoE reuses it with a searched placement). Each
+/// pipeline chunk becomes one Plan-IR round: a single dispatch phase, expert
+/// compute on arrivals, combine retracing the dispatch.
+pub(crate) fn plan_pipelined(ctx: &SchedCtx, chunks: usize, placement: Option<&Placement>) -> Plan {
     let g = ctx.gpus();
     let default_placement = Placement::round_robin(g, ctx.workload.experts_per_gpu);
     let placement = placement.unwrap_or(&default_placement);
-    let mut cur: Vec<TaskId> = entry.to_vec();
+    let frac = 1.0 / chunks as f64;
 
-    for _layer in 0..ctx.workload.moe_layers {
-        // pre-expert compute
-        let pre: Vec<TaskId> = (0..g)
-            .map(|i| dag.compute(i, ctx.pre_expert_secs(), vec![cur[i]], "pre_expert"))
-            .collect();
-
-        // token matrix: tokens[i][j] routed from GPU i to experts hosted on j
-        let mut exit_deps: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+    let mut layers = Vec::new();
+    for layer in 0..ctx.workload.moe_layers {
+        let routing = ctx.routing_for(layer);
+        let mut rounds = Vec::new();
         for _c in 0..chunks {
-            let frac = 1.0 / chunks as f64;
-            // dispatch
-            let mut arrive: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+            // token matrix: tokens[i][j] routed from GPU i to experts on j
+            let mut flows = Vec::new();
             for i in 0..g {
                 for j in 0..g {
-                    let tokens = ctx.routing.tokens_to_gpu(i, j, placement) * frac;
+                    let tokens = routing.tokens_to_gpu(i, j, placement) * frac;
                     if i == j || tokens <= 0.0 {
                         continue;
                     }
-                    let t = dag.transfer(
-                        i,
-                        j,
-                        ctx.token_bytes(tokens),
-                        Tag::A2A,
-                        vec![pre[i]],
-                        "dispatch",
-                    );
-                    arrive[j].push(t);
+                    flows.push(Flow { src: i, dst: j, bytes: ctx.token_bytes(tokens) });
                 }
             }
             // expert compute on each host (local + arrived tokens)
-            for j in 0..g {
-                let total_tokens: f64 =
-                    (0..g).map(|i| ctx.routing.tokens_to_gpu(i, j, placement)).sum::<f64>() * frac;
-                let mut deps = arrive[j].clone();
-                deps.push(pre[j]);
-                let e = dag.compute(j, ctx.expert_secs(total_tokens), deps, "expert");
-                // combine: send results back to each source
-                for i in 0..g {
-                    let tokens = ctx.routing.tokens_to_gpu(i, j, placement) * frac;
-                    if i == j || tokens <= 0.0 {
-                        exit_deps[i].push(e);
-                        continue;
-                    }
-                    let t = dag.transfer(
-                        j,
-                        i,
-                        ctx.token_bytes(tokens),
-                        Tag::A2A,
-                        vec![e],
-                        "combine",
-                    );
-                    exit_deps[i].push(t);
-                }
-            }
+            let expert_secs: Vec<f64> = (0..g)
+                .map(|j| {
+                    let total: f64 = (0..g)
+                        .map(|i| routing.tokens_to_gpu(i, j, placement))
+                        .sum::<f64>()
+                        * frac;
+                    ctx.expert_secs(total)
+                })
+                .collect();
+            rounds.push(Round {
+                dispatch: vec![CommPhase::new(flows, "dispatch")],
+                expert_secs,
+            });
         }
-        cur = (0..g)
-            .map(|i| {
-                let mut deps = std::mem::take(&mut exit_deps[i]);
-                deps.push(pre[i]);
-                dag.barrier(deps, "layer_end")
-            })
-            .collect();
+        layers.push(LayerPlan {
+            migrate: MigratePlan::none(),
+            pre_secs: vec![ctx.pre_expert_secs(); g],
+            rounds,
+        });
     }
-    cur
+    Plan { gpus: g, layers }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::netsim::{Dag, Simulator, Tag};
     use crate::systems::testutil::small_ctx_parts;
-    use crate::netsim::Simulator;
 
     #[test]
     fn pipelining_helps_or_matches() {

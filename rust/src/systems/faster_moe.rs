@@ -7,7 +7,7 @@
 
 use super::{SchedCtx, System};
 use crate::moe::routing::Placement;
-use crate::netsim::{Dag, Tag, TaskId};
+use crate::plan::{CommPhase, Flow, LayerPlan, MigratePlan, Plan, Round};
 
 #[derive(Clone, Copy, Debug)]
 pub struct FasterMoe {
@@ -41,7 +41,7 @@ impl System for FasterMoe {
         "FasterMoE"
     }
 
-    fn build_forward(&self, ctx: &SchedCtx, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
+    fn plan_forward(&self, ctx: &SchedCtx) -> Plan {
         let g = ctx.gpus();
         let placement = Placement::round_robin(g, ctx.workload.experts_per_gpu);
         let hot = self.hot_experts(ctx);
@@ -53,106 +53,71 @@ impl System for FasterMoe {
             v
         };
         let pe = ctx.workload.pe_bytes();
-        let mut cur: Vec<TaskId> = entry.to_vec();
+        let frac = 1.0 / self.chunks as f64;
 
-        for _layer in 0..ctx.workload.moe_layers {
+        let mut layers = Vec::new();
+        for layer in 0..ctx.workload.moe_layers {
+            let routing = ctx.routing_for(layer);
             // broadcast shadowed experts (overlaps pre-expert compute)
-            let mut shadow_arrive: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+            let mut shadow = Vec::new();
             for &e in &hot {
                 let h = placement.host[e];
                 for dst in 0..g {
-                    if dst == h {
-                        continue;
+                    if dst != h {
+                        shadow.push(Flow { src: h, dst, bytes: pe });
                     }
-                    let t = dag.transfer(h, dst, pe, Tag::AG, vec![cur[h]], "shadow");
-                    shadow_arrive[dst].push(t);
                 }
             }
-            let pre: Vec<TaskId> = (0..g)
-                .map(|i| dag.compute(i, ctx.pre_expert_secs(), vec![cur[i]], "pre_expert"))
-                .collect();
-
-            let frac = 1.0 / self.chunks as f64;
-            let mut exit_deps: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+            let migrate = MigratePlan {
+                prologue_secs: None,
+                prologue_label: "",
+                phases: if shadow.is_empty() {
+                    Vec::new()
+                } else {
+                    vec![CommPhase::new(shadow, "shadow")]
+                },
+            };
+            // cold tokens route as chunked A2A; hot tokens compute locally
+            let cold_to = |i: usize, j: usize| -> f64 {
+                placement
+                    .experts_on(j)
+                    .iter()
+                    .filter(|&&e| !is_hot[e])
+                    .map(|&e| routing.tokens[i][e])
+                    .sum::<f64>()
+            };
+            let mut rounds = Vec::new();
             for _c in 0..self.chunks {
-                let mut arrive: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+                let mut flows = Vec::new();
                 for i in 0..g {
                     for j in 0..g {
-                        // cold tokens only: hot experts compute at the source
-                        let tokens: f64 = placement
-                            .experts_on(j)
-                            .iter()
-                            .filter(|&&e| !is_hot[e])
-                            .map(|&e| ctx.routing.tokens[i][e])
-                            .sum::<f64>()
-                            * frac;
+                        let tokens = cold_to(i, j) * frac;
                         if i == j || tokens <= 0.0 {
                             continue;
                         }
-                        let t = dag.transfer(
-                            i,
-                            j,
-                            ctx.token_bytes(tokens),
-                            Tag::A2A,
-                            vec![pre[i]],
-                            "dispatch",
-                        );
-                        arrive[j].push(t);
+                        flows.push(Flow { src: i, dst: j, bytes: ctx.token_bytes(tokens) });
                     }
                 }
-                for j in 0..g {
-                    // cold arrivals + own hot-expert tokens (computed locally)
-                    let cold: f64 = (0..g)
-                        .map(|i| {
-                            placement
-                                .experts_on(j)
-                                .iter()
-                                .filter(|&&e| !is_hot[e])
-                                .map(|&e| ctx.routing.tokens[i][e])
-                                .sum::<f64>()
-                        })
-                        .sum::<f64>()
-                        * frac;
-                    let local_hot: f64 =
-                        hot.iter().map(|&e| ctx.routing.tokens[j][e]).sum::<f64>() * frac;
-                    let mut deps = arrive[j].clone();
-                    deps.push(pre[j]);
-                    deps.extend(shadow_arrive[j].iter().copied());
-                    let ex =
-                        dag.compute(j, ctx.expert_secs(cold + local_hot), deps, "expert");
-                    for i in 0..g {
-                        let tokens: f64 = placement
-                            .experts_on(j)
-                            .iter()
-                            .filter(|&&e| !is_hot[e])
-                            .map(|&e| ctx.routing.tokens[i][e])
-                            .sum::<f64>()
-                            * frac;
-                        if i == j || tokens <= 0.0 {
-                            exit_deps[i].push(ex);
-                            continue;
-                        }
-                        let t = dag.transfer(
-                            j,
-                            i,
-                            ctx.token_bytes(tokens),
-                            Tag::A2A,
-                            vec![ex],
-                            "combine",
-                        );
-                        exit_deps[i].push(t);
-                    }
-                }
+                let expert_secs: Vec<f64> = (0..g)
+                    .map(|j| {
+                        let cold: f64 = (0..g).map(|i| cold_to(i, j)).sum::<f64>() * frac;
+                        let local_hot: f64 =
+                            hot.iter().map(|&e| routing.tokens[j][e]).sum::<f64>() * frac;
+                        ctx.expert_secs(cold + local_hot)
+                    })
+                    .collect();
+                rounds.push(Round {
+                    dispatch: vec![CommPhase::new(flows, "dispatch")],
+                    expert_secs,
+                });
             }
-            cur = (0..g)
-                .map(|i| {
-                    let mut deps = std::mem::take(&mut exit_deps[i]);
-                    deps.push(pre[i]);
-                    dag.barrier(deps, "layer_end")
-                })
-                .collect();
+            layers.push(LayerPlan {
+                migrate,
+                pre_secs: vec![ctx.pre_expert_secs(); g],
+                rounds,
+            });
         }
-        cur
+        Plan { gpus: g, layers }
     }
 }
 
@@ -161,6 +126,7 @@ mod tests {
     use super::*;
     use crate::cluster::presets;
     use crate::moe::{MoEWorkload, Routing};
+    use crate::netsim::Tag;
     use crate::systems::ep::VanillaEp;
 
     fn skewed_parts() -> (crate::cluster::ClusterSpec, MoEWorkload, Routing) {

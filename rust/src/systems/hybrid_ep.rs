@@ -24,9 +24,9 @@
 
 use super::{SchedCtx, System};
 use crate::cluster::Multilevel;
-use crate::model::solver::{plan_multilevel, PlanInput};
-use crate::moe::routing::Placement;
-use crate::netsim::{Dag, Tag, TaskId};
+use crate::model::solver::plan_multilevel;
+use crate::moe::routing::{Placement, Routing};
+use crate::plan::{CommPhase, Flow, LayerPlan, MigratePlan, Plan, Round};
 use crate::topology::DomainPartition;
 
 /// Parameter-efficient migration settings (§IV-B).
@@ -88,15 +88,24 @@ impl HybridEp {
         }
     }
 
-    /// Resolve the domain partition (solve unless explicit).
+    /// Resolve the domain partition for the first layer (solve unless
+    /// explicit) — the single-partition view callers use when no per-layer
+    /// trace is in play.
     pub fn resolve_partition(&self, ctx: &SchedCtx) -> DomainPartition {
+        self.resolve_partition_for_layer(ctx, 0)
+    }
+
+    /// Resolve the domain partition for one layer. With an explicit
+    /// `partition` every layer gets it; otherwise the stream-model solver
+    /// runs on the layer's own routing (per-layer `p_l`): skewed layers see
+    /// a larger effective `D` and solve to bigger expert domains.
+    pub fn resolve_partition_for_layer(&self, ctx: &SchedCtx, layer: usize) -> DomainPartition {
         let ml = ctx.cluster.multilevel();
         match &self.partition {
             Some(sizes) => DomainPartition::new(&ml, sizes.clone())
                 .expect("explicit partition incompatible with cluster"),
             None => {
-                let input: PlanInput =
-                    ctx.workload.plan_input(&ctx.gpu, ctx.gpus(), self.pe_tx_bytes(ctx));
+                let input = ctx.plan_input_for_layer(layer, self.pe_tx_bytes(ctx));
                 let plan = plan_multilevel(ctx.cluster, &input).expect("planner failed");
                 plan.partition(&ml).expect("planner produced invalid partition")
             }
@@ -134,210 +143,197 @@ fn next_hop(
     ml.index_of(&loc)
 }
 
+/// Movement derived from one layer's partition + routing: hierarchical AG
+/// phases (innermost level first) and hierarchical A2A dispatch phases
+/// (outermost level first), plus the resulting per-GPU steady state.
+struct LayerMovement {
+    /// per AG phase: (src, dst, #source-GPUs' experts moved)
+    ag_flows: Vec<Vec<(usize, usize, usize)>>,
+    /// holdings[m] = #source GPUs whose experts m holds after AG
+    holdings: Vec<usize>,
+    /// per dispatch phase: (src, dst, tokens)
+    disp_flows: Vec<Vec<(usize, usize, f64)>>,
+    /// tokens computed at each GPU after all hops
+    compute_tokens: Vec<f64>,
+}
+
+fn layer_movement(
+    ml: &Multilevel,
+    part: &DomainPartition,
+    placement: &Placement,
+    routing: &Routing,
+    locs: &[Vec<usize>],
+) -> LayerMovement {
+    let g = ml.total_gpus();
+    let nlevels = ml.levels();
+
+    // AG: innermost level first
+    let mut holdings: Vec<usize> = vec![1; g];
+    let mut ag_flows: Vec<Vec<(usize, usize, usize)>> = Vec::new();
+    for l in (0..nlevels).rev() {
+        let s = part.size_at(l);
+        if s <= 1 {
+            ag_flows.push(Vec::new());
+            continue;
+        }
+        let mut phase = Vec::new();
+        let mut new_holdings = holdings.clone();
+        for m in 0..g {
+            // AG peers at level l: same domain, different offset, same other coords
+            let dom = domain_coord(part, &locs[m], l);
+            let off = locs[m][l] % s;
+            for o in 0..s {
+                if o == off {
+                    continue;
+                }
+                let mut loc = locs[m].clone();
+                loc[l] = dom * s + o;
+                let peer = ml.index_of(&loc);
+                phase.push((peer, m, holdings[peer]));
+                new_holdings[m] += holdings[peer];
+            }
+        }
+        holdings = new_holdings;
+        ag_flows.push(phase);
+    }
+
+    // A2A: token bookkeeping. hold[m][e] = tokens at m destined for expert e
+    let total_experts = placement.total_experts();
+    let mut hold: Vec<Vec<f64>> = (0..g).map(|m| routing.tokens[m].clone()).collect();
+    let mut disp_flows: Vec<Vec<(usize, usize, f64)>> = Vec::new();
+    for l in 0..nlevels {
+        let mut phase: Vec<(usize, usize, f64)> = Vec::new();
+        let mut moves: Vec<(usize, usize, usize, f64)> = Vec::new(); // (src,dst,expert,tokens)
+        for m in 0..g {
+            for e in 0..total_experts {
+                let t = hold[m][e];
+                if t <= 0.0 {
+                    continue;
+                }
+                let h = placement.host[e];
+                if diverge_level(ml, part, &locs[m], &locs[h]) == Some(l) {
+                    let j = next_hop(ml, part, &locs[m], &locs[h], l);
+                    moves.push((m, j, e, t));
+                }
+            }
+        }
+        let mut agg: std::collections::BTreeMap<(usize, usize), f64> = Default::default();
+        for &(m, j, e, t) in &moves {
+            hold[m][e] -= t;
+            hold[j][e] += t;
+            *agg.entry((m, j)).or_default() += t;
+        }
+        phase.extend(agg.into_iter().map(|((m, j), t)| (m, j, t)));
+        disp_flows.push(phase);
+    }
+    let compute_tokens: Vec<f64> = hold.iter().map(|h| h.iter().sum()).collect();
+
+    LayerMovement { ag_flows, holdings, disp_flows, compute_tokens }
+}
+
 impl System for HybridEp {
     fn name(&self) -> &'static str {
         "HybridEP"
     }
 
-    fn build_forward(&self, ctx: &SchedCtx, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
+    fn plan_forward(&self, ctx: &SchedCtx) -> Plan {
         let g = ctx.gpus();
         let ml = ctx.cluster.multilevel();
-        let nlevels = ml.levels();
-        let part = self.resolve_partition(ctx);
         let placement = Placement::round_robin(g, ctx.workload.experts_per_gpu);
         let locs: Vec<Vec<usize>> = (0..g).map(|m| ml.locate(m)).collect();
         let pe_tx = self.pe_tx_bytes(ctx);
         let pe_full = ctx.workload.pe_bytes();
         let n_exp = ctx.workload.experts_per_gpu;
-
-        // ---- static per-layer movement plan (same every layer) -----------
-        // AG: innermost level first; holdings[m] = #source GPUs whose experts m holds
-        // ag_flows[(phase, src, dst, experts_moved)]
-        let mut holdings: Vec<usize> = vec![1; g];
-        let mut ag_flows: Vec<Vec<(usize, usize, usize)>> = Vec::new(); // per phase: (src,dst,nexperts·srcs)
-        for l in (0..nlevels).rev() {
-            let s = part.size_at(l);
-            if s <= 1 {
-                ag_flows.push(Vec::new());
-                continue;
-            }
-            let mut phase = Vec::new();
-            let mut new_holdings = holdings.clone();
-            for m in 0..g {
-                // AG peers at level l: same domain, different offset, same other coords
-                let dom = domain_coord(&part, &locs[m], l);
-                let off = locs[m][l] % s;
-                for o in 0..s {
-                    if o == off {
-                        continue;
-                    }
-                    let mut loc = locs[m].clone();
-                    loc[l] = dom * s + o;
-                    let peer = ml.index_of(&loc);
-                    phase.push((peer, m, holdings[peer]));
-                    new_holdings[m] += holdings[peer];
-                }
-            }
-            holdings = new_holdings;
-            ag_flows.push(phase);
-        }
-
-        // A2A: token bookkeeping. hold[m][e] = tokens at m destined for expert e
-        let total_experts = placement.total_experts();
-        let mut hold: Vec<Vec<f64>> = (0..g).map(|m| ctx.routing.tokens[m].clone()).collect();
-        // dispatch phases, outermost level first: (src, dst, tokens)
-        let mut disp_flows: Vec<Vec<(usize, usize, f64)>> = Vec::new();
-        for l in 0..nlevels {
-            let mut phase: Vec<(usize, usize, f64)> = Vec::new();
-            let mut moves: Vec<(usize, usize, usize, f64)> = Vec::new(); // (src,dst,expert,tokens)
-            for m in 0..g {
-                for e in 0..total_experts {
-                    let t = hold[m][e];
-                    if t <= 0.0 {
-                        continue;
-                    }
-                    let h = placement.host[e];
-                    if diverge_level(&ml, &part, &locs[m], &locs[h]) == Some(l) {
-                        let j = next_hop(&ml, &part, &locs[m], &locs[h], l);
-                        moves.push((m, j, e, t));
-                    }
-                }
-            }
-            let mut agg: std::collections::BTreeMap<(usize, usize), f64> = Default::default();
-            for &(m, j, e, t) in &moves {
-                hold[m][e] -= t;
-                hold[j][e] += t;
-                *agg.entry((m, j)).or_default() += t;
-            }
-            phase.extend(agg.into_iter().map(|((m, j), t)| (m, j, t)));
-            disp_flows.push(phase);
-        }
-        // tokens computed at each GPU after all hops
-        let compute_tokens: Vec<f64> = hold.iter().map(|h| h.iter().sum()).collect();
-
-        // ---- build the DAG, layer by layer --------------------------------
         let mig = self.migration.as_ref();
-        let mut cur: Vec<TaskId> = entry.to_vec();
-        for _layer in 0..ctx.workload.moe_layers {
-            // SREncode (fused with last optimizer step when `fused`)
-            let enc: Vec<TaskId> = (0..g)
-                .map(|m| match mig {
-                    Some(c) => dag.compute(
-                        m,
-                        c.encode_secs(pe_full) * n_exp as f64,
-                        vec![cur[m]],
-                        "sr_encode",
-                    ),
-                    None => cur[m],
-                })
-                .collect();
 
-            // hierarchical AG, overlapping pre-expert compute
-            let mut ag_done: Vec<Vec<TaskId>> = vec![Vec::new(); g]; // arrivals at m
-            let mut ag_stage: Vec<TaskId> = enc.clone(); // per-GPU last AG event
-            for phase in &ag_flows {
-                if phase.is_empty() {
-                    continue;
-                }
-                let mut next_stage = ag_stage.clone();
-                let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
-                for &(src, dst, nsrc) in phase {
-                    let bytes = nsrc as f64 * n_exp as f64 * pe_tx;
-                    let t = dag.transfer(src, dst, bytes, Tag::AG, vec![ag_stage[src]], "ag");
-                    arrivals[dst].push(t);
-                    ag_done[dst].push(t);
-                }
-                for m in 0..g {
-                    if !arrivals[m].is_empty() {
-                        let mut deps = std::mem::take(&mut arrivals[m]);
-                        deps.push(ag_stage[m]);
-                        next_stage[m] = dag.barrier(deps, "ag_phase");
-                    }
-                }
-                ag_stage = next_stage;
+        let mut layers = Vec::new();
+        // without a per-layer trace every layer solves to the same
+        // partition: resolve once (the pre-refactor fast path)
+        let static_part = if ctx.layer_routing.is_none() {
+            Some(self.resolve_partition_for_layer(ctx, 0))
+        } else {
+            None
+        };
+        // movement cache: layers with the same partition and no per-layer
+        // trace share one movement plan
+        let mut cache: Option<(DomainPartition, LayerMovement)> = None;
+        for layer in 0..ctx.workload.moe_layers {
+            let part = match &static_part {
+                Some(p) => p.clone(),
+                None => self.resolve_partition_for_layer(ctx, layer),
+            };
+            let reuse = ctx.layer_routing.is_none()
+                && cache.as_ref().map_or(false, |(p, _)| *p == part);
+            if !reuse {
+                let mv = layer_movement(&ml, &part, &placement, ctx.routing_for(layer), &locs);
+                cache = Some((part, mv));
             }
+            let mv = &cache.as_ref().unwrap().1;
 
-            // pre-expert compute
-            let pre: Vec<TaskId> = (0..g)
-                .map(|m| dag.compute(m, ctx.pre_expert_secs(), vec![cur[m]], "pre_expert"))
+            // SREncode (fused with last optimizer step when `fused`) feeds
+            // the hierarchical AG, which overlaps pre-expert compute
+            let migrate = MigratePlan {
+                prologue_secs: mig.map(|c| vec![c.encode_secs(pe_full) * n_exp as f64; g]),
+                prologue_label: "sr_encode",
+                phases: mv
+                    .ag_flows
+                    .iter()
+                    .filter(|p| !p.is_empty())
+                    .map(|phase| {
+                        CommPhase::new(
+                            phase
+                                .iter()
+                                .map(|&(src, dst, nsrc)| Flow {
+                                    src,
+                                    dst,
+                                    bytes: nsrc as f64 * n_exp as f64 * pe_tx,
+                                })
+                                .collect(),
+                            "ag",
+                        )
+                    })
+                    .collect(),
+            };
+
+            // expert compute (+ fused SRDecode of gathered experts)
+            let expert_secs: Vec<f64> = (0..g)
+                .map(|m| {
+                    let mut secs = ctx.expert_secs(mv.compute_tokens[m]);
+                    if let Some(c) = mig {
+                        let gathered = (mv.holdings[m] - 1) as f64 * n_exp as f64;
+                        secs += gathered * c.decode_secs(pe_full);
+                    }
+                    secs
+                })
                 .collect();
 
             // hierarchical A2A dispatch (phase-synchronized per GPU)
-            let mut stage: Vec<TaskId> = pre.clone();
-            for phase in &disp_flows {
-                if phase.is_empty() {
-                    continue;
-                }
-                let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
-                for &(src, dst, tokens) in phase {
-                    let t = dag.transfer(
-                        src,
-                        dst,
-                        ctx.token_bytes(tokens),
-                        Tag::A2A,
-                        vec![stage[src]],
+            let dispatch: Vec<CommPhase> = mv
+                .disp_flows
+                .iter()
+                .filter(|p| !p.is_empty())
+                .map(|phase| {
+                    CommPhase::new(
+                        phase
+                            .iter()
+                            .map(|&(src, dst, tokens)| Flow {
+                                src,
+                                dst,
+                                bytes: ctx.token_bytes(tokens),
+                            })
+                            .collect(),
                         "dispatch",
-                    );
-                    arrivals[dst].push(t);
-                }
-                let mut next_stage = stage.clone();
-                for m in 0..g {
-                    if !arrivals[m].is_empty() {
-                        let mut deps = std::mem::take(&mut arrivals[m]);
-                        deps.push(stage[m]);
-                        next_stage[m] = dag.barrier(deps, "disp_phase");
-                    }
-                }
-                stage = next_stage;
-            }
-
-            // expert compute (+ fused SRDecode of gathered experts)
-            let expert: Vec<TaskId> = (0..g)
-                .map(|m| {
-                    let mut secs = ctx.expert_secs(compute_tokens[m]);
-                    if let Some(c) = mig {
-                        let gathered = (holdings[m] - 1) as f64 * n_exp as f64;
-                        secs += gathered * c.decode_secs(pe_full);
-                    }
-                    let mut deps = vec![stage[m], pre[m]];
-                    deps.append(&mut ag_done[m].clone());
-                    dag.compute(m, secs, deps, "expert")
+                    )
                 })
                 .collect();
 
-            // combine: retrace dispatch phases in reverse with swapped ends
-            let mut stage: Vec<TaskId> = expert.clone();
-            for phase in disp_flows.iter().rev() {
-                if phase.is_empty() {
-                    continue;
-                }
-                let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
-                for &(src, dst, tokens) in phase {
-                    // results flow dst → src
-                    let t = dag.transfer(
-                        dst,
-                        src,
-                        ctx.token_bytes(tokens),
-                        Tag::A2A,
-                        vec![stage[dst]],
-                        "combine",
-                    );
-                    arrivals[src].push(t);
-                }
-                let mut next_stage = stage.clone();
-                for m in 0..g {
-                    if !arrivals[m].is_empty() {
-                        let mut deps = std::mem::take(&mut arrivals[m]);
-                        deps.push(stage[m]);
-                        next_stage[m] = dag.barrier(deps, "comb_phase");
-                    }
-                }
-                stage = next_stage;
-            }
-
-            cur = (0..g).map(|m| dag.barrier(vec![stage[m], expert[m]], "layer_end")).collect();
+            layers.push(LayerPlan {
+                migrate,
+                pre_secs: vec![ctx.pre_expert_secs(); g],
+                rounds: vec![Round { dispatch, expert_secs }],
+            });
         }
-        cur
+        Plan { gpus: g, layers }
     }
 }
 
@@ -346,7 +342,7 @@ mod tests {
     use super::*;
     use crate::cluster::presets;
     use crate::moe::{MoEWorkload, Routing};
-    use crate::netsim::Simulator;
+    use crate::netsim::{Simulator, Tag};
     use crate::systems::ep::{Tutel, VanillaEp};
     use crate::systems::testutil::total_expert_compute;
 

@@ -1,9 +1,12 @@
 //! MoE training systems as *schedule generators*.
 //!
 //! Every system consumes the same cluster + workload + routing and emits a
-//! [`Dag`] for one training iteration, executed by
-//! [`netsim::Simulator`](crate::netsim::Simulator). This mirrors the paper's
-//! comparison: identical workloads, different communication/compute schedules.
+//! layered [`Plan`](crate::plan::Plan) for one training iteration
+//! (`plan_forward`); the shared lowering pass
+//! ([`plan::lower_forward`](crate::plan::lower_forward)) turns it into the
+//! [`Dag`] executed by [`netsim::Simulator`](crate::netsim::Simulator) — the
+//! plan → lower → simulate pipeline. This mirrors the paper's comparison:
+//! identical workloads, different communication/compute schedules.
 //!
 //! * [`ep::VanillaEp`] — textbook EP: blocking A2A dispatch → expert → A2A
 //!   combine (Tutel with pipeline degree 1).
@@ -20,9 +23,11 @@ pub mod hybrid_ep;
 pub mod smart_moe;
 
 use crate::cluster::ClusterSpec;
-use crate::moe::routing::Routing;
+use crate::model::solver::PlanInput;
+use crate::moe::routing::{Placement, Routing};
 use crate::moe::{GpuSpec, MoEWorkload, BYTES_PER_ELEM};
 use crate::netsim::{Dag, Simulator, Tag, TaskId};
+use crate::plan::Plan;
 
 /// Everything a system needs to build a schedule.
 pub struct SchedCtx<'a> {
@@ -30,6 +35,10 @@ pub struct SchedCtx<'a> {
     pub workload: &'a MoEWorkload,
     pub gpu: GpuSpec,
     pub routing: &'a Routing,
+    /// Optional per-MoE-layer routing trace; when set, layer `l` routes with
+    /// `layer_routing[l % len]` and per-layer planners solve a `p_l` per
+    /// layer. `None` = `routing` for every layer (the paper's setting).
+    pub layer_routing: Option<&'a [Routing]>,
     /// Fixed per-layer, per-GPU framework time (optimizer step, data
     /// pipeline, non-MoE blocks outside the linear model). Identical for
     /// every system; calibrated against the paper's Table V intercept
@@ -39,11 +48,42 @@ pub struct SchedCtx<'a> {
 
 impl<'a> SchedCtx<'a> {
     pub fn new(cluster: &'a ClusterSpec, workload: &'a MoEWorkload, routing: &'a Routing) -> Self {
-        Self { cluster, workload, gpu: GpuSpec::a800(), routing, fixed_layer_overhead: 0.0 }
+        Self {
+            cluster,
+            workload,
+            gpu: GpuSpec::a800(),
+            routing,
+            layer_routing: None,
+            fixed_layer_overhead: 0.0,
+        }
     }
 
     pub fn gpus(&self) -> usize {
         self.cluster.total_gpus()
+    }
+
+    /// The routing layer `l` sees (the per-layer trace when present).
+    pub fn routing_for(&self, layer: usize) -> &'a Routing {
+        match self.layer_routing {
+            Some(rs) if !rs.is_empty() => &rs[layer % rs.len()],
+            _ => self.routing,
+        }
+    }
+
+    /// Stream-model input for one layer: the layer's routing skew rescales
+    /// the effective data volume `D` to the bottleneck GPU's remote traffic
+    /// (uniform routing reproduces `MoEWorkload::plan_input` exactly), so
+    /// skewed layers solve to different `p_l` than even ones.
+    pub fn plan_input_for_layer(&self, layer: usize, pe_tx_bytes: f64) -> PlanInput {
+        let mut input = self.workload.plan_input(&self.gpu, self.gpus(), pe_tx_bytes);
+        let g = self.gpus();
+        if g > 1 {
+            let placement = Placement::round_robin(g, self.workload.experts_per_gpu);
+            let bottleneck = self.routing_for(layer).bottleneck_remote_tokens(&placement);
+            let bytes = bottleneck * self.workload.hidden as f64 * BYTES_PER_ELEM;
+            input.d_bytes = bytes * g as f64 / (g as f64 - 1.0);
+        }
+        input
     }
 
     /// Wire bytes for `tokens` routed tokens.
@@ -74,9 +114,17 @@ impl<'a> SchedCtx<'a> {
 pub trait System {
     fn name(&self) -> &'static str;
 
-    /// Build one **forward** pass over all MoE layers. `entry[g]` are the
-    /// per-GPU entry dependencies; returns per-GPU exit tasks.
-    fn build_forward(&self, ctx: &SchedCtx, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId>;
+    /// Stage 1 of the plan → lower → simulate pipeline: the layered Plan IR
+    /// for one **forward** pass over all MoE layers.
+    fn plan_forward(&self, ctx: &SchedCtx) -> Plan;
+
+    /// Stage 2: shared lowering of the Plan IR into a task DAG. `entry[g]`
+    /// are the per-GPU entry dependencies; returns per-GPU exit tasks.
+    /// Systems never construct `Dag` tasks directly — overrides of this
+    /// method only post-process what the shared lowering emitted.
+    fn build_forward(&self, ctx: &SchedCtx, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
+        crate::plan::lower_forward(&self.plan_forward(ctx), dag, entry)
+    }
 
     /// Full iteration: forward (+ backward as a mirrored pass with 2× compute
     /// and the same communication volumes, plus the overlappable dense-DDP
@@ -128,6 +176,10 @@ impl<'s, S: System + ?Sized> System for DoubledCompute<'s, S> {
         "doubled"
     }
 
+    fn plan_forward(&self, ctx: &SchedCtx) -> Plan {
+        self.0.plan_forward(ctx)
+    }
+
     fn build_forward(&self, ctx: &SchedCtx, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
         let before = dag.len();
         let out = self.0.build_forward(ctx, dag, entry);
@@ -143,6 +195,7 @@ impl<'s, S: System + ?Sized> System for DoubledCompute<'s, S> {
 /// All registered systems for the comparison tables.
 pub fn comparison_set() -> Vec<Box<dyn System>> {
     vec![
+        Box::new(ep::VanillaEp),
         Box::new(ep::Tutel::default()),
         Box::new(faster_moe::FasterMoe::default()),
         Box::new(smart_moe::SmartMoe::default()),
@@ -212,6 +265,35 @@ mod tests {
         let ctx = SchedCtx::new(&cluster, &w, &routing);
         let full = ep::VanillaEp.iteration_time(&ctx);
         assert!(full > 1.8 * fwd, "fwd {fwd}, full {full}");
+    }
+
+    #[test]
+    fn comparison_set_includes_blocking_ep_baseline() {
+        let names: Vec<&str> = comparison_set().iter().map(|s| s.name()).collect();
+        assert!(names.contains(&"VanillaEP"), "comparison set dropped the EP baseline: {names:?}");
+        assert!(names.contains(&"HybridEP"));
+    }
+
+    #[test]
+    fn layer_routing_trace_selects_per_layer() {
+        let (cluster, w, routing) = small_ctx_parts();
+        let trace = vec![
+            Routing::uniform(cluster.total_gpus(), cluster.total_gpus() * 2, 512, 2),
+            Routing::zipf(cluster.total_gpus(), cluster.total_gpus() * 2, 512, 2, 1.5, 9),
+        ];
+        let mut ctx = SchedCtx::new(&cluster, &w, &routing);
+        assert!(std::ptr::eq(ctx.routing_for(0), &routing));
+        ctx.layer_routing = Some(&trace);
+        assert!(std::ptr::eq(ctx.routing_for(0), &trace[0]));
+        assert!(std::ptr::eq(ctx.routing_for(1), &trace[1]));
+        assert!(std::ptr::eq(ctx.routing_for(2), &trace[0]), "trace wraps around");
+        // skewed layer must present a larger effective D to the solver
+        let d0 = ctx.plan_input_for_layer(0, w.pe_bytes()).d_bytes;
+        let d1 = ctx.plan_input_for_layer(1, w.pe_bytes()).d_bytes;
+        assert!(d1 > d0 * 1.05, "zipf layer should raise effective D: {d0} vs {d1}");
+        // and the uniform layer reproduces the global plan input
+        let global = w.plan_input(&ctx.gpu, ctx.gpus(), w.pe_bytes());
+        assert!((d0 - global.d_bytes).abs() / global.d_bytes < 1e-9);
     }
 
     #[test]

@@ -8,10 +8,10 @@
 //! routing all placements tie and SmartMoE ≈ Tutel (as in the paper's
 //! Table V, where the three baselines are within noise of each other).
 
-use super::ep::build_pipelined;
+use super::ep::plan_pipelined;
 use super::{SchedCtx, System};
 use crate::moe::routing::Placement;
-use crate::netsim::{Dag, TaskId};
+use crate::plan::Plan;
 
 #[derive(Clone, Copy, Debug)]
 pub struct SmartMoe {
@@ -80,9 +80,9 @@ impl System for SmartMoe {
         "SmartMoE"
     }
 
-    fn build_forward(&self, ctx: &SchedCtx, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
+    fn plan_forward(&self, ctx: &SchedCtx) -> Plan {
         let placement = self.search_placement(ctx);
-        build_pipelined(ctx, dag, entry, self.chunks, Some(&placement))
+        plan_pipelined(ctx, self.chunks, Some(&placement))
     }
 }
 

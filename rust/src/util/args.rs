@@ -70,6 +70,36 @@ impl Args {
     pub fn bool(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// Comma-separated integer list (`--dcs 8,16,32`); `default` when absent.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{key} expects integers, got {x:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated float list (`--bw 1.25,2.5,10`); `default` when absent.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{key} expects numbers, got {x:?}"))
+                })
+                .collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -107,5 +137,14 @@ mod tests {
     fn flag_followed_by_flag() {
         let a = parse(&["--fast", "--slow"]);
         assert!(a.bool("fast") && a.bool("slow"));
+    }
+
+    #[test]
+    fn list_flags_parse_and_default() {
+        let a = parse(&["--dcs", "8,16, 32", "--bw", "1.25,10"]);
+        assert_eq!(a.usize_list_or("dcs", &[1]).unwrap(), vec![8, 16, 32]);
+        assert_eq!(a.f64_list_or("bw", &[5.0]).unwrap(), vec![1.25, 10.0]);
+        assert_eq!(a.usize_list_or("missing", &[7, 9]).unwrap(), vec![7, 9]);
+        assert!(parse(&["--dcs", "8,x"]).usize_list_or("dcs", &[]).is_err());
     }
 }

@@ -1,0 +1,686 @@
+//! Golden-equivalence tests for the Plan-IR lowering pass.
+//!
+//! Each pre-refactor system hand-built its `Dag`; these tests keep verbatim
+//! copies of those legacy builders and assert that the Plan-IR pipeline
+//! (`System::plan_forward` → `plan::lower_forward`) reproduces the same
+//! schedule observables on small test contexts: simulated **makespan**,
+//! per-tag **traffic**, and total **expert compute**. Barrier placement may
+//! differ (barriers are zero-cost), so equivalence is on observables, not
+//! task-by-task identity.
+
+use hybrid_ep::cluster::{presets, Multilevel};
+use hybrid_ep::moe::routing::Placement;
+use hybrid_ep::moe::{MoEWorkload, Routing};
+use hybrid_ep::netsim::{Dag, Simulator, Tag, TaskId, TaskKind};
+use hybrid_ep::systems::aggregate::AggregateHybrid;
+use hybrid_ep::systems::ep::{Tutel, VanillaEp};
+use hybrid_ep::systems::faster_moe::FasterMoe;
+use hybrid_ep::systems::hybrid_ep::{HybridEp, MigrationCfg};
+use hybrid_ep::systems::smart_moe::SmartMoe;
+use hybrid_ep::systems::{SchedCtx, System};
+use hybrid_ep::topology::DomainPartition;
+
+// ---------------------------------------------------------------------------
+// Legacy builders (verbatim pre-refactor DAG construction)
+// ---------------------------------------------------------------------------
+
+/// Pre-refactor `systems::ep::build_pipelined`.
+fn legacy_pipelined(
+    ctx: &SchedCtx,
+    dag: &mut Dag,
+    entry: &[TaskId],
+    chunks: usize,
+    placement: Option<&Placement>,
+) -> Vec<TaskId> {
+    let g = ctx.gpus();
+    let default_placement = Placement::round_robin(g, ctx.workload.experts_per_gpu);
+    let placement = placement.unwrap_or(&default_placement);
+    let mut cur: Vec<TaskId> = entry.to_vec();
+
+    for _layer in 0..ctx.workload.moe_layers {
+        let pre: Vec<TaskId> = (0..g)
+            .map(|i| dag.compute(i, ctx.pre_expert_secs(), vec![cur[i]], "pre_expert"))
+            .collect();
+        let mut exit_deps: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+        for _c in 0..chunks {
+            let frac = 1.0 / chunks as f64;
+            let mut arrive: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+            for i in 0..g {
+                for j in 0..g {
+                    let tokens = ctx.routing.tokens_to_gpu(i, j, placement) * frac;
+                    if i == j || tokens <= 0.0 {
+                        continue;
+                    }
+                    let t = dag.transfer(
+                        i,
+                        j,
+                        ctx.token_bytes(tokens),
+                        Tag::A2A,
+                        vec![pre[i]],
+                        "dispatch",
+                    );
+                    arrive[j].push(t);
+                }
+            }
+            for j in 0..g {
+                let total_tokens: f64 =
+                    (0..g).map(|i| ctx.routing.tokens_to_gpu(i, j, placement)).sum::<f64>() * frac;
+                let mut deps = arrive[j].clone();
+                deps.push(pre[j]);
+                let e = dag.compute(j, ctx.expert_secs(total_tokens), deps, "expert");
+                for i in 0..g {
+                    let tokens = ctx.routing.tokens_to_gpu(i, j, placement) * frac;
+                    if i == j || tokens <= 0.0 {
+                        exit_deps[i].push(e);
+                        continue;
+                    }
+                    let t =
+                        dag.transfer(j, i, ctx.token_bytes(tokens), Tag::A2A, vec![e], "combine");
+                    exit_deps[i].push(t);
+                }
+            }
+        }
+        cur = (0..g)
+            .map(|i| {
+                let mut deps = std::mem::take(&mut exit_deps[i]);
+                deps.push(pre[i]);
+                dag.barrier(deps, "layer_end")
+            })
+            .collect();
+    }
+    cur
+}
+
+/// Pre-refactor `FasterMoe::build_forward`.
+fn legacy_faster_moe(
+    fm: &FasterMoe,
+    ctx: &SchedCtx,
+    dag: &mut Dag,
+    entry: &[TaskId],
+) -> Vec<TaskId> {
+    let g = ctx.gpus();
+    let placement = Placement::round_robin(g, ctx.workload.experts_per_gpu);
+    let hot = fm.hot_experts(ctx);
+    let is_hot = {
+        let mut v = vec![false; placement.total_experts()];
+        for &e in &hot {
+            v[e] = true;
+        }
+        v
+    };
+    let pe = ctx.workload.pe_bytes();
+    let mut cur: Vec<TaskId> = entry.to_vec();
+
+    for _layer in 0..ctx.workload.moe_layers {
+        let mut shadow_arrive: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+        for &e in &hot {
+            let h = placement.host[e];
+            for dst in 0..g {
+                if dst == h {
+                    continue;
+                }
+                let t = dag.transfer(h, dst, pe, Tag::AG, vec![cur[h]], "shadow");
+                shadow_arrive[dst].push(t);
+            }
+        }
+        let pre: Vec<TaskId> = (0..g)
+            .map(|i| dag.compute(i, ctx.pre_expert_secs(), vec![cur[i]], "pre_expert"))
+            .collect();
+
+        let frac = 1.0 / fm.chunks as f64;
+        let mut exit_deps: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+        for _c in 0..fm.chunks {
+            let mut arrive: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+            for i in 0..g {
+                for j in 0..g {
+                    let tokens: f64 = placement
+                        .experts_on(j)
+                        .iter()
+                        .filter(|&&e| !is_hot[e])
+                        .map(|&e| ctx.routing.tokens[i][e])
+                        .sum::<f64>()
+                        * frac;
+                    if i == j || tokens <= 0.0 {
+                        continue;
+                    }
+                    let t = dag.transfer(
+                        i,
+                        j,
+                        ctx.token_bytes(tokens),
+                        Tag::A2A,
+                        vec![pre[i]],
+                        "dispatch",
+                    );
+                    arrive[j].push(t);
+                }
+            }
+            for j in 0..g {
+                let cold: f64 = (0..g)
+                    .map(|i| {
+                        placement
+                            .experts_on(j)
+                            .iter()
+                            .filter(|&&e| !is_hot[e])
+                            .map(|&e| ctx.routing.tokens[i][e])
+                            .sum::<f64>()
+                    })
+                    .sum::<f64>()
+                    * frac;
+                let local_hot: f64 =
+                    hot.iter().map(|&e| ctx.routing.tokens[j][e]).sum::<f64>() * frac;
+                let mut deps = arrive[j].clone();
+                deps.push(pre[j]);
+                deps.extend(shadow_arrive[j].iter().copied());
+                let ex = dag.compute(j, ctx.expert_secs(cold + local_hot), deps, "expert");
+                for i in 0..g {
+                    let tokens: f64 = placement
+                        .experts_on(j)
+                        .iter()
+                        .filter(|&&e| !is_hot[e])
+                        .map(|&e| ctx.routing.tokens[i][e])
+                        .sum::<f64>()
+                        * frac;
+                    if i == j || tokens <= 0.0 {
+                        exit_deps[i].push(ex);
+                        continue;
+                    }
+                    let t =
+                        dag.transfer(j, i, ctx.token_bytes(tokens), Tag::A2A, vec![ex], "combine");
+                    exit_deps[i].push(t);
+                }
+            }
+        }
+        cur = (0..g)
+            .map(|i| {
+                let mut deps = std::mem::take(&mut exit_deps[i]);
+                deps.push(pre[i]);
+                dag.barrier(deps, "layer_end")
+            })
+            .collect();
+    }
+    cur
+}
+
+fn domain_coord(part: &DomainPartition, loc: &[usize], level: usize) -> usize {
+    loc[level] / part.size_at(level)
+}
+
+fn diverge_level(
+    ml: &Multilevel,
+    part: &DomainPartition,
+    loc_m: &[usize],
+    loc_h: &[usize],
+) -> Option<usize> {
+    (0..ml.levels()).find(|&l| domain_coord(part, loc_m, l) != domain_coord(part, loc_h, l))
+}
+
+fn next_hop(
+    ml: &Multilevel,
+    part: &DomainPartition,
+    loc_m: &[usize],
+    loc_h: &[usize],
+    level: usize,
+) -> usize {
+    let s = part.size_at(level);
+    let mut loc = loc_m.to_vec();
+    loc[level] = domain_coord(part, loc_h, level) * s + (loc_m[level] % s);
+    ml.index_of(&loc)
+}
+
+/// Pre-refactor `HybridEp::build_forward` (explicit partition).
+fn legacy_hybrid(
+    ctx: &SchedCtx,
+    dag: &mut Dag,
+    entry: &[TaskId],
+    part: &DomainPartition,
+    mig: Option<&MigrationCfg>,
+    pe_tx: f64,
+) -> Vec<TaskId> {
+    let g = ctx.gpus();
+    let ml = ctx.cluster.multilevel();
+    let nlevels = ml.levels();
+    let placement = Placement::round_robin(g, ctx.workload.experts_per_gpu);
+    let locs: Vec<Vec<usize>> = (0..g).map(|m| ml.locate(m)).collect();
+    let pe_full = ctx.workload.pe_bytes();
+    let n_exp = ctx.workload.experts_per_gpu;
+
+    let mut holdings: Vec<usize> = vec![1; g];
+    let mut ag_flows: Vec<Vec<(usize, usize, usize)>> = Vec::new();
+    for l in (0..nlevels).rev() {
+        let s = part.size_at(l);
+        if s <= 1 {
+            ag_flows.push(Vec::new());
+            continue;
+        }
+        let mut phase = Vec::new();
+        let mut new_holdings = holdings.clone();
+        for m in 0..g {
+            let dom = domain_coord(part, &locs[m], l);
+            let off = locs[m][l] % s;
+            for o in 0..s {
+                if o == off {
+                    continue;
+                }
+                let mut loc = locs[m].clone();
+                loc[l] = dom * s + o;
+                let peer = ml.index_of(&loc);
+                phase.push((peer, m, holdings[peer]));
+                new_holdings[m] += holdings[peer];
+            }
+        }
+        holdings = new_holdings;
+        ag_flows.push(phase);
+    }
+
+    let total_experts = placement.total_experts();
+    let mut hold: Vec<Vec<f64>> = (0..g).map(|m| ctx.routing.tokens[m].clone()).collect();
+    let mut disp_flows: Vec<Vec<(usize, usize, f64)>> = Vec::new();
+    for l in 0..nlevels {
+        let mut phase: Vec<(usize, usize, f64)> = Vec::new();
+        let mut moves: Vec<(usize, usize, usize, f64)> = Vec::new();
+        for m in 0..g {
+            for e in 0..total_experts {
+                let t = hold[m][e];
+                if t <= 0.0 {
+                    continue;
+                }
+                let h = placement.host[e];
+                if diverge_level(&ml, part, &locs[m], &locs[h]) == Some(l) {
+                    let j = next_hop(&ml, part, &locs[m], &locs[h], l);
+                    moves.push((m, j, e, t));
+                }
+            }
+        }
+        let mut agg: std::collections::BTreeMap<(usize, usize), f64> = Default::default();
+        for &(m, j, e, t) in &moves {
+            hold[m][e] -= t;
+            hold[j][e] += t;
+            *agg.entry((m, j)).or_default() += t;
+        }
+        phase.extend(agg.into_iter().map(|((m, j), t)| (m, j, t)));
+        disp_flows.push(phase);
+    }
+    let compute_tokens: Vec<f64> = hold.iter().map(|h| h.iter().sum()).collect();
+
+    let mut cur: Vec<TaskId> = entry.to_vec();
+    for _layer in 0..ctx.workload.moe_layers {
+        let enc: Vec<TaskId> = (0..g)
+            .map(|m| match mig {
+                Some(c) => dag.compute(
+                    m,
+                    c.encode_secs(pe_full) * n_exp as f64,
+                    vec![cur[m]],
+                    "sr_encode",
+                ),
+                None => cur[m],
+            })
+            .collect();
+
+        let mut ag_done: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+        let mut ag_stage: Vec<TaskId> = enc.clone();
+        for phase in &ag_flows {
+            if phase.is_empty() {
+                continue;
+            }
+            let mut next_stage = ag_stage.clone();
+            let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+            for &(src, dst, nsrc) in phase {
+                let bytes = nsrc as f64 * n_exp as f64 * pe_tx;
+                let t = dag.transfer(src, dst, bytes, Tag::AG, vec![ag_stage[src]], "ag");
+                arrivals[dst].push(t);
+                ag_done[dst].push(t);
+            }
+            for m in 0..g {
+                if !arrivals[m].is_empty() {
+                    let mut deps = std::mem::take(&mut arrivals[m]);
+                    deps.push(ag_stage[m]);
+                    next_stage[m] = dag.barrier(deps, "ag_phase");
+                }
+            }
+            ag_stage = next_stage;
+        }
+
+        let pre: Vec<TaskId> = (0..g)
+            .map(|m| dag.compute(m, ctx.pre_expert_secs(), vec![cur[m]], "pre_expert"))
+            .collect();
+
+        let mut stage: Vec<TaskId> = pre.clone();
+        for phase in &disp_flows {
+            if phase.is_empty() {
+                continue;
+            }
+            let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+            for &(src, dst, tokens) in phase {
+                let t = dag.transfer(
+                    src,
+                    dst,
+                    ctx.token_bytes(tokens),
+                    Tag::A2A,
+                    vec![stage[src]],
+                    "dispatch",
+                );
+                arrivals[dst].push(t);
+            }
+            let mut next_stage = stage.clone();
+            for m in 0..g {
+                if !arrivals[m].is_empty() {
+                    let mut deps = std::mem::take(&mut arrivals[m]);
+                    deps.push(stage[m]);
+                    next_stage[m] = dag.barrier(deps, "disp_phase");
+                }
+            }
+            stage = next_stage;
+        }
+
+        let expert: Vec<TaskId> = (0..g)
+            .map(|m| {
+                let mut secs = ctx.expert_secs(compute_tokens[m]);
+                if let Some(c) = mig {
+                    let gathered = (holdings[m] - 1) as f64 * n_exp as f64;
+                    secs += gathered * c.decode_secs(pe_full);
+                }
+                let mut deps = vec![stage[m], pre[m]];
+                deps.append(&mut ag_done[m].clone());
+                dag.compute(m, secs, deps, "expert")
+            })
+            .collect();
+
+        let mut stage: Vec<TaskId> = expert.clone();
+        for phase in disp_flows.iter().rev() {
+            if phase.is_empty() {
+                continue;
+            }
+            let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+            for &(src, dst, tokens) in phase {
+                let t = dag.transfer(
+                    dst,
+                    src,
+                    ctx.token_bytes(tokens),
+                    Tag::A2A,
+                    vec![stage[dst]],
+                    "combine",
+                );
+                arrivals[src].push(t);
+            }
+            let mut next_stage = stage.clone();
+            for m in 0..g {
+                if !arrivals[m].is_empty() {
+                    let mut deps = std::mem::take(&mut arrivals[m]);
+                    deps.push(stage[m]);
+                    next_stage[m] = dag.barrier(deps, "comb_phase");
+                }
+            }
+            stage = next_stage;
+        }
+
+        cur = (0..g).map(|m| dag.barrier(vec![stage[m], expert[m]], "layer_end")).collect();
+    }
+    cur
+}
+
+/// Pre-refactor `AggregateHybrid::build_forward`.
+fn legacy_aggregate(
+    sys: &AggregateHybrid,
+    ctx: &SchedCtx,
+    dag: &mut Dag,
+    entry: &[TaskId],
+) -> Vec<TaskId> {
+    let g = ctx.gpus();
+    assert!(g % sys.s_ed == 0, "S_ED must divide G");
+    let w = ctx.workload;
+    let p = sys.p(g);
+    let d = w.d_bytes() * w.k as f64;
+    let pe = sys.pe_tx_bytes.unwrap_or_else(|| w.pe_bytes());
+    let a2a_bytes = p * d * (g as f64 - 1.0) / g as f64;
+    let ag_bytes = (sys.s_ed as f64 - 1.0) * w.experts_per_gpu as f64 * pe;
+    let expert_secs = ctx.expert_secs((w.tokens_per_gpu * w.k) as f64);
+
+    let domains = g / sys.s_ed;
+    let a2a_setup =
+        sys.msg_overhead_secs * if sys.s_ed == 1 { (g - 1) as f64 } else { (domains - 1) as f64 };
+    let ag_setup = sys.msg_overhead_secs * (sys.s_ed - 1) as f64;
+
+    let mut cur: Vec<TaskId> = entry.to_vec();
+    for _layer in 0..w.moe_layers {
+        let ag: Vec<Option<TaskId>> = (0..g)
+            .map(|i| {
+                if ag_bytes > 0.0 {
+                    let dom = i / sys.s_ed;
+                    let off = i % sys.s_ed;
+                    let dst = dom * sys.s_ed + (off + 1) % sys.s_ed;
+                    let setup = dag.compute(i, ag_setup, vec![cur[i]], "ag_setup");
+                    Some(dag.transfer(i, dst, ag_bytes, Tag::AG, vec![setup], "ag"))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let pre: Vec<TaskId> = (0..g)
+            .map(|i| dag.compute(i, ctx.pre_expert_secs(), vec![cur[i]], "pre_expert"))
+            .collect();
+        let disp: Vec<Option<TaskId>> = (0..g)
+            .map(|i| {
+                if a2a_bytes > 0.0 && domains > 1 {
+                    let dom = i / sys.s_ed;
+                    let off = i % sys.s_ed;
+                    let dst = ((dom + 1) % domains) * sys.s_ed + off;
+                    let setup = dag.compute(i, a2a_setup, vec![pre[i]], "a2a_setup");
+                    Some(dag.transfer(i, dst, a2a_bytes, Tag::A2A, vec![setup], "dispatch"))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let expert: Vec<TaskId> = (0..g)
+            .map(|i| {
+                let mut deps = vec![pre[i]];
+                if let Some(t) = ag[i] {
+                    deps.push(t);
+                }
+                if let Some(t) = disp[i] {
+                    deps.push(t);
+                }
+                dag.compute(i, expert_secs, deps, "expert")
+            })
+            .collect();
+        let comb: Vec<TaskId> = (0..g)
+            .map(|i| {
+                if a2a_bytes > 0.0 && domains > 1 {
+                    let dom = i / sys.s_ed;
+                    let off = i % sys.s_ed;
+                    let dst = ((dom + domains - 1) % domains) * sys.s_ed + off;
+                    dag.transfer(i, dst, a2a_bytes, Tag::A2A, vec![expert[i]], "combine")
+                } else {
+                    expert[i]
+                }
+            })
+            .collect();
+        cur = (0..g).map(|i| dag.barrier(vec![comb[i], expert[i]], "layer_end")).collect();
+    }
+    cur
+}
+
+// ---------------------------------------------------------------------------
+// Equivalence harness
+// ---------------------------------------------------------------------------
+
+struct Observables {
+    makespan: f64,
+    a2a: f64,
+    ag: f64,
+    expert_secs: f64,
+    a2a_freq: usize,
+    ag_freq: usize,
+}
+
+fn observe(cluster: &hybrid_ep::cluster::ClusterSpec, dag: &Dag) -> Observables {
+    let expert_secs = dag
+        .tasks
+        .iter()
+        .filter(|t| t.label == "expert")
+        .map(|t| match t.kind {
+            TaskKind::Compute { seconds, .. } => seconds,
+            _ => 0.0,
+        })
+        .sum();
+    Observables {
+        makespan: Simulator::new(cluster).run(dag).makespan,
+        a2a: dag.traffic_by_tag(Tag::A2A),
+        ag: dag.traffic_by_tag(Tag::AG),
+        expert_secs,
+        a2a_freq: dag.frequency_by_tag(Tag::A2A),
+        ag_freq: dag.frequency_by_tag(Tag::AG),
+    }
+}
+
+fn forward_dag(
+    ctx: &SchedCtx,
+    build: impl FnOnce(&mut Dag, &[TaskId]) -> Vec<TaskId>,
+) -> Dag {
+    let mut dag = Dag::new();
+    let start = dag.barrier(vec![], "iter_start");
+    let entry: Vec<TaskId> = (0..ctx.gpus()).map(|_| start).collect();
+    let exit = build(&mut dag, &entry);
+    dag.barrier(exit, "iter_end");
+    dag
+}
+
+fn assert_equivalent(name: &str, cluster: &hybrid_ep::cluster::ClusterSpec, old: &Dag, new: &Dag) {
+    let a = observe(cluster, old);
+    let b = observe(cluster, new);
+    let rel = |x: f64, y: f64| (x - y).abs() / (1.0 + x.abs().max(y.abs()));
+    assert!(
+        rel(a.makespan, b.makespan) < 1e-6,
+        "{name}: makespan diverged: legacy {} vs lowered {}",
+        a.makespan,
+        b.makespan
+    );
+    assert!(rel(a.a2a, b.a2a) < 1e-9, "{name}: A2A traffic {} vs {}", a.a2a, b.a2a);
+    assert!(rel(a.ag, b.ag) < 1e-9, "{name}: AG traffic {} vs {}", a.ag, b.ag);
+    assert!(
+        rel(a.expert_secs, b.expert_secs) < 1e-9,
+        "{name}: expert compute {} vs {}",
+        a.expert_secs,
+        b.expert_secs
+    );
+    assert_eq!(a.a2a_freq, b.a2a_freq, "{name}: A2A transfer count");
+    assert_eq!(a.ag_freq, b.ag_freq, "{name}: AG transfer count");
+}
+
+fn small_parts(zipf: bool) -> (hybrid_ep::cluster::ClusterSpec, MoEWorkload, Routing) {
+    let cluster = presets::dcs_x_gpus(2, 4, 10.0, 128.0);
+    let w = MoEWorkload {
+        tokens_per_gpu: 512,
+        hidden: 256,
+        ffn: 512,
+        experts_per_gpu: 2,
+        k: 2,
+        moe_layers: 2,
+        pre_blocks: 1,
+        backward: false,
+    };
+    let g = cluster.total_gpus();
+    let routing = if zipf {
+        Routing::zipf(g, g * w.experts_per_gpu, w.tokens_per_gpu, w.k, 1.4, 23)
+    } else {
+        Routing::uniform(g, g * w.experts_per_gpu, w.tokens_per_gpu, w.k)
+    };
+    (cluster, w, routing)
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn vanilla_ep_and_tutel_lower_to_legacy_schedules() {
+    for zipf in [false, true] {
+        let (cluster, w, routing) = small_parts(zipf);
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let old = forward_dag(&ctx, |dag, entry| legacy_pipelined(&ctx, dag, entry, 1, None));
+        let new = forward_dag(&ctx, |dag, entry| VanillaEp.build_forward(&ctx, dag, entry));
+        assert_equivalent("VanillaEP", &cluster, &old, &new);
+
+        let old = forward_dag(&ctx, |dag, entry| legacy_pipelined(&ctx, dag, entry, 4, None));
+        let new =
+            forward_dag(&ctx, |dag, entry| Tutel { chunks: 4 }.build_forward(&ctx, dag, entry));
+        assert_equivalent("Tutel", &cluster, &old, &new);
+    }
+}
+
+#[test]
+fn smart_moe_lowers_to_legacy_schedule() {
+    let (cluster, w, routing) = small_parts(true);
+    let ctx = SchedCtx::new(&cluster, &w, &routing);
+    let sm = SmartMoe::default();
+    let placement = sm.search_placement(&ctx);
+    let old = forward_dag(&ctx, |dag, entry| {
+        legacy_pipelined(&ctx, dag, entry, sm.chunks, Some(&placement))
+    });
+    let new = forward_dag(&ctx, |dag, entry| sm.build_forward(&ctx, dag, entry));
+    assert_equivalent("SmartMoE", &cluster, &old, &new);
+}
+
+#[test]
+fn faster_moe_lowers_to_legacy_schedule() {
+    let (cluster, w, routing) = small_parts(true);
+    let ctx = SchedCtx::new(&cluster, &w, &routing);
+    let fm = FasterMoe::default();
+    assert!(!fm.hot_experts(&ctx).is_empty(), "zipf context must shadow something");
+    let old = forward_dag(&ctx, |dag, entry| legacy_faster_moe(&fm, &ctx, dag, entry));
+    let new = forward_dag(&ctx, |dag, entry| fm.build_forward(&ctx, dag, entry));
+    assert_equivalent("FasterMoE", &cluster, &old, &new);
+}
+
+#[test]
+fn hybrid_ep_lowers_to_legacy_schedule_across_partitions() {
+    for zipf in [false, true] {
+        let (cluster, w, routing) = small_parts(zipf);
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let ml = cluster.multilevel();
+        for sizes in [vec![1, 1], vec![1, 2], vec![2, 1], vec![1, 4], vec![2, 4]] {
+            for with_mig in [false, true] {
+                let mig = with_mig.then(MigrationCfg::default);
+                let sys = HybridEp { partition: Some(sizes.clone()), migration: mig };
+                let part = DomainPartition::new(&ml, sizes.clone()).unwrap();
+                let pe_tx = sys.pe_tx_bytes(&ctx);
+                let old = forward_dag(&ctx, |dag, entry| {
+                    legacy_hybrid(&ctx, dag, entry, &part, mig.as_ref(), pe_tx)
+                });
+                let new = forward_dag(&ctx, |dag, entry| sys.build_forward(&ctx, dag, entry));
+                assert_equivalent(
+                    &format!("HybridEP {sizes:?} mig={with_mig} zipf={zipf}"),
+                    &cluster,
+                    &old,
+                    &new,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn aggregate_lowers_to_legacy_schedule() {
+    let cluster = presets::flat_dcs(12, 5.0);
+    let w = MoEWorkload {
+        tokens_per_gpu: 2048,
+        hidden: 512,
+        ffn: 1024,
+        experts_per_gpu: 1,
+        k: 2,
+        moe_layers: 2,
+        pre_blocks: 1,
+        backward: false,
+    };
+    let routing = Routing::uniform(1, 1, 1, 1); // aggregate schedules ignore it
+    let ctx = SchedCtx::new(&cluster, &w, &routing);
+    for sys in [
+        AggregateHybrid::ep(),
+        AggregateHybrid::hybrid(3, w.pe_bytes() / 50.0),
+        AggregateHybrid::hybrid(12, w.pe_bytes() / 50.0),
+    ] {
+        let old = forward_dag(&ctx, |dag, entry| legacy_aggregate(&sys, &ctx, dag, entry));
+        let new = forward_dag(&ctx, |dag, entry| sys.build_forward(&ctx, dag, entry));
+        assert_equivalent(&format!("Aggregate s_ed={}", sys.s_ed), &cluster, &old, &new);
+    }
+}
