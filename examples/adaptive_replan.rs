@@ -33,7 +33,7 @@ fn main() -> Result<()> {
         backward: false,
     };
     let g = cluster.total_gpus();
-    let trace = replanner::drift_trace(g, g, w.tokens_per_gpu, w.k, 0.0, drift, 0.3, iters, 7);
+    let trace = replanner::drift_trace(g, g, w.tokens_per_gpu, w.k, 0.0, drift, 0.3, iters, 7)?;
     let cfg = ReplanCfg {
         migration: MigrationCfg { compression_ratio: 3.0, ..Default::default() },
         window,
@@ -48,7 +48,7 @@ fn main() -> Result<()> {
         &["policy", "total", "switches", "final partition"],
     );
     for policy in [Policy::Never, Policy::Always, Policy::Adaptive] {
-        let report = replanner::run_policy(&cluster, &w, &trace, &cfg, policy);
+        let report = replanner::run_policy(&cluster, &w, &trace, &cfg, policy)?;
         table.row(vec![
             format!("{policy:?}"),
             hybrid_ep::util::fmt_secs(report.total_secs),

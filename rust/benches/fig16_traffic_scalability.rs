@@ -33,7 +33,7 @@ fn main() {
     grid.hybrid_ps = vec![0.0]; // full-domain hybrid: the traffic bound
     grid.workload.tokens_per_gpu = 4096;
     grid.workload.moe_layers = 1;
-    let (outcomes, secs) = time_once(|| sweep::run_sweep(&grid, sweep::default_threads()));
+    let (outcomes, secs) = time_once(|| sweep::run_sweep(&grid, sweep::default_threads()).expect("non-empty grid"));
     println!("fig16-style sweep ({} scenarios in {:.2}s):", outcomes.len(), secs);
     for o in &outcomes {
         println!(

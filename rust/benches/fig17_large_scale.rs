@@ -42,8 +42,8 @@ fn main() {
     println!();
     let grid = sweep::SweepGrid::fig17(if fast { vec![256] } else { vec![256, 512] });
     let n_threads = sweep::default_threads();
-    let (serial, t_serial) = time_once(|| sweep::run_sweep(&grid, 1));
-    let (parallel, t_parallel) = time_once(|| sweep::run_sweep(&grid, n_threads));
+    let (serial, t_serial) = time_once(|| sweep::run_sweep(&grid, 1).expect("non-empty grid"));
+    let (parallel, t_parallel) = time_once(|| sweep::run_sweep(&grid, n_threads).expect("non-empty grid"));
     let s = sweep::summarize(&parallel);
     assert_eq!(serial.len(), parallel.len());
     println!(

@@ -121,8 +121,8 @@ fn main() {
         let mut grid_ref = grid.clone();
         grid_ref.engine = RateMode::Reference;
         let n_threads = sweep::default_threads();
-        let (out_ref, t_ref) = time_once(|| sweep::run_sweep(&grid_ref, 1));
-        let (out_inc, t_inc) = time_once(|| sweep::run_sweep(&grid, n_threads));
+        let (out_ref, t_ref) = time_once(|| sweep::run_sweep(&grid_ref, 1).expect("non-empty grid"));
+        let (out_inc, t_inc) = time_once(|| sweep::run_sweep(&grid, n_threads).expect("non-empty grid"));
         let ev = |outs: &[sweep::ScenarioOutcome]| -> usize {
             outs.iter().map(|o| o.ep.events + o.hybrid.events).sum()
         };

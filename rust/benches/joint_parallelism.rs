@@ -1,0 +1,75 @@
+//! Joint TP × EP × DP parallelism planning on the Plan IR.
+//!
+//! Not a paper figure: exercises the TED-style joint `(p, tp, dp)` solver
+//! (`model::solver::solve_joint`) and the plan-expansion pipeline
+//! (`plan::parallel`) — the `fig_ted_joint` driver over a shrinking inter-DC
+//! uplink, then a pairwise sweep with the parallelism axis. `--quick` /
+//! `BENCH_FAST=1` runs the one-scenario smoke used by CI.
+
+use hybrid_ep::bench::{header, time_once};
+use hybrid_ep::netsim::sweep::{self, SweepGrid, SweepMode};
+use hybrid_ep::report::experiments;
+use hybrid_ep::util::args::Args;
+
+fn main() {
+    header("joint_parallelism", "joint TP × EP × DP planning vs 1-D baselines (not in paper)");
+    let args = Args::from_env().unwrap_or_default();
+    let quick = args.bool("quick") || std::env::var("BENCH_FAST").is_ok();
+
+    let ((table, rows), secs) = time_once(experiments::fig_ted_joint);
+    table.print();
+    let tight = rows.last().expect("driver emits one row per uplink");
+    assert!(
+        tight.tp > 1 || tight.dp > 1,
+        "the constrained uplink should open TP or DP, got ({}, {})",
+        tight.tp,
+        tight.dp
+    );
+    assert!(
+        tight.joint_secs < tight.identity_secs,
+        "joint config should beat the best 1-D config at {} Gbps",
+        tight.bw_gbps
+    );
+    println!(
+        "at {} Gbps: joint (tp={}, dp={}) {} vs best 1-D ({}) {} — {:.2}× ({secs:.2}s)",
+        tight.bw_gbps,
+        tight.tp,
+        tight.dp,
+        hybrid_ep::util::fmt_secs(tight.joint_secs),
+        tight.best_identity,
+        hybrid_ep::util::fmt_secs(tight.identity_secs),
+        tight.speedup,
+    );
+
+    if quick {
+        println!("[--quick] skipping the parallelism-axis sweep");
+        return;
+    }
+
+    // pairwise sweep over the parallelism axis: EP baseline vs hybrid under
+    // each (tp, dp) at two uplink speeds
+    println!();
+    let mut grid = SweepGrid::fig17(vec![2]);
+    grid.mode = SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 };
+    grid.bandwidths_gbps = vec![1.25, 10.0];
+    grid.hybrid_ps = vec![0.5];
+    grid.parallelism = vec![(1, 1), (2, 1), (1, 2), (2, 2)];
+    grid.workload.tokens_per_gpu = 2048;
+    grid.workload.moe_layers = 2;
+    let threads = sweep::default_threads();
+    let (outcomes, secs) =
+        time_once(|| sweep::run_sweep(&grid, threads).expect("non-empty grid"));
+    for o in &outcomes {
+        println!(
+            "bw={} Gbps tp={} dp={}: EP {} | hybrid {} ({:.2}×, {} cross-DC MB)",
+            o.scenario.bw_gbps,
+            o.scenario.tp,
+            o.scenario.dp,
+            hybrid_ep::util::fmt_secs(o.ep.makespan),
+            hybrid_ep::util::fmt_secs(o.hybrid.makespan),
+            o.speedup,
+            (o.hybrid.bytes_per_level[0] / 1e6).round(),
+        );
+    }
+    println!("parallelism sweep: {} scenarios across {threads} threads in {secs:.2}s", outcomes.len());
+}

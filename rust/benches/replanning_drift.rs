@@ -45,7 +45,7 @@ fn main() {
     grid.workload.moe_layers = 2;
     grid.compression_ratio = 2.0;
     let threads = sweep::default_threads();
-    let (outcomes, secs) = time_once(|| sweep::run_replan_sweep(&grid, threads));
+    let (outcomes, secs) = time_once(|| sweep::run_replan_sweep(&grid, threads).expect("non-empty grid"));
     for o in &outcomes {
         println!(
             "dcs={} het={} drift={}: never {} | always {} | adaptive {} ({} switches, {:.2}× vs best static)",

@@ -125,6 +125,146 @@ impl LevelIndexer {
     }
 }
 
+/// Joint TP × EP × DP parallelism degrees (hybrid tensor-expert-data
+/// parallelism à la DeepSpeed-TED; see PAPERS.md).
+///
+/// The cluster's `G` GPUs factor as `tp · ep · dp`:
+///
+/// * **`dp`** replicas partition the *outermost* level (e.g. one replica per
+///   datacenter): each replica holds the full model, processes its own
+///   batch shard, and pays a once-per-iteration gradient ring across
+///   replicas instead of per-layer cross-replica A2A/AG.
+/// * **`ep`** is the expert-parallel width *within* a replica: the EP/
+///   HybridEP machinery (domain partition, hybrid A2A/AG) spans `ep`
+///   tensor-parallel groups, not all `G` GPUs.
+/// * **`tp`** shards every expert FFN (and the dense trunk) across `tp`
+///   *innermost-level* siblings; each group pays a per-layer activation
+///   All-Reduce on the fast intra-node links, while migration payloads and
+///   per-GPU compute shrink by `tp`.
+///
+/// `tp = 1, dp = 1` is the identity — plain (Hybrid)EP over all `G` GPUs,
+/// bit-for-bit identical to planning without a config.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelismConfig {
+    /// Tensor-parallel degree (shards experts + dense trunk).
+    pub tp: usize,
+    /// Expert-parallel width: EP ranks (TP groups) per data-parallel replica.
+    pub ep: usize,
+    /// Data-parallel replicas (replicated experts + dense trunk).
+    pub dp: usize,
+}
+
+impl ParallelismConfig {
+    /// The identity config for a `total_gpus`-GPU cluster: pure EP.
+    pub fn identity(total_gpus: usize) -> Self {
+        Self { tp: 1, ep: total_gpus.max(1), dp: 1 }
+    }
+
+    /// Build and validate a config for `cluster` from the two free degrees
+    /// (`ep` is forced to `G / (tp · dp)`).
+    pub fn new(cluster: &ClusterSpec, tp: usize, dp: usize) -> Result<Self> {
+        if tp == 0 || dp == 0 {
+            bail!("parallelism degrees must be positive (got tp={tp}, dp={dp})");
+        }
+        let g = cluster.total_gpus();
+        if g % (tp * dp) != 0 {
+            bail!("tp·dp = {} must divide the cluster's {g} GPUs", tp * dp);
+        }
+        let cfg = Self { tp, ep: g / (tp * dp), dp };
+        cfg.validate(cluster)?;
+        Ok(cfg)
+    }
+
+    /// Pure EP (no TP sharding, no DP replication)?
+    pub fn is_identity(&self) -> bool {
+        self.tp == 1 && self.dp == 1
+    }
+
+    /// GPUs per data-parallel replica (`tp · ep`).
+    pub fn replica_gpus(&self) -> usize {
+        self.tp * self.ep
+    }
+
+    /// Physical GPU index of TP member `member` of EP rank `rank` in replica
+    /// `replica` (replicas are contiguous outermost blocks; TP members are
+    /// contiguous innermost siblings).
+    pub fn physical_gpu(&self, replica: usize, rank: usize, member: usize) -> usize {
+        replica * self.replica_gpus() + rank * self.tp + member
+    }
+
+    /// Check the config factors `cluster`'s hierarchy cleanly: `tp·ep·dp`
+    /// must equal `G`, `dp` must divide the outermost fanout (replicas are
+    /// whole outer-level blocks), and `tp` must divide the innermost fanout
+    /// (TP groups never span a node boundary). Heterogeneous link overrides
+    /// are rejected for non-identity configs (the virtual-cluster remapping
+    /// does not carry per-container overrides yet).
+    pub fn validate(&self, cluster: &ClusterSpec) -> Result<()> {
+        let g = cluster.total_gpus();
+        if self.tp == 0 || self.ep == 0 || self.dp == 0 {
+            bail!("parallelism degrees must be positive: {self:?}");
+        }
+        if self.tp * self.ep * self.dp != g {
+            bail!(
+                "tp·ep·dp = {}·{}·{} = {} must equal the cluster's {g} GPUs",
+                self.tp,
+                self.ep,
+                self.dp,
+                self.tp * self.ep * self.dp
+            );
+        }
+        if self.is_identity() {
+            return Ok(());
+        }
+        if !cluster.overrides.is_empty() {
+            bail!(
+                "parallelism configs are not supported on clusters with \
+                 heterogeneous link overrides (cluster {:?} has {})",
+                cluster.name,
+                cluster.overrides.len()
+            );
+        }
+        if cluster.levels.len() == 1 {
+            // single-level: both degrees carve the one fanout
+            let f = cluster.levels[0].fanout;
+            if f % (self.tp * self.dp) != 0 {
+                bail!("tp·dp = {} must divide the flat fanout {f}", self.tp * self.dp);
+            }
+        } else {
+            let outer = cluster.levels[0].fanout;
+            if outer % self.dp != 0 {
+                bail!("dp = {} must divide the outermost fanout {outer}", self.dp);
+            }
+            let inner = cluster.levels.last().expect("levels non-empty").fanout;
+            if inner % self.tp != 0 {
+                bail!("tp = {} must divide the innermost fanout {inner}", self.tp);
+            }
+        }
+        Ok(())
+    }
+
+    /// The EP-rank-granularity cluster one data-parallel replica sees: the
+    /// outermost fanout shrinks by `dp` (one replica's share of the outer
+    /// level), the innermost by `tp` (one "GPU" per TP group). Level
+    /// bandwidths are untouched — planners price *per-member* volumes
+    /// against the same link capacities the simulator enforces.
+    pub fn virtual_cluster(&self, cluster: &ClusterSpec) -> Result<ClusterSpec> {
+        self.validate(cluster)?;
+        if self.is_identity() {
+            return Ok(cluster.clone());
+        }
+        let mut v = cluster.clone();
+        v.name = format!("{}/tp{}dp{}", cluster.name, self.tp, self.dp);
+        if v.levels.len() == 1 {
+            v.levels[0].fanout /= self.tp * self.dp;
+        } else {
+            v.levels[0].fanout /= self.dp;
+            let last = v.levels.len() - 1;
+            v.levels[last].fanout /= self.tp;
+        }
+        Ok(v)
+    }
+}
+
 /// One level of the physical hierarchy with its interconnect properties.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LevelSpec {
@@ -238,6 +378,33 @@ impl ClusterSpec {
             Some(l) => self.levels[l].latency,
             None => 0.0,
         }
+    }
+
+    /// Serialize to the TOML subset [`from_config`](Self::from_config)
+    /// parses: `name`, `[[levels]]` and `[[overrides]]` tables. `f64` values
+    /// print with `{:?}` (shortest round-trip form), so
+    /// `from_config(config::parse(spec.to_toml()))` reproduces the spec up
+    /// to the Gbps↔bytes/s unit conversion (≤ 1 ulp).
+    pub fn to_toml(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        if !self.name.is_empty() {
+            writeln!(s, "name = {:?}", self.name).expect("string write");
+        }
+        for lv in &self.levels {
+            writeln!(s, "\n[[levels]]").expect("string write");
+            writeln!(s, "name = {:?}", lv.name).expect("string write");
+            writeln!(s, "fanout = {}", lv.fanout).expect("string write");
+            writeln!(s, "bw_gbps = {:?}", lv.bandwidth * 8.0 / 1e9).expect("string write");
+            writeln!(s, "latency_us = {:?}", lv.latency * 1e6).expect("string write");
+        }
+        for o in &self.overrides {
+            writeln!(s, "\n[[overrides]]").expect("string write");
+            writeln!(s, "level = {}", o.level).expect("string write");
+            writeln!(s, "container = {}", o.container).expect("string write");
+            writeln!(s, "bw_gbps = {:?}", o.bandwidth * 8.0 / 1e9).expect("string write");
+        }
+        s
     }
 
     /// Parse from a config `Value` (see `configs/*.toml`):
@@ -420,6 +587,116 @@ bw_gbps = 128.0
         // last override wins
         let c2 = c.with_override(0, 0, presets::gbps(40.0));
         assert_eq!(c2.container_bandwidth(0, 0), presets::gbps(40.0));
+    }
+
+    #[test]
+    fn parallelism_config_validates_against_hierarchy() {
+        let c = presets::dcs_x_gpus(2, 4, 10.0, 128.0); // 8 GPUs
+        let id = ParallelismConfig::identity(c.total_gpus());
+        assert!(id.is_identity());
+        assert!(id.validate(&c).is_ok());
+
+        let cfg = ParallelismConfig::new(&c, 2, 2).unwrap();
+        assert_eq!((cfg.tp, cfg.ep, cfg.dp), (2, 2, 2));
+        assert_eq!(cfg.replica_gpus(), 4);
+        // replica 1, rank 1, member 1 → 4 + 1·2 + 1 = 7
+        assert_eq!(cfg.physical_gpu(1, 1, 1), 7);
+
+        // dp must divide the outermost fanout (2 DCs → dp ∈ {1, 2})
+        let err = ParallelismConfig::new(&c, 1, 4).unwrap_err().to_string();
+        assert!(err.contains("dp = 4"), "unexpected error: {err}");
+        // tp must divide the innermost fanout
+        let err = ParallelismConfig::new(&c, 3, 1).unwrap_err().to_string();
+        assert!(err.contains("must divide"), "unexpected error: {err}");
+        // zero degrees rejected
+        assert!(ParallelismConfig::new(&c, 0, 1).is_err());
+        // inconsistent hand-built configs rejected
+        assert!(ParallelismConfig { tp: 2, ep: 2, dp: 1 }.validate(&c).is_err());
+        // heterogeneous overrides reject non-identity configs…
+        let het = presets::straggler_dc(2, 4, 10.0, 128.0, 0, 2.5);
+        let err = ParallelismConfig::new(&het, 2, 1).unwrap_err().to_string();
+        assert!(err.contains("overrides"), "unexpected error: {err}");
+        // …but the identity stays valid on them
+        assert!(ParallelismConfig::identity(het.total_gpus()).validate(&het).is_ok());
+    }
+
+    #[test]
+    fn virtual_cluster_shapes() {
+        let c = presets::dcs_x_gpus(4, 8, 10.0, 128.0); // 32 GPUs
+        // identity: byte-identical clone
+        let id = ParallelismConfig::identity(32);
+        assert_eq!(id.virtual_cluster(&c).unwrap(), c);
+        // dp=2, tp=4 → 2 DCs × 2 TP-groups, bandwidths untouched
+        let cfg = ParallelismConfig::new(&c, 4, 2).unwrap();
+        let v = cfg.virtual_cluster(&c).unwrap();
+        assert_eq!(v.total_gpus(), cfg.ep);
+        assert_eq!(v.levels[0].fanout, 2);
+        assert_eq!(v.levels[1].fanout, 2);
+        assert_eq!(v.levels[0].bandwidth, c.levels[0].bandwidth);
+        assert_eq!(v.levels[1].bandwidth, c.levels[1].bandwidth);
+        // single-level cluster: both degrees carve the one fanout
+        let flat = presets::flat_dcs(16, 5.0);
+        let cfg = ParallelismConfig::new(&flat, 2, 4).unwrap();
+        let v = cfg.virtual_cluster(&flat).unwrap();
+        assert_eq!(v.levels[0].fanout, 2);
+        assert_eq!(cfg.ep, 2);
+    }
+
+    /// Satellite: `[[overrides]]` TOML round-trips through
+    /// parse → `from_config` → `to_toml` → parse → `from_config`.
+    #[test]
+    fn cluster_toml_roundtrips_with_overrides() {
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 * (1.0 + a.abs());
+        let equivalent = |a: &ClusterSpec, b: &ClusterSpec| {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.levels.len(), b.levels.len());
+            for (x, y) in a.levels.iter().zip(&b.levels) {
+                assert_eq!(x.name, y.name);
+                assert_eq!(x.fanout, y.fanout);
+                assert!(close(x.bandwidth, y.bandwidth), "{} vs {}", x.bandwidth, y.bandwidth);
+                assert!(close(x.latency, y.latency), "{} vs {}", x.latency, y.latency);
+            }
+            assert_eq!(a.overrides.len(), b.overrides.len());
+            for (x, y) in a.overrides.iter().zip(&b.overrides) {
+                assert_eq!((x.level, x.container), (y.level, y.container));
+                assert!(close(x.bandwidth, y.bandwidth));
+            }
+        };
+        // text → spec → text → spec
+        let text = r#"
+name = "straggler"
+[[levels]]
+name = "dc"
+fanout = 4
+bw_gbps = 10.0
+latency_us = 500.0
+[[levels]]
+name = "gpu"
+fanout = 2
+bw_gbps = 128.0
+[[overrides]]
+level = 0
+container = 2
+bw_gbps = 1.25
+[[overrides]]
+level = 0
+container = 3
+bw_gbps = 2.5
+"#;
+        let a = ClusterSpec::from_config(&crate::config::parse(text).unwrap()).unwrap();
+        assert_eq!(a.overrides.len(), 2);
+        let b = ClusterSpec::from_config(&crate::config::parse(&a.to_toml()).unwrap()).unwrap();
+        equivalent(&a, &b);
+        // preset specs (incl. overrides) survive the round trip too
+        for spec in [
+            presets::cluster_m(),
+            presets::straggler_dc(2, 8, 10.0, 128.0, 1, 1.25),
+            presets::mixed_uplinks(&[10.0, 40.0, 100.0]),
+        ] {
+            let back =
+                ClusterSpec::from_config(&crate::config::parse(&spec.to_toml()).unwrap()).unwrap();
+            equivalent(&spec, &back);
+        }
     }
 
     #[test]

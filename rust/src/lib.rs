@@ -21,13 +21,31 @@
 //!   incremental component-local rate maintenance and a parallel scenario
 //!   sweep harness ([`netsim::sweep`]).
 //! * [`plan`] — the layered Plan IR (per-MoE-layer migrate/dispatch/expert/
-//!   combine phases), the shared Plan-IR → DAG lowering, and the
+//!   combine phases), the shared Plan-IR → DAG lowering, the joint
+//!   TP × EP × DP plan expansion ([`plan::parallel`]) and the
 //!   multi-iteration dynamic replanner over drifting routing traces.
 //! * [`systems`] — schedule generators for HybridEP and the compared systems
 //!   (vanilla EP, Tutel-, FasterMoE-, SmartMoE-style); each emits Plan IR.
 //! * [`runtime`] — PJRT runtime executing the AOT-compiled JAX/Pallas
 //!   artifacts (Python never runs on the request path).
 //! * [`trainer`] — end-to-end training driver over the `train_step` artifact.
+//!
+//! ## The plan → lower → simulate pipeline
+//!
+//! Schedule generation is a three-stage pipeline shared by every system:
+//!
+//! 1. **Plan** — a [`systems::System`] consumes a
+//!    [`systems::SchedCtx`] (cluster + workload + routing + parallelism
+//!    config) and emits a typed, layered [`plan::Plan`]; the stream model
+//!    ([`model`], Eq. 1–8) guides HybridEP's expert-domain choice and
+//!    [`model::solver::solve_joint`] searches the joint `(p, tp, dp)` grid.
+//! 2. **Lower** — one shared pass ([`plan::lower_forward`]) turns the IR
+//!    into a task DAG; under a non-identity
+//!    [`cluster::ParallelismConfig`], [`plan::parallel::planned_forward`]
+//!    first re-plans each data-parallel replica on its virtual cluster and
+//!    expands the flows back to physical GPUs.
+//! 3. **Simulate** — [`netsim::Simulator`] executes the DAG against the
+//!    hierarchical cluster model with max-min-fair bandwidth sharing.
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.

@@ -9,7 +9,7 @@
 //!                fig13, table6, fig16, table7, fig17, or `all`)
 
 use anyhow::{bail, Context, Result};
-use hybrid_ep::cluster::presets;
+use hybrid_ep::cluster::{presets, ParallelismConfig};
 use hybrid_ep::model::solver;
 use hybrid_ep::moe::{GpuSpec, Routing};
 use hybrid_ep::report::experiments as exp;
@@ -56,15 +56,16 @@ fn run() -> Result<()> {
             println!(
                 "hybrid-ep — cross-DC expert parallelism (paper reproduction)\n\n\
                  usage: hybrid-ep <plan|topo|simulate|sweep|train|experiments> [--flags]\n\
-                   plan        --cluster S|M|L --data-mb D --expert-mb E [--cr CR]\n\
+                   plan        --cluster S|M|L --data-mb D --expert-mb E [--cr CR] [--joint]\n\
                    topo        --gpus G --s-ed S\n\
                    simulate    --cluster S|M|L --data-mb D --expert-mb E --system NAME\n\
+                               [--tp T --dp R]\n\
                    sweep       --mode aggregate|pairwise|replan --dcs 8,16 --bw 1.25,10\n\
                                [--p 0.9] [--het 1.0,0.25] [--drift 2.5] [--iters N]\n\
-                               [--threads N]\n\
+                               [--tp 1,2 --dp 1,2] [--threads N]\n\
                    train       --profile test|small|large --steps N [--compression ws|wos --cr CR]\n\
                    experiments --exp fig2b|fig12|table5|fig13|table6|fig16|table7|fig17|\n\
-                               perlayer|straggler|replan|all [--threads N]"
+                               perlayer|straggler|replan|tedjoint|all [--threads N]"
             );
             Ok(())
         }
@@ -107,6 +108,30 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
     t.print();
     println!("predicted per-layer latency: {}", hybrid_ep::util::fmt_secs(plan.predicted_latency));
+    if args.bool("joint") {
+        let mut jt = Table::new(
+            "Joint TP × EP × DP candidates (score = passes × layers × layer-latency + DP sync)",
+            &["tp", "ep", "dp", "virtual S_ED", "layer latency", "score"],
+        );
+        // best-first: solve_joint's pick is the head of this list
+        let cands = solver::joint_candidates(&cluster, &w, &gpu, pe_tx)?;
+        for c in &cands {
+            jt.row(vec![
+                c.config.tp.to_string(),
+                c.config.ep.to_string(),
+                c.config.dp.to_string(),
+                format!("{:?}", c.plan.partition_sizes),
+                hybrid_ep::util::fmt_secs(c.layer_latency),
+                hybrid_ep::util::fmt_secs(c.score),
+            ]);
+        }
+        jt.print();
+        let best = cands.first().expect("joint_candidates is non-empty");
+        println!(
+            "joint optimum: tp={}, ep={}, dp={} with virtual partition {:?}",
+            best.config.tp, best.config.ep, best.config.dp, best.plan.partition_sizes
+        );
+    }
     Ok(())
 }
 
@@ -134,7 +159,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         w.tokens_per_gpu,
         w.k,
     );
-    let ctx = SchedCtx::new(&cluster, &w, &routing);
+    let mut ctx = SchedCtx::new(&cluster, &w, &routing);
+    let (tp, dp) = (args.usize_or("tp", 1)?, args.usize_or("dp", 1)?);
+    ctx.parallelism = ParallelismConfig::new(&cluster, tp, dp)
+        .with_context(|| format!("--tp {tp} --dp {dp} on cluster {}", cluster.name))?;
     let sys: Box<dyn System> = match args.get_or("system", "hybrid") {
         "ep" => Box::new(ep::VanillaEp),
         "tutel" => Box::new(ep::Tutel::default()),
@@ -145,11 +173,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         other => bail!("unknown system {other:?}"),
     };
     let t = sys.iteration_time(&ctx);
+    let cfg = ctx.parallelism;
     println!(
-        "{} on {} ({} GPUs): simulated iteration = {}",
+        "{} on {} ({} GPUs, tp={} ep={} dp={}): simulated iteration = {}",
         sys.name(),
         cluster.name,
         cluster.total_gpus(),
+        cfg.tp,
+        cfg.ep,
+        cfg.dp,
         hybrid_ep::util::fmt_secs(t)
     );
     Ok(())
@@ -167,6 +199,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     grid.hybrid_ps = args.f64_list_or("p", &[0.9])?;
     grid.heterogeneity = args.f64_list_or("het", &[1.0])?;
     grid.drift_rates = args.f64_list_or("drift", &[0.0])?;
+    let tp_list = args.usize_list_or("tp", &[1])?;
+    let dp_list = args.usize_list_or("dp", &[1])?;
+    grid.parallelism = tp_list
+        .iter()
+        .flat_map(|&tp| dp_list.iter().map(move |&dp| (tp, dp)))
+        .collect();
     grid.replan_iters = args.usize_or("iters", 8)?;
     let mode = args.get_or("mode", "aggregate");
     match mode {
@@ -190,8 +228,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     } else {
         grid.drift_rates = vec![0.0];
     }
+    // the parallelism axis reshapes pairwise hybrid schedules only; an
+    // explicit --tp/--dp in another mode surfaces the sweep's descriptive
+    // error rather than being silently dropped
     if mode == "replan" {
-        let outcomes = sweep::run_replan_sweep(&grid, threads);
+        let outcomes = sweep::run_replan_sweep(&grid, threads)?;
         let mut t = Table::new(
             "Replanning sweep — never / always / adaptive totals",
             &["#DCs", "bw", "het", "drift", "never", "always", "adaptive", "switches"],
@@ -211,10 +252,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         t.print();
         println!("{} scenarios across {threads} threads", outcomes.len());
     } else {
-        let outcomes = sweep::run_sweep(&grid, threads);
+        let outcomes = sweep::run_sweep(&grid, threads)?;
         let mut t = Table::new(
             "Scenario sweep — EP vs HybridEP",
-            &["#DCs", "bw", "p", "het", "EP iter", "HybridEP iter", "speedup"],
+            &["#DCs", "bw", "p", "het", "tp,dp", "EP iter", "HybridEP iter", "speedup"],
         );
         for o in &outcomes {
             t.row(vec![
@@ -222,6 +263,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 format!("{} Gbps", o.scenario.bw_gbps),
                 format!("{}", o.scenario.p),
                 format!("{}", o.scenario.heterogeneity),
+                format!("{},{}", o.scenario.tp, o.scenario.dp),
                 hybrid_ep::util::fmt_secs(o.ep.makespan),
                 hybrid_ep::util::fmt_secs(o.hybrid.makespan),
                 format!("{:.2}x", o.speedup),
@@ -300,6 +342,9 @@ fn cmd_experiments(args: &Args) -> Result<()> {
     }
     if all || which == "replan" {
         exp::replanning_drift().0.print();
+    }
+    if all || which == "tedjoint" {
+        exp::fig_ted_joint().0.print();
     }
     Ok(())
 }

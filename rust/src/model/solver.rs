@@ -27,11 +27,21 @@
 //! (`S_ED = 1 ⇒ p = 1`); the *deployable* optimum is the argmin of
 //! `Lat_final` over divisors of `G` (the paper's candidate set). We solve the
 //! continuous optimum for reporting and the grid optimum for scheduling.
+//!
+//! ## Joint TP × EP × DP solver
+//!
+//! [`solve_joint`] generalizes the grid beyond the paper: every deployable
+//! `(tp, dp)` factorization of the cluster (hybrid tensor-expert-data
+//! parallelism à la DeepSpeed-TED, PAPERS.md) re-solves the per-level `p`
+//! optimum on its virtual cluster and adds the TP activation-All-Reduce and
+//! DP expert-gradient-ring terms, making the parallelism layout itself a
+//! planned dimension.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use super::StreamConfig;
-use crate::cluster::{ClusterSpec, Multilevel};
+use crate::cluster::{ClusterSpec, Multilevel, ParallelismConfig};
+use crate::moe::{GpuSpec, MoEWorkload};
 use crate::topology::DomainPartition;
 
 /// Which analytical regime produced the optimum (Fig. 6).
@@ -198,6 +208,133 @@ impl Plan {
 /// holding any single partition across all layers.
 pub fn plan_layers(cluster: &ClusterSpec, inputs: &[PlanInput]) -> Result<Vec<Plan>> {
     inputs.iter().map(|w| plan_multilevel(cluster, w)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Joint TP × EP × DP planning (hybrid tensor-expert-data parallelism à la
+// DeepSpeed-TED — Singh et al., PAPERS.md)
+// ---------------------------------------------------------------------------
+
+/// One joint-parallelism candidate: a deployable `(tp, ep, dp)`
+/// factorization of the cluster plus the hybrid-proportion plan solved on
+/// its [virtual cluster](ParallelismConfig::virtual_cluster). The search is
+/// therefore over the full `(p, tp, dp)` grid: each `(tp, dp)` point
+/// re-solves the per-level `p` optimum under its own geometry.
+#[derive(Clone, Debug)]
+pub struct JointCandidate {
+    pub config: ParallelismConfig,
+    /// Multilevel hybrid plan on the candidate's virtual cluster (partition
+    /// sizes are per *virtual* level — hand them to `HybridEp.partition`
+    /// together with the config).
+    pub plan: Plan,
+    /// Per-MoE-layer forward cost: stream-model latency plus the TP
+    /// activation-All-Reduce tax (`2·(tp−1)·(m+1)·D / B_inner`).
+    pub layer_latency: f64,
+    /// Per-iteration ranking score: comm passes × layers × `layer_latency`,
+    /// plus the expert-replica gradient ring (`2·(dp−1)·n·P_E / B_outer`)
+    /// when `dp > 1` — replicated experts must be kept coherent once per
+    /// iteration whether or not the simulated DAG carries a backward pass.
+    pub score: f64,
+}
+
+/// Score every deployable `(tp, dp)` factorization: `tp` over divisors of
+/// the innermost fanout, `dp` over divisors of the outermost, both jointly
+/// dividing `G`. Volumes are *member-view*
+/// ([`member_plan_input`](crate::plan::parallel::member_plan_input)), so
+/// the identity candidate reproduces [`plan_multilevel`] on the physical
+/// cluster exactly.
+///
+/// Candidates come back **sorted best-first** (minimal score; ties prefer
+/// fewer parallel degrees) — [`solve_joint`] is the head of this list.
+/// Clusters with heterogeneous link overrides are an error, not a silently
+/// identity-only search: TP/DP configs cannot factor per-container
+/// capacities yet.
+pub fn joint_candidates(
+    cluster: &ClusterSpec,
+    w: &MoEWorkload,
+    gpu: &GpuSpec,
+    pe_tx_bytes: f64,
+) -> Result<Vec<JointCandidate>> {
+    ensure!(!cluster.levels.is_empty(), "cluster has no levels");
+    ensure!(
+        cluster.overrides.is_empty(),
+        "joint parallelism search is not supported on clusters with \
+         heterogeneous link overrides ({} on {:?}) — every non-identity \
+         (tp, dp) would be rejected and the search would degenerate to the \
+         identity without saying so",
+        cluster.overrides.len(),
+        cluster.name
+    );
+    let inner = cluster.levels.last().expect("levels non-empty").fanout;
+    let outer = cluster.levels[0].fanout;
+    let mut out = Vec::new();
+    for tp in (1..=inner).filter(|t| inner % t == 0) {
+        for dp in (1..=outer).filter(|d| outer % d == 0) {
+            let cfg = match ParallelismConfig::new(cluster, tp, dp) {
+                Ok(c) => c,
+                // purely geometric misfit, e.g. tp·dp beyond a single-level
+                // fanout — not a deployable point, skipping is correct
+                Err(_) => continue,
+            };
+            out.push(score_candidate(cluster, w, gpu, pe_tx_bytes, cfg)?);
+        }
+    }
+    ensure!(!out.is_empty(), "no deployable (tp, dp) candidate (identity always is)");
+    out.sort_by(|a, b| {
+        a.score
+            .partial_cmp(&b.score)
+            .expect("finite scores")
+            .then((a.config.tp * a.config.dp).cmp(&(b.config.tp * b.config.dp)))
+    });
+    Ok(out)
+}
+
+fn score_candidate(
+    cluster: &ClusterSpec,
+    w: &MoEWorkload,
+    gpu: &GpuSpec,
+    pe_tx_bytes: f64,
+    cfg: ParallelismConfig,
+) -> Result<JointCandidate> {
+    let vcluster = cfg.virtual_cluster(cluster)?;
+    let input =
+        crate::plan::parallel::member_plan_input(w, gpu, &cfg, cluster.total_gpus(), pe_tx_bytes);
+    let plan = plan_multilevel(&vcluster, &input)?;
+    // TP tax: ring All-Reduce of the block activations per dense trunk block
+    // + the MoE output, on the innermost (fast per-GPU) links
+    let lat_tp = if cfg.tp > 1 {
+        let payload = (w.pre_blocks + 1) as f64 * w.d_bytes();
+        2.0 * (cfg.tp as f64 - 1.0) * payload
+            / cluster.levels.last().expect("levels non-empty").bandwidth
+    } else {
+        0.0
+    };
+    // DP tax: the expert-replica gradient ring over the slowest outer links
+    // (gradients move raw expert bytes — the SR codec compresses migrated
+    // weights, not gradients)
+    let lat_dp = if cfg.dp > 1 {
+        2.0 * (cfg.dp as f64 - 1.0) * w.experts_per_gpu as f64 * w.pe_bytes()
+            / cluster.min_bandwidth_at(0)
+    } else {
+        0.0
+    };
+    let layer_latency = plan.predicted_latency + lat_tp;
+    let passes = if w.backward { 2.0 } else { 1.0 };
+    let score = passes * w.moe_layers as f64 * layer_latency + lat_dp;
+    Ok(JointCandidate { config: cfg, plan, layer_latency, score })
+}
+
+/// Joint `(p, tp, dp)` optimum: the head of [`joint_candidates`]'s
+/// best-first ordering (minimal per-iteration score; ties prefer fewer
+/// parallel degrees — the identity when everything else is equal).
+pub fn solve_joint(
+    cluster: &ClusterSpec,
+    w: &MoEWorkload,
+    gpu: &GpuSpec,
+    pe_tx_bytes: f64,
+) -> Result<JointCandidate> {
+    let cands = joint_candidates(cluster, w, gpu, pe_tx_bytes)?;
+    Ok(cands.into_iter().next().expect("non-empty candidate set"))
 }
 
 #[cfg(test)]
@@ -462,6 +599,115 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn joint_identity_candidate_matches_plain_multilevel() {
+        let cluster = presets::dcs_x_gpus(2, 4, 10.0, 128.0);
+        let w = MoEWorkload {
+            tokens_per_gpu: 2048,
+            hidden: 512,
+            ffn: 1024,
+            experts_per_gpu: 2,
+            k: 2,
+            moe_layers: 4,
+            pre_blocks: 1,
+            backward: true,
+        };
+        let gpu = GpuSpec::a800();
+        let pe_tx = w.pe_bytes() / 50.0;
+        let cands = joint_candidates(&cluster, &w, &gpu, pe_tx).unwrap();
+        let id = cands.iter().find(|c| c.config.is_identity()).expect("identity candidate");
+        let direct =
+            plan_multilevel(&cluster, &w.plan_input(&gpu, cluster.total_gpus(), pe_tx)).unwrap();
+        assert_eq!(id.plan.partition_sizes, direct.partition_sizes);
+        assert_eq!(
+            id.plan.predicted_latency.to_bits(),
+            direct.predicted_latency.to_bits(),
+            "identity candidate must reproduce the plain multilevel plan bit-for-bit"
+        );
+        assert_eq!(id.layer_latency.to_bits(), direct.predicted_latency.to_bits());
+    }
+
+    #[test]
+    fn joint_candidates_sorted_best_first_and_reject_override_clusters() {
+        let cluster = presets::dcs_x_gpus(2, 4, 1.0, 128.0);
+        let w = MoEWorkload {
+            tokens_per_gpu: 8192,
+            hidden: 256,
+            ffn: 512,
+            experts_per_gpu: 1,
+            k: 1,
+            moe_layers: 6,
+            pre_blocks: 1,
+            backward: true,
+        };
+        let gpu = GpuSpec::a800();
+        let cands = joint_candidates(&cluster, &w, &gpu, w.pe_bytes()).unwrap();
+        for pair in cands.windows(2) {
+            assert!(pair[0].score <= pair[1].score, "candidates must be sorted best-first");
+        }
+        let best = solve_joint(&cluster, &w, &gpu, w.pe_bytes()).unwrap();
+        assert_eq!(best.config, cands[0].config, "solve_joint is the list head");
+        // heterogeneous clusters are a descriptive error, not a silently
+        // identity-only search
+        let het = presets::straggler_dc(2, 4, 10.0, 128.0, 0, 2.5);
+        let err = joint_candidates(&het, &w, &gpu, w.pe_bytes()).unwrap_err().to_string();
+        assert!(err.contains("overrides"), "unexpected error: {err}");
+        assert!(solve_joint(&het, &w, &gpu, w.pe_bytes()).is_err());
+    }
+
+    #[test]
+    fn joint_prefers_identity_when_experts_dominate() {
+        // huge raw experts, modest data: replicating experts across DCs
+        // (dp) or paying TP activation reductions buys nothing
+        let cluster = presets::dcs_x_gpus(2, 4, 10.0, 128.0);
+        let w = MoEWorkload {
+            tokens_per_gpu: 256,
+            hidden: 512,
+            ffn: 8192,
+            experts_per_gpu: 1,
+            k: 1,
+            moe_layers: 2,
+            pre_blocks: 1,
+            backward: true,
+        };
+        let best = solve_joint(&cluster, &w, &GpuSpec::a800(), w.pe_bytes()).unwrap();
+        assert!(best.config.is_identity(), "expected pure EP, got {:?}", best.config);
+    }
+
+    #[test]
+    fn joint_opens_dp_under_constrained_uplink_with_small_experts() {
+        // 1 Gbps uplink, small raw experts, heavy activations: keeping the
+        // forward pass inside each DC and paying one expert-gradient ring
+        // beats every per-layer cross-DC exchange
+        let cluster = presets::dcs_x_gpus(2, 4, 1.0, 128.0);
+        let w = MoEWorkload {
+            tokens_per_gpu: 8192,
+            hidden: 256,
+            ffn: 512,
+            experts_per_gpu: 1,
+            k: 1,
+            moe_layers: 6,
+            pre_blocks: 1,
+            backward: true,
+        };
+        let gpu = GpuSpec::a800();
+        let best = solve_joint(&cluster, &w, &gpu, w.pe_bytes()).unwrap();
+        assert!(
+            best.config.tp > 1 || best.config.dp > 1,
+            "constrained uplink must open TP or DP, got {:?}",
+            best.config
+        );
+        let cands = joint_candidates(&cluster, &w, &gpu, w.pe_bytes()).unwrap();
+        let id = cands.iter().find(|c| c.config.is_identity()).expect("identity candidate");
+        assert!(
+            best.score < id.score,
+            "joint pick {:?} ({}) must beat identity ({})",
+            best.config,
+            best.score,
+            id.score
+        );
     }
 
     #[test]

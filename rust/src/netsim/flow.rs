@@ -6,7 +6,7 @@
 //! freeze their flows at that rate, subtract, repeat. Symmetric patterns
 //! (uniform A2A) converge in one round, keeping large simulations cheap.
 //!
-//! Two entry points share the same kernel ([`water_fill`]):
+//! Two entry points share the same kernel (`water_fill`):
 //!
 //! * [`max_min_rates`] — the **reference oracle**: solve the whole flow set
 //!   from scratch. O(flows × resources) per call; used by the simulator's

@@ -12,7 +12,7 @@
 //! Rate maintenance is **incremental** by default: flow arrivals/completions
 //! mark their resources dirty and [`IncrementalMaxMin`] re-solves only the
 //! affected connected component once per event batch — flows that finish
-//! within [`EPS`] of each other coalesce into a single event, paying one
+//! within `EPS` of each other coalesce into a single event, paying one
 //! solve for the whole batch. [`RateMode::Reference`] keeps the pre-change
 //! behaviour (full [`max_min_rates`] recompute per event) as an oracle for
 //! differential tests and as the baseline for the `hotpath_micro` speedup

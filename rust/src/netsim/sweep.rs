@@ -15,12 +15,16 @@
 //!   the O(G) aggregated ring schedules; scales to 1000 DCs.
 //! * [`SweepMode::Pairwise`] — Fig. 16: small hierarchical clusters with the
 //!   full pairwise EP vs HybridEP schedules and (optionally Zipf-skewed,
-//!   seed-driven) routing; reports traffic as well as makespans.
+//!   seed-driven) routing; reports traffic as well as makespans. The
+//!   [`SweepGrid::parallelism`] axis additionally varies the hybrid side's
+//!   joint TP × EP × DP degrees (TED-style baselines).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::cluster::presets;
+use anyhow::{bail, ensure, Result};
+
+use crate::cluster::{presets, ParallelismConfig};
 use crate::moe::{MoEWorkload, Routing};
 use crate::netsim::sim::{RateMode, SimResult, Simulator};
 use crate::systems::aggregate::AggregateHybrid;
@@ -101,6 +105,11 @@ pub struct SweepGrid {
     /// Routing-skew drift spans for replanning scenarios
     /// ([`run_replan_sweep`]); ignored by the plain EP-vs-Hybrid sweep.
     pub drift_rates: Vec<f64>,
+    /// Joint-parallelism axis: `(tp, dp)` degrees applied to the *hybrid*
+    /// side of each [`SweepMode::Pairwise`] scenario (the EP baseline stays
+    /// pure EP). `(1, 1)` is the identity; aggregate and replanning sweeps
+    /// only accept the identity.
+    pub parallelism: Vec<(usize, usize)>,
     /// Iterations per replanning scenario.
     pub replan_iters: usize,
     pub workload: MoEWorkload,
@@ -121,6 +130,7 @@ impl SweepGrid {
             hybrid_ps: vec![0.9],
             heterogeneity: vec![1.0],
             drift_rates: vec![0.0],
+            parallelism: vec![(1, 1)],
             replan_iters: 8,
             workload: MoEWorkload {
                 tokens_per_gpu: 8192,
@@ -148,27 +158,68 @@ impl SweepGrid {
                 for &p in &self.hybrid_ps {
                     for &het in &self.heterogeneity {
                         for &drift in &self.drift_rates {
-                            let index = out.len();
-                            out.push(Scenario {
-                                index,
-                                dcs,
-                                bw_gbps: bw,
-                                p,
-                                heterogeneity: het,
-                                drift,
-                                seed: scenario_seed(self.base_seed, index as u64),
-                                workload: self.workload,
-                                compression_ratio: self.compression_ratio,
-                                latency_us: self.latency_us,
-                                mode: self.mode,
-                                engine: self.engine,
-                            });
+                            for &(tp, dp) in &self.parallelism {
+                                let index = out.len();
+                                out.push(Scenario {
+                                    index,
+                                    dcs,
+                                    bw_gbps: bw,
+                                    p,
+                                    heterogeneity: het,
+                                    drift,
+                                    tp,
+                                    dp,
+                                    seed: scenario_seed(self.base_seed, index as u64),
+                                    workload: self.workload,
+                                    compression_ratio: self.compression_ratio,
+                                    latency_us: self.latency_us,
+                                    mode: self.mode,
+                                    engine: self.engine,
+                                });
+                            }
                         }
                     }
                 }
             }
         }
         out
+    }
+
+    /// Bugfix guard: an empty axis silently expanded to zero scenarios and
+    /// made every sweep vacuous — name the offending axis instead. Also
+    /// fails fast on axis combinations no scenario could run (so a bad grid
+    /// errors before anything is simulated, not after).
+    fn validate(&self) -> Result<()> {
+        let axes = [
+            ("dc_counts", self.dc_counts.is_empty()),
+            ("bandwidths_gbps", self.bandwidths_gbps.is_empty()),
+            ("hybrid_ps", self.hybrid_ps.is_empty()),
+            ("heterogeneity", self.heterogeneity.is_empty()),
+            ("drift_rates", self.drift_rates.is_empty()),
+            ("parallelism", self.parallelism.is_empty()),
+        ];
+        for (name, empty) in axes {
+            ensure!(
+                !empty,
+                "sweep grid axis `{name}` is empty — the grid expands to zero \
+                 scenarios and the sweep would return vacuous results"
+            );
+        }
+        let nonidentity = self.parallelism.iter().any(|&(tp, dp)| (tp, dp) != (1, 1));
+        if nonidentity {
+            ensure!(
+                self.mode != SweepMode::Aggregate,
+                "the parallelism axis applies to pairwise sweeps only (the \
+                 aggregate O(G) ring schedules are pure-EP-shaped)"
+            );
+            ensure!(
+                self.heterogeneity.iter().all(|&h| h == 1.0),
+                "the parallelism axis cannot be combined with heterogeneity \
+                 factors ≠ 1 (link overrides are not supported under TP/DP \
+                 configs) — split the sweep into separate grids"
+            );
+        }
+        Ok(())
     }
 }
 
@@ -184,6 +235,10 @@ pub struct Scenario {
     pub heterogeneity: f64,
     /// routing-skew drift span for replanning scenarios
     pub drift: f64,
+    /// tensor-parallel degree for the hybrid side (pairwise mode)
+    pub tp: usize,
+    /// data-parallel replicas for the hybrid side (pairwise mode)
+    pub dp: usize,
     pub seed: u64,
     pub workload: MoEWorkload,
     pub compression_ratio: f64,
@@ -241,11 +296,23 @@ fn apply_heterogeneity(cluster: crate::cluster::ClusterSpec, sc: &Scenario) -> c
 }
 
 /// Simulate one scenario (EP baseline + hybrid at the scenario's `p`).
-pub fn run_scenario(sc: &Scenario) -> ScenarioOutcome {
+/// Errors when the scenario's `(tp, dp)` does not factor its cluster (or is
+/// non-identity in [`SweepMode::Aggregate`], whose O(G) ring schedules are
+/// pure-EP-shaped by construction).
+pub fn run_scenario(sc: &Scenario) -> Result<ScenarioOutcome> {
     let w = sc.workload;
     let pe_tx = w.pe_bytes() / sc.compression_ratio;
     let (ep, hybrid) = match sc.mode {
         SweepMode::Aggregate => {
+            if (sc.tp, sc.dp) != (1, 1) {
+                bail!(
+                    "the parallelism axis applies to pairwise sweeps only \
+                     (aggregate scenario {} has tp={}, dp={})",
+                    sc.index,
+                    sc.tp,
+                    sc.dp
+                );
+            }
             let cluster =
                 apply_heterogeneity(presets::flat_dcs_lat(sc.dcs, sc.bw_gbps, sc.latency_us), sc);
             let routing = Routing::uniform(1, 1, 1, 1); // aggregate schedules ignore it
@@ -269,27 +336,35 @@ pub fn run_scenario(sc: &Scenario) -> ScenarioOutcome {
             };
             let ctx = SchedCtx::new(&cluster, &w, &routing);
             let ep_dag = VanillaEp.build_iteration(&ctx);
+            // the joint-parallelism axis reshapes the hybrid side only: the
+            // EP baseline stays the fixed pure-EP reference
+            let cfg = ParallelismConfig::new(&cluster, sc.tp, sc.dp)?;
+            let hy_cluster = cfg.virtual_cluster(&cluster)?;
+            let mut hy_ctx = SchedCtx::new(&cluster, &w, &routing);
+            hy_ctx.parallelism = cfg;
             let hy = HybridEp {
-                partition: Some(partition_for_p(&cluster, sc.p)),
+                partition: Some(partition_for_p(&hy_cluster, sc.p)),
                 migration: Some(MigrationCfg {
                     compression_ratio: sc.compression_ratio,
                     ..Default::default()
                 }),
             };
-            let hy_dag = hy.build_iteration(&ctx);
+            let hy_dag = hy.build_iteration(&hy_ctx);
             let sim = |dag| Simulator::with_mode(&cluster, sc.engine).run(dag);
             (sim(&ep_dag), sim(&hy_dag))
         }
     };
     let speedup = ep.makespan / hybrid.makespan;
-    ScenarioOutcome { scenario: sc.clone(), ep, hybrid, speedup }
+    Ok(ScenarioOutcome { scenario: sc.clone(), ep, hybrid, speedup })
 }
 
 /// Run every scenario of the grid across `threads` workers; outcomes come
-/// back in grid order and are bit-identical for any thread count.
-pub fn run_sweep(grid: &SweepGrid, threads: usize) -> Vec<ScenarioOutcome> {
+/// back in grid order and are bit-identical for any thread count. Errors on
+/// an empty grid (see [`SweepGrid::scenarios`]) or an invalid scenario.
+pub fn run_sweep(grid: &SweepGrid, threads: usize) -> Result<Vec<ScenarioOutcome>> {
+    grid.validate()?;
     let scenarios = grid.scenarios();
-    parallel_map(&scenarios, threads, |_, sc| run_scenario(sc))
+    parallel_map(&scenarios, threads, |_, sc| run_scenario(sc)).into_iter().collect()
 }
 
 /// Replanning-over-drift outcome at one grid point: total training time over
@@ -314,15 +389,25 @@ impl ReplanOutcome {
 
 /// Run one replanning scenario: a skew ramp of span `sc.drift` above
 /// `base_skew`, on a `dcs × gpus_per_dc` cluster with the scenario's
-/// heterogeneity, compared across Never/Always/Adaptive policies.
+/// heterogeneity, compared across Never/Always/Adaptive policies. Errors on
+/// zero iterations or a non-identity parallelism axis.
 pub fn run_replan_scenario(
     sc: &Scenario,
     gpus_per_dc: usize,
     base_skew: f64,
     iters: usize,
-) -> ReplanOutcome {
+) -> Result<ReplanOutcome> {
     use crate::plan::replanner;
     use crate::systems::hybrid_ep::MigrationCfg;
+    if (sc.tp, sc.dp) != (1, 1) {
+        bail!(
+            "the parallelism axis is not supported in replanning sweeps \
+             (scenario {} has tp={}, dp={})",
+            sc.index,
+            sc.tp,
+            sc.dp
+        );
+    }
     let cluster = apply_heterogeneity(
         presets::dcs_x_gpus(sc.dcs, gpus_per_dc, sc.bw_gbps, presets::PCIE_GBPS),
         sc,
@@ -339,25 +424,33 @@ pub fn run_replan_scenario(
         sc.drift / 4.0,
         iters,
         sc.seed,
-    );
+    )?;
     let cfg = replanner::ReplanCfg {
         migration: MigrationCfg { compression_ratio: sc.compression_ratio, ..Default::default() },
         window: 4,
     };
-    let [never, always, adaptive] = replanner::compare_policies(&cluster, &w, &trace, &cfg);
-    ReplanOutcome {
+    let [never, always, adaptive] = replanner::compare_policies(&cluster, &w, &trace, &cfg)?;
+    Ok(ReplanOutcome {
         scenario: sc.clone(),
         never_secs: never.total_secs,
         always_secs: always.total_secs,
         adaptive_secs: adaptive.total_secs,
         adaptive_switches: adaptive.switches,
         always_switches: always.switches,
-    }
+    })
 }
 
 /// Replanning sweep over the grid (drift and heterogeneity axes): fans
-/// scenarios across `threads` workers, deterministic in grid order.
-pub fn run_replan_sweep(grid: &SweepGrid, threads: usize) -> Vec<ReplanOutcome> {
+/// scenarios across `threads` workers, deterministic in grid order. Errors
+/// on an empty grid or a zero-iteration trace (both used to return vacuous
+/// results silently).
+pub fn run_replan_sweep(grid: &SweepGrid, threads: usize) -> Result<Vec<ReplanOutcome>> {
+    grid.validate()?;
+    ensure!(
+        grid.replan_iters >= 1,
+        "replan_iters must be at least 1 (got 0 — a zero-iteration replanning \
+         sweep would compare nothing)"
+    );
     let (gpus_per_dc, base_skew) = match grid.mode {
         SweepMode::Pairwise { gpus_per_dc, zipf_skew } => (gpus_per_dc, zipf_skew),
         SweepMode::Aggregate => (1, 0.0),
@@ -366,6 +459,8 @@ pub fn run_replan_sweep(grid: &SweepGrid, threads: usize) -> Vec<ReplanOutcome> 
     parallel_map(&scenarios, threads, |_, sc| {
         run_replan_scenario(sc, gpus_per_dc, base_skew, grid.replan_iters)
     })
+    .into_iter()
+    .collect()
 }
 
 /// Aggregate view over a finished sweep.
@@ -457,8 +552,8 @@ mod tests {
     #[test]
     fn parallel_sweep_matches_serial_bitwise() {
         let grid = small_grid(SweepMode::Aggregate);
-        let serial = run_sweep(&grid, 1);
-        let parallel = run_sweep(&grid, 4);
+        let serial = run_sweep(&grid, 1).unwrap();
+        let parallel = run_sweep(&grid, 4).unwrap();
         assert_eq!(serial.len(), parallel.len());
         for (s, p) in serial.iter().zip(&parallel) {
             assert_eq!(s.ep.makespan.to_bits(), p.ep.makespan.to_bits());
@@ -471,7 +566,7 @@ mod tests {
     #[test]
     fn aggregate_sweep_speedups_sane() {
         let grid = small_grid(SweepMode::Aggregate);
-        let out = run_sweep(&grid, default_threads());
+        let out = run_sweep(&grid, default_threads()).unwrap();
         assert_eq!(out.len(), 4);
         for o in &out {
             assert!(o.speedup.is_finite() && o.speedup > 0.0);
@@ -500,7 +595,7 @@ mod tests {
         let mut grid = small_grid(SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 });
         grid.dc_counts = vec![2];
         grid.hybrid_ps = vec![0.0, 0.5];
-        let out = run_sweep(&grid, 1);
+        let out = run_sweep(&grid, 1).unwrap();
         assert_eq!(out.len(), 2);
         assert_ne!(
             out[0].hybrid.bytes_ag.to_bits(),
@@ -515,7 +610,7 @@ mod tests {
         grid.dc_counts = vec![8];
         grid.hybrid_ps = vec![1.0];
         grid.heterogeneity = vec![1.0, 0.25];
-        let out = run_sweep(&grid, 2);
+        let out = run_sweep(&grid, 2).unwrap();
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].scenario.heterogeneity, 1.0);
         assert_eq!(out[1].scenario.heterogeneity, 0.25);
@@ -539,8 +634,8 @@ mod tests {
         grid.workload.tokens_per_gpu = 1024;
         grid.workload.ffn = 2048;
         grid.compression_ratio = 1.0;
-        let serial = run_replan_sweep(&grid, 1);
-        let parallel = run_replan_sweep(&grid, 4);
+        let serial = run_replan_sweep(&grid, 1).unwrap();
+        let parallel = run_replan_sweep(&grid, 4).unwrap();
         assert_eq!(serial.len(), 2);
         assert_eq!(serial.len(), parallel.len());
         for (s, p) in serial.iter().zip(&parallel) {
@@ -558,8 +653,8 @@ mod tests {
         let mut grid = small_grid(SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 1.2 });
         grid.dc_counts = vec![2];
         grid.hybrid_ps = vec![0.0];
-        let a = run_sweep(&grid, 2);
-        let b = run_sweep(&grid, 1);
+        let a = run_sweep(&grid, 2).unwrap();
+        let b = run_sweep(&grid, 1).unwrap();
         assert_eq!(a.len(), 1);
         // deterministic under thread count despite skewed (seeded) routing
         assert_eq!(a[0].ep.makespan.to_bits(), b[0].ep.makespan.to_bits());
@@ -570,11 +665,76 @@ mod tests {
         // a different base seed changes the skewed routing, hence the traffic
         let mut grid2 = grid.clone();
         grid2.base_seed ^= 0xDEADBEEF;
-        let c = run_sweep(&grid2, 1);
+        let c = run_sweep(&grid2, 1).unwrap();
         assert_ne!(
             a[0].ep.makespan.to_bits(),
             c[0].ep.makespan.to_bits(),
             "zipf routing must follow the scenario seed"
         );
+    }
+
+    /// Regression (bugfix): empty axes and zero-iteration replanning grids
+    /// must be descriptive errors, not silently-empty result vectors.
+    #[test]
+    fn degenerate_grids_are_descriptive_errors() {
+        let mut grid = small_grid(SweepMode::Aggregate);
+        grid.dc_counts = Vec::new();
+        let err = run_sweep(&grid, 2).unwrap_err().to_string();
+        assert!(err.contains("dc_counts"), "unexpected error: {err}");
+
+        let mut grid = small_grid(SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 });
+        grid.bandwidths_gbps = Vec::new();
+        let err = run_replan_sweep(&grid, 2).unwrap_err().to_string();
+        assert!(err.contains("bandwidths_gbps"), "unexpected error: {err}");
+
+        let mut grid = small_grid(SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 });
+        grid.replan_iters = 0;
+        let err = run_replan_sweep(&grid, 1).unwrap_err().to_string();
+        assert!(err.contains("replan_iters"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn parallelism_axis_reshapes_the_hybrid_side() {
+        let mut grid = small_grid(SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 });
+        grid.dc_counts = vec![2];
+        grid.hybrid_ps = vec![0.5];
+        grid.workload.backward = false;
+        grid.parallelism = vec![(1, 1), (1, 2), (2, 1)];
+        let out = run_sweep(&grid, 2).unwrap();
+        assert_eq!(out.len(), 3);
+        // the identity point matches a grid without the axis bit-for-bit
+        // (the axis is the innermost loop, so scenario 0 keeps its seed)
+        let mut base = grid.clone();
+        base.parallelism = vec![(1, 1)];
+        let base_out = run_sweep(&base, 1).unwrap();
+        assert_eq!(out[0].hybrid.makespan.to_bits(), base_out[0].hybrid.makespan.to_bits());
+        assert_eq!(out[0].ep.makespan.to_bits(), base_out[0].ep.makespan.to_bits());
+        // dp = #DCs keeps the hybrid forward pass intra-DC entirely
+        let dp_point = &out[1];
+        assert_eq!((dp_point.scenario.tp, dp_point.scenario.dp), (1, 2));
+        assert_eq!(dp_point.hybrid.bytes_per_level[0], 0.0, "dp=2 must avoid cross-DC flows");
+        assert!(dp_point.ep.bytes_per_level[0] > 0.0, "the EP baseline still crosses DCs");
+        // tp = 2 emits TP activation All-Reduce traffic on the hybrid side
+        let tp_point = &out[2];
+        assert_eq!((tp_point.scenario.tp, tp_point.scenario.dp), (2, 1));
+        assert!(tp_point.hybrid.bytes_allreduce > 0.0, "tp=2 must carry tp_sync traffic");
+        for o in &out {
+            assert!(o.speedup.is_finite() && o.speedup > 0.0);
+        }
+        // the axis is rejected where it cannot apply, before anything is
+        // simulated: aggregate mode…
+        let mut agg = small_grid(SweepMode::Aggregate);
+        agg.parallelism = vec![(1, 2)];
+        let err = run_sweep(&agg, 1).unwrap_err().to_string();
+        assert!(err.contains("pairwise"), "unexpected error: {err}");
+        // …heterogeneous grids (link overrides don't compose with TP/DP)…
+        let mut het = grid.clone();
+        het.heterogeneity = vec![1.0, 0.5];
+        let err = run_sweep(&het, 1).unwrap_err().to_string();
+        assert!(err.contains("heterogeneity"), "unexpected error: {err}");
+        // …and non-factoring degrees
+        let mut bad = grid.clone();
+        bad.parallelism = vec![(3, 1)];
+        assert!(run_sweep(&bad, 1).is_err());
     }
 }

@@ -24,9 +24,13 @@
 //!   pre-expert compute and its migrate arrivals; combine retraces the
 //!   dispatch phases in reverse with endpoints swapped. Rounds are mutually
 //!   independent (chunked A2A/compute overlap à la Tutel).
+//! * An optional per-layer [`LayerPlan::tp_sync`] phase (tensor-parallel
+//!   activation All-Reduce, `Tag::AllReduce`) closes the layer after its
+//!   rounds — see [`parallel`] for how TP × EP × DP configs produce it.
 //! * Zero-cost barriers synchronize phase boundaries; they change neither
 //!   traffic accounting nor makespan.
 
+pub mod parallel;
 pub mod replanner;
 
 use crate::netsim::{Dag, Tag, TaskId};
@@ -42,7 +46,7 @@ pub struct Flow {
 /// One communication phase: a set of flows released together, plus an
 /// optional per-flow setup compute on the source (message/connection setup,
 /// Table VII frequency semantics).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommPhase {
     pub flows: Vec<Flow>,
     /// Per-flow setup compute seconds on the source, serialized before the
@@ -62,7 +66,7 @@ impl CommPhase {
 }
 
 /// Expert-migration (AG) schedule for one layer.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct MigratePlan {
     /// Per-GPU prologue compute (e.g. fused SREncode) gated on layer entry;
     /// the first migrate phase's flows depend on it. `None` = no prologue.
@@ -87,7 +91,7 @@ impl MigratePlan {
 
 /// One data round (pipeline chunk): hierarchical dispatch, expert compute,
 /// combine retracing dispatch in reverse.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Round {
     /// Sequential dispatch phases (plain EP has exactly one; hierarchical
     /// HybridEP has one per diverging level).
@@ -98,16 +102,22 @@ pub struct Round {
 }
 
 /// One MoE layer of the plan.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LayerPlan {
     pub migrate: MigratePlan,
     /// Per-GPU pre-expert compute seconds.
     pub pre_secs: Vec<f64>,
     pub rounds: Vec<Round>,
+    /// Tensor-parallel activation All-Reduce closing the layer: one ring
+    /// phase within each TP group, gated on the layer's rounds (lowered with
+    /// `Tag::AllReduce`). `None` for pure-EP plans — [`parallel`] injects it
+    /// when a [`ParallelismConfig`](crate::cluster::ParallelismConfig) has
+    /// `tp > 1`.
+    pub tp_sync: Option<CommPhase>,
 }
 
 /// The full layered plan for one forward pass.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Plan {
     pub gpus: usize,
     pub layers: Vec<LayerPlan>,
@@ -127,6 +137,15 @@ impl Plan {
     /// Static AG traffic the plan will move.
     pub fn ag_bytes(&self) -> f64 {
         self.layers.iter().map(|l| l.migrate.ag_bytes()).sum()
+    }
+
+    /// Static All-Reduce traffic of the per-layer TP sync phases.
+    pub fn allreduce_bytes(&self) -> f64 {
+        self.layers
+            .iter()
+            .filter_map(|l| l.tp_sync.as_ref())
+            .map(|p| p.total_bytes())
+            .sum()
     }
 
     /// Total expert-compute seconds across all GPUs and layers.
@@ -253,6 +272,34 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
         }
     }
 
+    // TP activation All-Reduce: one ring phase within each tensor-parallel
+    // group, gated on the layer's rounds (the expert outputs it reduces)
+    if let Some(phase) = &lp.tp_sync {
+        if !phase.flows.is_empty() {
+            let stage: Vec<TaskId> = (0..g)
+                .map(|m| {
+                    let mut deps = std::mem::take(&mut exits[m]);
+                    deps.push(pre[m]);
+                    dag.barrier(deps, "tp_stage")
+                })
+                .collect();
+            let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
+            for f in &phase.flows {
+                let mut dep = stage[f.src];
+                if phase.setup_secs > 0.0 {
+                    dep = dag.compute(f.src, phase.setup_secs, vec![dep], "tp_setup");
+                }
+                let t = dag.transfer(f.src, f.dst, f.bytes, Tag::AllReduce, vec![dep], phase.label);
+                arrivals[f.dst].push(t);
+            }
+            for m in 0..g {
+                let mut deps = std::mem::take(&mut arrivals[m]);
+                deps.push(stage[m]);
+                exits[m].push(dag.barrier(deps, "tp_phase"));
+            }
+        }
+    }
+
     // layer end
     (0..g)
         .map(|m| {
@@ -289,6 +336,7 @@ mod tests {
                     )],
                     expert_secs: vec![0.3, 0.4],
                 }],
+                tp_sync: None,
             }],
         }
     }
@@ -350,6 +398,38 @@ mod tests {
     }
 
     #[test]
+    fn tp_sync_phase_lowers_as_allreduce_after_experts() {
+        let mut plan = two_gpu_layer();
+        plan.layers[0].tp_sync = Some(CommPhase::new(
+            vec![Flow { src: 0, dst: 1, bytes: 1e6 }, Flow { src: 1, dst: 0, bytes: 1e6 }],
+            "tp_sync",
+        ));
+        let mut dag = Dag::new();
+        let start = dag.barrier(vec![], "s");
+        let exits = lower_forward(&plan, &mut dag, &[start, start]);
+        dag.barrier(exits, "end");
+        assert_eq!(dag.traffic_by_tag(Tag::AllReduce), 2e6);
+        assert_eq!(dag.traffic_by_tag(Tag::AllReduce), plan.allreduce_bytes());
+        // the sync rides the critical path after the rounds: makespan must
+        // grow by at least its wire time vs the un-synced plan
+        let cluster = presets::dcs_x_gpus(2, 1, 10.0, 128.0);
+        let base = {
+            let p = two_gpu_layer();
+            let mut d = Dag::new();
+            let s = d.barrier(vec![], "s");
+            let e = lower_forward(&p, &mut d, &[s, s]);
+            d.barrier(e, "end");
+            Simulator::new(&cluster).run(&d).makespan
+        };
+        let synced = Simulator::new(&cluster).run(&dag).makespan;
+        let bw = cluster.levels[0].bandwidth;
+        assert!(
+            synced >= base + 1e6 / bw,
+            "tp sync must serialize after the rounds: {base} → {synced}"
+        );
+    }
+
+    #[test]
     fn empty_phases_and_zero_prologue_are_harmless() {
         let plan = Plan {
             gpus: 2,
@@ -360,6 +440,7 @@ mod tests {
                     dispatch: vec![CommPhase::new(Vec::new(), "dispatch")],
                     expert_secs: vec![0.25, 0.25],
                 }],
+                tp_sync: None,
             }],
         };
         let mut dag = Dag::new();

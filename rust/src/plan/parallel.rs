@@ -1,0 +1,497 @@
+//! TED-style joint parallelism: planning under a
+//! [`ParallelismConfig`](crate::cluster::ParallelismConfig) (TP × EP × DP).
+//!
+//! Every [`System`](crate::systems::System) plans a pure-EP forward pass;
+//! this module makes *any* system TED-capable without touching its planner:
+//!
+//! 1. **Virtualize** — for each of the `dp` data-parallel replicas, build a
+//!    derived [`SchedCtx`]: the replica's [virtual
+//!    cluster](crate::cluster::ParallelismConfig::virtual_cluster) (one
+//!    "GPU" per TP group, the replica's share of the outer level), a
+//!    workload whose per-rank tokens grow by `tp` and whose per-rank experts
+//!    grow by `tp · dp` (total distinct experts are conserved — each
+//!    replica hosts the full expert set), a GPU spec whose throughput grows
+//!    by `tp` (TP-sharded GEMMs), and the replica's aggregated routing.
+//! 2. **Plan** — run the system's own `plan_forward` on each virtual
+//!    context.
+//! 3. **Expand** — map every virtual flow `(v → w, B)` to `tp` physical
+//!    flows `(phys(r, v, j) → phys(r, w, j), B / tp)` (sequence-sharded
+//!    collectives: each TP member moves only its shard, the DeepSpeed-TED
+//!    duplicate-free A2A) and replicate per-rank compute durations to every
+//!    member (all members run their shard for the same wall time).
+//! 4. **Inject** — when `tp > 1`, close every layer with a
+//!    [`LayerPlan::tp_sync`] ring All-Reduce inside each TP group
+//!    (activation reduction for the row-parallel expert/dense GEMMs).
+//!
+//! The `dp` gradient ring (replicated experts + dense trunk) lives in
+//! [`System::build_iteration`](crate::systems::System::build_iteration): it
+//! belongs to the backward epilogue, not the forward plan.
+//!
+//! With the identity config this is a pass-through: the returned plan is the
+//! system's own `plan_forward` output, bit for bit.
+//!
+//! ## Modeling caveat
+//!
+//! Virtual contexts are *rank-view*: per-rank communication volumes are `tp`
+//! times the per-member volumes the expansion actually emits. Compute wall
+//! times are exact (the `tp`-scaled GPU spec cancels the `tp`-scaled
+//! tokens), but a system that runs the stream-model solver *inside* its
+//! virtual context (HybridEP's partition resolve) prices communication
+//! conservatively high relative to compute. The joint solver
+//! ([`model::solver::solve_joint`](crate::model::solver::solve_joint))
+//! therefore scores candidates with the bias-free member-view input
+//! ([`member_plan_input`]) and hands the chosen partition down explicitly.
+
+use crate::cluster::ParallelismConfig;
+use crate::model::solver::PlanInput;
+use crate::moe::{GpuSpec, MoEWorkload, Routing};
+use crate::plan::{CommPhase, Flow, LayerPlan, MigratePlan, Plan, Round};
+use crate::systems::{SchedCtx, System};
+
+/// Plan one forward pass under `ctx.parallelism`. Identity configs return
+/// `sys.plan_forward(ctx)` unchanged; non-identity configs plan each replica
+/// on its virtual context and expand back to the physical GPUs.
+///
+/// Panics if the config does not factor the cluster (configs built via
+/// [`ParallelismConfig::new`] are always valid) or if the routing does not
+/// cover every physical GPU.
+pub fn planned_forward<S: System + ?Sized>(sys: &S, ctx: &SchedCtx) -> Plan {
+    let cfg = ctx.parallelism;
+    if cfg.is_identity() {
+        return sys.plan_forward(ctx);
+    }
+    cfg.validate(ctx.cluster).expect("parallelism config incompatible with cluster");
+    let g = ctx.gpus();
+    assert!(
+        ctx.routing.gpus() >= g,
+        "routing covers {} GPUs but the cluster has {g}",
+        ctx.routing.gpus()
+    );
+    let vcluster = cfg.virtual_cluster(ctx.cluster).expect("validated config");
+    let vworkload = virtual_workload(ctx.workload, &cfg);
+    let vgpu = GpuSpec { macs_per_sec: ctx.gpu.macs_per_sec * cfg.tp as f64 };
+
+    let mut replica_plans = Vec::with_capacity(cfg.dp);
+    for r in 0..cfg.dp {
+        let vrouting = replica_routing(ctx.routing, &cfg, r);
+        let vtrace: Option<Vec<Routing>> =
+            ctx.layer_routing.map(|rs| rs.iter().map(|x| replica_routing(x, &cfg, r)).collect());
+        let mut vctx = SchedCtx::new(&vcluster, &vworkload, &vrouting);
+        vctx.gpu = vgpu;
+        vctx.fixed_layer_overhead = ctx.fixed_layer_overhead;
+        if let Some(t) = &vtrace {
+            vctx.layer_routing = Some(t.as_slice());
+        }
+        replica_plans.push(sys.plan_forward(&vctx));
+    }
+    let mut plan = expand_replicas(&replica_plans, &cfg, g);
+    if cfg.tp > 1 {
+        inject_tp_sync(&mut plan, ctx.workload, &cfg);
+    }
+    plan
+}
+
+/// The workload one EP rank (= TP group) of one replica sees: a group
+/// processes `tp` members' tokens and hosts `tp · dp` members' worth of
+/// expert payloads, so the replica's `ep` ranks together hold all
+/// `n · G` distinct experts.
+pub fn virtual_workload(w: &MoEWorkload, cfg: &ParallelismConfig) -> MoEWorkload {
+    MoEWorkload {
+        tokens_per_gpu: w.tokens_per_gpu * cfg.tp,
+        experts_per_gpu: w.experts_per_gpu * cfg.tp * cfg.dp,
+        ..*w
+    }
+}
+
+/// Member-view stream-model input for joint-candidate scoring: per-physical-
+/// GPU communication volumes (what the expansion actually puts on each
+/// link) and wall-clock compute latencies. The identity config reproduces
+/// [`MoEWorkload::plan_input`] exactly.
+pub fn member_plan_input(
+    w: &MoEWorkload,
+    gpu: &GpuSpec,
+    cfg: &ParallelismConfig,
+    total_gpus: usize,
+    pe_tx_bytes: f64,
+) -> PlanInput {
+    PlanInput {
+        // a member dispatches its own tokens' shard of the rank's A2A
+        d_bytes: w.d_bytes() * w.k as f64,
+        pe_bytes: pe_tx_bytes,
+        // a member migrates 1/tp of each of its rank's n·tp·dp experts:
+        // n·dp full-expert payloads
+        n_experts: w.experts_per_gpu * cfg.dp,
+        lat_pe: w.lat_pre_expert(gpu),
+        // wall time per hosted expert payload: n_experts · lat_ep must equal
+        // the member's conserved per-GPU expert compute
+        lat_ep: w.lat_per_expert(gpu, total_gpus) / cfg.dp as f64,
+    }
+}
+
+/// Replica `r`'s routing at EP-rank granularity: rank `v` aggregates the
+/// token rows of its `tp` physical members. Columns (global expert ids) are
+/// unchanged — every replica hosts the full expert set.
+fn replica_routing(routing: &Routing, cfg: &ParallelismConfig, replica: usize) -> Routing {
+    let experts = routing.experts();
+    let mut tokens = vec![vec![0.0f64; experts]; cfg.ep];
+    for (v, row) in tokens.iter_mut().enumerate() {
+        for j in 0..cfg.tp {
+            let m = cfg.physical_gpu(replica, v, j);
+            for (e, &t) in routing.tokens[m].iter().enumerate() {
+                row[e] += t;
+            }
+        }
+    }
+    Routing { tokens }
+}
+
+/// Expand one virtual flow set: `(v → w, B)` becomes `tp` member flows of
+/// `B / tp` between same-offset members of the two groups.
+fn expand_flows(flows: &[Flow], cfg: &ParallelismConfig, replica: usize) -> Vec<Flow> {
+    let mut out = Vec::with_capacity(flows.len() * cfg.tp);
+    for f in flows {
+        let bytes = f.bytes / cfg.tp as f64;
+        for j in 0..cfg.tp {
+            out.push(Flow {
+                src: cfg.physical_gpu(replica, f.src, j),
+                dst: cfg.physical_gpu(replica, f.dst, j),
+                bytes,
+            });
+        }
+    }
+    out
+}
+
+/// Scatter per-rank compute durations to every member of the rank (each
+/// member runs its shard for the same wall time).
+fn expand_secs(per_rank: &[f64], cfg: &ParallelismConfig, replica: usize, out: &mut [f64]) {
+    for (v, &s) in per_rank.iter().enumerate() {
+        for j in 0..cfg.tp {
+            out[cfg.physical_gpu(replica, v, j)] = s;
+        }
+    }
+}
+
+/// Merge the `k`-th phase of every replica (replicas whose plan has fewer
+/// phases contribute nothing — their GPUs simply skip the phase). Setup cost
+/// and label come from the first replica that has the phase.
+fn merged_phase(
+    per_replica: &[Option<&CommPhase>],
+    cfg: &ParallelismConfig,
+) -> CommPhase {
+    let proto = per_replica
+        .iter()
+        .flatten()
+        .next()
+        .expect("merged_phase called with at least one present phase");
+    let mut flows = Vec::new();
+    for (r, p) in per_replica.iter().enumerate() {
+        if let Some(p) = p {
+            flows.extend(expand_flows(&p.flows, cfg, r));
+        }
+    }
+    CommPhase { flows, setup_secs: proto.setup_secs, label: proto.label }
+}
+
+/// Stitch the per-replica virtual plans into one physical plan over all `g`
+/// GPUs. Replicas are mutually independent in the forward pass, so merging
+/// their (per-GPU-chained) phases never couples them; phase lists of
+/// different lengths are pad-merged (missing phases are empty for that
+/// replica's GPUs).
+fn expand_replicas(replica_plans: &[Plan], cfg: &ParallelismConfig, g: usize) -> Plan {
+    assert_eq!(replica_plans.len(), cfg.dp, "one plan per replica");
+    let layers_n = replica_plans[0].layers.len();
+    for p in replica_plans {
+        assert_eq!(p.gpus, cfg.ep, "replica plan must cover the virtual ranks");
+        assert_eq!(p.layers.len(), layers_n, "replica layer counts diverge");
+    }
+    let mut layers = Vec::with_capacity(layers_n);
+    for l in 0..layers_n {
+        let rls: Vec<&LayerPlan> = replica_plans.iter().map(|p| &p.layers[l]).collect();
+        for rl in &rls {
+            assert!(rl.tp_sync.is_none(), "virtual plans must not carry TP sync phases");
+        }
+
+        let mut pre_secs = vec![0.0f64; g];
+        for (r, rl) in rls.iter().enumerate() {
+            expand_secs(&rl.pre_secs, cfg, r, &mut pre_secs);
+        }
+
+        let prologue_secs = if rls.iter().any(|rl| rl.migrate.prologue_secs.is_some()) {
+            let mut p = vec![0.0f64; g];
+            for (r, rl) in rls.iter().enumerate() {
+                if let Some(secs) = &rl.migrate.prologue_secs {
+                    expand_secs(secs, cfg, r, &mut p);
+                }
+            }
+            Some(p)
+        } else {
+            None
+        };
+        let prologue_label = rls
+            .iter()
+            .map(|rl| rl.migrate.prologue_label)
+            .find(|s| !s.is_empty())
+            .unwrap_or("");
+
+        let n_mig = rls.iter().map(|rl| rl.migrate.phases.len()).max().unwrap_or(0);
+        let phases = (0..n_mig)
+            .map(|k| {
+                let per: Vec<Option<&CommPhase>> =
+                    rls.iter().map(|rl| rl.migrate.phases.get(k)).collect();
+                merged_phase(&per, cfg)
+            })
+            .collect();
+
+        let n_rounds = rls[0].rounds.len();
+        for rl in &rls {
+            assert_eq!(rl.rounds.len(), n_rounds, "replica round counts diverge");
+        }
+        let rounds = (0..n_rounds)
+            .map(|c| {
+                let n_disp = rls.iter().map(|rl| rl.rounds[c].dispatch.len()).max().unwrap_or(0);
+                let dispatch = (0..n_disp)
+                    .map(|k| {
+                        let per: Vec<Option<&CommPhase>> =
+                            rls.iter().map(|rl| rl.rounds[c].dispatch.get(k)).collect();
+                        merged_phase(&per, cfg)
+                    })
+                    .collect();
+                let mut expert_secs = vec![0.0f64; g];
+                for (r, rl) in rls.iter().enumerate() {
+                    expand_secs(&rl.rounds[c].expert_secs, cfg, r, &mut expert_secs);
+                }
+                Round { dispatch, expert_secs }
+            })
+            .collect();
+
+        layers.push(LayerPlan {
+            migrate: MigratePlan { prologue_secs, prologue_label, phases },
+            pre_secs,
+            rounds,
+            tp_sync: None,
+        });
+    }
+    Plan { gpus: g, layers }
+}
+
+/// Close every layer with the TP activation All-Reduce: a ring inside each
+/// TP group where every member forwards its `2·(tp−1)/tp` share of the
+/// group's block activations — one reduction per dense trunk block plus one
+/// for the MoE block output (Megatron row-parallel counting).
+fn inject_tp_sync(plan: &mut Plan, w: &MoEWorkload, cfg: &ParallelismConfig) {
+    let tp = cfg.tp;
+    let payload = (w.pre_blocks + 1) as f64 * tp as f64 * w.d_bytes();
+    let per_member = 2.0 * (tp as f64 - 1.0) / tp as f64 * payload;
+    let mut flows = Vec::with_capacity(plan.gpus);
+    for group in 0..plan.gpus / tp {
+        let base = group * tp;
+        for j in 0..tp {
+            flows.push(Flow { src: base + j, dst: base + (j + 1) % tp, bytes: per_member });
+        }
+    }
+    for layer in &mut plan.layers {
+        layer.tp_sync = Some(CommPhase { flows: flows.clone(), setup_secs: 0.0, label: "tp_sync" });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::netsim::Dag;
+    use crate::systems::ep::{Tutel, VanillaEp};
+    use crate::systems::faster_moe::FasterMoe;
+    use crate::systems::hybrid_ep::HybridEp;
+    use crate::systems::smart_moe::SmartMoe;
+    use crate::systems::{comparison_set, System};
+
+    fn parts(
+        dcs: usize,
+        gpus: usize,
+    ) -> (crate::cluster::ClusterSpec, MoEWorkload, Routing) {
+        let cluster = presets::dcs_x_gpus(dcs, gpus, 10.0, 128.0);
+        let w = MoEWorkload {
+            tokens_per_gpu: 512,
+            hidden: 128,
+            ffn: 256,
+            experts_per_gpu: 2,
+            k: 2,
+            moe_layers: 2,
+            pre_blocks: 1,
+            backward: false,
+        };
+        let g = cluster.total_gpus();
+        let routing = Routing::uniform(g, g * w.experts_per_gpu, w.tokens_per_gpu, w.k);
+        (cluster, w, routing)
+    }
+
+    fn forward_dag(sys: &dyn System, ctx: &SchedCtx) -> Dag {
+        let mut dag = Dag::new();
+        let start = dag.barrier(vec![], "s");
+        let entry = vec![start; ctx.gpus()];
+        let exits = sys.build_forward(ctx, &mut dag, &entry);
+        dag.barrier(exits, "end");
+        dag
+    }
+
+    fn expert_secs_total(dag: &Dag) -> f64 {
+        dag.tasks
+            .iter()
+            .filter(|t| t.label == "expert")
+            .map(|t| match t.kind {
+                crate::netsim::TaskKind::Compute { seconds, .. } => seconds,
+                _ => 0.0,
+            })
+            .sum()
+    }
+
+    /// Acceptance: the identity config reproduces every system's plan bit
+    /// for bit.
+    #[test]
+    fn identity_config_is_a_bitwise_passthrough() {
+        let (cluster, w, routing) = parts(2, 4);
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        assert!(ctx.parallelism.is_identity());
+        for sys in comparison_set() {
+            let direct = sys.plan_forward(&ctx);
+            let planned = planned_forward(sys.as_ref(), &ctx);
+            assert_eq!(direct, planned, "{} plan changed under identity config", sys.name());
+        }
+    }
+
+    #[test]
+    fn member_plan_input_identity_matches_workload_plan_input() {
+        let (cluster, w, _) = parts(2, 4);
+        let gpu = GpuSpec::a800();
+        let g = cluster.total_gpus();
+        let id = ParallelismConfig::identity(g);
+        let a = member_plan_input(&w, &gpu, &id, g, w.pe_bytes());
+        let b = w.plan_input(&gpu, g, w.pe_bytes());
+        assert_eq!(a.d_bytes.to_bits(), b.d_bytes.to_bits());
+        assert_eq!(a.pe_bytes.to_bits(), b.pe_bytes.to_bits());
+        assert_eq!(a.n_experts, b.n_experts);
+        assert_eq!(a.lat_pe.to_bits(), b.lat_pe.to_bits());
+        assert_eq!(a.lat_ep.to_bits(), b.lat_ep.to_bits());
+    }
+
+    #[test]
+    fn replica_routing_conserves_tokens_and_experts() {
+        let (cluster, w, routing) = parts(2, 4);
+        let cfg = ParallelismConfig::new(&cluster, 2, 2).unwrap();
+        let mut total = 0.0;
+        for r in 0..cfg.dp {
+            let vr = replica_routing(&routing, &cfg, r);
+            assert_eq!(vr.gpus(), cfg.ep);
+            assert_eq!(vr.experts(), routing.experts(), "expert ids are global");
+            total += vr.per_gpu_tokens().iter().sum::<f64>();
+            for row in &vr.per_gpu_tokens() {
+                // each rank aggregates tp members' tokens
+                assert!((row - (w.tokens_per_gpu * w.k * cfg.tp) as f64).abs() < 1e-6);
+            }
+        }
+        let global: f64 = routing.per_gpu_tokens().iter().sum();
+        assert!((total - global).abs() < 1e-6, "replicas must partition the batch");
+    }
+
+    /// Total expert compute is conserved under every config, for every
+    /// system (the TED configs reshard work, they don't change it).
+    #[test]
+    fn expert_compute_conserved_under_all_configs() {
+        let (cluster, w, routing) = parts(2, 4);
+        let base = {
+            let ctx = SchedCtx::new(&cluster, &w, &routing);
+            expert_secs_total(&forward_dag(&VanillaEp, &ctx))
+        };
+        assert!(base > 0.0);
+        for (tp, dp) in [(1, 2), (2, 1), (2, 2), (4, 2)] {
+            let cfg = ParallelismConfig::new(&cluster, tp, dp).unwrap();
+            let ctx = SchedCtx::new(&cluster, &w, &routing).with_parallelism(cfg);
+            let systems: Vec<Box<dyn System>> = vec![
+                Box::new(VanillaEp),
+                Box::new(Tutel::default()),
+                Box::new(FasterMoe::default()),
+                Box::new(SmartMoe::default()),
+                Box::new(HybridEp::partition_only()),
+            ];
+            for sys in systems {
+                let got = expert_secs_total(&forward_dag(sys.as_ref(), &ctx));
+                assert!(
+                    (got - base).abs() / base < 1e-9,
+                    "{} under tp={tp} dp={dp}: {got} expert-secs vs {base}",
+                    sys.name()
+                );
+            }
+        }
+    }
+
+    /// dp = #DCs keeps the whole forward pass inside the replicas: zero
+    /// bytes cross the outermost level.
+    #[test]
+    fn full_dp_eliminates_cross_dc_forward_traffic() {
+        let (cluster, w, routing) = parts(2, 4);
+        let identity_ctx = SchedCtx::new(&cluster, &w, &routing);
+        let cfg = ParallelismConfig::new(&cluster, 1, 2).unwrap();
+        let dp_ctx = SchedCtx::new(&cluster, &w, &routing).with_parallelism(cfg);
+        let sim = |ctx: &SchedCtx| {
+            let dag = forward_dag(&VanillaEp, ctx);
+            crate::netsim::Simulator::new(&cluster).run(&dag)
+        };
+        let base = sim(&identity_ctx);
+        let dp = sim(&dp_ctx);
+        assert!(base.bytes_per_level[0] > 0.0, "identity EP must cross DCs");
+        assert_eq!(dp.bytes_per_level[0], 0.0, "dp = #DCs must keep A2A intra-DC");
+        assert!(dp.bytes_a2a > 0.0, "tokens still route within the replica");
+        assert!(
+            dp.makespan < base.makespan,
+            "intra-DC EP must beat cross-DC EP: {} vs {}",
+            dp.makespan,
+            base.makespan
+        );
+    }
+
+    /// TP shards migration payloads: full-domain HybridEP moves ~tp× fewer
+    /// cross-DC AG bytes (each member needs only its expert shards).
+    #[test]
+    fn tp_shrinks_cross_dc_migration_traffic() {
+        let (cluster, w, routing) = parts(2, 4);
+        let full = HybridEp { partition: Some(vec![2, 4]), migration: None };
+        let base = {
+            let ctx = SchedCtx::new(&cluster, &w, &routing);
+            let dag = forward_dag(&full, &ctx);
+            crate::netsim::Simulator::new(&cluster).run(&dag)
+        };
+        // tp=4 → virtual cluster 2 DCs × 1 rank; full domains = [2, 1]
+        let cfg = ParallelismConfig::new(&cluster, 4, 1).unwrap();
+        let ctx = SchedCtx::new(&cluster, &w, &routing).with_parallelism(cfg);
+        let tp_full = HybridEp { partition: Some(vec![2, 1]), migration: None };
+        let dag = forward_dag(&tp_full, &ctx);
+        let got = crate::netsim::Simulator::new(&cluster).run(&dag);
+        assert!(got.bytes_per_level[0] > 0.0);
+        assert!(
+            got.bytes_per_level[0] < 0.5 * base.bytes_per_level[0],
+            "tp=4 should cut cross-DC AG sharply: {} vs {}",
+            got.bytes_per_level[0],
+            base.bytes_per_level[0]
+        );
+        // and the layer now carries TP sync traffic
+        assert!(got.bytes_allreduce > 0.0, "tp sync phases must be emitted");
+    }
+
+    #[test]
+    fn tp_sync_traffic_matches_the_ring_formula() {
+        let (cluster, w, routing) = parts(2, 4);
+        let cfg = ParallelismConfig::new(&cluster, 2, 1).unwrap();
+        let ctx = SchedCtx::new(&cluster, &w, &routing).with_parallelism(cfg);
+        let plan = planned_forward(&VanillaEp, &ctx);
+        // per member: 2·(tp−1)/tp · (pre_blocks+1) · tp · D, per layer
+        let want_member = 2.0 * 0.5 * (w.pre_blocks + 1) as f64 * 2.0 * w.d_bytes();
+        let g = cluster.total_gpus() as f64;
+        let want = want_member * g * w.moe_layers as f64;
+        assert!(
+            (plan.allreduce_bytes() - want).abs() / want < 1e-9,
+            "{} vs {want}",
+            plan.allreduce_bytes()
+        );
+    }
+}

@@ -14,6 +14,8 @@
 //!   gain, amortized over [`ReplanCfg::window`] iterations, exceeds the
 //!   switch cost (§IV-B amortization).
 
+use anyhow::{ensure, Result};
+
 use crate::cluster::ClusterSpec;
 use crate::model::solver::plan_multilevel;
 use crate::moe::{MoEWorkload, Routing};
@@ -81,10 +83,14 @@ pub fn drift_trace(
     jitter: f64,
     iters: usize,
     seed: u64,
-) -> Vec<Routing> {
-    assert!(iters > 0, "trace needs at least one iteration");
+) -> Result<Vec<Routing>> {
+    ensure!(
+        iters > 0,
+        "drift trace needs at least one iteration (got 0 — a zero-iteration \
+         trace would make every replanning comparison vacuous)"
+    );
     let span = skew_hi - skew_lo;
-    (0..iters)
+    Ok((0..iters)
         .map(|t| {
             let ramp = if iters == 1 {
                 skew_lo
@@ -95,7 +101,7 @@ pub fn drift_trace(
             let skew = (ramp + wobble).max(0.0);
             Routing::zipf(gpus, experts, tokens_per_gpu, k, skew, seed)
         })
-        .collect()
+        .collect())
 }
 
 /// Model-optimal partition for one routing distribution (skew-aware stream
@@ -176,14 +182,25 @@ fn iter_time(
 
 /// Run one policy over the trace. The starting partition is the optimum for
 /// the first iteration's routing (every policy starts equal).
+///
+/// Errors on an empty trace or a zero amortization window — both used to
+/// produce vacuous (all-zero / never-switching) reports silently.
 pub fn run_policy(
     cluster: &ClusterSpec,
     workload: &MoEWorkload,
     trace: &[Routing],
     cfg: &ReplanCfg,
     policy: Policy,
-) -> ReplanReport {
-    assert!(!trace.is_empty(), "empty trace");
+) -> Result<ReplanReport> {
+    ensure!(
+        !trace.is_empty(),
+        "replanning trace is empty — nothing to simulate (policy {policy:?})"
+    );
+    ensure!(
+        cfg.window >= 1,
+        "amortization window must be at least 1 iteration (got 0 — the adaptive \
+         policy could never justify a switch)"
+    );
     let mut current = optimal_partition(cluster, workload, &trace[0], cfg);
     let mut records = Vec::with_capacity(trace.len());
     let mut total = 0.0;
@@ -235,7 +252,7 @@ pub fn run_policy(
             switch_secs,
         });
     }
-    ReplanReport { policy, records, total_secs: total, switches }
+    Ok(ReplanReport { policy, records, total_secs: total, switches })
 }
 
 /// Run all three policies on the same trace: `[never, always, adaptive]`.
@@ -244,12 +261,12 @@ pub fn compare_policies(
     workload: &MoEWorkload,
     trace: &[Routing],
     cfg: &ReplanCfg,
-) -> [ReplanReport; 3] {
-    [
-        run_policy(cluster, workload, trace, cfg, Policy::Never),
-        run_policy(cluster, workload, trace, cfg, Policy::Always),
-        run_policy(cluster, workload, trace, cfg, Policy::Adaptive),
-    ]
+) -> Result<[ReplanReport; 3]> {
+    Ok([
+        run_policy(cluster, workload, trace, cfg, Policy::Never)?,
+        run_policy(cluster, workload, trace, cfg, Policy::Always)?,
+        run_policy(cluster, workload, trace, cfg, Policy::Adaptive)?,
+    ])
 }
 
 #[cfg(test)]
@@ -284,8 +301,8 @@ mod tests {
 
     #[test]
     fn drift_trace_is_deterministic_and_conserves_tokens() {
-        let a = drift_trace(8, 8, 512, 2, 0.0, 2.0, 0.1, 6, 42);
-        let b = drift_trace(8, 8, 512, 2, 0.0, 2.0, 0.1, 6, 42);
+        let a = drift_trace(8, 8, 512, 2, 0.0, 2.0, 0.1, 6, 42).unwrap();
+        let b = drift_trace(8, 8, 512, 2, 0.0, 2.0, 0.1, 6, 42).unwrap();
         assert_eq!(a.len(), 6);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.tokens, y.tokens, "trace must be seed-deterministic");
@@ -342,8 +359,8 @@ mod tests {
         let cluster = presets::straggler_dc(2, 4, 10.0, 128.0, 0, 5.0);
         let w = shift_workload();
         let cfg = raw_cfg();
-        let trace = drift_trace(8, 8, w.tokens_per_gpu, w.k, 0.0, 3.0, 0.2, 8, 21);
-        let [never, always, adaptive] = compare_policies(&cluster, &w, &trace, &cfg);
+        let trace = drift_trace(8, 8, w.tokens_per_gpu, w.k, 0.0, 3.0, 0.2, 8, 21).unwrap();
+        let [never, always, adaptive] = compare_policies(&cluster, &w, &trace, &cfg).unwrap();
         assert_eq!(never.switches, 0);
         assert_eq!(never.records.len(), 8);
         for r in [&never, &always, &adaptive] {
@@ -359,5 +376,31 @@ mod tests {
                 assert_eq!(rec.switch_secs, 0.0);
             }
         }
+    }
+
+    /// Regression (bugfix): zero-iteration traces and degenerate configs
+    /// must be descriptive errors, not vacuous reports.
+    #[test]
+    fn degenerate_replanning_inputs_are_descriptive_errors() {
+        let cluster = presets::dcs_x_gpus(2, 4, 10.0, 128.0);
+        let w = shift_workload();
+        let cfg = raw_cfg();
+
+        let err = drift_trace(8, 8, 512, 2, 0.0, 2.0, 0.1, 0, 42).unwrap_err().to_string();
+        assert!(err.contains("at least one iteration"), "unexpected error: {err}");
+
+        let empty: Vec<Routing> = Vec::new();
+        let err = run_policy(&cluster, &w, &empty, &cfg, Policy::Adaptive)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("trace is empty"), "unexpected error: {err}");
+        assert!(compare_policies(&cluster, &w, &empty, &cfg).is_err());
+
+        let trace = drift_trace(8, 8, w.tokens_per_gpu, w.k, 0.0, 1.0, 0.1, 2, 3).unwrap();
+        let zero_window = ReplanCfg { window: 0, ..cfg };
+        let err = run_policy(&cluster, &w, &trace, &zero_window, Policy::Adaptive)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("window"), "unexpected error: {err}");
     }
 }

@@ -140,6 +140,7 @@ impl System for AggregateHybrid {
                 },
                 expert_secs: vec![expert_secs; g],
             }],
+            tp_sync: None,
         };
         Plan { gpus: g, layers: vec![layer; w.moe_layers] }
     }

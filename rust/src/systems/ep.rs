@@ -95,6 +95,7 @@ pub(crate) fn plan_pipelined(ctx: &SchedCtx, chunks: usize, placement: Option<&P
             migrate: MigratePlan::none(),
             pre_secs: vec![ctx.pre_expert_secs(); g],
             rounds,
+            tp_sync: None,
         });
     }
     Plan { gpus: g, layers }

@@ -115,6 +115,7 @@ impl System for FasterMoe {
                 migrate,
                 pre_secs: vec![ctx.pre_expert_secs(); g],
                 rounds,
+                tp_sync: None,
             });
         }
         Plan { gpus: g, layers }

@@ -331,6 +331,7 @@ impl System for HybridEp {
                 migrate,
                 pre_secs: vec![ctx.pre_expert_secs(); g],
                 rounds: vec![Round { dispatch, expert_secs }],
+                tp_sync: None,
             });
         }
         Plan { gpus: g, layers }

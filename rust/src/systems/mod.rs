@@ -22,7 +22,7 @@ pub mod faster_moe;
 pub mod hybrid_ep;
 pub mod smart_moe;
 
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, ParallelismConfig};
 use crate::model::solver::PlanInput;
 use crate::moe::routing::{Placement, Routing};
 use crate::moe::{GpuSpec, MoEWorkload, BYTES_PER_ELEM};
@@ -44,6 +44,11 @@ pub struct SchedCtx<'a> {
     /// every system; calibrated against the paper's Table V intercept
     /// (~1.9 s per 12-layer iteration on A800).
     pub fixed_layer_overhead: f64,
+    /// Joint TP × EP × DP degrees the schedule is planned under. The
+    /// identity (the default) plans pure EP over all GPUs — bit-for-bit the
+    /// pre-config behaviour; non-identity configs route every system's plan
+    /// through [`plan::parallel`](crate::plan::parallel).
+    pub parallelism: ParallelismConfig,
 }
 
 impl<'a> SchedCtx<'a> {
@@ -55,7 +60,16 @@ impl<'a> SchedCtx<'a> {
             routing,
             layer_routing: None,
             fixed_layer_overhead: 0.0,
+            parallelism: ParallelismConfig::identity(cluster.total_gpus()),
         }
+    }
+
+    /// Builder-style parallelism override; panics if the config does not
+    /// factor the cluster (build configs with [`ParallelismConfig::new`]).
+    pub fn with_parallelism(mut self, cfg: ParallelismConfig) -> Self {
+        cfg.validate(self.cluster).expect("parallelism config incompatible with cluster");
+        self.parallelism = cfg;
+        self
     }
 
     pub fn gpus(&self) -> usize {
@@ -121,9 +135,13 @@ pub trait System {
     /// Stage 2: shared lowering of the Plan IR into a task DAG. `entry[g]`
     /// are the per-GPU entry dependencies; returns per-GPU exit tasks.
     /// Systems never construct `Dag` tasks directly — overrides of this
-    /// method only post-process what the shared lowering emitted.
+    /// method only post-process what the shared lowering emitted. The plan
+    /// is built under `ctx.parallelism`
+    /// ([`plan::parallel::planned_forward`](crate::plan::parallel::planned_forward)),
+    /// so every system becomes a TED-style baseline under a non-identity
+    /// config.
     fn build_forward(&self, ctx: &SchedCtx, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
-        crate::plan::lower_forward(&self.plan_forward(ctx), dag, entry)
+        crate::plan::lower_forward(&crate::plan::parallel::planned_forward(self, ctx), dag, entry)
     }
 
     /// Full iteration: forward (+ backward as a mirrored pass with 2× compute
@@ -149,13 +167,36 @@ pub trait System {
             let doubled = DoubledCompute(self);
             doubled.build_forward(ctx, &mut dag, &bwd_entry)
         };
-        // DDP all-reduce of dense params: ring pass, overlapped with backward
-        let dense = ctx.dense_param_bytes();
+        // DDP all-reduce of dense params (TP-sharded when tp > 1): ring
+        // pass, overlapped with backward
+        let cfg = ctx.parallelism;
+        let dense = ctx.dense_param_bytes() / cfg.tp as f64;
         let ar_bytes = 2.0 * dense * (g as f64 - 1.0) / g as f64;
         let mut ends = bwd_exit.clone();
         for i in 0..g {
             let t = dag.transfer(i, (i + 1) % g, ar_bytes, Tag::AllReduce, vec![bwd_entry[i]], "ddp");
             ends.push(t);
+        }
+        // expert-gradient sync across data-parallel replicas (dp > 1 only):
+        // every GPU holds n·dp full-expert payloads' worth of TP shards, and
+        // each expert exists once per replica — a ring across same-position
+        // GPUs of the dp replicas keeps them coherent, overlapped with
+        // backward like the dense ring
+        if cfg.dp > 1 {
+            let stride = g / cfg.dp;
+            let shard = ctx.workload.experts_per_gpu as f64
+                * cfg.dp as f64
+                * ctx.workload.pe_bytes();
+            let hop = 2.0 * shard * (cfg.dp as f64 - 1.0) / cfg.dp as f64;
+            for q in 0..stride {
+                for r in 0..cfg.dp {
+                    let src = r * stride + q;
+                    let dst = ((r + 1) % cfg.dp) * stride + q;
+                    let t =
+                        dag.transfer(src, dst, hop, Tag::AllReduce, vec![bwd_entry[src]], "dp_sync");
+                    ends.push(t);
+                }
+            }
         }
         dag.barrier(ends, "iter_end");
         dag
@@ -294,6 +335,51 @@ mod tests {
         // and the uniform layer reproduces the global plan input
         let global = w.plan_input(&ctx.gpu, ctx.gpus(), w.pe_bytes());
         assert!((d0 - global.d_bytes).abs() / global.d_bytes < 1e-9);
+    }
+
+    #[test]
+    fn identity_parallelism_is_bitwise_identical() {
+        let (cluster, mut w, routing) = small_ctx_parts();
+        w.backward = true; // exercise the DDP epilogue path too
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let explicit = SchedCtx::new(&cluster, &w, &routing)
+            .with_parallelism(ParallelismConfig::identity(cluster.total_gpus()));
+        for sys in comparison_set() {
+            let a = sys.iteration_time(&ctx);
+            let b = sys.iteration_time(&explicit);
+            assert_eq!(a.to_bits(), b.to_bits(), "{} diverged under identity config", sys.name());
+        }
+    }
+
+    #[test]
+    fn dp_gradient_ring_emitted_only_when_replicated() {
+        let (cluster, mut w, routing) = small_ctx_parts();
+        w.backward = true;
+        let identity_dag = {
+            let ctx = SchedCtx::new(&cluster, &w, &routing);
+            ep::VanillaEp.build_iteration(&ctx)
+        };
+        assert!(
+            !identity_dag.tasks.iter().any(|t| t.label == "dp_sync"),
+            "identity config must not sync expert replicas"
+        );
+        let cfg = ParallelismConfig::new(&cluster, 1, 2).unwrap();
+        let ctx = SchedCtx::new(&cluster, &w, &routing).with_parallelism(cfg);
+        let dag = ep::VanillaEp.build_iteration(&ctx);
+        let hops: Vec<_> = dag.tasks.iter().filter(|t| t.label == "dp_sync").collect();
+        assert_eq!(hops.len(), cluster.total_gpus(), "one ring hop per GPU position");
+        // per-GPU hop: 2·(dp−1)/dp of its n·dp replicated expert payloads
+        let shard = (w.experts_per_gpu * 2) as f64 * w.pe_bytes();
+        let want = 2.0 * shard * 0.5;
+        for t in hops {
+            match t.kind {
+                crate::netsim::TaskKind::Transfer { bytes, tag, .. } => {
+                    assert_eq!(tag, Tag::AllReduce);
+                    assert!((bytes - want).abs() < 1e-6, "{bytes} vs {want}");
+                }
+                _ => panic!("dp_sync must be a transfer"),
+            }
+        }
     }
 
     #[test]

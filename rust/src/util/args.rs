@@ -139,6 +139,37 @@ mod tests {
         assert!(a.bool("fast") && a.bool("slow"));
     }
 
+    /// The CLI parallelism flags (`simulate --tp/--dp` via `usize_or`,
+    /// `sweep --tp/--dp` via `usize_list_or`) parse well-formed input and
+    /// produce actionable messages on malformed input.
+    #[test]
+    fn parallelism_flags_parse_and_report_malformed_input() {
+        let a = parse(&["simulate", "--tp", "2", "--dp", "4"]);
+        assert_eq!(a.usize_or("tp", 1).unwrap(), 2);
+        assert_eq!(a.usize_or("dp", 1).unwrap(), 4);
+        // defaults are the identity degrees
+        let none = parse(&["simulate"]);
+        assert_eq!(none.usize_or("tp", 1).unwrap(), 1);
+        assert_eq!(none.usize_or("dp", 1).unwrap(), 1);
+        // sweep-style lists
+        let lists = parse(&["sweep", "--tp", "1,2", "--dp", "1, 2"]);
+        assert_eq!(lists.usize_list_or("tp", &[1]).unwrap(), vec![1, 2]);
+        assert_eq!(lists.usize_list_or("dp", &[1]).unwrap(), vec![1, 2]);
+        // malformed scalars name the flag and echo the bad value
+        let bad = parse(&["simulate", "--tp", "two"]);
+        let err = bad.usize_or("tp", 1).unwrap_err().to_string();
+        assert!(err.contains("--tp") && err.contains("two"), "unhelpful error: {err}");
+        let bad = parse(&["simulate", "--dp", "1.5"]);
+        let err = bad.usize_or("dp", 1).unwrap_err().to_string();
+        assert!(err.contains("--dp") && err.contains("1.5"), "unhelpful error: {err}");
+        // malformed list elements name the flag and the offending element
+        let bad = parse(&["sweep", "--dp", "1,x,4"]);
+        let err = bad.usize_list_or("dp", &[1]).unwrap_err().to_string();
+        assert!(err.contains("--dp") && err.contains('x'), "unhelpful error: {err}");
+        // negative degrees are rejected by the unsigned parse
+        assert!(parse(&["sweep", "--tp=-2"]).usize_or("tp", 1).is_err());
+    }
+
     #[test]
     fn list_flags_parse_and_default() {
         let a = parse(&["--dcs", "8,16, 32", "--bw", "1.25,10"]);

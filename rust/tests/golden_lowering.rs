@@ -684,3 +684,28 @@ fn aggregate_lowers_to_legacy_schedule() {
         assert_equivalent(&format!("Aggregate s_ed={}", sys.s_ed), &cluster, &old, &new);
     }
 }
+
+/// Joint-parallelism acceptance: with `tp = 1, dp = 1` every system's Plan
+/// IR and simulated makespan are identical to the pre-config pipeline, bit
+/// for bit (the config machinery must be a pure pass-through).
+#[test]
+fn identity_parallelism_reproduces_plans_bit_for_bit() {
+    use hybrid_ep::cluster::ParallelismConfig;
+    use hybrid_ep::plan::parallel::planned_forward;
+    use hybrid_ep::systems::comparison_set;
+    for zipf in [false, true] {
+        let (cluster, mut w, routing) = small_parts(zipf);
+        w.backward = true; // cover the DDP epilogue path too
+        let plain = SchedCtx::new(&cluster, &w, &routing);
+        let explicit = SchedCtx::new(&cluster, &w, &routing)
+            .with_parallelism(ParallelismConfig::identity(cluster.total_gpus()));
+        for sys in comparison_set() {
+            let a = sys.plan_forward(&plain);
+            let b = planned_forward(sys.as_ref(), &explicit);
+            assert_eq!(a, b, "{}: Plan IR diverged under the identity config", sys.name());
+            let ta = Simulator::new(&cluster).run(&sys.build_iteration(&plain)).makespan;
+            let tb = Simulator::new(&cluster).run(&sys.build_iteration(&explicit)).makespan;
+            assert_eq!(ta.to_bits(), tb.to_bits(), "{}: makespan bits diverged", sys.name());
+        }
+    }
+}

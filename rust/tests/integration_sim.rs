@@ -115,8 +115,8 @@ fn fig17_scale_sweep_parallel_deterministic_and_wins() {
     grid.bandwidths_gbps = vec![2.5];
     grid.workload.moe_layers = 2;
     let t0 = std::time::Instant::now();
-    let serial = sweep::run_sweep(&grid, 1);
-    let parallel = sweep::run_sweep(&grid, sweep::default_threads());
+    let serial = sweep::run_sweep(&grid, 1).unwrap();
+    let parallel = sweep::run_sweep(&grid, sweep::default_threads()).unwrap();
     assert!(t0.elapsed().as_secs_f64() < 60.0, "256-DC sweep too slow");
     assert_eq!(serial.len(), 1);
     assert_eq!(parallel.len(), 1);
@@ -134,7 +134,7 @@ fn fig17_scale_sweep_parallel_deterministic_and_wins() {
     // incremental engine vs reference oracle on the identical scenario
     let mut grid_ref = grid.clone();
     grid_ref.engine = hybrid_ep::netsim::RateMode::Reference;
-    let reference = sweep::run_sweep(&grid_ref, 1);
+    let reference = sweep::run_sweep(&grid_ref, 1).unwrap();
     let rel = |a: f64, b: f64| (a - b).abs() / b.max(1e-12);
     assert!(
         rel(o.ep.makespan, reference[0].ep.makespan) < 1e-9,
