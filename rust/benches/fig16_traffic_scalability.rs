@@ -4,7 +4,7 @@
 //! parallel fig16-style sweep over DC count × bandwidth (the `netsim::sweep`
 //! harness with pairwise schedules and seed-deterministic skewed routing).
 
-use hybrid_ep::bench::{header, time_once};
+use hybrid_ep::bench::{header, time_once, JsonReport};
 use hybrid_ep::netsim::sweep;
 use hybrid_ep::report::experiments;
 use hybrid_ep::util::fmt_bytes;
@@ -44,5 +44,12 @@ fn main() {
             fmt_bytes(o.hybrid.bytes_ag),
             o.speedup
         );
+    }
+    let s = sweep::summarize(&outcomes);
+    let mut report = JsonReport::open();
+    report.record("fig16_pairwise_sweep/calendar_parallel", secs * 1e3, s.total_events, None);
+    match report.write() {
+        Ok(path) => println!("[perf trajectory merged into {}]", path.display()),
+        Err(e) => eprintln!("[warning] could not write perf trajectory: {e}"),
     }
 }

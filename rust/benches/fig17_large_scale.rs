@@ -1,60 +1,103 @@
 //! Fig. 17 — large-scale simulation: HybridEP vs EP speedup with up to
-//! 1000 DCs under 1.25–10 Gbps inter-DC bandwidth, (a) fixed `S_ED` and
+//! 1024 DCs under 1.25–10 Gbps inter-DC bandwidth, (a) fixed `S_ED` and
 //! (b) fixed `p`. The scenario grid fans across OS threads through the
 //! `netsim::sweep` harness; serial wall-clock is printed alongside for the
-//! harness speedup.
+//! harness speedup. `--quick` / `BENCH_FAST=1` runs the 1024-DC row alone
+//! (the CI smoke + acceptance row of the calendar-engine PR); rows are
+//! merged into `BENCH_netsim.json`.
 
-use hybrid_ep::bench::{header, time_once};
+use hybrid_ep::bench::{header, time_once, JsonReport};
 use hybrid_ep::netsim::sweep;
 use hybrid_ep::report::experiments;
+use hybrid_ep::util::args::Args;
+use hybrid_ep::util::json;
 
 fn main() {
-    header("fig17_large_scale", "Fig. 17 (1000-DC simulation)");
-    let fast = std::env::var("BENCH_FAST").is_ok();
-    let counts: Vec<usize> = if fast { vec![100, 1000] } else { vec![50, 100, 200, 500, 1000] };
+    header("fig17_large_scale", "Fig. 17 (1000-DC simulation, extended to 1024)");
+    let args = Args::from_env().unwrap_or_default();
+    let quick = args.bool("quick") || std::env::var("BENCH_FAST").is_ok();
+    let mut report = JsonReport::open();
+
+    let counts: Vec<usize> =
+        if quick { vec![1024] } else { vec![50, 100, 200, 500, 1000, 1024] };
     let t0 = std::time::Instant::now();
     let (table, rows) = experiments::fig17(&counts);
+    let grid_secs = t0.elapsed().as_secs_f64();
     table.print();
-    let at_1000a: Vec<f64> = rows
-        .iter()
-        .filter(|r| r.dcs == 1000 && r.fixed.starts_with("fixed S"))
-        .map(|r| r.speedup)
-        .collect();
-    let at_1000b: Vec<f64> = rows
-        .iter()
-        .filter(|r| r.dcs == 1000 && r.fixed.starts_with("fixed p"))
-        .map(|r| r.speedup)
-        .collect();
+    let band = |dcs: usize, prefix: &str| -> Vec<f64> {
+        rows.iter()
+            .filter(|r| r.dcs == dcs && r.fixed.starts_with(prefix))
+            .map(|r| r.speedup)
+            .collect()
+    };
     let minmax = |v: &[f64]| {
         (v.iter().cloned().fold(f64::INFINITY, f64::min), v.iter().cloned().fold(0.0, f64::max))
     };
+    let at_1000a = band(1000, "fixed S");
     if !at_1000a.is_empty() {
         let (lo, hi) = minmax(&at_1000a);
         println!("1000 DCs, fixed S_ED: {lo:.2}×–{hi:.2}× (paper: 1.05×–1.45×)");
     }
+    let at_1000b = band(1000, "fixed p");
     if !at_1000b.is_empty() {
         let (lo, hi) = minmax(&at_1000b);
         println!("1000 DCs, fixed p:    {lo:.2}×–{hi:.2}× (paper: 1.31×–3.76×)");
     }
-    println!("[fig17 grid: {:.1}s across {} threads]", t0.elapsed().as_secs_f64(), sweep::default_threads());
-
-    // ---- sweep-harness scaling: ≥256-DC grid, serial vs parallel ----------
-    println!();
-    let grid = sweep::SweepGrid::fig17(if fast { vec![256] } else { vec![256, 512] });
-    let n_threads = sweep::default_threads();
-    let (serial, t_serial) = time_once(|| sweep::run_sweep(&grid, 1).expect("non-empty grid"));
-    let (parallel, t_parallel) = time_once(|| sweep::run_sweep(&grid, n_threads).expect("non-empty grid"));
-    let s = sweep::summarize(&parallel);
-    assert_eq!(serial.len(), parallel.len());
+    // the acceptance row of the event-core PR: the grid must carry ≥1024 DCs
+    let at_1024: Vec<f64> = rows.iter().filter(|r| r.dcs == 1024).map(|r| r.speedup).collect();
+    assert!(!at_1024.is_empty(), "fig17 grid lost its 1024-DC row");
+    let (lo, hi) = minmax(&at_1024);
+    println!("1024 DCs (both modes): {lo:.2}×–{hi:.2}×");
     println!(
-        "sweep {} scenarios (≥256 DCs): speedup {:.2}×–{:.2}× (geomean {:.2}×), {} events",
+        "[fig17 grid: {grid_secs:.1}s across {} threads]",
+        sweep::default_threads()
+    );
+    report.record_extra("fig17_grid", "wall_ms", json::num(grid_secs * 1e3));
+    report.record_extra("fig17_grid", "rows", json::num(rows.len() as f64));
+    report.record_extra("fig17_grid", "max_dcs", json::num(1024.0));
+
+    // ---- sweep-harness scaling: the 1024-DC row through run_sweep ---------
+    println!();
+    let mut grid = sweep::SweepGrid::fig17(if quick { vec![1024] } else { vec![256, 1024] });
+    if quick {
+        grid.bandwidths_gbps = vec![5.0];
+    }
+    let n_threads = sweep::default_threads();
+    let (parallel, t_parallel) =
+        time_once(|| sweep::run_sweep(&grid, n_threads).expect("non-empty grid"));
+    let s = sweep::summarize(&parallel);
+    assert!(
+        parallel.iter().any(|o| o.scenario.dcs == 1024),
+        "the sweep must complete a 1024-DC scenario"
+    );
+    println!(
+        "sweep {} scenarios (incl. 1024 DCs): speedup {:.2}×–{:.2}× (geomean {:.2}×), {} events",
         s.scenarios, s.speedup_min, s.speedup_max, s.speedup_geomean, s.total_events
     );
     println!(
-        "harness: serial {:.2}s → parallel {:.2}s on {} threads ({:.2}× faster)",
-        t_serial,
+        "harness: parallel {:.2}s on {} threads ({:.0} events/s)",
         t_parallel,
         n_threads,
-        t_serial / t_parallel.max(1e-9)
+        s.total_events as f64 / t_parallel.max(1e-9)
     );
+    report.record("fig17_sweep_1024dc/calendar_parallel", t_parallel * 1e3, s.total_events, None);
+    if !quick {
+        let (serial, t_serial) = time_once(|| sweep::run_sweep(&grid, 1).expect("non-empty grid"));
+        assert_eq!(serial.len(), parallel.len());
+        println!(
+            "harness: serial {t_serial:.2}s → parallel {t_parallel:.2}s ({:.2}× faster)",
+            t_serial / t_parallel.max(1e-9)
+        );
+        report.record(
+            "fig17_sweep_1024dc/calendar_serial",
+            t_serial * 1e3,
+            s.total_events,
+            None,
+        );
+    }
+
+    match report.write() {
+        Ok(path) => println!("\n[perf trajectory merged into {}]", path.display()),
+        Err(e) => eprintln!("\n[warning] could not write perf trajectory: {e}"),
+    }
 }

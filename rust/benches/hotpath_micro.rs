@@ -1,21 +1,28 @@
 //! Hot-path micro-benchmarks for the §Perf optimization pass:
 //! SR codec (encode/decode across sizes), max-min flow allocation
-//! (incremental vs reference at 1k-DC scale), netsim event loop
-//! (incremental vs pre-change reference engine), parallel scenario sweeps,
-//! schedule generation, JSON/manifest parsing.
+//! (incremental vs reference at 1k-DC scale), the netsim event core
+//! (calendar engine vs the pre-change scan engine on dense A2A), parallel
+//! scenario sweeps, schedule generation, JSON/manifest parsing.
+//!
+//! Machine-readable rows land in `BENCH_netsim.json` (see
+//! `bench::json_report`) so future PRs can regress-check the event core.
 
-use hybrid_ep::bench::{black_box, header, time_once, Bench};
+use hybrid_ep::bench::{black_box, header, time_once, Bench, JsonReport};
 use hybrid_ep::cluster::presets;
 use hybrid_ep::migration::sr_codec;
 use hybrid_ep::moe::{MoEWorkload, Routing};
+use hybrid_ep::netsim::dag::dense_mixed_a2a;
 use hybrid_ep::netsim::flow::{max_min_rates, FlowSpec, IncrementalMaxMin};
 use hybrid_ep::netsim::{sweep, RateMode, Simulator};
 use hybrid_ep::systems::hybrid_ep::HybridEp;
 use hybrid_ep::systems::{ep, SchedCtx, System};
+use hybrid_ep::util::json;
 use hybrid_ep::util::rng::Rng;
 
 fn main() {
     header("hotpath_micro", "§Perf hot paths (not a paper table)");
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let mut report = JsonReport::open();
 
     // --- SR codec ------------------------------------------------------------
     for mb in [1usize, 8, 32] {
@@ -110,41 +117,112 @@ fn main() {
             1.0 / r_ref.median,
             r_ref.median / r_inc.median
         );
+        report.record(
+            "rate_maintenance_1kdc/incremental_event",
+            r_inc.median * 1e3,
+            1,
+            Some(r_ref.median / r_inc.median),
+        );
+    }
+
+    // --- netsim event core: dense hierarchical A2A ---------------------------
+    // The pre-change scan engine's worst case: per-flow jittered intra-DC
+    // payloads produce thousands of staggered completion events in small
+    // per-DC components while the uniform cross-DC elephants keep O(G²)
+    // flows active throughout. The scan engine pays O(GPUs + flows) linear
+    // passes per event (next-event search, byte advancement, rate re-read,
+    // GPU sweeps); the calendar engine pays O(component resolve + changed).
+    // Acceptance: ≥10× at 256 GPUs (recorded in EXPERIMENTS.md + JSON).
+    {
+        let sizes: &[(usize, &str)] =
+            if fast { &[(8, "64gpu")] } else { &[(8, "64gpu"), (32, "256gpu")] };
+        for &(dcs, label) in sizes {
+            let cluster = presets::dcs_x_gpus(dcs, 8, 10.0, 128.0);
+            let dag = dense_mixed_a2a(dcs, 8, 64e3, 8e6, 0.5, 97);
+            let (cal, t_cal) = time_once(|| Simulator::new(&cluster).run(&dag));
+            let (scan, t_scan) =
+                time_once(|| Simulator::with_mode(&cluster, RateMode::ScanIncremental).run(&dag));
+            assert!(
+                (scan.makespan - cal.makespan).abs() <= 1e-9 * (1.0 + cal.makespan),
+                "engines diverged: calendar {} vs scan {}",
+                cal.makespan,
+                scan.makespan
+            );
+            // the full-recompute oracle is only affordable at the small size
+            let t_ref = (dcs <= 8).then(|| {
+                let (rf, t) = time_once(|| Simulator::reference(&cluster).run(&dag));
+                assert!((rf.makespan - cal.makespan).abs() <= 1e-9 * (1.0 + cal.makespan));
+                t
+            });
+            println!(
+                "netsim_dense_a2a/{label}: calendar {:>9.2} ms ({:>6} ev) | scan {:>9.2} ms | {:>6.1}× faster",
+                t_cal * 1e3,
+                cal.events,
+                t_scan * 1e3,
+                t_scan / t_cal.max(1e-9)
+            );
+            let key = format!("dense_mixed_a2a_{label}/calendar");
+            report.record(&key, t_cal * 1e3, cal.events, t_ref.map(|t| t / t_cal));
+            report.record_extra(&key, "speedup_vs_scan", json::num(t_scan / t_cal.max(1e-9)));
+            report.record_extra(&key, "flows", json::num(dag.len() as f64));
+            report.record(
+                &format!("dense_mixed_a2a_{label}/scan_incremental"),
+                t_scan * 1e3,
+                scan.events,
+                t_ref.map(|t| t / t_scan),
+            );
+        }
     }
 
     // --- engine + sweep: fig17 scale (≥256 DCs), pre-change vs current -------
-    // "pre-change" = serial sweep on the Reference (full-recompute) engine;
-    // "current" = parallel sweep on the incremental engine.
+    // "pre-change" = serial sweep on the scan-incremental engine;
+    // "current" = parallel sweep on the calendar engine. The reference
+    // (full-recompute) oracle rides along for the rate-maintenance tax.
     {
-        let fast = std::env::var("BENCH_FAST").is_ok();
         let grid = sweep::SweepGrid::fig17(if fast { vec![256] } else { vec![256, 512] });
+        let mut grid_scan = grid.clone();
+        grid_scan.engine = RateMode::ScanIncremental;
         let mut grid_ref = grid.clone();
         grid_ref.engine = RateMode::Reference;
         let n_threads = sweep::default_threads();
-        let (out_ref, t_ref) = time_once(|| sweep::run_sweep(&grid_ref, 1).expect("non-empty grid"));
-        let (out_inc, t_inc) = time_once(|| sweep::run_sweep(&grid, n_threads).expect("non-empty grid"));
+        let (out_scan, t_scan) =
+            time_once(|| sweep::run_sweep(&grid_scan, 1).expect("non-empty grid"));
+        let (out_ref, t_ref) =
+            time_once(|| sweep::run_sweep(&grid_ref, 1).expect("non-empty grid"));
+        let (out_cal, t_cal) =
+            time_once(|| sweep::run_sweep(&grid, n_threads).expect("non-empty grid"));
         let ev = |outs: &[sweep::ScenarioOutcome]| -> usize {
             outs.iter().map(|o| o.ep.events + o.hybrid.events).sum()
         };
-        let s = sweep::summarize(&out_inc);
+        let s = sweep::summarize(&out_cal);
         println!(
-            "fig17_sweep/{}sc_256dc+: pre-change (reference engine, serial)  {:>8.3}s ({:>7.0} events/s)",
+            "fig17_sweep/{}sc_256dc+: pre-change (scan engine, serial)       {:>8.3}s ({:>7.0} events/s)",
+            out_scan.len(),
+            t_scan,
+            ev(&out_scan) as f64 / t_scan
+        );
+        println!(
+            "fig17_sweep/{}sc_256dc+: reference oracle (full recompute)      {:>8.3}s ({:>7.0} events/s)",
             out_ref.len(),
             t_ref,
             ev(&out_ref) as f64 / t_ref
         );
         println!(
-            "fig17_sweep/{}sc_256dc+: current (incremental, {:>2} threads)    {:>8.3}s ({:>7.0} events/s)",
-            out_inc.len(),
+            "fig17_sweep/{}sc_256dc+: current (calendar, {:>2} threads)        {:>8.3}s ({:>7.0} events/s)",
+            out_cal.len(),
             n_threads,
-            t_inc,
-            ev(&out_inc) as f64 / t_inc
+            t_cal,
+            ev(&out_cal) as f64 / t_cal
         );
         println!(
             "    sweep speedup over pre-change engine: {:.2}×  (EP-vs-Hybrid geomean {:.2}×)",
-            t_ref / t_inc.max(1e-9),
+            t_scan / t_cal.max(1e-9),
             s.speedup_geomean
         );
+        let key = "fig17_sweep_256dc_plus/calendar_parallel";
+        report.record(key, t_cal * 1e3, ev(&out_cal), Some(t_ref / t_cal.max(1e-9)));
+        report.record_extra(key, "speedup_vs_scan", json::num(t_scan / t_cal.max(1e-9)));
+        report.record("fig17_sweep_256dc_plus/scan_serial", t_scan * 1e3, ev(&out_scan), None);
     }
 
     // --- netsim end-to-end -----------------------------------------------------
@@ -165,6 +243,10 @@ fn main() {
         black_box(Simulator::new(&cluster).run(&dag).makespan);
     })
     .print();
+    Bench::new("netsim_run/tutel_32gpu_12layer_scan").run(|| {
+        black_box(Simulator::with_mode(&cluster, RateMode::ScanIncremental).run(&dag).makespan);
+    })
+    .print();
     Bench::new("netsim_run/tutel_32gpu_12layer_reference").run(|| {
         black_box(Simulator::reference(&cluster).run(&dag).makespan);
     })
@@ -182,5 +264,10 @@ fn main() {
             black_box(hybrid_ep::util::json::Value::parse(&text).unwrap());
         })
         .print();
+    }
+
+    match report.write() {
+        Ok(path) => println!("\n[perf trajectory merged into {}]", path.display()),
+        Err(e) => eprintln!("\n[warning] could not write perf trajectory: {e}"),
     }
 }

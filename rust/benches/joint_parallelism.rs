@@ -6,10 +6,11 @@
 //! uplink, then a pairwise sweep with the parallelism axis. `--quick` /
 //! `BENCH_FAST=1` runs the one-scenario smoke used by CI.
 
-use hybrid_ep::bench::{header, time_once};
+use hybrid_ep::bench::{header, time_once, JsonReport};
 use hybrid_ep::netsim::sweep::{self, SweepGrid, SweepMode};
 use hybrid_ep::report::experiments;
 use hybrid_ep::util::args::Args;
+use hybrid_ep::util::json;
 
 fn main() {
     header("joint_parallelism", "joint TP × EP × DP planning vs 1-D baselines (not in paper)");
@@ -41,8 +42,13 @@ fn main() {
         tight.speedup,
     );
 
+    let mut report = JsonReport::open();
+    report.record_extra("ted_joint_driver", "wall_ms", json::num(secs * 1e3));
+    report.record_extra("ted_joint_driver", "speedup_at_1gbps", json::num(tight.speedup));
+
     if quick {
         println!("[--quick] skipping the parallelism-axis sweep");
+        let _ = report.write();
         return;
     }
 
@@ -72,4 +78,10 @@ fn main() {
         );
     }
     println!("parallelism sweep: {} scenarios across {threads} threads in {secs:.2}s", outcomes.len());
+    let s = sweep::summarize(&outcomes);
+    report.record("ted_parallelism_sweep/calendar_parallel", secs * 1e3, s.total_events, None);
+    match report.write() {
+        Ok(path) => println!("[perf trajectory merged into {}]", path.display()),
+        Err(e) => eprintln!("[warning] could not write perf trajectory: {e}"),
+    }
 }

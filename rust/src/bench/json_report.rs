@@ -1,0 +1,209 @@
+//! Machine-readable perf trajectory (`BENCH_netsim.json`).
+//!
+//! Bench targets record `scenario → { wall_ms, events,
+//! speedup_vs_reference, … }` rows and merge them into one JSON document at
+//! the repo root, so future PRs can regress-check the netsim event core
+//! against the numbers this PR recorded. Rows are keyed by scenario name;
+//! re-running a bench overwrites its own rows and leaves everything else in
+//! place (different benches contribute to the same file). `BENCH_JSON_PATH`
+//! overrides the output path (CI uploads the file as a workflow artifact).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Default output path, relative to the working directory (`cargo bench`
+/// runs from the repo root).
+pub const DEFAULT_PATH: &str = "BENCH_netsim.json";
+
+/// Document schema tag, bumped on breaking layout changes.
+pub const SCHEMA: &str = "bench-netsim/v1";
+
+/// A merge-on-write view of the perf-trajectory document.
+pub struct JsonReport {
+    path: PathBuf,
+    doc: BTreeMap<String, Value>,
+}
+
+impl JsonReport {
+    /// Open the default document (`BENCH_JSON_PATH` env or
+    /// [`DEFAULT_PATH`]), keeping any rows previously recorded there.
+    pub fn open() -> Self {
+        let path = std::env::var("BENCH_JSON_PATH").unwrap_or_else(|_| DEFAULT_PATH.to_string());
+        Self::at(path)
+    }
+
+    /// Open a document at an explicit path (tests; custom layouts).
+    pub fn at(path: impl Into<PathBuf>) -> Self {
+        let path = path.into();
+        let mut doc = match std::fs::read_to_string(&path).ok().and_then(|t| Value::parse(&t).ok())
+        {
+            Some(Value::Obj(m)) => m,
+            _ => BTreeMap::new(),
+        };
+        doc.insert("schema".to_string(), json::s(SCHEMA));
+        doc.entry("scenarios".to_string()).or_insert_with(|| Value::Obj(BTreeMap::new()));
+        Self { path, doc }
+    }
+
+    fn scenarios_mut(&mut self) -> &mut BTreeMap<String, Value> {
+        let entry = self
+            .doc
+            .entry("scenarios".to_string())
+            .or_insert_with(|| Value::Obj(BTreeMap::new()));
+        if !matches!(entry, Value::Obj(_)) {
+            *entry = Value::Obj(BTreeMap::new());
+        }
+        match entry {
+            Value::Obj(m) => m,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Record (or overwrite) one scenario row with the standard fields.
+    pub fn record(
+        &mut self,
+        scenario: &str,
+        wall_ms: f64,
+        events: usize,
+        speedup_vs_reference: Option<f64>,
+    ) -> &mut Self {
+        let row = json::obj(vec![
+            ("wall_ms", json::num(wall_ms)),
+            ("events", json::num(events as f64)),
+            (
+                "speedup_vs_reference",
+                speedup_vs_reference.map(json::num).unwrap_or(Value::Null),
+            ),
+        ]);
+        self.scenarios_mut().insert(scenario.to_string(), row);
+        self
+    }
+
+    /// Attach an extra field (e.g. `speedup_vs_scan`, `dcs`, `flows`) to an
+    /// already-recorded scenario row (creating the row if needed).
+    pub fn record_extra(&mut self, scenario: &str, key: &str, value: Value) -> &mut Self {
+        let rows = self.scenarios_mut();
+        let row = rows
+            .entry(scenario.to_string())
+            .or_insert_with(|| Value::Obj(BTreeMap::new()));
+        if let Value::Obj(m) = row {
+            m.insert(key.to_string(), value);
+        }
+        self
+    }
+
+    /// Number of scenario rows currently in the document.
+    pub fn len(&self) -> usize {
+        match self.doc.get("scenarios") {
+            Some(Value::Obj(m)) => m.len(),
+            _ => 0,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Read a scenario row back (tests / regress-checkers).
+    pub fn scenario(&self, name: &str) -> Option<&Value> {
+        match self.doc.get("scenarios") {
+            Some(Value::Obj(m)) => m.get(name),
+            _ => None,
+        }
+    }
+
+    /// Write the merged document back, pretty-printed for diffability.
+    /// Returns the path written.
+    pub fn write(&self) -> Result<PathBuf> {
+        let text = pretty(&Value::Obj(self.doc.clone()), 0);
+        std::fs::write(&self.path, text + "\n")
+            .with_context(|| format!("writing {}", self.path.display()))?;
+        Ok(self.path.clone())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Two-space-indented JSON (the compact `Display` of [`Value`] is for
+/// manifests; the committed perf trajectory wants reviewable diffs).
+fn pretty(v: &Value, depth: usize) -> String {
+    let pad = "  ".repeat(depth + 1);
+    let close = "  ".repeat(depth);
+    match v {
+        Value::Arr(items) if !items.is_empty() => {
+            let body: Vec<String> =
+                items.iter().map(|x| format!("{pad}{}", pretty(x, depth + 1))).collect();
+            format!("[\n{}\n{close}]", body.join(",\n"))
+        }
+        Value::Obj(m) if !m.is_empty() => {
+            let body: Vec<String> = m
+                .iter()
+                .map(|(k, x)| format!("{pad}{}: {}", json::s(k), pretty(x, depth + 1)))
+                .collect();
+            format!("{{\n{}\n{close}}}", body.join(",\n"))
+        }
+        scalar => scalar.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("hybrid_ep_{name}_{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn records_writes_and_merges() {
+        let path = tmp("json_report_merge");
+        let _ = std::fs::remove_file(&path);
+        let mut r = JsonReport::at(&path);
+        r.record("dense_a2a/calendar", 12.5, 1800, Some(11.0));
+        r.record_extra("dense_a2a/calendar", "flows", json::num(65280.0));
+        r.write().unwrap();
+        // a second session (a different bench) merges, not clobbers
+        let mut r2 = JsonReport::at(&path);
+        assert_eq!(r2.len(), 1);
+        r2.record("fig17/1024dc", 900.0, 123456, None);
+        r2.write().unwrap();
+        let r3 = JsonReport::at(&path);
+        assert_eq!(r3.len(), 2);
+        let row = r3.scenario("dense_a2a/calendar").unwrap();
+        assert_eq!(row.at(&["wall_ms"]).unwrap().as_f64().unwrap(), 12.5);
+        assert_eq!(row.at(&["flows"]).unwrap().as_f64().unwrap(), 65280.0);
+        assert_eq!(
+            r3.scenario("fig17/1024dc").unwrap().at(&["speedup_vs_reference"]).unwrap(),
+            &Value::Null
+        );
+        // the document round-trips through the strict parser
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Value::parse(&text).unwrap();
+        assert_eq!(doc.at(&["schema"]).unwrap().as_str().unwrap(), SCHEMA);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rerecording_overwrites_the_row() {
+        let path = tmp("json_report_overwrite");
+        let _ = std::fs::remove_file(&path);
+        let mut r = JsonReport::at(&path);
+        r.record("s", 1.0, 1, None);
+        r.record("s", 2.0, 2, Some(3.0));
+        assert_eq!(r.len(), 1);
+        let row = r.scenario("s").unwrap();
+        assert_eq!(row.at(&["wall_ms"]).unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(row.at(&["speedup_vs_reference"]).unwrap().as_f64().unwrap(), 3.0);
+        // unparseable existing files are ignored rather than fatal
+        std::fs::write(&path, "not json").unwrap();
+        let r = JsonReport::at(&path);
+        assert!(r.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+}

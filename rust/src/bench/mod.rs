@@ -12,11 +12,18 @@
 //!
 //! The harness warms up, picks an iteration count targeting a fixed measuring
 //! window, runs batches, and reports mean/median/p95/std. `BENCH_FAST=1`
-//! shrinks the windows for CI smoke runs.
+//! shrinks the windows for CI smoke runs. [`json_report::JsonReport`] is the
+//! machine-readable side channel: benches merge `scenario → {wall_ms,
+//! events, speedup_vs_reference}` rows into `BENCH_netsim.json` so perf can
+//! be regress-checked across PRs.
 
 use std::time::{Duration, Instant};
 
 use crate::util::stats::Summary;
+
+pub mod json_report;
+
+pub use json_report::JsonReport;
 
 #[derive(Clone, Debug)]
 pub struct BenchConfig {

@@ -17,9 +17,10 @@
 //! * [`comm`] — bandwidth-throttled in-process cluster with real A2A/AG/
 //!   All-Reduce collectives and the asynchronous communicator (Fig. 10).
 //! * [`netsim`] — flow-level max-min-fair network simulator + compute-DAG
-//!   scheduler (the SimAI-substitute substrate for large-scale studies), with
-//!   incremental component-local rate maintenance and a parallel scenario
-//!   sweep harness ([`netsim::sweep`]).
+//!   scheduler (the SimAI-substitute substrate for large-scale studies):
+//!   an indexed-calendar event core with lazy flow progress, incremental
+//!   component-local rate maintenance, and a parallel scenario sweep
+//!   harness ([`netsim::sweep`]) that reaches 1024-DC fig17 grids.
 //! * [`plan`] — the layered Plan IR (per-MoE-layer migrate/dispatch/expert/
 //!   combine phases), the shared Plan-IR → DAG lowering, the joint
 //!   TP × EP × DP plan expansion ([`plan::parallel`]) and the

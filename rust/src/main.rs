@@ -332,7 +332,7 @@ fn cmd_experiments(args: &Args) -> Result<()> {
         exp::table7().print();
     }
     if all || which == "fig17" {
-        exp::fig17_with_threads(&[50, 100, 200, 500, 1000], threads).0.print();
+        exp::fig17_with_threads(&[50, 100, 200, 500, 1000, 1024], threads).0.print();
     }
     if all || which == "perlayer" {
         exp::per_layer_p().0.print();

@@ -113,6 +113,21 @@ impl Dag {
         out
     }
 
+    /// Dense all-to-all: one independent transfer per ordered GPU pair
+    /// (no self-loops), sized by `bytes(src, dst)`. The workhorse of the
+    /// event-core scaling tests and the `hotpath_micro` dense-A2A benches.
+    pub fn all_to_all(gpus: usize, tag: Tag, mut bytes: impl FnMut(usize, usize) -> f64) -> Dag {
+        let mut d = Dag::new();
+        for i in 0..gpus {
+            for j in 0..gpus {
+                if i != j {
+                    d.transfer(i, j, bytes(i, j), tag, vec![], "a2a");
+                }
+            }
+        }
+        d
+    }
+
     /// Number of GPU-to-GPU transfers by tag (frequency accounting,
     /// Table VII semantics). Zero-byte transfers are not counted.
     pub fn frequency_by_tag(&self, tag: Tag) -> usize {
@@ -123,6 +138,31 @@ impl Dag {
             })
             .count()
     }
+}
+
+/// Dense hierarchical A2A on a `dcs × per_dc` cluster: uniform cross-DC
+/// payloads of `cross_bytes` plus per-flow jittered intra-DC payloads
+/// (`intra_bytes · (1 ± jitter)`, seed-deterministic). This is the linear
+/// scan engine's worst case — the jittered intra flows produce thousands of
+/// staggered completion events in small per-DC components while the uniform
+/// cross-DC elephants keep the active flow set at O(G²) throughout — and the
+/// shape behind the event-core scaling tests and `BENCH_netsim.json` rows.
+pub fn dense_mixed_a2a(
+    dcs: usize,
+    per_dc: usize,
+    cross_bytes: f64,
+    intra_bytes: f64,
+    jitter: f64,
+    seed: u64,
+) -> Dag {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    Dag::all_to_all(dcs * per_dc, Tag::A2A, |i, j| {
+        if i / per_dc == j / per_dc {
+            intra_bytes * (1.0 + jitter * (2.0 * rng.f64() - 1.0))
+        } else {
+            cross_bytes
+        }
+    })
 }
 
 #[cfg(test)]
@@ -148,6 +188,42 @@ mod tests {
         d.transfer(0, 1, 0.0, Tag::A2A, vec![], "empty");
         assert_eq!(d.frequency_by_tag(Tag::A2A), 0);
         assert_eq!(d.traffic_by_tag(Tag::A2A), 0.0);
+    }
+
+    #[test]
+    fn all_to_all_covers_every_ordered_pair() {
+        let d = Dag::all_to_all(4, Tag::A2A, |i, j| (i * 10 + j) as f64);
+        assert_eq!(d.len(), 12);
+        assert_eq!(d.frequency_by_tag(Tag::A2A), 12);
+        let total: f64 = (0..4)
+            .flat_map(|i| (0..4).filter(move |&j| j != i).map(move |j| (i * 10 + j) as f64))
+            .sum();
+        assert_eq!(d.traffic_by_tag(Tag::A2A), total);
+    }
+
+    #[test]
+    fn dense_mixed_a2a_is_seed_deterministic_and_jitters_intra_only() {
+        let a = dense_mixed_a2a(2, 3, 5e3, 1e6, 0.5, 7);
+        let b = dense_mixed_a2a(2, 3, 5e3, 1e6, 0.5, 7);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.traffic_by_tag(Tag::A2A).to_bits(), b.traffic_by_tag(Tag::A2A).to_bits());
+        let mut intra = 0usize;
+        for t in &a.tasks {
+            let TaskKind::Transfer { src, dst, bytes, .. } = t.kind else { panic!() };
+            if src / 3 == dst / 3 {
+                intra += 1;
+                assert!((5e5..=15e5).contains(&bytes), "intra bytes out of band: {bytes}");
+            } else {
+                assert_eq!(bytes, 5e3, "cross-DC payloads must be uniform");
+            }
+        }
+        assert_eq!(intra, 2 * 3 * 2);
+        let c = dense_mixed_a2a(2, 3, 5e3, 1e6, 0.5, 8);
+        assert_ne!(
+            a.traffic_by_tag(Tag::A2A).to_bits(),
+            c.traffic_by_tag(Tag::A2A).to_bits(),
+            "a different seed must jitter differently"
+        );
     }
 
     #[test]

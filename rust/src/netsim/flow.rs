@@ -17,7 +17,10 @@
 //!   the connected component (of the resource–flow bipartite graph) touched
 //!   by the change. Max-min allocations decompose exactly over connected
 //!   components, so the component-local solve equals the global one for every
-//!   flow inside it while flows outside keep their rates.
+//!   flow inside it while flows outside keep their rates. `resolve` reports
+//!   the set of flows whose rate actually changed bitwise, which is what
+//!   lets the simulator's calendar engine keep flow progress lazy
+//!   (re-touching a flow only when its rate moves).
 
 /// Index into the resource table.
 pub type ResourceId = usize;
@@ -138,11 +141,16 @@ pub fn max_min_rates(caps: &[f64], flows: &[FlowSpec]) -> Vec<f64> {
 /// resources dirty; [`resolve`](Self::resolve) re-solves every connected
 /// component containing a dirty resource in one pass (so a batch of
 /// arrivals/completions — e.g. all flows coalesced into one simulator event —
-/// costs a single solve). [`rate`](Self::rate) reads the current allocation.
+/// costs a single solve) and returns the flows whose rate actually changed,
+/// so the caller can re-touch only those (the calendar engine's lazy byte
+/// accounting). [`rate`](Self::rate) reads the current allocation.
 pub struct IncrementalMaxMin {
     caps: Vec<f64>,
     /// slab: resources of each flow (empty for dead slots)
     resources_of: Vec<Vec<ResourceId>>,
+    /// slab: `users_pos[f][k]` = index of flow `f`'s `k`-th resource entry
+    /// inside `users[resources_of[f][k]]` (O(1) deregistration)
+    users_pos: Vec<Vec<usize>>,
     live: Vec<bool>,
     free: Vec<FlowId>,
     n_live: usize,
@@ -152,6 +160,8 @@ pub struct IncrementalMaxMin {
     /// resources whose component must be re-solved
     dirty: Vec<ResourceId>,
     dirty_mark: Vec<bool>,
+    /// flows whose rate changed during the last [`resolve`](Self::resolve)
+    changed: Vec<FlowId>,
     // --- epoch-stamped scratch for resolve() ---
     epoch: u64,
     res_seen: Vec<u64>,
@@ -166,6 +176,7 @@ impl IncrementalMaxMin {
         Self {
             caps,
             resources_of: Vec::new(),
+            users_pos: Vec::new(),
             live: Vec::new(),
             free: Vec::new(),
             n_live: 0,
@@ -173,6 +184,7 @@ impl IncrementalMaxMin {
             users: vec![Vec::new(); nr],
             dirty: Vec::new(),
             dirty_mark: vec![false; nr],
+            changed: Vec::new(),
             epoch: 0,
             res_seen: vec![0; nr],
             flow_seen: Vec::new(),
@@ -205,6 +217,7 @@ impl IncrementalMaxMin {
             Some(id) => id,
             None => {
                 self.resources_of.push(Vec::new());
+                self.users_pos.push(Vec::new());
                 self.live.push(false);
                 self.rates.push(0.0);
                 self.flow_seen.push(0);
@@ -215,7 +228,9 @@ impl IncrementalMaxMin {
         self.live[id] = true;
         self.n_live += 1;
         self.rates[id] = if resources.is_empty() { f64::INFINITY } else { 0.0 };
+        debug_assert!(self.users_pos[id].is_empty(), "reused slot kept stale positions");
         for &r in &resources {
+            self.users_pos[id].push(self.users[r].len());
             self.users[r].push(id);
             self.mark_dirty(r);
         }
@@ -223,15 +238,45 @@ impl IncrementalMaxMin {
         id
     }
 
-    /// Deregister a flow (completion/abort).
+    /// Deregister a flow (completion/abort). O(resources of the flow): each
+    /// user-list entry is removed by its recorded position, and the entry
+    /// swapped into the hole has its own position fixed up — no linear scan
+    /// of the (possibly thousands-long) user list.
     pub fn remove(&mut self, id: FlowId) {
         assert!(self.live[id], "remove of dead flow {id}");
         self.live[id] = false;
         self.n_live -= 1;
         let resources = std::mem::take(&mut self.resources_of[id]);
-        for &r in &resources {
-            if let Some(pos) = self.users[r].iter().position(|&f| f == id) {
-                self.users[r].swap_remove(pos);
+        let mut positions = std::mem::take(&mut self.users_pos[id]);
+        for k in 0..resources.len() {
+            let r = resources[k];
+            let pos = positions[k];
+            debug_assert_eq!(self.users[r][pos], id, "users_pos out of sync");
+            let last = self.users[r].len() - 1;
+            self.users[r].swap_remove(pos);
+            if pos < last {
+                // the entry that lived at `last` now sits at `pos`
+                let moved = self.users[r][pos];
+                if moved == id {
+                    // one of this flow's own duplicate entries on `r` moved;
+                    // patch the local snapshot so its later iteration removes
+                    // the right slot
+                    for j in k + 1..resources.len() {
+                        if resources[j] == r && positions[j] == last {
+                            positions[j] = pos;
+                            break;
+                        }
+                    }
+                } else {
+                    let mv = &mut self.users_pos[moved];
+                    let rs = &self.resources_of[moved];
+                    for j in 0..rs.len() {
+                        if rs[j] == r && mv[j] == last {
+                            mv[j] = pos;
+                            break;
+                        }
+                    }
+                }
             }
             self.mark_dirty(r);
         }
@@ -240,9 +285,18 @@ impl IncrementalMaxMin {
 
     /// Re-solve every connected component containing a dirty resource.
     /// No-op when nothing changed since the last resolve.
-    pub fn resolve(&mut self) {
+    ///
+    /// Returns the flows whose rate **actually changed** (bitwise) — flows
+    /// whose component was re-solved to the identical rate are excluded, so
+    /// a caller doing lazy progress accounting (the simulator's calendar
+    /// engine) re-touches only genuinely re-rated flows. Newly added flows
+    /// appear here as soon as they receive a non-placeholder rate. The slice
+    /// is valid until the next `add`/`remove`/`resolve` and never contains
+    /// dead flows.
+    pub fn resolve(&mut self) -> &[FlowId] {
+        self.changed.clear();
         if self.dirty.is_empty() {
-            return;
+            return &self.changed;
         }
         self.epoch += 1;
         let epoch = self.epoch;
@@ -284,7 +338,7 @@ impl IncrementalMaxMin {
         }
         self.dirty.clear();
         if comp_flows.is_empty() {
-            return;
+            return &self.changed;
         }
         // build the component-local problem and solve it
         let mut residual: Vec<f64> = comp_res.iter().map(|&r| self.caps[r]).collect();
@@ -300,8 +354,12 @@ impl IncrementalMaxMin {
         let mut rates_local = vec![0.0f64; comp_flows.len()];
         water_fill(&mut residual, &mut active, &users_local, &flow_res_local, &mut rates_local);
         for (i, &f) in comp_flows.iter().enumerate() {
-            self.rates[f] = rates_local[i];
+            if rates_local[i].to_bits() != self.rates[f].to_bits() {
+                self.rates[f] = rates_local[i];
+                self.changed.push(f);
+            }
         }
+        &self.changed
     }
 }
 
@@ -562,6 +620,116 @@ mod tests {
         let l = alloc.add(vec![]);
         alloc.resolve();
         assert!(alloc.rate(l).is_infinite());
+    }
+
+    /// Internal invariant of the positional user tracking: every recorded
+    /// position really points at the flow's entry in the user list.
+    fn check_positions(alloc: &IncrementalMaxMin) {
+        for f in 0..alloc.resources_of.len() {
+            if !alloc.live[f] {
+                assert!(alloc.users_pos[f].is_empty(), "dead flow {f} kept positions");
+                continue;
+            }
+            assert_eq!(alloc.resources_of[f].len(), alloc.users_pos[f].len());
+            for (k, &r) in alloc.resources_of[f].iter().enumerate() {
+                let pos = alloc.users_pos[f][k];
+                assert_eq!(
+                    alloc.users[r][pos], f,
+                    "flow {f} slot {k}: users[{r}][{pos}] holds {}",
+                    alloc.users[r][pos]
+                );
+            }
+        }
+        for (r, us) in alloc.users.iter().enumerate() {
+            for (pos, &f) in us.iter().enumerate() {
+                assert!(alloc.live[f], "resource {r} lists dead flow {f}");
+                assert!(
+                    alloc
+                        .resources_of[f]
+                        .iter()
+                        .zip(&alloc.users_pos[f])
+                        .any(|(&fr, &fp)| fr == r && fp == pos),
+                    "users[{r}][{pos}] = {f} has no back-reference"
+                );
+            }
+        }
+    }
+
+    /// Tentpole contract: `resolve` returns **exactly** the live flows whose
+    /// rate changed bitwise — the calendar engine re-touches only those.
+    #[test]
+    fn resolve_reports_exactly_the_changed_flows() {
+        testkit::check("resolve-changed-set", 100, |g| {
+            let nr = g.usize_in(2, 10);
+            let caps: Vec<f64> = (0..nr).map(|_| g.rng.f64() * 8.0 + 0.2).collect();
+            let mut alloc = IncrementalMaxMin::new(caps);
+            let mut live: Vec<(FlowId, Vec<ResourceId>)> = Vec::new();
+            for _ in 0..g.usize_in(4, 24) {
+                // batch of adds/removes, then one resolve
+                for _ in 0..g.usize_in(1, 4) {
+                    if !live.is_empty() && g.rng.below(3) == 0 {
+                        let at = g.rng.below(live.len());
+                        let (id, _) = live.swap_remove(at);
+                        alloc.remove(id);
+                    } else {
+                        let spec = random_flows(g, nr, 1).remove(0);
+                        let id = alloc.add(spec.resources.clone());
+                        live.push((id, spec.resources));
+                    }
+                }
+                let before: Vec<(FlowId, u64)> =
+                    live.iter().map(|&(id, _)| (id, alloc.rates[id].to_bits())).collect();
+                let changed: Vec<FlowId> = alloc.resolve().to_vec();
+                for &(id, old_bits) in &before {
+                    let now_bits = alloc.rate(id).to_bits();
+                    let reported = changed.contains(&id);
+                    prop_assert!(
+                        reported == (now_bits != old_bits),
+                        "flow {id}: rate {} -> {} but reported={reported}",
+                        f64::from_bits(old_bits),
+                        f64::from_bits(now_bits)
+                    );
+                }
+                for &id in &changed {
+                    prop_assert!(alloc.live[id], "changed set contains dead flow {id}");
+                }
+                // resolving again with no churn reports nothing
+                prop_assert!(alloc.resolve().is_empty(), "idle resolve reported changes");
+                check_positions(&alloc);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn positional_removal_survives_duplicates_and_reuse() {
+        // adversarial order: duplicate resources, removals from the middle,
+        // slot reuse — the positional tracking must stay exact throughout
+        let mut alloc = IncrementalMaxMin::new(vec![2.0, 4.0, 8.0]);
+        let a = alloc.add(vec![0, 0, 1]); // duplicate entries on resource 0
+        let b = alloc.add(vec![0, 2]);
+        let c = alloc.add(vec![0, 1, 2]);
+        let d = alloc.add(vec![0, 0]); // another duplicated flow
+        check_positions(&alloc);
+        alloc.remove(a); // removes two entries of users[0], shuffling b/c/d
+        check_positions(&alloc);
+        alloc.resolve();
+        let e = alloc.add(vec![1, 1, 2]); // reuses a's slot
+        assert_eq!(e, a);
+        check_positions(&alloc);
+        alloc.remove(d);
+        check_positions(&alloc);
+        alloc.remove(b);
+        check_positions(&alloc);
+        alloc.resolve();
+        // survivors match the reference oracle
+        let want = max_min_rates(&[2.0, 4.0, 8.0], &[flow(vec![0, 1, 2]), flow(vec![1, 1, 2])]);
+        assert!((alloc.rate(c) - want[0]).abs() < 1e-12);
+        assert!((alloc.rate(e) - want[1]).abs() < 1e-12);
+        alloc.remove(c);
+        alloc.remove(e);
+        check_positions(&alloc);
+        assert_eq!(alloc.live_flows(), 0);
     }
 
     #[test]

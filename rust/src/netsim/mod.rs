@@ -15,10 +15,15 @@
 //! The simulator reports the makespan plus per-level / per-tag traffic
 //! accounting (used by the Fig. 2(b)/Fig. 16 reproductions).
 //!
-//! Rate maintenance is incremental by default ([`flow::IncrementalMaxMin`]:
-//! component-local re-solves on flow churn); [`sim::RateMode::Reference`]
-//! keeps the from-scratch oracle. [`sweep`] fans fig16/fig17-style scenario
-//! grids across OS threads with deterministic per-scenario seeds.
+//! The production event loop is an **indexed calendar**: min-heaps for
+//! compute completions, pending flow starts and (generation-stamped)
+//! predicted flow finishes, with **lazy flow progress** — a flow's bytes are
+//! settled only when [`flow::IncrementalMaxMin`] reports its rate changed.
+//! [`sim::RateMode::ScanIncremental`] keeps the pre-change linear-scan loop
+//! as the perf baseline and [`sim::RateMode::Reference`] the from-scratch
+//! rate oracle. [`sweep`] fans fig16/fig17-style scenario grids across OS
+//! threads with deterministic per-scenario seeds (the calendar engine is
+//! what lets the fig17 grid reach 1024 DCs).
 
 pub mod dag;
 pub mod flow;

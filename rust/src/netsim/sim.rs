@@ -7,40 +7,59 @@
 //! capacity of the destination's level-`l` container (e.g. the shared 10 Gbps
 //! DC uplink for cross-DC flows), plus the level's fixed startup latency.
 //!
-//! ## Hot path
+//! ## Hot path: the indexed event calendar
 //!
-//! Rate maintenance is **incremental** by default: flow arrivals/completions
-//! mark their resources dirty and [`IncrementalMaxMin`] re-solves only the
-//! affected connected component once per event batch — flows that finish
-//! within `EPS` of each other coalesce into a single event, paying one
-//! solve for the whole batch. [`RateMode::Reference`] keeps the pre-change
-//! behaviour (full [`max_min_rates`] recompute per event) as an oracle for
-//! differential tests and as the baseline for the `hotpath_micro` speedup
-//! numbers.
+//! The production engine ([`RateMode::Incremental`]) is built around three
+//! min-heap calendars — compute completions, pending flow starts, and
+//! predicted flow finishes (generation-stamped for lazy invalidation) — and
+//! **lazy flow progress**: each flow carries `(bytes_at_touch, touch_time,
+//! rate)` and is re-touched only when [`IncrementalMaxMin::resolve`] reports
+//! that its rate actually changed. An event therefore costs
+//! O(component re-solve + changed flows · log F) instead of the pre-change
+//! O(GPUs + active flows + pending starts) linear scans, which is what lets
+//! fig17-style sweeps honestly reach 1024 DCs (see DESIGN.md §Hot path for
+//! the per-event complexity table).
 //!
-//! Byte totals use compensated (Kahan) accumulation so the reported traffic
-//! is invariant under event ordering and task-id permutation.
+//! Two baselines keep the pre-change event loop (linear next-event search,
+//! per-event byte advancement of every flow) verbatim:
+//!
+//! * [`RateMode::ScanIncremental`] — pre-change loop + incremental rate
+//!   maintenance: the perf baseline the calendar's speedup is measured
+//!   against (`hotpath_micro`, `BENCH_netsim.json`).
+//! * [`RateMode::Reference`] — pre-change loop + full [`max_min_rates`]
+//!   recompute per event: the correctness oracle for the differential tests.
+//!
+//! Byte totals use compensated (Kahan) accumulation — as does the busy-GPU
+//! utilization integral — so the reported traffic and utilization are
+//! invariant under event ordering and task-id permutation.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, LevelIndexer};
 use crate::netsim::dag::{Dag, Tag, TaskKind};
 use crate::netsim::flow::{max_min_rates, FlowSpec, IncrementalMaxMin};
 
 const EPS: f64 = 1e-12;
 
-/// How the engine maintains max-min-fair rates.
+/// How the engine maintains rates and finds the next event.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum RateMode {
-    /// Component-local incremental re-solves (the production hot path).
+    /// Indexed event calendar + lazy flow progress + component-local
+    /// incremental rate re-solves (the production hot path).
     #[default]
     Incremental,
-    /// Full from-scratch recompute on every flow change (the reference
-    /// oracle; O(flows × resources) per event).
+    /// Pre-change event loop (linear per-event scans) with incremental rate
+    /// maintenance — the baseline the calendar engine's speedup is measured
+    /// against.
+    ScanIncremental,
+    /// Pre-change event loop with a full from-scratch rate recompute on
+    /// every flow change (the reference oracle; O(flows × resources) per
+    /// event).
     Reference,
 }
 
-/// Compensated (Kahan) accumulator: byte totals independent of add order.
+/// Compensated (Kahan) accumulator: totals independent of add order.
 #[derive(Clone, Copy, Debug, Default)]
 struct Kahan {
     sum: f64,
@@ -90,11 +109,200 @@ impl SimResult {
     }
 }
 
+/// One stamped entry in a [`Calendar`], ordered by `(time, key, stamp)`.
+/// Stamped times are finite, so `total_cmp` gives the numeric order; `key`
+/// and `stamp` break ties deterministically.
+#[derive(Clone, Copy, Debug)]
+struct CalEntry {
+    time: f64,
+    key: usize,
+    stamp: u64,
+}
+
+impl PartialEq for CalEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for CalEntry {}
+
+impl PartialOrd for CalEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for CalEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then_with(|| self.key.cmp(&other.key))
+            .then_with(|| self.stamp.cmp(&other.stamp))
+    }
+}
+
+/// Indexed event calendar: a min-heap with O(log n) push/pop. Consumers
+/// needing invalidation stamp entries with a generation and lazily discard
+/// stale tops instead of searching the heap.
+#[derive(Default)]
+struct Calendar {
+    heap: BinaryHeap<Reverse<CalEntry>>,
+}
+
+impl Calendar {
+    #[inline]
+    fn push(&mut self, time: f64, key: usize, stamp: u64) {
+        debug_assert!(time.is_finite(), "calendar entry with non-finite time");
+        self.heap.push(Reverse(CalEntry { time, key, stamp }));
+    }
+
+    #[inline]
+    fn peek(&self) -> Option<CalEntry> {
+        self.heap.peek().map(|e| e.0)
+    }
+
+    #[inline]
+    fn pop(&mut self) -> Option<CalEntry> {
+        self.heap.pop().map(|e| e.0)
+    }
+}
+
+/// Lazy progress record for an in-flight flow: bytes are settled only when
+/// the rate changes (a "touch"), so an event that leaves a flow's rate
+/// intact costs it nothing. Remaining bytes at time `t` are
+/// `bytes_at_touch - rate · (t - touch_time)`.
+#[derive(Clone, Copy, Debug)]
+struct FlowState {
+    task: usize,
+    bytes_at_touch: f64,
+    touch_time: f64,
+    rate: f64,
+    /// bumps on every touch/slot reuse, invalidating stale finish entries
+    gen: u64,
+    live: bool,
+}
+
+impl FlowState {
+    fn vacant() -> Self {
+        Self {
+            task: usize::MAX,
+            bytes_at_touch: 0.0,
+            touch_time: 0.0,
+            rate: 0.0,
+            gen: 0,
+            live: false,
+        }
+    }
+}
+
+/// Per-run setup shared by both engines: the hierarchical capacity table and
+/// allocation-free hierarchy queries.
+struct Frame {
+    levels: usize,
+    g: usize,
+    level_offset: Vec<usize>,
+    caps: Vec<f64>,
+    idx: LevelIndexer,
+}
+
+impl Frame {
+    fn new(cluster: &ClusterSpec) -> Self {
+        let ml = cluster.multilevel();
+        let levels = cluster.levels.len();
+        let g = ml.total_gpus();
+        let idx = ml.indexer();
+        // resource table: per level, per container: egress + ingress
+        let mut level_offset = vec![0usize; levels];
+        let mut ncaps = 0usize;
+        for l in 0..levels {
+            level_offset[l] = ncaps;
+            let containers: usize = ml.scaling()[..=l].iter().product();
+            ncaps += containers * 2;
+        }
+        let mut caps = vec![0.0f64; ncaps];
+        for l in 0..levels {
+            let containers: usize = ml.scaling()[..=l].iter().product();
+            for c in 0..containers {
+                // per-container capacity honors heterogeneous link overrides
+                let bw = cluster.container_bandwidth(l, c);
+                caps[level_offset[l] + c * 2] = bw;
+                caps[level_offset[l] + c * 2 + 1] = bw;
+            }
+        }
+        Self { levels, g, level_offset, caps, idx }
+    }
+
+    #[inline]
+    fn resource_of(&self, gpu: usize, level: usize, ingress: bool) -> usize {
+        self.level_offset[level] + self.idx.container_of(gpu, level) * 2 + ingress as usize
+    }
+
+    #[inline]
+    fn bottleneck(&self, src: usize, dst: usize) -> Option<usize> {
+        self.idx.bottleneck_level(src, dst)
+    }
+}
+
+/// Dependency bookkeeping shared by both engines: indegrees, dependents,
+/// per-task finish times, and the ready min-heap (tasks dispatch in creation
+/// order — program order — so e.g. an SREncode created before the pre-expert
+/// compute also starts first on its GPU).
+struct DepState {
+    indeg: Vec<usize>,
+    dependents: Vec<Vec<usize>>,
+    finish: Vec<f64>,
+    done: Vec<bool>,
+    n_done: usize,
+    ready: BinaryHeap<Reverse<usize>>,
+}
+
+impl DepState {
+    fn new(dag: &Dag) -> Self {
+        let n = dag.tasks.len();
+        let mut indeg = vec![0usize; n];
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, t) in dag.tasks.iter().enumerate() {
+            indeg[i] = t.deps.len();
+            for &d in &t.deps {
+                dependents[d].push(i);
+            }
+        }
+        let ready = (0..n).filter(|&i| indeg[i] == 0).map(Reverse).collect();
+        Self {
+            indeg,
+            dependents,
+            finish: vec![f64::NAN; n],
+            done: vec![false; n],
+            n_done: 0,
+            ready,
+        }
+    }
+
+    /// Mark `task` finished at `t` and ready its unblocked dependents.
+    fn complete(&mut self, task: usize, t: f64) {
+        if self.done[task] {
+            return;
+        }
+        self.done[task] = true;
+        self.finish[task] = t;
+        self.n_done += 1;
+        for i in 0..self.dependents[task].len() {
+            let dep = self.dependents[task][i];
+            self.indeg[dep] -= 1;
+            if self.indeg[dep] == 0 {
+                self.ready.push(Reverse(dep));
+            }
+        }
+    }
+}
+
 pub struct Simulator<'a> {
     cluster: &'a ClusterSpec,
     mode: RateMode,
 }
 
+/// Eagerly-advanced flow record of the pre-change (scan) engine.
 struct ActiveFlow {
     task: usize,
     /// allocator handle (unused in Reference mode)
@@ -109,7 +317,7 @@ impl<'a> Simulator<'a> {
         Self { cluster, mode: RateMode::Incremental }
     }
 
-    /// Reference-oracle engine (pre-change rate maintenance).
+    /// Reference-oracle engine (pre-change event loop + full rate recompute).
     pub fn reference(cluster: &'a ClusterSpec) -> Self {
         Self { cluster, mode: RateMode::Reference }
     }
@@ -121,105 +329,57 @@ impl<'a> Simulator<'a> {
     /// Run the DAG to completion; panics on cyclic or dangling dependencies
     /// (DAG construction enforces topological ids, so cycles are impossible).
     pub fn run(&self, dag: &Dag) -> SimResult {
-        let ml = self.cluster.multilevel();
-        let levels = self.cluster.levels.len();
-        let g = ml.total_gpus();
-        // allocation-free hierarchy queries for the per-transfer hot path
-        let idx = ml.indexer();
-
-        // resource table: per level, per container: egress + ingress
-        let mut level_offset = vec![0usize; levels];
-        let mut ncaps = 0usize;
-        for l in 0..levels {
-            level_offset[l] = ncaps;
-            let containers: usize = ml.scaling()[..=l].iter().product();
-            ncaps += containers * 2;
+        match self.mode {
+            RateMode::Incremental => self.run_calendar(dag),
+            RateMode::ScanIncremental => self.run_scan(dag, true),
+            RateMode::Reference => self.run_scan(dag, false),
         }
-        let mut caps = vec![0.0f64; ncaps];
-        for l in 0..levels {
-            let containers: usize = ml.scaling()[..=l].iter().product();
-            for c in 0..containers {
-                // per-container capacity honors heterogeneous link overrides
-                let bw = self.cluster.container_bandwidth(l, c);
-                caps[level_offset[l] + c * 2] = bw;
-                caps[level_offset[l] + c * 2 + 1] = bw;
-            }
-        }
-        let bottleneck = |src: usize, dst: usize| -> Option<usize> { idx.bottleneck_level(src, dst) };
-        let resource_of = |gpu: usize, level: usize, ingress: bool| -> usize {
-            level_offset[level] + idx.container_of(gpu, level) * 2 + ingress as usize
-        };
+    }
 
+    /// The calendar engine: O(log n) event indexing + lazy flow progress.
+    fn run_calendar(&self, dag: &Dag) -> SimResult {
+        let fr = Frame::new(self.cluster);
+        let g = fr.g;
         let n = dag.tasks.len();
-        let mut indeg = vec![0usize; n];
-        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
-        for (i, t) in dag.tasks.iter().enumerate() {
-            indeg[i] = t.deps.len();
-            for &d in &t.deps {
-                dependents[d].push(i);
-            }
-        }
+        let mut ds = DepState::new(dag);
 
-        let mut finish = vec![f64::NAN; n];
-        let mut done = vec![false; n];
-        let mut n_done = 0usize;
-
-        // per-GPU compute queues
+        // per-GPU compute queues; `gpu_check` holds the only GPUs whose idle
+        // state can have changed since the last start pass (enqueue or
+        // completion), replacing the pre-change O(G) sweep per event
         let mut gpu_queue: Vec<VecDeque<usize>> = vec![VecDeque::new(); g];
-        let mut gpu_busy_until = vec![0.0f64; g];
         let mut gpu_running: Vec<Option<usize>> = vec![None; g];
-        let mut gpu_busy_integral = 0.0f64;
+        let mut gpu_check: Vec<usize> = Vec::new();
+        let mut busy_gpus = 0usize;
+        let mut gpu_busy_integral = Kahan::default();
 
-        // pending flow starts (after latency): (start_time, task)
-        let mut flow_starts: Vec<(f64, usize)> = Vec::new();
-        let mut flows: Vec<ActiveFlow> = Vec::new();
-        let mut alloc = IncrementalMaxMin::new(caps.clone());
-        let incremental = self.mode == RateMode::Incremental;
+        let mut compute_cal = Calendar::default();
+        let mut start_cal = Calendar::default();
+        let mut finish_cal = Calendar::default();
+        // pending flow starts: the bottleneck level is computed once at
+        // dispatch and carried here (the start pass used to recompute it)
+        let mut pending: Vec<(usize, usize)> = Vec::new();
+        let mut flows: Vec<FlowState> = Vec::new();
+        let mut alloc = IncrementalMaxMin::new(fr.caps.clone());
+        let mut changed_buf: Vec<usize> = Vec::new();
         let mut rates_dirty = false;
 
         let mut time = 0.0f64;
         let mut events = 0usize;
         let (mut bytes_a2a, mut bytes_ag, mut bytes_ar) =
             (Kahan::default(), Kahan::default(), Kahan::default());
-        let mut bytes_per_level = vec![Kahan::default(); levels];
+        let mut bytes_per_level = vec![Kahan::default(); fr.levels];
 
-        // ready queue: min-heap by task id — tasks dispatch in creation
-        // order (program order), so e.g. an SREncode created before the
-        // pre-expert compute also starts first on its GPU.
-        use std::cmp::Reverse;
-        use std::collections::BinaryHeap;
-        let mut ready: BinaryHeap<Reverse<usize>> =
-            (0..n).filter(|&i| indeg[i] == 0).map(Reverse).collect();
-
-        macro_rules! complete {
-            ($task:expr, $t:expr, $ready:expr, $finish:expr, $done:expr, $n_done:expr) => {{
-                let task = $task;
-                if !$done[task] {
-                    $done[task] = true;
-                    $finish[task] = $t;
-                    $n_done += 1;
-                    for &dep in &dependents[task] {
-                        indeg[dep] -= 1;
-                        if indeg[dep] == 0 {
-                            $ready.push(std::cmp::Reverse(dep));
-                        }
-                    }
-                }
-            }};
-        }
-
-        while n_done < n {
+        while ds.n_done < n {
             // dispatch everything ready at the current time
-            while let Some(std::cmp::Reverse(task)) = ready.pop() {
+            while let Some(Reverse(task)) = ds.ready.pop() {
                 match dag.tasks[task].kind {
-                    TaskKind::Barrier => {
-                        complete!(task, time, ready, finish, done, n_done);
-                    }
+                    TaskKind::Barrier => ds.complete(task, time),
                     TaskKind::Compute { gpu, seconds } => {
                         if seconds <= EPS {
-                            complete!(task, time, ready, finish, done, n_done);
+                            ds.complete(task, time);
                         } else {
                             gpu_queue[gpu].push_back(task);
+                            gpu_check.push(gpu);
                         }
                     }
                     TaskKind::Transfer { src, dst, bytes, tag } => {
@@ -232,15 +392,231 @@ impl<'a> Simulator<'a> {
                             Tag::AllReduce => bytes_ar.add(bytes),
                             Tag::Other => {}
                         }
-                        match bottleneck(src, dst) {
+                        match fr.bottleneck(src, dst) {
                             None => {
                                 // loopback: instantaneous, no wire traffic
-                                complete!(task, time, ready, finish, done, n_done);
+                                ds.complete(task, time);
                             }
                             Some(l) => {
                                 bytes_per_level[l].add(bytes);
                                 let lat = self.cluster.levels[l].latency;
-                                flow_starts.push((time + lat, task));
+                                start_cal.push(time + lat, pending.len(), 0);
+                                pending.push((task, l));
+                            }
+                        }
+                    }
+                }
+            }
+            // start compute on the GPUs whose state may have changed
+            while let Some(gpu) = gpu_check.pop() {
+                if gpu_running[gpu].is_none() {
+                    if let Some(task) = gpu_queue[gpu].pop_front() {
+                        let TaskKind::Compute { seconds, .. } = dag.tasks[task].kind else {
+                            unreachable!()
+                        };
+                        gpu_running[gpu] = Some(task);
+                        busy_gpus += 1;
+                        compute_cal.push(time + seconds, gpu, 0);
+                    }
+                }
+            }
+            if ds.n_done == n {
+                break;
+            }
+            // refresh fair-share rates if the flow set changed: one
+            // component-local solve per event batch, and only flows whose
+            // rate actually moved are re-touched (lazy byte settlement)
+            if rates_dirty {
+                changed_buf.clear();
+                changed_buf.extend_from_slice(alloc.resolve());
+                for &id in &changed_buf {
+                    let fs = &mut flows[id];
+                    debug_assert!(fs.live, "allocator re-rated a dead flow");
+                    let new_rate = alloc.rate(id);
+                    let remaining = fs.bytes_at_touch - fs.rate * (time - fs.touch_time);
+                    fs.bytes_at_touch = remaining;
+                    fs.touch_time = time;
+                    fs.rate = new_rate;
+                    fs.gen += 1;
+                    if new_rate.is_infinite() || remaining <= EPS {
+                        finish_cal.push(time, id, fs.gen);
+                    } else if new_rate > 0.0 {
+                        finish_cal.push(time + remaining / new_rate, id, fs.gen);
+                    }
+                    // rate 0 with bytes left: no finish entry — the flow is
+                    // stalled until a later resolve moves its rate (the
+                    // pre-change engine likewise lets it contribute nothing)
+                }
+                rates_dirty = false;
+            }
+
+            // next event: the minimum over the three calendars (stale finish
+            // entries — dead flows or outdated generations — drop lazily)
+            let mut next = f64::INFINITY;
+            if let Some(e) = compute_cal.peek() {
+                next = next.min(e.time);
+            }
+            if let Some(e) = start_cal.peek() {
+                next = next.min(e.time);
+            }
+            while let Some(e) = finish_cal.peek() {
+                let fs = &flows[e.key];
+                if fs.live && fs.gen == e.stamp {
+                    next = next.min(e.time);
+                    break;
+                }
+                finish_cal.pop();
+            }
+            assert!(
+                next.is_finite(),
+                "simulation stalled at t={time}: {} of {} tasks done (deadlock in schedule?)",
+                ds.n_done,
+                n
+            );
+            // integrate utilization from the incremental busy count
+            let dt = (next - time).max(0.0);
+            gpu_busy_integral.add(dt * busy_gpus as f64);
+            time = next;
+            events += 1;
+
+            // process: compute finishes due at (or coalesced into) this event
+            while let Some(e) = compute_cal.peek() {
+                if e.time > time + EPS {
+                    break;
+                }
+                compute_cal.pop();
+                let gpu = e.key;
+                let task = gpu_running[gpu].take().expect("compute entry without a running task");
+                busy_gpus -= 1;
+                ds.complete(task, time);
+                gpu_check.push(gpu);
+            }
+            // flow starts due
+            while let Some(e) = start_cal.peek() {
+                if e.time > time + EPS {
+                    break;
+                }
+                start_cal.pop();
+                let (task, l) = pending[e.key];
+                let TaskKind::Transfer { src, dst, bytes, .. } = dag.tasks[task].kind else {
+                    unreachable!()
+                };
+                let resources = vec![fr.resource_of(src, l, false), fr.resource_of(dst, l, true)];
+                let id = alloc.add(resources);
+                if id >= flows.len() {
+                    flows.resize(id + 1, FlowState::vacant());
+                }
+                let gen = flows[id].gen + 1;
+                flows[id] = FlowState {
+                    task,
+                    bytes_at_touch: bytes,
+                    touch_time: time,
+                    rate: 0.0,
+                    gen,
+                    live: true,
+                };
+                if bytes <= EPS {
+                    // latency-only transfer: finishes at this very event
+                    finish_cal.push(time, id, gen);
+                }
+                rates_dirty = true;
+            }
+            // flow finishes due — everything stamped within EPS of this
+            // event completes together (coalescing), so simultaneous flows
+            // cost one event and one rate solve regardless of their count.
+            // (The pre-change engine also completed any flow whose remaining
+            // bytes fell under EPS; at the engine's bytes/s rates that is a
+            // sub-EPS time-to-finish, i.e. the same stamped window.)
+            while let Some(e) = finish_cal.peek() {
+                let fs = &flows[e.key];
+                if !(fs.live && fs.gen == e.stamp) {
+                    finish_cal.pop();
+                    continue;
+                }
+                if e.time > time + EPS {
+                    break;
+                }
+                finish_cal.pop();
+                let id = e.key;
+                flows[id].live = false;
+                alloc.remove(id);
+                ds.complete(flows[id].task, time);
+                rates_dirty = true;
+            }
+        }
+
+        let makespan = time;
+        SimResult {
+            makespan,
+            finish: ds.finish,
+            bytes_a2a: bytes_a2a.get(),
+            bytes_ag: bytes_ag.get(),
+            bytes_allreduce: bytes_ar.get(),
+            bytes_per_level: bytes_per_level.iter().map(|k| k.get()).collect(),
+            gpu_utilization: if makespan > 0.0 {
+                gpu_busy_integral.get() / (makespan * g as f64)
+            } else {
+                0.0
+            },
+            events,
+        }
+    }
+
+    /// The pre-change event loop, kept verbatim as the scan baseline and the
+    /// reference oracle: linear next-event search, eager per-event byte
+    /// advancement of every flow, and a full per-GPU sweep per event.
+    /// `incremental` selects component-local rate re-solves (the pre-change
+    /// production path) vs. the full `max_min_rates` recompute (the oracle).
+    fn run_scan(&self, dag: &Dag, incremental: bool) -> SimResult {
+        let fr = Frame::new(self.cluster);
+        let g = fr.g;
+        let n = dag.tasks.len();
+        let mut ds = DepState::new(dag);
+
+        // per-GPU compute queues
+        let mut gpu_queue: Vec<VecDeque<usize>> = vec![VecDeque::new(); g];
+        let mut gpu_busy_until = vec![0.0f64; g];
+        let mut gpu_running: Vec<Option<usize>> = vec![None; g];
+        let mut gpu_busy_integral = Kahan::default();
+
+        // pending flow starts (after latency): (start_time, task, level) —
+        // the bottleneck level computed at dispatch rides along
+        let mut flow_starts: Vec<(f64, usize, usize)> = Vec::new();
+        let mut flows: Vec<ActiveFlow> = Vec::new();
+        let mut alloc = IncrementalMaxMin::new(fr.caps.clone());
+        let mut rates_dirty = false;
+
+        let mut time = 0.0f64;
+        let mut events = 0usize;
+        let (mut bytes_a2a, mut bytes_ag, mut bytes_ar) =
+            (Kahan::default(), Kahan::default(), Kahan::default());
+        let mut bytes_per_level = vec![Kahan::default(); fr.levels];
+
+        while ds.n_done < n {
+            // dispatch everything ready at the current time
+            while let Some(Reverse(task)) = ds.ready.pop() {
+                match dag.tasks[task].kind {
+                    TaskKind::Barrier => ds.complete(task, time),
+                    TaskKind::Compute { gpu, seconds } => {
+                        if seconds <= EPS {
+                            ds.complete(task, time);
+                        } else {
+                            gpu_queue[gpu].push_back(task);
+                        }
+                    }
+                    TaskKind::Transfer { src, dst, bytes, tag } => {
+                        match tag {
+                            Tag::A2A => bytes_a2a.add(bytes),
+                            Tag::AG => bytes_ag.add(bytes),
+                            Tag::AllReduce => bytes_ar.add(bytes),
+                            Tag::Other => {}
+                        }
+                        match fr.bottleneck(src, dst) {
+                            None => ds.complete(task, time),
+                            Some(l) => {
+                                bytes_per_level[l].add(bytes);
+                                let lat = self.cluster.levels[l].latency;
+                                flow_starts.push((time + lat, task, l));
                             }
                         }
                     }
@@ -258,7 +634,7 @@ impl<'a> Simulator<'a> {
                     }
                 }
             }
-            if n_done == n {
+            if ds.n_done == n {
                 break;
             }
             // refresh fair-share rates if the flow set changed: one solve per
@@ -277,7 +653,7 @@ impl<'a> Simulator<'a> {
                             bytes_remaining: f.bytes_remaining,
                         })
                         .collect();
-                    let rates = max_min_rates(&caps, &specs);
+                    let rates = max_min_rates(&fr.caps, &specs);
                     for (f, r) in flows.iter_mut().zip(rates) {
                         f.rate = r;
                     }
@@ -292,7 +668,7 @@ impl<'a> Simulator<'a> {
                     next = next.min(gpu_busy_until[gpu]);
                 }
             }
-            for &(t, _) in &flow_starts {
+            for &(t, _, _) in &flow_starts {
                 next = next.min(t);
             }
             for f in &flows {
@@ -305,12 +681,12 @@ impl<'a> Simulator<'a> {
             assert!(
                 next.is_finite(),
                 "simulation stalled at t={time}: {} of {} tasks done (deadlock in schedule?)",
-                n_done,
+                ds.n_done,
                 n
             );
             // integrate utilization and advance flows
             let dt = (next - time).max(0.0);
-            gpu_busy_integral += dt * gpu_running.iter().filter(|r| r.is_some()).count() as f64;
+            gpu_busy_integral.add(dt * gpu_running.iter().filter(|r| r.is_some()).count() as f64);
             for f in &mut flows {
                 if f.rate.is_finite() {
                     f.bytes_remaining -= f.rate * dt;
@@ -324,21 +700,27 @@ impl<'a> Simulator<'a> {
                 if let Some(task) = gpu_running[gpu] {
                     if gpu_busy_until[gpu] <= time + EPS {
                         gpu_running[gpu] = None;
-                        complete!(task, time, ready, finish, done, n_done);
+                        ds.complete(task, time);
                     }
                 }
             }
             // flow starts due at (or coalesced into) this event
             let mut started = false;
-            flow_starts.retain(|&(t, task)| {
+            flow_starts.retain(|&(t, task, l)| {
                 if t <= time + EPS {
                     let TaskKind::Transfer { src, dst, bytes, .. } = dag.tasks[task].kind else {
                         unreachable!()
                     };
-                    let l = bottleneck(src, dst).expect("non-loopback");
-                    let resources = vec![resource_of(src, l, false), resource_of(dst, l, true)];
+                    let resources =
+                        vec![fr.resource_of(src, l, false), fr.resource_of(dst, l, true)];
                     let id = if incremental { alloc.add(resources.clone()) } else { usize::MAX };
-                    flows.push(ActiveFlow { task, id, resources, bytes_remaining: bytes, rate: 0.0 });
+                    flows.push(ActiveFlow {
+                        task,
+                        id,
+                        resources,
+                        bytes_remaining: bytes,
+                        rate: 0.0,
+                    });
                     started = true;
                     false
                 } else {
@@ -361,7 +743,7 @@ impl<'a> Simulator<'a> {
                         alloc.remove(flows[i].id);
                     }
                     flows.swap_remove(i);
-                    complete!(task, time, ready, finish, done, n_done);
+                    ds.complete(task, time);
                     completed_any = true;
                 } else {
                     i += 1;
@@ -375,13 +757,13 @@ impl<'a> Simulator<'a> {
         let makespan = time;
         SimResult {
             makespan,
-            finish,
+            finish: ds.finish,
             bytes_a2a: bytes_a2a.get(),
             bytes_ag: bytes_ag.get(),
             bytes_allreduce: bytes_ar.get(),
             bytes_per_level: bytes_per_level.iter().map(|k| k.get()).collect(),
             gpu_utilization: if makespan > 0.0 {
-                gpu_busy_integral / (makespan * g as f64)
+                gpu_busy_integral.get() / (makespan * g as f64)
             } else {
                 0.0
             },
@@ -394,7 +776,7 @@ impl<'a> Simulator<'a> {
 mod tests {
     use super::*;
     use crate::cluster::presets;
-    use crate::netsim::dag::{Dag, Tag};
+    use crate::netsim::dag::{dense_mixed_a2a, Dag, Tag};
     use crate::prop_assert;
     use crate::testkit;
     use crate::util::rng::Rng;
@@ -553,18 +935,79 @@ mod tests {
     fn big_symmetric_a2a_completes_quickly() {
         // 64 GPUs full A2A: 64*63 flows — smoke for the event loop
         let c = presets::dcs_x_gpus(8, 8, 10.0, 128.0);
-        let mut d = Dag::new();
-        for i in 0..64usize {
-            for j in 0..64usize {
-                if i != j {
-                    d.transfer(i, j, 1e5, Tag::A2A, vec![], "x");
-                }
-            }
-        }
+        let d = Dag::all_to_all(64, Tag::A2A, |_, _| 1e5);
         let t0 = std::time::Instant::now();
         let r = Simulator::new(&c).run(&d);
         assert!(r.makespan > 0.0);
         assert!(t0.elapsed().as_secs_f64() < 5.0, "sim too slow: {:?}", t0.elapsed());
+    }
+
+    /// Tentpole scaling property (64 → 256 GPUs dense A2A): the calendar
+    /// engine's wall-clock must grow sub-quadratically in the flow count.
+    /// The workload is the scan engine's worst case — per-flow jittered
+    /// intra-DC payloads produce thousands of staggered completion events in
+    /// small per-DC components, while the uniform cross-DC elephants keep
+    /// the active flow set at O(G²) the whole time.
+    #[test]
+    fn dense_mixed_a2a_scales_subquadratically() {
+        let run = |dcs: usize| {
+            let c = presets::dcs_x_gpus(dcs, 8, 10.0, 128.0);
+            // 8 MB ± 50% intra payloads: every jittered intra completion
+            // lands while the cross-DC elephants are in flight
+            let d = dense_mixed_a2a(dcs, 8, 64e3, 8e6, 0.5, 97);
+            let flows = d.len();
+            let t0 = std::time::Instant::now();
+            let r = Simulator::new(&c).run(&d);
+            assert!(r.makespan > 0.0);
+            assert!(r.events > 0);
+            (flows as f64, t0.elapsed().as_secs_f64())
+        };
+        let (flows_64, t64) = run(8); // 64 GPUs:  4 032 flows
+        let (flows_256, t256) = run(32); // 256 GPUs: 65 280 flows
+        let flow_ratio = flows_256 / flows_64; // ≈ 16.2×
+        // clamp the denominator so timer noise on a tiny run can't inflate
+        // the ratio; quadratic growth would be flow_ratio² ≈ 260×
+        let wall_ratio = t256 / t64.max(2e-3);
+        assert!(
+            wall_ratio < flow_ratio * flow_ratio / 3.0,
+            "calendar engine scales super-quadratically: {flow_ratio:.1}× flows cost \
+             {wall_ratio:.1}× wall-clock ({t64:.3}s → {t256:.3}s)"
+        );
+        assert!(t256 < 20.0, "256-GPU dense A2A too slow: {t256:.1}s");
+    }
+
+    /// Tentpole differential at scale: a randomized (sub-sampled, jittered)
+    /// dense A2A across ≥32 DCs with a heterogeneous straggler override —
+    /// calendar vs scan vs reference must agree.
+    #[test]
+    fn heterogeneous_dense_a2a_differential_at_32_dcs() {
+        for seed in [11u64, 29, 71] {
+            let c = presets::dcs_x_gpus(32, 2, 10.0, 128.0).with_override(0, 0, presets::gbps(2.5));
+            let mut rng = Rng::new(seed);
+            let d = Dag::all_to_all(64, Tag::A2A, |_, _| {
+                if rng.f64() < 0.85 {
+                    0.0 // skipped pair (zero-byte = latency-only)
+                } else {
+                    rng.f64() * 3e5 + 1e3
+                }
+            });
+            let cal = Simulator::new(&c).run(&d);
+            let scan = Simulator::with_mode(&c, RateMode::ScanIncremental).run(&d);
+            let rf = Simulator::reference(&c).run(&d);
+            for (name, r) in [("calendar", &cal), ("scan", &scan)] {
+                assert!(
+                    close_rel(r.makespan, rf.makespan),
+                    "seed {seed}: {name} makespan {} vs reference {}",
+                    r.makespan,
+                    rf.makespan
+                );
+                for (i, (x, y)) in r.finish.iter().zip(&rf.finish).enumerate() {
+                    assert!(close_rel(*x, *y), "seed {seed}: {name} task {i}: {x} vs {y}");
+                }
+                assert_eq!(r.bytes_a2a, rf.bytes_a2a, "seed {seed}: {name} bytes diverged");
+                assert_eq!(r.bytes_per_level, rf.bytes_per_level, "seed {seed}: {name} levels");
+            }
+        }
     }
 
     #[test]
@@ -666,35 +1109,53 @@ mod tests {
         (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()))
     }
 
-    /// Tentpole differential test: the incremental engine must match the
-    /// reference (full-recompute) engine on randomized DAGs.
+    /// Tentpole differential test: the calendar engine and the pre-change
+    /// scan-incremental engine must both match the reference (full-recompute)
+    /// oracle on randomized DAGs — makespan, per-task finish, utilization,
+    /// and bit-exact byte totals.
     #[test]
     fn incremental_and_reference_engines_agree() {
         testkit::check("sim-incremental-vs-reference", 100, |g| {
             let cluster = random_cluster(g);
             let dag = random_dag(g, cluster.total_gpus(), true);
-            let a = Simulator::new(&cluster).run(&dag);
-            let b = Simulator::reference(&cluster).run(&dag);
-            prop_assert!(
-                close_rel(a.makespan, b.makespan),
-                "makespan diverged: incremental {} vs reference {}",
-                a.makespan,
-                b.makespan
-            );
-            for (i, (x, y)) in a.finish.iter().zip(&b.finish).enumerate() {
-                prop_assert!(close_rel(*x, *y), "task {i} finish diverged: {x} vs {y}");
+            let cal = Simulator::new(&cluster).run(&dag);
+            let scan = Simulator::with_mode(&cluster, RateMode::ScanIncremental).run(&dag);
+            let rf = Simulator::reference(&cluster).run(&dag);
+            for (name, a) in [("calendar", &cal), ("scan-incremental", &scan)] {
+                prop_assert!(
+                    close_rel(a.makespan, rf.makespan),
+                    "{name} makespan diverged: {} vs reference {}",
+                    a.makespan,
+                    rf.makespan
+                );
+                for (i, (x, y)) in a.finish.iter().zip(&rf.finish).enumerate() {
+                    prop_assert!(close_rel(*x, *y), "{name}: task {i} finish diverged: {x} vs {y}");
+                }
+                prop_assert!(a.bytes_a2a == rf.bytes_a2a, "{name}: A2A bytes diverged");
+                prop_assert!(a.bytes_ag == rf.bytes_ag, "{name}: AG bytes diverged");
+                prop_assert!(a.bytes_allreduce == rf.bytes_allreduce, "{name}: AR bytes diverged");
+                for l in 0..a.bytes_per_level.len() {
+                    prop_assert!(
+                        a.bytes_per_level[l] == rf.bytes_per_level[l],
+                        "{name}: level {l} bytes diverged"
+                    );
+                }
+                prop_assert!(
+                    close_rel(a.gpu_utilization, rf.gpu_utilization),
+                    "{name}: utilization diverged: {} vs {}",
+                    a.gpu_utilization,
+                    rf.gpu_utilization
+                );
             }
-            prop_assert!(a.bytes_a2a == b.bytes_a2a, "A2A bytes diverged");
-            prop_assert!(a.bytes_ag == b.bytes_ag, "AG bytes diverged");
-            prop_assert!(a.bytes_allreduce == b.bytes_allreduce, "AR bytes diverged");
             Ok(())
         });
     }
 
-    /// Satellite: byte totals and makespan must be invariant under a
-    /// topological relabeling of the task ids (event-order independence).
-    /// Compute tasks are excluded: same-GPU queue order legitimately follows
-    /// program order, so only communication DAGs are order-free.
+    /// Satellite: byte totals, makespan and utilization must be invariant
+    /// under a topological relabeling of the task ids (event-order
+    /// independence). Compute tasks are excluded: same-GPU queue order
+    /// legitimately follows program order, so only communication DAGs are
+    /// order-free.
     #[test]
     fn byte_totals_and_makespan_invariant_under_task_permutation() {
         testkit::check("sim-permutation-invariance", 80, |g| {
@@ -732,6 +1193,15 @@ mod tests {
                     "level {l} bytes changed under permutation"
                 );
             }
+            // the Kahan-accumulated busy integral makes utilization
+            // order-free too (trivially 0 here — compute is excluded — but
+            // pinned so a regression can't smuggle phantom busy time in)
+            prop_assert!(
+                bytes_eq(a.gpu_utilization, b.gpu_utilization),
+                "utilization changed under permutation: {} vs {}",
+                a.gpu_utilization,
+                b.gpu_utilization
+            );
             // per-task finish times follow the relabeling exactly
             for (old, &new) in perm.iter().enumerate() {
                 prop_assert!(
@@ -741,6 +1211,41 @@ mod tests {
                     b.finish[new]
                 );
             }
+            Ok(())
+        });
+    }
+
+    /// Satellite (Kahan busy integral): for independent compute tasks — no
+    /// dependencies, so every relabeling is topological and each GPU stays
+    /// busy back-to-back — the utilization integral is a pure multiset sum
+    /// and must not move with the event partition the permutation induces.
+    #[test]
+    fn gpu_utilization_invariant_under_compute_permutation() {
+        testkit::check("sim-util-permutation", 60, |g| {
+            let cluster = random_cluster(g);
+            let gpus = cluster.total_gpus();
+            let mut d = Dag::new();
+            let n = g.usize_in(3, 24);
+            for _ in 0..n {
+                d.compute(g.rng.below(gpus), g.rng.f64() * 0.02 + 1e-4, vec![], "c");
+            }
+            let mut perm: Vec<usize> = (0..n).collect();
+            g.rng.shuffle(&mut perm);
+            let a = Simulator::new(&cluster).run(&d);
+            let b = Simulator::new(&cluster).run(&d.permuted(&perm));
+            prop_assert!(
+                close_rel(a.makespan, b.makespan),
+                "makespan changed: {} vs {}",
+                a.makespan,
+                b.makespan
+            );
+            let tight = |x: f64, y: f64| (x - y).abs() <= 1e-12 * (1.0 + x.abs());
+            prop_assert!(
+                tight(a.gpu_utilization, b.gpu_utilization),
+                "utilization moved under compute permutation: {} vs {}",
+                a.gpu_utilization,
+                b.gpu_utilization
+            );
             Ok(())
         });
     }

@@ -12,7 +12,8 @@
 //! Two scenario shapes cover the paper's two large-scale studies:
 //!
 //! * [`SweepMode::Aggregate`] — Fig. 17: flat DC-granularity clusters with
-//!   the O(G) aggregated ring schedules; scales to 1000 DCs.
+//!   the O(G) aggregated ring schedules; scales past 1024 DCs on the
+//!   calendar engine.
 //! * [`SweepMode::Pairwise`] — Fig. 16: small hierarchical clusters with the
 //!   full pairwise EP vs HybridEP schedules and (optionally Zipf-skewed,
 //!   seed-driven) routing; reports traffic as well as makespans. The
@@ -118,6 +119,9 @@ pub struct SweepGrid {
     pub latency_us: f64,
     pub base_seed: u64,
     pub mode: SweepMode,
+    /// Event engine per scenario: the calendar engine by default;
+    /// [`RateMode::ScanIncremental`]/[`RateMode::Reference`] select the
+    /// pre-change baselines for perf comparisons and differential checks.
     pub engine: RateMode,
 }
 

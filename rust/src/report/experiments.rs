@@ -455,7 +455,22 @@ pub struct Fig17Row {
     pub dcs: usize,
     pub bw_gbps: f64,
     pub fixed: &'static str,
+    /// Domain size actually simulated (the mode's target snapped to the
+    /// nearest divisor of `dcs` — e.g. 8, not 10, on the 1024-DC row).
+    pub s_ed: usize,
     pub speedup: f64,
+}
+
+/// The divisor of `n` closest to `target` (ties break toward the smaller
+/// divisor). Used to keep every requested DC count on the fig17 grid.
+fn nearest_divisor(n: usize, target: usize) -> usize {
+    let mut best = 1usize;
+    for d in 2..=n {
+        if n % d == 0 && d.abs_diff(target) < best.abs_diff(target) {
+            best = d;
+        }
+    }
+    best
 }
 
 pub fn fig17(dc_counts: &[usize]) -> (Table, Vec<Fig17Row>) {
@@ -466,7 +481,7 @@ pub fn fig17(dc_counts: &[usize]) -> (Table, Vec<Fig17Row>) {
 pub fn fig17_with_threads(dc_counts: &[usize], threads: usize) -> (Table, Vec<Fig17Row>) {
     let mut table = Table::new(
         "Fig. 17 — HybridEP vs EP speedup at DC granularity (SimAI-substitute flow simulation)",
-        &["mode", "bandwidth", "#DCs", "EP iter", "HybridEP iter", "speedup"],
+        &["mode", "bandwidth", "#DCs", "S_ED", "EP iter", "HybridEP iter", "speedup"],
     );
     let w = MoEWorkload {
         tokens_per_gpu: 8192,
@@ -489,10 +504,13 @@ pub fn fig17_with_threads(dc_counts: &[usize], threads: usize) -> (Table, Vec<Fi
     for (mode, fixed_s) in [("fixed S_ED=10", true), ("fixed p=0.9", false)] {
         for &bw in &[1.25, 2.5, 5.0, 10.0] {
             for &n in dc_counts {
-                let s_ed = if fixed_s { 10.min(n) } else { (n / 10).max(2) };
-                if n % s_ed != 0 {
-                    continue;
-                }
+                // snap the target domain size to the nearest divisor of `n`,
+                // so counts the targets don't divide (e.g. the 1024-DC
+                // acceptance row: S_ED 10 → 8, p-derived 102 → 128) still
+                // get a row instead of being silently dropped; the paper's
+                // 50/100/200/500/1000 ladder hits its targets exactly
+                let target = if fixed_s { 10.min(n) } else { (n / 10).max(2) };
+                let s_ed = nearest_divisor(n, target);
                 specs.push(Spec { mode, bw, n, s_ed });
             }
         }
@@ -517,11 +535,12 @@ pub fn fig17_with_threads(dc_counts: &[usize], threads: usize) -> (Table, Vec<Fi
             s.mode.to_string(),
             format!("{} Gbps", s.bw),
             s.n.to_string(),
+            s.s_ed.to_string(),
             crate::util::fmt_secs(ep_t),
             crate::util::fmt_secs(hy_t),
             speedup(sp),
         ]);
-        rows.push(Fig17Row { dcs: s.n, bw_gbps: s.bw, fixed: s.mode, speedup: sp });
+        rows.push(Fig17Row { dcs: s.n, bw_gbps: s.bw, fixed: s.mode, s_ed: s.s_ed, speedup: sp });
     }
     (table, rows)
 }
@@ -1035,6 +1054,31 @@ mod tests {
             tight.joint_secs,
             tight.identity_secs
         );
+    }
+
+    #[test]
+    fn fig17_divisor_snapping_keeps_every_requested_count() {
+        // exact targets are untouched (the paper's ladder)
+        assert_eq!(nearest_divisor(50, 10), 10);
+        assert_eq!(nearest_divisor(1000, 100), 100);
+        // 1024 snaps: S_ED target 10 → 8, p-derived target 102 → 128
+        assert_eq!(nearest_divisor(1024, 10), 8);
+        assert_eq!(nearest_divisor(1024, 102), 128);
+        // a prime count degenerates to S_ED = 1 (pure EP) instead of a hole
+        assert_eq!(nearest_divisor(7, 2), 1);
+        // acceptance: the fig17 grid carries a ≥1024-DC row in both modes
+        let (_t, rows) = fig17_with_threads(&[1024], crate::netsim::sweep::default_threads());
+        let fixed_s: Vec<_> = rows.iter().filter(|r| r.fixed.starts_with("fixed S")).collect();
+        let fixed_p: Vec<_> = rows.iter().filter(|r| r.fixed.starts_with("fixed p")).collect();
+        assert_eq!(fixed_s.len(), 4, "one 1024-DC row per bandwidth (fixed S_ED)");
+        assert_eq!(fixed_p.len(), 4, "one 1024-DC row per bandwidth (fixed p)");
+        // the rows must record the domain size actually simulated
+        assert!(fixed_s.iter().all(|r| r.s_ed == 8), "fixed-S 1024-DC rows simulate S_ED=8");
+        assert!(fixed_p.iter().all(|r| r.s_ed == 128), "fixed-p 1024-DC rows simulate S_ED=128");
+        for r in rows {
+            assert_eq!(r.dcs, 1024);
+            assert!(r.speedup.is_finite() && r.speedup > 0.5, "1024-DC speedup {}", r.speedup);
+        }
     }
 
     #[test]
