@@ -1,9 +1,11 @@
 //! Fig. 17 — large-scale simulation: HybridEP vs EP speedup with up to
 //! 1024 DCs under 1.25–10 Gbps inter-DC bandwidth, (a) fixed `S_ED` and
-//! (b) fixed `p`. The scenario grid fans across OS threads through the
-//! `netsim::sweep` harness; serial wall-clock is printed alongside for the
-//! harness speedup. `--quick` / `BENCH_FAST=1` runs the 1024-DC row alone
-//! (the CI smoke + acceptance row of the calendar-engine PR); rows are
+//! (b) fixed `p`, plus the symmetry-folded `per_dc` axis (multiple GPUs per
+//! DC simulated through multiplicity-weighted macro-flows). The scenario
+//! grid fans across OS threads through the `netsim::sweep` harness; serial
+//! wall-clock is printed alongside for the harness speedup. `--quick` /
+//! `BENCH_FAST=1` runs the 1024-DC rows alone — including the folded
+//! 1024 DCs × 4 GPUs/DC row, the CI smoke of the folding PR; rows are
 //! merged into `BENCH_netsim.json`.
 
 use hybrid_ep::bench::{header, time_once, JsonReport};
@@ -20,13 +22,17 @@ fn main() {
 
     let counts: Vec<usize> =
         if quick { vec![1024] } else { vec![50, 100, 200, 500, 1000, 1024] };
+    // the per_dc axis: folded dense rows at 4 (and, on full runs, 8) GPUs
+    // per DC — the 1024-DC × 4 row is the CI `--quick` smoke
+    let per_dcs: Vec<usize> = if quick { vec![1, 4] } else { vec![1, 4, 8] };
     let t0 = std::time::Instant::now();
-    let (table, rows) = experiments::fig17(&counts);
+    let (table, rows) =
+        experiments::fig17_axes(&counts, &per_dcs, sweep::default_threads());
     let grid_secs = t0.elapsed().as_secs_f64();
     table.print();
     let band = |dcs: usize, prefix: &str| -> Vec<f64> {
         rows.iter()
-            .filter(|r| r.dcs == dcs && r.fixed.starts_with(prefix))
+            .filter(|r| r.dcs == dcs && r.per_dc == 1 && r.fixed.starts_with(prefix))
             .map(|r| r.speedup)
             .collect()
     };
@@ -44,10 +50,34 @@ fn main() {
         println!("1000 DCs, fixed p:    {lo:.2}×–{hi:.2}× (paper: 1.31×–3.76×)");
     }
     // the acceptance row of the event-core PR: the grid must carry ≥1024 DCs
-    let at_1024: Vec<f64> = rows.iter().filter(|r| r.dcs == 1024).map(|r| r.speedup).collect();
+    let at_1024: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.dcs == 1024 && r.per_dc == 1)
+        .map(|r| r.speedup)
+        .collect();
     assert!(!at_1024.is_empty(), "fig17 grid lost its 1024-DC row");
     let (lo, hi) = minmax(&at_1024);
     println!("1024 DCs (both modes): {lo:.2}×–{hi:.2}×");
+    // the acceptance rows of the symmetry-folding PR: 1024 DCs at real
+    // GPUs-per-DC counts, simulated through folded macro-flows
+    for &per_dc in per_dcs.iter().filter(|&&p| p > 1) {
+        let dense: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.dcs == 1024 && r.per_dc == per_dc)
+            .map(|r| r.speedup)
+            .collect();
+        assert!(
+            !dense.is_empty(),
+            "fig17 grid lost its folded 1024-DC × {per_dc}-GPU rows"
+        );
+        assert!(dense.iter().all(|s| s.is_finite() && *s > 0.5));
+        let (lo, hi) = minmax(&dense);
+        println!("1024 DCs × {per_dc} GPUs/DC (folded dense): {lo:.2}×–{hi:.2}×");
+        let key = format!("fig17_per_dc{per_dc}_1024dc/folded");
+        report.record_extra(&key, "speedup_lo", json::num(lo));
+        report.record_extra(&key, "speedup_hi", json::num(hi));
+        report.record_extra(&key, "gpus", json::num((1024 * per_dc) as f64));
+    }
     println!(
         "[fig17 grid: {grid_secs:.1}s across {} threads]",
         sweep::default_threads()
@@ -55,6 +85,11 @@ fn main() {
     report.record_extra("fig17_grid", "wall_ms", json::num(grid_secs * 1e3));
     report.record_extra("fig17_grid", "rows", json::num(rows.len() as f64));
     report.record_extra("fig17_grid", "max_dcs", json::num(1024.0));
+    report.record_extra(
+        "fig17_grid",
+        "max_gpus",
+        json::num((1024 * per_dcs.iter().copied().max().unwrap_or(1)) as f64),
+    );
 
     // ---- sweep-harness scaling: the 1024-DC row through run_sweep ---------
     println!();

@@ -1,8 +1,9 @@
 //! Hot-path micro-benchmarks for the §Perf optimization pass:
 //! SR codec (encode/decode across sizes), max-min flow allocation
 //! (incremental vs reference at 1k-DC scale), the netsim event core
-//! (calendar engine vs the pre-change scan engine on dense A2A), parallel
-//! scenario sweeps, schedule generation, JSON/manifest parsing.
+//! (calendar engine vs the pre-change scan engine on dense A2A), symmetry
+//! folding (macro-flows vs per-member flows, up to 1024 DCs × 8 GPUs/DC),
+//! parallel scenario sweeps, schedule generation, JSON/manifest parsing.
 //!
 //! Machine-readable rows land in `BENCH_netsim.json` (see
 //! `bench::json_report`) so future PRs can regress-check the event core.
@@ -11,7 +12,7 @@ use hybrid_ep::bench::{black_box, header, time_once, Bench, JsonReport};
 use hybrid_ep::cluster::presets;
 use hybrid_ep::migration::sr_codec;
 use hybrid_ep::moe::{MoEWorkload, Routing};
-use hybrid_ep::netsim::dag::dense_mixed_a2a;
+use hybrid_ep::netsim::dag::{dense_mixed_a2a, dense_mixed_a2a_folded};
 use hybrid_ep::netsim::flow::{max_min_rates, FlowSpec, IncrementalMaxMin};
 use hybrid_ep::netsim::{sweep, RateMode, Simulator};
 use hybrid_ep::systems::hybrid_ep::HybridEp;
@@ -60,6 +61,7 @@ fn main() {
             .map(|_| FlowSpec {
                 resources: vec![rng.below(64), rng.below(64)],
                 bytes_remaining: 1e6,
+                count: 1,
             })
             .collect();
         Bench::new(&format!("max_min_rates/{nf}flows")).run(|| {
@@ -90,11 +92,11 @@ fn main() {
             for _ in 0..intra_per_dc {
                 let rs = vec![in_e(d), in_i(d)];
                 intra_ids.push(alloc.add(rs.clone()));
-                specs.push(FlowSpec { resources: rs, bytes_remaining: 1e6 });
+                specs.push(FlowSpec { resources: rs, bytes_remaining: 1e6, count: 1 });
             }
             let rs = vec![up_e(d), up_i((d + 1) % dcs)];
             alloc.add(rs.clone());
-            specs.push(FlowSpec { resources: rs, bytes_remaining: 1e6 });
+            specs.push(FlowSpec { resources: rs, bytes_remaining: 1e6, count: 1 });
         }
         alloc.resolve();
         let mut d = 0usize;
@@ -172,6 +174,80 @@ fn main() {
                 t_ref.map(|t| t / t_scan),
             );
         }
+    }
+
+    // --- symmetry folding: macro-flows vs the per-member calendar engine -----
+    // The same dense mixed A2A, but the uniform cross-DC members of each DC
+    // pair ride one multiplicity-weighted macro-flow. `RateMode::Folded`
+    // folds the member dag at run time (fold cost included in its wall
+    // time); the born-folded builder never materializes the members at all.
+    // Acceptance: flows_folded_ratio ≥ 50× on 1024 DCs × 8 GPUs/DC, which
+    // only the folded engine can hold in memory.
+    {
+        let (dcs, per_dc) = if fast { (8usize, 8usize) } else { (32usize, 8usize) };
+        let label = format!("{}gpu", dcs * per_dc);
+        let cluster = presets::dcs_x_gpus(dcs, per_dc, 10.0, 128.0);
+        let dag = dense_mixed_a2a(dcs, per_dc, 64e3, 8e6, 0.5, 97);
+        let (cal, t_cal) = time_once(|| Simulator::new(&cluster).run(&dag));
+        let (fold, t_fold) =
+            time_once(|| Simulator::with_mode(&cluster, RateMode::Folded).run(&dag));
+        assert!(
+            (fold.makespan - cal.makespan).abs() <= 1e-9 * (1.0 + cal.makespan),
+            "folded engine diverged: {} vs {}",
+            fold.makespan,
+            cal.makespan
+        );
+        let stats = hybrid_ep::netsim::fold_dag(&dag, &cluster);
+        let born = dense_mixed_a2a_folded(dcs, per_dc, 64e3, 8e6, 0.5, 97);
+        let (bornr, t_born) = time_once(|| Simulator::new(&cluster).run(&born));
+        assert!((bornr.makespan - cal.makespan).abs() <= 1e-9 * (1.0 + cal.makespan));
+        println!(
+            "netsim_folded/{label}: calendar {:>9.2} ms | folded {:>9.2} ms ({:.1}× fewer flows) | born-folded {:>9.2} ms",
+            t_cal * 1e3,
+            t_fold * 1e3,
+            stats.folded_ratio(),
+            t_born * 1e3
+        );
+        let key = format!("dense_mixed_a2a_{label}/folded");
+        report.record(&key, t_fold * 1e3, fold.events, None);
+        report.record_extra(&key, "speedup_vs_calendar", json::num(t_cal / t_fold.max(1e-9)));
+        report.record_extra(&key, "flows_folded_ratio", json::num(stats.folded_ratio()));
+        let key = format!("dense_mixed_a2a_{label}/born_folded");
+        report.record(&key, t_born * 1e3, bornr.events, None);
+        report.record_extra(&key, "speedup_vs_calendar", json::num(t_cal / t_born.max(1e-9)));
+    }
+
+    // --- folded engine at true fig17 scale: 1024 DCs × 8 GPUs/DC ------------
+    // 67.1M member flows; only the ~1.1M folded macro/intra flows are ever
+    // materialized. (`--quick`/BENCH_FAST runs 1024 × 4 — the CI smoke.)
+    {
+        let (dcs, per_dc) = if fast { (1024usize, 4usize) } else { (1024usize, 8usize) };
+        let g = dcs * per_dc;
+        let cluster = presets::dcs_x_gpus(dcs, per_dc, 10.0, 128.0);
+        let dag = dense_mixed_a2a_folded(dcs, per_dc, 64e3, 8e6, 0.5, 97);
+        let ratio = dag.member_transfers() as f64 / dag.transfer_tasks() as f64;
+        // the fold collapses ~per_dc² members per cross-DC pair: ≈ 60.7× at
+        // per_dc = 8 (the ≥ 50× acceptance bar) and ≈ 15.8× at the quick
+        // smoke's per_dc = 4 — the bar scales with the GPUs per DC
+        let bar = if per_dc >= 8 { 50.0 } else { 10.0 };
+        assert!(
+            ratio >= bar,
+            "flows_folded_ratio {ratio:.1} below the {bar}× bar at {g} GPUs ({per_dc}/DC)"
+        );
+        let (r, t) = time_once(|| Simulator::new(&cluster).run(&dag));
+        assert!(r.makespan > 0.0);
+        println!(
+            "netsim_folded/{g}gpu_dense: {:>8.2} s, {} events, {} flows for {} members ({ratio:.1}× folded)",
+            t,
+            r.events,
+            dag.transfer_tasks(),
+            dag.member_transfers()
+        );
+        let key = format!("dense_mixed_a2a_{g}gpu_folded/calendar");
+        report.record(&key, t * 1e3, r.events, None);
+        report.record_extra(&key, "flows_folded_ratio", json::num(ratio));
+        report.record_extra(&key, "flows", json::num(dag.transfer_tasks() as f64));
+        report.record_extra(&key, "member_flows", json::num(dag.member_transfers() as f64));
     }
 
     // --- engine + sweep: fig17 scale (≥256 DCs), pre-change vs current -------

@@ -57,15 +57,18 @@ fn run() -> Result<()> {
                 "hybrid-ep — cross-DC expert parallelism (paper reproduction)\n\n\
                  usage: hybrid-ep <plan|topo|simulate|sweep|train|experiments> [--flags]\n\
                    plan        --cluster S|M|L --data-mb D --expert-mb E [--cr CR] [--joint]\n\
+                               [--joint-sim]  (memoized simulation-backed search)\n\
                    topo        --gpus G --s-ed S\n\
                    simulate    --cluster S|M|L --data-mb D --expert-mb E --system NAME\n\
                                [--tp T --dp R]\n\
                    sweep       --mode aggregate|pairwise|replan --dcs 8,16 --bw 1.25,10\n\
                                [--p 0.9] [--het 1.0,0.25] [--drift 2.5] [--iters N]\n\
                                [--tp 1,2 --dp 1,2] [--threads N]\n\
+                               [--engine calendar|folded|scan|reference]\n\
                    train       --profile test|small|large --steps N [--compression ws|wos --cr CR]\n\
                    experiments --exp fig2b|fig12|table5|fig13|table6|fig16|table7|fig17|\n\
-                               perlayer|straggler|replan|tedjoint|all [--threads N]"
+                               perlayer|straggler|replan|tedjoint|all [--threads N]\n\
+                               [--per-dc 1,4,8]  (fig17: folded dense rows at N GPUs/DC)"
             );
             Ok(())
         }
@@ -132,6 +135,26 @@ fn cmd_plan(args: &Args) -> Result<()> {
             best.config.tp, best.config.ep, best.config.dp, best.plan.partition_sizes
         );
     }
+    if args.bool("joint-sim") {
+        // simulation-backed joint search: scores every (p, tp, dp) point by
+        // a full simulated iteration, memoized per resolved deployment
+        let g = cluster.total_gpus();
+        let routing = Routing::uniform(g, g * w.experts_per_gpu, w.tokens_per_gpu, w.k);
+        let p_grid: Vec<f64> = (0..=10).map(|i| i as f64 / 10.0).collect();
+        let best = solver::solve_joint_simulated(&cluster, &w, &routing, &p_grid)?;
+        println!(
+            "simulated joint optimum: tp={}, ep={}, dp={}, partition {:?} (p={:.2}) — {} \
+             [{} grid points, {} simulations after dedup]",
+            best.config.tp,
+            best.config.ep,
+            best.config.dp,
+            best.partition_sizes,
+            best.p,
+            hybrid_ep::util::fmt_secs(best.secs),
+            best.stats.points,
+            best.stats.simulated
+        );
+    }
     Ok(())
 }
 
@@ -189,12 +212,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     use hybrid_ep::netsim::sweep::{self, SweepGrid, SweepMode};
+    use hybrid_ep::netsim::RateMode;
     let threads = args.usize_or("threads", sweep::default_threads())?;
     if threads == 0 {
         bail!("--threads must be at least 1");
     }
     let dcs = args.usize_list_or("dcs", &[8, 16])?;
     let mut grid = SweepGrid::fig17(dcs);
+    grid.engine = match args.get_or("engine", "calendar") {
+        "calendar" | "incremental" => RateMode::Incremental,
+        "folded" => RateMode::Folded,
+        "scan" => RateMode::ScanIncremental,
+        "reference" => RateMode::Reference,
+        other => bail!("unknown engine {other:?} (calendar|folded|scan|reference)"),
+    };
     grid.bandwidths_gbps = args.f64_list_or("bw", &[1.25, 2.5, 5.0, 10.0])?;
     grid.hybrid_ps = args.f64_list_or("p", &[0.9])?;
     grid.heterogeneity = args.f64_list_or("het", &[1.0])?;
@@ -332,7 +363,11 @@ fn cmd_experiments(args: &Args) -> Result<()> {
         exp::table7().print();
     }
     if all || which == "fig17" {
-        exp::fig17_with_threads(&[50, 100, 200, 500, 1000, 1024], threads).0.print();
+        // --per-dc adds symmetry-folded dense rows (DcDense) at N GPUs per
+        // DC; 1 = the paper's aggregate model. 8 is available but heavy:
+        // the 1024-DC row simulates 8192 GPUs' worth of member flows.
+        let per_dcs = args.usize_list_or("per-dc", &[1, 4])?;
+        exp::fig17_axes(&[50, 100, 200, 500, 1000, 1024], &per_dcs, threads).0.print();
     }
     if all || which == "perlayer" {
         exp::per_layer_p().0.print();

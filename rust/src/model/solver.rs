@@ -35,7 +35,11 @@
 //! parallelism à la DeepSpeed-TED, PAPERS.md) re-solves the per-level `p`
 //! optimum on its virtual cluster and adds the TP activation-All-Reduce and
 //! DP expert-gradient-ring terms, making the parallelism layout itself a
-//! planned dimension.
+//! planned dimension. [`solve_joint_simulated`] scores the same grid by
+//! **full simulated iterations** instead of the stream model — with one
+//! simulation per *distinct resolved deployment*: grid `p` values snap to
+//! divisor partitions, so distinct points frequently alias, and the memo
+//! ([`JointSimStats`]) collapses the duplicates.
 
 use anyhow::{ensure, Result};
 
@@ -335,6 +339,115 @@ pub fn solve_joint(
 ) -> Result<JointCandidate> {
     let cands = joint_candidates(cluster, w, gpu, pe_tx_bytes)?;
     Ok(cands.into_iter().next().expect("non-empty candidate set"))
+}
+
+// ---------------------------------------------------------------------------
+// Simulation-backed joint search with deployment memoization
+// ---------------------------------------------------------------------------
+
+/// Counters of a [`solve_joint_simulated`] run: how many `(p, tp, dp)` grid
+/// points were scored vs how many **distinct resolved deployments** were
+/// actually simulated. The gap is the memoization win — many grid `p` values
+/// snap to the same deployable partition (`p = 1 − S_ED/G` only takes
+/// divisor values), so scoring them again would re-run an identical
+/// simulation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JointSimStats {
+    /// `(p, tp, dp)` grid points evaluated.
+    pub points: usize,
+    /// Distinct `(tp, dp, snapped partition)` deployments simulated.
+    pub simulated: usize,
+}
+
+/// Winner of the simulated joint search.
+#[derive(Clone, Debug)]
+pub struct SimulatedJoint {
+    pub config: ParallelismConfig,
+    /// Snapped per-virtual-level domain sizes of the winning deployment.
+    pub partition_sizes: Vec<usize>,
+    /// The requested grid `p` that first resolved to the winner.
+    pub p: f64,
+    /// Simulated iteration seconds of the winner.
+    pub secs: f64,
+    pub stats: JointSimStats,
+}
+
+/// Simulation-backed joint `(p, tp, dp)` optimum: every deployable
+/// `(tp, dp)` factorization × every requested `p` is **snapped** to its
+/// deployable partition on the candidate's virtual cluster and scored by a
+/// full simulated iteration — with one simulation per *distinct* resolved
+/// deployment. Distinct grid points that snap to the same `(tp, dp,
+/// partition)` key reuse the memoized makespan instead of re-simulating
+/// (the duplicate-candidate perf fix; [`JointSimStats`] counts both sides).
+///
+/// Unlike the analytic [`solve_joint`], heterogeneous-override clusters are
+/// accepted: the simulator prices overrides exactly, and non-identity
+/// configs (which cannot factor overridden capacities) simply drop out of
+/// the deployable set, leaving the identity-config `p` search.
+pub fn solve_joint_simulated(
+    cluster: &ClusterSpec,
+    w: &MoEWorkload,
+    routing: &crate::moe::Routing,
+    p_grid: &[f64],
+) -> Result<SimulatedJoint> {
+    use crate::systems::hybrid_ep::HybridEp;
+    use crate::systems::{SchedCtx, System};
+    ensure!(!cluster.levels.is_empty(), "cluster has no levels");
+    ensure!(!p_grid.is_empty(), "empty p grid — nothing to search");
+    ensure!(
+        routing.gpus() >= cluster.total_gpus(),
+        "routing covers {} GPUs but the cluster has {}",
+        routing.gpus(),
+        cluster.total_gpus()
+    );
+    let inner = cluster.levels.last().expect("levels non-empty").fanout;
+    let outer = cluster.levels[0].fanout;
+    let mut memo: std::collections::HashMap<(usize, usize, Vec<usize>), f64> =
+        std::collections::HashMap::new();
+    let mut stats = JointSimStats::default();
+    let mut best: Option<SimulatedJoint> = None;
+    for tp in (1..=inner).filter(|t| inner % t == 0) {
+        for dp in (1..=outer).filter(|d| outer % d == 0) {
+            let cfg = match ParallelismConfig::new(cluster, tp, dp) {
+                Ok(c) => c,
+                Err(_) => continue, // not deployable on this cluster
+            };
+            let vcluster = cfg.virtual_cluster(cluster)?;
+            for &p in p_grid {
+                stats.points += 1;
+                let partition = crate::netsim::sweep::partition_for_p(&vcluster, p);
+                let key = (tp, dp, partition.clone());
+                let secs = match memo.get(&key) {
+                    Some(&secs) => secs,
+                    None => {
+                        stats.simulated += 1;
+                        let mut ctx = SchedCtx::new(cluster, w, routing);
+                        ctx.parallelism = cfg;
+                        let secs = HybridEp { partition: Some(partition.clone()), migration: None }
+                            .iteration_time(&ctx);
+                        memo.insert(key, secs);
+                        secs
+                    }
+                };
+                let better = match &best {
+                    None => true,
+                    Some(b) => secs < b.secs,
+                };
+                if better {
+                    best = Some(SimulatedJoint {
+                        config: cfg,
+                        partition_sizes: partition,
+                        p,
+                        secs,
+                        stats, // overwritten with the final counters below
+                    });
+                }
+            }
+        }
+    }
+    let mut out = best.expect("identity config is always deployable");
+    out.stats = stats;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -708,6 +821,88 @@ mod tests {
             best.score,
             id.score
         );
+    }
+
+    /// Satellite (perf fix): the simulated `(p, tp, dp)` grid search snaps
+    /// many grid `p` values onto the same deployable partition; the memo
+    /// must collapse those duplicates to one simulation each — counted, not
+    /// assumed.
+    #[test]
+    fn simulated_joint_memoizes_duplicate_deployments() {
+        use crate::moe::Routing;
+        let cluster = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let w = MoEWorkload {
+            tokens_per_gpu: 256,
+            hidden: 64,
+            ffn: 128,
+            experts_per_gpu: 1,
+            k: 1,
+            moe_layers: 1,
+            pre_blocks: 1,
+            backward: false,
+        };
+        let g = cluster.total_gpus();
+        let routing = Routing::uniform(g, g, w.tokens_per_gpu, w.k);
+        let p_grid: Vec<f64> = (0..=10).map(|i| i as f64 / 10.0).collect();
+        let best = solve_joint_simulated(&cluster, &w, &routing, &p_grid).unwrap();
+        // deployable (tp, dp) ∈ {1,2}×{1,2} → 4 configs × 11 p points
+        assert_eq!(best.stats.points, 4 * p_grid.len());
+        assert!(
+            best.stats.simulated < best.stats.points,
+            "duplicate deployments were re-simulated: {:?}",
+            best.stats
+        );
+        // per config at most |divisor partitions| ≤ 4 distinct deployments
+        assert!(best.stats.simulated <= 16, "{:?}", best.stats);
+        // the winner is a real minimum: re-simulating its deployment and the
+        // identity pure-EP point can't beat it
+        let id_cfg = ParallelismConfig::identity(g);
+        let mut ctx = crate::systems::SchedCtx::new(&cluster, &w, &routing);
+        ctx.parallelism = id_cfg;
+        let pure_ep = crate::systems::hybrid_ep::HybridEp {
+            partition: Some(crate::netsim::sweep::partition_for_p(&cluster, 1.0)),
+            migration: None,
+        };
+        use crate::systems::System;
+        let ep_secs = pure_ep.iteration_time(&ctx);
+        assert!(
+            best.secs <= ep_secs * (1.0 + 1e-9),
+            "simulated optimum {} loses to pure EP {}",
+            best.secs,
+            ep_secs
+        );
+        // determinism: same grid, same counters, same winner
+        let again = solve_joint_simulated(&cluster, &w, &routing, &p_grid).unwrap();
+        assert_eq!(again.stats, best.stats);
+        assert_eq!(again.secs.to_bits(), best.secs.to_bits());
+        assert_eq!(again.partition_sizes, best.partition_sizes);
+        // degenerate grids are descriptive errors
+        assert!(solve_joint_simulated(&cluster, &w, &routing, &[]).is_err());
+    }
+
+    /// Heterogeneous-override clusters degrade gracefully to the
+    /// identity-config `p` search (the simulator prices overrides exactly),
+    /// instead of erroring like the analytic solver.
+    #[test]
+    fn simulated_joint_accepts_override_clusters_identity_only() {
+        use crate::moe::Routing;
+        let het = presets::straggler_dc(2, 2, 10.0, 128.0, 0, 2.5);
+        let w = MoEWorkload {
+            tokens_per_gpu: 256,
+            hidden: 64,
+            ffn: 128,
+            experts_per_gpu: 1,
+            k: 1,
+            moe_layers: 1,
+            pre_blocks: 1,
+            backward: false,
+        };
+        let g = het.total_gpus();
+        let routing = Routing::uniform(g, g, w.tokens_per_gpu, w.k);
+        let best = solve_joint_simulated(&het, &w, &routing, &[0.0, 0.5, 1.0]).unwrap();
+        assert!(best.config.is_identity(), "only the identity factors an overridden cluster");
+        assert_eq!(best.stats.points, 3, "non-identity configs must drop out, not error");
+        assert!(best.secs.is_finite() && best.secs > 0.0);
     }
 
     #[test]

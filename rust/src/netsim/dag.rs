@@ -18,8 +18,14 @@ pub type TaskId = usize;
 pub enum TaskKind {
     /// Occupies `gpu` exclusively for `seconds`.
     Compute { gpu: usize, seconds: f64 },
-    /// Moves `bytes` from `src` GPU to `dst` GPU through the hierarchy.
-    Transfer { src: usize, dst: usize, bytes: f64, tag: Tag },
+    /// `count` identical member transfers of `bytes` each, folded into one
+    /// task (symmetry folding): `src → dst` names a *representative* member
+    /// pair — every member shares the representatives' bottleneck resources,
+    /// so the engines charge `count` shares of that egress/ingress pool and
+    /// complete all members together at the common per-member finish time.
+    /// `count = 1` is a plain point-to-point transfer. Traffic accounting is
+    /// member-weighted (`bytes · count`).
+    Transfer { src: usize, dst: usize, bytes: f64, tag: Tag, count: u64 },
     /// Zero-cost synchronization point / label.
     Barrier,
 }
@@ -65,8 +71,28 @@ impl Dag {
         deps: Vec<TaskId>,
         label: &'static str,
     ) -> TaskId {
+        self.transfer_n(src, dst, bytes, 1, tag, deps, label)
+    }
+
+    /// A symmetry-folded macro-transfer: `count` identical members of
+    /// `bytes` each between the `(src, dst)` representatives (see
+    /// [`TaskKind::Transfer`]). The members must genuinely be symmetric —
+    /// same bottleneck resources, same bytes, same dependencies — for the
+    /// fold to be exact; [`crate::netsim::fold::fold_dag`] constructs such
+    /// tasks from arbitrary dags, grouping strictly.
+    pub fn transfer_n(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: f64,
+        count: u64,
+        tag: Tag,
+        deps: Vec<TaskId>,
+        label: &'static str,
+    ) -> TaskId {
         assert!(bytes >= 0.0, "negative transfer size");
-        self.add(TaskKind::Transfer { src, dst, bytes, tag }, deps, label)
+        assert!(count >= 1, "macro-transfer multiplicity must be at least 1");
+        self.add(TaskKind::Transfer { src, dst, bytes, tag, count }, deps, label)
     }
 
     pub fn barrier(&mut self, deps: Vec<TaskId>, label: &'static str) -> TaskId {
@@ -81,13 +107,35 @@ impl Dag {
         self.tasks.is_empty()
     }
 
-    /// Total bytes by tag (static accounting, independent of simulation).
+    /// Total member-weighted bytes by tag (static accounting, independent of
+    /// simulation): a count-`w` macro-transfer contributes `w · bytes`.
     pub fn traffic_by_tag(&self, tag: Tag) -> f64 {
         self.tasks
             .iter()
             .filter_map(|t| match t.kind {
-                TaskKind::Transfer { bytes, tag: tg, .. } if tg == tag => Some(bytes),
+                TaskKind::Transfer { bytes, tag: tg, count, .. } if tg == tag => {
+                    Some(bytes * count as f64)
+                }
                 _ => None,
+            })
+            .sum()
+    }
+
+    /// Materialized transfer tasks (macro-transfers count once) — what the
+    /// engines actually index, schedule and rate-solve.
+    pub fn transfer_tasks(&self) -> usize {
+        self.tasks.iter().filter(|t| matches!(t.kind, TaskKind::Transfer { .. })).count()
+    }
+
+    /// Member transfers (macro-transfers count `count` times) — the flow
+    /// count an unfolded dag would materialize. `member_transfers /
+    /// transfer_tasks` is the `flows_folded_ratio` the benches report.
+    pub fn member_transfers(&self) -> usize {
+        self.tasks
+            .iter()
+            .map(|t| match t.kind {
+                TaskKind::Transfer { count, .. } => count as usize,
+                _ => 0,
             })
             .sum()
     }
@@ -128,15 +176,19 @@ impl Dag {
         d
     }
 
-    /// Number of GPU-to-GPU transfers by tag (frequency accounting,
-    /// Table VII semantics). Zero-byte transfers are not counted.
+    /// Number of GPU-to-GPU member transfers by tag (frequency accounting,
+    /// Table VII semantics): a count-`w` macro-transfer stands for `w`
+    /// point-to-point messages. Zero-byte transfers are not counted.
     pub fn frequency_by_tag(&self, tag: Tag) -> usize {
         self.tasks
             .iter()
-            .filter(|t| {
-                matches!(t.kind, TaskKind::Transfer { bytes, tag: tg, .. } if tg == tag && bytes > 0.0)
+            .map(|t| match t.kind {
+                TaskKind::Transfer { bytes, tag: tg, count, .. } if tg == tag && bytes > 0.0 => {
+                    count as usize
+                }
+                _ => 0,
             })
-            .count()
+            .sum()
     }
 }
 
@@ -163,6 +215,49 @@ pub fn dense_mixed_a2a(
             cross_bytes
         }
     })
+}
+
+/// [`dense_mixed_a2a`] with the symmetric cross-DC payloads **born folded**:
+/// the uniform cross-DC members of each ordered DC pair — `per_dc²`
+/// identical flows sharing one egress/ingress uplink pair — become a single
+/// count-`per_dc²` macro-transfer, so the O((dcs·per_dc)²) member set is
+/// never materialized (the jittered intra-DC payloads stay plain flows:
+/// their bytes differ, so they are not symmetric). Flow count drops from
+/// O(G²) to `dcs·(dcs−1) + dcs·per_dc·(per_dc−1)` ≈ O(dcs²). The intra
+/// jitter draws the same seed-deterministic sequence as the unfolded
+/// builder, so the two describe the *same* workload and simulate to the
+/// same makespan (see the folded differentials in `netsim::sim`).
+pub fn dense_mixed_a2a_folded(
+    dcs: usize,
+    per_dc: usize,
+    cross_bytes: f64,
+    intra_bytes: f64,
+    jitter: f64,
+    seed: u64,
+) -> Dag {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut d = Dag::new();
+    // intra flows first, drawing jitter in the unfolded builder's (i, j)
+    // pair order (cross pairs draw nothing there, so the streams align)
+    let g = dcs * per_dc;
+    for i in 0..g {
+        for j in 0..g {
+            if i != j && i / per_dc == j / per_dc {
+                let bytes = intra_bytes * (1.0 + jitter * (2.0 * rng.f64() - 1.0));
+                d.transfer(i, j, bytes, Tag::A2A, vec![], "a2a");
+            }
+        }
+    }
+    // one macro per ordered DC pair: per_dc² members through one uplink pair
+    let members = (per_dc * per_dc) as u64;
+    for a in 0..dcs {
+        for b in 0..dcs {
+            if a != b {
+                d.transfer_n(a * per_dc, b * per_dc, cross_bytes, members, Tag::A2A, vec![], "a2a");
+            }
+        }
+    }
+    d
 }
 
 #[cfg(test)]
@@ -224,6 +319,70 @@ mod tests {
             c.traffic_by_tag(Tag::A2A).to_bits(),
             "a different seed must jitter differently"
         );
+    }
+
+    #[test]
+    fn macro_transfers_account_member_weighted() {
+        let mut d = Dag::new();
+        d.transfer_n(0, 2, 100.0, 16, Tag::A2A, vec![], "macro");
+        d.transfer(1, 3, 7.0, Tag::AG, vec![], "plain");
+        d.transfer_n(0, 2, 0.0, 4, Tag::A2A, vec![], "latency_only");
+        assert_eq!(d.traffic_by_tag(Tag::A2A), 1600.0);
+        assert_eq!(d.traffic_by_tag(Tag::AG), 7.0);
+        // frequency counts members (Table VII message counts), zero-byte skipped
+        assert_eq!(d.frequency_by_tag(Tag::A2A), 16);
+        assert_eq!(d.frequency_by_tag(Tag::AG), 1);
+        assert_eq!(d.transfer_tasks(), 3);
+        assert_eq!(d.member_transfers(), 21);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiplicity")]
+    fn zero_count_macro_rejected() {
+        let mut d = Dag::new();
+        d.transfer_n(0, 1, 1.0, 0, Tag::A2A, vec![], "bad");
+    }
+
+    #[test]
+    fn dense_mixed_a2a_folded_matches_unfolded_workload() {
+        let (dcs, per_dc) = (4, 3);
+        let unfolded = dense_mixed_a2a(dcs, per_dc, 5e3, 1e6, 0.5, 7);
+        let folded = dense_mixed_a2a_folded(dcs, per_dc, 5e3, 1e6, 0.5, 7);
+        // same member count and bit-identical member-weighted traffic: the
+        // jitter stream aligns and cross payloads are exact macro multiples
+        assert_eq!(folded.member_transfers(), unfolded.member_transfers());
+        assert_eq!(folded.frequency_by_tag(Tag::A2A), unfolded.frequency_by_tag(Tag::A2A));
+        // intra jitter: bit-equal per-flow multiset (same draw order)
+        let intra = |d: &Dag| {
+            let mut v: Vec<u64> = d
+                .tasks
+                .iter()
+                .filter_map(|t| match t.kind {
+                    TaskKind::Transfer { src, dst, bytes, count: 1, .. }
+                        if src / per_dc == dst / per_dc =>
+                    {
+                        Some(bytes.to_bits())
+                    }
+                    _ => None,
+                })
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(intra(&folded), intra(&unfolded));
+        // materialized flow count collapses to ~O(dcs²)
+        assert_eq!(folded.transfer_tasks(), dcs * (dcs - 1) + dcs * per_dc * (per_dc - 1));
+        // cross macros: one per ordered DC pair, count per_dc²
+        let macros: Vec<u64> = folded
+            .tasks
+            .iter()
+            .filter_map(|t| match t.kind {
+                TaskKind::Transfer { count, .. } if count > 1 => Some(count),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(macros.len(), dcs * (dcs - 1));
+        assert!(macros.iter().all(|&c| c == (per_dc * per_dc) as u64));
     }
 
     #[test]

@@ -1,10 +1,20 @@
-//! Max-min fair fluid bandwidth allocation.
+//! Max-min fair fluid bandwidth allocation with multiplicity weights.
 //!
-//! Resources are capacity pools (bytes/s); each flow consumes one unit of
-//! demand on every resource it touches. Allocation is the classic water-
-//! filling: repeatedly find the resource(s) with the smallest fair share,
-//! freeze their flows at that rate, subtract, repeat. Symmetric patterns
-//! (uniform A2A) converge in one round, keeping large simulations cheap.
+//! Resources are capacity pools (bytes/s); a flow of weight `w` (its
+//! [`FlowSpec::count`] — the number of identical member flows it stands for)
+//! consumes `w` units of demand on every resource it touches. Allocation is
+//! the classic water-filling: repeatedly find the resource(s) with the
+//! smallest per-member fair share, freeze their flows at that rate, subtract
+//! `w · share` per frozen flow, repeat. Symmetric patterns (uniform A2A)
+//! converge in one round, keeping large simulations cheap.
+//!
+//! Weights make **symmetry folding** exact: `w` member flows that traverse
+//! the same resources with the same bytes receive identical rates under
+//! max-min fairness, so replacing them with one weight-`w` macro-flow leaves
+//! every other flow's rate unchanged (the macro consumes `w` shares of its
+//! bottleneck) while each member progresses at the common per-member rate.
+//! Weight-1 problems are bit-for-bit the pre-weight allocator: integer
+//! weights sum and subtract exactly in `f64`, and `x · 1.0 == x` bitwise.
 //!
 //! Two entry points share the same kernel (`water_fill`):
 //!
@@ -32,29 +42,41 @@ pub type FlowId = usize;
 pub struct FlowSpec {
     /// Resources this flow traverses (typically egress@src + ingress@dst).
     pub resources: Vec<ResourceId>,
+    /// Remaining bytes **per member** (all members progress in lockstep).
     pub bytes_remaining: f64,
+    /// Multiplicity weight: how many identical member flows this spec stands
+    /// for. The flow consumes `count` shares of every resource it touches;
+    /// the returned rate is the **per-member** rate. `1` = a plain flow.
+    pub count: u64,
 }
 
 /// Relative tolerance for "achieves the minimum share" in a freeze round.
 const SHARE_TOL: f64 = 1e-12;
 
-/// Water-filling on a (sub)problem in local index space.
+/// Water-filling on a (sub)problem in local index space, with multiplicity
+/// weights.
 ///
 /// * `residual[r]` — remaining capacity of local resource `r` (init: caps).
-/// * `active[r]` — number of unfrozen local flows using `r`.
+/// * `active_w[r]` — total **weight** of unfrozen local flows using `r`
+///   (per occurrence: a flow listing `r` twice contributes twice).
 /// * `users[r]` — local flow indices using `r`.
 /// * `flow_res[f]` — local resource indices of flow `f`.
-/// * `rates[f]` — output; resource-less (loopback) flows get `INFINITY`.
+/// * `weight[f]` — multiplicity of flow `f` (≥ 1; exact in `f64`).
+/// * `rates[f]` — output, **per-member** rates; resource-less (loopback)
+///   flows get `INFINITY`.
 ///
 /// The per-round minimum share is computed on a **snapshot** of the shares,
-/// and residuals are clamped at zero after each subtraction — both guard
-/// against the freeze pass driving residuals slightly negative and handing
-/// later rounds negative fair shares.
+/// and residuals/weights are clamped at zero after each subtraction — both
+/// guard against the freeze pass driving residuals slightly negative and
+/// handing later rounds negative fair shares. With all weights `1.0` this is
+/// bit-for-bit the unweighted kernel (integer weights sum/subtract exactly;
+/// `x · 1.0 == x`).
 fn water_fill(
     residual: &mut [f64],
-    active: &mut [usize],
+    active_w: &mut [f64],
     users: &[Vec<usize>],
     flow_res: &[Vec<usize>],
+    weight: &[f64],
     rates: &mut [f64],
 ) {
     let nr = residual.len();
@@ -71,10 +93,11 @@ fn water_fill(
     }
     let mut share = vec![f64::INFINITY; nr];
     while remaining > 0 {
-        // snapshot the fair share of every still-contended resource
+        // snapshot the fair per-member share of every still-contended
+        // resource (weight-w flows hold w shares of the pool)
         let mut min_share = f64::INFINITY;
         for r in 0..nr {
-            share[r] = if active[r] > 0 { residual[r] / active[r] as f64 } else { f64::INFINITY };
+            share[r] = if active_w[r] > 0.0 { residual[r] / active_w[r] } else { f64::INFINITY };
             if share[r] < min_share {
                 min_share = share[r];
             }
@@ -88,7 +111,7 @@ fn water_fill(
         // additional resources under the bar
         let mut froze_any = false;
         for r in 0..nr {
-            if active[r] == 0 || share[r] > min_share * (1.0 + SHARE_TOL) {
+            if active_w[r] <= 0.0 || share[r] > min_share * (1.0 + SHARE_TOL) {
                 continue;
             }
             for &fi in &users[r] {
@@ -100,8 +123,8 @@ fn water_fill(
                 remaining -= 1;
                 froze_any = true;
                 for &r2 in &flow_res[fi] {
-                    residual[r2] = (residual[r2] - min_share).max(0.0);
-                    active[r2] -= 1;
+                    residual[r2] = (residual[r2] - weight[fi] * min_share).max(0.0);
+                    active_w[r2] = (active_w[r2] - weight[fi]).max(0.0);
                 }
             }
         }
@@ -111,11 +134,13 @@ fn water_fill(
     }
 }
 
-/// Compute the max-min fair rate for each flow (reference oracle).
+/// Compute the max-min fair **per-member** rate for each flow (reference
+/// oracle).
 ///
 /// `caps[r]` is the capacity of resource `r`. Returns `rates[f]` for each
-/// flow. Flows with no resources (loopback) get `f64::INFINITY`. All finite
-/// rates are guaranteed non-negative.
+/// flow; a flow with [`FlowSpec::count`] `w` consumes `w · rates[f]` of each
+/// of its resources. Flows with no resources (loopback) get `f64::INFINITY`.
+/// All finite rates are guaranteed non-negative.
 pub fn max_min_rates(caps: &[f64], flows: &[FlowSpec]) -> Vec<f64> {
     let nf = flows.len();
     let mut rates = vec![0.0f64; nf];
@@ -123,15 +148,18 @@ pub fn max_min_rates(caps: &[f64], flows: &[FlowSpec]) -> Vec<f64> {
         return rates;
     }
     let mut users: Vec<Vec<usize>> = vec![Vec::new(); caps.len()];
+    let mut active_w: Vec<f64> = vec![0.0; caps.len()];
+    let weight: Vec<f64> = flows.iter().map(|f| f.count as f64).collect();
     for (fi, f) in flows.iter().enumerate() {
+        debug_assert!(f.count >= 1, "flow {fi} has zero multiplicity");
         for &r in &f.resources {
             users[r].push(fi);
+            active_w[r] += weight[fi];
         }
     }
     let mut residual: Vec<f64> = caps.to_vec();
-    let mut active: Vec<usize> = users.iter().map(|u| u.len()).collect();
     let flow_res: Vec<Vec<usize>> = flows.iter().map(|f| f.resources.clone()).collect();
-    water_fill(&mut residual, &mut active, &users, &flow_res, &mut rates);
+    water_fill(&mut residual, &mut active_w, &users, &flow_res, &weight, &mut rates);
     rates
 }
 
@@ -151,6 +179,8 @@ pub struct IncrementalMaxMin {
     /// slab: `users_pos[f][k]` = index of flow `f`'s `k`-th resource entry
     /// inside `users[resources_of[f][k]]` (O(1) deregistration)
     users_pos: Vec<Vec<usize>>,
+    /// slab: multiplicity weight of each flow (`count as f64`; exact)
+    weight: Vec<f64>,
     live: Vec<bool>,
     free: Vec<FlowId>,
     n_live: usize,
@@ -177,6 +207,7 @@ impl IncrementalMaxMin {
             caps,
             resources_of: Vec::new(),
             users_pos: Vec::new(),
+            weight: Vec::new(),
             live: Vec::new(),
             free: Vec::new(),
             n_live: 0,
@@ -197,10 +228,18 @@ impl IncrementalMaxMin {
         self.n_live
     }
 
-    /// Current rate of a live flow. Meaningful after [`resolve`](Self::resolve).
+    /// Current **per-member** rate of a live flow. Meaningful after
+    /// [`resolve`](Self::resolve).
     pub fn rate(&self, id: FlowId) -> f64 {
         debug_assert!(self.live[id], "rate of dead flow {id}");
         self.rates[id]
+    }
+
+    /// Multiplicity weight of a live flow (what [`add_weighted`](Self::add_weighted)
+    /// registered; plain [`add`](Self::add) registers weight 1).
+    pub fn count(&self, id: FlowId) -> u64 {
+        debug_assert!(self.live[id], "count of dead flow {id}");
+        self.weight[id] as u64
     }
 
     fn mark_dirty(&mut self, r: ResourceId) {
@@ -210,14 +249,25 @@ impl IncrementalMaxMin {
         }
     }
 
-    /// Register a flow over `resources`. Loopback flows (no resources) are
-    /// rated `INFINITY` immediately and never participate in a solve.
+    /// Register a plain (weight-1) flow over `resources`. Loopback flows (no
+    /// resources) are rated `INFINITY` immediately and never participate in a
+    /// solve.
     pub fn add(&mut self, resources: Vec<ResourceId>) -> FlowId {
+        self.add_weighted(resources, 1)
+    }
+
+    /// Register a macro-flow standing for `count` identical members: it
+    /// consumes `count` shares of every resource it touches and its
+    /// [`rate`](Self::rate) is the common per-member rate. `count = 1` is
+    /// exactly [`add`](Self::add).
+    pub fn add_weighted(&mut self, resources: Vec<ResourceId>, count: u64) -> FlowId {
+        assert!(count >= 1, "macro-flow multiplicity must be at least 1");
         let id = match self.free.pop() {
             Some(id) => id,
             None => {
                 self.resources_of.push(Vec::new());
                 self.users_pos.push(Vec::new());
+                self.weight.push(0.0);
                 self.live.push(false);
                 self.rates.push(0.0);
                 self.flow_seen.push(0);
@@ -225,6 +275,7 @@ impl IncrementalMaxMin {
                 self.resources_of.len() - 1
             }
         };
+        self.weight[id] = count as f64;
         self.live[id] = true;
         self.n_live += 1;
         self.rates[id] = if resources.is_empty() { f64::INFINITY } else { 0.0 };
@@ -342,7 +393,10 @@ impl IncrementalMaxMin {
         }
         // build the component-local problem and solve it
         let mut residual: Vec<f64> = comp_res.iter().map(|&r| self.caps[r]).collect();
-        let mut active: Vec<usize> = comp_res.iter().map(|&r| self.users[r].len()).collect();
+        let mut active_w: Vec<f64> = comp_res
+            .iter()
+            .map(|&r| self.users[r].iter().map(|&f| self.weight[f]).sum())
+            .collect();
         let users_local: Vec<Vec<usize>> = comp_res
             .iter()
             .map(|&r| self.users[r].iter().map(|&f| self.flow_local[f]).collect())
@@ -351,8 +405,16 @@ impl IncrementalMaxMin {
             .iter()
             .map(|&f| self.resources_of[f].iter().map(|&r| self.res_local[r]).collect())
             .collect();
+        let weight_local: Vec<f64> = comp_flows.iter().map(|&f| self.weight[f]).collect();
         let mut rates_local = vec![0.0f64; comp_flows.len()];
-        water_fill(&mut residual, &mut active, &users_local, &flow_res_local, &mut rates_local);
+        water_fill(
+            &mut residual,
+            &mut active_w,
+            &users_local,
+            &flow_res_local,
+            &weight_local,
+            &mut rates_local,
+        );
         for (i, &f) in comp_flows.iter().enumerate() {
             if rates_local[i].to_bits() != self.rates[f].to_bits() {
                 self.rates[f] = rates_local[i];
@@ -370,7 +432,11 @@ mod tests {
     use crate::testkit;
 
     fn flow(resources: Vec<ResourceId>) -> FlowSpec {
-        FlowSpec { resources, bytes_remaining: 1.0 }
+        FlowSpec { resources, bytes_remaining: 1.0, count: 1 }
+    }
+
+    fn wflow(resources: Vec<ResourceId>, count: u64) -> FlowSpec {
+        FlowSpec { resources, bytes_remaining: 1.0, count }
     }
 
     #[test]
@@ -730,6 +796,140 @@ mod tests {
         alloc.remove(e);
         check_positions(&alloc);
         assert_eq!(alloc.live_flows(), 0);
+    }
+
+    /// Tentpole exactness contract: a weight-`w` macro-flow is the same
+    /// problem as `w` identical weight-1 members — per-member rates match
+    /// the fully expanded solve for every flow, folded or not.
+    #[test]
+    fn weighted_rates_match_expanded_members() {
+        testkit::check("weighted-vs-expanded", 100, |g| {
+            let nr = g.usize_in(1, 8);
+            let caps: Vec<f64> = (0..nr).map(|_| g.rng.f64() * 10.0 + 0.1).collect();
+            let nf = g.usize_in(1, 10);
+            let mut folded = random_flows(g, nr, nf);
+            for f in &mut folded {
+                f.count = 1 + g.rng.below(5) as u64;
+            }
+            if g.rng.below(3) == 0 {
+                folded.push(wflow(vec![], 3)); // weighted loopback in the mix
+            }
+            // expand every macro into `count` identical weight-1 members
+            let mut expanded = Vec::new();
+            let mut member_of: Vec<usize> = Vec::new(); // folded index per member
+            for (fi, f) in folded.iter().enumerate() {
+                for _ in 0..f.count {
+                    expanded.push(wflow(f.resources.clone(), 1));
+                    member_of.push(fi);
+                }
+            }
+            let got = max_min_rates(&caps, &folded);
+            let want = max_min_rates(&caps, &expanded);
+            for (mi, &fi) in member_of.iter().enumerate() {
+                let (a, b) = (got[fi], want[mi]);
+                if a.is_infinite() || b.is_infinite() {
+                    prop_assert!(a.is_infinite() && b.is_infinite(), "loopback diverged");
+                    continue;
+                }
+                prop_assert!(
+                    (a - b).abs() <= 1e-9 * (1.0 + b.abs()),
+                    "folded flow {fi} (count {}): per-member rate {a} vs expanded {b}",
+                    folded[fi].count
+                );
+            }
+            // identical members of one macro really do share one rate in the
+            // expanded solve (the symmetry the fold exploits)
+            for (mi, &fi) in member_of.iter().enumerate() {
+                let first = member_of.iter().position(|&x| x == fi).unwrap();
+                prop_assert!(
+                    want[mi].to_bits() == want[first].to_bits(),
+                    "identical members of flow {fi} got different rates"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Incremental allocator with weighted adds matches the weighted
+    /// reference oracle through randomized churn (the folded calendar
+    /// engine's exact workload).
+    #[test]
+    fn incremental_weighted_matches_reference_differential() {
+        testkit::check("incremental-weighted-vs-reference", 80, |g| {
+            let nr = g.usize_in(2, 10);
+            let caps: Vec<f64> = (0..nr).map(|_| g.rng.f64() * 10.0 + 0.1).collect();
+            let mut alloc = IncrementalMaxMin::new(caps.clone());
+            let mut live: Vec<(FlowId, Vec<ResourceId>, u64)> = Vec::new();
+            for _ in 0..g.usize_in(4, 24) {
+                if !live.is_empty() && g.rng.below(3) == 0 {
+                    let at = g.rng.below(live.len());
+                    let (id, _, _) = live.swap_remove(at);
+                    alloc.remove(id);
+                } else {
+                    let spec = random_flows(g, nr, 1).remove(0);
+                    let count = 1 + g.rng.below(64) as u64;
+                    let id = alloc.add_weighted(spec.resources.clone(), count);
+                    live.push((id, spec.resources, count));
+                }
+                alloc.resolve();
+                let specs: Vec<FlowSpec> = live
+                    .iter()
+                    .map(|(_, rs, c)| wflow(rs.clone(), *c))
+                    .collect();
+                let want = max_min_rates(&caps, &specs);
+                for ((id, rs, c), w) in live.iter().zip(&want) {
+                    let got = alloc.rate(*id);
+                    prop_assert!(
+                        (got - w).abs() <= 1e-9 * (1.0 + w.abs()),
+                        "weighted flow {id} (count {c}) over {rs:?}: {got} vs {w}"
+                    );
+                    prop_assert!(alloc.count(*id) == *c, "weight not preserved");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weight_one_path_is_bitwise_unchanged() {
+        // plain add() and add_weighted(_, 1) must be indistinguishable, and
+        // the weighted kernel with all-ones weights must reproduce the
+        // unweighted rates bit for bit (the calendar engine relies on this
+        // for its changed-set laziness)
+        let caps = vec![3.0, 7.0, 2.0];
+        let specs = vec![flow(vec![0, 1]), flow(vec![1]), flow(vec![0, 2]), flow(vec![2, 2])];
+        let rates = max_min_rates(&caps, &specs);
+        let mut a = IncrementalMaxMin::new(caps.clone());
+        let mut b = IncrementalMaxMin::new(caps);
+        let ids_a: Vec<_> = specs.iter().map(|s| a.add(s.resources.clone())).collect();
+        let ids_b: Vec<_> =
+            specs.iter().map(|s| b.add_weighted(s.resources.clone(), 1)).collect();
+        a.resolve();
+        b.resolve();
+        for ((&ia, &ib), want) in ids_a.iter().zip(&ids_b).zip(&rates) {
+            assert_eq!(a.rate(ia).to_bits(), b.rate(ib).to_bits());
+            assert_eq!(a.rate(ia).to_bits(), want.to_bits(), "kernel drifted from oracle");
+        }
+    }
+
+    #[test]
+    fn macro_flow_consumes_member_shares() {
+        // one weight-3 macro and one plain flow on a cap-8 link: the pool
+        // splits 4 ways → per-member rate 2, macro throughput 6
+        let rates = max_min_rates(&[8.0], &[wflow(vec![0], 3), flow(vec![0])]);
+        assert!((rates[0] - 2.0).abs() < 1e-12, "{rates:?}");
+        assert!((rates[1] - 2.0).abs() < 1e-12, "{rates:?}");
+        let mut alloc = IncrementalMaxMin::new(vec![8.0]);
+        let m = alloc.add_weighted(vec![0], 3);
+        let p = alloc.add(vec![0]);
+        alloc.resolve();
+        assert!((alloc.rate(m) - 2.0).abs() < 1e-12);
+        assert!((alloc.rate(p) - 2.0).abs() < 1e-12);
+        assert_eq!(alloc.count(m), 3);
+        // removing the macro frees all three shares at once
+        alloc.remove(m);
+        alloc.resolve();
+        assert!((alloc.rate(p) - 8.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Symmetry folding: collapse identical transfers into multiplicity-weighted
+//! macro-flows (the O(G²) → ~O(D²) flow-count reduction behind the folded
+//! engine, HybridEP §5's domain symmetry).
+//!
+//! Under the hierarchical capacity model a transfer's resource footprint is
+//! fully determined by its **bottleneck level** and the two containers it
+//! crosses at that level (source egress + destination ingress). Transfers
+//! between the same container pair, with the same tag, bit-identical bytes
+//! and the same dependency set are therefore *interchangeable*: max-min
+//! fairness hands them identical rates at every instant, they start together
+//! (same deps, same level latency) and finish together. Replacing `w` such
+//! members with one count-`w` [`TaskKind::Transfer`] is an exact
+//! transformation — every other flow's rate is unchanged (the macro consumes
+//! `w` shares of the shared pool), and each member's finish time equals the
+//! macro's (modulo floating-point re-association of the residual updates,
+//! ≤ a few ulps — the differential suite pins 1e-9).
+//!
+//! The grouping key is deliberately strict (bit-equal bytes, identical
+//! sorted dependency lists). It folds exactly the phases real systems emit
+//! symmetric — dense dispatch/combine between DC pairs, uniform AG — and
+//! leaves everything else untouched. Folding is a single pass; chains of
+//! transfers that only become symmetric *after* folding their distinct
+//! predecessors are left unfolded (exactness over aggressiveness).
+
+use std::collections::HashMap;
+
+use crate::cluster::ClusterSpec;
+use crate::netsim::dag::{Dag, Tag, TaskId, TaskKind};
+
+/// A folded dag plus the member → macro map for per-task result reporting.
+pub struct FoldedDag {
+    /// The rewritten dag: one task per macro-flow group, everything else
+    /// copied with remapped dependencies.
+    pub dag: Dag,
+    /// `fold_of[original_id] = folded_id` — every member of a group maps to
+    /// its macro task.
+    fold_of: Vec<TaskId>,
+    /// Member transfers in the original dag (counts summed).
+    pub member_flows: usize,
+    /// Materialized transfer tasks after folding.
+    pub materialized_flows: usize,
+}
+
+impl FoldedDag {
+    /// Map the folded run's per-task finish times back onto the original
+    /// dag's task ids: every member finishes when its macro does.
+    pub fn unfold_finish(&self, finish: &[f64]) -> Vec<f64> {
+        self.fold_of.iter().map(|&f| finish[f]).collect()
+    }
+
+    /// Folded id of an original task (macro id for folded members).
+    pub fn fold_of(&self, original: TaskId) -> TaskId {
+        self.fold_of[original]
+    }
+
+    /// `member_flows / materialized_flows` — the flow-count collapse this
+    /// fold achieved (≥ 1; the benches record it as `flows_folded_ratio`).
+    pub fn folded_ratio(&self) -> f64 {
+        self.member_flows as f64 / self.materialized_flows.max(1) as f64
+    }
+}
+
+/// Strict symmetry key: resource footprint + payload + dependency set.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct FoldKey {
+    level: usize,
+    src_container: usize,
+    dst_container: usize,
+    tag: Tag,
+    bytes_bits: u64,
+    /// canonical (sorted, deduped) dependency list in *original* ids —
+    /// members share deps by construction, so original ids are stable keys
+    deps: Vec<TaskId>,
+}
+
+/// Fold every group of symmetric transfers in `dag` into one macro-transfer.
+///
+/// Tasks keep their relative order; the macro sits at its first member's
+/// position (its dependencies are earlier by topological construction, and
+/// dependents of *any* member are rewired to the macro — exact, because all
+/// members finish simultaneously). Loopback transfers, compute and barriers
+/// are copied verbatim with remapped dependencies.
+pub fn fold_dag(dag: &Dag, cluster: &ClusterSpec) -> FoldedDag {
+    let idx = cluster.multilevel().indexer();
+    let n = dag.tasks.len();
+
+    // pass 1: group membership. group_of[i] = dense group index for foldable
+    // transfers; first/count accumulate per group.
+    let mut groups: HashMap<FoldKey, usize> = HashMap::new();
+    let mut group_of: Vec<Option<usize>> = vec![None; n];
+    let mut group_first: Vec<usize> = Vec::new();
+    let mut group_count: Vec<u64> = Vec::new();
+    for (i, t) in dag.tasks.iter().enumerate() {
+        let TaskKind::Transfer { src, dst, bytes, tag, count } = t.kind else {
+            continue;
+        };
+        let Some(level) = idx.bottleneck_level(src, dst) else {
+            continue; // loopback: completes at dispatch, nothing to share
+        };
+        let mut deps = t.deps.clone();
+        deps.sort_unstable();
+        deps.dedup();
+        let key = FoldKey {
+            level,
+            src_container: idx.container_of(src, level),
+            dst_container: idx.container_of(dst, level),
+            tag,
+            bytes_bits: bytes.to_bits(),
+            deps,
+        };
+        let g = *groups.entry(key).or_insert_with(|| {
+            group_first.push(i);
+            group_count.push(0);
+            group_count.len() - 1
+        });
+        group_of[i] = Some(g);
+        group_count[g] += count;
+    }
+
+    // pass 2: rebuild in original order, emitting each macro at its first
+    // member's position and remapping dependencies through fold_of.
+    let mut out = Dag::new();
+    let mut fold_of = vec![usize::MAX; n];
+    for (i, t) in dag.tasks.iter().enumerate() {
+        if let Some(g) = group_of[i] {
+            let first = group_first[g];
+            if first != i {
+                fold_of[i] = fold_of[first];
+                continue;
+            }
+            let TaskKind::Transfer { src, dst, bytes, tag, .. } = t.kind else {
+                unreachable!("grouped task is a transfer")
+            };
+            let deps: Vec<TaskId> = t.deps.iter().map(|&d| fold_of[d]).collect();
+            fold_of[i] = out.transfer_n(src, dst, bytes, group_count[g], tag, deps, t.label);
+        } else {
+            let deps: Vec<TaskId> = t.deps.iter().map(|&d| fold_of[d]).collect();
+            fold_of[i] = out.add(t.kind.clone(), deps, t.label);
+        }
+    }
+    let member_flows = dag.member_transfers();
+    let materialized_flows = out.transfer_tasks();
+    FoldedDag { dag: out, fold_of, member_flows, materialized_flows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::netsim::dag::{dense_mixed_a2a, dense_mixed_a2a_folded};
+
+    #[test]
+    fn folds_symmetric_cross_dc_pairs_only() {
+        // 2 DCs × 2 GPUs: 4 identical cross-DC flows per DC pair fold; the
+        // two distinct-bytes intra flows and the loopback don't
+        let cluster = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let mut d = Dag::new();
+        for src in 0..2usize {
+            for dst in 2..4usize {
+                d.transfer(src, dst, 1e6, Tag::A2A, vec![], "cross");
+            }
+        }
+        d.transfer(0, 1, 3e5, Tag::A2A, vec![], "intra_a");
+        d.transfer(1, 0, 4e5, Tag::A2A, vec![], "intra_b");
+        d.transfer(2, 2, 9e9, Tag::A2A, vec![], "loopback");
+        let f = fold_dag(&d, &cluster);
+        assert_eq!(f.member_flows, 7);
+        assert_eq!(f.materialized_flows, 4, "4 cross members → 1 macro, plus 3 singles");
+        assert_eq!(f.dag.traffic_by_tag(Tag::A2A), d.traffic_by_tag(Tag::A2A));
+        assert!((f.folded_ratio() - 7.0 / 4.0).abs() < 1e-12);
+        // all four cross members share one folded id
+        let macro_id = f.fold_of(0);
+        for i in 1..4 {
+            assert_eq!(f.fold_of(i), macro_id);
+        }
+        assert_ne!(f.fold_of(4), f.fold_of(5), "distinct intra bytes must not fold");
+    }
+
+    #[test]
+    fn distinct_deps_tags_and_containers_block_folding() {
+        let cluster = presets::dcs_x_gpus(3, 2, 10.0, 128.0);
+        let mut d = Dag::new();
+        let a = d.compute(0, 0.1, vec![], "a");
+        let b = d.compute(1, 0.1, vec![], "b");
+        d.transfer(0, 2, 1e6, Tag::A2A, vec![a], "dep_a");
+        d.transfer(1, 2, 1e6, Tag::A2A, vec![b], "dep_b"); // same pair, other dep
+        d.transfer(0, 4, 1e6, Tag::A2A, vec![a], "other_dst_dc");
+        d.transfer(1, 3, 1e6, Tag::AG, vec![a], "other_tag");
+        let f = fold_dag(&d, &cluster);
+        assert_eq!(f.materialized_flows, 4, "nothing here is symmetric");
+        // dep order is canonicalized: [a, b] and [b, a] do fold
+        let mut d2 = Dag::new();
+        let x = d2.compute(0, 0.1, vec![], "x");
+        let y = d2.compute(1, 0.1, vec![], "y");
+        d2.transfer(0, 2, 1e6, Tag::A2A, vec![x, y], "p");
+        d2.transfer(1, 3, 1e6, Tag::A2A, vec![y, x], "q");
+        let f2 = fold_dag(&d2, &cluster);
+        assert_eq!(f2.materialized_flows, 1, "permuted dep lists are the same dep set");
+    }
+
+    #[test]
+    fn dependents_rewire_to_the_macro() {
+        let cluster = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let mut d = Dag::new();
+        let t0 = d.transfer(0, 2, 1e6, Tag::A2A, vec![], "m0");
+        let t1 = d.transfer(1, 3, 1e6, Tag::A2A, vec![], "m1");
+        let bar = d.barrier(vec![t0, t1], "join");
+        d.compute(3, 0.5, vec![bar], "after");
+        let f = fold_dag(&d, &cluster);
+        assert_eq!(f.materialized_flows, 1);
+        assert_eq!(f.dag.len(), 3, "macro + barrier + compute");
+        // the barrier's deps collapsed onto the single macro id
+        let macro_id = f.fold_of(t0);
+        assert_eq!(f.fold_of(t1), macro_id);
+        let join = &f.dag.tasks[f.fold_of(bar)];
+        assert!(join.deps.iter().all(|&dep| dep == macro_id));
+        // the folded run reports a finish time for every original member
+        let r = crate::netsim::Simulator::new(&cluster).run(&f.dag);
+        let finish = f.unfold_finish(&r.finish);
+        assert_eq!(finish.len(), d.len());
+        assert_eq!(finish[t0], finish[t1], "members finish with their macro");
+    }
+
+    #[test]
+    fn fold_is_idempotent_and_handles_prefolded_macros() {
+        let cluster = presets::dcs_x_gpus(2, 4, 10.0, 128.0);
+        let d = dense_mixed_a2a(2, 4, 64e3, 8e6, 0.5, 11);
+        let once = fold_dag(&d, &cluster);
+        let twice = fold_dag(&once.dag, &cluster);
+        assert_eq!(twice.materialized_flows, once.materialized_flows);
+        assert_eq!(twice.member_flows, once.member_flows);
+        // a dag born folded folds to itself
+        let born = dense_mixed_a2a_folded(2, 4, 64e3, 8e6, 0.5, 11);
+        let f = fold_dag(&born, &cluster);
+        assert_eq!(f.materialized_flows, born.transfer_tasks());
+        assert_eq!(f.member_flows, born.member_transfers());
+    }
+
+    #[test]
+    fn fold_matches_the_born_folded_builder_on_dense_mixed_a2a() {
+        let (dcs, per_dc) = (4usize, 3usize);
+        let cluster = presets::dcs_x_gpus(dcs, per_dc, 10.0, 128.0);
+        let unfolded = dense_mixed_a2a(dcs, per_dc, 64e3, 8e6, 0.5, 23);
+        let folded = fold_dag(&unfolded, &cluster);
+        let born = dense_mixed_a2a_folded(dcs, per_dc, 64e3, 8e6, 0.5, 23);
+        assert_eq!(folded.materialized_flows, born.transfer_tasks());
+        assert_eq!(folded.dag.member_transfers(), born.member_transfers());
+        assert_eq!(folded.member_flows, unfolded.len());
+    }
+}

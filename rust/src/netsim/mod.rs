@@ -24,11 +24,23 @@
 //! rate oracle. [`sweep`] fans fig16/fig17-style scenario grids across OS
 //! threads with deterministic per-scenario seeds (the calendar engine is
 //! what lets the fig17 grid reach 1024 DCs).
+//!
+//! On top of the calendar, **symmetry folding** ([`fold`], exploited by
+//! [`sim::RateMode::Folded`]) collapses identical transfers — same
+//! bottleneck containers, bytes and dependencies — into one
+//! multiplicity-weighted macro-flow, cutting the *flow count* of dense
+//! cross-DC phases from O(G²) to ~O(D²): the max-min allocator charges a
+//! count-`w` macro `w` shares of its uplink pool ([`flow::FlowSpec::count`])
+//! and all members finish together, which is exact because identical flows
+//! receive identical max-min rates. This is what makes fig17-scale runs at
+//! 1024 DCs × 8 GPUs/DC (67M member flows) tractable.
 
 pub mod dag;
 pub mod flow;
+pub mod fold;
 pub mod sim;
 pub mod sweep;
 
 pub use dag::{Dag, Tag, TaskId, TaskKind};
+pub use fold::{fold_dag, FoldedDag};
 pub use sim::{RateMode, SimResult, Simulator};

@@ -20,6 +20,15 @@
 //! fig17-style sweeps honestly reach 1024 DCs (see DESIGN.md §Hot path for
 //! the per-event complexity table).
 //!
+//! [`RateMode::Folded`] layers **symmetry folding** on top: the dag is
+//! rewritten by [`fold::fold_dag`](super::fold::fold_dag) so that identical
+//! transfers ride one multiplicity-weighted macro-flow (one calendar entry,
+//! `count` allocator shares, one completion for all members), and per-task
+//! finish times are unfolded afterwards. All engines also execute
+//! *born-folded* dags (`Dag::transfer_n`) natively, scaling per-tag and
+//! per-level byte accounting by the multiplicity (the busy-GPU utilization
+//! integral is compute-driven and needs no scaling).
+//!
 //! Two baselines keep the pre-change event loop (linear next-event search,
 //! per-event byte advancement of every flow) verbatim:
 //!
@@ -49,6 +58,18 @@ pub enum RateMode {
     /// incremental rate re-solves (the production hot path).
     #[default]
     Incremental,
+    /// [`Incremental`](Self::Incremental) over the **symmetry-folded** dag:
+    /// identical transfers (same bottleneck containers, bytes, deps — see
+    /// [`fold::fold_dag`](super::fold::fold_dag)) collapse into one
+    /// multiplicity-weighted macro-flow before the run, and per-task finish
+    /// times are mapped back through the unfold map afterwards. Exact on any
+    /// dag (strict grouping); on dense symmetric phases it cuts the flow
+    /// count from O(G²) to ~O(D²), which is what lets `dense_mixed_a2a`
+    /// complete at 1024 DCs × 8 GPUs/DC. Dags whose symmetric phases were
+    /// *born* folded (`Dag::transfer_n`, `plan::MacroFlow`) get the same
+    /// benefit under plain [`Incremental`](Self::Incremental) — all engines
+    /// understand macro-transfers natively.
+    Folded,
     /// Pre-change event loop (linear per-event scans) with incremental rate
     /// maintenance — the baseline the calendar engine's speedup is measured
     /// against.
@@ -308,8 +329,12 @@ struct ActiveFlow {
     /// allocator handle (unused in Reference mode)
     id: usize,
     resources: Vec<usize>,
+    /// remaining bytes per member (macro members progress in lockstep)
     bytes_remaining: f64,
+    /// per-member rate
     rate: f64,
+    /// multiplicity weight of the (possibly macro) transfer
+    count: u64,
 }
 
 impl<'a> Simulator<'a> {
@@ -331,6 +356,15 @@ impl<'a> Simulator<'a> {
     pub fn run(&self, dag: &Dag) -> SimResult {
         match self.mode {
             RateMode::Incremental => self.run_calendar(dag),
+            RateMode::Folded => {
+                let folded = super::fold::fold_dag(dag, self.cluster);
+                let mut r = self.run_calendar(&folded.dag);
+                // report results in the original dag's task-id space; byte
+                // totals are member-weighted on both sides, so they carry
+                // over unchanged
+                r.finish = folded.unfold_finish(&r.finish);
+                r
+            }
             RateMode::ScanIncremental => self.run_scan(dag, true),
             RateMode::Reference => self.run_scan(dag, false),
         }
@@ -382,14 +416,18 @@ impl<'a> Simulator<'a> {
                             gpu_check.push(gpu);
                         }
                     }
-                    TaskKind::Transfer { src, dst, bytes, tag } => {
-                        // per-tag totals count every transfer once (matching
-                        // `Dag::traffic_by_tag`, loopback included);
-                        // per-level totals count wire bytes only
+                    TaskKind::Transfer { src, dst, bytes, tag, count } => {
+                        // per-tag totals count every member transfer once
+                        // (matching `Dag::traffic_by_tag`, loopback
+                        // included); per-level totals count wire bytes only.
+                        // Macro-transfers scale by their multiplicity —
+                        // `bytes · 1.0` is bitwise `bytes`, so plain
+                        // transfers account exactly as before.
+                        let wire = bytes * count as f64;
                         match tag {
-                            Tag::A2A => bytes_a2a.add(bytes),
-                            Tag::AG => bytes_ag.add(bytes),
-                            Tag::AllReduce => bytes_ar.add(bytes),
+                            Tag::A2A => bytes_a2a.add(wire),
+                            Tag::AG => bytes_ag.add(wire),
+                            Tag::AllReduce => bytes_ar.add(wire),
                             Tag::Other => {}
                         }
                         match fr.bottleneck(src, dst) {
@@ -398,7 +436,7 @@ impl<'a> Simulator<'a> {
                                 ds.complete(task, time);
                             }
                             Some(l) => {
-                                bytes_per_level[l].add(bytes);
+                                bytes_per_level[l].add(wire);
                                 let lat = self.cluster.levels[l].latency;
                                 start_cal.push(time + lat, pending.len(), 0);
                                 pending.push((task, l));
@@ -498,11 +536,13 @@ impl<'a> Simulator<'a> {
                 }
                 start_cal.pop();
                 let (task, l) = pending[e.key];
-                let TaskKind::Transfer { src, dst, bytes, .. } = dag.tasks[task].kind else {
+                let TaskKind::Transfer { src, dst, bytes, count, .. } = dag.tasks[task].kind else {
                     unreachable!()
                 };
                 let resources = vec![fr.resource_of(src, l, false), fr.resource_of(dst, l, true)];
-                let id = alloc.add(resources);
+                // a macro-flow holds `count` shares of its uplink pool; its
+                // state below tracks *per-member* bytes at the per-member rate
+                let id = alloc.add_weighted(resources, count);
                 if id >= flows.len() {
                     flows.resize(id + 1, FlowState::vacant());
                 }
@@ -604,17 +644,18 @@ impl<'a> Simulator<'a> {
                             gpu_queue[gpu].push_back(task);
                         }
                     }
-                    TaskKind::Transfer { src, dst, bytes, tag } => {
+                    TaskKind::Transfer { src, dst, bytes, tag, count } => {
+                        let wire = bytes * count as f64;
                         match tag {
-                            Tag::A2A => bytes_a2a.add(bytes),
-                            Tag::AG => bytes_ag.add(bytes),
-                            Tag::AllReduce => bytes_ar.add(bytes),
+                            Tag::A2A => bytes_a2a.add(wire),
+                            Tag::AG => bytes_ag.add(wire),
+                            Tag::AllReduce => bytes_ar.add(wire),
                             Tag::Other => {}
                         }
                         match fr.bottleneck(src, dst) {
                             None => ds.complete(task, time),
                             Some(l) => {
-                                bytes_per_level[l].add(bytes);
+                                bytes_per_level[l].add(wire);
                                 let lat = self.cluster.levels[l].latency;
                                 flow_starts.push((time + lat, task, l));
                             }
@@ -651,6 +692,7 @@ impl<'a> Simulator<'a> {
                         .map(|f| FlowSpec {
                             resources: f.resources.clone(),
                             bytes_remaining: f.bytes_remaining,
+                            count: f.count,
                         })
                         .collect();
                     let rates = max_min_rates(&fr.caps, &specs);
@@ -708,18 +750,24 @@ impl<'a> Simulator<'a> {
             let mut started = false;
             flow_starts.retain(|&(t, task, l)| {
                 if t <= time + EPS {
-                    let TaskKind::Transfer { src, dst, bytes, .. } = dag.tasks[task].kind else {
+                    let TaskKind::Transfer { src, dst, bytes, count, .. } = dag.tasks[task].kind
+                    else {
                         unreachable!()
                     };
                     let resources =
                         vec![fr.resource_of(src, l, false), fr.resource_of(dst, l, true)];
-                    let id = if incremental { alloc.add(resources.clone()) } else { usize::MAX };
+                    let id = if incremental {
+                        alloc.add_weighted(resources.clone(), count)
+                    } else {
+                        usize::MAX
+                    };
                     flows.push(ActiveFlow {
                         task,
                         id,
                         resources,
                         bytes_remaining: bytes,
                         rate: 0.0,
+                        count,
                     });
                     started = true;
                     false
@@ -776,7 +824,7 @@ impl<'a> Simulator<'a> {
 mod tests {
     use super::*;
     use crate::cluster::presets;
-    use crate::netsim::dag::{dense_mixed_a2a, Dag, Tag};
+    use crate::netsim::dag::{dense_mixed_a2a, dense_mixed_a2a_folded, Dag, Tag};
     use crate::prop_assert;
     use crate::testkit;
     use crate::util::rng::Rng;
@@ -1010,6 +1058,132 @@ mod tests {
         }
     }
 
+    /// Tentpole satellite: randomized three-way differential on
+    /// heterogeneous-override clusters — the folded engine must match the
+    /// calendar engine and the reference oracle on makespan and every
+    /// per-task finish time (via the unfold map), with **bit-equal** weighted
+    /// byte totals. Payloads are whole bytes, so Kahan-summing `w` members
+    /// is exact and equals the macro's single `bytes · w` contribution.
+    #[test]
+    fn folded_engine_three_way_differential_on_heterogeneous_clusters() {
+        testkit::check("sim-folded-differential", 20, |g| {
+            let dcs = g.usize_in(3, 8);
+            let per_dc = g.usize_in(2, 4);
+            let mut cluster = presets::dcs_x_gpus(dcs, per_dc, 10.0, 128.0);
+            if g.rng.below(2) == 0 {
+                let c = g.rng.below(dcs);
+                cluster = cluster.with_override(0, c, presets::gbps(2.5));
+            }
+            // symmetric integral cross payloads per ordered DC pair (these
+            // fold, per_dc² members each); random integral intra payloads
+            let mut cross = vec![vec![0.0f64; dcs]; dcs];
+            for row in cross.iter_mut() {
+                for x in row.iter_mut() {
+                    *x = (g.rng.below(2000) + 1) as f64 * 1024.0;
+                }
+            }
+            let dag = {
+                let rng = &mut g.rng;
+                Dag::all_to_all(dcs * per_dc, Tag::A2A, |i, j| {
+                    let (a, b) = (i / per_dc, j / per_dc);
+                    if a == b {
+                        (rng.below(4000) + 1) as f64 * 512.0
+                    } else {
+                        cross[a][b]
+                    }
+                })
+            };
+            let folded = Simulator::with_mode(&cluster, RateMode::Folded).run(&dag);
+            let cal = Simulator::new(&cluster).run(&dag);
+            let rf = Simulator::reference(&cluster).run(&dag);
+            prop_assert!(folded.finish.len() == dag.len(), "unfold map lost tasks");
+            for (name, r) in [("folded", &folded), ("calendar", &cal)] {
+                prop_assert!(
+                    close_rel(r.makespan, rf.makespan),
+                    "{name} makespan {} vs reference {}",
+                    r.makespan,
+                    rf.makespan
+                );
+                for (i, (x, y)) in r.finish.iter().zip(&rf.finish).enumerate() {
+                    prop_assert!(close_rel(*x, *y), "{name} task {i} finish {x} vs {y}");
+                }
+                prop_assert!(
+                    r.bytes_a2a.to_bits() == rf.bytes_a2a.to_bits(),
+                    "{name} weighted A2A bytes not bit-equal: {} vs {}",
+                    r.bytes_a2a,
+                    rf.bytes_a2a
+                );
+                for l in 0..r.bytes_per_level.len() {
+                    prop_assert!(
+                        r.bytes_per_level[l].to_bits() == rf.bytes_per_level[l].to_bits(),
+                        "{name} level {l} bytes not bit-equal"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The folded engine on the scan engine's worst case: same results as
+    /// the calendar engine (which runs the O(G²) member flows) with far
+    /// fewer materialized flows, under a straggler override. The born-folded
+    /// builder must agree too — folding at `Dag` build time and folding via
+    /// `RateMode::Folded` are the same transformation.
+    #[test]
+    fn folded_dense_mixed_a2a_matches_calendar_at_32_dcs() {
+        let c = presets::dcs_x_gpus(32, 4, 10.0, 128.0).with_override(0, 3, presets::gbps(5.0));
+        let dag = dense_mixed_a2a(32, 4, 64e3, 8e6, 0.5, 97);
+        let born = dense_mixed_a2a_folded(32, 4, 64e3, 8e6, 0.5, 97);
+        let cal = Simulator::new(&c).run(&dag);
+        let fold = Simulator::with_mode(&c, RateMode::Folded).run(&dag);
+        let bornr = Simulator::new(&c).run(&born);
+        assert!(close_rel(fold.makespan, cal.makespan), "{} vs {}", fold.makespan, cal.makespan);
+        assert!(close_rel(bornr.makespan, cal.makespan), "{} vs {}", bornr.makespan, cal.makespan);
+        assert_eq!(fold.finish.len(), dag.len());
+        for (i, (x, y)) in fold.finish.iter().zip(&cal.finish).enumerate() {
+            assert!(close_rel(*x, *y), "task {i}: folded {x} vs calendar {y}");
+        }
+        let bytes_eq = |a: f64, b: f64| (a - b).abs() <= 1e-9 * (1.0 + a.abs());
+        assert!(bytes_eq(fold.bytes_a2a, cal.bytes_a2a));
+        assert!(bytes_eq(bornr.bytes_a2a, cal.bytes_a2a));
+        assert!(fold.events <= cal.events, "folding must not add events");
+        // the fold actually collapsed the cross-DC members
+        let folded = crate::netsim::fold::fold_dag(&dag, &c);
+        assert!(
+            folded.folded_ratio() > 10.0,
+            "expected a large fold on dense mixed A2A, got {:.1}×",
+            folded.folded_ratio()
+        );
+    }
+
+    /// Acceptance (scale): `dense_mixed_a2a` at 1024 DCs × 8 GPUs/DC —
+    /// 8192 GPUs, 67.1M member flows — completes under the folded engine
+    /// because only ~O(D²) flows are materialized (`flows_folded_ratio`
+    /// ≥ 50×). The unfolded engine cannot even hold the member set.
+    #[test]
+    fn folded_dense_mixed_a2a_scales_to_1024_dcs_x8() {
+        let (dcs, per_dc) = (1024usize, 8usize);
+        let c = presets::dcs_x_gpus(dcs, per_dc, 10.0, 128.0);
+        let dag = dense_mixed_a2a_folded(dcs, per_dc, 64e3, 8e6, 0.5, 97);
+        let g = dcs * per_dc;
+        assert_eq!(dag.member_transfers(), g * (g - 1), "must stand for the full member set");
+        let ratio = dag.member_transfers() as f64 / dag.transfer_tasks() as f64;
+        assert!(ratio >= 50.0, "flows_folded_ratio {ratio:.1} below the 50× acceptance bar");
+        let t0 = std::time::Instant::now();
+        let r = Simulator::new(&c).run(&dag);
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(r.makespan > 0.0 && r.makespan.is_finite());
+        assert!(r.events > 0);
+        // weighted totals cover every member byte: 67M flows' worth
+        let want_cross = (dcs * (dcs - 1) * per_dc * per_dc) as f64 * 64e3;
+        assert!(
+            r.bytes_per_level[0] == want_cross,
+            "cross bytes {} vs {want_cross}",
+            r.bytes_per_level[0]
+        );
+        assert!(wall < 120.0, "1024×8 folded run too slow: {wall:.1}s");
+    }
+
     #[test]
     fn simultaneous_finishes_coalesce_into_one_event() {
         // 4 identical cross-DC transfers start and finish together: the
@@ -1120,8 +1294,9 @@ mod tests {
             let dag = random_dag(g, cluster.total_gpus(), true);
             let cal = Simulator::new(&cluster).run(&dag);
             let scan = Simulator::with_mode(&cluster, RateMode::ScanIncremental).run(&dag);
+            let fold = Simulator::with_mode(&cluster, RateMode::Folded).run(&dag);
             let rf = Simulator::reference(&cluster).run(&dag);
-            for (name, a) in [("calendar", &cal), ("scan-incremental", &scan)] {
+            for (name, a) in [("calendar", &cal), ("scan-incremental", &scan), ("folded", &fold)] {
                 prop_assert!(
                     close_rel(a.makespan, rf.makespan),
                     "{name} makespan diverged: {} vs reference {}",
@@ -1131,12 +1306,25 @@ mod tests {
                 for (i, (x, y)) in a.finish.iter().zip(&rf.finish).enumerate() {
                     prop_assert!(close_rel(*x, *y), "{name}: task {i} finish diverged: {x} vs {y}");
                 }
-                prop_assert!(a.bytes_a2a == rf.bytes_a2a, "{name}: A2A bytes diverged");
-                prop_assert!(a.bytes_ag == rf.bytes_ag, "{name}: AG bytes diverged");
-                prop_assert!(a.bytes_allreduce == rf.bytes_allreduce, "{name}: AR bytes diverged");
+                // unfolded engines accumulate the identical byte stream —
+                // exact equality; the folded engine merges zero-byte groups,
+                // which can reassociate the Kahan compensation by an ulp
+                let bytes_ok = |x: f64, y: f64| {
+                    if name == "folded" {
+                        (x - y).abs() <= 1e-12 * (1.0 + y.abs())
+                    } else {
+                        x == y
+                    }
+                };
+                prop_assert!(bytes_ok(a.bytes_a2a, rf.bytes_a2a), "{name}: A2A bytes diverged");
+                prop_assert!(bytes_ok(a.bytes_ag, rf.bytes_ag), "{name}: AG bytes diverged");
+                prop_assert!(
+                    bytes_ok(a.bytes_allreduce, rf.bytes_allreduce),
+                    "{name}: AR bytes diverged"
+                );
                 for l in 0..a.bytes_per_level.len() {
                     prop_assert!(
-                        a.bytes_per_level[l] == rf.bytes_per_level[l],
+                        bytes_ok(a.bytes_per_level[l], rf.bytes_per_level[l]),
                         "{name}: level {l} bytes diverged"
                     );
                 }
@@ -1207,6 +1395,44 @@ mod tests {
                 prop_assert!(
                     close_rel(a.finish[old], b.finish[new]),
                     "finish time moved: task {old}→{new}: {} vs {}",
+                    a.finish[old],
+                    b.finish[new]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite: permutation invariance extended to the folded engine —
+    /// relabeling tasks permutes the fold groups with them, so makespan,
+    /// byte totals and per-task finish times (through the unfold map) must
+    /// not move.
+    #[test]
+    fn folded_engine_invariant_under_task_permutation() {
+        testkit::check("sim-folded-permutation", 40, |g| {
+            let cluster = random_cluster(g);
+            let dag = random_dag(g, cluster.total_gpus(), false);
+            let perm = random_topo_perm(&dag, &mut g.rng);
+            let permuted = dag.permuted(&perm);
+            let a = Simulator::with_mode(&cluster, RateMode::Folded).run(&dag);
+            let b = Simulator::with_mode(&cluster, RateMode::Folded).run(&permuted);
+            prop_assert!(
+                close_rel(a.makespan, b.makespan),
+                "folded makespan moved under permutation: {} vs {}",
+                a.makespan,
+                b.makespan
+            );
+            let bytes_eq = |x: f64, y: f64| (x - y).abs() <= 1e-12 * (1.0 + x.abs());
+            prop_assert!(
+                bytes_eq(a.bytes_a2a, b.bytes_a2a)
+                    && bytes_eq(a.bytes_ag, b.bytes_ag)
+                    && bytes_eq(a.bytes_allreduce, b.bytes_allreduce),
+                "folded byte totals moved under permutation"
+            );
+            for (old, &new) in perm.iter().enumerate() {
+                prop_assert!(
+                    close_rel(a.finish[old], b.finish[new]),
+                    "folded finish moved: task {old}→{new}: {} vs {}",
                     a.finish[old],
                     b.finish[new]
                 );

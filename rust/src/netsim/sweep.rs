@@ -120,6 +120,8 @@ pub struct SweepGrid {
     pub base_seed: u64,
     pub mode: SweepMode,
     /// Event engine per scenario: the calendar engine by default;
+    /// [`RateMode::Folded`] runs each scenario over its symmetry-folded dag
+    /// (exact; collapses dense symmetric phases to macro-flows), while
     /// [`RateMode::ScanIncremental`]/[`RateMode::Reference`] select the
     /// pre-change baselines for perf comparisons and differential checks.
     pub engine: RateMode,
@@ -564,6 +566,37 @@ mod tests {
             assert_eq!(s.hybrid.makespan.to_bits(), p.hybrid.makespan.to_bits());
             assert_eq!(s.ep.bytes_a2a.to_bits(), p.ep.bytes_a2a.to_bits());
             assert_eq!(s.hybrid.bytes_ag.to_bits(), p.hybrid.bytes_ag.to_bits());
+        }
+    }
+
+    /// The folded engine is a drop-in [`SweepGrid::engine`] choice: same
+    /// makespans as the calendar engine on both sweep shapes (the fold is an
+    /// exact transformation, whatever the scenario emits).
+    #[test]
+    fn folded_engine_sweeps_match_the_calendar_engine() {
+        for mode in [SweepMode::Aggregate, SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 }] {
+            let grid = small_grid(mode);
+            let mut folded_grid = grid.clone();
+            folded_grid.engine = RateMode::Folded;
+            let cal = run_sweep(&grid, 2).unwrap();
+            let fold = run_sweep(&folded_grid, 2).unwrap();
+            assert_eq!(cal.len(), fold.len());
+            for (c, f) in cal.iter().zip(&fold) {
+                let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * (1.0 + b.abs());
+                assert!(
+                    close(f.ep.makespan, c.ep.makespan),
+                    "folded EP makespan {} vs calendar {}",
+                    f.ep.makespan,
+                    c.ep.makespan
+                );
+                assert!(
+                    close(f.hybrid.makespan, c.hybrid.makespan),
+                    "folded hybrid makespan {} vs calendar {}",
+                    f.hybrid.makespan,
+                    c.hybrid.makespan
+                );
+                assert!(close(f.speedup, c.speedup));
+            }
         }
     }
 

@@ -29,6 +29,23 @@
 //!   rounds — see [`parallel`] for how TP × EP × DP configs produce it.
 //! * Zero-cost barriers synchronize phase boundaries; they change neither
 //!   traffic accounting nor makespan.
+//!
+//! ## Folded phases
+//!
+//! Symmetric phases may carry [`MacroFlow`] bundles next to their plain
+//! flows: `count` identical members lowered as **one** multiplicity-weighted
+//! transfer between representative endpoints, so a dense dispatch on
+//! 1024 DCs × 8 GPUs/DC materializes ~O(D²) tasks instead of O(G²)
+//! (HybridEP §5's domain symmetry; see `netsim::fold` for the post-hoc
+//! equivalent). Phases with bundles are normally
+//! [`collective`](CommPhase::collective): the phase closes with a single
+//! bulk-synchronous barrier every GPU passes through — which is both how
+//! synchronized NCCL-style A2A/AG behaves and what makes representative
+//! endpoints gate *all* destinations. The fold is exact when the phase is
+//! genuinely symmetric (uniform upstream compute, members sharing the
+//! representatives' bottleneck containers) — the shape
+//! [`systems::aggregate::DcDense`](crate::systems::aggregate::DcDense)
+//! emits for the fig17 `per_dc` axis.
 
 pub mod parallel;
 pub mod replanner;
@@ -43,25 +60,67 @@ pub struct Flow {
     pub bytes: f64,
 }
 
+/// A symmetry-folded flow bundle: `count` identical member transfers of
+/// `bytes` each, collapsed onto a representative `(src, dst)` pair. Lowered
+/// as one [`TaskKind::Transfer`](crate::netsim::TaskKind::Transfer) with
+/// multiplicity `count`, so the O(G²) member set of a dense symmetric phase
+/// is never materialized — the simulator charges `count` shares of the
+/// representatives' bottleneck resources and completes every member
+/// together. Exact when the phase really is symmetric: all member sources
+/// reach the phase simultaneously (uniform upstream work) and the members
+/// share the representatives' bottleneck containers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MacroFlow {
+    pub src: usize,
+    pub dst: usize,
+    /// Bytes **per member**.
+    pub bytes: f64,
+    pub count: u64,
+}
+
 /// One communication phase: a set of flows released together, plus an
 /// optional per-flow setup compute on the source (message/connection setup,
 /// Table VII frequency semantics).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommPhase {
     pub flows: Vec<Flow>,
+    /// Symmetry-folded bundles riding alongside the plain flows. Phases with
+    /// macro-flows must have `setup_secs == 0` (fold per-member setup into
+    /// the plan's compute vectors instead — a single representative setup
+    /// task would mis-count the Table VII frequency effect).
+    pub macro_flows: Vec<MacroFlow>,
     /// Per-flow setup compute seconds on the source, serialized before the
     /// transfer; `0.0` emits no setup task.
     pub setup_secs: f64,
+    /// Bulk-synchronous collective phase: instead of per-destination arrival
+    /// barriers, the whole phase closes with **one** barrier joining every
+    /// arrival and every GPU's stage (NCCL-style synchronized A2A/AG). This
+    /// is what makes representative-endpoint macro-flows gate *all*
+    /// destination GPUs, not just the representatives.
+    pub collective: bool,
     pub label: &'static str,
 }
 
 impl CommPhase {
     pub fn new(flows: Vec<Flow>, label: &'static str) -> Self {
-        Self { flows, setup_secs: 0.0, label }
+        Self { flows, macro_flows: Vec::new(), setup_secs: 0.0, collective: false, label }
+    }
+
+    /// A collective phase carrying folded bundles (plus optional plain
+    /// flows): the shape of dense symmetric dispatch/combine/AG at DC-pair
+    /// granularity.
+    pub fn folded(flows: Vec<Flow>, macro_flows: Vec<MacroFlow>, label: &'static str) -> Self {
+        Self { flows, macro_flows, setup_secs: 0.0, collective: true, label }
     }
 
     pub fn total_bytes(&self) -> f64 {
-        self.flows.iter().map(|f| f.bytes).sum()
+        self.flows.iter().map(|f| f.bytes).sum::<f64>()
+            + self.macro_flows.iter().map(|f| f.bytes * f.count as f64).sum::<f64>()
+    }
+
+    /// Neither plain nor folded flows.
+    pub fn is_empty(&self) -> bool {
+        self.flows.is_empty() && self.macro_flows.is_empty()
     }
 }
 
@@ -169,6 +228,28 @@ pub fn lower_forward(plan: &Plan, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId
     cur
 }
 
+/// Macro-flow phases fold per-member setup into compute vectors (a lone
+/// representative setup task would both under-count the serialized setup and
+/// emit O(groups) stray compute tasks), and must be collective: with
+/// per-destination barriers, a bundle's arrival would gate only its
+/// *representative* destination and every other member destination would
+/// silently run ahead of its data.
+fn check_macro_phase(phase: &CommPhase) {
+    assert!(
+        phase.macro_flows.is_empty() || phase.setup_secs == 0.0,
+        "phase {:?} carries folded bundles and per-flow setup; fold the setup into \
+         pre/prologue compute instead",
+        phase.label
+    );
+    assert!(
+        phase.macro_flows.is_empty() || phase.collective,
+        "phase {:?} carries folded bundles but is not collective; representative \
+         endpoints only gate every destination through the phase's bulk barrier \
+         (build such phases with CommPhase::folded)",
+        phase.label
+    );
+}
+
 fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
     assert_eq!(lp.pre_secs.len(), g, "pre_secs arity");
     // prologue (fused SREncode)
@@ -186,9 +267,10 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
     let mut mig_stage = prologue;
     let mut mig_arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
     for phase in &lp.migrate.phases {
-        if phase.flows.is_empty() {
+        if phase.is_empty() {
             continue;
         }
+        check_macro_phase(phase);
         let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
         for f in &phase.flows {
             let mut dep = mig_stage[f.src];
@@ -197,13 +279,35 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
             }
             let t = dag.transfer(f.src, f.dst, f.bytes, Tag::AG, vec![dep], phase.label);
             arrivals[f.dst].push(t);
-            mig_arrivals[f.dst].push(t);
+            if !phase.collective {
+                mig_arrivals[f.dst].push(t);
+            }
         }
-        for m in 0..g {
-            if !arrivals[m].is_empty() {
-                let mut deps = std::mem::take(&mut arrivals[m]);
-                deps.push(mig_stage[m]);
-                mig_stage[m] = dag.barrier(deps, "ag_phase");
+        for f in &phase.macro_flows {
+            // bundles only appear in collective phases (check_macro_phase),
+            // whose bulk barrier lands in every GPU's mig_arrivals below
+            let dep = mig_stage[f.src];
+            let t = dag.transfer_n(f.src, f.dst, f.bytes, f.count, Tag::AG, vec![dep], phase.label);
+            arrivals[f.dst].push(t);
+        }
+        if phase.collective {
+            // one bulk-synchronous barrier: every GPU's stage passes through
+            // it, so folded arrivals gate all destinations, and it stands in
+            // for per-GPU migrate arrivals on every expert
+            let mut deps: Vec<TaskId> = arrivals.into_iter().flatten().collect();
+            deps.extend(mig_stage.iter().copied());
+            let bar = dag.barrier(deps, "ag_phase");
+            for m in 0..g {
+                mig_stage[m] = bar;
+                mig_arrivals[m].push(bar);
+            }
+        } else {
+            for m in 0..g {
+                if !arrivals[m].is_empty() {
+                    let mut deps = std::mem::take(&mut arrivals[m]);
+                    deps.push(mig_stage[m]);
+                    mig_stage[m] = dag.barrier(deps, "ag_phase");
+                }
             }
         }
     }
@@ -218,9 +322,10 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
         assert_eq!(round.expert_secs.len(), g, "expert_secs arity");
         let mut stage = pre.clone();
         for phase in &round.dispatch {
-            if phase.flows.is_empty() {
+            if phase.is_empty() {
                 continue;
             }
+            check_macro_phase(phase);
             let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
             for f in &phase.flows {
                 let mut dep = stage[f.src];
@@ -230,11 +335,26 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
                 let t = dag.transfer(f.src, f.dst, f.bytes, Tag::A2A, vec![dep], phase.label);
                 arrivals[f.dst].push(t);
             }
-            for m in 0..g {
-                if !arrivals[m].is_empty() {
-                    let mut deps = std::mem::take(&mut arrivals[m]);
-                    deps.push(stage[m]);
-                    stage[m] = dag.barrier(deps, "disp_phase");
+            for f in &phase.macro_flows {
+                let dep = stage[f.src];
+                let t = dag
+                    .transfer_n(f.src, f.dst, f.bytes, f.count, Tag::A2A, vec![dep], phase.label);
+                arrivals[f.dst].push(t);
+            }
+            if phase.collective {
+                let mut deps: Vec<TaskId> = arrivals.into_iter().flatten().collect();
+                deps.extend(stage.iter().copied());
+                let bar = dag.barrier(deps, "disp_phase");
+                for s in stage.iter_mut() {
+                    *s = bar;
+                }
+            } else {
+                for m in 0..g {
+                    if !arrivals[m].is_empty() {
+                        let mut deps = std::mem::take(&mut arrivals[m]);
+                        deps.push(stage[m]);
+                        stage[m] = dag.barrier(deps, "disp_phase");
+                    }
                 }
             }
         }
@@ -249,7 +369,7 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
         // combine: retrace dispatch phases in reverse with swapped endpoints
         let mut cstage = expert.clone();
         for phase in round.dispatch.iter().rev() {
-            if phase.flows.is_empty() {
+            if phase.is_empty() {
                 continue;
             }
             let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
@@ -258,11 +378,32 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
                     dag.transfer(f.dst, f.src, f.bytes, Tag::A2A, vec![cstage[f.dst]], "combine");
                 arrivals[f.src].push(t);
             }
-            for m in 0..g {
-                if !arrivals[m].is_empty() {
-                    let mut deps = std::mem::take(&mut arrivals[m]);
-                    deps.push(cstage[m]);
-                    cstage[m] = dag.barrier(deps, "comb_phase");
+            for f in &phase.macro_flows {
+                let t = dag.transfer_n(
+                    f.dst,
+                    f.src,
+                    f.bytes,
+                    f.count,
+                    Tag::A2A,
+                    vec![cstage[f.dst]],
+                    "combine",
+                );
+                arrivals[f.src].push(t);
+            }
+            if phase.collective {
+                let mut deps: Vec<TaskId> = arrivals.into_iter().flatten().collect();
+                deps.extend(cstage.iter().copied());
+                let bar = dag.barrier(deps, "comb_phase");
+                for s in cstage.iter_mut() {
+                    *s = bar;
+                }
+            } else {
+                for m in 0..g {
+                    if !arrivals[m].is_empty() {
+                        let mut deps = std::mem::take(&mut arrivals[m]);
+                        deps.push(cstage[m]);
+                        cstage[m] = dag.barrier(deps, "comb_phase");
+                    }
                 }
             }
         }
@@ -275,6 +416,10 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
     // TP activation All-Reduce: one ring phase within each tensor-parallel
     // group, gated on the layer's rounds (the expert outputs it reduces)
     if let Some(phase) = &lp.tp_sync {
+        assert!(
+            phase.macro_flows.is_empty(),
+            "tp_sync phases are intra-group rings; folded bundles are not supported there"
+        );
         if !phase.flows.is_empty() {
             let stage: Vec<TaskId> = (0..g)
                 .map(|m| {
@@ -372,10 +517,11 @@ mod tests {
         let combine: Vec<_> = dag.tasks.iter().filter(|t| t.label == "combine").collect();
         assert_eq!(combine.len(), 1);
         match combine[0].kind {
-            TaskKind::Transfer { src, dst, bytes, tag } => {
+            TaskKind::Transfer { src, dst, bytes, tag, count } => {
                 assert_eq!((src, dst), (0, 1));
                 assert_eq!(bytes, 3e6);
                 assert_eq!(tag, Tag::A2A);
+                assert_eq!(count, 1);
             }
             _ => panic!("combine must be a transfer"),
         }
@@ -427,6 +573,161 @@ mod tests {
             synced >= base + 1e6 / bw,
             "tp sync must serialize after the rounds: {base} → {synced}"
         );
+    }
+
+    /// A folded collective dispatch must lower to one macro-transfer per
+    /// bundle, close behind a single bulk barrier that gates *every* GPU,
+    /// and retrace in reverse on combine — and for a symmetric phase the
+    /// folded lowering must simulate to the same makespan as the fully
+    /// expanded one.
+    #[test]
+    fn folded_phase_lowers_to_macro_transfers_and_matches_expanded() {
+        let (dcs, per_dc) = (2usize, 2usize);
+        let g = dcs * per_dc;
+        let bytes = 2e6;
+        // expanded: every ordered cross-DC GPU pair as a plain flow
+        let mut plain = Vec::new();
+        for i in 0..g {
+            for j in 0..g {
+                if i / per_dc != j / per_dc {
+                    plain.push(Flow { src: i, dst: j, bytes });
+                }
+            }
+        }
+        // folded: one count-4 bundle per ordered DC pair
+        let folded_macros = vec![
+            MacroFlow { src: 0, dst: 2, bytes, count: 4 },
+            MacroFlow { src: 2, dst: 0, bytes, count: 4 },
+        ];
+        let mk_plan = |dispatch: CommPhase| Plan {
+            gpus: g,
+            layers: vec![LayerPlan {
+                migrate: MigratePlan::none(),
+                pre_secs: vec![0.1; g],
+                rounds: vec![Round { dispatch: vec![dispatch], expert_secs: vec![0.2; g] }],
+                tp_sync: None,
+            }],
+        };
+        let expanded = mk_plan(CommPhase::folded(plain, Vec::new(), "dispatch"));
+        let folded = mk_plan(CommPhase::folded(Vec::new(), folded_macros, "dispatch"));
+        assert_eq!(expanded.a2a_bytes(), folded.a2a_bytes(), "bundles must weight traffic");
+        let lower = |p: &Plan| {
+            let mut dag = Dag::new();
+            let s = dag.barrier(vec![], "s");
+            let entry = vec![s; g];
+            let exits = lower_forward(p, &mut dag, &entry);
+            dag.barrier(exits, "end");
+            dag
+        };
+        let fd = lower(&folded);
+        let ed = lower(&expanded);
+        assert_eq!(fd.traffic_by_tag(Tag::A2A), ed.traffic_by_tag(Tag::A2A));
+        assert!(fd.transfer_tasks() < ed.transfer_tasks(), "folded lowering must shrink");
+        assert_eq!(fd.member_transfers(), ed.member_transfers());
+        let cluster = crate::cluster::presets::dcs_x_gpus(dcs, per_dc, 10.0, 128.0);
+        let a = Simulator::new(&cluster).run(&fd);
+        let b = Simulator::new(&cluster).run(&ed);
+        assert!(
+            (a.makespan - b.makespan).abs() <= 1e-9 * (1.0 + b.makespan),
+            "folded {} vs expanded {}",
+            a.makespan,
+            b.makespan
+        );
+        // the collective barrier really gates every GPU: each expert must
+        // start only after the cross-DC wire time
+        let bw = cluster.levels[0].bandwidth;
+        let lat = cluster.levels[0].latency;
+        let per_member = 4.0 * bytes / bw; // 4 members share each uplink pool
+        assert!(a.makespan >= 0.1 + lat + per_member + 0.2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not collective")]
+    fn non_collective_macro_phase_is_rejected() {
+        // a bundle behind per-destination barriers would gate only its
+        // representative destination — lowering must refuse, not mis-gate
+        let mut phase = CommPhase::folded(
+            Vec::new(),
+            vec![MacroFlow { src: 0, dst: 1, bytes: 1.0, count: 2 }],
+            "bad",
+        );
+        phase.collective = false;
+        let plan = Plan {
+            gpus: 2,
+            layers: vec![LayerPlan {
+                migrate: MigratePlan::none(),
+                pre_secs: vec![0.0, 0.0],
+                rounds: vec![Round { dispatch: vec![phase], expert_secs: vec![0.0, 0.0] }],
+                tp_sync: None,
+            }],
+        };
+        let mut dag = Dag::new();
+        let s = dag.barrier(vec![], "s");
+        lower_forward(&plan, &mut dag, &[s, s]);
+    }
+
+    #[test]
+    #[should_panic(expected = "folded bundles and per-flow setup")]
+    fn macro_phase_with_setup_is_rejected() {
+        let mut phase = CommPhase::folded(
+            Vec::new(),
+            vec![MacroFlow { src: 0, dst: 1, bytes: 1.0, count: 2 }],
+            "bad",
+        );
+        phase.setup_secs = 1e-3;
+        let plan = Plan {
+            gpus: 2,
+            layers: vec![LayerPlan {
+                migrate: MigratePlan::none(),
+                pre_secs: vec![0.0, 0.0],
+                rounds: vec![Round { dispatch: vec![phase], expert_secs: vec![0.0, 0.0] }],
+                tp_sync: None,
+            }],
+        };
+        let mut dag = Dag::new();
+        let s = dag.barrier(vec![], "s");
+        lower_forward(&plan, &mut dag, &[s, s]);
+    }
+
+    #[test]
+    fn folded_migrate_phase_gates_every_expert() {
+        // a collective AG bundle arriving at the representative of DC 1 must
+        // still gate the expert compute of the *other* GPU in DC 1
+        let plan = Plan {
+            gpus: 4,
+            layers: vec![LayerPlan {
+                migrate: MigratePlan {
+                    prologue_secs: None,
+                    prologue_label: "",
+                    phases: vec![CommPhase::folded(
+                        Vec::new(),
+                        vec![MacroFlow { src: 0, dst: 2, bytes: 5e6, count: 4 }],
+                        "ag",
+                    )],
+                },
+                pre_secs: vec![0.0; 4],
+                rounds: vec![Round { dispatch: Vec::new(), expert_secs: vec![0.3; 4] }],
+                tp_sync: None,
+            }],
+        };
+        let mut dag = Dag::new();
+        let s = dag.barrier(vec![], "s");
+        let exits = lower_forward(&plan, &mut dag, &[s, s, s, s]);
+        dag.barrier(exits, "end");
+        let cluster = crate::cluster::presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let r = Simulator::new(&cluster).run(&dag);
+        let bw = cluster.levels[0].bandwidth;
+        let lat = cluster.levels[0].latency;
+        // every expert (incl. GPU 3, a non-representative) waits for the AG
+        let wire = lat + 4.0 * 5e6 / bw;
+        for t in dag.tasks.iter().enumerate().filter(|(_, t)| t.label == "expert") {
+            assert!(
+                r.finish[t.0] >= wire + 0.3 - 1e-9,
+                "expert {} started before the folded AG landed: {}",
+                t.0,
+                r.finish[t.0]
+            );
+        }
     }
 
     #[test]

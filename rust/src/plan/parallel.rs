@@ -187,10 +187,22 @@ fn merged_phase(
     let mut flows = Vec::new();
     for (r, p) in per_replica.iter().enumerate() {
         if let Some(p) = p {
+            assert!(
+                p.macro_flows.is_empty(),
+                "folded bundles do not compose with TP/DP member expansion yet \
+                 (phase {:?}) — plan the folded system under the identity config",
+                p.label
+            );
             flows.extend(expand_flows(&p.flows, cfg, r));
         }
     }
-    CommPhase { flows, setup_secs: proto.setup_secs, label: proto.label }
+    CommPhase {
+        flows,
+        macro_flows: Vec::new(),
+        setup_secs: proto.setup_secs,
+        collective: proto.collective,
+        label: proto.label,
+    }
 }
 
 /// Stitch the per-replica virtual plans into one physical plan over all `g`
@@ -291,7 +303,7 @@ fn inject_tp_sync(plan: &mut Plan, w: &MoEWorkload, cfg: &ParallelismConfig) {
         }
     }
     for layer in &mut plan.layers {
-        layer.tp_sync = Some(CommPhase { flows: flows.clone(), setup_secs: 0.0, label: "tp_sync" });
+        layer.tp_sync = Some(CommPhase::new(flows.clone(), "tp_sync"));
     }
 }
 

@@ -453,12 +453,18 @@ pub fn table7() -> Table {
 
 pub struct Fig17Row {
     pub dcs: usize,
+    /// GPUs per DC: 1 = the paper's DC-granularity aggregate model; 4/8 =
+    /// the symmetry-folded dense model ([`DcDense`](crate::systems::aggregate::DcDense)).
+    pub per_dc: usize,
     pub bw_gbps: f64,
     pub fixed: &'static str,
-    /// Domain size actually simulated (the mode's target snapped to the
-    /// nearest divisor of `dcs` — e.g. 8, not 10, on the 1024-DC row).
+    /// Domain size actually simulated, in DCs (the mode's target snapped to
+    /// the nearest divisor of `dcs` — e.g. 8, not 10, on the 1024-DC row).
     pub s_ed: usize,
     pub speedup: f64,
+    /// How many times this DC count was requested (`> 1` = duplicate
+    /// requests collapsed into this row; the table notes the alias).
+    pub requested: usize,
 }
 
 /// The divisor of `n` closest to `target` (ties break toward the smaller
@@ -473,15 +479,46 @@ fn nearest_divisor(n: usize, target: usize) -> usize {
     best
 }
 
+/// Collapse duplicate requested DC counts (keep-first order), remembering
+/// how often each was asked for. Duplicates otherwise multiply into
+/// identical rows — every (mode, bandwidth, per_dc) series would simulate
+/// and print the aliased count again.
+fn dedupe_counts(counts: &[usize]) -> Vec<(usize, usize)> {
+    let mut out: Vec<(usize, usize)> = Vec::new();
+    for &n in counts {
+        match out.iter_mut().find(|(m, _)| *m == n) {
+            Some((_, times)) => *times += 1,
+            None => out.push((n, 1)),
+        }
+    }
+    out
+}
+
 pub fn fig17(dc_counts: &[usize]) -> (Table, Vec<Fig17Row>) {
     fig17_with_threads(dc_counts, crate::netsim::sweep::default_threads())
 }
 
 /// [`fig17`] with an explicit worker count (the CLI's `--threads`).
 pub fn fig17_with_threads(dc_counts: &[usize], threads: usize) -> (Table, Vec<Fig17Row>) {
+    fig17_axes(dc_counts, &[1], threads)
+}
+
+/// Fig. 17 with the `per_dc` axis: every entry of `per_dcs` adds a series of
+/// rows with that many GPUs per DC. `per_dc = 1` reproduces the paper's
+/// DC-granularity aggregate rows across the full bandwidth ladder;
+/// `per_dc > 1` rows use the symmetry-folded dense model
+/// ([`DcDense`](crate::systems::aggregate::DcDense)) with a single-layer
+/// workload at the 5 Gbps mid-ladder point (one row per mode × count —
+/// the folded flow count is ~O(D²), but a 1024 × 8 row still simulates
+/// 8192 GPUs' worth of members; see EXPERIMENTS.md for the methodology).
+pub fn fig17_axes(
+    dc_counts: &[usize],
+    per_dcs: &[usize],
+    threads: usize,
+) -> (Table, Vec<Fig17Row>) {
     let mut table = Table::new(
         "Fig. 17 — HybridEP vs EP speedup at DC granularity (SimAI-substitute flow simulation)",
-        &["mode", "bandwidth", "#DCs", "S_ED", "EP iter", "HybridEP iter", "speedup"],
+        &["mode", "bandwidth", "#DCs", "GPUs/DC", "S_ED", "EP iter", "HybridEP iter", "speedup"],
     );
     let w = MoEWorkload {
         tokens_per_gpu: 8192,
@@ -498,49 +535,84 @@ pub fn fig17_with_threads(dc_counts: &[usize], threads: usize) -> (Table, Vec<Fi
         mode: &'static str,
         bw: f64,
         n: usize,
+        per_dc: usize,
         s_ed: usize,
+        requested: usize,
     }
+    let counts = dedupe_counts(dc_counts);
     let mut specs = Vec::new();
     for (mode, fixed_s) in [("fixed S_ED=10", true), ("fixed p=0.9", false)] {
-        for &bw in &[1.25, 2.5, 5.0, 10.0] {
-            for &n in dc_counts {
-                // snap the target domain size to the nearest divisor of `n`,
-                // so counts the targets don't divide (e.g. the 1024-DC
-                // acceptance row: S_ED 10 → 8, p-derived 102 → 128) still
-                // get a row instead of being silently dropped; the paper's
-                // 50/100/200/500/1000 ladder hits its targets exactly
-                let target = if fixed_s { 10.min(n) } else { (n / 10).max(2) };
-                let s_ed = nearest_divisor(n, target);
-                specs.push(Spec { mode, bw, n, s_ed });
+        for &per_dc in per_dcs {
+            // per_dc = 1: the paper's bandwidth ladder; per_dc > 1: the
+            // folded dense model at the mid-ladder point (each row already
+            // simulates D·per_dc GPUs' worth of member flows)
+            let bws: &[f64] = if per_dc == 1 { &[1.25, 2.5, 5.0, 10.0] } else { &[5.0] };
+            for &bw in bws {
+                for &(n, requested) in &counts {
+                    // snap the target domain size to the nearest divisor of
+                    // `n`, so counts the targets don't divide (e.g. the
+                    // 1024-DC acceptance row: S_ED 10 → 8, p-derived
+                    // 102 → 128) still get a row instead of being silently
+                    // dropped; the paper's 50/100/200/500/1000 ladder hits
+                    // its targets exactly
+                    let target = if fixed_s { 10.min(n) } else { (n / 10).max(2) };
+                    let s_ed = nearest_divisor(n, target);
+                    specs.push(Spec { mode, bw, n, per_dc, s_ed, requested });
+                }
             }
         }
     }
     // fan the grid across cores: scenarios are independent simulations
     // (netsim::sweep's harness preserves grid order and determinism)
-    let times = crate::netsim::sweep::parallel_map(
-        &specs,
-        threads,
-        |_, s| {
+    let times = crate::netsim::sweep::parallel_map(&specs, threads, |_, s| {
+        if s.per_dc == 1 {
             let cluster = presets::flat_dcs(s.n, s.bw);
             let ctx = SchedCtx::new(&cluster, &w, &routing);
             let ep_t = AggregateHybrid::ep().iteration_time(&ctx);
             let hy_t = AggregateHybrid::hybrid(s.s_ed, w.pe_bytes() / 50.0).iteration_time(&ctx);
             (ep_t, hy_t)
-        },
-    );
+        } else {
+            use crate::systems::aggregate::DcDense;
+            // one MoE layer: the dense per_dc rows are layer-symmetric, so
+            // the EP/Hybrid ratio is layer-count-invariant and one layer
+            // keeps the 1024-DC × 8-GPU row inside the CI smoke budget
+            let mut w1 = w;
+            w1.moe_layers = 1;
+            let cluster = presets::dcs_x_gpus(s.n, s.per_dc, s.bw, presets::PCIE_GBPS);
+            let ctx = SchedCtx::new(&cluster, &w1, &routing);
+            let ep_t = DcDense::ep(s.n, s.per_dc).iteration_time(&ctx);
+            let hy_t = DcDense::hybrid(s.n, s.per_dc, s.s_ed, w1.pe_bytes() / 50.0)
+                .iteration_time(&ctx);
+            (ep_t, hy_t)
+        }
+    });
     let mut rows = Vec::new();
     for (s, (ep_t, hy_t)) in specs.iter().zip(times) {
         let sp = ep_t / hy_t;
+        let dcs_cell = if s.requested > 1 {
+            format!("{} (requested ×{})", s.n, s.requested)
+        } else {
+            s.n.to_string()
+        };
         table.row(vec![
             s.mode.to_string(),
             format!("{} Gbps", s.bw),
-            s.n.to_string(),
+            dcs_cell,
+            s.per_dc.to_string(),
             s.s_ed.to_string(),
             crate::util::fmt_secs(ep_t),
             crate::util::fmt_secs(hy_t),
             speedup(sp),
         ]);
-        rows.push(Fig17Row { dcs: s.n, bw_gbps: s.bw, fixed: s.mode, s_ed: s.s_ed, speedup: sp });
+        rows.push(Fig17Row {
+            dcs: s.n,
+            per_dc: s.per_dc,
+            bw_gbps: s.bw,
+            fixed: s.mode,
+            s_ed: s.s_ed,
+            speedup: sp,
+            requested: s.requested,
+        });
     }
     (table, rows)
 }
@@ -1079,6 +1151,55 @@ mod tests {
             assert_eq!(r.dcs, 1024);
             assert!(r.speedup.is_finite() && r.speedup > 0.5, "1024-DC speedup {}", r.speedup);
         }
+    }
+
+    /// Satellite regression (bugfix): duplicate requested DC counts used to
+    /// multiply into identical rows in every (mode, bandwidth) series; they
+    /// must collapse onto the first occurrence, with the alias recorded.
+    #[test]
+    fn fig17_duplicate_requested_counts_collapse_with_alias() {
+        let (_t, base) = fig17_with_threads(&[50], 2);
+        let (table, rows) = fig17_with_threads(&[50, 50, 50], 2);
+        assert_eq!(rows.len(), base.len(), "duplicates must not add rows");
+        assert!(rows.iter().all(|r| r.dcs == 50 && r.requested == 3));
+        // the alias is visible in the rendered row label
+        let rendered = table.render();
+        assert!(
+            rendered.contains("50 (requested ×3)"),
+            "alias note missing from the table:\n{rendered}"
+        );
+        // distinct counts are untouched
+        let (_t, mixed) = fig17_with_threads(&[50, 100, 50], 2);
+        let fifty: Vec<_> = mixed.iter().filter(|r| r.dcs == 50).collect();
+        let hundred: Vec<_> = mixed.iter().filter(|r| r.dcs == 100).collect();
+        assert_eq!(fifty.len(), base.len());
+        assert_eq!(hundred.len(), base.len());
+        assert!(fifty.iter().all(|r| r.requested == 2));
+        assert!(hundred.iter().all(|r| r.requested == 1));
+    }
+
+    /// The fig17 `per_dc` axis: folded dense rows at multiple GPUs per DC
+    /// ride along the aggregate rows, one per mode at the mid-ladder
+    /// bandwidth, and produce sane speedups.
+    #[test]
+    fn fig17_per_dc_axis_adds_folded_dense_rows() {
+        let (_t, rows) = fig17_axes(&[64], &[1, 4], 2);
+        let flat: Vec<_> = rows.iter().filter(|r| r.per_dc == 1).collect();
+        let dense: Vec<_> = rows.iter().filter(|r| r.per_dc == 4).collect();
+        assert_eq!(flat.len(), 8, "aggregate rows keep the full bandwidth ladder");
+        assert_eq!(dense.len(), 2, "one folded dense row per mode");
+        for r in &dense {
+            assert_eq!(r.dcs, 64);
+            assert_eq!(r.bw_gbps, 5.0);
+            assert!(
+                r.speedup.is_finite() && r.speedup > 0.5,
+                "per_dc=4 speedup {} implausible",
+                r.speedup
+            );
+        }
+        // the fixed-S mode really snapped its DC-unit domain: target 10 is
+        // not a divisor of 64, so the row simulates S_ED = 8
+        assert!(dense.iter().any(|r| r.fixed.starts_with("fixed S") && r.s_ed == 8));
     }
 
     #[test]

@@ -7,9 +7,16 @@
 //! and ingress load on every node). That collapses O(G²) transfers to O(G),
 //! keeping 1000-DC simulations tractable — the same modeling granularity the
 //! paper uses for its SimAI study (one GPU per DC, §III).
+//!
+//! [`DcDense`] extends the scale axis to **multiple GPUs per DC** (the fig17
+//! `per_dc` rows): the ring equivalence breaks there (most ring edges would
+//! be intra-DC and under-count the shared uplink), so it emits the true
+//! dense pattern with its symmetric cross-DC members born folded into
+//! multiplicity-weighted [`MacroFlow`] bundles — ~O(D²) materialized flows
+//! standing for the O(G²) member set.
 
 use super::{SchedCtx, System};
-use crate::plan::{CommPhase, Flow, LayerPlan, MigratePlan, Plan, Round};
+use crate::plan::{CommPhase, Flow, LayerPlan, MacroFlow, MigratePlan, Plan, Round};
 
 /// Aggregate HybridEP at a single level: domain size `s_ed` over `G` flat
 /// workers; `s_ed = 1` is aggregate vanilla EP.
@@ -128,7 +135,12 @@ impl System for AggregateHybrid {
                 phases: if ag_flows.is_empty() {
                     Vec::new()
                 } else {
-                    vec![CommPhase { flows: ag_flows, setup_secs: ag_setup, label: "ag" }]
+                    vec![CommPhase {
+                        flows: ag_flows,
+                        setup_secs: ag_setup,
+                        label: "ag",
+                        ..Default::default()
+                    }]
                 },
             },
             pre_secs: vec![ctx.pre_expert_secs(); g],
@@ -136,7 +148,216 @@ impl System for AggregateHybrid {
                 dispatch: if disp_flows.is_empty() {
                     Vec::new()
                 } else {
-                    vec![CommPhase { flows: disp_flows, setup_secs: a2a_setup, label: "dispatch" }]
+                    vec![CommPhase {
+                        flows: disp_flows,
+                        setup_secs: a2a_setup,
+                        label: "dispatch",
+                        ..Default::default()
+                    }]
+                },
+                expert_secs: vec![expert_secs; g],
+            }],
+            tp_sync: None,
+        };
+        Plan { gpus: g, layers: vec![layer; w.moe_layers] }
+    }
+}
+
+/// Symmetry-folded dense schedules for `dcs × per_dc` clusters — the fig17
+/// `per_dc` axis at 1024 DCs × {4, 8} GPUs/DC.
+///
+/// [`AggregateHybrid`]'s O(G) ring rests on one GPU per DC (each worker's
+/// whole egress rides its own uplink); with `per_dc > 1` a ring shift sends
+/// most traffic to *intra-DC* neighbours and under-counts the shared uplink
+/// by `per_dc`×. `DcDense` instead emits the **true dense** pattern with its
+/// symmetric cross-DC members born folded ([`MacroFlow`], HybridEP §5's
+/// domain symmetry):
+///
+/// * **EP** (`s_ed_gpus == 1`): dense A2A — one count-`per_dc²` bundle per
+///   ordered DC pair (the O(G²) member set collapses to ~O(D²)) plus plain
+///   intra-DC flows; per-peer setup `(G−1)·ovh` folded into pre compute
+///   (Table VII frequency tax).
+/// * **Hybrid** (`s_ed_gpus = s_ed_dcs · per_dc`): dense AllGather inside
+///   each expert domain (cross-DC pairs folded, `per_dc²` members each) and
+///   a mirror-shift A2A to the same-offset GPU of the next domain, folded
+///   per DC (`per_dc` members per uplink); setup `(domains−1 + S−1)·ovh`.
+///
+/// All folded phases are [`collective`](CommPhase::collective), matching
+/// synchronized NCCL A2A/AG — which is also what makes the representative
+/// endpoints exact: the workload is uniform, so every member source reaches
+/// the phase simultaneously.
+#[derive(Clone, Copy, Debug)]
+pub struct DcDense {
+    pub dcs: usize,
+    pub per_dc: usize,
+    /// Expert-domain size in GPUs: `1` = pure EP (no migration), otherwise a
+    /// multiple of `per_dc` (whole DCs — `s_ed_dcs · per_dc`).
+    pub s_ed_gpus: usize,
+    /// transmitted expert bytes (post-compression); `None` = raw `P_E`
+    pub pe_tx_bytes: Option<f64>,
+    /// per-peer message setup (Table VII frequency semantics), folded into
+    /// pre compute — macro bundles cannot carry per-member setup tasks
+    pub msg_overhead_secs: f64,
+}
+
+impl DcDense {
+    /// Pure EP: dense A2A over all `dcs · per_dc` GPUs, folded per DC pair.
+    pub fn ep(dcs: usize, per_dc: usize) -> Self {
+        Self {
+            dcs,
+            per_dc,
+            s_ed_gpus: 1,
+            pe_tx_bytes: None,
+            msg_overhead_secs: DEFAULT_MSG_OVERHEAD,
+        }
+    }
+
+    /// Hybrid with an expert domain of `s_ed_dcs` whole DCs.
+    pub fn hybrid(dcs: usize, per_dc: usize, s_ed_dcs: usize, pe_tx_bytes: f64) -> Self {
+        assert!(s_ed_dcs >= 1 && dcs % s_ed_dcs == 0, "domain must tile the DCs");
+        Self {
+            dcs,
+            per_dc,
+            s_ed_gpus: s_ed_dcs * per_dc,
+            pe_tx_bytes: Some(pe_tx_bytes),
+            msg_overhead_secs: DEFAULT_MSG_OVERHEAD,
+        }
+    }
+
+    /// Data proportion still on A2A (§V-B mapping over all GPUs; coincides
+    /// with the DC-level mapping for whole-DC domains).
+    pub fn p(&self) -> f64 {
+        crate::model::solver::p_of_domain(self.dcs * self.per_dc, self.s_ed_gpus)
+    }
+}
+
+impl System for DcDense {
+    fn name(&self) -> &'static str {
+        if self.s_ed_gpus == 1 {
+            "EP(dc-dense)"
+        } else {
+            "HybridEP(dc-dense)"
+        }
+    }
+
+    fn plan_forward(&self, ctx: &SchedCtx) -> Plan {
+        let (dcs, per_dc) = (self.dcs, self.per_dc);
+        let g = dcs * per_dc;
+        assert_eq!(ctx.gpus(), g, "cluster shape must match dcs × per_dc");
+        let s = self.s_ed_gpus;
+        assert!(s == 1 || (s % per_dc == 0 && g % s == 0), "domain must be whole DCs");
+        let w = ctx.workload;
+        let p = self.p();
+        let d = w.d_bytes() * w.k as f64;
+        let pe = self.pe_tx_bytes.unwrap_or_else(|| w.pe_bytes());
+        let expert_secs = ctx.expert_secs((w.tokens_per_gpu * w.k) as f64);
+        let domains = g / s;
+        let n_pe = w.experts_per_gpu as f64 * pe;
+
+        let mut ag_flows = Vec::new();
+        let mut ag_macros = Vec::new();
+        let mut setup = 0.0;
+        if s > 1 {
+            // dense AllGather inside each domain: every GPU receives every
+            // domain peer's experts; cross-DC member groups fold per DC pair
+            let s_dcs = s / per_dc;
+            for dom in 0..domains {
+                let base_dc = dom * s_dcs;
+                for a in 0..s_dcs {
+                    for b in 0..s_dcs {
+                        let (dca, dcb) = (base_dc + a, base_dc + b);
+                        if a == b {
+                            for i in 0..per_dc {
+                                for j in 0..per_dc {
+                                    if i != j {
+                                        ag_flows.push(Flow {
+                                            src: dca * per_dc + i,
+                                            dst: dca * per_dc + j,
+                                            bytes: n_pe,
+                                        });
+                                    }
+                                }
+                            }
+                        } else {
+                            ag_macros.push(MacroFlow {
+                                src: dca * per_dc,
+                                dst: dcb * per_dc,
+                                bytes: n_pe,
+                                count: (per_dc * per_dc) as u64,
+                            });
+                        }
+                    }
+                }
+            }
+            setup += (s - 1) as f64 * self.msg_overhead_secs;
+        }
+
+        let mut disp_flows = Vec::new();
+        let mut disp_macros = Vec::new();
+        if s == 1 {
+            // dense A2A: per-pair payload d/G; cross-DC pairs fold per DC pair
+            let pp = d / g as f64;
+            for dca in 0..dcs {
+                for dcb in 0..dcs {
+                    if dca == dcb {
+                        for i in 0..per_dc {
+                            for j in 0..per_dc {
+                                if i != j {
+                                    disp_flows.push(Flow {
+                                        src: dca * per_dc + i,
+                                        dst: dca * per_dc + j,
+                                        bytes: pp,
+                                    });
+                                }
+                            }
+                        }
+                    } else {
+                        disp_macros.push(MacroFlow {
+                            src: dca * per_dc,
+                            dst: dcb * per_dc,
+                            bytes: pp,
+                            count: (per_dc * per_dc) as u64,
+                        });
+                    }
+                }
+            }
+            setup += (g - 1) as f64 * self.msg_overhead_secs;
+        } else if domains > 1 {
+            // mirror shift: each GPU's aggregate cross-domain egress goes to
+            // the same-offset GPU of the next domain — all `per_dc` flows of
+            // a DC share its uplink, so they fold per source DC
+            let a2a_bytes = p * d * (g as f64 - 1.0) / g as f64;
+            let s_dcs = s / per_dc;
+            for dc in 0..dcs {
+                let dst_dc = (dc + s_dcs) % dcs;
+                disp_macros.push(MacroFlow {
+                    src: dc * per_dc,
+                    dst: dst_dc * per_dc,
+                    bytes: a2a_bytes,
+                    count: per_dc as u64,
+                });
+            }
+            setup += (domains - 1) as f64 * self.msg_overhead_secs;
+        }
+
+        let layer = LayerPlan {
+            migrate: MigratePlan {
+                prologue_secs: None,
+                prologue_label: "",
+                phases: if ag_flows.is_empty() && ag_macros.is_empty() {
+                    Vec::new()
+                } else {
+                    vec![CommPhase::folded(ag_flows, ag_macros, "ag")]
+                },
+            },
+            // per-peer connection setup rides the pre-compute stage (macro
+            // bundles cannot carry per-member setup tasks)
+            pre_secs: vec![ctx.pre_expert_secs() + setup; g],
+            rounds: vec![Round {
+                dispatch: if disp_flows.is_empty() && disp_macros.is_empty() {
+                    Vec::new()
+                } else {
+                    vec![CommPhase::folded(disp_flows, disp_macros, "dispatch")]
                 },
                 expert_secs: vec![expert_secs; g],
             }],
@@ -211,6 +432,87 @@ mod tests {
         // S_ED = 1 (p = 1) is a candidate too: at g = 8, p = 0.9 is closer
         // to pure EP (dist 0.1) than to S_ED = 2 (p = 0.75, dist 0.15)
         assert_eq!(AggregateHybrid::with_p(8, 0.9, 1.0).s_ed, 1);
+    }
+
+    #[test]
+    fn dc_dense_materializes_od2_flows_with_full_member_weight() {
+        let (dcs, per_dc) = (8usize, 4usize);
+        let cluster = presets::dcs_x_gpus(dcs, per_dc, 10.0, 128.0);
+        let w = w();
+        let routing = Routing::uniform(1, 1, 1, 1);
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let g = dcs * per_dc;
+        let dag = DcDense::ep(dcs, per_dc).build_iteration(&ctx);
+        // dense member count: every ordered GPU pair, dispatch + combine, per layer
+        let want_members = 2 * g * (g - 1) * w.moe_layers;
+        assert_eq!(dag.member_transfers(), want_members);
+        // materialized: cross pairs fold per DC pair
+        let per_phase = dcs * (dcs - 1) + dcs * per_dc * (per_dc - 1);
+        assert_eq!(dag.transfer_tasks(), 2 * per_phase * w.moe_layers);
+        assert_eq!(dag.frequency_by_tag(crate::netsim::Tag::A2A), want_members);
+        // member-weighted traffic matches the dense closed form
+        let d = w.d_bytes() * w.k as f64;
+        let want_a2a = 2.0 * d * (g as f64 - 1.0) / g as f64 * g as f64 * w.moe_layers as f64;
+        let got = dag.traffic_by_tag(crate::netsim::Tag::A2A);
+        assert!((got - want_a2a).abs() / want_a2a < 1e-9, "{got} vs {want_a2a}");
+        // hybrid with whole-DC domains: O(D) dispatch + small folded AG
+        let hy = DcDense::hybrid(dcs, per_dc, 2, w.pe_bytes() / 50.0);
+        let hdag = hy.build_iteration(&ctx);
+        assert!(
+            hdag.transfer_tasks() < dag.transfer_tasks() / 2,
+            "hybrid must materialize fewer flows: {} vs {}",
+            hdag.transfer_tasks(),
+            dag.transfer_tasks()
+        );
+        let want_ag = (hy.s_ed_gpus - 1) as f64
+            * w.experts_per_gpu as f64
+            * (w.pe_bytes() / 50.0)
+            * g as f64
+            * w.moe_layers as f64;
+        let got_ag = hdag.traffic_by_tag(crate::netsim::Tag::AG);
+        assert!((got_ag - want_ag).abs() / want_ag < 1e-9, "{got_ag} vs {want_ag}");
+    }
+
+    /// At one GPU per DC the dense folded schedule and the aggregate ring
+    /// are rate-equivalent under max-min fairness (same per-uplink load), so
+    /// the two EP models must simulate to the same makespan.
+    #[test]
+    fn dc_dense_ep_matches_aggregate_ring_at_one_gpu_per_dc() {
+        let dcs = 24usize;
+        let cluster = presets::flat_dcs(dcs, 5.0);
+        let w = w();
+        let routing = Routing::uniform(1, 1, 1, 1);
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let ring = AggregateHybrid::ep().iteration_time(&ctx);
+        let dense = DcDense::ep(dcs, 1).iteration_time(&ctx);
+        assert!(
+            (dense - ring).abs() / ring < 1e-6,
+            "dense folded EP {dense} vs aggregate ring EP {ring}"
+        );
+        // hybrid: dense folded AG vs ring AG differ only in setup placement
+        let pe_tx = w.pe_bytes() / 50.0;
+        let ring_hy = AggregateHybrid::hybrid(6, pe_tx).iteration_time(&ctx);
+        let dense_hy = DcDense::hybrid(dcs, 1, 6, pe_tx).iteration_time(&ctx);
+        assert!(
+            (dense_hy - ring_hy).abs() / ring_hy < 0.1,
+            "dense folded hybrid {dense_hy} vs aggregate ring hybrid {ring_hy}"
+        );
+    }
+
+    #[test]
+    fn dc_dense_hybrid_beats_ep_at_per_dc_scale() {
+        // 64 DCs × 4 GPUs at 5 Gbps: the domain cuts both the per-peer
+        // setup frequency (Table VII) and the cross-DC data share
+        let (dcs, per_dc) = (64usize, 4usize);
+        let cluster = presets::dcs_x_gpus(dcs, per_dc, 5.0, presets::PCIE_GBPS);
+        let mut w = w();
+        w.moe_layers = 1;
+        let routing = Routing::uniform(1, 1, 1, 1);
+        let ctx = SchedCtx::new(&cluster, &w, &routing);
+        let ep = DcDense::ep(dcs, per_dc).iteration_time(&ctx);
+        let hy = DcDense::hybrid(dcs, per_dc, 8, w.pe_bytes() / 50.0).iteration_time(&ctx);
+        assert!(hy < ep, "hybrid {hy} must beat EP {ep} on shared uplinks");
+        assert!(ep / hy < 20.0, "speedup {} implausibly large", ep / hy);
     }
 
     #[test]

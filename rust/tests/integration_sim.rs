@@ -107,6 +107,29 @@ fn fig17_scales_and_shows_modest_gain_at_1000_dcs() {
 }
 
 #[test]
+fn fig17_per_dc_axis_completes_at_256_dcs() {
+    // the symmetry-folded dense rows: 256 DCs × 4 GPUs/DC = 1024 GPUs,
+    // ~1M member flows per dispatch phase materialized as ~O(D²) macros
+    let t0 = std::time::Instant::now();
+    let (_t, rows) = exp::fig17_axes(&[256], &[4], sweep::default_threads());
+    assert!(t0.elapsed().as_secs_f64() < 120.0, "per_dc rows too slow");
+    let dense: Vec<_> = rows.iter().filter(|r| r.per_dc == 4).collect();
+    assert_eq!(dense.len(), 2, "one folded dense row per mode");
+    for r in &dense {
+        assert_eq!(r.dcs, 256);
+        assert!(
+            r.speedup.is_finite() && r.speedup > 0.8 && r.speedup < 10.0,
+            "{}: per_dc speedup {} outside the plausible band",
+            r.fixed,
+            r.speedup
+        );
+    }
+    // the domain cut both the message frequency and the cross-DC share, so
+    // the hybrid must win on at least one mode at 5 Gbps
+    assert!(dense.iter().any(|r| r.speedup > 1.0), "folded hybrid never won");
+}
+
+#[test]
 fn fig17_scale_sweep_parallel_deterministic_and_wins() {
     // acceptance: a ≥256-DC fig17-style sweep completes under the parallel
     // harness, is bit-identical to the serial run, and the incremental
