@@ -1,0 +1,90 @@
+//! Microbatch pipeline parallelism with phase-level overlap windows.
+//!
+//! Not a paper figure: exercises the 4D `(pp, tp, ep, dp)` plane and the
+//! `Sync::Window` stage-boundary handoffs — the `fig_pp_overlap` driver over
+//! a shrinking inter-DC uplink, then a pairwise sweep with the pipeline
+//! axis. `--quick` / `BENCH_FAST=1` runs the one-driver smoke used by CI.
+
+use hybrid_ep::bench::{header, time_once, JsonReport};
+use hybrid_ep::netsim::sweep::{self, SweepGrid, SweepMode};
+use hybrid_ep::report::experiments;
+use hybrid_ep::util::args::Args;
+use hybrid_ep::util::json;
+
+fn main() {
+    header("pipeline_overlap", "4D pipeline + overlap windows vs 3D bulk plans (not in paper)");
+    let args = Args::from_env().unwrap_or_default();
+    let quick = args.bool("quick") || std::env::var("BENCH_FAST").is_ok();
+
+    let ((table, rows), secs) = time_once(experiments::fig_pp_overlap);
+    table.print();
+    let tight = rows.last().expect("driver emits one row per uplink");
+    assert!(
+        tight.pp > 1 && tight.microbatches > 1,
+        "the constrained uplink should pipeline, got (pp={}, mb={})",
+        tight.pp,
+        tight.microbatches
+    );
+    assert!(
+        tight.overlap_secs < tight.best_3d_secs,
+        "the windowed 4D plan should beat the best 3D bulk plan at {} Gbps",
+        tight.bw_gbps
+    );
+    println!(
+        "at {} Gbps: windowed (pp={}, mb={}) {} vs best 3D ({}) {} — {:.2}× ({secs:.2}s)",
+        tight.bw_gbps,
+        tight.pp,
+        tight.microbatches,
+        hybrid_ep::util::fmt_secs(tight.overlap_secs),
+        tight.best_3d,
+        hybrid_ep::util::fmt_secs(tight.best_3d_secs),
+        tight.speedup,
+    );
+
+    let mut report = JsonReport::open();
+    report.record_extra("pp_overlap_driver", "wall_ms", json::num(secs * 1e3));
+    report.record_extra("pp_overlap_driver", "speedup_at_1gbps", json::num(tight.speedup));
+    report.record_extra(
+        "pp_overlap_driver",
+        "window_vs_bulk",
+        json::num(tight.bulk_secs / tight.overlap_secs),
+    );
+
+    if quick {
+        println!("[--quick] skipping the pipeline-axis sweep");
+        let _ = report.write();
+        return;
+    }
+
+    // pairwise sweep over the pipeline axis: EP baseline vs hybrid under
+    // each pp degree at two uplink speeds
+    println!();
+    let mut grid = SweepGrid::fig17(vec![2]);
+    grid.mode = SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 };
+    grid.bandwidths_gbps = vec![1.25, 10.0];
+    grid.hybrid_ps = vec![0.5];
+    grid.pp_degrees = vec![1, 2];
+    grid.workload.tokens_per_gpu = 2048;
+    grid.workload.moe_layers = 2;
+    let threads = sweep::default_threads();
+    let (outcomes, secs) =
+        time_once(|| sweep::run_sweep(&grid, threads).expect("non-empty grid"));
+    for o in &outcomes {
+        println!(
+            "bw={} Gbps pp={}: EP {} | hybrid {} ({:.2}×, {} cross-DC MB)",
+            o.scenario.bw_gbps,
+            o.scenario.pp,
+            hybrid_ep::util::fmt_secs(o.ep.makespan),
+            hybrid_ep::util::fmt_secs(o.hybrid.makespan),
+            o.speedup,
+            (o.hybrid.bytes_per_level[0] / 1e6).round(),
+        );
+    }
+    println!("pipeline sweep: {} scenarios across {threads} threads in {secs:.2}s", outcomes.len());
+    let s = sweep::summarize(&outcomes);
+    report.record("pp_overlap_sweep/calendar_parallel", secs * 1e3, s.total_events, None);
+    match report.write() {
+        Ok(path) => println!("[perf trajectory merged into {}]", path.display()),
+        Err(e) => eprintln!("[warning] could not write perf trajectory: {e}"),
+    }
+}

@@ -125,15 +125,21 @@ impl LevelIndexer {
     }
 }
 
-/// Joint TP × EP × DP parallelism degrees (hybrid tensor-expert-data
-/// parallelism à la DeepSpeed-TED; see PAPERS.md).
+/// Joint PP × TP × EP × DP parallelism degrees (hybrid
+/// pipeline-tensor-expert-data parallelism; see PAPERS.md).
 ///
-/// The cluster's `G` GPUs factor as `tp · ep · dp`:
+/// The cluster's `G` GPUs factor as `pp · tp · ep · dp`:
 ///
-/// * **`dp`** replicas partition the *outermost* level (e.g. one replica per
-///   datacenter): each replica holds the full model, processes its own
-///   batch shard, and pays a once-per-iteration gradient ring across
-///   replicas instead of per-layer cross-replica A2A/AG.
+/// * **`pp`** pipeline stages carve the *outermost* level into contiguous
+///   blocks of layers × GPUs: stage `s` holds layers
+///   `[s·L/pp, (s+1)·L/pp)` on GPUs `[s·G/pp, (s+1)·G/pp)` and passes
+///   activations to the next stage once per microbatch (`microbatches` is
+///   the interleaving depth; the pipeline-bubble tax is
+///   `(microbatches + pp − 1) / microbatches`).
+/// * **`dp`** replicas partition the outermost level *within a stage*: each
+///   replica holds the stage's model shard, processes its own batch shard,
+///   and pays a once-per-iteration gradient ring across replicas instead of
+///   per-layer cross-replica A2A/AG.
 /// * **`ep`** is the expert-parallel width *within* a replica: the EP/
 ///   HybridEP machinery (domain partition, hybrid A2A/AG) spans `ep`
 ///   tensor-parallel groups, not all `G` GPUs.
@@ -142,42 +148,63 @@ impl LevelIndexer {
 ///   All-Reduce on the fast intra-node links, while migration payloads and
 ///   per-GPU compute shrink by `tp`.
 ///
-/// `tp = 1, dp = 1` is the identity — plain (Hybrid)EP over all `G` GPUs,
-/// bit-for-bit identical to planning without a config.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// `pp = 1, tp = 1, dp = 1, microbatches = 1` is the identity — plain
+/// (Hybrid)EP over all `G` GPUs, bit-for-bit identical to planning without
+/// a config.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ParallelismConfig {
+    /// Pipeline-parallel stages (contiguous outermost GPU blocks, contiguous
+    /// layer blocks).
+    pub pp: usize,
     /// Tensor-parallel degree (shards experts + dense trunk).
     pub tp: usize,
     /// Expert-parallel width: EP ranks (TP groups) per data-parallel replica.
     pub ep: usize,
     /// Data-parallel replicas (replicated experts + dense trunk).
     pub dp: usize,
+    /// Microbatches interleaved through the pipeline stages; must be 1 when
+    /// `pp == 1` (microbatching is only modeled through the pipeline).
+    pub microbatches: usize,
 }
 
 impl ParallelismConfig {
     /// The identity config for a `total_gpus`-GPU cluster: pure EP.
     pub fn identity(total_gpus: usize) -> Self {
-        Self { tp: 1, ep: total_gpus.max(1), dp: 1 }
+        Self { pp: 1, tp: 1, ep: total_gpus.max(1), dp: 1, microbatches: 1 }
     }
 
-    /// Build and validate a config for `cluster` from the two free degrees
-    /// (`ep` is forced to `G / (tp · dp)`).
+    /// Build and validate a 3D (pipeline-free) config for `cluster` from the
+    /// two free degrees (`ep` is forced to `G / (tp · dp)`).
     pub fn new(cluster: &ClusterSpec, tp: usize, dp: usize) -> Result<Self> {
-        if tp == 0 || dp == 0 {
-            bail!("parallelism degrees must be positive (got tp={tp}, dp={dp})");
+        Self::new_4d(cluster, 1, tp, dp, 1)
+    }
+
+    /// Build and validate a 4D config (`ep` is forced to
+    /// `G / (pp · tp · dp)`). `microbatches` sets the pipeline interleaving
+    /// depth; the layer-count divisibility of `pp` is checked at plan time,
+    /// where the workload is known.
+    pub fn new_4d(
+        cluster: &ClusterSpec,
+        pp: usize,
+        tp: usize,
+        dp: usize,
+        microbatches: usize,
+    ) -> Result<Self> {
+        if pp == 0 || tp == 0 || dp == 0 {
+            bail!("parallelism degrees must be positive (got pp={pp}, tp={tp}, dp={dp})");
         }
         let g = cluster.total_gpus();
-        if g % (tp * dp) != 0 {
-            bail!("tp·dp = {} must divide the cluster's {g} GPUs", tp * dp);
+        if g % (pp * tp * dp) != 0 {
+            bail!("pp·tp·dp = {} must divide the cluster's {g} GPUs", pp * tp * dp);
         }
-        let cfg = Self { tp, ep: g / (tp * dp), dp };
+        let cfg = Self { pp, tp, ep: g / (pp * tp * dp), dp, microbatches };
         cfg.validate(cluster)?;
         Ok(cfg)
     }
 
-    /// Pure EP (no TP sharding, no DP replication)?
+    /// Pure EP (no pipeline, no TP sharding, no DP replication)?
     pub fn is_identity(&self) -> bool {
-        self.tp == 1 && self.dp == 1
+        self.pp == 1 && self.tp == 1 && self.dp == 1 && self.microbatches == 1
     }
 
     /// GPUs per data-parallel replica (`tp · ep`).
@@ -192,24 +219,38 @@ impl ParallelismConfig {
         replica * self.replica_gpus() + rank * self.tp + member
     }
 
-    /// Check the config factors `cluster`'s hierarchy cleanly: `tp·ep·dp`
-    /// must equal `G`, `dp` must divide the outermost fanout (replicas are
-    /// whole outer-level blocks), and `tp` must divide the innermost fanout
-    /// (TP groups never span a node boundary). Heterogeneous link overrides
-    /// are rejected for non-identity configs (the virtual-cluster remapping
-    /// does not carry per-container overrides yet).
+    /// Check the config factors `cluster`'s hierarchy cleanly: `pp·tp·ep·dp`
+    /// must equal `G`, `pp·dp` must divide the outermost fanout (stages and
+    /// replicas are whole outer-level blocks), and `tp` must divide the
+    /// innermost fanout (TP groups never span a node boundary).
+    /// `microbatches` requires a pipeline (`pp > 1`) to be > 1; the
+    /// layer-count divisibility of `pp` is checked at plan time.
+    /// Heterogeneous link overrides are rejected for non-identity configs
+    /// (the virtual-cluster remapping does not carry per-container overrides
+    /// yet).
     pub fn validate(&self, cluster: &ClusterSpec) -> Result<()> {
         let g = cluster.total_gpus();
-        if self.tp == 0 || self.ep == 0 || self.dp == 0 {
+        if self.pp == 0 || self.tp == 0 || self.ep == 0 || self.dp == 0 {
             bail!("parallelism degrees must be positive: {self:?}");
         }
-        if self.tp * self.ep * self.dp != g {
+        if self.microbatches == 0 {
+            bail!("microbatches must be ≥ 1: {self:?}");
+        }
+        if self.microbatches > 1 && self.pp == 1 {
             bail!(
-                "tp·ep·dp = {}·{}·{} = {} must equal the cluster's {g} GPUs",
+                "microbatches = {} requires a pipeline (pp > 1); microbatching is only \
+                 modeled through the pipeline schedule",
+                self.microbatches
+            );
+        }
+        if self.pp * self.tp * self.ep * self.dp != g {
+            bail!(
+                "pp·tp·ep·dp = {}·{}·{}·{} = {} must equal the cluster's {g} GPUs",
+                self.pp,
                 self.tp,
                 self.ep,
                 self.dp,
-                self.tp * self.ep * self.dp
+                self.pp * self.tp * self.ep * self.dp
             );
         }
         if self.is_identity() {
@@ -224,15 +265,21 @@ impl ParallelismConfig {
             );
         }
         if cluster.levels.len() == 1 {
-            // single-level: both degrees carve the one fanout
+            // single-level: all three outer degrees carve the one fanout
             let f = cluster.levels[0].fanout;
-            if f % (self.tp * self.dp) != 0 {
-                bail!("tp·dp = {} must divide the flat fanout {f}", self.tp * self.dp);
+            if f % (self.pp * self.tp * self.dp) != 0 {
+                bail!(
+                    "pp·tp·dp = {} must divide the flat fanout {f}",
+                    self.pp * self.tp * self.dp
+                );
             }
         } else {
             let outer = cluster.levels[0].fanout;
-            if outer % self.dp != 0 {
-                bail!("dp = {} must divide the outermost fanout {outer}", self.dp);
+            if outer % (self.pp * self.dp) != 0 {
+                bail!(
+                    "pp·dp = {} must divide the outermost fanout {outer}",
+                    self.pp * self.dp
+                );
             }
             let inner = cluster.levels.last().expect("levels non-empty").fanout;
             if inner % self.tp != 0 {
@@ -242,26 +289,45 @@ impl ParallelismConfig {
         Ok(())
     }
 
-    /// The EP-rank-granularity cluster one data-parallel replica sees: the
-    /// outermost fanout shrinks by `dp` (one replica's share of the outer
-    /// level), the innermost by `tp` (one "GPU" per TP group). Level
-    /// bandwidths are untouched — planners price *per-member* volumes
-    /// against the same link capacities the simulator enforces.
+    /// The EP-rank-granularity cluster one data-parallel replica of one
+    /// pipeline stage sees: the outermost fanout shrinks by `pp · dp` (one
+    /// stage's, then one replica's share of the outer level), the innermost
+    /// by `tp` (one "GPU" per TP group). Level bandwidths are untouched —
+    /// planners price *per-member* volumes against the same link capacities
+    /// the simulator enforces.
     pub fn virtual_cluster(&self, cluster: &ClusterSpec) -> Result<ClusterSpec> {
         self.validate(cluster)?;
         if self.is_identity() {
             return Ok(cluster.clone());
         }
         let mut v = cluster.clone();
-        v.name = format!("{}/tp{}dp{}", cluster.name, self.tp, self.dp);
+        v.name = format!("{}/pp{}tp{}dp{}", cluster.name, self.pp, self.tp, self.dp);
         if v.levels.len() == 1 {
-            v.levels[0].fanout /= self.tp * self.dp;
+            v.levels[0].fanout /= self.pp * self.tp * self.dp;
         } else {
-            v.levels[0].fanout /= self.dp;
+            v.levels[0].fanout /= self.pp * self.dp;
             let last = v.levels.len() - 1;
             v.levels[last].fanout /= self.tp;
         }
         Ok(v)
+    }
+
+    /// The sub-cluster one pipeline stage spans (`G / pp` GPUs: the
+    /// outermost fanout shrinks by `pp`). Identity when `pp == 1`.
+    pub fn stage_cluster(&self, cluster: &ClusterSpec) -> Result<ClusterSpec> {
+        self.validate(cluster)?;
+        if self.pp == 1 {
+            return Ok(cluster.clone());
+        }
+        let mut v = cluster.clone();
+        v.name = format!("{}/stage{}", cluster.name, self.pp);
+        v.levels[0].fanout /= self.pp;
+        Ok(v)
+    }
+
+    /// GPUs per pipeline stage (`tp · ep · dp`).
+    pub fn stage_gpus(&self) -> usize {
+        self.tp * self.ep * self.dp
     }
 }
 
@@ -611,7 +677,9 @@ bw_gbps = 128.0
         // zero degrees rejected
         assert!(ParallelismConfig::new(&c, 0, 1).is_err());
         // inconsistent hand-built configs rejected
-        assert!(ParallelismConfig { tp: 2, ep: 2, dp: 1 }.validate(&c).is_err());
+        assert!(ParallelismConfig { pp: 1, tp: 2, ep: 2, dp: 1, microbatches: 1 }
+            .validate(&c)
+            .is_err());
         // heterogeneous overrides reject non-identity configs…
         let het = presets::straggler_dc(2, 4, 10.0, 128.0, 0, 2.5);
         let err = ParallelismConfig::new(&het, 2, 1).unwrap_err().to_string();
@@ -640,6 +708,35 @@ bw_gbps = 128.0
         let v = cfg.virtual_cluster(&flat).unwrap();
         assert_eq!(v.levels[0].fanout, 2);
         assert_eq!(cfg.ep, 2);
+    }
+
+    #[test]
+    fn pipeline_parallelism_config_validates_and_carves_the_outer_level() {
+        let c = presets::dcs_x_gpus(4, 4, 10.0, 128.0); // 16 GPUs
+        let cfg = ParallelismConfig::new_4d(&c, 2, 1, 1, 4).unwrap();
+        assert_eq!((cfg.pp, cfg.tp, cfg.ep, cfg.dp, cfg.microbatches), (2, 1, 8, 1, 4));
+        assert_eq!(cfg.stage_gpus(), 8);
+        // the stage sub-cluster halves the outer fanout, bandwidths untouched
+        let st = cfg.stage_cluster(&c).unwrap();
+        assert_eq!(st.levels[0].fanout, 2);
+        assert_eq!(st.levels[1].fanout, 4);
+        assert_eq!(st.levels[0].bandwidth, c.levels[0].bandwidth);
+        // the per-replica virtual cluster folds pp·dp out of the outer level
+        let cfg = ParallelismConfig::new_4d(&c, 2, 1, 2, 2).unwrap();
+        let v = cfg.virtual_cluster(&c).unwrap();
+        assert_eq!(v.levels[0].fanout, 1);
+        assert_eq!(v.total_gpus(), cfg.ep * cfg.tp);
+        // pp·dp must divide the outermost fanout (4 DCs)
+        let err = ParallelismConfig::new_4d(&c, 3, 1, 1, 1).unwrap_err().to_string();
+        assert!(err.contains("must divide"), "unexpected error: {err}");
+        // microbatches without a pipeline are rejected with a pointer to pp
+        let err = ParallelismConfig::new_4d(&c, 1, 1, 1, 4).unwrap_err().to_string();
+        assert!(err.contains("requires a pipeline"), "unexpected error: {err}");
+        // zero microbatches rejected
+        assert!(ParallelismConfig::new_4d(&c, 2, 1, 1, 0).is_err());
+        // the 3D constructor stays the pipeline-free special case
+        let c3 = ParallelismConfig::new(&c, 2, 2).unwrap();
+        assert_eq!((c3.pp, c3.microbatches), (1, 1));
     }
 
     /// Satellite: `[[overrides]]` TOML round-trips through

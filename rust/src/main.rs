@@ -57,17 +57,18 @@ fn run() -> Result<()> {
                 "hybrid-ep — cross-DC expert parallelism (paper reproduction)\n\n\
                  usage: hybrid-ep <plan|topo|simulate|sweep|train|experiments> [--flags]\n\
                    plan        --cluster S|M|L --data-mb D --expert-mb E [--cr CR] [--joint]\n\
+                               (--joint searches the 4D PP × TP × EP × DP grid)\n\
                                [--joint-sim]  (memoized simulation-backed search)\n\
                    topo        --gpus G --s-ed S\n\
                    simulate    --cluster S|M|L --data-mb D --expert-mb E --system NAME\n\
-                               [--tp T --dp R]\n\
+                               [--tp T --dp R] [--pp P --microbatches M] [--no-overlap]\n\
                    sweep       --mode aggregate|pairwise|replan --dcs 8,16 --bw 1.25,10\n\
                                [--p 0.9] [--het 1.0,0.25] [--drift 2.5] [--iters N]\n\
-                               [--tp 1,2 --dp 1,2] [--threads N]\n\
+                               [--tp 1,2 --dp 1,2] [--pp 1,2] [--threads N]\n\
                                [--engine calendar|folded|scan|reference]\n\
                    train       --profile test|small|large --steps N [--compression ws|wos --cr CR]\n\
                    experiments --exp fig2b|fig12|table5|fig13|table6|fig16|table7|fig17|\n\
-                               perlayer|straggler|replan|tedjoint|all [--threads N]\n\
+                               perlayer|straggler|replan|tedjoint|ppoverlap|all [--threads N]\n\
                                [--per-dc 1,4,8]  (fig17: folded dense rows at N GPUs/DC)"
             );
             Ok(())
@@ -113,16 +114,19 @@ fn cmd_plan(args: &Args) -> Result<()> {
     println!("predicted per-layer latency: {}", hybrid_ep::util::fmt_secs(plan.predicted_latency));
     if args.bool("joint") {
         let mut jt = Table::new(
-            "Joint TP × EP × DP candidates (score = passes × layers × layer-latency + DP sync)",
-            &["tp", "ep", "dp", "virtual S_ED", "layer latency", "score"],
+            "Joint PP × TP × EP × DP candidates (score = passes × layers × layer-latency \
+             + bubble tax + DP sync)",
+            &["pp", "tp", "ep", "dp", "mb", "virtual S_ED", "layer latency", "score"],
         );
         // best-first: solve_joint's pick is the head of this list
         let cands = solver::joint_candidates(&cluster, &w, &gpu, pe_tx)?;
         for c in &cands {
             jt.row(vec![
+                c.config.pp.to_string(),
                 c.config.tp.to_string(),
                 c.config.ep.to_string(),
                 c.config.dp.to_string(),
+                c.config.microbatches.to_string(),
                 format!("{:?}", c.plan.partition_sizes),
                 hybrid_ep::util::fmt_secs(c.layer_latency),
                 hybrid_ep::util::fmt_secs(c.score),
@@ -131,8 +135,14 @@ fn cmd_plan(args: &Args) -> Result<()> {
         jt.print();
         let best = cands.first().expect("joint_candidates is non-empty");
         println!(
-            "joint optimum: tp={}, ep={}, dp={} with virtual partition {:?}",
-            best.config.tp, best.config.ep, best.config.dp, best.plan.partition_sizes
+            "joint optimum: pp={}, tp={}, ep={}, dp={} ({} microbatches) with virtual \
+             partition {:?}",
+            best.config.pp,
+            best.config.tp,
+            best.config.ep,
+            best.config.dp,
+            best.config.microbatches,
+            best.plan.partition_sizes
         );
     }
     if args.bool("joint-sim") {
@@ -143,11 +153,14 @@ fn cmd_plan(args: &Args) -> Result<()> {
         let p_grid: Vec<f64> = (0..=10).map(|i| i as f64 / 10.0).collect();
         let best = solver::solve_joint_simulated(&cluster, &w, &routing, &p_grid)?;
         println!(
-            "simulated joint optimum: tp={}, ep={}, dp={}, partition {:?} (p={:.2}) — {} \
+            "simulated joint optimum: pp={}, tp={}, ep={}, dp={} ({} microbatches), \
+             partition {:?} (p={:.2}) — {} \
              [{} grid points, {} simulations after dedup]",
+            best.config.pp,
             best.config.tp,
             best.config.ep,
             best.config.dp,
+            best.config.microbatches,
             best.partition_sizes,
             best.p,
             hybrid_ep::util::fmt_secs(best.secs),
@@ -184,8 +197,26 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     );
     let mut ctx = SchedCtx::new(&cluster, &w, &routing);
     let (tp, dp) = (args.usize_or("tp", 1)?, args.usize_or("dp", 1)?);
-    ctx.parallelism = ParallelismConfig::new(&cluster, tp, dp)
-        .with_context(|| format!("--tp {tp} --dp {dp} on cluster {}", cluster.name))?;
+    let pp = args.usize_or("pp", 1)?;
+    // one microbatch per stage by default: the equal split always divides
+    let mb = args.usize_or("microbatches", pp.max(1))?;
+    if pp == 0 || w.moe_layers % pp != 0 {
+        bail!("--pp {pp} must carve --layers {} into equal stage blocks", w.moe_layers);
+    }
+    if mb == 0 || (w.tokens_per_gpu * pp) % mb != 0 {
+        bail!(
+            "--microbatches {mb} must divide tokens_per_gpu × pp = {}",
+            w.tokens_per_gpu * pp
+        );
+    }
+    ctx.parallelism = ParallelismConfig::new_4d(&cluster, pp, tp, dp, mb).with_context(|| {
+        format!("--pp {pp} --tp {tp} --dp {dp} --microbatches {mb} on cluster {}", cluster.name)
+    })?;
+    // --no-overlap pins the bulk-synchronous pipeline baseline (Sync::Bulk
+    // microbatch handoffs instead of compute-overlapped windows)
+    if args.bool("no-overlap") {
+        ctx.pp_overlap = false;
+    }
     let sys: Box<dyn System> = match args.get_or("system", "hybrid") {
         "ep" => Box::new(ep::VanillaEp),
         "tutel" => Box::new(ep::Tutel::default()),
@@ -198,13 +229,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let t = sys.iteration_time(&ctx);
     let cfg = ctx.parallelism;
     println!(
-        "{} on {} ({} GPUs, tp={} ep={} dp={}): simulated iteration = {}",
+        "{} on {} ({} GPUs, pp={} tp={} ep={} dp={} mb={}): simulated iteration = {}",
         sys.name(),
         cluster.name,
         cluster.total_gpus(),
+        cfg.pp,
         cfg.tp,
         cfg.ep,
         cfg.dp,
+        cfg.microbatches,
         hybrid_ep::util::fmt_secs(t)
     );
     Ok(())
@@ -236,6 +269,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .iter()
         .flat_map(|&tp| dp_list.iter().map(move |&dp| (tp, dp)))
         .collect();
+    grid.pp_degrees = args.usize_list_or("pp", &[1])?;
     grid.replan_iters = args.usize_or("iters", 8)?;
     let mode = args.get_or("mode", "aggregate");
     match mode {
@@ -286,7 +320,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let outcomes = sweep::run_sweep(&grid, threads)?;
         let mut t = Table::new(
             "Scenario sweep — EP vs HybridEP",
-            &["#DCs", "bw", "p", "het", "tp,dp", "EP iter", "HybridEP iter", "speedup"],
+            &["#DCs", "bw", "p", "het", "pp,tp,dp", "EP iter", "HybridEP iter", "speedup"],
         );
         for o in &outcomes {
             t.row(vec![
@@ -294,7 +328,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 format!("{} Gbps", o.scenario.bw_gbps),
                 format!("{}", o.scenario.p),
                 format!("{}", o.scenario.heterogeneity),
-                format!("{},{}", o.scenario.tp, o.scenario.dp),
+                format!("{},{},{}", o.scenario.pp, o.scenario.tp, o.scenario.dp),
                 hybrid_ep::util::fmt_secs(o.ep.makespan),
                 hybrid_ep::util::fmt_secs(o.hybrid.makespan),
                 format!("{:.2}x", o.speedup),
@@ -380,6 +414,9 @@ fn cmd_experiments(args: &Args) -> Result<()> {
     }
     if all || which == "tedjoint" {
         exp::fig_ted_joint().0.print();
+    }
+    if all || which == "ppoverlap" {
+        exp::fig_pp_overlap().0.print();
     }
     Ok(())
 }

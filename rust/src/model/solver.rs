@@ -28,14 +28,19 @@
 //! `Lat_final` over divisors of `G` (the paper's candidate set). We solve the
 //! continuous optimum for reporting and the grid optimum for scheduling.
 //!
-//! ## Joint TP × EP × DP solver
+//! ## Joint PP × TP × EP × DP solver
 //!
 //! [`solve_joint`] generalizes the grid beyond the paper: every deployable
-//! `(tp, dp)` factorization of the cluster (hybrid tensor-expert-data
-//! parallelism à la DeepSpeed-TED, PAPERS.md) re-solves the per-level `p`
-//! optimum on its virtual cluster and adds the TP activation-All-Reduce and
-//! DP expert-gradient-ring terms, making the parallelism layout itself a
-//! planned dimension. [`solve_joint_simulated`] scores the same grid by
+//! `(pp, tp, dp)` factorization of the cluster (hybrid tensor-expert-data
+//! parallelism à la DeepSpeed-TED plus stage-partitioned pipeline MoE,
+//! PAPERS.md) re-solves the per-level `p` optimum on its virtual cluster and
+//! adds the TP activation-All-Reduce and DP expert-gradient-ring terms,
+//! making the parallelism layout itself a planned dimension. Pipeline
+//! candidates (`pp > 1`) carve the MoE layers into `pp` contiguous stage
+//! blocks, tune the microbatch count, and pay an explicit **bubble tax** —
+//! `(M + pp − 1)` slots of per-microbatch stage work instead of `M` — plus
+//! the exposed stage-boundary activation hops of the pipeline fill.
+//! [`solve_joint_simulated`] scores the same grid by
 //! **full simulated iterations** instead of the stream model — with one
 //! simulation per *distinct resolved deployment*: grid `p` values snap to
 //! divisor partitions, so distinct points frequently alias, and the memo
@@ -215,35 +220,47 @@ pub fn plan_layers(cluster: &ClusterSpec, inputs: &[PlanInput]) -> Result<Vec<Pl
 }
 
 // ---------------------------------------------------------------------------
-// Joint TP × EP × DP planning (hybrid tensor-expert-data parallelism à la
-// DeepSpeed-TED — Singh et al., PAPERS.md)
+// Joint PP × TP × EP × DP planning (hybrid tensor-expert-data parallelism à
+// la DeepSpeed-TED — Singh et al., PAPERS.md — plus stage-partitioned
+// pipeline MoE with microbatch interleaving)
 // ---------------------------------------------------------------------------
 
-/// One joint-parallelism candidate: a deployable `(tp, ep, dp)`
+/// Microbatch counts the pipeline candidates tune over (`pp > 1` only;
+/// counts that do not divide the stage's token supply are skipped).
+pub const MICROBATCH_GRID: &[usize] = &[1, 2, 4, 8];
+
+/// One joint-parallelism candidate: a deployable `(pp, tp, ep, dp)`
 /// factorization of the cluster plus the hybrid-proportion plan solved on
 /// its [virtual cluster](ParallelismConfig::virtual_cluster). The search is
-/// therefore over the full `(p, tp, dp)` grid: each `(tp, dp)` point
-/// re-solves the per-level `p` optimum under its own geometry.
+/// therefore over the full `(p, pp, M, tp, dp)` grid: each point re-solves
+/// the per-level `p` optimum under its own geometry.
 #[derive(Clone, Debug)]
 pub struct JointCandidate {
     pub config: ParallelismConfig,
     /// Multilevel hybrid plan on the candidate's virtual cluster (partition
     /// sizes are per *virtual* level — hand them to `HybridEp.partition`
-    /// together with the config).
+    /// together with the config). For `pp > 1` the virtual cluster is the
+    /// stage's: the plan prices one microbatch through one stage layer.
     pub plan: Plan,
     /// Per-MoE-layer forward cost: stream-model latency plus the TP
-    /// activation-All-Reduce tax (`2·(tp−1)·(m+1)·D / B_inner`).
+    /// activation-All-Reduce tax (`2·(tp−1)·(m+1)·D / B_inner`). For
+    /// `pp > 1` this is per *microbatch* stage layer (tokens scaled
+    /// `pp/M`).
     pub layer_latency: f64,
     /// Per-iteration ranking score: comm passes × layers × `layer_latency`,
     /// plus the expert-replica gradient ring (`2·(dp−1)·n·P_E / B_outer`)
     /// when `dp > 1` — replicated experts must be kept coherent once per
     /// iteration whether or not the simulated DAG carries a backward pass.
+    /// Pipeline candidates instead pay `(M + pp − 1)` slots of stage work
+    /// (the 1F1B bubble tax) plus the exposed fill-time boundary hops.
     pub score: f64,
 }
 
-/// Score every deployable `(tp, dp)` factorization: `tp` over divisors of
-/// the innermost fanout, `dp` over divisors of the outermost, both jointly
-/// dividing `G`. Volumes are *member-view*
+/// Score every deployable `(pp, M, tp, dp)` factorization: `tp` over
+/// divisors of the innermost fanout, `pp` and `dp` over divisors of the
+/// outermost (`pp` additionally restricted to divisors of the MoE layer
+/// count, `M` to [`MICROBATCH_GRID`] counts that divide the stage's token
+/// supply), all jointly dividing `G`. Volumes are *member-view*
 /// ([`member_plan_input`](crate::plan::parallel::member_plan_input)), so
 /// the identity candidate reproduces [`plan_multilevel`] on the physical
 /// cluster exactly.
@@ -272,23 +289,36 @@ pub fn joint_candidates(
     let inner = cluster.levels.last().expect("levels non-empty").fanout;
     let outer = cluster.levels[0].fanout;
     let mut out = Vec::new();
-    for tp in (1..=inner).filter(|t| inner % t == 0) {
-        for dp in (1..=outer).filter(|d| outer % d == 0) {
-            let cfg = match ParallelismConfig::new(cluster, tp, dp) {
-                Ok(c) => c,
-                // purely geometric misfit, e.g. tp·dp beyond a single-level
-                // fanout — not a deployable point, skipping is correct
-                Err(_) => continue,
-            };
-            out.push(score_candidate(cluster, w, gpu, pe_tx_bytes, cfg)?);
+    for pp in (1..=outer).filter(|p| outer % p == 0 && w.moe_layers % p == 0) {
+        for tp in (1..=inner).filter(|t| inner % t == 0) {
+            for dp in (1..=outer).filter(|d| outer % d == 0) {
+                for &mb in MICROBATCH_GRID {
+                    // microbatching is modeled through the pipeline only,
+                    // and every microbatch must carry whole tokens
+                    if (pp == 1 && mb > 1) || (w.tokens_per_gpu * pp) % mb != 0 {
+                        continue;
+                    }
+                    let cfg = match ParallelismConfig::new_4d(cluster, pp, tp, dp, mb) {
+                        Ok(c) => c,
+                        // purely geometric misfit, e.g. pp·tp·dp beyond a
+                        // single-level fanout — not a deployable point,
+                        // skipping is correct
+                        Err(_) => continue,
+                    };
+                    out.push(score_candidate(cluster, w, gpu, pe_tx_bytes, cfg)?);
+                }
+            }
         }
     }
-    ensure!(!out.is_empty(), "no deployable (tp, dp) candidate (identity always is)");
+    ensure!(!out.is_empty(), "no deployable (pp, tp, dp) candidate (identity always is)");
     out.sort_by(|a, b| {
         a.score
             .partial_cmp(&b.score)
             .expect("finite scores")
-            .then((a.config.tp * a.config.dp).cmp(&(b.config.tp * b.config.dp)))
+            .then(
+                (a.config.pp * a.config.tp * a.config.dp * a.config.microbatches)
+                    .cmp(&(b.config.pp * b.config.tp * b.config.dp * b.config.microbatches)),
+            )
     });
     Ok(out)
 }
@@ -301,18 +331,6 @@ fn score_candidate(
     cfg: ParallelismConfig,
 ) -> Result<JointCandidate> {
     let vcluster = cfg.virtual_cluster(cluster)?;
-    let input =
-        crate::plan::parallel::member_plan_input(w, gpu, &cfg, cluster.total_gpus(), pe_tx_bytes);
-    let plan = plan_multilevel(&vcluster, &input)?;
-    // TP tax: ring All-Reduce of the block activations per dense trunk block
-    // + the MoE output, on the innermost (fast per-GPU) links
-    let lat_tp = if cfg.tp > 1 {
-        let payload = (w.pre_blocks + 1) as f64 * w.d_bytes();
-        2.0 * (cfg.tp as f64 - 1.0) * payload
-            / cluster.levels.last().expect("levels non-empty").bandwidth
-    } else {
-        0.0
-    };
     // DP tax: the expert-replica gradient ring over the slowest outer links
     // (gradients move raw expert bytes — the SR codec compresses migrated
     // weights, not gradients)
@@ -322,13 +340,80 @@ fn score_candidate(
     } else {
         0.0
     };
-    let layer_latency = plan.predicted_latency + lat_tp;
     let passes = if w.backward { 2.0 } else { 1.0 };
-    let score = passes * w.moe_layers as f64 * layer_latency + lat_dp;
+    if cfg.pp == 1 {
+        // legacy 3D scoring — kept expression-for-expression so the pp = 1
+        // plane of the 4D grid reproduces the historical scores bit-for-bit
+        let input = crate::plan::parallel::member_plan_input(
+            w,
+            gpu,
+            &cfg,
+            cluster.total_gpus(),
+            pe_tx_bytes,
+        );
+        let plan = plan_multilevel(&vcluster, &input)?;
+        // TP tax: ring All-Reduce of the block activations per dense trunk
+        // block + the MoE output, on the innermost (fast per-GPU) links
+        let lat_tp = if cfg.tp > 1 {
+            let payload = (w.pre_blocks + 1) as f64 * w.d_bytes();
+            2.0 * (cfg.tp as f64 - 1.0) * payload
+                / cluster.levels.last().expect("levels non-empty").bandwidth
+        } else {
+            0.0
+        };
+        let layer_latency = plan.predicted_latency + lat_tp;
+        let score = passes * w.moe_layers as f64 * layer_latency + lat_dp;
+        return Ok(JointCandidate { config: cfg, plan, layer_latency, score });
+    }
+    // pipeline candidate: each of the pp stages owns L/pp contiguous layers
+    // and sees one microbatch (tokens × pp/M) at a time; the stage's virtual
+    // cluster is the 4D virtual cluster itself (pp carves the outer level)
+    let lps = w.moe_layers / cfg.pp;
+    let stage_w = MoEWorkload {
+        tokens_per_gpu: w.tokens_per_gpu * cfg.pp / cfg.microbatches,
+        moe_layers: lps,
+        ..*w
+    };
+    let input = crate::plan::parallel::member_plan_input(
+        &stage_w,
+        gpu,
+        &cfg,
+        cluster.total_gpus() / cfg.pp,
+        pe_tx_bytes,
+    );
+    let plan = plan_multilevel(&vcluster, &input)?;
+    let lat_tp = if cfg.tp > 1 {
+        let payload = (w.pre_blocks + 1) as f64 * stage_w.d_bytes();
+        2.0 * (cfg.tp as f64 - 1.0) * payload
+            / cluster.levels.last().expect("levels non-empty").bandwidth
+    } else {
+        0.0
+    };
+    let layer_latency = plan.predicted_latency + lat_tp;
+    let mb = cfg.microbatches as f64;
+    // the 3D scores drop the expert-compute term (common to every (tp, dp)
+    // point — it cancels in the Eq. 8 derivation), but the pipeline bubble
+    // taxes it, so the slot length must carry it: per-microbatch expert
+    // compute of one stage layer is C·pp/M with C the per-layer per-GPU
+    // expert seconds
+    let c_full = w.tokens_per_gpu as f64 * w.k as f64 * w.expert_macs_per_token()
+        / gpu.macs_per_sec;
+    let slot = lps as f64 * (layer_latency + c_full * cfg.pp as f64 / mb);
+    // stage-boundary activation hop, priced on the slowest outer links
+    let hop = stage_w.d_bytes() / cluster.min_bandwidth_at(0);
+    // 1F1B with Sync::Window boundaries: one microbatch retires per
+    // max(slot, hop) in steady state (the boundary link can be the pipeline
+    // bottleneck), plus the fill/drain bubble — pp slots and pp − 1 exposed
+    // boundary hops; subtracting the common expert-compute term puts the
+    // score back on the 3D candidates' scale
+    let makespan = (mb - 1.0) * slot.max(hop)
+        + cfg.pp as f64 * slot
+        + (cfg.pp as f64 - 1.0) * hop;
+    let score = passes * (makespan - w.moe_layers as f64 * c_full) + lat_dp;
     Ok(JointCandidate { config: cfg, plan, layer_latency, score })
 }
 
-/// Joint `(p, tp, dp)` optimum: the head of [`joint_candidates`]'s
+/// Joint `(p, pp, M, tp, dp)` optimum: the head of [`joint_candidates`]'s
 /// best-first ordering (minimal per-iteration score; ties prefer fewer
 /// parallel degrees — the identity when everything else is equal).
 pub fn solve_joint(
@@ -345,17 +430,17 @@ pub fn solve_joint(
 // Simulation-backed joint search with deployment memoization
 // ---------------------------------------------------------------------------
 
-/// Counters of a [`solve_joint_simulated`] run: how many `(p, tp, dp)` grid
-/// points were scored vs how many **distinct resolved deployments** were
-/// actually simulated. The gap is the memoization win — many grid `p` values
-/// snap to the same deployable partition (`p = 1 − S_ED/G` only takes
-/// divisor values), so scoring them again would re-run an identical
-/// simulation.
+/// Counters of a [`solve_joint_simulated`] run: how many `(p, pp, M, tp,
+/// dp)` grid points were scored vs how many **distinct resolved
+/// deployments** were actually simulated. The gap is the memoization win —
+/// many grid `p` values snap to the same deployable partition
+/// (`p = 1 − S_ED/G` only takes divisor values), so scoring them again
+/// would re-run an identical simulation.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct JointSimStats {
-    /// `(p, tp, dp)` grid points evaluated.
+    /// `(p, pp, M, tp, dp)` grid points evaluated.
     pub points: usize,
-    /// Distinct `(tp, dp, snapped partition)` deployments simulated.
+    /// Distinct `(pp, M, tp, dp, snapped partition)` deployments simulated.
     pub simulated: usize,
 }
 
@@ -372,13 +457,16 @@ pub struct SimulatedJoint {
     pub stats: JointSimStats,
 }
 
-/// Simulation-backed joint `(p, tp, dp)` optimum: every deployable
-/// `(tp, dp)` factorization × every requested `p` is **snapped** to its
-/// deployable partition on the candidate's virtual cluster and scored by a
-/// full simulated iteration — with one simulation per *distinct* resolved
-/// deployment. Distinct grid points that snap to the same `(tp, dp,
+/// Simulation-backed joint `(p, pp, M, tp, dp)` optimum: every deployable
+/// `(pp, M, tp, dp)` factorization × every requested `p` is **snapped** to
+/// its deployable partition on the candidate's virtual cluster and scored by
+/// a full simulated iteration — with one simulation per *distinct* resolved
+/// deployment. Distinct grid points that snap to the same `(pp, M, tp, dp,
 /// partition)` key reuse the memoized makespan instead of re-simulating
 /// (the duplicate-candidate perf fix; [`JointSimStats`] counts both sides).
+/// Pipeline candidates simulate with overlap windows on (the planner's
+/// default `pp_overlap = true`), so the search prices the overlapped
+/// pipeline, bubbles and all.
 ///
 /// Unlike the analytic [`solve_joint`], heterogeneous-override clusters are
 /// accepted: the simulator prices overrides exactly, and non-identity
@@ -402,45 +490,53 @@ pub fn solve_joint_simulated(
     );
     let inner = cluster.levels.last().expect("levels non-empty").fanout;
     let outer = cluster.levels[0].fanout;
-    let mut memo: std::collections::HashMap<(usize, usize, Vec<usize>), f64> =
+    let mut memo: std::collections::HashMap<(usize, usize, usize, usize, Vec<usize>), f64> =
         std::collections::HashMap::new();
     let mut stats = JointSimStats::default();
     let mut best: Option<SimulatedJoint> = None;
-    for tp in (1..=inner).filter(|t| inner % t == 0) {
-        for dp in (1..=outer).filter(|d| outer % d == 0) {
-            let cfg = match ParallelismConfig::new(cluster, tp, dp) {
-                Ok(c) => c,
-                Err(_) => continue, // not deployable on this cluster
-            };
-            let vcluster = cfg.virtual_cluster(cluster)?;
-            for &p in p_grid {
-                stats.points += 1;
-                let partition = crate::netsim::sweep::partition_for_p(&vcluster, p);
-                let key = (tp, dp, partition.clone());
-                let secs = match memo.get(&key) {
-                    Some(&secs) => secs,
-                    None => {
-                        stats.simulated += 1;
-                        let mut ctx = SchedCtx::new(cluster, w, routing);
-                        ctx.parallelism = cfg;
-                        let secs = HybridEp { partition: Some(partition.clone()), migration: None }
-                            .iteration_time(&ctx);
-                        memo.insert(key, secs);
-                        secs
+    for pp in (1..=outer).filter(|p| outer % p == 0 && w.moe_layers % p == 0) {
+        for tp in (1..=inner).filter(|t| inner % t == 0) {
+            for dp in (1..=outer).filter(|d| outer % d == 0) {
+                for &mb in MICROBATCH_GRID {
+                    if (pp == 1 && mb > 1) || (w.tokens_per_gpu * pp) % mb != 0 {
+                        continue;
                     }
-                };
-                let better = match &best {
-                    None => true,
-                    Some(b) => secs < b.secs,
-                };
-                if better {
-                    best = Some(SimulatedJoint {
-                        config: cfg,
-                        partition_sizes: partition,
-                        p,
-                        secs,
-                        stats, // overwritten with the final counters below
-                    });
+                    let cfg = match ParallelismConfig::new_4d(cluster, pp, tp, dp, mb) {
+                        Ok(c) => c,
+                        Err(_) => continue, // not deployable on this cluster
+                    };
+                    let vcluster = cfg.virtual_cluster(cluster)?;
+                    for &p in p_grid {
+                        stats.points += 1;
+                        let partition = crate::netsim::sweep::partition_for_p(&vcluster, p);
+                        let key = (pp, mb, tp, dp, partition.clone());
+                        let secs = match memo.get(&key) {
+                            Some(&secs) => secs,
+                            None => {
+                                stats.simulated += 1;
+                                let mut ctx = SchedCtx::new(cluster, w, routing);
+                                ctx.parallelism = cfg;
+                                let secs =
+                                    HybridEp { partition: Some(partition.clone()), migration: None }
+                                        .iteration_time(&ctx);
+                                memo.insert(key, secs);
+                                secs
+                            }
+                        };
+                        let better = match &best {
+                            None => true,
+                            Some(b) => secs < b.secs,
+                        };
+                        if better {
+                            best = Some(SimulatedJoint {
+                                config: cfg,
+                                partition_sizes: partition,
+                                p,
+                                secs,
+                                stats, // overwritten with the final counters below
+                            });
+                        }
+                    }
                 }
             }
         }
@@ -773,7 +869,9 @@ mod tests {
     #[test]
     fn joint_prefers_identity_when_experts_dominate() {
         // huge raw experts, modest data: replicating experts across DCs
-        // (dp) or paying TP activation reductions buys nothing
+        // (dp) or paying TP activation reductions buys nothing. Pipelining
+        // is a different story — it moves *no* experts, so the 4D best may
+        // legitimately open pp here; the claim is about the TED plane.
         let cluster = presets::dcs_x_gpus(2, 4, 10.0, 128.0);
         let w = MoEWorkload {
             tokens_per_gpu: 256,
@@ -785,8 +883,11 @@ mod tests {
             pre_blocks: 1,
             backward: true,
         };
-        let best = solve_joint(&cluster, &w, &GpuSpec::a800(), w.pe_bytes()).unwrap();
-        assert!(best.config.is_identity(), "expected pure EP, got {:?}", best.config);
+        let cands = joint_candidates(&cluster, &w, &GpuSpec::a800(), w.pe_bytes()).unwrap();
+        // candidates are sorted best-first, so the first pp = 1 entry is the
+        // best 3D (TED) candidate
+        let best3d = cands.iter().find(|c| c.config.pp == 1).expect("pp=1 plane present");
+        assert!(best3d.config.is_identity(), "expected pure EP, got {:?}", best3d.config);
     }
 
     #[test]
@@ -807,9 +908,11 @@ mod tests {
         };
         let gpu = GpuSpec::a800();
         let best = solve_joint(&cluster, &w, &gpu, w.pe_bytes()).unwrap();
+        // the 4D grid may open pp instead — any non-EP dimension keeps the
+        // per-layer exchange off the starved uplink
         assert!(
-            best.config.tp > 1 || best.config.dp > 1,
-            "constrained uplink must open TP or DP, got {:?}",
+            best.config.tp > 1 || best.config.dp > 1 || best.config.pp > 1,
+            "constrained uplink must open PP, TP or DP, got {:?}",
             best.config
         );
         let cands = joint_candidates(&cluster, &w, &gpu, w.pe_bytes()).unwrap();
@@ -823,7 +926,66 @@ mod tests {
         );
     }
 
-    /// Satellite (perf fix): the simulated `(p, tp, dp)` grid search snaps
+    /// The 4D grid carries pipeline candidates: every deployable pp > 1
+    /// point appears with each feasible microbatch count, the bubble tax
+    /// makes more microbatches (weakly) cheaper on a compute-scaled stage,
+    /// and under a starved uplink the best pipeline candidate crushes the
+    /// identity (its per-layer exchange stays inside the DC).
+    #[test]
+    fn joint_4d_prices_pipeline_candidates_with_bubble_tax() {
+        // deep model, huge raw experts, light activations on a starved
+        // 1 Gbps uplink: the identity pays a cross-DC exchange on all 12
+        // layers while a 2-stage pipeline pays M boundary hops total
+        let cluster = presets::dcs_x_gpus(2, 4, 1.0, 128.0);
+        let w = MoEWorkload {
+            tokens_per_gpu: 256,
+            hidden: 512,
+            ffn: 8192,
+            experts_per_gpu: 1,
+            k: 1,
+            moe_layers: 12,
+            pre_blocks: 1,
+            backward: true,
+        };
+        let gpu = GpuSpec::a800();
+        let cands = joint_candidates(&cluster, &w, &gpu, w.pe_bytes()).unwrap();
+        // outer fanout 2, 12 layers → pp ∈ {1, 2}; tokens·pp = 512 divides
+        // every MICROBATCH_GRID count, so all four mb points deploy
+        for &mb in MICROBATCH_GRID {
+            assert!(
+                cands.iter().any(|c| c.config.pp == 2 && c.config.microbatches == mb),
+                "missing (pp=2, M={mb}) candidate"
+            );
+        }
+        assert!(cands.iter().all(|c| c.config.pp == 1 || c.config.pp == 2));
+        assert!(
+            cands.iter().all(|c| (c.config.pp == 1) == (c.config.microbatches == 1)),
+            "microbatching without a pipeline (or a forced M=1 pipeline grid) leaked in"
+        );
+        // more microbatches amortize the fill/drain bubble: M=8 ≤ M=1 at pp=2
+        let score_at = |mb: usize| {
+            cands
+                .iter()
+                .filter(|c| c.config.pp == 2 && c.config.tp == 1 && c.config.dp == 1)
+                .find(|c| c.config.microbatches == mb)
+                .expect("pp=2 tp=1 dp=1 candidate")
+                .score
+        };
+        assert!(
+            score_at(8) <= score_at(1) * (1.0 + 1e-9),
+            "bubble tax not amortized: M=8 {} vs M=1 {}",
+            score_at(8),
+            score_at(1)
+        );
+        // at 1 Gbps the pipelined stages (all traffic intra-DC except the
+        // boundary hops) must beat the identity's cross-DC per-layer A2A
+        let id = cands.iter().find(|c| c.config.is_identity()).expect("identity").score;
+        let best_pp =
+            cands.iter().filter(|c| c.config.pp == 2).map(|c| c.score).fold(f64::MAX, f64::min);
+        assert!(best_pp < id, "pipeline {best_pp} must beat identity {id} at 1 Gbps");
+    }
+
+    /// Satellite (perf fix): the simulated `(p, pp, M, tp, dp)` grid search snaps
     /// many grid `p` values onto the same deployable partition; the memo
     /// must collapse those duplicates to one simulation each — counted, not
     /// assumed.
@@ -878,6 +1040,41 @@ mod tests {
         assert_eq!(again.partition_sizes, best.partition_sizes);
         // degenerate grids are descriptive errors
         assert!(solve_joint_simulated(&cluster, &w, &routing, &[]).is_err());
+    }
+
+    /// The simulated grid walks the pipeline axis too: pp over outer-level
+    /// divisors that tile the layer count, with the microbatch count
+    /// tunable, and every (pp, M, tp, dp, partition) deployment simulated
+    /// at most once.
+    #[test]
+    fn simulated_joint_searches_the_pipeline_axis() {
+        use crate::moe::Routing;
+        let cluster = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let w = MoEWorkload {
+            tokens_per_gpu: 256,
+            hidden: 64,
+            ffn: 128,
+            experts_per_gpu: 1,
+            k: 1,
+            moe_layers: 2,
+            pre_blocks: 1,
+            backward: false,
+        };
+        let g = cluster.total_gpus();
+        let routing = Routing::uniform(g, g, w.tokens_per_gpu, w.k);
+        let p_grid: Vec<f64> = (0..=10).map(|i| i as f64 / 10.0).collect();
+        let best = solve_joint_simulated(&cluster, &w, &routing, &p_grid).unwrap();
+        // pp=1 plane: (tp, dp) ∈ {1,2}² → 4 configs (M = 1 forced); pp=2
+        // plane: dp = 1 forced (pp·dp must divide the 2-DC outer level),
+        // tp ∈ {1,2}, M ∈ {1,2,4,8} → 8 configs; 12 configs × 11 p points
+        assert_eq!(best.stats.points, 12 * p_grid.len());
+        assert!(best.stats.simulated < best.stats.points, "{:?}", best.stats);
+        assert!(best.secs.is_finite() && best.secs > 0.0);
+        // determinism across reruns
+        let again = solve_joint_simulated(&cluster, &w, &routing, &p_grid).unwrap();
+        assert_eq!(again.secs.to_bits(), best.secs.to_bits());
+        assert_eq!(again.config, best.config);
+        assert_eq!(again.stats, best.stats);
     }
 
     /// Heterogeneous-override clusters degrade gracefully to the

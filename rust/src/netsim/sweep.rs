@@ -18,7 +18,9 @@
 //!   full pairwise EP vs HybridEP schedules and (optionally Zipf-skewed,
 //!   seed-driven) routing; reports traffic as well as makespans. The
 //!   [`SweepGrid::parallelism`] axis additionally varies the hybrid side's
-//!   joint TP × EP × DP degrees (TED-style baselines).
+//!   joint TP × EP × DP degrees (TED-style baselines), and the
+//!   [`SweepGrid::pp_degrees`] axis adds pipeline stages (with one microbatch
+//!   per stage, so token counts always divide) on top of them.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -111,6 +113,12 @@ pub struct SweepGrid {
     /// pure EP). `(1, 1)` is the identity; aggregate and replanning sweeps
     /// only accept the identity.
     pub parallelism: Vec<(usize, usize)>,
+    /// Pipeline-parallel degrees applied to the *hybrid* side of each
+    /// [`SweepMode::Pairwise`] scenario, on top of the `(tp, dp)` axis. Each
+    /// `pp` runs with `pp` microbatches (an equal split, so `tokens × pp` is
+    /// always divisible) and must divide the workload's `moe_layers`. `1` is
+    /// the identity; aggregate and replanning sweeps only accept it.
+    pub pp_degrees: Vec<usize>,
     /// Iterations per replanning scenario.
     pub replan_iters: usize,
     pub workload: MoEWorkload,
@@ -137,6 +145,7 @@ impl SweepGrid {
             heterogeneity: vec![1.0],
             drift_rates: vec![0.0],
             parallelism: vec![(1, 1)],
+            pp_degrees: vec![1],
             replan_iters: 8,
             workload: MoEWorkload {
                 tokens_per_gpu: 8192,
@@ -165,23 +174,26 @@ impl SweepGrid {
                     for &het in &self.heterogeneity {
                         for &drift in &self.drift_rates {
                             for &(tp, dp) in &self.parallelism {
-                                let index = out.len();
-                                out.push(Scenario {
-                                    index,
-                                    dcs,
-                                    bw_gbps: bw,
-                                    p,
-                                    heterogeneity: het,
-                                    drift,
-                                    tp,
-                                    dp,
-                                    seed: scenario_seed(self.base_seed, index as u64),
-                                    workload: self.workload,
-                                    compression_ratio: self.compression_ratio,
-                                    latency_us: self.latency_us,
-                                    mode: self.mode,
-                                    engine: self.engine,
-                                });
+                                for &pp in &self.pp_degrees {
+                                    let index = out.len();
+                                    out.push(Scenario {
+                                        index,
+                                        dcs,
+                                        bw_gbps: bw,
+                                        p,
+                                        heterogeneity: het,
+                                        drift,
+                                        tp,
+                                        dp,
+                                        pp,
+                                        seed: scenario_seed(self.base_seed, index as u64),
+                                        workload: self.workload,
+                                        compression_ratio: self.compression_ratio,
+                                        latency_us: self.latency_us,
+                                        mode: self.mode,
+                                        engine: self.engine,
+                                    });
+                                }
                             }
                         }
                     }
@@ -203,6 +215,7 @@ impl SweepGrid {
             ("heterogeneity", self.heterogeneity.is_empty()),
             ("drift_rates", self.drift_rates.is_empty()),
             ("parallelism", self.parallelism.is_empty()),
+            ("pp_degrees", self.pp_degrees.is_empty()),
         ];
         for (name, empty) in axes {
             ensure!(
@@ -211,7 +224,16 @@ impl SweepGrid {
                  scenarios and the sweep would return vacuous results"
             );
         }
-        let nonidentity = self.parallelism.iter().any(|&(tp, dp)| (tp, dp) != (1, 1));
+        for &pp in &self.pp_degrees {
+            ensure!(
+                pp >= 1 && self.workload.moe_layers % pp.max(1) == 0,
+                "pp degree {pp} does not carve the workload's {} MoE layers \
+                 into equal stage blocks",
+                self.workload.moe_layers
+            );
+        }
+        let nonidentity = self.parallelism.iter().any(|&(tp, dp)| (tp, dp) != (1, 1))
+            || self.pp_degrees.iter().any(|&pp| pp != 1);
         if nonidentity {
             ensure!(
                 self.mode != SweepMode::Aggregate,
@@ -245,6 +267,9 @@ pub struct Scenario {
     pub tp: usize,
     /// data-parallel replicas for the hybrid side (pairwise mode)
     pub dp: usize,
+    /// pipeline stages for the hybrid side (pairwise mode; runs with `pp`
+    /// microbatches so the token split is always integral)
+    pub pp: usize,
     pub seed: u64,
     pub workload: MoEWorkload,
     pub compression_ratio: f64,
@@ -302,21 +327,22 @@ fn apply_heterogeneity(cluster: crate::cluster::ClusterSpec, sc: &Scenario) -> c
 }
 
 /// Simulate one scenario (EP baseline + hybrid at the scenario's `p`).
-/// Errors when the scenario's `(tp, dp)` does not factor its cluster (or is
-/// non-identity in [`SweepMode::Aggregate`], whose O(G) ring schedules are
+/// Errors when the scenario's `(pp, tp, dp)` does not factor its cluster (or
+/// is non-identity in [`SweepMode::Aggregate`], whose O(G) ring schedules are
 /// pure-EP-shaped by construction).
 pub fn run_scenario(sc: &Scenario) -> Result<ScenarioOutcome> {
     let w = sc.workload;
     let pe_tx = w.pe_bytes() / sc.compression_ratio;
     let (ep, hybrid) = match sc.mode {
         SweepMode::Aggregate => {
-            if (sc.tp, sc.dp) != (1, 1) {
+            if (sc.tp, sc.dp, sc.pp) != (1, 1, 1) {
                 bail!(
                     "the parallelism axis applies to pairwise sweeps only \
-                     (aggregate scenario {} has tp={}, dp={})",
+                     (aggregate scenario {} has tp={}, dp={}, pp={})",
                     sc.index,
                     sc.tp,
-                    sc.dp
+                    sc.dp,
+                    sc.pp
                 );
             }
             let cluster =
@@ -343,8 +369,9 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioOutcome> {
             let ctx = SchedCtx::new(&cluster, &w, &routing);
             let ep_dag = VanillaEp.build_iteration(&ctx);
             // the joint-parallelism axis reshapes the hybrid side only: the
-            // EP baseline stays the fixed pure-EP reference
-            let cfg = ParallelismConfig::new(&cluster, sc.tp, sc.dp)?;
+            // EP baseline stays the fixed pure-EP reference. pp runs with pp
+            // microbatches (equal split — always divides tokens × pp).
+            let cfg = ParallelismConfig::new_4d(&cluster, sc.pp, sc.tp, sc.dp, sc.pp)?;
             let hy_cluster = cfg.virtual_cluster(&cluster)?;
             let mut hy_ctx = SchedCtx::new(&cluster, &w, &routing);
             hy_ctx.parallelism = cfg;
@@ -405,13 +432,14 @@ pub fn run_replan_scenario(
 ) -> Result<ReplanOutcome> {
     use crate::plan::replanner;
     use crate::systems::hybrid_ep::MigrationCfg;
-    if (sc.tp, sc.dp) != (1, 1) {
+    if (sc.tp, sc.dp, sc.pp) != (1, 1, 1) {
         bail!(
             "the parallelism axis is not supported in replanning sweeps \
-             (scenario {} has tp={}, dp={})",
+             (scenario {} has tp={}, dp={}, pp={})",
             sc.index,
             sc.tp,
-            sc.dp
+            sc.dp,
+            sc.pp
         );
     }
     let cluster = apply_heterogeneity(
@@ -571,7 +599,11 @@ mod tests {
 
     /// The folded engine is a drop-in [`SweepGrid::engine`] choice: same
     /// makespans as the calendar engine on both sweep shapes (the fold is an
-    /// exact transformation, whatever the scenario emits).
+    /// exact transformation, whatever the scenario emits). Phases folded
+    /// into macro-flows are [`Sync::Bulk`](crate::plan::Sync) by contract —
+    /// a macro bundle is defined by its barrier-synchronised start — so both
+    /// engines see the same barrier structure and this differential holds
+    /// under every sweep grid, windowed pipeline handoffs included.
     #[test]
     fn folded_engine_sweeps_match_the_calendar_engine() {
         for mode in [SweepMode::Aggregate, SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 }] {
@@ -773,5 +805,46 @@ mod tests {
         let mut bad = grid.clone();
         bad.parallelism = vec![(3, 1)];
         assert!(run_sweep(&bad, 1).is_err());
+    }
+
+    #[test]
+    fn pipeline_axis_runs_pairwise_scenarios() {
+        let mut grid = small_grid(SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 });
+        grid.dc_counts = vec![2];
+        grid.hybrid_ps = vec![0.5];
+        grid.workload.backward = false;
+        grid.workload.moe_layers = 2;
+        grid.pp_degrees = vec![1, 2];
+        let out = run_sweep(&grid, 2).unwrap();
+        assert_eq!(out.len(), 2);
+        // the identity point matches a grid without the axis bit-for-bit
+        // (pp is the innermost loop, so scenario 0 keeps its seed)
+        let mut base = grid.clone();
+        base.pp_degrees = vec![1];
+        let base_out = run_sweep(&base, 1).unwrap();
+        assert_eq!(out[0].hybrid.makespan.to_bits(), base_out[0].hybrid.makespan.to_bits());
+        // pp = 2 stages the hybrid side across the two DCs: the schedule
+        // changes, while the EP baseline is untouched by the axis
+        let pp_point = &out[1];
+        assert_eq!(pp_point.scenario.pp, 2);
+        assert!(pp_point.speedup.is_finite() && pp_point.speedup > 0.0);
+        assert_ne!(
+            pp_point.hybrid.makespan.to_bits(),
+            out[0].hybrid.makespan.to_bits(),
+            "pp=2 must reshape the hybrid schedule"
+        );
+        assert_eq!(pp_point.ep.makespan.to_bits(), out[0].ep.makespan.to_bits());
+        // rejected where it cannot apply: aggregate mode…
+        let mut agg = small_grid(SweepMode::Aggregate);
+        agg.workload.moe_layers = 2;
+        agg.pp_degrees = vec![2];
+        let err = run_sweep(&agg, 1).unwrap_err().to_string();
+        assert!(err.contains("pairwise"), "unexpected error: {err}");
+        // …and degrees that don't carve the layer count into stage blocks
+        let mut bad = grid.clone();
+        bad.workload.moe_layers = 1;
+        bad.pp_degrees = vec![2];
+        let err = run_sweep(&bad, 1).unwrap_err().to_string();
+        assert!(err.contains("stage blocks"), "unexpected error: {err}");
     }
 }

@@ -29,6 +29,18 @@
 //!   rounds — see [`parallel`] for how TP × EP × DP configs produce it.
 //! * Zero-cost barriers synchronize phase boundaries; they change neither
 //!   traffic accounting nor makespan.
+//! * Phase exit synchronization is an explicit [`Sync`] policy:
+//!   [`Sync::Bulk`] keeps the historical global-barrier-per-collective-phase
+//!   contract bit-for-bit, while [`Sync::Window`] drops the global join so
+//!   flows contend on the network while a named compute span proceeds
+//!   (per-destination arrival gating only — data dependencies are never
+//!   relaxed). Phases where [`CommPhase::is_empty`] holds are skipped
+//!   entirely: they lower to zero tasks, not barrier-only nodes.
+//! * A plan with a [`PipelineSchedule`] is stage-partitioned: contiguous
+//!   layer blocks on contiguous GPU blocks, each stored [`LayerPlan`]
+//!   describing one microbatch, instantiated `microbatches` times FIFO per
+//!   stage with activation handoffs between stages (1F1B-equivalent under
+//!   this flow model; see [`lower_forward`]).
 //!
 //! ## Folded phases
 //!
@@ -51,6 +63,44 @@ pub mod parallel;
 pub mod replanner;
 
 use crate::netsim::{Dag, Tag, TaskId};
+
+/// Exit-synchronization policy of a [`CommPhase`] (and of the microbatch
+/// boundaries of a [`PipelineSchedule`]).
+///
+/// The historical contract was implicit: every collective phase closed with
+/// one global bulk barrier. `Sync` makes the policy explicit so overlap is
+/// part of the representation:
+///
+/// * [`Sync::Bulk`] — today's semantics, bit-for-bit: collective phases
+///   close with a single barrier every GPU passes through; pipeline
+///   boundaries join all GPUs.
+/// * [`Sync::Window`] — the phase's flows may run concurrently with the
+///   named compute span (`overlaps_with`, a task label such as `"expert"`):
+///   the global join is dropped and each destination is gated only by its
+///   *own* arrivals, so GPUs whose data is already present start computing
+///   while other flows are still in flight. Flow → consumer data
+///   dependencies are always preserved; a window only removes the global
+///   barrier, never a data edge.
+///
+/// Folded [`MacroFlow`] phases must stay [`Sync::Bulk`]: representative
+/// endpoints can only gate every member destination through the phase's
+/// bulk barrier (see [`CommPhase::folded`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Sync {
+    /// Bulk-synchronous (the pre-overlap default): one global barrier closes
+    /// the phase.
+    #[default]
+    Bulk,
+    /// Overlap window: flows contend on the network while the named compute
+    /// span proceeds on GPUs whose inputs already arrived.
+    Window {
+        /// Label of the compute span this phase is allowed to overlap with
+        /// (e.g. `"expert"`, `"pre_expert"`, `"stage"`). Metadata for
+        /// diagnostics and validation; the lowering effect is the dropped
+        /// global join.
+        overlaps_with: &'static str,
+    },
+}
 
 /// One point-to-point transfer within a phase.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -92,25 +142,50 @@ pub struct CommPhase {
     /// Per-flow setup compute seconds on the source, serialized before the
     /// transfer; `0.0` emits no setup task.
     pub setup_secs: f64,
-    /// Bulk-synchronous collective phase: instead of per-destination arrival
-    /// barriers, the whole phase closes with **one** barrier joining every
-    /// arrival and every GPU's stage (NCCL-style synchronized A2A/AG). This
-    /// is what makes representative-endpoint macro-flows gate *all*
-    /// destination GPUs, not just the representatives.
+    /// Collective phase: under [`Sync::Bulk`], instead of per-destination
+    /// arrival barriers the whole phase closes with **one** barrier joining
+    /// every arrival and every GPU's stage (NCCL-style synchronized A2A/AG).
+    /// This is what makes representative-endpoint macro-flows gate *all*
+    /// destination GPUs, not just the representatives. Under
+    /// [`Sync::Window`] the global join is dropped and the phase gates each
+    /// destination by its own arrivals only.
     pub collective: bool,
+    /// Exit-synchronization policy; [`Sync::Bulk`] reproduces the historical
+    /// global-barrier-per-phase contract bit-for-bit.
+    pub sync: Sync,
     pub label: &'static str,
 }
 
 impl CommPhase {
     pub fn new(flows: Vec<Flow>, label: &'static str) -> Self {
-        Self { flows, macro_flows: Vec::new(), setup_secs: 0.0, collective: false, label }
+        Self {
+            flows,
+            macro_flows: Vec::new(),
+            setup_secs: 0.0,
+            collective: false,
+            sync: Sync::Bulk,
+            label,
+        }
     }
 
     /// A collective phase carrying folded bundles (plus optional plain
     /// flows): the shape of dense symmetric dispatch/combine/AG at DC-pair
-    /// granularity.
+    /// granularity. Folded phases are always [`Sync::Bulk`].
     pub fn folded(flows: Vec<Flow>, macro_flows: Vec<MacroFlow>, label: &'static str) -> Self {
-        Self { flows, macro_flows, setup_secs: 0.0, collective: true, label }
+        Self {
+            flows,
+            macro_flows,
+            setup_secs: 0.0,
+            collective: true,
+            sync: Sync::Bulk,
+            label,
+        }
+    }
+
+    /// The same phase with an overlap window against the named compute span.
+    pub fn windowed(mut self, overlaps_with: &'static str) -> Self {
+        self.sync = Sync::Window { overlaps_with };
+        self
     }
 
     pub fn total_bytes(&self) -> f64 {
@@ -175,65 +250,207 @@ pub struct LayerPlan {
     pub tp_sync: Option<CommPhase>,
 }
 
+/// Microbatch pipeline schedule over stage-partitioned layers.
+///
+/// The plan's `layers` are split into `stages` contiguous blocks; stage `s`
+/// owns the contiguous GPU block `[s·G/stages, (s+1)·G/stages)` and its
+/// phases/compute touch only those GPUs (every per-GPU vector keeps arity
+/// `G` with zeros elsewhere). Each stored [`LayerPlan`] describes **one
+/// microbatch** (flows and compute already scaled by `1/microbatches`);
+/// lowering instantiates it `microbatches` times, FIFO per stage, with an
+/// activation handoff between consecutive stages after each microbatch.
+/// Under this flow model (no activation memory), a forward-only FIFO
+/// schedule is makespan-equivalent to 1F1B — both fill and drain
+/// `stages − 1` bubbles around `microbatches` steady-state steps.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PipelineSchedule {
+    /// Pipeline stages (`pp`); must divide both the GPU count and the layer
+    /// count.
+    pub stages: usize,
+    /// Microbatches interleaved through the stages (≥ 1).
+    pub microbatches: usize,
+    /// Per-GPU activation bytes crossing each stage boundary per microbatch
+    /// (same-offset peer in the next stage, lowered as `Tag::Other`).
+    pub boundary_bytes: f64,
+    /// Handoff policy: [`Sync::Window`] gates only the receiving stage (the
+    /// sender proceeds to its next microbatch — true pipelining);
+    /// [`Sync::Bulk`] joins every GPU at every boundary (the bulk-synchronous
+    /// baseline, no overlap).
+    pub boundary_sync: Sync,
+}
+
 /// The full layered plan for one forward pass.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Plan {
     pub gpus: usize,
     pub layers: Vec<LayerPlan>,
+    /// `Some` turns the stage-partitioned layers into a microbatch pipeline;
+    /// `None` is the historical single-shot lowering, bit-for-bit.
+    pub pipeline: Option<PipelineSchedule>,
 }
 
 impl Plan {
+    /// Replication factor of the stored per-microbatch layers.
+    fn microbatch_mult(&self) -> f64 {
+        self.pipeline.map(|p| p.microbatches as f64).unwrap_or(1.0)
+    }
+
     /// Static A2A traffic the plan will move (dispatch + combine).
     pub fn a2a_bytes(&self) -> f64 {
-        self.layers
-            .iter()
-            .flat_map(|l| l.rounds.iter())
-            .flat_map(|r| r.dispatch.iter())
-            .map(|p| 2.0 * p.total_bytes())
-            .sum()
+        self.microbatch_mult()
+            * self
+                .layers
+                .iter()
+                .flat_map(|l| l.rounds.iter())
+                .flat_map(|r| r.dispatch.iter())
+                .map(|p| 2.0 * p.total_bytes())
+                .sum::<f64>()
     }
 
     /// Static AG traffic the plan will move.
     pub fn ag_bytes(&self) -> f64 {
-        self.layers.iter().map(|l| l.migrate.ag_bytes()).sum()
+        self.microbatch_mult() * self.layers.iter().map(|l| l.migrate.ag_bytes()).sum::<f64>()
     }
 
     /// Static All-Reduce traffic of the per-layer TP sync phases.
     pub fn allreduce_bytes(&self) -> f64 {
-        self.layers
-            .iter()
-            .filter_map(|l| l.tp_sync.as_ref())
-            .map(|p| p.total_bytes())
-            .sum()
+        self.microbatch_mult()
+            * self
+                .layers
+                .iter()
+                .filter_map(|l| l.tp_sync.as_ref())
+                .map(|p| p.total_bytes())
+                .sum::<f64>()
+    }
+
+    /// Static pipeline-boundary activation traffic (zero without a pipeline).
+    pub fn boundary_bytes(&self) -> f64 {
+        match &self.pipeline {
+            None => 0.0,
+            Some(s) => {
+                let gps = self.gpus / s.stages.max(1);
+                s.boundary_bytes
+                    * (s.stages.saturating_sub(1) * gps * s.microbatches) as f64
+            }
+        }
     }
 
     /// Total expert-compute seconds across all GPUs and layers.
     pub fn expert_secs(&self) -> f64 {
-        self.layers
-            .iter()
-            .flat_map(|l| l.rounds.iter())
-            .map(|r| r.expert_secs.iter().sum::<f64>())
-            .sum()
+        self.microbatch_mult()
+            * self
+                .layers
+                .iter()
+                .flat_map(|l| l.rounds.iter())
+                .map(|r| r.expert_secs.iter().sum::<f64>())
+                .sum::<f64>()
     }
 }
 
 /// Shared lowering: Plan IR → task DAG for one forward pass. `entry[g]` are
 /// the per-GPU entry dependencies; returns the per-GPU exit tasks.
+///
+/// Plans without a [`PipelineSchedule`] lower exactly as before the overlap
+/// refactor (every [`Sync::Bulk`] phase keeps its global barrier);
+/// pipelined plans instantiate each stage's per-microbatch layers
+/// `microbatches` times with activation handoffs between stages.
 pub fn lower_forward(plan: &Plan, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
     assert_eq!(entry.len(), plan.gpus, "entry arity must match plan GPUs");
+    match &plan.pipeline {
+        None => {
+            let mut cur: Vec<TaskId> = entry.to_vec();
+            for layer in &plan.layers {
+                cur = lower_layer(layer, plan.gpus, dag, &cur, 0..plan.gpus);
+            }
+            cur
+        }
+        Some(sched) => lower_pipeline_forward(plan, sched, dag, entry),
+    }
+}
+
+/// Pipelined lowering: microbatch-major, stage-inner. Stage `s` processes
+/// microbatch `m` after (a) its own microbatch `m − 1` (FIFO per stage) and
+/// (b) the activation handoff of microbatch `m` from stage `s − 1`. With
+/// [`Sync::Window`] handoffs, the sender moves on to its next microbatch
+/// while the boundary transfer is still in flight — compute/comm overlap;
+/// with [`Sync::Bulk`] every boundary joins all GPUs — the sequential
+/// baseline.
+fn lower_pipeline_forward(
+    plan: &Plan,
+    sched: &PipelineSchedule,
+    dag: &mut Dag,
+    entry: &[TaskId],
+) -> Vec<TaskId> {
+    let g = plan.gpus;
+    let (pp, mb) = (sched.stages, sched.microbatches);
+    assert!(pp >= 1 && mb >= 1, "pipeline degrees must be positive");
+    assert_eq!(g % pp, 0, "pipeline stages must partition the plan's GPUs");
+    assert_eq!(plan.layers.len() % pp, 0, "pipeline stages must partition the plan's layers");
+    let lps = plan.layers.len() / pp;
+    let gps = g / pp;
     let mut cur: Vec<TaskId> = entry.to_vec();
-    for layer in &plan.layers {
-        cur = lower_layer(layer, plan.gpus, dag, &cur);
+    // activation arrival awaiting consumption by each receiving GPU (depth-1
+    // FIFO: stage s+1 consumes microbatch m's handoff in the same microbatch
+    // iteration that produced it)
+    let mut handoff: Vec<Option<TaskId>> = vec![None; g];
+    for _m in 0..mb {
+        for s in 0..pp {
+            let base = s * gps;
+            let active = base..base + gps;
+            // join the upstream activation into this stage's FIFO chain
+            for u in active.clone() {
+                if let Some(arr) = handoff[u].take() {
+                    cur[u] = dag.barrier(vec![cur[u], arr], "pp_entry");
+                }
+            }
+            for layer in &plan.layers[s * lps..(s + 1) * lps] {
+                let next = lower_layer(layer, g, dag, &cur, active.clone());
+                for u in active.clone() {
+                    cur[u] = next[u];
+                }
+            }
+            // activation handoff to the same-offset peer in the next stage
+            if s + 1 < pp {
+                let mut arrivals = Vec::with_capacity(gps);
+                for (off, u) in active.clone().enumerate() {
+                    let dst = base + gps + off;
+                    let t = dag.transfer(
+                        u,
+                        dst,
+                        sched.boundary_bytes,
+                        Tag::Other,
+                        vec![cur[u]],
+                        "pp_boundary",
+                    );
+                    arrivals.push((dst, t));
+                }
+                match sched.boundary_sync {
+                    Sync::Window { .. } => {
+                        for (dst, t) in arrivals {
+                            handoff[dst] = Some(t);
+                        }
+                    }
+                    Sync::Bulk => {
+                        let mut deps: Vec<TaskId> = arrivals.iter().map(|&(_, t)| t).collect();
+                        deps.extend(cur.iter().copied());
+                        let bar = dag.barrier(deps, "pp_bulk");
+                        for c in cur.iter_mut() {
+                            *c = bar;
+                        }
+                    }
+                }
+            }
+        }
     }
     cur
 }
 
 /// Macro-flow phases fold per-member setup into compute vectors (a lone
 /// representative setup task would both under-count the serialized setup and
-/// emit O(groups) stray compute tasks), and must be collective: with
-/// per-destination barriers, a bundle's arrival would gate only its
-/// *representative* destination and every other member destination would
-/// silently run ahead of its data.
+/// emit O(groups) stray compute tasks), and must be bulk-synchronous
+/// collectives: with per-destination barriers (non-collective or windowed),
+/// a bundle's arrival would gate only its *representative* destination and
+/// every other member destination would silently run ahead of its data.
 fn check_macro_phase(phase: &CommPhase) {
     assert!(
         phase.macro_flows.is_empty() || phase.setup_secs == 0.0,
@@ -248,29 +465,43 @@ fn check_macro_phase(phase: &CommPhase) {
          (build such phases with CommPhase::folded)",
         phase.label
     );
+    assert!(
+        phase.macro_flows.is_empty() || phase.sync == Sync::Bulk,
+        "phase {:?} carries folded bundles but requests an overlap window; \
+         representative endpoints only gate every destination through the \
+         phase's bulk barrier, so folded phases must stay Sync::Bulk",
+        phase.label
+    );
 }
 
-fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec<TaskId> {
+fn lower_layer(
+    lp: &LayerPlan,
+    g: usize,
+    dag: &mut Dag,
+    entry: &[TaskId],
+    active: std::ops::Range<usize>,
+) -> Vec<TaskId> {
     assert_eq!(lp.pre_secs.len(), g, "pre_secs arity");
     // prologue (fused SREncode)
-    let prologue: Vec<TaskId> = match &lp.migrate.prologue_secs {
-        Some(secs) => {
-            assert_eq!(secs.len(), g, "prologue arity");
-            (0..g)
-                .map(|m| dag.compute(m, secs[m], vec![entry[m]], lp.migrate.prologue_label))
-                .collect()
+    let mut mig_stage: Vec<TaskId> = entry.to_vec();
+    if let Some(secs) = &lp.migrate.prologue_secs {
+        assert_eq!(secs.len(), g, "prologue arity");
+        for m in active.clone() {
+            mig_stage[m] = dag.compute(m, secs[m], vec![entry[m]], lp.migrate.prologue_label);
         }
-        None => entry.to_vec(),
-    };
+    }
 
-    // migrate phases: chained per-GPU stage, arrivals gate every expert
-    let mut mig_stage = prologue;
+    // migrate phases: chained per-GPU stage, arrivals gate every expert.
+    // `bulk` = collective phase closing with one global (active-wide)
+    // barrier; a collective phase with an overlap window instead gates each
+    // destination by its own arrivals, like a non-collective phase.
     let mut mig_arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
     for phase in &lp.migrate.phases {
         if phase.is_empty() {
             continue;
         }
         check_macro_phase(phase);
+        let bulk = phase.collective && phase.sync == Sync::Bulk;
         let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
         for f in &phase.flows {
             let mut dep = mig_stage[f.src];
@@ -279,30 +510,31 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
             }
             let t = dag.transfer(f.src, f.dst, f.bytes, Tag::AG, vec![dep], phase.label);
             arrivals[f.dst].push(t);
-            if !phase.collective {
+            if !bulk {
                 mig_arrivals[f.dst].push(t);
             }
         }
         for f in &phase.macro_flows {
-            // bundles only appear in collective phases (check_macro_phase),
-            // whose bulk barrier lands in every GPU's mig_arrivals below
+            // bundles only appear in bulk collective phases
+            // (check_macro_phase), whose barrier lands in every GPU's
+            // mig_arrivals below
             let dep = mig_stage[f.src];
             let t = dag.transfer_n(f.src, f.dst, f.bytes, f.count, Tag::AG, vec![dep], phase.label);
             arrivals[f.dst].push(t);
         }
-        if phase.collective {
-            // one bulk-synchronous barrier: every GPU's stage passes through
-            // it, so folded arrivals gate all destinations, and it stands in
-            // for per-GPU migrate arrivals on every expert
+        if bulk {
+            // one bulk-synchronous barrier: every active GPU's stage passes
+            // through it, so folded arrivals gate all destinations, and it
+            // stands in for per-GPU migrate arrivals on every expert
             let mut deps: Vec<TaskId> = arrivals.into_iter().flatten().collect();
-            deps.extend(mig_stage.iter().copied());
+            deps.extend(active.clone().map(|m| mig_stage[m]));
             let bar = dag.barrier(deps, "ag_phase");
-            for m in 0..g {
+            for m in active.clone() {
                 mig_stage[m] = bar;
                 mig_arrivals[m].push(bar);
             }
         } else {
-            for m in 0..g {
+            for m in active.clone() {
                 if !arrivals[m].is_empty() {
                     let mut deps = std::mem::take(&mut arrivals[m]);
                     deps.push(mig_stage[m]);
@@ -313,8 +545,10 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
     }
 
     // pre-expert compute
-    let pre: Vec<TaskId> =
-        (0..g).map(|m| dag.compute(m, lp.pre_secs[m], vec![entry[m]], "pre_expert")).collect();
+    let mut pre: Vec<TaskId> = entry.to_vec();
+    for m in active.clone() {
+        pre[m] = dag.compute(m, lp.pre_secs[m], vec![entry[m]], "pre_expert");
+    }
 
     // data rounds
     let mut exits: Vec<Vec<TaskId>> = vec![Vec::new(); g];
@@ -326,6 +560,7 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
                 continue;
             }
             check_macro_phase(phase);
+            let bulk = phase.collective && phase.sync == Sync::Bulk;
             let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
             for f in &phase.flows {
                 let mut dep = stage[f.src];
@@ -341,15 +576,15 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
                     .transfer_n(f.src, f.dst, f.bytes, f.count, Tag::A2A, vec![dep], phase.label);
                 arrivals[f.dst].push(t);
             }
-            if phase.collective {
+            if bulk {
                 let mut deps: Vec<TaskId> = arrivals.into_iter().flatten().collect();
-                deps.extend(stage.iter().copied());
+                deps.extend(active.clone().map(|m| stage[m]));
                 let bar = dag.barrier(deps, "disp_phase");
-                for s in stage.iter_mut() {
-                    *s = bar;
+                for m in active.clone() {
+                    stage[m] = bar;
                 }
             } else {
-                for m in 0..g {
+                for m in active.clone() {
                     if !arrivals[m].is_empty() {
                         let mut deps = std::mem::take(&mut arrivals[m]);
                         deps.push(stage[m]);
@@ -359,19 +594,19 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
             }
         }
         // expert compute: dispatch stage + own pre + migrate arrivals
-        let expert: Vec<TaskId> = (0..g)
-            .map(|m| {
-                let mut deps = vec![stage[m], pre[m]];
-                deps.extend(mig_arrivals[m].iter().copied());
-                dag.compute(m, round.expert_secs[m], deps, "expert")
-            })
-            .collect();
+        let mut expert = pre.clone();
+        for m in active.clone() {
+            let mut deps = vec![stage[m], pre[m]];
+            deps.extend(mig_arrivals[m].iter().copied());
+            expert[m] = dag.compute(m, round.expert_secs[m], deps, "expert");
+        }
         // combine: retrace dispatch phases in reverse with swapped endpoints
         let mut cstage = expert.clone();
         for phase in round.dispatch.iter().rev() {
             if phase.is_empty() {
                 continue;
             }
+            let bulk = phase.collective && phase.sync == Sync::Bulk;
             let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
             for f in &phase.flows {
                 let t =
@@ -390,15 +625,15 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
                 );
                 arrivals[f.src].push(t);
             }
-            if phase.collective {
+            if bulk {
                 let mut deps: Vec<TaskId> = arrivals.into_iter().flatten().collect();
-                deps.extend(cstage.iter().copied());
+                deps.extend(active.clone().map(|m| cstage[m]));
                 let bar = dag.barrier(deps, "comb_phase");
-                for s in cstage.iter_mut() {
-                    *s = bar;
+                for m in active.clone() {
+                    cstage[m] = bar;
                 }
             } else {
-                for m in 0..g {
+                for m in active.clone() {
                     if !arrivals[m].is_empty() {
                         let mut deps = std::mem::take(&mut arrivals[m]);
                         deps.push(cstage[m]);
@@ -407,7 +642,7 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
                 }
             }
         }
-        for m in 0..g {
+        for m in active.clone() {
             exits[m].push(cstage[m]);
             exits[m].push(expert[m]);
         }
@@ -420,14 +655,13 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
             phase.macro_flows.is_empty(),
             "tp_sync phases are intra-group rings; folded bundles are not supported there"
         );
-        if !phase.flows.is_empty() {
-            let stage: Vec<TaskId> = (0..g)
-                .map(|m| {
-                    let mut deps = std::mem::take(&mut exits[m]);
-                    deps.push(pre[m]);
-                    dag.barrier(deps, "tp_stage")
-                })
-                .collect();
+        if !phase.is_empty() {
+            let mut stage: Vec<TaskId> = entry.to_vec();
+            for m in active.clone() {
+                let mut deps = std::mem::take(&mut exits[m]);
+                deps.push(pre[m]);
+                stage[m] = dag.barrier(deps, "tp_stage");
+            }
             let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); g];
             for f in &phase.flows {
                 let mut dep = stage[f.src];
@@ -437,7 +671,7 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
                 let t = dag.transfer(f.src, f.dst, f.bytes, Tag::AllReduce, vec![dep], phase.label);
                 arrivals[f.dst].push(t);
             }
-            for m in 0..g {
+            for m in active.clone() {
                 let mut deps = std::mem::take(&mut arrivals[m]);
                 deps.push(stage[m]);
                 exits[m].push(dag.barrier(deps, "tp_phase"));
@@ -446,13 +680,13 @@ fn lower_layer(lp: &LayerPlan, g: usize, dag: &mut Dag, entry: &[TaskId]) -> Vec
     }
 
     // layer end
-    (0..g)
-        .map(|m| {
-            let mut deps = std::mem::take(&mut exits[m]);
-            deps.push(pre[m]);
-            dag.barrier(deps, "layer_end")
-        })
-        .collect()
+    let mut out: Vec<TaskId> = entry.to_vec();
+    for m in active {
+        let mut deps = std::mem::take(&mut exits[m]);
+        deps.push(pre[m]);
+        out[m] = dag.barrier(deps, "layer_end");
+    }
+    out
 }
 
 #[cfg(test)]
@@ -464,6 +698,7 @@ mod tests {
     fn two_gpu_layer() -> Plan {
         Plan {
             gpus: 2,
+            pipeline: None,
             layers: vec![LayerPlan {
                 migrate: MigratePlan {
                     prologue_secs: Some(vec![0.1, 0.1]),
@@ -601,6 +836,7 @@ mod tests {
         ];
         let mk_plan = |dispatch: CommPhase| Plan {
             gpus: g,
+            pipeline: None,
             layers: vec![LayerPlan {
                 migrate: MigratePlan::none(),
                 pre_secs: vec![0.1; g],
@@ -654,6 +890,7 @@ mod tests {
         phase.collective = false;
         let plan = Plan {
             gpus: 2,
+            pipeline: None,
             layers: vec![LayerPlan {
                 migrate: MigratePlan::none(),
                 pre_secs: vec![0.0, 0.0],
@@ -677,6 +914,7 @@ mod tests {
         phase.setup_secs = 1e-3;
         let plan = Plan {
             gpus: 2,
+            pipeline: None,
             layers: vec![LayerPlan {
                 migrate: MigratePlan::none(),
                 pre_secs: vec![0.0, 0.0],
@@ -695,6 +933,7 @@ mod tests {
         // still gate the expert compute of the *other* GPU in DC 1
         let plan = Plan {
             gpus: 4,
+            pipeline: None,
             layers: vec![LayerPlan {
                 migrate: MigratePlan {
                     prologue_secs: None,
@@ -734,6 +973,7 @@ mod tests {
     fn empty_phases_and_zero_prologue_are_harmless() {
         let plan = Plan {
             gpus: 2,
+            pipeline: None,
             layers: vec![LayerPlan {
                 migrate: MigratePlan::none(),
                 pre_secs: vec![0.5, 0.5],
@@ -752,5 +992,235 @@ mod tests {
         let r = Simulator::new(&cluster).run(&dag);
         assert!((r.makespan - 0.75).abs() < 1e-9, "pre + expert serialize: {}", r.makespan);
         assert_eq!(r.bytes_a2a, 0.0);
+    }
+
+    /// Injected empty phases lower to exactly zero tasks: node count,
+    /// makespan and traffic all match the stripped plan (the satellite
+    /// regression for `CommPhase::is_empty` skipping).
+    #[test]
+    fn injected_empty_phases_add_no_nodes() {
+        let stripped = two_gpu_layer();
+        let mut padded = stripped.clone();
+        padded.layers[0].migrate.phases.push(CommPhase::new(Vec::new(), "ag"));
+        padded.layers[0].migrate.phases.insert(0, CommPhase::new(Vec::new(), "ag"));
+        padded.layers[0].rounds[0].dispatch.push(CommPhase::new(Vec::new(), "dispatch"));
+        padded.layers[0].rounds[0].dispatch.insert(0, CommPhase::new(Vec::new(), "dispatch"));
+        let lower = |p: &Plan| {
+            let mut dag = Dag::new();
+            let s = dag.barrier(vec![], "s");
+            let e = lower_forward(p, &mut dag, &[s, s]);
+            dag.barrier(e, "end");
+            dag
+        };
+        let a = lower(&stripped);
+        let b = lower(&padded);
+        assert_eq!(a.tasks.len(), b.tasks.len(), "empty phases must not add nodes");
+        assert_eq!(a.traffic_by_tag(Tag::A2A), b.traffic_by_tag(Tag::A2A));
+        assert_eq!(a.traffic_by_tag(Tag::AG), b.traffic_by_tag(Tag::AG));
+        let cluster = presets::dcs_x_gpus(2, 1, 10.0, 128.0);
+        let ra = Simulator::new(&cluster).run(&a);
+        let rb = Simulator::new(&cluster).run(&b);
+        assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits());
+    }
+
+    /// A collective dispatch phase with an overlap window gates each
+    /// destination by its own arrivals: the GPU with no incoming flows
+    /// starts its expert span immediately instead of waiting behind the
+    /// global bulk barrier.
+    #[test]
+    fn windowed_collective_phase_overlaps_compute_with_flows() {
+        let mk = |sync: Sync| {
+            let mut phase = CommPhase::new(vec![Flow { src: 0, dst: 1, bytes: 5e6 }], "dispatch");
+            phase.collective = true;
+            phase.sync = sync;
+            Plan {
+                gpus: 2,
+                pipeline: None,
+                layers: vec![LayerPlan {
+                    migrate: MigratePlan::none(),
+                    pre_secs: vec![0.0, 0.0],
+                    rounds: vec![Round { dispatch: vec![phase], expert_secs: vec![0.5, 0.0] }],
+                    tp_sync: None,
+                }],
+            }
+        };
+        let cluster = presets::dcs_x_gpus(2, 1, 10.0, 128.0);
+        let run = |p: &Plan| {
+            let mut dag = Dag::new();
+            let s = dag.barrier(vec![], "s");
+            let e = lower_forward(p, &mut dag, &[s, s]);
+            dag.barrier(e, "end");
+            Simulator::new(&cluster).run(&dag)
+        };
+        let bulk = run(&mk(Sync::Bulk));
+        let win = run(&mk(Sync::Window { overlaps_with: "expert" }));
+        assert_eq!(bulk.bytes_a2a, win.bytes_a2a, "windows must not change traffic");
+        let wire = cluster.levels[0].latency + 5e6 / cluster.levels[0].bandwidth;
+        // bulk: GPU 0's 0.5 s expert serializes behind the phase barrier
+        assert!(bulk.makespan >= wire + 0.5 - 1e-9, "bulk barrier gates GPU 0: {}", bulk.makespan);
+        // window: the expert overlaps the flow (and the combine retrace)
+        assert!(
+            win.makespan + 1e-9 < bulk.makespan,
+            "window must overlap: {} !< {}",
+            win.makespan,
+            bulk.makespan
+        );
+    }
+
+    /// Property: under *any* per-phase sync assignment, traffic and expert
+    /// seconds are conserved, no schedule beats data dependencies (every
+    /// expert still finishes after the dispatch arrivals that feed it), and
+    /// no windowed schedule is slower than the all-bulk one.
+    #[test]
+    fn window_assignments_conserve_traffic_and_respect_data_deps() {
+        let base = {
+            let mut p = two_gpu_layer();
+            // make both phases collective so the sync policy has force
+            p.layers[0].migrate.phases[0].collective = true;
+            p.layers[0].rounds[0].dispatch[0].collective = true;
+            p
+        };
+        let cluster = presets::dcs_x_gpus(2, 1, 10.0, 128.0);
+        let mut bulk_makespan = None;
+        for mask in 0..4u32 {
+            let mut plan = base.clone();
+            if mask & 1 != 0 {
+                plan.layers[0].migrate.phases[0].sync = Sync::Window { overlaps_with: "expert" };
+            }
+            if mask & 2 != 0 {
+                plan.layers[0].rounds[0].dispatch[0].sync =
+                    Sync::Window { overlaps_with: "expert" };
+            }
+            let mut dag = Dag::new();
+            let s = dag.barrier(vec![], "s");
+            let e = lower_forward(&plan, &mut dag, &[s, s]);
+            dag.barrier(e, "end");
+            assert_eq!(dag.traffic_by_tag(Tag::A2A), plan.a2a_bytes());
+            assert_eq!(dag.traffic_by_tag(Tag::AG), plan.ag_bytes());
+            let r = Simulator::new(&cluster).run(&dag);
+            // data deps: every expert finishes no earlier than every dispatch
+            // arrival routed to its GPU
+            for (ei, et) in dag.tasks.iter().enumerate().filter(|(_, t)| t.label == "expert") {
+                let egpu = match et.kind {
+                    TaskKind::Compute { gpu, .. } => gpu,
+                    _ => unreachable!(),
+                };
+                for (ti, tt) in
+                    dag.tasks.iter().enumerate().filter(|(_, t)| t.label == "dispatch")
+                {
+                    if let TaskKind::Transfer { dst, .. } = tt.kind {
+                        if dst == egpu {
+                            assert!(
+                                r.finish[ei] >= r.finish[ti] - 1e-12,
+                                "mask {mask}: expert ran ahead of its dispatch arrival"
+                            );
+                        }
+                    }
+                }
+            }
+            match mask {
+                0 => bulk_makespan = Some(r.makespan),
+                _ => assert!(
+                    r.makespan <= bulk_makespan.unwrap() + 1e-9,
+                    "mask {mask}: window slower than bulk"
+                ),
+            }
+        }
+    }
+
+    /// Stage-partitioned pipeline lowering: `Sync::Window` boundaries let
+    /// microbatches overlap across stages (fill/drain bubbles only), while
+    /// `Sync::Bulk` boundaries serialize every microbatch; both conserve
+    /// compute and boundary traffic.
+    #[test]
+    fn pipeline_lowering_overlaps_microbatches_and_conserves() {
+        let g = 4;
+        let mb = 4;
+        let stage_layer = |secs: [f64; 4]| LayerPlan {
+            migrate: MigratePlan::none(),
+            pre_secs: vec![0.0; g],
+            rounds: vec![Round { dispatch: Vec::new(), expert_secs: secs.to_vec() }],
+            tp_sync: None,
+        };
+        let mk = |sync: Sync| Plan {
+            gpus: g,
+            pipeline: Some(PipelineSchedule {
+                stages: 2,
+                microbatches: mb,
+                boundary_bytes: 1e6,
+                boundary_sync: sync,
+            }),
+            layers: vec![
+                stage_layer([0.1, 0.1, 0.0, 0.0]),
+                stage_layer([0.0, 0.0, 0.1, 0.1]),
+            ],
+        };
+        let cluster = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let run = |p: &Plan| {
+            let mut dag = Dag::new();
+            let s = dag.barrier(vec![], "s");
+            let e = lower_forward(p, &mut dag, &[s; 4]);
+            dag.barrier(e, "end");
+            let r = Simulator::new(&cluster).run(&dag);
+            (dag, r)
+        };
+        let win = mk(Sync::Window { overlaps_with: "stage" });
+        let (wd, wr) = run(&win);
+        let (bd, br) = run(&mk(Sync::Bulk));
+        // conservation: M instantiations of the per-microbatch layers
+        let dag_expert = |d: &Dag| {
+            d.tasks
+                .iter()
+                .filter(|t| t.label == "expert")
+                .map(|t| match t.kind {
+                    TaskKind::Compute { seconds, .. } => seconds,
+                    _ => 0.0,
+                })
+                .sum::<f64>()
+        };
+        assert!((dag_expert(&wd) - win.expert_secs()).abs() < 1e-12);
+        assert!((dag_expert(&wd) - 0.4 * mb as f64 / 4.0 * 4.0).abs() < 1e-12);
+        assert_eq!(wd.traffic_by_tag(Tag::Other), win.boundary_bytes());
+        assert_eq!(bd.traffic_by_tag(Tag::Other), win.boundary_bytes());
+        // a windowed pipeline fills and drains; a bulk one serializes
+        assert!(
+            wr.makespan + 1e-9 < br.makespan,
+            "pipelining must beat bulk boundaries: {} !< {}",
+            wr.makespan,
+            br.makespan
+        );
+        // windowed: (mb + stages - 1) compute slots of 0.1 s, the boundary
+        // wire time hidden behind all but one handoff; bulk pays the wire
+        // time on the critical path at every one of the mb boundaries
+        assert!(wr.makespan >= (mb + 1) as f64 * 0.1 - 1e-9);
+        let wire = cluster.levels[0].latency + 1e6 / cluster.levels[0].bandwidth;
+        assert!(br.makespan >= (mb + 1) as f64 * 0.1 + mb as f64 * wire - 1e-9);
+        assert!(wr.makespan <= (mb + 1) as f64 * 0.1 + 2.0 * wire + 1e-9);
+    }
+
+    /// A single-stage, single-microbatch pipeline is the identity: same
+    /// node count and bitwise-equal makespan as the plain lowering.
+    #[test]
+    fn trivial_pipeline_matches_plain_lowering_bitwise() {
+        let plain = two_gpu_layer();
+        let mut piped = plain.clone();
+        piped.pipeline = Some(PipelineSchedule {
+            stages: 1,
+            microbatches: 1,
+            boundary_bytes: 0.0,
+            boundary_sync: Sync::Bulk,
+        });
+        let cluster = presets::dcs_x_gpus(2, 1, 10.0, 128.0);
+        let run = |p: &Plan| {
+            let mut dag = Dag::new();
+            let s = dag.barrier(vec![], "s");
+            let e = lower_forward(p, &mut dag, &[s, s]);
+            dag.barrier(e, "end");
+            (dag.tasks.len(), Simulator::new(&cluster).run(&dag).makespan)
+        };
+        let (an, am) = run(&plain);
+        let (bn, bm) = run(&piped);
+        assert_eq!(an, bn);
+        assert_eq!(am.to_bits(), bm.to_bits());
     }
 }

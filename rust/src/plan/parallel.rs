@@ -1,8 +1,16 @@
-//! TED-style joint parallelism: planning under a
-//! [`ParallelismConfig`](crate::cluster::ParallelismConfig) (TP × EP × DP).
+//! Joint parallelism: planning under a
+//! [`ParallelismConfig`](crate::cluster::ParallelismConfig)
+//! (PP × TP × EP × DP).
 //!
 //! Every [`System`](crate::systems::System) plans a pure-EP forward pass;
-//! this module makes *any* system TED-capable without touching its planner:
+//! this module makes *any* system jointly-parallel without touching its
+//! planner. `pp > 1` configs are handled first ([`planned_pipeline`]): each
+//! pipeline stage's layer block is planned on its stage sub-cluster — with
+//! the TP × EP × DP machinery below applied recursively within the stage —
+//! and the assembled plan carries a
+//! [`PipelineSchedule`](crate::plan::PipelineSchedule) whose microbatch
+//! handoffs default to [`Sync::Window`](crate::plan::Sync) overlap. For the
+//! TED (`pp = 1`) path:
 //!
 //! 1. **Virtualize** — for each of the `dp` data-parallel replicas, build a
 //!    derived [`SchedCtx`]: the replica's [virtual
@@ -45,12 +53,17 @@
 use crate::cluster::ParallelismConfig;
 use crate::model::solver::PlanInput;
 use crate::moe::{GpuSpec, MoEWorkload, Routing};
-use crate::plan::{CommPhase, Flow, LayerPlan, MigratePlan, Plan, Round};
+use crate::plan::{
+    CommPhase, Flow, LayerPlan, MacroFlow, MigratePlan, PipelineSchedule, Plan, Round, Sync,
+};
 use crate::systems::{SchedCtx, System};
 
 /// Plan one forward pass under `ctx.parallelism`. Identity configs return
 /// `sys.plan_forward(ctx)` unchanged; non-identity configs plan each replica
-/// on its virtual context and expand back to the physical GPUs.
+/// on its virtual context and expand back to the physical GPUs. Configs with
+/// `pp > 1` plan each pipeline stage's layer block on its stage sub-cluster
+/// (recursively applying the TP/DP machinery within the stage) and attach a
+/// [`PipelineSchedule`] — see [`planned_pipeline`].
 ///
 /// Panics if the config does not factor the cluster (configs built via
 /// [`ParallelismConfig::new`] are always valid) or if the routing does not
@@ -59,6 +72,9 @@ pub fn planned_forward<S: System + ?Sized>(sys: &S, ctx: &SchedCtx) -> Plan {
     let cfg = ctx.parallelism;
     if cfg.is_identity() {
         return sys.plan_forward(ctx);
+    }
+    if cfg.pp > 1 {
+        return planned_pipeline(sys, ctx);
     }
     cfg.validate(ctx.cluster).expect("parallelism config incompatible with cluster");
     let g = ctx.gpus();
@@ -89,6 +105,154 @@ pub fn planned_forward<S: System + ?Sized>(sys: &S, ctx: &SchedCtx) -> Plan {
         inject_tp_sync(&mut plan, ctx.workload, &cfg);
     }
     plan
+}
+
+/// Plan a `pp > 1` config: stage `s` owns the contiguous layer block
+/// `[s·L/pp, (s+1)·L/pp)` on the contiguous GPU block
+/// `[s·G/pp, (s+1)·G/pp)`. Every microbatch's tokens traverse every stage,
+/// so a stage GPU processes `tokens_per_gpu · pp / microbatches` tokens per
+/// microbatch; the global routing is folded onto the stage (same-offset GPU
+/// rows and same-offset expert columns summed across stages — each stage
+/// plans against the stage-folded routing of its own layer block). Within a
+/// stage, the TP/EP/DP machinery applies recursively. The stored layers are
+/// per-microbatch; the attached [`PipelineSchedule`] instantiates them
+/// `microbatches` times at lowering, with [`Sync::Window`] activation
+/// handoffs unless `ctx.pp_overlap` is off ([`Sync::Bulk`] — the
+/// bulk-synchronous baseline).
+fn planned_pipeline<S: System + ?Sized>(sys: &S, ctx: &SchedCtx) -> Plan {
+    let cfg = ctx.parallelism;
+    cfg.validate(ctx.cluster).expect("parallelism config incompatible with cluster");
+    let g = ctx.gpus();
+    assert!(
+        ctx.routing.gpus() >= g,
+        "routing covers {} GPUs but the cluster has {g}",
+        ctx.routing.gpus()
+    );
+    let (pp, mb) = (cfg.pp, cfg.microbatches);
+    let w = ctx.workload;
+    assert_eq!(w.moe_layers % pp, 0, "pp = {pp} must divide the {} MoE layers", w.moe_layers);
+    assert_eq!(
+        (w.tokens_per_gpu * pp) % mb,
+        0,
+        "microbatches = {mb} must divide tokens_per_gpu × pp = {}",
+        w.tokens_per_gpu * pp
+    );
+    let gps = cfg.stage_gpus();
+    let lps = w.moe_layers / pp;
+    let stage_cluster = cfg.stage_cluster(ctx.cluster).expect("validated config");
+    let stage_w = MoEWorkload {
+        tokens_per_gpu: w.tokens_per_gpu * pp / mb,
+        moe_layers: lps,
+        ..*w
+    };
+    let stage_cfg = ParallelismConfig { pp: 1, microbatches: 1, ..cfg };
+    if let Some(rs) = ctx.layer_routing {
+        assert_eq!(
+            rs.len(),
+            w.moe_layers,
+            "per-layer routing must cover every layer to stage-partition it"
+        );
+    }
+    let scale = 1.0 / mb as f64;
+    let mut layers = Vec::with_capacity(pp * lps);
+    for s in 0..pp {
+        let sroute = stage_routing(ctx.routing, g, gps, scale);
+        let strace: Option<Vec<Routing>> = ctx.layer_routing.map(|rs| {
+            rs[s * lps..(s + 1) * lps]
+                .iter()
+                .map(|x| stage_routing(x, g, gps, scale))
+                .collect()
+        });
+        let mut sctx = SchedCtx::new(&stage_cluster, &stage_w, &sroute);
+        sctx.gpu = ctx.gpu;
+        sctx.fixed_layer_overhead = ctx.fixed_layer_overhead;
+        sctx.parallelism = stage_cfg;
+        sctx.pp_overlap = ctx.pp_overlap;
+        if let Some(t) = &strace {
+            sctx.layer_routing = Some(t.as_slice());
+        }
+        let sp = planned_forward(sys, &sctx);
+        assert_eq!(sp.gpus, gps, "stage plan must cover the stage GPUs");
+        assert_eq!(sp.layers.len(), lps, "stage plan must cover the stage layer block");
+        assert!(sp.pipeline.is_none(), "stage plans must not nest pipelines");
+        for lp in &sp.layers {
+            layers.push(offset_layer(lp, s * gps, g));
+        }
+    }
+    Plan {
+        gpus: g,
+        layers,
+        pipeline: Some(PipelineSchedule {
+            stages: pp,
+            microbatches: mb,
+            // per-GPU activation bytes per microbatch boundary
+            boundary_bytes: stage_w.d_bytes(),
+            boundary_sync: if ctx.pp_overlap {
+                Sync::Window { overlaps_with: "expert" }
+            } else {
+                Sync::Bulk
+            },
+        }),
+    }
+}
+
+/// Fold the global routing onto one stage: same-offset GPU rows and
+/// same-offset expert columns across the `pp` stage blocks are summed, then
+/// scaled by `scale` (one microbatch's share).
+fn stage_routing(routing: &Routing, g: usize, gps: usize, scale: f64) -> Routing {
+    let pp = g / gps;
+    let e_total = routing.experts();
+    assert_eq!(e_total % pp, 0, "expert columns must fold evenly across {pp} stages");
+    let eps = e_total / pp;
+    let mut tokens = vec![vec![0.0f64; eps]; gps];
+    for gi in 0..g {
+        for (e, &t) in routing.tokens[gi].iter().enumerate() {
+            tokens[gi % gps][e % eps] += t * scale;
+        }
+    }
+    Routing { tokens }
+}
+
+/// Remap a stage-local layer plan (arity `gps`) onto the global GPU space:
+/// flow endpoints shift by `base`, per-GPU vectors pad to arity `g` with
+/// zeros outside the stage block (the pipeline lowering only walks the
+/// stage's own GPUs).
+fn offset_layer(lp: &LayerPlan, base: usize, g: usize) -> LayerPlan {
+    let off_phase = |p: &CommPhase| CommPhase {
+        flows: p
+            .flows
+            .iter()
+            .map(|f| Flow { src: f.src + base, dst: f.dst + base, bytes: f.bytes })
+            .collect(),
+        macro_flows: p
+            .macro_flows
+            .iter()
+            .map(|m| MacroFlow { src: m.src + base, dst: m.dst + base, ..*m })
+            .collect(),
+        ..p.clone()
+    };
+    let off_secs = |secs: &[f64]| {
+        let mut v = vec![0.0f64; g];
+        v[base..base + secs.len()].copy_from_slice(secs);
+        v
+    };
+    LayerPlan {
+        migrate: MigratePlan {
+            prologue_secs: lp.migrate.prologue_secs.as_deref().map(off_secs),
+            prologue_label: lp.migrate.prologue_label,
+            phases: lp.migrate.phases.iter().map(off_phase).collect(),
+        },
+        pre_secs: off_secs(&lp.pre_secs),
+        rounds: lp
+            .rounds
+            .iter()
+            .map(|r| Round {
+                dispatch: r.dispatch.iter().map(off_phase).collect(),
+                expert_secs: off_secs(&r.expert_secs),
+            })
+            .collect(),
+        tp_sync: lp.tp_sync.as_ref().map(off_phase),
+    }
 }
 
 /// The workload one EP rank (= TP group) of one replica sees: a group
@@ -201,6 +365,7 @@ fn merged_phase(
         macro_flows: Vec::new(),
         setup_secs: proto.setup_secs,
         collective: proto.collective,
+        sync: proto.sync,
         label: proto.label,
     }
 }
@@ -216,6 +381,7 @@ fn expand_replicas(replica_plans: &[Plan], cfg: &ParallelismConfig, g: usize) ->
     for p in replica_plans {
         assert_eq!(p.gpus, cfg.ep, "replica plan must cover the virtual ranks");
         assert_eq!(p.layers.len(), layers_n, "replica layer counts diverge");
+        assert!(p.pipeline.is_none(), "virtual replica plans must not carry pipelines");
     }
     let mut layers = Vec::with_capacity(layers_n);
     for l in 0..layers_n {
@@ -253,6 +419,9 @@ fn expand_replicas(replica_plans: &[Plan], cfg: &ParallelismConfig, g: usize) ->
                     rls.iter().map(|rl| rl.migrate.phases.get(k)).collect();
                 merged_phase(&per, cfg)
             })
+            // a merge of all-empty replica phases carries no flows: keep it
+            // out of the plan rather than leaning on the lowering-side skip
+            .filter(|p| !p.is_empty())
             .collect();
 
         let n_rounds = rls[0].rounds.len();
@@ -268,6 +437,7 @@ fn expand_replicas(replica_plans: &[Plan], cfg: &ParallelismConfig, g: usize) ->
                             rls.iter().map(|rl| rl.rounds[c].dispatch.get(k)).collect();
                         merged_phase(&per, cfg)
                     })
+                    .filter(|p| !p.is_empty())
                     .collect();
                 let mut expert_secs = vec![0.0f64; g];
                 for (r, rl) in rls.iter().enumerate() {
@@ -284,7 +454,7 @@ fn expand_replicas(replica_plans: &[Plan], cfg: &ParallelismConfig, g: usize) ->
             tp_sync: None,
         });
     }
-    Plan { gpus: g, layers }
+    Plan { gpus: g, layers, pipeline: None }
 }
 
 /// Close every layer with the TP activation All-Reduce: a ring inside each
@@ -488,6 +658,109 @@ mod tests {
         );
         // and the layer now carries TP sync traffic
         assert!(got.bytes_allreduce > 0.0, "tp sync phases must be emitted");
+    }
+
+    /// pp configs conserve total expert compute exactly: each of the `mb`
+    /// microbatch instantiations runs `pp·T/mb` tokens through `L/pp`
+    /// layers on `G/pp` GPUs.
+    #[test]
+    fn pipeline_configs_conserve_expert_compute() {
+        let (cluster, w, routing) = parts(2, 4);
+        let base = {
+            let ctx = SchedCtx::new(&cluster, &w, &routing);
+            expert_secs_total(&forward_dag(&VanillaEp, &ctx))
+        };
+        assert!(base > 0.0);
+        for (pp, mb, tp, dp) in [(2, 1, 1, 1), (2, 2, 1, 1), (2, 4, 1, 1), (2, 2, 2, 1)] {
+            let cfg = crate::cluster::ParallelismConfig::new_4d(&cluster, pp, tp, dp, mb)
+                .unwrap();
+            let ctx = SchedCtx::new(&cluster, &w, &routing).with_parallelism(cfg);
+            let got = expert_secs_total(&forward_dag(&VanillaEp, &ctx));
+            assert!(
+                (got - base).abs() / base < 1e-9,
+                "pp={pp} mb={mb} tp={tp} dp={dp}: {got} expert-secs vs {base}"
+            );
+        }
+    }
+
+    /// A pp plan is stage-partitioned: every phase of stage `s` touches only
+    /// its GPU block, the schedule carries the activation boundary, and the
+    /// overlap default is a window.
+    #[test]
+    fn pipeline_plans_are_stage_partitioned_with_window_handoffs() {
+        let (cluster, w, routing) = parts(2, 4);
+        let cfg = crate::cluster::ParallelismConfig::new_4d(&cluster, 2, 1, 1, 2).unwrap();
+        let ctx = SchedCtx::new(&cluster, &w, &routing).with_parallelism(cfg);
+        let plan = planned_forward(&VanillaEp, &ctx);
+        assert_eq!(plan.gpus, 8);
+        assert_eq!(plan.layers.len(), w.moe_layers);
+        let sched = plan.pipeline.expect("pp plan must carry a schedule");
+        assert_eq!((sched.stages, sched.microbatches), (2, 2));
+        assert_eq!(sched.boundary_sync, Sync::Window { overlaps_with: "expert" });
+        // boundary: stage tokens per microbatch × hidden × 4 bytes
+        let stage_tokens = w.tokens_per_gpu * 2 / 2;
+        assert_eq!(sched.boundary_bytes, (stage_tokens * w.hidden * 4) as f64);
+        let gps = 4;
+        for (l, layer) in plan.layers.iter().enumerate() {
+            let stage = l / (w.moe_layers / 2);
+            let block = stage * gps..(stage + 1) * gps;
+            for r in &layer.rounds {
+                for p in &r.dispatch {
+                    assert!(!p.is_empty(), "stage plans must not carry empty phases");
+                    for f in &p.flows {
+                        assert!(
+                            block.contains(&f.src) && block.contains(&f.dst),
+                            "layer {l} flow {}→{} escapes stage block {block:?}",
+                            f.src,
+                            f.dst
+                        );
+                    }
+                }
+                for (m, &s) in r.expert_secs.iter().enumerate() {
+                    if !block.contains(&m) {
+                        assert_eq!(s, 0.0, "layer {l} computes outside its stage");
+                    }
+                }
+            }
+        }
+        // overlap off flips the handoffs to the bulk-synchronous baseline
+        let mut bulk_ctx = SchedCtx::new(&cluster, &w, &routing).with_parallelism(cfg);
+        bulk_ctx.pp_overlap = false;
+        let bulk = planned_forward(&VanillaEp, &bulk_ctx);
+        assert_eq!(bulk.pipeline.unwrap().boundary_sync, Sync::Bulk);
+        assert_eq!(bulk.layers, plan.layers, "overlap flag only changes the handoff sync");
+    }
+
+    /// Systems must not hand the lowering empty communication phases: the
+    /// chunked planners skip chunks with no remote flows and the TP/DP merge
+    /// drops all-empty merges (satellite regression).
+    #[test]
+    fn planned_phases_are_never_empty() {
+        let (cluster, w, routing) = parts(2, 4);
+        let configs = [
+            crate::cluster::ParallelismConfig::identity(cluster.total_gpus()),
+            crate::cluster::ParallelismConfig::new(&cluster, 1, 2).unwrap(),
+            crate::cluster::ParallelismConfig::new(&cluster, 2, 2).unwrap(),
+            // ep = 1: every virtual rank is alone, all chunks are local —
+            // the chunked planners must emit no dispatch phases at all
+            crate::cluster::ParallelismConfig::new(&cluster, 4, 2).unwrap(),
+        ];
+        for cfg in configs {
+            let ctx = SchedCtx::new(&cluster, &w, &routing).with_parallelism(cfg);
+            for sys in comparison_set() {
+                let plan = planned_forward(sys.as_ref(), &ctx);
+                for layer in &plan.layers {
+                    for p in &layer.migrate.phases {
+                        assert!(!p.is_empty(), "{}: empty migrate phase", sys.name());
+                    }
+                    for r in &layer.rounds {
+                        for p in &r.dispatch {
+                            assert!(!p.is_empty(), "{}: empty dispatch phase", sys.name());
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

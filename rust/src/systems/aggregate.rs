@@ -185,7 +185,10 @@ impl System for AggregateHybrid {
 /// All folded phases are [`collective`](CommPhase::collective), matching
 /// synchronized NCCL A2A/AG — which is also what makes the representative
 /// endpoints exact: the workload is uniform, so every member source reaches
-/// the phase simultaneously.
+/// the phase simultaneously. For the same reason folded phases must keep the
+/// default [`Sync::Bulk`](crate::plan::Sync) policy: a macro bundle's
+/// members are *defined* by the barrier-synchronised start, so lowering
+/// rejects `Sync::Window` on phases that carry macro flows.
 #[derive(Clone, Copy, Debug)]
 pub struct DcDense {
     pub dcs: usize,

@@ -54,6 +54,14 @@ impl System for Tutel {
 /// expert placement (SmartMoE reuses it with a searched placement). Each
 /// pipeline chunk becomes one Plan-IR round: a single dispatch phase, expert
 /// compute on arrivals, combine retracing the dispatch.
+///
+/// All phases are emitted with the default [`crate::plan::Sync::Bulk`]
+/// policy — the EP baselines are deliberately bulk-synchronous; overlap is
+/// what Tutel-style chunking (and, at the schedule level,
+/// `Sync::Window`/pipeline parallelism) buys back. Chunks whose dispatch has
+/// no remote flows (ep = 1 virtual ranks, fully local routing) emit an empty
+/// `dispatch` phase list rather than an empty `CommPhase`, so lowering adds
+/// no barrier-only nodes for them.
 pub(crate) fn plan_pipelined(ctx: &SchedCtx, chunks: usize, placement: Option<&Placement>) -> Plan {
     let g = ctx.gpus();
     let default_placement = Placement::round_robin(g, ctx.workload.experts_per_gpu);
@@ -86,10 +94,12 @@ pub(crate) fn plan_pipelined(ctx: &SchedCtx, chunks: usize, placement: Option<&P
                     ctx.expert_secs(total)
                 })
                 .collect();
-            rounds.push(Round {
-                dispatch: vec![CommPhase::new(flows, "dispatch")],
-                expert_secs,
-            });
+            let dispatch = if flows.is_empty() {
+                Vec::new()
+            } else {
+                vec![CommPhase::new(flows, "dispatch")]
+            };
+            rounds.push(Round { dispatch, expert_secs });
         }
         layers.push(LayerPlan {
             migrate: MigratePlan::none(),

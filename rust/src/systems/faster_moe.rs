@@ -4,6 +4,11 @@
 //! dwarfs the expert's own size; it "shadows" those experts by broadcasting
 //! their parameters to all GPUs so hot-expert tokens compute locally, and
 //! pipelines the rest. Under even routing it degenerates to chunked EP.
+//!
+//! All emitted phases carry the default [`crate::plan::Sync::Bulk`] policy
+//! (the historical barrier-per-phase contract); chunks with no cold remote
+//! flows emit no dispatch phase at all so lowering never materialises
+//! barrier-only nodes.
 
 use super::{SchedCtx, System};
 use crate::moe::routing::Placement;
@@ -106,10 +111,12 @@ impl System for FasterMoe {
                         ctx.expert_secs(cold + local_hot)
                     })
                     .collect();
-                rounds.push(Round {
-                    dispatch: vec![CommPhase::new(flows, "dispatch")],
-                    expert_secs,
-                });
+                let dispatch = if flows.is_empty() {
+                    Vec::new()
+                } else {
+                    vec![CommPhase::new(flows, "dispatch")]
+                };
+                rounds.push(Round { dispatch, expert_secs });
             }
             layers.push(LayerPlan {
                 migrate,

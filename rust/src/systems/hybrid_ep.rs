@@ -21,6 +21,12 @@
 //!
 //! With `S_ED = 1` everywhere this degenerates to (hierarchical) EP — EP is a
 //! special case of HybridEP (§III-E).
+//!
+//! Every AG/dispatch phase carries the default
+//! [`crate::plan::Sync::Bulk`] barrier policy — the hierarchical hops are
+//! phase-synchronised by construction (Algorithm 1) — and phases with no
+//! flows are filtered out before they reach the IR, so lowering never sees
+//! empty `CommPhase`s.
 
 use super::{SchedCtx, System};
 use crate::cluster::Multilevel;

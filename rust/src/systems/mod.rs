@@ -8,6 +8,13 @@
 //! plan → lower → simulate pipeline. This mirrors the paper's comparison:
 //! identical workloads, different communication/compute schedules.
 //!
+//! Synchronisation contract: phases a system emits default to
+//! [`Sync::Bulk`](crate::plan::Sync) — collective phases are fenced by a
+//! per-phase barrier over the GPUs the phase spans, exactly the historical
+//! global-barrier-per-phase behaviour. Overlap is opt-in per phase via
+//! `Sync::Window`, which relaxes the *barrier* (flows contend with
+//! downstream compute) but never the flow → compute data dependencies.
+//!
 //! * [`ep::VanillaEp`] — textbook EP: blocking A2A dispatch → expert → A2A
 //!   combine (Tutel with pipeline degree 1).
 //! * [`ep::Tutel`] — chunked A2A/compute pipelining ([22]).
@@ -44,11 +51,19 @@ pub struct SchedCtx<'a> {
     /// every system; calibrated against the paper's Table V intercept
     /// (~1.9 s per 12-layer iteration on A800).
     pub fixed_layer_overhead: f64,
-    /// Joint TP × EP × DP degrees the schedule is planned under. The
+    /// Joint PP × TP × EP × DP degrees the schedule is planned under. The
     /// identity (the default) plans pure EP over all GPUs — bit-for-bit the
     /// pre-config behaviour; non-identity configs route every system's plan
-    /// through [`plan::parallel`](crate::plan::parallel).
+    /// through [`plan::parallel`](crate::plan::parallel). With `pp > 1` the
+    /// plan carries a [`PipelineSchedule`](crate::plan::PipelineSchedule)
+    /// whose stage-boundary activations are `Sync::Window` (overlapped with
+    /// downstream expert compute) unless [`Self::pp_overlap`] is cleared.
     pub parallelism: ParallelismConfig,
+    /// Whether pipeline stage-boundary transfers get a
+    /// [`Sync::Window`](crate::plan::Sync) overlap policy (`true`, the
+    /// default) or the bulk-synchronous `Sync::Bulk` baseline (`false`).
+    /// Irrelevant when `parallelism.pp == 1`.
+    pub pp_overlap: bool,
 }
 
 impl<'a> SchedCtx<'a> {
@@ -61,6 +76,7 @@ impl<'a> SchedCtx<'a> {
             layer_routing: None,
             fixed_layer_overhead: 0.0,
             parallelism: ParallelismConfig::identity(cluster.total_gpus()),
+            pp_overlap: true,
         }
     }
 
@@ -167,10 +183,11 @@ pub trait System {
             let doubled = DoubledCompute(self);
             doubled.build_forward(ctx, &mut dag, &bwd_entry)
         };
-        // DDP all-reduce of dense params (TP-sharded when tp > 1): ring
-        // pass, overlapped with backward
+        // DDP all-reduce of dense params (TP-sharded when tp > 1, and each
+        // pipeline stage only holds 1/pp of the layers): ring pass,
+        // overlapped with backward
         let cfg = ctx.parallelism;
-        let dense = ctx.dense_param_bytes() / cfg.tp as f64;
+        let dense = ctx.dense_param_bytes() / (cfg.tp * cfg.pp) as f64;
         let ar_bytes = 2.0 * dense * (g as f64 - 1.0) / g as f64;
         let mut ends = bwd_exit.clone();
         for i in 0..g {
@@ -181,20 +198,26 @@ pub trait System {
         // every GPU holds n·dp full-expert payloads' worth of TP shards, and
         // each expert exists once per replica — a ring across same-position
         // GPUs of the dp replicas keeps them coherent, overlapped with
-        // backward like the dense ring
+        // backward like the dense ring. Replicas live inside a pipeline
+        // stage, so under pp > 1 each stage block runs its own ring (pp = 1
+        // degenerates to the single global ring, bit-for-bit).
         if cfg.dp > 1 {
-            let stride = g / cfg.dp;
+            let gps = g / cfg.pp;
+            let stride = gps / cfg.dp;
             let shard = ctx.workload.experts_per_gpu as f64
                 * cfg.dp as f64
                 * ctx.workload.pe_bytes();
             let hop = 2.0 * shard * (cfg.dp as f64 - 1.0) / cfg.dp as f64;
-            for q in 0..stride {
-                for r in 0..cfg.dp {
-                    let src = r * stride + q;
-                    let dst = ((r + 1) % cfg.dp) * stride + q;
-                    let t =
-                        dag.transfer(src, dst, hop, Tag::AllReduce, vec![bwd_entry[src]], "dp_sync");
-                    ends.push(t);
+            for s in 0..cfg.pp {
+                let base = s * gps;
+                for q in 0..stride {
+                    for r in 0..cfg.dp {
+                        let src = base + r * stride + q;
+                        let dst = base + ((r + 1) % cfg.dp) * stride + q;
+                        let t = dag
+                            .transfer(src, dst, hop, Tag::AllReduce, vec![bwd_entry[src]], "dp_sync");
+                        ends.push(t);
+                    }
                 }
             }
         }

@@ -170,6 +170,40 @@ mod tests {
         assert!(parse(&["sweep", "--tp=-2"]).usize_or("tp", 1).is_err());
     }
 
+    /// The pipeline flags (`simulate --pp/--microbatches` via `usize_or`,
+    /// `sweep --pp` via `usize_list_or`) follow the same contract as
+    /// `--tp`/`--dp`: identity defaults, lists for sweeps, and actionable
+    /// messages on malformed input.
+    #[test]
+    fn pipeline_flags_parse_and_report_malformed_input() {
+        let a = parse(&["simulate", "--pp", "2", "--microbatches", "4"]);
+        assert_eq!(a.usize_or("pp", 1).unwrap(), 2);
+        assert_eq!(a.usize_or("microbatches", 1).unwrap(), 4);
+        // defaults are the identity degrees (no pipeline, one microbatch)
+        let none = parse(&["simulate"]);
+        assert_eq!(none.usize_or("pp", 1).unwrap(), 1);
+        assert_eq!(none.usize_or("microbatches", 1).unwrap(), 1);
+        // sweep-style pp list
+        let lists = parse(&["sweep", "--pp", "1, 2,4"]);
+        assert_eq!(lists.usize_list_or("pp", &[1]).unwrap(), vec![1, 2, 4]);
+        // malformed scalars name the flag and echo the bad value
+        let bad = parse(&["simulate", "--pp", "two"]);
+        let err = bad.usize_or("pp", 1).unwrap_err().to_string();
+        assert!(err.contains("--pp") && err.contains("two"), "unhelpful error: {err}");
+        let bad = parse(&["simulate", "--microbatches", "2.5"]);
+        let err = bad.usize_or("microbatches", 1).unwrap_err().to_string();
+        assert!(
+            err.contains("--microbatches") && err.contains("2.5"),
+            "unhelpful error: {err}"
+        );
+        // malformed list elements name the flag and the offending element
+        let bad = parse(&["sweep", "--pp", "1,x"]);
+        let err = bad.usize_list_or("pp", &[1]).unwrap_err().to_string();
+        assert!(err.contains("--pp") && err.contains('x'), "unhelpful error: {err}");
+        // negative degrees are rejected by the unsigned parse
+        assert!(parse(&["simulate", "--pp=-2"]).usize_or("pp", 1).is_err());
+    }
+
     #[test]
     fn list_flags_parse_and_default() {
         let a = parse(&["--dcs", "8,16, 32", "--bw", "1.25,10"]);

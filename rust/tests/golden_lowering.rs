@@ -685,6 +685,56 @@ fn aggregate_lowers_to_legacy_schedule() {
     }
 }
 
+/// Overlap-refactor acceptance: every system's planner still emits pure
+/// `Sync::Bulk` phases (overlap is opt-in per phase at lowering, never a
+/// planner default), and the explicit trivial 4D config — `pp = 1`, one
+/// microbatch — reproduces the legacy schedule bit for bit with the overlap
+/// flag in either position.
+#[test]
+fn bulk_sync_and_trivial_pipeline_pin_legacy_equivalence() {
+    use hybrid_ep::cluster::ParallelismConfig;
+    use hybrid_ep::plan::Sync;
+    use hybrid_ep::systems::comparison_set;
+    let (cluster, mut w, routing) = small_parts(true);
+    w.backward = true;
+    let plain = SchedCtx::new(&cluster, &w, &routing);
+    let cfg = ParallelismConfig::new_4d(&cluster, 1, 1, 1, 1).unwrap();
+    assert!(cfg.is_identity(), "pp = 1, tp = 1, dp = 1, mb = 1 is the identity");
+    for sys in comparison_set() {
+        let plan = sys.plan_forward(&plain);
+        assert!(plan.pipeline.is_none(), "{}: identity plan carries a pipeline", sys.name());
+        for layer in &plan.layers {
+            let phases = layer
+                .migrate
+                .phases
+                .iter()
+                .chain(layer.rounds.iter().flat_map(|r| r.dispatch.iter()))
+                .chain(layer.tp_sync.iter());
+            for p in phases {
+                assert_eq!(
+                    p.sync,
+                    Sync::Bulk,
+                    "{}: planner emitted a non-Bulk phase {:?}",
+                    sys.name(),
+                    p.label
+                );
+            }
+        }
+        let base = Simulator::new(&cluster).run(&sys.build_iteration(&plain)).makespan;
+        for overlap in [true, false] {
+            let mut ctx = SchedCtx::new(&cluster, &w, &routing).with_parallelism(cfg);
+            ctx.pp_overlap = overlap;
+            let got = Simulator::new(&cluster).run(&sys.build_iteration(&ctx)).makespan;
+            assert_eq!(
+                base.to_bits(),
+                got.to_bits(),
+                "{} (pp_overlap = {overlap}): trivial pipeline config diverged",
+                sys.name()
+            );
+        }
+    }
+}
+
 /// Joint-parallelism acceptance: with `tp = 1, dp = 1` every system's Plan
 /// IR and simulated makespan are identical to the pre-config pipeline, bit
 /// for bit (the config machinery must be a pure pass-through).
