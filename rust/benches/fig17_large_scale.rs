@@ -131,6 +131,51 @@ fn main() {
         );
     }
 
+    // ---- O(100k) member GPUs: the ε-approx scale gate ---------------------
+    // 12 800 DCs × 8 GPUs/DC = 102 400 member GPUs. The neighborhood A2A
+    // materializes ~O(dcs · degree · samples) macros for ~3.3M member flows;
+    // the approx engine ε-folds the sample-synchronized payload grid and
+    // reports a certified makespan interval. Runs under `--quick` — this is
+    // the CI smoke of the approx PR.
+    {
+        use hybrid_ep::cluster::presets;
+        use hybrid_ep::netsim::dag::dense_neighborhood_a2a;
+        use hybrid_ep::netsim::{RateMode, Simulator};
+        let (dcs, per_dc, degree, samples) = (12_800usize, 8usize, 4usize, 8usize);
+        let gpus = dcs * per_dc;
+        let eps = 0.05;
+        let cluster = presets::dcs_x_gpus(dcs, per_dc, 10.0, 128.0);
+        let dag = dense_neighborhood_a2a(dcs, per_dc, degree, samples, 64e3, 8e6, 0.02, 97);
+        assert_eq!(
+            dag.member_transfers(),
+            dcs * per_dc * (per_dc - 1) + dcs * degree * per_dc * per_dc,
+            "scale-gate workload lost members"
+        );
+        let (r, t) = time_once(|| {
+            Simulator::with_mode(&cluster, RateMode::Approx { epsilon: eps }).run(&dag)
+        });
+        assert!(r.makespan > 0.0 && r.makespan.is_finite());
+        assert!(r.approx_spread <= eps * (1.0 + 1e-9) + 1e-15);
+        println!(
+            "\napprox scale gate: {gpus} member GPUs ({dcs} DCs × {per_dc}), {} macros for {} members",
+            dag.transfer_tasks(),
+            dag.member_transfers()
+        );
+        println!(
+            "  ε={eps}: {t:.2}s, {} events, makespan ∈ [{:.4}, {:.4}] (±{:.2}%)",
+            r.events,
+            r.makespan_lo,
+            r.makespan_hi,
+            r.approx_interval_rel() * 50.0
+        );
+        let key = format!("approx_eps{eps}_{gpus}gpu_scale_gate/approx");
+        report.record(&key, t * 1e3, r.events, None);
+        report.record_extra(&key, "gpus", json::num(gpus as f64));
+        report.record_extra(&key, "member_flows", json::num(dag.member_transfers() as f64));
+        report.record_extra(&key, "interval_rel", json::num(r.approx_interval_rel()));
+        report.record_extra(&key, "spread", json::num(r.approx_spread));
+    }
+
     match report.write() {
         Ok(path) => println!("\n[perf trajectory merged into {}]", path.display()),
         Err(e) => eprintln!("\n[warning] could not write perf trajectory: {e}"),

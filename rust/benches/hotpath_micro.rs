@@ -91,11 +91,11 @@ fn main() {
         for d in 0..dcs {
             for _ in 0..intra_per_dc {
                 let rs = vec![in_e(d), in_i(d)];
-                intra_ids.push(alloc.add(rs.clone()));
+                intra_ids.push(alloc.add(&rs));
                 specs.push(FlowSpec { resources: rs, bytes_remaining: 1e6, count: 1 });
             }
             let rs = vec![up_e(d), up_i((d + 1) % dcs)];
-            alloc.add(rs.clone());
+            alloc.add(&rs);
             specs.push(FlowSpec { resources: rs, bytes_remaining: 1e6, count: 1 });
         }
         alloc.resolve();
@@ -103,12 +103,16 @@ fn main() {
         let r_inc = Bench::new("rate_maintenance/incremental_1kdc_event").run(|| {
             let slot = d * intra_per_dc;
             alloc.remove(intra_ids[slot]);
-            intra_ids[slot] = alloc.add(vec![in_e(d), in_i(d)]);
+            intra_ids[slot] = alloc.add(&[in_e(d), in_i(d)]);
             alloc.resolve();
             black_box(alloc.rate(intra_ids[slot]));
             d = (d + 1) % dcs;
         });
         r_inc.print();
+        // the same event loop is also the arena-slab steady state: every
+        // remove/add pair reuses the freed flow slot and its 2-entry span,
+        // so the hot path is allocation-free (`arena` acceptance row)
+        report.record("arena/slab_reuse_1kdc_event", r_inc.median * 1e3, 1, None);
         let r_ref = Bench::new("rate_maintenance/reference_1kdc_event").run(|| {
             black_box(max_min_rates(&caps, &specs).len());
         });
@@ -248,6 +252,82 @@ fn main() {
         report.record_extra(&key, "flows_folded_ratio", json::num(ratio));
         report.record_extra(&key, "flows", json::num(dag.transfer_tasks() as f64));
         report.record_extra(&key, "member_flows", json::num(dag.member_transfers() as f64));
+    }
+
+    // --- component-parallel resolve: scoped-thread water-fills ---------------
+    // `RateMode::Parallel` fans the allocator's disjoint dirty components out
+    // over std::thread::scope; results are bit-identical to sequential (the
+    // deterministic merge), so the row measures pure resolve concurrency on
+    // the dense mixed A2A (many per-DC intra components + the cross mesh).
+    {
+        let (dcs, per_dc) = if fast { (8usize, 8usize) } else { (32usize, 8usize) };
+        let label = format!("{}gpu", dcs * per_dc);
+        let cluster = presets::dcs_x_gpus(dcs, per_dc, 10.0, 128.0);
+        let dag = dense_mixed_a2a(dcs, per_dc, 64e3, 8e6, 0.5, 97);
+        let (seq, t_seq) = time_once(|| Simulator::new(&cluster).run(&dag));
+        let (par, t_par) =
+            time_once(|| Simulator::with_mode(&cluster, RateMode::Parallel).run(&dag));
+        assert!(
+            seq.makespan.to_bits() == par.makespan.to_bits() && seq.events == par.events,
+            "parallel resolve must be bit-identical: {} vs {}",
+            seq.makespan,
+            par.makespan
+        );
+        println!(
+            "netsim_parallel_resolve/{label}: sequential {:>9.2} ms | parallel {:>9.2} ms ({:.2}×)",
+            t_seq * 1e3,
+            t_par * 1e3,
+            t_seq / t_par.max(1e-9)
+        );
+        let key = format!("parallel_resolve_{label}/calendar");
+        report.record(&key, t_par * 1e3, par.events, None);
+        report.record_extra(&key, "speedup_vs_sequential", json::num(t_seq / t_par.max(1e-9)));
+    }
+
+    // --- ε-approximate folding: near-symmetric traffic -----------------------
+    // The neighborhood A2A jitters its cross payloads on a shared quantum
+    // grid, so the exact fold keeps `samples` macros per DC pair while the
+    // ε-fold collapses buckets across the band. The approx engine runs the
+    // lo/hi payload envelopes and reports a certified makespan interval.
+    {
+        let (dcs, per_dc) = if fast { (64usize, 4usize) } else { (256usize, 8usize) };
+        let label = format!("{}gpu", dcs * per_dc);
+        let cluster = presets::dcs_x_gpus(dcs, per_dc, 10.0, 128.0);
+        let dag = hybrid_ep::netsim::dag::dense_neighborhood_a2a(
+            dcs, per_dc, 8, 5, 64e3, 8e6, 0.04, 97,
+        );
+        let (exact, t_exact) =
+            time_once(|| Simulator::with_mode(&cluster, RateMode::Folded).run(&dag));
+        for eps in [0.01f64, 0.05, 0.1] {
+            let (ap, t_ap) = time_once(|| {
+                Simulator::with_mode(&cluster, RateMode::Approx { epsilon: eps }).run(&dag)
+            });
+            assert!(
+                ap.approx_spread <= eps * (1.0 + 1e-9) + 1e-15,
+                "spread {} exceeds certified ε {eps}",
+                ap.approx_spread
+            );
+            assert!(
+                exact.makespan >= ap.makespan_lo / (1.0 + 2.0 * eps)
+                    && exact.makespan <= ap.makespan_hi * (1.0 + 2.0 * eps),
+                "exact makespan {} outside cushioned interval [{}, {}]",
+                exact.makespan,
+                ap.makespan_lo,
+                ap.makespan_hi
+            );
+            println!(
+                "netsim_approx/{label} ε={eps}: exact {:>8.2} ms | approx {:>8.2} ms ({:.2}×) | interval ±{:.2}%",
+                t_exact * 1e3,
+                t_ap * 1e3,
+                t_exact / t_ap.max(1e-9),
+                ap.approx_interval_rel() * 50.0
+            );
+            let key = format!("approx_eps{eps}_{label}/calendar");
+            report.record(&key, t_ap * 1e3, ap.events, None);
+            report.record_extra(&key, "speedup_vs_folded", json::num(t_exact / t_ap.max(1e-9)));
+            report.record_extra(&key, "interval_rel", json::num(ap.approx_interval_rel()));
+            report.record_extra(&key, "spread", json::num(ap.approx_spread));
+        }
     }
 
     // --- engine + sweep: fig17 scale (≥256 DCs), pre-change vs current -------

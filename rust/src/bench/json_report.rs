@@ -8,7 +8,7 @@
 //! place (different benches contribute to the same file). `BENCH_JSON_PATH`
 //! overrides the output path (CI uploads the file as a workflow artifact).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
@@ -23,9 +23,18 @@ pub const DEFAULT_PATH: &str = "BENCH_netsim.json";
 pub const SCHEMA: &str = "bench-netsim/v1";
 
 /// A merge-on-write view of the perf-trajectory document.
+///
+/// Concurrency contract: [`write`](Self::write) re-reads the on-disk
+/// document and overlays only the rows *this session recorded* before
+/// replacing the file via a same-directory temp file + atomic rename — two
+/// benches finishing back-to-back each keep the other's freshly-written
+/// rows, and a reader never observes a half-written document.
 pub struct JsonReport {
     path: PathBuf,
     doc: BTreeMap<String, Value>,
+    /// Scenario rows recorded through this handle — the set that wins over
+    /// the on-disk document at write time.
+    dirty: BTreeSet<String>,
 }
 
 impl JsonReport {
@@ -46,7 +55,7 @@ impl JsonReport {
         };
         doc.insert("schema".to_string(), json::s(SCHEMA));
         doc.entry("scenarios".to_string()).or_insert_with(|| Value::Obj(BTreeMap::new()));
-        Self { path, doc }
+        Self { path, doc, dirty: BTreeSet::new() }
     }
 
     fn scenarios_mut(&mut self) -> &mut BTreeMap<String, Value> {
@@ -80,6 +89,7 @@ impl JsonReport {
             ),
         ]);
         self.scenarios_mut().insert(scenario.to_string(), row);
+        self.dirty.insert(scenario.to_string());
         self
     }
 
@@ -93,6 +103,7 @@ impl JsonReport {
         if let Value::Obj(m) = row {
             m.insert(key.to_string(), value);
         }
+        self.dirty.insert(scenario.to_string());
         self
     }
 
@@ -118,10 +129,42 @@ impl JsonReport {
 
     /// Write the merged document back, pretty-printed for diffability.
     /// Returns the path written.
+    ///
+    /// Re-merges against the *current* on-disk document (another bench may
+    /// have written rows since [`at`](Self::at) loaded it — only this
+    /// handle's own recorded rows override), then replaces the file through
+    /// a same-directory temp file and an atomic rename so concurrent readers
+    /// and writers never see a torn document.
     pub fn write(&self) -> Result<PathBuf> {
-        let text = pretty(&Value::Obj(self.doc.clone()), 0);
-        std::fs::write(&self.path, text + "\n")
-            .with_context(|| format!("writing {}", self.path.display()))?;
+        let mut merged =
+            match std::fs::read_to_string(&self.path).ok().and_then(|t| Value::parse(&t).ok()) {
+                Some(Value::Obj(m)) => m,
+                _ => BTreeMap::new(),
+            };
+        merged.insert("schema".to_string(), json::s(SCHEMA));
+        let mut scenarios = match merged.remove("scenarios") {
+            Some(Value::Obj(m)) => m,
+            _ => BTreeMap::new(),
+        };
+        if let Some(Value::Obj(own)) = self.doc.get("scenarios") {
+            for name in &self.dirty {
+                if let Some(row) = own.get(name) {
+                    scenarios.insert(name.clone(), row.clone());
+                }
+            }
+        }
+        merged.insert("scenarios".to_string(), Value::Obj(scenarios));
+        let text = pretty(&Value::Obj(merged), 0) + "\n";
+        let dir = match self.path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+            _ => PathBuf::from("."),
+        };
+        let stem = self.path.file_name().and_then(|n| n.to_str()).unwrap_or("bench.json");
+        let tmp = dir.join(format!(".{stem}.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &self.path).with_context(|| {
+            format!("renaming {} over {}", tmp.display(), self.path.display())
+        })?;
         Ok(self.path.clone())
     }
 
@@ -186,6 +229,54 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let doc = Value::parse(&text).unwrap();
         assert_eq!(doc.at(&["schema"]).unwrap().as_str().unwrap(), SCHEMA);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Regression (atomic merge): two reports opened against the same
+    /// (then-empty) document, each recording its own rows, must both survive
+    /// interleaved writes — before the write-time re-merge, whichever bench
+    /// wrote last clobbered the other's freshly-written rows.
+    #[test]
+    fn interleaved_merges_do_not_clobber_each_other() {
+        let path = tmp("json_report_interleaved");
+        let _ = std::fs::remove_file(&path);
+        let mut a = JsonReport::at(&path);
+        let mut b = JsonReport::at(&path); // opened before `a` writes
+        a.record("bench_a/row", 1.0, 1, None);
+        a.record_extra("bench_a/row", "flows", json::num(7.0));
+        b.record("bench_b/row", 2.0, 2, Some(3.0));
+        a.write().unwrap();
+        b.write().unwrap(); // must re-merge `a`'s row, not clobber it
+        let r = JsonReport::at(&path);
+        assert_eq!(r.len(), 2, "interleaved merge lost rows");
+        let row_a = r.scenario("bench_a/row").expect("bench_a row clobbered");
+        assert_eq!(row_a.at(&["flows"]).unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(
+            r.scenario("bench_b/row").unwrap().at(&["wall_ms"]).unwrap().as_f64().unwrap(),
+            2.0
+        );
+        // a second interleaving in the other order, over the existing file
+        let mut c = JsonReport::at(&path);
+        let mut d = JsonReport::at(&path);
+        c.record("bench_a/row", 10.0, 10, None); // own re-record wins…
+        d.record("bench_d/row", 4.0, 4, None);
+        d.write().unwrap();
+        c.write().unwrap();
+        let r = JsonReport::at(&path);
+        assert_eq!(r.len(), 3);
+        // …over the stale on-disk version, while d's untouched row survives
+        assert_eq!(
+            r.scenario("bench_a/row").unwrap().at(&["wall_ms"]).unwrap().as_f64().unwrap(),
+            10.0
+        );
+        assert!(r.scenario("bench_d/row").is_some());
+        // no temp droppings left behind
+        let tmp_name = format!(
+            ".{}.tmp.{}",
+            path.file_name().unwrap().to_str().unwrap(),
+            std::process::id()
+        );
+        assert!(!path.with_file_name(tmp_name).exists(), "temp file not renamed away");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -7,6 +7,8 @@
 //!   train        run real training through the PJRT runtime
 //!   experiments  regenerate paper tables/figures (fig2b, fig12, table5,
 //!                fig13, table6, fig16, table7, fig17, or `all`)
+//!   bench-all    run every bench target in sequence and merge their rows
+//!                into one `BENCH_netsim.json` perf trajectory
 
 use anyhow::{bail, Context, Result};
 use hybrid_ep::cluster::{presets, ParallelismConfig};
@@ -52,10 +54,11 @@ fn run() -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "train" => cmd_train(&args),
         "experiments" => cmd_experiments(&args),
+        "bench-all" => cmd_bench_all(&args),
         _ => {
             println!(
                 "hybrid-ep — cross-DC expert parallelism (paper reproduction)\n\n\
-                 usage: hybrid-ep <plan|topo|simulate|sweep|train|experiments> [--flags]\n\
+                 usage: hybrid-ep <plan|topo|simulate|sweep|train|experiments|bench-all> [--flags]\n\
                    plan        --cluster S|M|L --data-mb D --expert-mb E [--cr CR] [--joint]\n\
                                (--joint searches the 4D PP × TP × EP × DP grid)\n\
                                [--joint-sim]  (memoized simulation-backed search)\n\
@@ -65,11 +68,14 @@ fn run() -> Result<()> {
                    sweep       --mode aggregate|pairwise|replan --dcs 8,16 --bw 1.25,10\n\
                                [--p 0.9] [--het 1.0,0.25] [--drift 2.5] [--iters N]\n\
                                [--tp 1,2 --dp 1,2] [--pp 1,2] [--threads N]\n\
-                               [--engine calendar|folded|scan|reference]\n\
+                               [--engine calendar|parallel|folded|approx|scan|reference]\n\
+                               [--epsilon 0.05]  (approx: certified payload band)\n\
                    train       --profile test|small|large --steps N [--compression ws|wos --cr CR]\n\
                    experiments --exp fig2b|fig12|table5|fig13|table6|fig16|table7|fig17|\n\
                                perlayer|straggler|replan|tedjoint|ppoverlap|all [--threads N]\n\
-                               [--per-dc 1,4,8]  (fig17: folded dense rows at N GPUs/DC)"
+                               [--per-dc 1,4,8]  (fig17: folded dense rows at N GPUs/DC)\n\
+                   bench-all   [--quick] [--only fig17,hotpath]  (runs cargo bench per target,\n\
+                               merging rows into BENCH_netsim.json)"
             );
             Ok(())
         }
@@ -254,10 +260,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let mut grid = SweepGrid::fig17(dcs);
     grid.engine = match args.get_or("engine", "calendar") {
         "calendar" | "incremental" => RateMode::Incremental,
+        "parallel" => RateMode::Parallel,
         "folded" => RateMode::Folded,
+        "approx" => {
+            let epsilon = args.f64_or("epsilon", 0.05)?;
+            if !(0.0..1.0).contains(&epsilon) {
+                bail!("--epsilon {epsilon} must be in [0, 1)");
+            }
+            RateMode::Approx { epsilon }
+        }
         "scan" => RateMode::ScanIncremental,
         "reference" => RateMode::Reference,
-        other => bail!("unknown engine {other:?} (calendar|folded|scan|reference)"),
+        other => bail!("unknown engine {other:?} (calendar|parallel|folded|approx|scan|reference)"),
     };
     grid.bandwidths_gbps = args.f64_list_or("bw", &[1.25, 2.5, 5.0, 10.0])?;
     grid.hybrid_ps = args.f64_list_or("p", &[0.9])?;
@@ -417,6 +431,81 @@ fn cmd_experiments(args: &Args) -> Result<()> {
     }
     if all || which == "ppoverlap" {
         exp::fig_pp_overlap().0.print();
+    }
+    Ok(())
+}
+
+/// Every bench target, in deterministic order. Kept in sync with the
+/// `[[bench]]` sections of `Cargo.toml` (and EXPERIMENTS.md).
+const BENCH_TARGETS: &[&str] = &[
+    "fig11_latency_verification",
+    "fig12_modeling_verification",
+    "fig13_expert_size",
+    "fig14_loss_analysis",
+    "fig15_migration_breakdown",
+    "fig16_traffic_scalability",
+    "fig17_large_scale",
+    "hotpath_micro",
+    "joint_parallelism",
+    "per_layer_adaptivity",
+    "pipeline_overlap",
+    "replanning_drift",
+    "table5_data_traffic",
+    "table6_ablation",
+    "table7_frequency",
+];
+
+/// `bench-all`: run every bench target sequentially (one `cargo bench
+/// --bench <target>` each) so a toolchain-equipped machine fills
+/// `BENCH_netsim.json` in one command. The targets' own `JsonReport` writes
+/// are merge-on-write and atomic, so the rows accumulate safely even if
+/// some targets are re-run concurrently. `--quick` exports `BENCH_FAST=1`
+/// (every target's CI-smoke mode); `--only a,b` filters targets by
+/// substring.
+fn cmd_bench_all(args: &Args) -> Result<()> {
+    let only: Vec<String> = args
+        .get("only")
+        .map(|s| s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect())
+        .unwrap_or_default();
+    let quick = args.bool("quick");
+    let targets: Vec<&str> = BENCH_TARGETS
+        .iter()
+        .copied()
+        .filter(|t| only.is_empty() || only.iter().any(|o| t.contains(o.as_str())))
+        .collect();
+    if targets.is_empty() {
+        bail!("--only {:?} matched no bench target (see Cargo.toml [[bench]] list)", only);
+    }
+    let mut failed: Vec<&str> = Vec::new();
+    for (i, target) in targets.iter().enumerate() {
+        println!("[bench-all {}/{}] cargo bench --bench {target}", i + 1, targets.len());
+        let mut cmd = std::process::Command::new("cargo");
+        cmd.args(["bench", "--bench", target]);
+        if quick {
+            cmd.env("BENCH_FAST", "1");
+            cmd.args(["--", "--quick"]);
+        }
+        match cmd.status() {
+            Ok(st) if st.success() => {}
+            Ok(st) => {
+                eprintln!("[bench-all] {target} exited with {st}");
+                failed.push(target);
+            }
+            Err(e) => {
+                eprintln!("[bench-all] could not spawn cargo for {target}: {e}");
+                failed.push(target);
+            }
+        }
+    }
+    // summarize the merged trajectory the targets wrote
+    let report = hybrid_ep::bench::JsonReport::open();
+    println!(
+        "\n[bench-all] {} scenario rows merged into {}",
+        report.len(),
+        report.path().display()
+    );
+    if !failed.is_empty() {
+        bail!("{} of {} bench targets failed: {}", failed.len(), targets.len(), failed.join(", "));
     }
     Ok(())
 }

@@ -14,7 +14,7 @@ pub enum Tag {
 
 pub type TaskId = usize;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum TaskKind {
     /// Occupies `gpu` exclusively for `seconds`.
     Compute { gpu: usize, seconds: f64 },
@@ -260,6 +260,79 @@ pub fn dense_mixed_a2a_folded(
     d
 }
 
+/// Neighborhood-dense born-folded A2A — the O(100k)-member-GPU workload
+/// behind the ε-approximate scale gate. Each DC sends to its `degree` ring
+/// successors (`b = (a + o) mod dcs`, `o ∈ 1..=degree`), so the materialized
+/// flow count is `dcs · degree · samples + dcs` instead of the full
+/// `dcs · (dcs − 1)` mesh — at 12 800 DCs × 8 GPUs/DC that is ~O(10⁵) macros
+/// standing for `dcs · degree · per_dc²` cross members plus
+/// `dcs · per_dc · (per_dc − 1)` intra members (~O(10⁶)+ at the gate).
+///
+/// Per ordered DC pair the `per_dc²` members are split into `samples` macros
+/// whose counts sum to `per_dc²` and whose payloads are jittered on a
+/// **sample-synchronized** quantum grid: the jitter factor depends only on
+/// the sample index `k`, never on the pair, so macro `k` of *every* pair
+/// carries identical bytes. With uniform per-DC egress/ingress loads
+/// (`degree · per_dc²` member shares each way) max-min hands all grade-`k`
+/// flows one common rate, their finishes coalesce into ~`samples` calendar
+/// events, and each event's re-solve freezes the whole component in one
+/// water-fill round — the event count stays O(`samples` + `dcs`) instead of
+/// O(`dcs · degree · samples`). Per-pair *random* jitter would break exactly
+/// this: every macro becomes its own event, each re-solving the giant
+/// cross-DC component. The quantized payloads are also what the ε-fold
+/// collapses across pairs (the exact fold already collapses nothing less:
+/// same-`k` macros differ only in containers, which the key keeps).
+///
+/// The per-DC intra traffic is one aggregated jittered macro (count
+/// `per_dc · (per_dc − 1)`, seed-deterministic bytes) — tiny independent
+/// components that keep the heterogeneous-completion pressure of
+/// [`dense_mixed_a2a`] without materializing O(`dcs · per_dc²`) flows.
+pub fn dense_neighborhood_a2a(
+    dcs: usize,
+    per_dc: usize,
+    degree: usize,
+    samples: usize,
+    cross_bytes: f64,
+    intra_bytes: f64,
+    jitter: f64,
+    seed: u64,
+) -> Dag {
+    assert!(dcs >= 2, "need at least two DCs");
+    assert!(per_dc >= 1, "need at least one GPU per DC");
+    assert!(degree >= 1 && degree < dcs, "ring degree must be in 1..dcs");
+    assert!((1..=per_dc * per_dc).contains(&samples), "samples must be in 1..=per_dc²");
+    assert!((0.0..1.0).contains(&jitter), "jitter must be in [0, 1)");
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut d = Dag::new();
+    // aggregated intra macro per DC (needs two GPUs for a representative pair)
+    if per_dc >= 2 {
+        let members = (per_dc * (per_dc - 1)) as u64;
+        for c in 0..dcs {
+            let bytes = intra_bytes * (1.0 + jitter * (2.0 * rng.f64() - 1.0));
+            d.transfer_n(c * per_dc, c * per_dc + 1, bytes, members, Tag::A2A, vec![], "intra");
+        }
+    }
+    // sample-synchronized cross payload grid, shared by every DC pair
+    let quantum: Vec<f64> = (0..samples)
+        .map(|k| {
+            let q = if samples > 1 { k as f64 / (samples - 1) as f64 } else { 0.5 };
+            cross_bytes * (1.0 + jitter * (2.0 * q - 1.0))
+        })
+        .collect();
+    let base = (per_dc * per_dc / samples) as u64;
+    let rem = per_dc * per_dc % samples;
+    for a in 0..dcs {
+        for o in 1..=degree {
+            let b = (a + o) % dcs;
+            for (k, &bytes) in quantum.iter().enumerate() {
+                let count = base + u64::from(k < rem);
+                d.transfer_n(a * per_dc, b * per_dc, bytes, count, Tag::A2A, vec![], "cross");
+            }
+        }
+    }
+    d
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -383,6 +456,65 @@ mod tests {
             .collect();
         assert_eq!(macros.len(), dcs * (dcs - 1));
         assert!(macros.iter().all(|&c| c == (per_dc * per_dc) as u64));
+    }
+
+    #[test]
+    fn dense_neighborhood_a2a_accounts_members_and_synchronizes_quanta() {
+        let (dcs, per_dc, degree, samples) = (10usize, 4usize, 3usize, 5usize);
+        let d = dense_neighborhood_a2a(dcs, per_dc, degree, samples, 64e3, 8e6, 0.2, 7);
+        // materialized: one intra macro per DC + samples macros per ring edge
+        assert_eq!(d.transfer_tasks(), dcs + dcs * degree * samples);
+        // members: full intra + degree·per_dc² cross per DC
+        assert_eq!(
+            d.member_transfers(),
+            dcs * per_dc * (per_dc - 1) + dcs * degree * per_dc * per_dc
+        );
+        // sample-synchronized: every pair's grade-k macro carries identical
+        // bytes, so the cross payload alphabet has exactly `samples` values
+        let mut cross: Vec<u64> = d
+            .tasks
+            .iter()
+            .filter_map(|t| match t.kind {
+                TaskKind::Transfer { src, dst, bytes, .. } if src / per_dc != dst / per_dc => {
+                    Some(bytes.to_bits())
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(cross.len(), dcs * degree * samples);
+        cross.sort_unstable();
+        cross.dedup();
+        assert_eq!(cross.len(), samples, "cross jitter must be a shared quantum grid");
+        // per ordered pair, the sample counts sum to per_dc²
+        let per_pair: u64 = d
+            .tasks
+            .iter()
+            .filter_map(|t| match t.kind {
+                TaskKind::Transfer { src, dst, count, .. }
+                    if src == 0 && dst / per_dc == 1 =>
+                {
+                    Some(count)
+                }
+                _ => None,
+            })
+            .sum();
+        assert_eq!(per_pair, (per_dc * per_dc) as u64);
+        // seed-deterministic
+        let e = dense_neighborhood_a2a(dcs, per_dc, degree, samples, 64e3, 8e6, 0.2, 7);
+        assert_eq!(d.traffic_by_tag(Tag::A2A).to_bits(), e.traffic_by_tag(Tag::A2A).to_bits());
+        // jitter stays inside the requested relative band
+        for t in &d.tasks {
+            let TaskKind::Transfer { bytes, src, dst, .. } = t.kind else { panic!() };
+            let base = if src / per_dc == dst / per_dc { 8e6 } else { 64e3 };
+            assert!((bytes / base - 1.0).abs() <= 0.2 + 1e-12, "jitter out of band: {bytes}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "samples")]
+    fn dense_neighborhood_a2a_rejects_oversampling() {
+        // more samples than members per pair would need zero-count macros
+        dense_neighborhood_a2a(4, 2, 1, 5, 1e3, 1e3, 0.1, 1);
     }
 
     #[test]

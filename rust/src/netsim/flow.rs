@@ -31,6 +31,18 @@
 //!   the set of flows whose rate actually changed bitwise, which is what
 //!   lets the simulator's calendar engine keep flow progress lazy
 //!   (re-touching a flow only when its rate moves).
+//!
+//! The incremental allocator keeps its adjacency in one flat slab
+//! (interleaved `(resource, position)` records with per-flow spans) instead
+//! of per-flow `Vec`s, so steady-state flow churn reuses span storage in
+//! place and allocates nothing. `resolve` partitions the dirty subgraph into
+//! its connected components; with [`set_parallel`](IncrementalMaxMin::set_parallel)
+//! the components are solved on scoped threads and merged back in
+//! deterministic discovery order — max-min allocations decompose exactly
+//! over components, and each component is solved in isolation either way,
+//! so the parallel path is **bit-identical** to the sequential one.
+
+use anyhow::{ensure, Result};
 
 /// Index into the resource table.
 pub type ResourceId = usize;
@@ -163,6 +175,40 @@ pub fn max_min_rates(caps: &[f64], flows: &[FlowSpec]) -> Vec<f64> {
     rates
 }
 
+/// One adjacency record in the flat slab: the owning flow occupies
+/// `users[res][pos]`.
+#[derive(Clone, Copy, Debug, Default)]
+struct AdjEntry {
+    res: ResourceId,
+    pos: usize,
+}
+
+/// A flow's window into the adjacency slab. `cap` is the reserved width: a
+/// reused slot whose next flow needs at most `cap` records writes in place
+/// and allocates nothing (simulator flows always hold exactly two resources,
+/// so after warm-up every add is allocation-free).
+#[derive(Clone, Copy, Debug, Default)]
+struct Span {
+    off: usize,
+    len: usize,
+    cap: usize,
+}
+
+/// Half-open ranges of one connected component inside the shared
+/// `comp_res`/`comp_flows` arenas built by [`IncrementalMaxMin::resolve`].
+#[derive(Clone, Copy, Debug)]
+struct CompRange {
+    res_off: usize,
+    res_len: usize,
+    flow_off: usize,
+    flow_len: usize,
+}
+
+/// Dirty subgraphs with fewer total flows than this are not worth a thread
+/// hand-off; `resolve` keeps them on the sequential per-component loop even
+/// when parallel solving is enabled.
+const PAR_MIN_FLOWS: usize = 64;
+
 /// Incremental max-min allocator: component-local re-solves on flow churn.
 ///
 /// Usage: [`add`](Self::add) / [`remove`](Self::remove) mark the touched
@@ -174,11 +220,11 @@ pub fn max_min_rates(caps: &[f64], flows: &[FlowSpec]) -> Vec<f64> {
 /// accounting). [`rate`](Self::rate) reads the current allocation.
 pub struct IncrementalMaxMin {
     caps: Vec<f64>,
-    /// slab: resources of each flow (empty for dead slots)
-    resources_of: Vec<Vec<ResourceId>>,
-    /// slab: `users_pos[f][k]` = index of flow `f`'s `k`-th resource entry
-    /// inside `users[resources_of[f][k]]` (O(1) deregistration)
-    users_pos: Vec<Vec<usize>>,
+    /// flat adjacency slab: flow `f` owns
+    /// `adj[span[f].off .. span[f].off + span[f].len]`
+    adj: Vec<AdjEntry>,
+    /// per-flow span into `adj` (`len == 0` for dead slots)
+    span: Vec<Span>,
     /// slab: multiplicity weight of each flow (`count as f64`; exact)
     weight: Vec<f64>,
     live: Vec<bool>,
@@ -192,6 +238,8 @@ pub struct IncrementalMaxMin {
     dirty_mark: Vec<bool>,
     /// flows whose rate changed during the last [`resolve`](Self::resolve)
     changed: Vec<FlowId>,
+    /// solve disjoint components on scoped threads (bit-identical either way)
+    parallel: bool,
     // --- epoch-stamped scratch for resolve() ---
     epoch: u64,
     res_seen: Vec<u64>,
@@ -205,8 +253,8 @@ impl IncrementalMaxMin {
         let nr = caps.len();
         Self {
             caps,
-            resources_of: Vec::new(),
-            users_pos: Vec::new(),
+            adj: Vec::new(),
+            span: Vec::new(),
             weight: Vec::new(),
             live: Vec::new(),
             free: Vec::new(),
@@ -216,12 +264,23 @@ impl IncrementalMaxMin {
             dirty: Vec::new(),
             dirty_mark: vec![false; nr],
             changed: Vec::new(),
+            parallel: false,
             epoch: 0,
             res_seen: vec![0; nr],
             flow_seen: Vec::new(),
             res_local: vec![0; nr],
             flow_local: Vec::new(),
         }
+    }
+
+    /// Enable/disable scoped-thread solving of disjoint dirty components in
+    /// [`resolve`](Self::resolve). Off by default. Components are
+    /// data-independent sub-problems and are solved in isolation either way;
+    /// rates and the changed set are merged in component discovery order, so
+    /// results are bit-identical regardless of this toggle (see the
+    /// bit-stability differential tests).
+    pub fn set_parallel(&mut self, parallel: bool) {
+        self.parallel = parallel;
     }
 
     pub fn live_flows(&self) -> usize {
@@ -252,41 +311,71 @@ impl IncrementalMaxMin {
     /// Register a plain (weight-1) flow over `resources`. Loopback flows (no
     /// resources) are rated `INFINITY` immediately and never participate in a
     /// solve.
-    pub fn add(&mut self, resources: Vec<ResourceId>) -> FlowId {
+    pub fn add(&mut self, resources: &[ResourceId]) -> FlowId {
         self.add_weighted(resources, 1)
     }
 
     /// Register a macro-flow standing for `count` identical members: it
     /// consumes `count` shares of every resource it touches and its
     /// [`rate`](Self::rate) is the common per-member rate. `count = 1` is
-    /// exactly [`add`](Self::add).
-    pub fn add_weighted(&mut self, resources: Vec<ResourceId>, count: u64) -> FlowId {
+    /// exactly [`add`](Self::add). Panics on `count == 0`; see
+    /// [`try_add_weighted`](Self::try_add_weighted) for the checked variant.
+    pub fn add_weighted(&mut self, resources: &[ResourceId], count: u64) -> FlowId {
         assert!(count >= 1, "macro-flow multiplicity must be at least 1");
         let id = match self.free.pop() {
             Some(id) => id,
             None => {
-                self.resources_of.push(Vec::new());
-                self.users_pos.push(Vec::new());
+                self.span.push(Span::default());
                 self.weight.push(0.0);
                 self.live.push(false);
                 self.rates.push(0.0);
                 self.flow_seen.push(0);
                 self.flow_local.push(0);
-                self.resources_of.len() - 1
+                self.span.len() - 1
             }
         };
         self.weight[id] = count as f64;
         self.live[id] = true;
         self.n_live += 1;
         self.rates[id] = if resources.is_empty() { f64::INFINITY } else { 0.0 };
-        debug_assert!(self.users_pos[id].is_empty(), "reused slot kept stale positions");
-        for &r in &resources {
-            self.users_pos[id].push(self.users[r].len());
+        debug_assert_eq!(self.span[id].len, 0, "reused slot kept stale adjacency");
+        let need = resources.len();
+        if need > self.span[id].cap {
+            // first use of this slot, or a wider flow than the span ever
+            // held: claim fresh slab space (the narrower old span, if any,
+            // is abandoned — a bounded one-time cost per slot, zero for the
+            // simulator whose flows all hold exactly two resources)
+            self.span[id].off = self.adj.len();
+            self.span[id].cap = need;
+            self.adj.resize(self.adj.len() + need, AdjEntry::default());
+        }
+        self.span[id].len = need;
+        let off = self.span[id].off;
+        for (k, &r) in resources.iter().enumerate() {
+            self.adj[off + k] = AdjEntry { res: r, pos: self.users[r].len() };
             self.users[r].push(id);
             self.mark_dirty(r);
         }
-        self.resources_of[id] = resources;
         id
+    }
+
+    /// Checked [`add_weighted`](Self::add_weighted): degenerate registrations
+    /// come back as descriptive errors instead of a panic (zero weight) or
+    /// corrupted user lists (out-of-range resource).
+    pub fn try_add_weighted(&mut self, resources: &[ResourceId], count: u64) -> Result<FlowId> {
+        ensure!(
+            count >= 1,
+            "macro-flow multiplicity must be at least 1 (got 0 over {} resources)",
+            resources.len()
+        );
+        for &r in resources {
+            ensure!(
+                r < self.caps.len(),
+                "flow references unknown resource {r} (only {} exist)",
+                self.caps.len()
+            );
+        }
+        Ok(self.add_weighted(resources, count))
     }
 
     /// Deregister a flow (completion/abort). O(resources of the flow): each
@@ -297,12 +386,10 @@ impl IncrementalMaxMin {
         assert!(self.live[id], "remove of dead flow {id}");
         self.live[id] = false;
         self.n_live -= 1;
-        let resources = std::mem::take(&mut self.resources_of[id]);
-        let mut positions = std::mem::take(&mut self.users_pos[id]);
-        for k in 0..resources.len() {
-            let r = resources[k];
-            let pos = positions[k];
-            debug_assert_eq!(self.users[r][pos], id, "users_pos out of sync");
+        let s = self.span[id];
+        for k in 0..s.len {
+            let AdjEntry { res: r, pos } = self.adj[s.off + k];
+            debug_assert_eq!(self.users[r][pos], id, "adjacency slab out of sync");
             let last = self.users[r].len() - 1;
             self.users[r].swap_remove(pos);
             if pos < last {
@@ -310,20 +397,22 @@ impl IncrementalMaxMin {
                 let moved = self.users[r][pos];
                 if moved == id {
                     // one of this flow's own duplicate entries on `r` moved;
-                    // patch the local snapshot so its later iteration removes
-                    // the right slot
-                    for j in k + 1..resources.len() {
-                        if resources[j] == r && positions[j] == last {
-                            positions[j] = pos;
+                    // patch the not-yet-visited tail of our own span so its
+                    // later iteration removes the right slot (earlier entries
+                    // are already detached and may hold stale positions)
+                    for j in k + 1..s.len {
+                        let e = self.adj[s.off + j];
+                        if e.res == r && e.pos == last {
+                            self.adj[s.off + j].pos = pos;
                             break;
                         }
                     }
                 } else {
-                    let mv = &mut self.users_pos[moved];
-                    let rs = &self.resources_of[moved];
-                    for j in 0..rs.len() {
-                        if rs[j] == r && mv[j] == last {
-                            mv[j] = pos;
+                    let ms = self.span[moved];
+                    for j in 0..ms.len {
+                        let e = self.adj[ms.off + j];
+                        if e.res == r && e.pos == last {
+                            self.adj[ms.off + j].pos = pos;
                             break;
                         }
                     }
@@ -331,6 +420,7 @@ impl IncrementalMaxMin {
             }
             self.mark_dirty(r);
         }
+        self.span[id].len = 0;
         self.free.push(id);
     }
 
@@ -344,6 +434,13 @@ impl IncrementalMaxMin {
     /// appear here as soon as they receive a non-placeholder rate. The slice
     /// is valid until the next `add`/`remove`/`resolve` and never contains
     /// dead flows.
+    ///
+    /// Each connected component is an independent max-min sub-problem and is
+    /// water-filled in isolation; with [`set_parallel`](Self::set_parallel)
+    /// the components fan out over scoped threads, and either way the solved
+    /// rates are merged back in component **discovery order**, so the changed
+    /// set and every stored rate are identical bitwise regardless of thread
+    /// count.
     pub fn resolve(&mut self) -> &[FlowId] {
         self.changed.clear();
         if self.dirty.is_empty() {
@@ -351,47 +448,90 @@ impl IncrementalMaxMin {
         }
         self.epoch += 1;
         let epoch = self.epoch;
-        // BFS over the resource–flow bipartite graph from all dirty resources
+        // BFS over the resource–flow bipartite graph, one connected
+        // component per still-unseen dirty seed; `res_local`/`flow_local`
+        // record component-local indices
         let mut comp_res: Vec<ResourceId> = Vec::new();
         let mut comp_flows: Vec<FlowId> = Vec::new();
+        let mut comps: Vec<CompRange> = Vec::new();
         let mut queue: Vec<ResourceId> = Vec::new();
         for i in 0..self.dirty.len() {
-            let r = self.dirty[i];
-            if self.res_seen[r] != epoch {
-                self.res_seen[r] = epoch;
-                self.res_local[r] = comp_res.len();
-                comp_res.push(r);
-                queue.push(r);
+            let seed = self.dirty[i];
+            if self.res_seen[seed] == epoch {
+                continue;
             }
-        }
-        while let Some(r) = queue.pop() {
-            for i in 0..self.users[r].len() {
-                let f = self.users[r][i];
-                if self.flow_seen[f] == epoch {
-                    continue;
-                }
-                self.flow_seen[f] = epoch;
-                self.flow_local[f] = comp_flows.len();
-                comp_flows.push(f);
-                for j in 0..self.resources_of[f].len() {
-                    let r2 = self.resources_of[f][j];
-                    if self.res_seen[r2] != epoch {
-                        self.res_seen[r2] = epoch;
-                        self.res_local[r2] = comp_res.len();
-                        comp_res.push(r2);
-                        queue.push(r2);
+            let res_off = comp_res.len();
+            let flow_off = comp_flows.len();
+            self.res_seen[seed] = epoch;
+            self.res_local[seed] = 0;
+            comp_res.push(seed);
+            queue.push(seed);
+            while let Some(r) = queue.pop() {
+                for i in 0..self.users[r].len() {
+                    let f = self.users[r][i];
+                    if self.flow_seen[f] == epoch {
+                        continue;
+                    }
+                    self.flow_seen[f] = epoch;
+                    self.flow_local[f] = comp_flows.len() - flow_off;
+                    comp_flows.push(f);
+                    let s = self.span[f];
+                    for j in 0..s.len {
+                        let r2 = self.adj[s.off + j].res;
+                        if self.res_seen[r2] != epoch {
+                            self.res_seen[r2] = epoch;
+                            self.res_local[r2] = comp_res.len() - res_off;
+                            comp_res.push(r2);
+                            queue.push(r2);
+                        }
                     }
                 }
+            }
+            if comp_flows.len() > flow_off {
+                comps.push(CompRange {
+                    res_off,
+                    res_len: comp_res.len() - res_off,
+                    flow_off,
+                    flow_len: comp_flows.len() - flow_off,
+                });
             }
         }
         for &r in &self.dirty {
             self.dirty_mark[r] = false;
         }
         self.dirty.clear();
-        if comp_flows.is_empty() {
+        if comps.is_empty() {
             return &self.changed;
         }
-        // build the component-local problem and solve it
+        let mut rates_local = vec![0.0f64; comp_flows.len()];
+        if self.parallel && comps.len() > 1 && comp_flows.len() >= PAR_MIN_FLOWS {
+            self.solve_components_parallel(&comps, &comp_res, &comp_flows, &mut rates_local);
+        } else {
+            for c in &comps {
+                self.solve_component(
+                    &comp_res[c.res_off..c.res_off + c.res_len],
+                    &comp_flows[c.flow_off..c.flow_off + c.flow_len],
+                    &mut rates_local[c.flow_off..c.flow_off + c.flow_len],
+                );
+            }
+        }
+        // deterministic merge in component discovery order
+        for (i, &f) in comp_flows.iter().enumerate() {
+            if rates_local[i].to_bits() != self.rates[f].to_bits() {
+                self.rates[f] = rates_local[i];
+                self.changed.push(f);
+            }
+        }
+        &self.changed
+    }
+
+    /// Water-fill one connected component in isolation. `comp_res` /
+    /// `comp_flows` list its members; `self.res_local` / `self.flow_local`
+    /// hold their component-local indices (written by the BFS in
+    /// [`resolve`](Self::resolve)). Per-member rates land in `out`
+    /// (`out.len() == comp_flows.len()`). Takes `&self` only, so disjoint
+    /// components can be solved from scoped threads.
+    fn solve_component(&self, comp_res: &[ResourceId], comp_flows: &[FlowId], out: &mut [f64]) {
         let mut residual: Vec<f64> = comp_res.iter().map(|&r| self.caps[r]).collect();
         let mut active_w: Vec<f64> = comp_res
             .iter()
@@ -403,25 +543,67 @@ impl IncrementalMaxMin {
             .collect();
         let flow_res_local: Vec<Vec<usize>> = comp_flows
             .iter()
-            .map(|&f| self.resources_of[f].iter().map(|&r| self.res_local[r]).collect())
+            .map(|&f| {
+                let s = self.span[f];
+                self.adj[s.off..s.off + s.len].iter().map(|e| self.res_local[e.res]).collect()
+            })
             .collect();
         let weight_local: Vec<f64> = comp_flows.iter().map(|&f| self.weight[f]).collect();
-        let mut rates_local = vec![0.0f64; comp_flows.len()];
-        water_fill(
-            &mut residual,
-            &mut active_w,
-            &users_local,
-            &flow_res_local,
-            &weight_local,
-            &mut rates_local,
-        );
-        for (i, &f) in comp_flows.iter().enumerate() {
-            if rates_local[i].to_bits() != self.rates[f].to_bits() {
-                self.rates[f] = rates_local[i];
-                self.changed.push(f);
+        water_fill(&mut residual, &mut active_w, &users_local, &flow_res_local, &weight_local, out);
+    }
+
+    /// Fan the per-component solves of [`resolve`](Self::resolve) out over
+    /// scoped threads (`std::thread::scope`; registry crates such as rayon
+    /// are unavailable offline). Work-steals component indices off a shared
+    /// atomic counter; results are collected and copied back **by component
+    /// index**, so the output is byte-for-byte what the sequential loop
+    /// produces.
+    fn solve_components_parallel(
+        &self,
+        comps: &[CompRange],
+        comp_res: &[ResourceId],
+        comp_flows: &[FlowId],
+        rates_local: &mut [f64],
+    ) {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Mutex;
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(comps.len());
+        if workers <= 1 {
+            for c in comps {
+                self.solve_component(
+                    &comp_res[c.res_off..c.res_off + c.res_len],
+                    &comp_flows[c.flow_off..c.flow_off + c.flow_len],
+                    &mut rates_local[c.flow_off..c.flow_off + c.flow_len],
+                );
             }
+            return;
         }
-        &self.changed
+        let next = AtomicUsize::new(0);
+        let solved: Mutex<Vec<(usize, Vec<f64>)>> = Mutex::new(Vec::with_capacity(comps.len()));
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(c) = comps.get(i) else { break };
+                    let mut out = vec![0.0f64; c.flow_len];
+                    self.solve_component(
+                        &comp_res[c.res_off..c.res_off + c.res_len],
+                        &comp_flows[c.flow_off..c.flow_off + c.flow_len],
+                        &mut out,
+                    );
+                    solved.lock().unwrap().push((i, out));
+                });
+            }
+        });
+        let mut solved = solved.into_inner().unwrap();
+        solved.sort_unstable_by_key(|&(i, _)| i);
+        for (i, out) in solved {
+            let c = comps[i];
+            rates_local[c.flow_off..c.flow_off + c.flow_len].copy_from_slice(&out);
+        }
     }
 }
 
@@ -582,7 +764,7 @@ mod tests {
                 let grow = live.is_empty() || g.rng.below(3) < 2;
                 if grow {
                     let spec = random_flows(g, nr, 1).remove(0);
-                    let id = alloc.add(spec.resources.clone());
+                    let id = alloc.add(&spec.resources);
                     live.push((id, spec.resources));
                 } else {
                     let at = g.rng.below(live.len());
@@ -624,7 +806,7 @@ mod tests {
                         alloc.remove(id);
                     } else {
                         let spec = random_flows(g, nr, 1).remove(0);
-                        let id = alloc.add(spec.resources.clone());
+                        let id = alloc.add(&spec.resources);
                         live.push((id, spec.resources));
                     }
                 }
@@ -647,12 +829,12 @@ mod tests {
     #[test]
     fn incremental_slab_reuses_slots() {
         let mut alloc = IncrementalMaxMin::new(vec![1.0, 1.0]);
-        let a = alloc.add(vec![0]);
-        let b = alloc.add(vec![0, 1]);
+        let a = alloc.add(&[0]);
+        let b = alloc.add(&[0, 1]);
         alloc.resolve();
         assert!((alloc.rate(a) - 0.5).abs() < 1e-12);
         alloc.remove(a);
-        let c = alloc.add(vec![1]);
+        let c = alloc.add(&[1]);
         assert_eq!(c, a, "freed slot should be reused");
         alloc.resolve();
         assert!((alloc.rate(b) - 0.5).abs() < 1e-12, "b shares resource 1 with c");
@@ -666,8 +848,8 @@ mod tests {
         // remove must stay symmetric and match the reference oracle
         let caps = vec![4.0, 8.0];
         let mut alloc = IncrementalMaxMin::new(caps.clone());
-        let dup = alloc.add(vec![0, 0]);
-        let other = alloc.add(vec![0, 1]);
+        let dup = alloc.add(&[0, 0]);
+        let other = alloc.add(&[0, 1]);
         alloc.resolve();
         let specs = vec![flow(vec![0, 0]), flow(vec![0, 1])];
         let want = max_min_rates(&caps, &specs);
@@ -683,38 +865,41 @@ mod tests {
     #[test]
     fn incremental_loopback_infinite() {
         let mut alloc = IncrementalMaxMin::new(vec![1.0]);
-        let l = alloc.add(vec![]);
+        let l = alloc.add(&[]);
         alloc.resolve();
         assert!(alloc.rate(l).is_infinite());
     }
 
-    /// Internal invariant of the positional user tracking: every recorded
-    /// position really points at the flow's entry in the user list.
+    /// Internal invariant of the positional adjacency slab: every span
+    /// record really points at the flow's entry in the user list.
     fn check_positions(alloc: &IncrementalMaxMin) {
-        for f in 0..alloc.resources_of.len() {
+        for f in 0..alloc.span.len() {
+            let s = alloc.span[f];
             if !alloc.live[f] {
-                assert!(alloc.users_pos[f].is_empty(), "dead flow {f} kept positions");
+                assert_eq!(s.len, 0, "dead flow {f} kept adjacency records");
                 continue;
             }
-            assert_eq!(alloc.resources_of[f].len(), alloc.users_pos[f].len());
-            for (k, &r) in alloc.resources_of[f].iter().enumerate() {
-                let pos = alloc.users_pos[f][k];
+            for k in 0..s.len {
+                let e = alloc.adj[s.off + k];
                 assert_eq!(
-                    alloc.users[r][pos], f,
-                    "flow {f} slot {k}: users[{r}][{pos}] holds {}",
-                    alloc.users[r][pos]
+                    alloc.users[e.res][e.pos],
+                    f,
+                    "flow {f} slot {k}: users[{}][{}] holds {}",
+                    e.res,
+                    e.pos,
+                    alloc.users[e.res][e.pos]
                 );
             }
         }
         for (r, us) in alloc.users.iter().enumerate() {
             for (pos, &f) in us.iter().enumerate() {
                 assert!(alloc.live[f], "resource {r} lists dead flow {f}");
+                let s = alloc.span[f];
                 assert!(
-                    alloc
-                        .resources_of[f]
-                        .iter()
-                        .zip(&alloc.users_pos[f])
-                        .any(|(&fr, &fp)| fr == r && fp == pos),
+                    (0..s.len).any(|k| {
+                        let e = alloc.adj[s.off + k];
+                        e.res == r && e.pos == pos
+                    }),
                     "users[{r}][{pos}] = {f} has no back-reference"
                 );
             }
@@ -739,7 +924,7 @@ mod tests {
                         alloc.remove(id);
                     } else {
                         let spec = random_flows(g, nr, 1).remove(0);
-                        let id = alloc.add(spec.resources.clone());
+                        let id = alloc.add(&spec.resources);
                         live.push((id, spec.resources));
                     }
                 }
@@ -772,15 +957,15 @@ mod tests {
         // adversarial order: duplicate resources, removals from the middle,
         // slot reuse — the positional tracking must stay exact throughout
         let mut alloc = IncrementalMaxMin::new(vec![2.0, 4.0, 8.0]);
-        let a = alloc.add(vec![0, 0, 1]); // duplicate entries on resource 0
-        let b = alloc.add(vec![0, 2]);
-        let c = alloc.add(vec![0, 1, 2]);
-        let d = alloc.add(vec![0, 0]); // another duplicated flow
+        let a = alloc.add(&[0, 0, 1]); // duplicate entries on resource 0
+        let b = alloc.add(&[0, 2]);
+        let c = alloc.add(&[0, 1, 2]);
+        let d = alloc.add(&[0, 0]); // another duplicated flow
         check_positions(&alloc);
         alloc.remove(a); // removes two entries of users[0], shuffling b/c/d
         check_positions(&alloc);
         alloc.resolve();
-        let e = alloc.add(vec![1, 1, 2]); // reuses a's slot
+        let e = alloc.add(&[1, 1, 2]); // reuses a's slot
         assert_eq!(e, a);
         check_positions(&alloc);
         alloc.remove(d);
@@ -868,7 +1053,7 @@ mod tests {
                 } else {
                     let spec = random_flows(g, nr, 1).remove(0);
                     let count = 1 + g.rng.below(64) as u64;
-                    let id = alloc.add_weighted(spec.resources.clone(), count);
+                    let id = alloc.add_weighted(&spec.resources, count);
                     live.push((id, spec.resources, count));
                 }
                 alloc.resolve();
@@ -901,9 +1086,9 @@ mod tests {
         let rates = max_min_rates(&caps, &specs);
         let mut a = IncrementalMaxMin::new(caps.clone());
         let mut b = IncrementalMaxMin::new(caps);
-        let ids_a: Vec<_> = specs.iter().map(|s| a.add(s.resources.clone())).collect();
+        let ids_a: Vec<_> = specs.iter().map(|s| a.add(&s.resources)).collect();
         let ids_b: Vec<_> =
-            specs.iter().map(|s| b.add_weighted(s.resources.clone(), 1)).collect();
+            specs.iter().map(|s| b.add_weighted(&s.resources, 1)).collect();
         a.resolve();
         b.resolve();
         for ((&ia, &ib), want) in ids_a.iter().zip(&ids_b).zip(&rates) {
@@ -920,8 +1105,8 @@ mod tests {
         assert!((rates[0] - 2.0).abs() < 1e-12, "{rates:?}");
         assert!((rates[1] - 2.0).abs() < 1e-12, "{rates:?}");
         let mut alloc = IncrementalMaxMin::new(vec![8.0]);
-        let m = alloc.add_weighted(vec![0], 3);
-        let p = alloc.add(vec![0]);
+        let m = alloc.add_weighted(&[0], 3);
+        let p = alloc.add(&[0]);
         alloc.resolve();
         assert!((alloc.rate(m) - 2.0).abs() < 1e-12);
         assert!((alloc.rate(p) - 2.0).abs() < 1e-12);
@@ -936,9 +1121,9 @@ mod tests {
     fn disjoint_components_solved_independently() {
         // two islands: {0,1} and {2,3}; churn in one must not touch the other
         let mut alloc = IncrementalMaxMin::new(vec![4.0, 4.0, 6.0, 6.0]);
-        let a = alloc.add(vec![0, 1]);
-        let b = alloc.add(vec![0]);
-        let c = alloc.add(vec![2, 3]);
+        let a = alloc.add(&[0, 1]);
+        let b = alloc.add(&[0]);
+        let c = alloc.add(&[2, 3]);
         alloc.resolve();
         assert!((alloc.rate(a) - 2.0).abs() < 1e-12);
         assert!((alloc.rate(b) - 2.0).abs() < 1e-12);
@@ -948,5 +1133,131 @@ mod tests {
         alloc.resolve();
         assert!((alloc.rate(a) - 4.0).abs() < 1e-12);
         assert!((alloc.rate(c) - 6.0).abs() < 1e-12);
+    }
+
+    /// Tentpole bit-stability contract: the scoped-thread component solver
+    /// must be indistinguishable from the sequential one — same rates (bit
+    /// for bit) and the same changed set in the same order, through
+    /// randomized weighted churn over many disjoint islands.
+    #[test]
+    fn parallel_resolve_matches_sequential_bitwise() {
+        testkit::check("parallel-vs-sequential-resolve", 40, |g| {
+            let islands = g.usize_in(2, 10);
+            let caps: Vec<f64> = (0..islands * 2).map(|_| g.rng.f64() * 10.0 + 0.1).collect();
+            let mut seq = IncrementalMaxMin::new(caps.clone());
+            let mut par = IncrementalMaxMin::new(caps);
+            par.set_parallel(true);
+            let mut live: Vec<(FlowId, FlowId)> = Vec::new();
+            for _ in 0..g.usize_in(2, 6) {
+                // batch of churn, large enough to cross PAR_MIN_FLOWS
+                for _ in 0..g.usize_in(1, 80) {
+                    if !live.is_empty() && g.rng.below(3) == 0 {
+                        let at = g.rng.below(live.len());
+                        let (ids, idp) = live.swap_remove(at);
+                        seq.remove(ids);
+                        par.remove(idp);
+                    } else {
+                        let isl = g.rng.below(islands);
+                        let rs: Vec<ResourceId> = match g.rng.below(3) {
+                            0 => vec![isl * 2],
+                            1 => vec![isl * 2 + 1],
+                            _ => vec![isl * 2, isl * 2 + 1],
+                        };
+                        let count = 1 + g.rng.below(8) as u64;
+                        let ids = seq.add_weighted(&rs, count);
+                        let idp = par.add_weighted(&rs, count);
+                        prop_assert!(ids == idp, "slot allocation diverged");
+                        live.push((ids, idp));
+                    }
+                }
+                let changed_seq: Vec<FlowId> = seq.resolve().to_vec();
+                let changed_par: Vec<FlowId> = par.resolve().to_vec();
+                prop_assert!(
+                    changed_seq == changed_par,
+                    "changed sets diverged: {changed_seq:?} vs {changed_par:?}"
+                );
+                for &(ids, idp) in &live {
+                    prop_assert!(
+                        seq.rate(ids).to_bits() == par.rate(idp).to_bits(),
+                        "rate diverged on flow {ids}: {} vs {}",
+                        seq.rate(ids),
+                        par.rate(idp)
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_resolve_crosses_the_thread_threshold() {
+        // deterministic heavy batch: 8 islands × 20 flows = 160 flows in one
+        // resolve, comfortably over PAR_MIN_FLOWS, so the scoped-thread path
+        // genuinely runs (not just the sequential fallback)
+        let islands = 8;
+        let caps: Vec<f64> = (0..islands * 2).map(|r| 1.0 + r as f64).collect();
+        let mut seq = IncrementalMaxMin::new(caps.clone());
+        let mut par = IncrementalMaxMin::new(caps);
+        par.set_parallel(true);
+        let mut ids = Vec::new();
+        for i in 0..islands * 20 {
+            let isl = i % islands;
+            let rs = [isl * 2, isl * 2 + 1];
+            let a = seq.add_weighted(&rs, 1 + (i % 5) as u64);
+            let b = par.add_weighted(&rs, 1 + (i % 5) as u64);
+            assert_eq!(a, b);
+            ids.push(a);
+        }
+        assert!(ids.len() >= PAR_MIN_FLOWS);
+        let cs: Vec<FlowId> = seq.resolve().to_vec();
+        let cp: Vec<FlowId> = par.resolve().to_vec();
+        assert_eq!(cs, cp, "changed set must be identical in content and order");
+        for &id in &ids {
+            assert_eq!(seq.rate(id).to_bits(), par.rate(id).to_bits());
+        }
+    }
+
+    /// Degenerate-input robustness: zero-capacity resources must yield
+    /// finite zero rates (never NaN from 0/0 or a negative residual), both
+    /// in the oracle and the incremental allocator.
+    #[test]
+    fn zero_capacity_links_yield_finite_zero_rates() {
+        testkit::check("zero-cap-links", 60, |g| {
+            let nr = g.usize_in(1, 8);
+            let caps: Vec<f64> = (0..nr)
+                .map(|_| if g.rng.below(2) == 0 { 0.0 } else { g.rng.f64() * 5.0 + 0.1 })
+                .collect();
+            let nf = g.usize_in(1, 12);
+            let flows = random_flows(g, nr, nf);
+            let rates = max_min_rates(&caps, &flows);
+            let mut alloc = IncrementalMaxMin::new(caps.clone());
+            let ids: Vec<FlowId> = flows.iter().map(|f| alloc.add(&f.resources)).collect();
+            alloc.resolve();
+            for (fi, (f, &r)) in flows.iter().zip(&rates).enumerate() {
+                prop_assert!(!r.is_nan(), "flow {fi} rated NaN");
+                prop_assert!(r >= 0.0 && r.is_finite(), "flow {fi} rate {r}");
+                let inc = alloc.rate(ids[fi]);
+                prop_assert!(!inc.is_nan() && inc >= 0.0, "incremental flow {fi} rate {inc}");
+                if f.resources.iter().any(|&res| caps[res] == 0.0) {
+                    prop_assert!(r == 0.0, "flow {fi} over a dead link got rate {r}");
+                    prop_assert!(inc == 0.0, "incremental flow {fi} over a dead link got {inc}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degenerate_registrations_are_descriptive_errors() {
+        let mut alloc = IncrementalMaxMin::new(vec![1.0, 2.0]);
+        let err = alloc.try_add_weighted(&[0], 0).unwrap_err().to_string();
+        assert!(err.contains("multiplicity"), "unhelpful zero-weight error: {err}");
+        let err = alloc.try_add_weighted(&[7], 3).unwrap_err().to_string();
+        assert!(err.contains("unknown resource 7"), "unhelpful range error: {err}");
+        // the allocator stays fully usable after a rejected registration
+        let ok = alloc.try_add_weighted(&[0, 1], 2).expect("valid flow rejected");
+        alloc.resolve();
+        assert!((alloc.rate(ok) - 0.5).abs() < 1e-12);
+        assert_eq!(alloc.live_flows(), 1);
     }
 }

@@ -21,6 +21,17 @@
 //! leaves everything else untouched. Folding is a single pass; chains of
 //! transfers that only become symmetric *after* folding their distinct
 //! predecessors are left unfolded (exactness over aggressiveness).
+//!
+//! [`approx_fold_dag`] relaxes exactly one key component: bit-equal bytes
+//! become **ε-bucketed** bytes (a logarithmic grid with ratio `1 + ε`), so
+//! *near*-symmetric flows — same bottleneck containers, tag and deps, bytes
+//! within a relative ε band — fold too. The cost is a certified input
+//! perturbation: each macro's members' payloads span at most a `1 + ε`
+//! ratio ([`ApproxFoldedDag::spread`] `≤ ε` by construction). Two envelope
+//! dags bracket the truth — `lo` carries each bucket's minimum payload, `hi`
+//! its maximum — and each is an *exact* fold problem for the engine. At
+//! ε = 0 the bucket is the bit pattern itself and the approx fold **is** the
+//! exact fold (same code path, bit-identical grouping).
 
 use std::collections::HashMap;
 
@@ -60,7 +71,27 @@ impl FoldedDag {
     }
 }
 
+/// An ε-approximate fold: the low/high envelope problems plus the certified
+/// per-bucket payload perturbation. Produced by [`approx_fold_dag`]; consumed
+/// by `RateMode::Approx`.
+pub struct ApproxFoldedDag {
+    /// Low envelope: every macro carries its bucket's **minimum** payload.
+    /// This is the headline run (finish times unfold through its map).
+    pub lo: FoldedDag,
+    /// High envelope: same structure and task ids as `lo.dag`, but every
+    /// macro carries its bucket's **maximum** payload. `None` when every
+    /// bucket was degenerate (single distinct payload) — then `lo` is
+    /// already exact and one run suffices.
+    pub hi: Option<Dag>,
+    /// Certified input perturbation: `max` over buckets of
+    /// `max_bytes / min_bytes − 1`. By construction of the log-grid bucket,
+    /// `spread ≤ ε` (up to float rounding of the grid edges).
+    pub spread: f64,
+}
+
 /// Strict symmetry key: resource footprint + payload + dependency set.
+/// Under ε-approximate folding `bytes_bits` holds the ε-bucket index instead
+/// of the raw bit pattern (see [`byte_bucket`]).
 #[derive(Clone, PartialEq, Eq, Hash)]
 struct FoldKey {
     level: usize,
@@ -73,6 +104,24 @@ struct FoldKey {
     deps: Vec<TaskId>,
 }
 
+/// ε-bucket of a payload: the cell index of `bytes` on the logarithmic grid
+/// `(1+ε)^k`, so two payloads share a bucket only if their ratio is below
+/// `1 + ε`. Exactness escape hatches: ε ≤ 1e-12 buckets by the raw bit
+/// pattern (the strict fold, bit-identical grouping), and zero-byte payloads
+/// get a reserved sentinel so latency-only flows never fold with payload
+/// flows (the grid index is shifted by 2⁶² to keep cell `−1` — payloads just
+/// below one byte — clear of the sentinel).
+fn byte_bucket(bytes: f64, epsilon: f64) -> u64 {
+    if epsilon <= 1e-12 {
+        return bytes.to_bits();
+    }
+    if bytes <= 0.0 {
+        return u64::MAX;
+    }
+    let cell = (bytes.ln() / (1.0 + epsilon).ln()).floor();
+    ((cell as i64).wrapping_add(1 << 62)) as u64
+}
+
 /// Fold every group of symmetric transfers in `dag` into one macro-transfer.
 ///
 /// Tasks keep their relative order; the macro sits at its first member's
@@ -81,15 +130,29 @@ struct FoldKey {
 /// members finish simultaneously). Loopback transfers, compute and barriers
 /// are copied verbatim with remapped dependencies.
 pub fn fold_dag(dag: &Dag, cluster: &ClusterSpec) -> FoldedDag {
+    fold_with(dag, cluster, 0.0).lo
+}
+
+/// ε-approximately fold `dag`: like [`fold_dag`] with the byte key relaxed
+/// to the `1+ε` log grid, returning low/high envelope problems and the
+/// certified per-bucket spread. `epsilon ≤ 1e-12` degenerates to the exact
+/// fold (same code path, bit-identical grouping, `hi = None`, `spread = 0`).
+pub fn approx_fold_dag(dag: &Dag, cluster: &ClusterSpec, epsilon: f64) -> ApproxFoldedDag {
+    fold_with(dag, cluster, epsilon)
+}
+
+fn fold_with(dag: &Dag, cluster: &ClusterSpec, epsilon: f64) -> ApproxFoldedDag {
     let idx = cluster.multilevel().indexer();
     let n = dag.tasks.len();
 
     // pass 1: group membership. group_of[i] = dense group index for foldable
-    // transfers; first/count accumulate per group.
+    // transfers; first/count/min/max accumulate per group.
     let mut groups: HashMap<FoldKey, usize> = HashMap::new();
     let mut group_of: Vec<Option<usize>> = vec![None; n];
     let mut group_first: Vec<usize> = Vec::new();
     let mut group_count: Vec<u64> = Vec::new();
+    let mut group_min: Vec<f64> = Vec::new();
+    let mut group_max: Vec<f64> = Vec::new();
     for (i, t) in dag.tasks.iter().enumerate() {
         let TaskKind::Transfer { src, dst, bytes, tag, count } = t.kind else {
             continue;
@@ -105,21 +168,46 @@ pub fn fold_dag(dag: &Dag, cluster: &ClusterSpec) -> FoldedDag {
             src_container: idx.container_of(src, level),
             dst_container: idx.container_of(dst, level),
             tag,
-            bytes_bits: bytes.to_bits(),
+            bytes_bits: byte_bucket(bytes, epsilon),
             deps,
         };
         let g = *groups.entry(key).or_insert_with(|| {
             group_first.push(i);
             group_count.push(0);
+            group_min.push(f64::INFINITY);
+            group_max.push(f64::NEG_INFINITY);
             group_count.len() - 1
         });
         group_of[i] = Some(g);
         group_count[g] += count;
+        group_min[g] = group_min[g].min(bytes);
+        group_max[g] = group_max[g].max(bytes);
     }
 
+    // certified spread: worst payload ratio inside any bucket. A bucket with
+    // min = 0 holds only zero-byte members (the sentinel bucket), so the
+    // ratio is taken on payload buckets only.
+    let mut spread = 0.0f64;
+    let mut degenerate = true;
+    for g in 0..group_count.len() {
+        if group_min[g].to_bits() != group_max[g].to_bits() {
+            degenerate = false;
+            if group_min[g] > 0.0 {
+                spread = spread.max(group_max[g] / group_min[g] - 1.0);
+            }
+        }
+    }
+    debug_assert!(
+        spread <= epsilon * (1.0 + 1e-9) + 1e-15,
+        "ε-bucket admitted spread {spread} > ε {epsilon}"
+    );
+
     // pass 2: rebuild in original order, emitting each macro at its first
-    // member's position and remapping dependencies through fold_of.
+    // member's position and remapping dependencies through fold_of. The low
+    // envelope carries bucket minima; when any bucket is non-degenerate the
+    // high envelope is built in lockstep (same pushes → same task ids).
     let mut out = Dag::new();
+    let mut hi = if degenerate { None } else { Some(Dag::new()) };
     let mut fold_of = vec![usize::MAX; n];
     for (i, t) in dag.tasks.iter().enumerate() {
         if let Some(g) = group_of[i] {
@@ -131,16 +219,28 @@ pub fn fold_dag(dag: &Dag, cluster: &ClusterSpec) -> FoldedDag {
             let TaskKind::Transfer { src, dst, bytes, tag, .. } = t.kind else {
                 unreachable!("grouped task is a transfer")
             };
+            // ε = 0 keeps the member's own bit pattern (min == max == bytes)
+            debug_assert!(epsilon > 1e-12 || group_min[g].to_bits() == bytes.to_bits());
             let deps: Vec<TaskId> = t.deps.iter().map(|&d| fold_of[d]).collect();
-            fold_of[i] = out.transfer_n(src, dst, bytes, group_count[g], tag, deps, t.label);
+            if let Some(h) = hi.as_mut() {
+                h.transfer_n(src, dst, group_max[g], group_count[g], tag, deps.clone(), t.label);
+            }
+            fold_of[i] = out.transfer_n(src, dst, group_min[g], group_count[g], tag, deps, t.label);
         } else {
             let deps: Vec<TaskId> = t.deps.iter().map(|&d| fold_of[d]).collect();
+            if let Some(h) = hi.as_mut() {
+                h.add(t.kind.clone(), deps.clone(), t.label);
+            }
             fold_of[i] = out.add(t.kind.clone(), deps, t.label);
         }
     }
     let member_flows = dag.member_transfers();
     let materialized_flows = out.transfer_tasks();
-    FoldedDag { dag: out, fold_of, member_flows, materialized_flows }
+    ApproxFoldedDag {
+        lo: FoldedDag { dag: out, fold_of, member_flows, materialized_flows },
+        hi,
+        spread,
+    }
 }
 
 #[cfg(test)]
@@ -246,5 +346,67 @@ mod tests {
         assert_eq!(folded.materialized_flows, born.transfer_tasks());
         assert_eq!(folded.dag.member_transfers(), born.member_transfers());
         assert_eq!(folded.member_flows, unfolded.len());
+    }
+
+    #[test]
+    fn approx_fold_eps_zero_is_the_exact_fold() {
+        let cluster = presets::dcs_x_gpus(4, 3, 10.0, 128.0);
+        let d = dense_mixed_a2a(4, 3, 64e3, 8e6, 0.5, 23);
+        let exact = fold_dag(&d, &cluster);
+        let af = approx_fold_dag(&d, &cluster, 0.0);
+        assert!(af.hi.is_none(), "ε=0 buckets by bit pattern: no envelope split");
+        assert_eq!(af.spread, 0.0);
+        assert_eq!(af.lo.materialized_flows, exact.materialized_flows);
+        assert_eq!(af.lo.member_flows, exact.member_flows);
+        assert_eq!(af.lo.fold_of, exact.fold_of, "grouping must be bit-identical");
+        assert_eq!(af.lo.dag.len(), exact.dag.len());
+        for (a, b) in af.lo.dag.tasks.iter().zip(&exact.dag.tasks) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.deps, b.deps);
+        }
+    }
+
+    #[test]
+    fn approx_fold_collapses_jittered_flows_within_the_band() {
+        // 4 cross-DC flows between the same DC pair with bytes jittered
+        // within a ±2% band: the exact fold keeps all 4 distinct, the
+        // ε = 0.1 fold collapses them into at most 2 adjacent buckets with
+        // certified spread ≤ ε and envelopes bracketing the exact traffic.
+        let cluster = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let payloads = [1.00e6, 1.01e6, 0.99e6, 1.02e6];
+        let mut d = Dag::new();
+        for (k, &b) in payloads.iter().enumerate() {
+            d.transfer(k % 2, 2 + k % 2, b, Tag::A2A, vec![], "jit");
+        }
+        let exact = fold_dag(&d, &cluster);
+        assert_eq!(exact.materialized_flows, 4, "exact fold must not merge jittered bytes");
+        let af = approx_fold_dag(&d, &cluster, 0.1);
+        assert!(af.lo.materialized_flows <= 2, "ε-fold left {} macros", af.lo.materialized_flows);
+        assert!(af.spread <= 0.1 + 1e-12, "spread {} exceeds ε", af.spread);
+        assert!(af.spread > 0.0, "jittered payloads must report a non-zero spread");
+        let hi = af.hi.as_ref().expect("non-degenerate buckets need a high envelope");
+        assert_eq!(hi.len(), af.lo.dag.len(), "envelopes share structure and ids");
+        let truth = d.traffic_by_tag(Tag::A2A);
+        assert!(af.lo.dag.traffic_by_tag(Tag::A2A) <= truth);
+        assert!(hi.traffic_by_tag(Tag::A2A) >= truth);
+        // every member maps to a live macro in the lo dag
+        for t in 0..d.len() {
+            assert!(af.lo.fold_of(t) < af.lo.dag.len());
+        }
+    }
+
+    #[test]
+    fn zero_byte_flows_never_fold_with_payload_flows() {
+        // the sentinel bucket: a latency-only flow and a sub-byte payload
+        // (grid cell −1, the index that would collide with the sentinel
+        // without the 2⁶² shift) must stay separate at any ε
+        let cluster = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let mut d = Dag::new();
+        d.transfer(0, 2, 0.0, Tag::A2A, vec![], "latency_only");
+        d.transfer(1, 3, 0.9, Tag::A2A, vec![], "sub_byte");
+        let af = approx_fold_dag(&d, &cluster, 0.3);
+        assert_eq!(af.lo.materialized_flows, 2, "zero-byte folded with a payload flow");
+        assert_eq!(af.spread, 0.0, "both buckets are degenerate");
+        assert!(af.hi.is_none());
     }
 }

@@ -20,6 +20,12 @@
 //! fig17-style sweeps honestly reach 1024 DCs (see DESIGN.md §Hot path for
 //! the per-event complexity table).
 //!
+//! Flow progress lives in a struct-of-arrays `FlowTable` (dense parallel
+//! columns instead of per-flow records), and the allocator behind it keeps
+//! its adjacency in a flat reusable slab — the steady-state event path
+//! allocates nothing. [`RateMode::Parallel`] additionally water-fills
+//! disjoint dirty components on scoped threads with bit-identical results.
+//!
 //! [`RateMode::Folded`] layers **symmetry folding** on top: the dag is
 //! rewritten by [`fold::fold_dag`](super::fold::fold_dag) so that identical
 //! transfers ride one multiplicity-weighted macro-flow (one calendar entry,
@@ -27,7 +33,9 @@
 //! finish times are unfolded afterwards. All engines also execute
 //! *born-folded* dags (`Dag::transfer_n`) natively, scaling per-tag and
 //! per-level byte accounting by the multiplicity (the busy-GPU utilization
-//! integral is compute-driven and needs no scaling).
+//! integral is compute-driven and needs no scaling). [`RateMode::Approx`]
+//! relaxes the fold's exact byte match to a relative ε band and brackets the
+//! makespan with low/high envelope runs — the O(100k)-GPU path.
 //!
 //! Two baselines keep the pre-change event loop (linear next-event search,
 //! per-event byte advancement of every flow) verbatim:
@@ -52,12 +60,26 @@ use crate::netsim::flow::{max_min_rates, FlowSpec, IncrementalMaxMin};
 const EPS: f64 = 1e-12;
 
 /// How the engine maintains rates and finds the next event.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+///
+/// (`Eq` cannot be derived because [`Approx`](Self::Approx) carries its
+/// tolerance as an `f64`; `PartialEq` covers every comparison the code
+/// performs.)
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
 pub enum RateMode {
     /// Indexed event calendar + lazy flow progress + component-local
     /// incremental rate re-solves (the production hot path).
     #[default]
     Incremental,
+    /// [`Incremental`](Self::Incremental) with the allocator's disjoint
+    /// dirty components water-filled on scoped threads
+    /// ([`IncrementalMaxMin::set_parallel`]). **Bit-identical** to
+    /// [`Incremental`](Self::Incremental): components are data-independent
+    /// sub-problems solved in isolation either way, and rates merge back in
+    /// deterministic discovery order (pinned by the bit-stability
+    /// differential tests). Pays off when events dirty many independent
+    /// components at once — e.g. thousands of jittered intra-DC islands
+    /// completing while cross-DC elephants are in flight.
+    Parallel,
     /// [`Incremental`](Self::Incremental) over the **symmetry-folded** dag:
     /// identical transfers (same bottleneck containers, bytes, deps — see
     /// [`fold::fold_dag`](super::fold::fold_dag)) collapse into one
@@ -70,6 +92,26 @@ pub enum RateMode {
     /// benefit under plain [`Incremental`](Self::Incremental) — all engines
     /// understand macro-transfers natively.
     Folded,
+    /// ε-approximate folding: like [`Folded`](Self::Folded), but the fold
+    /// key's exact byte match is relaxed to a **relative ε band** — transfers
+    /// whose payloads differ by at most a factor `1 + epsilon` (same
+    /// bottleneck containers, tag, deps) share one macro-flow (see
+    /// [`fold::approx_fold_dag`](super::fold::approx_fold_dag)). The engine
+    /// runs the low envelope (every bucket at its smallest member payload)
+    /// and, when any bucket actually mixed payloads, the high envelope
+    /// (largest member payload), reporting the makespan interval
+    /// [`SimResult::makespan_lo`] ..= [`SimResult::makespan_hi`] together
+    /// with the certified per-bucket input spread
+    /// [`SimResult::approx_spread`] `≤ epsilon`. Headline fields come from
+    /// the low run (`finish` via the unfold map; byte totals are the
+    /// low-envelope totals, within the spread of exact). `epsilon ≤ 1e-12`
+    /// degenerates to exact folding bit for bit. This is what collapses the
+    /// O(100k)-GPU near-symmetric workloads whose payload jitter defeats
+    /// the strict fold.
+    Approx {
+        /// Relative payload tolerance for bucketing (e.g. `0.05` = 5%).
+        epsilon: f64,
+    },
     /// Pre-change event loop (linear per-event scans) with incremental rate
     /// maintenance — the baseline the calendar engine's speedup is measured
     /// against.
@@ -117,6 +159,17 @@ pub struct SimResult {
     pub gpu_utilization: f64,
     /// wall-clock events processed (perf accounting)
     pub events: usize,
+    /// Lower end of the makespan interval. Exact engines report
+    /// `makespan_lo == makespan_hi == makespan`; [`RateMode::Approx`] reports
+    /// the smaller of its low/high envelope runs.
+    pub makespan_lo: f64,
+    /// Upper end of the makespan interval (see [`makespan_lo`](Self::makespan_lo)).
+    pub makespan_hi: f64,
+    /// Certified input perturbation of the ε-fold: the worst relative payload
+    /// spread `(max − min) / min` inside any merged bucket, guaranteed
+    /// `≤ epsilon` by log-scale bucketing. `0.0` for exact engines and for
+    /// degenerate ε-folds (every bucket held one distinct payload).
+    pub approx_spread: f64,
 }
 
 impl SimResult {
@@ -126,6 +179,19 @@ impl SimResult {
             Tag::AG => self.bytes_ag,
             Tag::AllReduce => self.bytes_allreduce,
             Tag::Other => 0.0,
+        }
+    }
+
+    /// Relative width of the reported makespan interval,
+    /// `makespan_hi / makespan_lo − 1` (`0.0` when the interval is a point
+    /// or degenerate). Under [`RateMode::Approx`] this is the measured
+    /// envelope gap produced by an input perturbation of at most
+    /// [`approx_spread`](Self::approx_spread) per bucket.
+    pub fn approx_interval_rel(&self) -> f64 {
+        if self.makespan_lo > 0.0 && self.makespan_hi.is_finite() {
+            (self.makespan_hi / self.makespan_lo - 1.0).max(0.0)
+        } else {
+            0.0
         }
     }
 }
@@ -189,30 +255,38 @@ impl Calendar {
     }
 }
 
-/// Lazy progress record for an in-flight flow: bytes are settled only when
-/// the rate changes (a "touch"), so an event that leaves a flow's rate
-/// intact costs it nothing. Remaining bytes at time `t` are
-/// `bytes_at_touch - rate · (t - touch_time)`.
-#[derive(Clone, Copy, Debug)]
-struct FlowState {
-    task: usize,
-    bytes_at_touch: f64,
-    touch_time: f64,
-    rate: f64,
+/// Struct-of-arrays table of lazy flow progress records: bytes are settled
+/// only when a flow's rate changes (a "touch"), so an event that leaves a
+/// flow's rate intact costs it nothing. Remaining bytes at time `t` are
+/// `bytes_at_touch[f] - rate[f] · (t - touch_time[f])`.
+///
+/// Parallel arrays instead of one record struct: the stale-finish filter in
+/// the event loop touches only `live`/`gen` (two dense, cache-friendly
+/// columns), while the rate-refresh loop streams the numeric columns —
+/// neither pass strides over fields it never reads.
+#[derive(Default)]
+struct FlowTable {
+    task: Vec<usize>,
+    bytes_at_touch: Vec<f64>,
+    touch_time: Vec<f64>,
+    rate: Vec<f64>,
     /// bumps on every touch/slot reuse, invalidating stale finish entries
-    gen: u64,
-    live: bool,
+    gen: Vec<u64>,
+    live: Vec<bool>,
 }
 
-impl FlowState {
-    fn vacant() -> Self {
-        Self {
-            task: usize::MAX,
-            bytes_at_touch: 0.0,
-            touch_time: 0.0,
-            rate: 0.0,
-            gen: 0,
-            live: false,
+impl FlowTable {
+    /// Grow every column to cover `id` (vacant rows: dead, generation kept).
+    #[inline]
+    fn ensure(&mut self, id: usize) {
+        if id >= self.task.len() {
+            let n = id + 1;
+            self.task.resize(n, usize::MAX);
+            self.bytes_at_touch.resize(n, 0.0);
+            self.touch_time.resize(n, 0.0);
+            self.rate.resize(n, 0.0);
+            self.gen.resize(n, 0);
+            self.live.resize(n, false);
         }
     }
 }
@@ -355,23 +429,51 @@ impl<'a> Simulator<'a> {
     /// (DAG construction enforces topological ids, so cycles are impossible).
     pub fn run(&self, dag: &Dag) -> SimResult {
         match self.mode {
-            RateMode::Incremental => self.run_calendar(dag),
+            RateMode::Incremental => self.run_calendar(dag, false),
+            RateMode::Parallel => self.run_calendar(dag, true),
             RateMode::Folded => {
                 let folded = super::fold::fold_dag(dag, self.cluster);
-                let mut r = self.run_calendar(&folded.dag);
+                let mut r = self.run_calendar(&folded.dag, false);
                 // report results in the original dag's task-id space; byte
                 // totals are member-weighted on both sides, so they carry
                 // over unchanged
                 r.finish = folded.unfold_finish(&r.finish);
                 r
             }
+            RateMode::Approx { epsilon } => self.run_approx(dag, epsilon),
             RateMode::ScanIncremental => self.run_scan(dag, true),
             RateMode::Reference => self.run_scan(dag, false),
         }
     }
 
+    /// The ε-approximate engine: fold with relaxed (ε-bucketed) byte
+    /// matching, run the **low envelope** (per-bucket minimum payloads) for
+    /// the headline result, and — unless every bucket was degenerate — the
+    /// **high envelope** (per-bucket maximums) to bracket the makespan.
+    /// The reported interval is the min/max of the two envelope makespans;
+    /// `approx_spread` certifies the per-bucket input perturbation. Both
+    /// envelope dags are exact fold problems, so each run is itself exact.
+    fn run_approx(&self, dag: &Dag, epsilon: f64) -> SimResult {
+        let af = super::fold::approx_fold_dag(dag, self.cluster, epsilon);
+        let mut r = self.run_calendar(&af.lo.dag, false);
+        r.finish = af.lo.unfold_finish(&r.finish);
+        r.approx_spread = af.spread;
+        if let Some(hi) = &af.hi {
+            let rh = self.run_calendar(hi, false);
+            r.events += rh.events;
+            // raising payloads usually raises the makespan, but fair-share
+            // coupling makes monotonicity non-theorematic — order the two
+            // envelope makespans instead of assuming lo ≤ hi
+            r.makespan_lo = r.makespan.min(rh.makespan);
+            r.makespan_hi = r.makespan.max(rh.makespan);
+        }
+        r
+    }
+
     /// The calendar engine: O(log n) event indexing + lazy flow progress.
-    fn run_calendar(&self, dag: &Dag) -> SimResult {
+    /// `parallel` fans the allocator's per-component water-fills out over
+    /// scoped threads (bit-identical results either way).
+    fn run_calendar(&self, dag: &Dag, parallel: bool) -> SimResult {
         let fr = Frame::new(self.cluster);
         let g = fr.g;
         let n = dag.tasks.len();
@@ -392,8 +494,9 @@ impl<'a> Simulator<'a> {
         // pending flow starts: the bottleneck level is computed once at
         // dispatch and carried here (the start pass used to recompute it)
         let mut pending: Vec<(usize, usize)> = Vec::new();
-        let mut flows: Vec<FlowState> = Vec::new();
+        let mut flows = FlowTable::default();
         let mut alloc = IncrementalMaxMin::new(fr.caps.clone());
+        alloc.set_parallel(parallel);
         let mut changed_buf: Vec<usize> = Vec::new();
         let mut rates_dirty = false;
 
@@ -468,18 +571,18 @@ impl<'a> Simulator<'a> {
                 changed_buf.clear();
                 changed_buf.extend_from_slice(alloc.resolve());
                 for &id in &changed_buf {
-                    let fs = &mut flows[id];
-                    debug_assert!(fs.live, "allocator re-rated a dead flow");
+                    debug_assert!(flows.live[id], "allocator re-rated a dead flow");
                     let new_rate = alloc.rate(id);
-                    let remaining = fs.bytes_at_touch - fs.rate * (time - fs.touch_time);
-                    fs.bytes_at_touch = remaining;
-                    fs.touch_time = time;
-                    fs.rate = new_rate;
-                    fs.gen += 1;
+                    let remaining =
+                        flows.bytes_at_touch[id] - flows.rate[id] * (time - flows.touch_time[id]);
+                    flows.bytes_at_touch[id] = remaining;
+                    flows.touch_time[id] = time;
+                    flows.rate[id] = new_rate;
+                    flows.gen[id] += 1;
                     if new_rate.is_infinite() || remaining <= EPS {
-                        finish_cal.push(time, id, fs.gen);
+                        finish_cal.push(time, id, flows.gen[id]);
                     } else if new_rate > 0.0 {
-                        finish_cal.push(time + remaining / new_rate, id, fs.gen);
+                        finish_cal.push(time + remaining / new_rate, id, flows.gen[id]);
                     }
                     // rate 0 with bytes left: no finish entry — the flow is
                     // stalled until a later resolve moves its rate (the
@@ -498,8 +601,7 @@ impl<'a> Simulator<'a> {
                 next = next.min(e.time);
             }
             while let Some(e) = finish_cal.peek() {
-                let fs = &flows[e.key];
-                if fs.live && fs.gen == e.stamp {
+                if flows.live[e.key] && flows.gen[e.key] == e.stamp {
                     next = next.min(e.time);
                     break;
                 }
@@ -539,22 +641,18 @@ impl<'a> Simulator<'a> {
                 let TaskKind::Transfer { src, dst, bytes, count, .. } = dag.tasks[task].kind else {
                     unreachable!()
                 };
-                let resources = vec![fr.resource_of(src, l, false), fr.resource_of(dst, l, true)];
+                let resources = [fr.resource_of(src, l, false), fr.resource_of(dst, l, true)];
                 // a macro-flow holds `count` shares of its uplink pool; its
                 // state below tracks *per-member* bytes at the per-member rate
-                let id = alloc.add_weighted(resources, count);
-                if id >= flows.len() {
-                    flows.resize(id + 1, FlowState::vacant());
-                }
-                let gen = flows[id].gen + 1;
-                flows[id] = FlowState {
-                    task,
-                    bytes_at_touch: bytes,
-                    touch_time: time,
-                    rate: 0.0,
-                    gen,
-                    live: true,
-                };
+                let id = alloc.add_weighted(&resources, count);
+                flows.ensure(id);
+                let gen = flows.gen[id] + 1;
+                flows.task[id] = task;
+                flows.bytes_at_touch[id] = bytes;
+                flows.touch_time[id] = time;
+                flows.rate[id] = 0.0;
+                flows.gen[id] = gen;
+                flows.live[id] = true;
                 if bytes <= EPS {
                     // latency-only transfer: finishes at this very event
                     finish_cal.push(time, id, gen);
@@ -568,8 +666,7 @@ impl<'a> Simulator<'a> {
             // bytes fell under EPS; at the engine's bytes/s rates that is a
             // sub-EPS time-to-finish, i.e. the same stamped window.)
             while let Some(e) = finish_cal.peek() {
-                let fs = &flows[e.key];
-                if !(fs.live && fs.gen == e.stamp) {
+                if !(flows.live[e.key] && flows.gen[e.key] == e.stamp) {
                     finish_cal.pop();
                     continue;
                 }
@@ -578,9 +675,9 @@ impl<'a> Simulator<'a> {
                 }
                 finish_cal.pop();
                 let id = e.key;
-                flows[id].live = false;
+                flows.live[id] = false;
                 alloc.remove(id);
-                ds.complete(flows[id].task, time);
+                ds.complete(flows.task[id], time);
                 rates_dirty = true;
             }
         }
@@ -599,6 +696,9 @@ impl<'a> Simulator<'a> {
                 0.0
             },
             events,
+            makespan_lo: makespan,
+            makespan_hi: makespan,
+            approx_spread: 0.0,
         }
     }
 
@@ -757,7 +857,7 @@ impl<'a> Simulator<'a> {
                     let resources =
                         vec![fr.resource_of(src, l, false), fr.resource_of(dst, l, true)];
                     let id = if incremental {
-                        alloc.add_weighted(resources.clone(), count)
+                        alloc.add_weighted(&resources, count)
                     } else {
                         usize::MAX
                     };
@@ -816,6 +916,9 @@ impl<'a> Simulator<'a> {
                 0.0
             },
             events,
+            makespan_lo: makespan,
+            makespan_hi: makespan,
+            approx_spread: 0.0,
         }
     }
 }
@@ -1474,5 +1577,211 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    fn assert_bit_identical(seq: &SimResult, par: &SimResult, what: &str) {
+        assert!(
+            seq.makespan.to_bits() == par.makespan.to_bits(),
+            "{what}: makespan not bit-identical: {} vs {}",
+            seq.makespan,
+            par.makespan
+        );
+        assert_eq!(seq.finish.len(), par.finish.len(), "{what}: finish length");
+        for (i, (x, y)) in seq.finish.iter().zip(&par.finish).enumerate() {
+            assert!(x.to_bits() == y.to_bits(), "{what}: task {i} finish: {x} vs {y}");
+        }
+        for (name, x, y) in [
+            ("a2a", seq.bytes_a2a, par.bytes_a2a),
+            ("ag", seq.bytes_ag, par.bytes_ag),
+            ("allreduce", seq.bytes_allreduce, par.bytes_allreduce),
+            ("util", seq.gpu_utilization, par.gpu_utilization),
+        ] {
+            assert!(x.to_bits() == y.to_bits(), "{what}: {name} not bit-identical: {x} vs {y}");
+        }
+        for l in 0..seq.bytes_per_level.len() {
+            assert!(
+                seq.bytes_per_level[l].to_bits() == par.bytes_per_level[l].to_bits(),
+                "{what}: level {l} bytes not bit-identical"
+            );
+        }
+        assert_eq!(seq.events, par.events, "{what}: event counts diverged");
+    }
+
+    /// Tentpole (parallel resolve): `RateMode::Parallel` water-fills disjoint
+    /// dirty components on scoped threads, but the deterministic merge must
+    /// make the whole calendar run **bit-identical** to the sequential
+    /// engine — makespan, every finish time, byte totals, utilization and
+    /// the event count, on randomized heterogeneous DAGs.
+    #[test]
+    fn parallel_engine_is_bit_identical_to_calendar() {
+        testkit::check("sim-parallel-vs-calendar", 60, |g| {
+            let mut cluster = random_cluster(g);
+            if g.rng.below(2) == 0 {
+                let dcs = cluster.levels[0].fanout;
+                cluster = cluster.with_override(0, g.rng.below(dcs.max(1)), presets::gbps(2.5));
+            }
+            let dag = random_dag(g, cluster.total_gpus(), true);
+            let seq = Simulator::new(&cluster).run(&dag);
+            let par = Simulator::with_mode(&cluster, RateMode::Parallel).run(&dag);
+            prop_assert!(
+                seq.makespan.to_bits() == par.makespan.to_bits(),
+                "parallel makespan not bit-identical: {} vs {}",
+                seq.makespan,
+                par.makespan
+            );
+            for (i, (x, y)) in seq.finish.iter().zip(&par.finish).enumerate() {
+                prop_assert!(x.to_bits() == y.to_bits(), "task {i} finish: {x} vs {y}");
+            }
+            prop_assert!(seq.bytes_a2a.to_bits() == par.bytes_a2a.to_bits(), "a2a bytes");
+            prop_assert!(seq.events == par.events, "event counts diverged");
+            Ok(())
+        });
+        // dense case crossing the PAR_MIN_FLOWS thread threshold, with a
+        // straggler override so components are genuinely heterogeneous
+        let c = presets::dcs_x_gpus(16, 4, 10.0, 128.0).with_override(0, 2, presets::gbps(2.5));
+        let dag = dense_mixed_a2a(16, 4, 64e3, 8e6, 0.5, 41);
+        let seq = Simulator::new(&c).run(&dag);
+        let par = Simulator::with_mode(&c, RateMode::Parallel).run(&dag);
+        assert_bit_identical(&seq, &par, "dense_mixed_a2a 16x4");
+    }
+
+    /// Robustness satellite: zero-byte transfers are latency-only on every
+    /// engine — finite makespan, no NaN rates, exact byte accounting.
+    #[test]
+    fn zero_byte_transfers_complete_at_pure_latency_on_every_engine() {
+        let c = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let lat = c.levels[0].latency;
+        for mode in [
+            RateMode::Incremental,
+            RateMode::Parallel,
+            RateMode::Folded,
+            RateMode::Approx { epsilon: 0.1 },
+            RateMode::ScanIncremental,
+            RateMode::Reference,
+        ] {
+            let mut d = Dag::new();
+            d.transfer(0, 2, 0.0, Tag::A2A, vec![], "z1");
+            d.transfer(1, 3, 0.0, Tag::A2A, vec![], "z2");
+            let r = Simulator::with_mode(&c, mode).run(&d);
+            assert!(r.makespan.is_finite(), "{mode:?}: non-finite makespan");
+            assert!(
+                (r.makespan - lat).abs() <= 1e-9 * (1.0 + lat),
+                "{mode:?}: zero-byte transfer should take exactly one latency: {} vs {lat}",
+                r.makespan
+            );
+            assert_eq!(r.bytes_a2a, 0.0, "{mode:?}: phantom bytes");
+            for f in &r.finish {
+                assert!(f.is_finite(), "{mode:?}: non-finite finish");
+            }
+        }
+    }
+
+    /// Tentpole (ε-approx): on near-symmetric jittered traffic the approx
+    /// engine must report a certified spread ≤ ε and a makespan interval
+    /// that brackets the exact folded engine (cushioned by the spread — the
+    /// envelope runs bound each bucket's payload from below and above).
+    #[test]
+    fn approx_interval_brackets_exact_folding_on_jittered_traffic() {
+        testkit::check("sim-approx-vs-folded", 30, |g| {
+            let dcs = g.usize_in(3, 8);
+            let per_dc = g.usize_in(2, 4);
+            let mut cluster = presets::dcs_x_gpus(dcs, per_dc, 10.0, 128.0);
+            if g.rng.below(2) == 0 {
+                cluster = cluster.with_override(0, g.rng.below(dcs), presets::gbps(2.5));
+            }
+            let epsilon = g.rng.f64() * 0.29 + 0.01;
+            // cross payloads jittered within ±ε/4 of a shared per-pair base:
+            // members land in at most two adjacent ε-buckets, so the exact
+            // fold keeps them distinct while the approx fold collapses them
+            let base = (g.rng.below(2000) + 100) as f64 * 1024.0;
+            let dag = {
+                let rng = &mut g.rng;
+                Dag::all_to_all(dcs * per_dc, Tag::A2A, |i, j| {
+                    if i / per_dc == j / per_dc {
+                        (rng.below(4000) + 1) as f64 * 512.0
+                    } else {
+                        base * (1.0 + (rng.f64() - 0.5) * epsilon / 2.0)
+                    }
+                })
+            };
+            let exact = Simulator::with_mode(&cluster, RateMode::Folded).run(&dag);
+            let ap = Simulator::with_mode(&cluster, RateMode::Approx { epsilon }).run(&dag);
+            prop_assert!(
+                ap.approx_spread <= epsilon * (1.0 + 1e-9) + 1e-15,
+                "spread {} exceeds certified ε {epsilon}",
+                ap.approx_spread
+            );
+            prop_assert!(
+                ap.makespan_lo <= ap.makespan_hi,
+                "interval inverted: [{}, {}]",
+                ap.makespan_lo,
+                ap.makespan_hi
+            );
+            prop_assert!(
+                ap.approx_interval_rel() <= 3.0 * epsilon + 1e-9,
+                "interval width {} not O(ε={epsilon})",
+                ap.approx_interval_rel()
+            );
+            let cushion = 1.0 + 2.0 * epsilon + 1e-9;
+            prop_assert!(
+                exact.makespan >= ap.makespan_lo / cushion
+                    && exact.makespan <= ap.makespan_hi * cushion,
+                "exact makespan {} outside cushioned interval [{}, {}] (ε={epsilon})",
+                exact.makespan,
+                ap.makespan_lo,
+                ap.makespan_hi
+            );
+            prop_assert!(ap.finish.len() == dag.len(), "approx unfold lost tasks");
+            // weighted byte totals track the exact totals within the band
+            prop_assert!(
+                (ap.bytes_a2a - exact.bytes_a2a).abs()
+                    <= epsilon * exact.bytes_a2a + 1e-6 * (1.0 + exact.bytes_a2a),
+                "approx bytes drifted past the band: {} vs {}",
+                ap.bytes_a2a,
+                exact.bytes_a2a
+            );
+            Ok(())
+        });
+    }
+
+    /// Scale-gate staging (the full 12 800 DCs × 8 runs in the fig17 bench
+    /// `--quick` smoke): the neighborhood A2A at 1 280 DCs × 8 GPUs/DC —
+    /// 10 240 member GPUs, ~660k member flows — completes under the approx
+    /// engine with a certified interval, quickly. Sample-synchronized cross
+    /// jitter keeps the event count near O(samples + dcs), not O(flows).
+    #[test]
+    fn approx_neighborhood_a2a_scales_to_1280_dcs_x8() {
+        let (dcs, per_dc, degree, samples) = (1280usize, 8usize, 4usize, 8usize);
+        let c = presets::dcs_x_gpus(dcs, per_dc, 10.0, 128.0);
+        let dag = crate::netsim::dag::dense_neighborhood_a2a(
+            dcs, per_dc, degree, samples, 64e3, 8e6, 0.02, 97,
+        );
+        assert_eq!(
+            dag.member_transfers(),
+            dcs * per_dc * (per_dc - 1) + dcs * degree * per_dc * per_dc
+        );
+        let t0 = std::time::Instant::now();
+        let r = Simulator::with_mode(&c, RateMode::Approx { epsilon: 0.05 }).run(&dag);
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(r.makespan > 0.0 && r.makespan.is_finite());
+        assert!(r.approx_spread <= 0.05 * (1.0 + 1e-9) + 1e-15);
+        assert!(r.makespan_lo <= r.makespan_hi);
+        assert!(r.approx_interval_rel() <= 3.0 * 0.05 + 1e-9);
+        assert!(wall < 60.0, "1280×8 approx run too slow: {wall:.1}s");
+    }
+
+    /// ε→0 degeneracy: `Approx { epsilon: 0.0 }` must be **bitwise** the
+    /// exact folded engine — same grouping, same representatives, one run.
+    #[test]
+    fn approx_eps_zero_is_bitwise_exact_folding() {
+        let c = presets::dcs_x_gpus(8, 3, 10.0, 128.0).with_override(0, 1, presets::gbps(5.0));
+        let dag = dense_mixed_a2a(8, 3, 64e3, 8e6, 0.5, 13);
+        let f = Simulator::with_mode(&c, RateMode::Folded).run(&dag);
+        let a = Simulator::with_mode(&c, RateMode::Approx { epsilon: 0.0 }).run(&dag);
+        assert_bit_identical(&f, &a, "approx ε=0 vs folded");
+        assert_eq!(a.approx_spread, 0.0, "ε=0 must certify zero spread");
+        assert!(a.makespan_lo.to_bits() == a.makespan.to_bits());
+        assert!(a.makespan_hi.to_bits() == a.makespan.to_bits());
+        assert_eq!(a.approx_interval_rel(), 0.0);
     }
 }

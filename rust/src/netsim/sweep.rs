@@ -632,6 +632,31 @@ mod tests {
         }
     }
 
+    /// The parallel-resolve engine is a drop-in [`SweepGrid::engine`] choice
+    /// with a stronger contract than the folded one: component-parallel
+    /// water-fills merge deterministically, so every sweep outcome is
+    /// **bit-identical** to the sequential calendar engine.
+    #[test]
+    fn parallel_engine_sweeps_are_bit_identical_to_calendar() {
+        for mode in [SweepMode::Aggregate, SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 }] {
+            let grid = small_grid(mode);
+            let mut par_grid = grid.clone();
+            par_grid.engine = RateMode::Parallel;
+            let cal = run_sweep(&grid, 2).unwrap();
+            let par = run_sweep(&par_grid, 2).unwrap();
+            assert_eq!(cal.len(), par.len());
+            for (c, p) in cal.iter().zip(&par) {
+                assert_eq!(c.ep.makespan.to_bits(), p.ep.makespan.to_bits());
+                assert_eq!(c.hybrid.makespan.to_bits(), p.hybrid.makespan.to_bits());
+                assert_eq!(c.speedup.to_bits(), p.speedup.to_bits());
+                assert_eq!(c.ep.bytes_a2a.to_bits(), p.ep.bytes_a2a.to_bits());
+                assert_eq!(c.hybrid.bytes_ag.to_bits(), p.hybrid.bytes_ag.to_bits());
+                assert_eq!(c.ep.events, p.ep.events);
+                assert_eq!(c.hybrid.events, p.hybrid.events);
+            }
+        }
+    }
+
     #[test]
     fn aggregate_sweep_speedups_sane() {
         let grid = small_grid(SweepMode::Aggregate);
