@@ -1,0 +1,76 @@
+//! Failure recovery — elastic replanning vs static restart over seeded
+//! failure traces, plus a fault-injected netsim sweep. Not a paper figure:
+//! exercises `netsim::faults`, `migration::checkpoint` and
+//! `plan::replanner::elastic` end to end. `--quick` / `BENCH_FAST=1` runs
+//! the recovery table alone (the CI smoke); rows are merged into
+//! `BENCH_netsim.json`.
+
+use hybrid_ep::bench::{header, time_once, JsonReport};
+use hybrid_ep::netsim::sweep::{self, FailureSpec, SweepGrid, SweepMode};
+use hybrid_ep::report::experiments;
+use hybrid_ep::util::args::Args;
+use hybrid_ep::util::json;
+
+fn main() {
+    header("failure_recovery", "elastic replanning vs static restart (not in paper)");
+    let args = Args::from_env().unwrap_or_default();
+    let quick = args.bool("quick") || std::env::var("BENCH_FAST").is_ok();
+    let mut report = JsonReport::open();
+
+    let ((table, rows), secs) = time_once(experiments::fig_failure);
+    table.print();
+    let wins = rows.iter().filter(|r| r.elastic_secs < r.static_secs).count();
+    let geomean = (rows.iter().map(|r| r.speedup.ln()).sum::<f64>() / rows.len() as f64).exp();
+    println!(
+        "{wins}/{} cells with elastic beating static restart (geomean {geomean:.2}×, {secs:.2}s)",
+        rows.len()
+    );
+    assert_eq!(wins, rows.len(), "elastic must beat the replacement wait everywhere");
+    let key = "failure_recovery_table/elastic_vs_static";
+    report.record(key, secs * 1e3, rows.len(), None);
+    report.record_extra(key, "geomean_speedup", json::num(geomean));
+
+    if quick {
+        println!("[--quick] skipping the fault-injected sweep");
+    } else {
+        // fault-injected scenario sweep: the same grid fault-free and under
+        // a 3-event random trace per scenario (same trace on both sides;
+        // trace seeds derive from the scenario seeds)
+        println!();
+        let mut grid = SweepGrid::fig17(vec![4, 8]);
+        grid.mode = SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 };
+        grid.bandwidths_gbps = vec![5.0];
+        grid.hybrid_ps = vec![0.5];
+        grid.workload.moe_layers = 1;
+        grid.workload.tokens_per_gpu = 512;
+        grid.failures = vec![FailureSpec::None, FailureSpec::Random { events: 3 }];
+        let threads = sweep::default_threads();
+        let (outcomes, t) =
+            time_once(|| sweep::run_sweep(&grid, threads).expect("non-empty grid"));
+        let s = sweep::summarize(&outcomes);
+        let mut lost = 0.0;
+        for o in &outcomes {
+            for side in [&o.ep, &o.hybrid] {
+                let gap = (side.bytes_delivered + side.bytes_lost - side.bytes_injected).abs();
+                assert!(
+                    gap <= 1e-9 * (1.0 + side.bytes_injected),
+                    "conservation violated at scenario {}",
+                    o.scenario.index
+                );
+                lost += side.bytes_lost;
+            }
+        }
+        println!(
+            "fault-injected sweep: {} scenarios across {threads} threads in {t:.2}s, {} lost",
+            s.scenarios,
+            hybrid_ep::util::fmt_bytes(lost)
+        );
+        report.record("failure_recovery_sweep/calendar", t * 1e3, s.total_events, None);
+        report.record_extra("failure_recovery_sweep/calendar", "bytes_lost", json::num(lost));
+    }
+
+    match report.write() {
+        Ok(path) => println!("\n[perf trajectory merged into {}]", path.display()),
+        Err(e) => eprintln!("\n[warning] could not write perf trajectory: {e}"),
+    }
+}

@@ -446,6 +446,20 @@ mod tests {
         }
     }
 
+    /// `to_sim_secs` needs no runtime artifacts: per-iteration scaling,
+    /// identity/zero time scales, and empty stats.
+    #[test]
+    fn to_sim_secs_scales_per_iteration() {
+        let stats = vec![
+            IterStats { sim_secs: 0.5, a2a_bytes: 10, ag_bytes: 0 },
+            IterStats { sim_secs: 2.0, a2a_bytes: 0, ag_bytes: 4 },
+        ];
+        assert_eq!(to_sim_secs(&stats, 40.0), vec![20.0, 80.0]);
+        assert_eq!(to_sim_secs(&stats, 1.0), vec![0.5, 2.0]);
+        assert_eq!(to_sim_secs(&stats, 0.0), vec![0.0, 0.0]);
+        assert!(to_sim_secs(&[], 40.0).is_empty());
+    }
+
     #[test]
     fn vanilla_ep_runs_and_moves_bytes() {
         let Ok(arts) = Artifacts::discover() else {

@@ -70,9 +70,12 @@ fn run() -> Result<()> {
                                [--tp 1,2 --dp 1,2] [--pp 1,2] [--threads N]\n\
                                [--engine calendar|parallel|folded|approx|scan|reference]\n\
                                [--epsilon 0.05]  (approx: certified payload band)\n\
+                               [--failures N]  (inject an N-event random failure trace\n\
+                               per scenario, seeded from the scenario seed)\n\
                    train       --profile test|small|large --steps N [--compression ws|wos --cr CR]\n\
                    experiments --exp fig2b|fig12|table5|fig13|table6|fig16|table7|fig17|\n\
-                               perlayer|straggler|replan|tedjoint|ppoverlap|all [--threads N]\n\
+                               perlayer|straggler|replan|tedjoint|ppoverlap|failure|all\n\
+                               [--threads N]\n\
                                [--per-dc 1,4,8]  (fig17: folded dense rows at N GPUs/DC)\n\
                    bench-all   [--quick] [--only fig17,hotpath]  (runs cargo bench per target,\n\
                                merging rows into BENCH_netsim.json)"
@@ -250,7 +253,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    use hybrid_ep::netsim::sweep::{self, SweepGrid, SweepMode};
+    use hybrid_ep::netsim::sweep::{self, FailureSpec, SweepGrid, SweepMode};
     use hybrid_ep::netsim::RateMode;
     let threads = args.usize_or("threads", sweep::default_threads())?;
     if threads == 0 {
@@ -284,6 +287,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .flat_map(|&tp| dp_list.iter().map(move |&dp| (tp, dp)))
         .collect();
     grid.pp_degrees = args.usize_list_or("pp", &[1])?;
+    // --failures N injects an N-event random trace per scenario (seeded from
+    // the scenario seed; same trace on both sides). Absent = fault-free,
+    // keeping every existing grid bit-stable.
+    let fail_events = args.usize_or("failures", 0)?;
+    if fail_events > 0 {
+        grid.failures = vec![FailureSpec::Random { events: fail_events }];
+    }
     grid.replan_iters = args.usize_or("iters", 8)?;
     let mode = args.get_or("mode", "aggregate");
     match mode {
@@ -354,6 +364,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             "{} scenarios across {threads} threads: speedup {:.2}x-{:.2}x (geomean {:.2}x)",
             s.scenarios, s.speedup_min, s.speedup_max, s.speedup_geomean
         );
+        if fail_events > 0 {
+            let lost: f64 =
+                outcomes.iter().map(|o| o.ep.bytes_lost + o.hybrid.bytes_lost).sum();
+            println!(
+                "failure traces: {fail_events} events per scenario, {} lost across all runs",
+                hybrid_ep::util::fmt_bytes(lost)
+            );
+        }
     }
     Ok(())
 }
@@ -432,12 +450,16 @@ fn cmd_experiments(args: &Args) -> Result<()> {
     if all || which == "ppoverlap" {
         exp::fig_pp_overlap().0.print();
     }
+    if all || which == "failure" {
+        exp::fig_failure().0.print();
+    }
     Ok(())
 }
 
 /// Every bench target, in deterministic order. Kept in sync with the
 /// `[[bench]]` sections of `Cargo.toml` (and EXPERIMENTS.md).
 const BENCH_TARGETS: &[&str] = &[
+    "failure_recovery",
     "fig11_latency_verification",
     "fig12_modeling_verification",
     "fig13_expert_size",

@@ -1,0 +1,218 @@
+//! Checkpoint/restore pricing on top of the SR codec (fault-recovery layer).
+//!
+//! A checkpoint is an SR-encoded snapshot of every expert against the
+//! cluster-wide shared expert: periodically (every `interval_iters`
+//! iterations) each expert's `Top-k(w − shared)` residual frame is written to
+//! durable storage. Restore after a failure is priced **like a migration
+//! prologue** (§IV-B): the lost experts' frames are read back, shipped over
+//! the slowest surviving uplink, and SRDecoded on the replacement hosts —
+//! exactly the encode/transmit/decode pipeline [`MigrationCfg`] already
+//! models, pointed at storage instead of a peer DC.
+//!
+//! The cost model is deliberately linear: `restore_secs` is zero when
+//! nothing was lost and strictly monotone in the lost-expert count (pinned
+//! by property tests in this module). [`Checkpoint`] itself round-trips the
+//! expert set exactly at full `k` against a zero shared expert — the frames
+//! hold `w − 0 = w` verbatim — so the recovery path can be validated
+//! end-to-end without a tolerance.
+
+use crate::cluster::ClusterSpec;
+use crate::migration::sr_codec::{self, SrEncoded};
+use crate::systems::hybrid_ep::MigrationCfg;
+
+/// Checkpoint interval policy + pricing knobs.
+#[derive(Clone, Debug)]
+pub struct CheckpointCfg {
+    /// Take a checkpoint every this many iterations (≥ 1).
+    pub interval_iters: usize,
+    /// SR codec pricing (compression ratio, codec throughput, fusion).
+    pub codec: MigrationCfg,
+    /// Durable-store sequential throughput (write on checkpoint, read on
+    /// restore). 2 GB/s is a conservative shared-filesystem figure.
+    pub store_bytes_per_sec: f64,
+}
+
+impl Default for CheckpointCfg {
+    fn default() -> Self {
+        Self { interval_iters: 100, codec: MigrationCfg::default(), store_bytes_per_sec: 2e9 }
+    }
+}
+
+impl CheckpointCfg {
+    /// Wire/store bytes of one expert's SR frame (`P_E / CR`).
+    pub fn frame_bytes(&self, pe_bytes: f64) -> f64 {
+        pe_bytes / self.codec.compression_ratio
+    }
+
+    /// Seconds to take one checkpoint of `experts` experts of `pe_bytes`
+    /// dense bytes each: SREncode every expert + write the frames to the
+    /// store. Encode overlaps the optimizer step when fused, so this is the
+    /// same pricing a migration prologue pays.
+    pub fn checkpoint_secs(&self, experts: usize, pe_bytes: f64) -> f64 {
+        let e = experts as f64;
+        let write = self.frame_bytes(pe_bytes) / self.store_bytes_per_sec;
+        e * (self.codec.encode_secs(pe_bytes) + write)
+    }
+
+    /// Seconds to restore `lost` experts onto the surviving sub-cluster:
+    /// read the frames back, transmit them over the slowest surviving
+    /// level-0 uplink (the conservative planner bound), SRDecode on arrival.
+    /// Exactly `0.0` when nothing was lost; strictly monotone in `lost`.
+    pub fn restore_secs(&self, survivors: &ClusterSpec, lost: usize, pe_bytes: f64) -> f64 {
+        if lost == 0 {
+            return 0.0;
+        }
+        let l = lost as f64;
+        let frame = self.frame_bytes(pe_bytes);
+        let bw = survivors.min_bandwidth_at(0);
+        l * (frame / self.store_bytes_per_sec + frame / bw + self.codec.decode_secs(pe_bytes))
+    }
+
+    /// Average per-iteration overhead of the checkpoint policy itself.
+    pub fn amortized_secs_per_iter(&self, experts: usize, pe_bytes: f64) -> f64 {
+        self.checkpoint_secs(experts, pe_bytes) / self.interval_iters.max(1) as f64
+    }
+
+    /// Iterations of work lost when failing at `iter`: progress since the
+    /// last checkpoint boundary (the redo window both recovery modes pay).
+    pub fn redo_iters(&self, iter: usize) -> usize {
+        iter % self.interval_iters.max(1)
+    }
+}
+
+/// An in-memory checkpoint: one SR frame per expert against a common shared
+/// expert. This is the functional counterpart of the pricing above — used by
+/// the property suite to prove the recovery path reconstructs lost experts.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub shared: Vec<f32>,
+    pub frames: Vec<SrEncoded>,
+}
+
+impl Checkpoint {
+    /// Snapshot `experts` with `Top-k` residual frames against `shared`.
+    pub fn capture(experts: &[Vec<f32>], shared: &[f32], k: usize) -> Self {
+        let frames = experts.iter().map(|w| sr_codec::encode(w, shared, k)).collect();
+        Self { shared: shared.to_vec(), frames }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Reconstruct expert `i` from its frame (SRDecode).
+    pub fn restore_expert(&self, i: usize) -> Vec<f32> {
+        sr_codec::decode(&self.shared, &self.frames[i])
+    }
+
+    /// Total store bytes of the checkpoint (wire format).
+    pub fn store_bytes(&self) -> usize {
+        self.frames.iter().map(SrEncoded::wire_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::prop_assert;
+    use crate::testkit;
+
+    fn cfg() -> CheckpointCfg {
+        CheckpointCfg::default()
+    }
+
+    #[test]
+    fn restore_is_zero_when_nothing_lost() {
+        let c = presets::dcs_x_gpus(3, 4, 10.0, 128.0);
+        assert_eq!(cfg().restore_secs(&c, 0, 1e9), 0.0);
+    }
+
+    #[test]
+    fn restore_cost_is_monotone_in_lost_experts() {
+        testkit::check("ckpt-restore-monotone", 60, |g| {
+            let c = presets::dcs_x_gpus(g.usize_in(2, 8), g.usize_in(1, 4), 10.0, 128.0);
+            let cfg = CheckpointCfg {
+                interval_iters: g.usize_in(1, 200),
+                codec: MigrationCfg {
+                    compression_ratio: 1.0 + g.rng.f64() * 99.0,
+                    codec_bytes_per_sec: 1e9 + g.rng.f64() * 1e12,
+                    fused: g.rng.below(2) == 0,
+                },
+                store_bytes_per_sec: 1e8 + g.rng.f64() * 1e10,
+            };
+            let pe = 1e6 + g.rng.f64() * 1e10;
+            let mut prev = 0.0;
+            for lost in 0..g.usize_in(2, 12) {
+                let s = cfg.restore_secs(&c, lost, pe);
+                prop_assert!(s.is_finite() && s >= 0.0, "restore_secs({lost}) = {s}");
+                if lost == 0 {
+                    prop_assert!(s == 0.0, "restore with nothing lost must be free, got {s}");
+                } else {
+                    prop_assert!(s > prev, "restore not monotone at lost={lost}: {s} <= {prev}");
+                }
+                prev = s;
+            }
+            // checkpointing itself scales with the expert count
+            let one = cfg.checkpoint_secs(1, pe);
+            let many = cfg.checkpoint_secs(7, pe);
+            prop_assert!(one > 0.0 && many > one, "checkpoint_secs not increasing");
+            prop_assert!(
+                (cfg.amortized_secs_per_iter(7, pe) - many / cfg.interval_iters as f64).abs()
+                    <= 1e-12 * many,
+                "amortization disagrees with interval"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn restore_prices_like_a_migration_prologue() {
+        // decomposition check at default knobs: store read + wire + decode
+        let c = presets::dcs_x_gpus(2, 1, 10.0, 128.0);
+        let cfg = cfg();
+        let pe = 1e9;
+        let frame = pe / cfg.codec.compression_ratio;
+        let want = frame / cfg.store_bytes_per_sec
+            + frame / c.min_bandwidth_at(0)
+            + cfg.codec.decode_secs(pe);
+        let got = cfg.restore_secs(&c, 1, pe);
+        assert!((got - want).abs() <= 1e-12 * want, "{got} vs {want}");
+        // a straggler override on the survivors slows the restore
+        let slow = c.clone().with_override(0, 1, presets::gbps(1.0));
+        assert!(cfg.restore_secs(&slow, 1, pe) > got, "override ignored by restore pricing");
+    }
+
+    #[test]
+    fn checkpoint_restore_roundtrips_the_expert_set_exactly() {
+        testkit::check("ckpt-roundtrip-exact", 40, |g| {
+            let n = g.usize_in(4, 200);
+            let experts: Vec<Vec<f32>> = (0..g.usize_in(1, 6))
+                .map(|_| (0..n).map(|_| g.rng.normal() as f32).collect())
+                .collect();
+            // full-k against a zero shared expert: frames hold w verbatim,
+            // so restore must be bit-exact — no tolerance
+            let ck = Checkpoint::capture(&experts, &vec![0.0f32; n], n);
+            prop_assert!(ck.n_experts() == experts.len(), "expert count");
+            for (i, w) in experts.iter().enumerate() {
+                let r = ck.restore_expert(i);
+                for (a, b) in r.iter().zip(w) {
+                    prop_assert!(a.to_bits() == b.to_bits(), "expert {i} not exact: {a} vs {b}");
+                }
+            }
+            // store accounting matches the wire format
+            let want: usize = ck.frames.iter().map(|f| 8 + 8 * f.values.len()).sum();
+            prop_assert!(ck.store_bytes() == want, "store bytes");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn redo_window_tracks_the_interval() {
+        let cfg = CheckpointCfg { interval_iters: 50, ..CheckpointCfg::default() };
+        assert_eq!(cfg.redo_iters(0), 0);
+        assert_eq!(cfg.redo_iters(49), 49);
+        assert_eq!(cfg.redo_iters(50), 0);
+        assert_eq!(cfg.redo_iters(123), 23);
+    }
+}

@@ -7,9 +7,11 @@
 //! *shared expert* (the mean), giving ~`CR×` traffic reduction with loss
 //! curves matching uncompressed training (Fig. 14).
 
+pub mod checkpoint;
 pub mod fused;
 pub mod shared;
 pub mod sr_codec;
 
+pub use checkpoint::{Checkpoint, CheckpointCfg};
 pub use shared::SharedExpert;
 pub use sr_codec::{decode, decode_into, encode, SrEncoded};

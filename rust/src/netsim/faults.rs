@@ -1,0 +1,520 @@
+//! Fault injection for the flow simulator: typed failure traces compiled
+//! into capacity-revision timelines.
+//!
+//! HybridEP's cross-DC setting makes bandwidth not just scarce but
+//! *volatile*: a DC can drop off the WAN mid-iteration, a single uplink can
+//! fail, a congested link can degrade to a fraction of its provisioned rate.
+//! This module gives the calendar engine ([`sim`](super::sim)) a first-class
+//! model of those events:
+//!
+//! * a [`FailureTrace`] is a list of typed [`FailureEvent`]s — DC loss, link
+//!   loss, or slow-node degradation striking at time `t`, each with an
+//!   optional recovery time `t'`;
+//! * [`FaultTimeline::compile`] lowers the trace onto the engine's resource
+//!   table (the same per-level egress/ingress numbering the `Frame` builds)
+//!   as a time-sorted list of **capacity revisions**. At each revision the
+//!   effective capacity of a touched resource is recomputed from its base as
+//!   `base × Π(active factors)` — losses contribute factor 0, degradations
+//!   their `factor` — so overlapping faults compose and recover correctly,
+//!   and the recompute is independent of event order (IEEE multiplication is
+//!   commutative, which is what the trace-permutation differential pins).
+//!
+//! The engine consumes revisions through
+//! [`IncrementalMaxMin::set_capacity`](super::flow::IncrementalMaxMin::set_capacity):
+//! a **recoverable** loss zeroes the container's capacity, so its flows
+//! stall (rate 0, no finish entry) until the recovery revision re-rates
+//! them; a **degradation** rescales the max-min solve of the touched
+//! component; a **permanent** loss additionally marks the resources dead —
+//! flows holding them are killed (their remaining bytes are accounted as
+//! [`lost`](super::sim::SimResult::bytes_lost)) and later arrivals die on
+//! arrival. The design is `RateMode`-orthogonal: calendar, parallel, folded
+//! and ε-approx engines all funnel through the same calendar loop, so every
+//! one of them accepts a trace; the pre-change scan baselines reject
+//! non-empty traces.
+//!
+//! An **empty** trace compiles to no timeline at all — zero revisions, zero
+//! capacity writes, zero dirty marks — which is what makes the fault-aware
+//! path bit-identical to the plain engine (the empty-trace differential in
+//! [`sim`](super::sim)).
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::ClusterSpec;
+use crate::util::rng::Rng;
+
+/// What failed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Datacenter `dc` drops off the network: every container of that DC, at
+    /// every hierarchy level, loses its egress and ingress capacity.
+    DcLoss { dc: usize },
+    /// One container's uplink at `level` goes down (capacity 0). Intra-DC
+    /// traffic of *other* containers is unaffected.
+    LinkLoss { level: usize, container: usize },
+    /// One container's uplink degrades to `factor` × its base bandwidth
+    /// (`0 < factor ≤ 1`) — a straggler DC or congested WAN segment.
+    SlowNode { level: usize, container: usize, factor: f64 },
+}
+
+/// One failure: `kind` strikes at `at`; `recover_at = None` is permanent.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureEvent {
+    /// Seconds into the run at which the fault strikes.
+    pub at: f64,
+    /// Seconds at which the fault heals; `None` = permanent.
+    pub recover_at: Option<f64>,
+    pub kind: FaultKind,
+}
+
+impl FailureEvent {
+    pub fn is_permanent(&self) -> bool {
+        self.recover_at.is_none()
+    }
+
+    /// Capacity multiplier while active (losses are factor 0).
+    fn factor(&self) -> f64 {
+        match self.kind {
+            FaultKind::SlowNode { factor, .. } => factor,
+            _ => 0.0,
+        }
+    }
+}
+
+/// A typed failure trace: the full fault schedule of one simulated run.
+///
+/// Construct with the builder methods ([`dc_loss`](Self::dc_loss),
+/// [`link_loss`](Self::link_loss), [`slow_node`](Self::slow_node),
+/// [`recovering_at`](Self::recovering_at)) or generate a seeded random mix
+/// with [`random`](Self::random). Event order does not matter: compilation
+/// sorts revisions by time and ties recompute capacities from base by a
+/// commutative product, so any permutation of `events` simulates
+/// identically (pinned by the permutation differential).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FailureTrace {
+    pub events: Vec<FailureEvent>,
+}
+
+impl FailureTrace {
+    /// The healthy-cluster trace: no events, provably bit-transparent.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Append a permanent DC loss at `at` (builder).
+    pub fn dc_loss(mut self, at: f64, dc: usize) -> Self {
+        self.events.push(FailureEvent { at, recover_at: None, kind: FaultKind::DcLoss { dc } });
+        self
+    }
+
+    /// Append a permanent link loss at `at` (builder).
+    pub fn link_loss(mut self, at: f64, level: usize, container: usize) -> Self {
+        self.events.push(FailureEvent {
+            at,
+            recover_at: None,
+            kind: FaultKind::LinkLoss { level, container },
+        });
+        self
+    }
+
+    /// Append a permanent slow-node degradation at `at` (builder).
+    pub fn slow_node(mut self, at: f64, level: usize, container: usize, factor: f64) -> Self {
+        self.events.push(FailureEvent {
+            at,
+            recover_at: None,
+            kind: FaultKind::SlowNode { level, container, factor },
+        });
+        self
+    }
+
+    /// Give the most recently appended event a recovery time (builder).
+    pub fn recovering_at(mut self, recover_at: f64) -> Self {
+        let e = self.events.last_mut().expect("recovering_at on an empty trace");
+        e.recover_at = Some(recover_at);
+        self
+    }
+
+    /// Check every event against the cluster: in-range containers, finite
+    /// non-negative times, recovery strictly after onset, degradation
+    /// factors in `(0, 1]`.
+    pub fn validate(&self, cluster: &ClusterSpec) -> Result<()> {
+        let scaling: Vec<usize> = cluster.levels.iter().map(|l| l.fanout).collect();
+        for (i, e) in self.events.iter().enumerate() {
+            ensure!(
+                e.at.is_finite() && e.at >= 0.0,
+                "event {i}: onset time {} must be finite and non-negative",
+                e.at
+            );
+            if let Some(r) = e.recover_at {
+                ensure!(
+                    r.is_finite() && r > e.at,
+                    "event {i}: recovery {} must be finite and after onset {}",
+                    r,
+                    e.at
+                );
+            }
+            match e.kind {
+                FaultKind::DcLoss { dc } => {
+                    ensure!(
+                        dc < scaling[0],
+                        "event {i}: DC {dc} out of range (cluster has {})",
+                        scaling[0]
+                    );
+                }
+                FaultKind::LinkLoss { level, container }
+                | FaultKind::SlowNode { level, container, .. } => {
+                    ensure!(
+                        level < scaling.len(),
+                        "event {i}: level {level} out of range (cluster has {})",
+                        scaling.len()
+                    );
+                    let containers: usize = scaling[..=level].iter().product();
+                    ensure!(
+                        container < containers,
+                        "event {i}: container {container} out of range at level {level} \
+                         ({containers} exist)"
+                    );
+                    if let FaultKind::SlowNode { factor, .. } = e.kind {
+                        ensure!(
+                            factor > 0.0 && factor <= 1.0,
+                            "event {i}: degradation factor {factor} outside (0, 1]"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A seeded random mix of DC-loss / link-loss / slow-node events with
+    /// onsets in the first part of `[0, horizon]`; ~3 in 4 events recover
+    /// within the horizon, the rest are permanent. Deterministic in `seed`
+    /// and always [`validate`](Self::validate)-clean for `cluster`.
+    pub fn random(cluster: &ClusterSpec, horizon: f64, n_events: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x4641_554c_54u64); // "FAULT"
+        let scaling: Vec<usize> = cluster.levels.iter().map(|l| l.fanout).collect();
+        let mut trace = Self::default();
+        for _ in 0..n_events {
+            let at = rng.f64() * horizon * 0.6;
+            let recover_at = if rng.below(4) == 0 {
+                None
+            } else {
+                Some(at + (0.05 + 0.5 * rng.f64()) * horizon.max(1e-9))
+            };
+            let level = rng.below(scaling.len());
+            let containers: usize = scaling[..=level].iter().product();
+            let kind = match rng.below(3) {
+                0 => FaultKind::DcLoss { dc: rng.below(scaling[0]) },
+                1 => FaultKind::LinkLoss { level, container: rng.below(containers) },
+                _ => FaultKind::SlowNode {
+                    level,
+                    container: rng.below(containers),
+                    factor: 0.05 + 0.9 * rng.f64(),
+                },
+            };
+            trace.events.push(FailureEvent { at, recover_at, kind });
+        }
+        trace
+    }
+}
+
+/// One effective-capacity revision reported by [`FaultTimeline::advance`].
+#[derive(Clone, Copy, Debug)]
+pub struct CapChange {
+    /// Resource index in the engine's capacity table.
+    pub resource: usize,
+    /// New effective capacity: `base × Π(active factors)`.
+    pub cap: f64,
+    /// The resource is now permanently failed: kill its flows, refuse new
+    /// arrivals.
+    pub now_dead: bool,
+}
+
+/// Resource set of one compiled fault: a window into the shared arena.
+#[derive(Clone, Copy, Debug)]
+struct SpanMeta {
+    off: usize,
+    len: usize,
+    factor: f64,
+    /// permanent loss (factor 0, no recovery): activation marks resources dead
+    permanent_kill: bool,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Revision {
+    time: f64,
+    span: usize,
+    activate: bool,
+}
+
+/// A [`FailureTrace`] lowered onto the engine's resource table: time-sorted
+/// activation/recovery revisions over per-fault resource spans, consumed by
+/// the calendar loop one event batch at a time.
+///
+/// Resource numbering duplicates the engine's `Frame`: per level `l` (with
+/// `level_offset[l] = Σ_{l' < l} 2 · containers(l')`), container `c` owns
+/// egress `level_offset[l] + 2c` and ingress `level_offset[l] + 2c + 1`. A
+/// `DcLoss` expands to every container of the DC at every level.
+pub struct FaultTimeline {
+    /// fault-free capacity of every resource (the Frame's initial table)
+    base: Vec<f64>,
+    /// arena of per-span resource lists
+    span_res: Vec<usize>,
+    spans: Vec<SpanMeta>,
+    active: Vec<bool>,
+    /// sorted by time; ties keep trace order (outcome is order-independent)
+    revisions: Vec<Revision>,
+    cursor: usize,
+    dead: Vec<bool>,
+    // scratch reused across advance() calls
+    changes: Vec<CapChange>,
+    touched: Vec<usize>,
+    touched_mark: Vec<bool>,
+}
+
+impl FaultTimeline {
+    /// Validate `trace` against `cluster` and lower it to revisions.
+    pub fn compile(trace: &FailureTrace, cluster: &ClusterSpec) -> Result<Self> {
+        trace.validate(cluster)?;
+        let scaling: Vec<usize> = cluster.levels.iter().map(|l| l.fanout).collect();
+        let levels = scaling.len();
+        let mut level_offset = vec![0usize; levels];
+        let mut ncaps = 0usize;
+        for l in 0..levels {
+            level_offset[l] = ncaps;
+            let containers: usize = scaling[..=l].iter().product();
+            ncaps += containers * 2;
+        }
+        let mut base = vec![0.0f64; ncaps];
+        for l in 0..levels {
+            let containers: usize = scaling[..=l].iter().product();
+            for c in 0..containers {
+                let bw = cluster.container_bandwidth(l, c);
+                base[level_offset[l] + c * 2] = bw;
+                base[level_offset[l] + c * 2 + 1] = bw;
+            }
+        }
+        let mut span_res = Vec::new();
+        let mut spans = Vec::with_capacity(trace.events.len());
+        let mut revisions = Vec::new();
+        for (i, e) in trace.events.iter().enumerate() {
+            let off = span_res.len();
+            match e.kind {
+                FaultKind::DcLoss { dc } => {
+                    // every container of the DC, at every level: the DC's
+                    // uplink and all its internal switching goes with it
+                    for l in 0..levels {
+                        let per: usize = scaling[1..=l].iter().product();
+                        for c in dc * per..(dc + 1) * per {
+                            span_res.push(level_offset[l] + c * 2);
+                            span_res.push(level_offset[l] + c * 2 + 1);
+                        }
+                    }
+                }
+                FaultKind::LinkLoss { level, container }
+                | FaultKind::SlowNode { level, container, .. } => {
+                    span_res.push(level_offset[level] + container * 2);
+                    span_res.push(level_offset[level] + container * 2 + 1);
+                }
+            }
+            let factor = e.factor();
+            spans.push(SpanMeta {
+                off,
+                len: span_res.len() - off,
+                factor,
+                permanent_kill: e.is_permanent() && factor == 0.0,
+            });
+            revisions.push(Revision { time: e.at, span: i, activate: true });
+            if let Some(r) = e.recover_at {
+                revisions.push(Revision { time: r, span: i, activate: false });
+            }
+        }
+        revisions.sort_by(|a, b| a.time.total_cmp(&b.time));
+        let n_spans = spans.len();
+        Ok(Self {
+            base,
+            span_res,
+            spans,
+            active: vec![false; n_spans],
+            revisions,
+            cursor: 0,
+            dead: vec![false; ncaps],
+            changes: Vec::new(),
+            touched: Vec::new(),
+            touched_mark: vec![false; ncaps],
+        })
+    }
+
+    /// Size of the resource table this timeline was compiled against (must
+    /// match the engine's).
+    pub fn n_resources(&self) -> usize {
+        self.base.len()
+    }
+
+    /// `true` once a permanent loss has struck resource `r`.
+    pub fn is_dead(&self, r: usize) -> bool {
+        self.dead[r]
+    }
+
+    /// Time of the next pending revision, if any — folded into the engine's
+    /// next-event minimum so faults fire even while every flow is stalled.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.revisions.get(self.cursor).map(|rv| rv.time)
+    }
+
+    /// Apply every revision due at `now` (within `eps`, matching the
+    /// engine's event coalescing) and return the touched resources with
+    /// their new effective capacities. Each effective capacity is recomputed
+    /// from base as the product over active spans, so the result is
+    /// independent of the order in which coalesced revisions applied.
+    pub fn advance(&mut self, now: f64, eps: f64) -> &[CapChange] {
+        self.changes.clear();
+        self.touched.clear();
+        while self.cursor < self.revisions.len() && self.revisions[self.cursor].time <= now + eps {
+            let rv = self.revisions[self.cursor];
+            self.cursor += 1;
+            self.active[rv.span] = rv.activate;
+            let s = self.spans[rv.span];
+            for ri in s.off..s.off + s.len {
+                let r = self.span_res[ri];
+                if !self.touched_mark[r] {
+                    self.touched_mark[r] = true;
+                    self.touched.push(r);
+                }
+                if rv.activate && s.permanent_kill {
+                    self.dead[r] = true;
+                }
+            }
+        }
+        for ti in 0..self.touched.len() {
+            let r = self.touched[ti];
+            self.touched_mark[r] = false;
+            let mut cap = self.base[r];
+            for (si, s) in self.spans.iter().enumerate() {
+                if self.active[si] && self.span_res[s.off..s.off + s.len].contains(&r) {
+                    cap *= s.factor;
+                }
+            }
+            self.changes.push(CapChange { resource: r, cap, now_dead: self.dead[r] });
+        }
+        &self.changes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    fn cluster() -> ClusterSpec {
+        presets::dcs_x_gpus(3, 4, 10.0, 128.0)
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_and_bad_times() {
+        let c = cluster();
+        let err = FailureTrace::empty().dc_loss(1.0, 3).validate(&c).unwrap_err().to_string();
+        assert!(err.contains("DC 3 out of range"), "{err}");
+        let err =
+            FailureTrace::empty().link_loss(1.0, 2, 0).validate(&c).unwrap_err().to_string();
+        assert!(err.contains("level 2 out of range"), "{err}");
+        let err =
+            FailureTrace::empty().link_loss(1.0, 1, 12).validate(&c).unwrap_err().to_string();
+        assert!(err.contains("container 12 out of range"), "{err}");
+        let err =
+            FailureTrace::empty().slow_node(1.0, 0, 0, 0.0).validate(&c).unwrap_err().to_string();
+        assert!(err.contains("factor"), "{err}");
+        let err = FailureTrace::empty()
+            .link_loss(2.0, 0, 0)
+            .recovering_at(1.0)
+            .validate(&c)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("after onset"), "{err}");
+        let err = FailureTrace::empty().dc_loss(f64::NAN, 0).validate(&c).unwrap_err().to_string();
+        assert!(err.contains("finite"), "{err}");
+        assert!(FailureTrace::empty().validate(&c).is_ok());
+    }
+
+    #[test]
+    fn link_loss_zeroes_and_recovery_restores_the_capacity() {
+        let c = cluster();
+        let trace = FailureTrace::empty().link_loss(2.0, 0, 1).recovering_at(5.0);
+        let mut tl = FaultTimeline::compile(&trace, &c).expect("compile");
+        assert_eq!(tl.peek_time(), Some(2.0));
+        assert!(tl.advance(1.0, 1e-12).is_empty(), "nothing due before onset");
+        let base = presets::gbps(10.0);
+        let ch: Vec<CapChange> = tl.advance(2.0, 1e-12).to_vec();
+        // DC 1's level-0 egress (resource 2) and ingress (resource 3)
+        assert_eq!(ch.len(), 2);
+        for c in &ch {
+            assert!(c.resource == 2 || c.resource == 3, "touched {}", c.resource);
+            assert_eq!(c.cap, 0.0);
+            assert!(!c.now_dead, "recoverable loss must not kill");
+        }
+        assert_eq!(tl.peek_time(), Some(5.0));
+        let ch: Vec<CapChange> = tl.advance(5.0, 1e-12).to_vec();
+        assert_eq!(ch.len(), 2);
+        for c in &ch {
+            assert_eq!(c.cap.to_bits(), base.to_bits(), "recovery must restore base exactly");
+        }
+        assert_eq!(tl.peek_time(), None);
+    }
+
+    #[test]
+    fn overlapping_degradations_compose_multiplicatively() {
+        let c = cluster();
+        let trace = FailureTrace::empty()
+            .slow_node(1.0, 0, 0, 0.5)
+            .recovering_at(10.0)
+            .slow_node(2.0, 0, 0, 0.25)
+            .recovering_at(8.0);
+        let mut tl = FaultTimeline::compile(&trace, &c).expect("compile");
+        let base = presets::gbps(10.0);
+        let ch = tl.advance(1.0, 1e-12).to_vec();
+        assert_eq!(ch[0].cap.to_bits(), (base * 0.5).to_bits());
+        let ch = tl.advance(2.0, 1e-12).to_vec();
+        assert_eq!(ch[0].cap.to_bits(), (base * 0.5 * 0.25).to_bits());
+        let ch = tl.advance(8.0, 1e-12).to_vec();
+        assert_eq!(ch[0].cap.to_bits(), (base * 0.5).to_bits());
+        let ch = tl.advance(10.0, 1e-12).to_vec();
+        assert_eq!(ch[0].cap.to_bits(), base.to_bits());
+    }
+
+    #[test]
+    fn permanent_dc_loss_kills_every_container_of_the_dc() {
+        let c = cluster(); // 3 DCs × 4 GPUs: 3 level-0 + 12 level-1 containers
+        let trace = FailureTrace::empty().dc_loss(1.0, 1);
+        let mut tl = FaultTimeline::compile(&trace, &c).expect("compile");
+        let ch = tl.advance(1.0, 1e-12).to_vec();
+        // DC 1: level-0 container 1 (2 resources) + level-1 containers 4..8
+        // (8 resources)
+        assert_eq!(ch.len(), 10);
+        for c in &ch {
+            assert_eq!(c.cap, 0.0);
+            assert!(c.now_dead);
+            assert!(tl.is_dead(c.resource));
+        }
+        // DC 0 and DC 2 untouched
+        assert!(!tl.is_dead(0) && !tl.is_dead(4), "wrong containers died");
+    }
+
+    #[test]
+    fn random_traces_validate_and_are_seed_deterministic() {
+        let c = cluster();
+        for seed in 0..20u64 {
+            let t = FailureTrace::random(&c, 10.0, 5, seed);
+            assert_eq!(t.events.len(), 5);
+            t.validate(&c).expect("random trace must validate");
+            assert_eq!(t, FailureTrace::random(&c, 10.0, 5, seed), "not deterministic");
+        }
+        assert_ne!(
+            FailureTrace::random(&c, 10.0, 5, 1),
+            FailureTrace::random(&c, 10.0, 5, 2),
+            "distinct seeds produced the same trace"
+        );
+    }
+}

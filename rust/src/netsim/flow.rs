@@ -308,6 +308,35 @@ impl IncrementalMaxMin {
         }
     }
 
+    /// Current capacity of a resource (bytes/s).
+    pub fn capacity(&self, r: ResourceId) -> f64 {
+        self.caps[r]
+    }
+
+    /// Revise a resource's capacity mid-run (fault injection, link
+    /// degradation/recovery). Marks the resource dirty so the next
+    /// [`resolve`](Self::resolve) re-rates every flow in its component.
+    ///
+    /// Returns `false` — and provably changes **nothing** (no dirty mark, no
+    /// re-solve, no rate churn) — when the new capacity is bitwise identical
+    /// to the current one; this is what makes an identity revision, and hence
+    /// an empty failure trace, bit-transparent to the calendar engine.
+    pub fn set_capacity(&mut self, r: ResourceId, cap: f64) -> bool {
+        if self.caps[r].to_bits() == cap.to_bits() {
+            return false;
+        }
+        self.caps[r] = cap;
+        self.mark_dirty(r);
+        true
+    }
+
+    /// Live flows currently holding shares of resource `r` (unsorted; order
+    /// reflects add/remove churn). Used by fault injection to find the flows
+    /// stranded on a permanently failed container.
+    pub fn users_of(&self, r: ResourceId) -> &[FlowId] {
+        &self.users[r]
+    }
+
     /// Register a plain (weight-1) flow over `resources`. Loopback flows (no
     /// resources) are rated `INFINITY` immediately and never participate in a
     /// solve.
@@ -1259,5 +1288,95 @@ mod tests {
         alloc.resolve();
         assert!((alloc.rate(ok) - 0.5).abs() < 1e-12);
         assert_eq!(alloc.live_flows(), 1);
+    }
+
+    /// A bitwise-identity capacity revision must be a provable no-op: no
+    /// dirty mark, no resolve work, no rate churn. This is the contract the
+    /// empty-failure-trace bit-identity differential rests on.
+    #[test]
+    fn identity_capacity_revision_changes_nothing() {
+        testkit::check("setcap-identity", 60, |g| {
+            let nr = g.usize_in(1, 6);
+            let caps: Vec<f64> = (0..nr).map(|_| g.rng.f64() * 9.0 + 0.1).collect();
+            let mut alloc = IncrementalMaxMin::new(caps.clone());
+            let flows = random_flows(g, nr, g.usize_in(1, 10));
+            let ids: Vec<FlowId> = flows.iter().map(|f| alloc.add(&f.resources)).collect();
+            alloc.resolve();
+            let before: Vec<u64> = ids.iter().map(|&id| alloc.rate(id).to_bits()).collect();
+            for (r, &cap) in caps.iter().enumerate() {
+                prop_assert!(!alloc.set_capacity(r, cap), "identity revision on {r} changed");
+            }
+            let changed = alloc.resolve();
+            prop_assert!(changed.is_empty(), "identity revisions re-rated {changed:?}");
+            for (&id, &bits) in ids.iter().zip(&before) {
+                prop_assert!(
+                    alloc.rate(id).to_bits() == bits,
+                    "identity revision moved flow {id}: {} -> {}",
+                    f64::from_bits(bits),
+                    alloc.rate(id)
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// A genuine capacity revision re-rates the touched component exactly as
+    /// a from-scratch solve of the revised capacities would (the oracle).
+    #[test]
+    fn capacity_revision_matches_fresh_solve_oracle() {
+        testkit::check("setcap-oracle", 80, |g| {
+            let nr = g.usize_in(1, 8);
+            let mut caps: Vec<f64> = (0..nr).map(|_| g.rng.f64() * 9.0 + 0.1).collect();
+            let mut alloc = IncrementalMaxMin::new(caps.clone());
+            let flows = random_flows(g, nr, g.usize_in(1, 12));
+            let ids: Vec<FlowId> = flows.iter().map(|f| alloc.add(&f.resources)).collect();
+            alloc.resolve();
+            // revise a random subset, including degradations to zero
+            for cap in caps.iter_mut() {
+                if g.rng.below(2) == 0 {
+                    *cap = if g.rng.below(4) == 0 { 0.0 } else { g.rng.f64() * 9.0 + 0.1 };
+                }
+            }
+            for (r, &cap) in caps.iter().enumerate() {
+                alloc.set_capacity(r, cap);
+                prop_assert!(
+                    alloc.capacity(r).to_bits() == cap.to_bits(),
+                    "capacity readback diverged on {r}"
+                );
+            }
+            alloc.resolve();
+            let oracle = max_min_rates(&caps, &flows);
+            for (fi, &id) in ids.iter().enumerate() {
+                let got = alloc.rate(id);
+                prop_assert!(!got.is_nan() && got >= 0.0, "flow {fi} rate {got}");
+                if flows[fi].resources.iter().any(|&r| caps[r] == 0.0) {
+                    prop_assert!(got == 0.0, "flow {fi} over a failed link got {got}");
+                }
+                prop_assert!(
+                    (got - oracle[fi]).abs() <= 1e-9 * oracle[fi].abs().max(1.0),
+                    "flow {fi}: incremental {got} vs oracle {}",
+                    oracle[fi]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// `users_of` tracks exactly the live flows holding the resource, through
+    /// add/remove churn — the set a permanent fault must strand.
+    #[test]
+    fn users_of_reflects_live_membership() {
+        let mut alloc = IncrementalMaxMin::new(vec![1.0, 1.0]);
+        let a = alloc.add(&[0]);
+        let b = alloc.add(&[0, 1]);
+        let c = alloc.add(&[1]);
+        let mut u0: Vec<FlowId> = alloc.users_of(0).to_vec();
+        u0.sort_unstable();
+        assert_eq!(u0, vec![a, b]);
+        alloc.remove(b);
+        assert_eq!(alloc.users_of(0), &[a]);
+        assert_eq!(alloc.users_of(1), &[c]);
+        alloc.remove(a);
+        assert!(alloc.users_of(0).is_empty());
     }
 }

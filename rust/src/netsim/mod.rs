@@ -44,13 +44,25 @@
 //! ([`fold::approx_fold_dag`]), reporting a certified makespan interval from
 //! low/high payload envelopes (exact folding at ε = 0). The scale gate is
 //! [`dag::dense_neighborhood_a2a`] at 12 800 DCs × 8 GPUs/DC.
+//!
+//! [`faults`] injects failures into the run: a typed [`FailureTrace`]
+//! (DC loss, link loss, slow-node degradation, each with optional recovery)
+//! compiles to capacity revisions consumed by the calendar loop through
+//! [`flow::IncrementalMaxMin::set_capacity`] — recoverable losses stall
+//! flows, degradations re-rate them, permanent losses kill them with
+//! byte-conservation accounting ([`SimResult::bytes_injected`] =
+//! [`SimResult::bytes_delivered`] + [`SimResult::bytes_lost`]). The design
+//! is `RateMode`-orthogonal: every calendar-family engine accepts a trace,
+//! and an empty trace is bit-identical to the fault-free path.
 
 pub mod dag;
+pub mod faults;
 pub mod flow;
 pub mod fold;
 pub mod sim;
 pub mod sweep;
 
 pub use dag::{Dag, Tag, TaskId, TaskKind};
+pub use faults::{FailureEvent, FailureTrace, FaultKind};
 pub use fold::{approx_fold_dag, fold_dag, ApproxFoldedDag, FoldedDag};
 pub use sim::{RateMode, SimResult, Simulator};

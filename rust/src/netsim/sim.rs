@@ -55,6 +55,7 @@ use std::collections::{BinaryHeap, VecDeque};
 
 use crate::cluster::{ClusterSpec, LevelIndexer};
 use crate::netsim::dag::{Dag, Tag, TaskKind};
+use crate::netsim::faults::{FailureTrace, FaultTimeline};
 use crate::netsim::flow::{max_min_rates, FlowSpec, IncrementalMaxMin};
 
 const EPS: f64 = 1e-12;
@@ -170,6 +171,20 @@ pub struct SimResult {
     /// `≤ epsilon` by log-scale bucketing. `0.0` for exact engines and for
     /// degenerate ε-folds (every bucket held one distinct payload).
     pub approx_spread: f64,
+    /// Total payload bytes handed to the network: every member transfer of
+    /// every tag (loopback included), counted once at dispatch.
+    pub bytes_injected: f64,
+    /// Payload bytes that reached their destination — the full payload for
+    /// flows that finished, the transmitted prefix for flows killed by a
+    /// permanent fault. Without faults this equals
+    /// [`bytes_injected`](Self::bytes_injected).
+    pub bytes_delivered: f64,
+    /// Payload bytes lost to permanently failed containers: the untransmitted
+    /// remainder of killed flows plus the full payload of transfers arriving
+    /// at a dead container. Conservation —
+    /// `bytes_delivered + bytes_lost == bytes_injected` — is pinned by the
+    /// fault-trace property suite.
+    pub bytes_lost: f64,
 }
 
 impl SimResult {
@@ -395,6 +410,9 @@ impl DepState {
 pub struct Simulator<'a> {
     cluster: &'a ClusterSpec,
     mode: RateMode,
+    /// Fault schedule injected into the run; `None` (or an empty trace) is
+    /// the healthy cluster, bit-identical to the pre-fault engine.
+    faults: Option<&'a FailureTrace>,
 }
 
 /// Eagerly-advanced flow record of the pre-change (scan) engine.
@@ -413,16 +431,32 @@ struct ActiveFlow {
 
 impl<'a> Simulator<'a> {
     pub fn new(cluster: &'a ClusterSpec) -> Self {
-        Self { cluster, mode: RateMode::Incremental }
+        Self { cluster, mode: RateMode::Incremental, faults: None }
     }
 
     /// Reference-oracle engine (pre-change event loop + full rate recompute).
     pub fn reference(cluster: &'a ClusterSpec) -> Self {
-        Self { cluster, mode: RateMode::Reference }
+        Self { cluster, mode: RateMode::Reference, faults: None }
     }
 
     pub fn with_mode(cluster: &'a ClusterSpec, mode: RateMode) -> Self {
-        Self { cluster, mode }
+        Self { cluster, mode, faults: None }
+    }
+
+    /// Inject a failure schedule into the run. Orthogonal to [`RateMode`]:
+    /// every calendar-family engine (`Incremental`/`Parallel`/`Folded`/
+    /// `Approx`) accepts a trace; the pre-change scan baselines panic on a
+    /// non-empty one. An empty trace is provably bit-identical to not
+    /// attaching one (the empty-trace differential).
+    pub fn with_faults(mut self, trace: &'a FailureTrace) -> Self {
+        self.faults = Some(trace);
+        self
+    }
+
+    /// The trace to simulate, with the empty trace normalized away so the
+    /// engine takes the zero-overhead fault-free path.
+    fn active_faults(&self) -> Option<&'a FailureTrace> {
+        self.faults.filter(|t| !t.is_empty())
     }
 
     /// Run the DAG to completion; panics on cyclic or dangling dependencies
@@ -444,6 +478,16 @@ impl<'a> Simulator<'a> {
             RateMode::ScanIncremental => self.run_scan(dag, true),
             RateMode::Reference => self.run_scan(dag, false),
         }
+    }
+
+    /// The scan baselines predate lazy flow progress and cannot stall/kill
+    /// flows; they only accept the healthy cluster.
+    fn assert_no_faults(&self, engine: &str) {
+        assert!(
+            self.active_faults().is_none(),
+            "failure traces require a calendar-family engine \
+             (Incremental/Parallel/Folded/Approx), not {engine}"
+        );
     }
 
     /// The ε-approximate engine: fold with relaxed (ε-bucketed) byte
@@ -500,9 +544,24 @@ impl<'a> Simulator<'a> {
         let mut changed_buf: Vec<usize> = Vec::new();
         let mut rates_dirty = false;
 
+        // compiled fault schedule: an absent (or empty) trace costs nothing —
+        // no timeline, no capacity writes, no extra calendar checks — which
+        // is what the empty-trace bit-identity differential pins
+        let mut faults = match self.active_faults() {
+            Some(t) => {
+                let tl = FaultTimeline::compile(t, self.cluster).expect("invalid failure trace");
+                debug_assert_eq!(tl.n_resources(), fr.caps.len(), "fault resource table diverged");
+                Some(tl)
+            }
+            None => None,
+        };
+        let mut kill_buf: Vec<usize> = Vec::new();
+
         let mut time = 0.0f64;
         let mut events = 0usize;
         let (mut bytes_a2a, mut bytes_ag, mut bytes_ar) =
+            (Kahan::default(), Kahan::default(), Kahan::default());
+        let (mut bytes_injected, mut bytes_delivered, mut bytes_lost) =
             (Kahan::default(), Kahan::default(), Kahan::default());
         let mut bytes_per_level = vec![Kahan::default(); fr.levels];
 
@@ -527,6 +586,7 @@ impl<'a> Simulator<'a> {
                         // `bytes · 1.0` is bitwise `bytes`, so plain
                         // transfers account exactly as before.
                         let wire = bytes * count as f64;
+                        bytes_injected.add(wire);
                         match tag {
                             Tag::A2A => bytes_a2a.add(wire),
                             Tag::AG => bytes_ag.add(wire),
@@ -536,6 +596,7 @@ impl<'a> Simulator<'a> {
                         match fr.bottleneck(src, dst) {
                             None => {
                                 // loopback: instantaneous, no wire traffic
+                                bytes_delivered.add(wire);
                                 ds.complete(task, time);
                             }
                             Some(l) => {
@@ -607,6 +668,14 @@ impl<'a> Simulator<'a> {
                 }
                 finish_cal.pop();
             }
+            // pending fault revisions are events too: a recoverable outage
+            // stalls its flows (rate 0, no finish entry), and the recovery
+            // revision here is what un-stalls the run
+            if let Some(tl) = &faults {
+                if let Some(t) = tl.peek_time() {
+                    next = next.min(t);
+                }
+            }
             assert!(
                 next.is_finite(),
                 "simulation stalled at t={time}: {} of {} tasks done (deadlock in schedule?)",
@@ -618,6 +687,49 @@ impl<'a> Simulator<'a> {
             gpu_busy_integral.add(dt * busy_gpus as f64);
             time = next;
             events += 1;
+
+            // fault revisions due at this event fire first, so the start and
+            // finish passes below see revised capacities and dead marks
+            if let Some(tl) = &mut faults {
+                if tl.peek_time().is_some_and(|t| t <= time + EPS) {
+                    kill_buf.clear();
+                    for ch in tl.advance(time, EPS) {
+                        if alloc.set_capacity(ch.resource, ch.cap) {
+                            rates_dirty = true;
+                        }
+                        if ch.now_dead {
+                            // flows stranded on a permanently failed
+                            // container (idempotent: already-killed flows
+                            // are no longer users)
+                            kill_buf.extend_from_slice(alloc.users_of(ch.resource));
+                        }
+                    }
+                    // kill in flow-id order so the outcome is independent of
+                    // the revision/resource touch order
+                    kill_buf.sort_unstable();
+                    kill_buf.dedup();
+                    for &id in &kill_buf {
+                        if !flows.live[id] {
+                            continue;
+                        }
+                        let remaining = (flows.bytes_at_touch[id]
+                            - flows.rate[id] * (time - flows.touch_time[id]))
+                            .max(0.0);
+                        let TaskKind::Transfer { bytes, count, .. } =
+                            dag.tasks[flows.task[id]].kind
+                        else {
+                            unreachable!()
+                        };
+                        let members = count as f64;
+                        bytes_lost.add(remaining * members);
+                        bytes_delivered.add((bytes - remaining).max(0.0) * members);
+                        flows.live[id] = false;
+                        alloc.remove(id);
+                        ds.complete(flows.task[id], time);
+                        rates_dirty = true;
+                    }
+                }
+            }
 
             // process: compute finishes due at (or coalesced into) this event
             while let Some(e) = compute_cal.peek() {
@@ -642,6 +754,17 @@ impl<'a> Simulator<'a> {
                     unreachable!()
                 };
                 let resources = [fr.resource_of(src, l, false), fr.resource_of(dst, l, true)];
+                if let Some(tl) = &faults {
+                    if tl.is_dead(resources[0]) || tl.is_dead(resources[1]) {
+                        // an endpoint container is permanently gone: the
+                        // payload is lost on arrival and the transfer is
+                        // abandoned (its dependents proceed — the collective
+                        // runs degraded, it does not hang)
+                        bytes_lost.add(bytes * count as f64);
+                        ds.complete(task, time);
+                        continue;
+                    }
+                }
                 // a macro-flow holds `count` shares of its uplink pool; its
                 // state below tracks *per-member* bytes at the per-member rate
                 let id = alloc.add_weighted(&resources, count);
@@ -675,6 +798,11 @@ impl<'a> Simulator<'a> {
                 }
                 finish_cal.pop();
                 let id = e.key;
+                let TaskKind::Transfer { bytes, count, .. } = dag.tasks[flows.task[id]].kind
+                else {
+                    unreachable!()
+                };
+                bytes_delivered.add(bytes * count as f64);
                 flows.live[id] = false;
                 alloc.remove(id);
                 ds.complete(flows.task[id], time);
@@ -699,6 +827,9 @@ impl<'a> Simulator<'a> {
             makespan_lo: makespan,
             makespan_hi: makespan,
             approx_spread: 0.0,
+            bytes_injected: bytes_injected.get(),
+            bytes_delivered: bytes_delivered.get(),
+            bytes_lost: bytes_lost.get(),
         }
     }
 
@@ -708,6 +839,7 @@ impl<'a> Simulator<'a> {
     /// `incremental` selects component-local rate re-solves (the pre-change
     /// production path) vs. the full `max_min_rates` recompute (the oracle).
     fn run_scan(&self, dag: &Dag, incremental: bool) -> SimResult {
+        self.assert_no_faults(if incremental { "ScanIncremental" } else { "Reference" });
         let fr = Frame::new(self.cluster);
         let g = fr.g;
         let n = dag.tasks.len();
@@ -730,6 +862,7 @@ impl<'a> Simulator<'a> {
         let mut events = 0usize;
         let (mut bytes_a2a, mut bytes_ag, mut bytes_ar) =
             (Kahan::default(), Kahan::default(), Kahan::default());
+        let mut bytes_injected = Kahan::default();
         let mut bytes_per_level = vec![Kahan::default(); fr.levels];
 
         while ds.n_done < n {
@@ -746,6 +879,7 @@ impl<'a> Simulator<'a> {
                     }
                     TaskKind::Transfer { src, dst, bytes, tag, count } => {
                         let wire = bytes * count as f64;
+                        bytes_injected.add(wire);
                         match tag {
                             Tag::A2A => bytes_a2a.add(wire),
                             Tag::AG => bytes_ag.add(wire),
@@ -919,6 +1053,10 @@ impl<'a> Simulator<'a> {
             makespan_lo: makespan,
             makespan_hi: makespan,
             approx_spread: 0.0,
+            // no faults here (asserted above): everything injected arrives
+            bytes_injected: bytes_injected.get(),
+            bytes_delivered: bytes_injected.get(),
+            bytes_lost: 0.0,
         }
     }
 }
@@ -1595,6 +1733,9 @@ mod tests {
             ("ag", seq.bytes_ag, par.bytes_ag),
             ("allreduce", seq.bytes_allreduce, par.bytes_allreduce),
             ("util", seq.gpu_utilization, par.gpu_utilization),
+            ("injected", seq.bytes_injected, par.bytes_injected),
+            ("delivered", seq.bytes_delivered, par.bytes_delivered),
+            ("lost", seq.bytes_lost, par.bytes_lost),
         ] {
             assert!(x.to_bits() == y.to_bits(), "{what}: {name} not bit-identical: {x} vs {y}");
         }
@@ -1643,6 +1784,267 @@ mod tests {
         let seq = Simulator::new(&c).run(&dag);
         let par = Simulator::with_mode(&c, RateMode::Parallel).run(&dag);
         assert_bit_identical(&seq, &par, "dense_mixed_a2a 16x4");
+    }
+
+    /// Tentpole differential (the archetype headline): an **empty**
+    /// [`FailureTrace`] through the fault-aware path must be bit-identical
+    /// to the plain engine on randomized DAGs — makespan, per-task finishes,
+    /// byte totals, utilization and the event count — on the calendar,
+    /// parallel, folded and ε-approx engines alike. The fault layer earns
+    /// its keep only if not using it provably costs nothing.
+    #[test]
+    fn empty_failure_trace_is_bit_identical_on_every_calendar_engine() {
+        use crate::netsim::faults::FailureTrace;
+        let empty = FailureTrace::empty();
+        testkit::check("sim-empty-trace-differential", 60, |g| {
+            let mut cluster = random_cluster(g);
+            if g.rng.below(2) == 0 {
+                let dcs = cluster.levels[0].fanout;
+                cluster = cluster.with_override(0, g.rng.below(dcs.max(1)), presets::gbps(2.5));
+            }
+            let dag = random_dag(g, cluster.total_gpus(), true);
+            for mode in [
+                RateMode::Incremental,
+                RateMode::Parallel,
+                RateMode::Folded,
+                RateMode::Approx { epsilon: 0.05 },
+            ] {
+                let plain = Simulator::with_mode(&cluster, mode).run(&dag);
+                let faulted = Simulator::with_mode(&cluster, mode).with_faults(&empty).run(&dag);
+                prop_assert!(
+                    plain.makespan.to_bits() == faulted.makespan.to_bits(),
+                    "{mode:?}: empty trace moved makespan: {} vs {}",
+                    plain.makespan,
+                    faulted.makespan
+                );
+                for (i, (x, y)) in plain.finish.iter().zip(&faulted.finish).enumerate() {
+                    prop_assert!(x.to_bits() == y.to_bits(), "{mode:?}: task {i}: {x} vs {y}");
+                }
+                for (name, x, y) in [
+                    ("a2a", plain.bytes_a2a, faulted.bytes_a2a),
+                    ("ag", plain.bytes_ag, faulted.bytes_ag),
+                    ("allreduce", plain.bytes_allreduce, faulted.bytes_allreduce),
+                    ("util", plain.gpu_utilization, faulted.gpu_utilization),
+                    ("injected", plain.bytes_injected, faulted.bytes_injected),
+                    ("delivered", plain.bytes_delivered, faulted.bytes_delivered),
+                    ("lost", plain.bytes_lost, faulted.bytes_lost),
+                ] {
+                    prop_assert!(x.to_bits() == y.to_bits(), "{mode:?}: {name}: {x} vs {y}");
+                }
+                for l in 0..plain.bytes_per_level.len() {
+                    prop_assert!(
+                        plain.bytes_per_level[l].to_bits() == faulted.bytes_per_level[l].to_bits(),
+                        "{mode:?}: level {l} bytes moved under the empty trace"
+                    );
+                }
+                prop_assert!(plain.events == faulted.events, "{mode:?}: event counts diverged");
+            }
+            Ok(())
+        });
+        // dense deterministic case, full bit-identity helper, all engines
+        let c = presets::dcs_x_gpus(8, 4, 10.0, 128.0).with_override(0, 1, presets::gbps(2.5));
+        let dag = dense_mixed_a2a(8, 4, 64e3, 8e6, 0.5, 17);
+        for mode in [RateMode::Incremental, RateMode::Parallel, RateMode::Folded] {
+            let plain = Simulator::with_mode(&c, mode).run(&dag);
+            let faulted = Simulator::with_mode(&c, mode).with_faults(&empty).run(&dag);
+            assert_bit_identical(&plain, &faulted, &format!("empty trace, {mode:?}"));
+        }
+    }
+
+    /// Conservation under failure: on randomized DAGs with randomized
+    /// failure traces, every injected byte is either delivered or lost to a
+    /// failed container — and the parallel engine stays bit-identical to the
+    /// sequential calendar *with faults active*.
+    #[test]
+    fn bytes_conserve_under_random_failure_traces() {
+        use crate::netsim::faults::FailureTrace;
+        testkit::check("sim-fault-conservation", 60, |g| {
+            let cluster = random_cluster(g);
+            let dag = random_dag(g, cluster.total_gpus(), true);
+            let plain = Simulator::new(&cluster).run(&dag);
+            let horizon = plain.makespan.max(1e-3);
+            let trace =
+                FailureTrace::random(&cluster, horizon, g.usize_in(1, 4), g.rng.next_u64());
+            let r = Simulator::new(&cluster).with_faults(&trace).run(&dag);
+            prop_assert!(r.makespan.is_finite(), "faulted makespan not finite");
+            for (i, f) in r.finish.iter().enumerate() {
+                prop_assert!(f.is_finite(), "task {i} finish not finite under faults");
+            }
+            prop_assert!(
+                r.bytes_injected >= 0.0 && r.bytes_delivered >= 0.0 && r.bytes_lost >= 0.0,
+                "negative byte accounting: inj {} del {} lost {}",
+                r.bytes_injected,
+                r.bytes_delivered,
+                r.bytes_lost
+            );
+            prop_assert!(
+                close_rel(r.bytes_delivered + r.bytes_lost, r.bytes_injected),
+                "conservation violated: delivered {} + lost {} != injected {}",
+                r.bytes_delivered,
+                r.bytes_lost,
+                r.bytes_injected
+            );
+            // no faults: nothing lost, everything delivered
+            prop_assert!(plain.bytes_lost == 0.0, "fault-free run lost bytes");
+            prop_assert!(
+                close_rel(plain.bytes_delivered, plain.bytes_injected),
+                "fault-free delivered {} != injected {}",
+                plain.bytes_delivered,
+                plain.bytes_injected
+            );
+            // the parallel resolver must stay bit-identical under faults too
+            let par = Simulator::with_mode(&cluster, RateMode::Parallel)
+                .with_faults(&trace)
+                .run(&dag);
+            prop_assert!(
+                r.makespan.to_bits() == par.makespan.to_bits()
+                    && r.bytes_lost.to_bits() == par.bytes_lost.to_bits()
+                    && r.events == par.events,
+                "parallel engine diverged under faults"
+            );
+            Ok(())
+        });
+    }
+
+    /// Trace-permutation invariance: compilation canonicalizes the event
+    /// list (time-sorted revisions, commutative capacity recompute, id-sorted
+    /// kills), so any permutation of the same events must simulate
+    /// **bit-identically** — including coalesced same-time events.
+    #[test]
+    fn failure_trace_permutation_is_bit_identical() {
+        use crate::netsim::faults::FailureTrace;
+        testkit::check("sim-fault-trace-permutation", 60, |g| {
+            let cluster = random_cluster(g);
+            let dag = random_dag(g, cluster.total_gpus(), true);
+            let horizon = Simulator::new(&cluster).run(&dag).makespan.max(1e-3);
+            let mut trace =
+                FailureTrace::random(&cluster, horizon, g.usize_in(2, 5), g.rng.next_u64());
+            if g.rng.below(2) == 0 && trace.events.len() >= 2 {
+                // force a coalesced tie: two events striking at one instant
+                let t = trace.events[0].at;
+                trace.events[1].at = t;
+                if let Some(r) = trace.events[1].recover_at {
+                    trace.events[1].recover_at = Some(r.max(t + 1e-3));
+                }
+            }
+            let a = Simulator::new(&cluster).with_faults(&trace).run(&dag);
+            let mut shuffled = trace.clone();
+            g.rng.shuffle(&mut shuffled.events);
+            let b = Simulator::new(&cluster).with_faults(&shuffled).run(&dag);
+            prop_assert!(
+                a.makespan.to_bits() == b.makespan.to_bits(),
+                "permuted trace moved makespan: {} vs {}",
+                a.makespan,
+                b.makespan
+            );
+            for (i, (x, y)) in a.finish.iter().zip(&b.finish).enumerate() {
+                prop_assert!(x.to_bits() == y.to_bits(), "task {i} finish: {x} vs {y}");
+            }
+            for (name, x, y) in [
+                ("injected", a.bytes_injected, b.bytes_injected),
+                ("delivered", a.bytes_delivered, b.bytes_delivered),
+                ("lost", a.bytes_lost, b.bytes_lost),
+                ("util", a.gpu_utilization, b.gpu_utilization),
+            ] {
+                prop_assert!(x.to_bits() == y.to_bits(), "{name} not bit-identical: {x} vs {y}");
+            }
+            prop_assert!(a.events == b.events, "event counts diverged under permutation");
+            Ok(())
+        });
+    }
+
+    /// Recoverable link loss stalls the affected flow for exactly the outage
+    /// window: makespan = latency + transfer time + (recovery − onset).
+    #[test]
+    fn recoverable_outage_stretches_the_makespan_by_the_outage() {
+        use crate::netsim::faults::FailureTrace;
+        let c = presets::dcs_x_gpus(2, 1, 10.0, 128.0);
+        let bw = c.levels[0].bandwidth;
+        let lat = c.levels[0].latency;
+        let bytes = bw; // 1 second of wire time
+        let mut d = Dag::new();
+        d.transfer(0, 1, bytes, Tag::A2A, vec![], "x");
+        let healthy = Simulator::new(&c).run(&d);
+        assert!(close_rel(healthy.makespan, lat + 1.0), "healthy: {}", healthy.makespan);
+        // outage of the destination DC's uplink in the middle of the transfer
+        let (t1, t2) = (lat + 0.25, lat + 0.75);
+        for kind in ["link", "dc"] {
+            let trace = if kind == "link" {
+                FailureTrace::empty().link_loss(t1, 0, 1).recovering_at(t2)
+            } else {
+                FailureTrace::empty().dc_loss(t1, 1).recovering_at(t2)
+            };
+            for mode in [RateMode::Incremental, RateMode::Parallel, RateMode::Folded] {
+                let r = Simulator::with_mode(&c, mode).with_faults(&trace).run(&d);
+                let want = lat + 1.0 + (t2 - t1);
+                assert!(
+                    close_rel(r.makespan, want),
+                    "{kind}/{mode:?}: stalled makespan {} vs {want}",
+                    r.makespan
+                );
+                assert_eq!(r.bytes_lost, 0.0, "{kind}/{mode:?}: recoverable fault lost bytes");
+                assert!(close_rel(r.bytes_delivered, bytes), "{kind}/{mode:?}: delivery");
+            }
+        }
+    }
+
+    /// Permanent DC loss kills in-flight flows (delivered prefix + lost
+    /// remainder) and makes later arrivals at the dead DC total losses.
+    #[test]
+    fn permanent_dc_loss_kills_flows_with_exact_loss_accounting() {
+        use crate::netsim::faults::FailureTrace;
+        let c = presets::dcs_x_gpus(2, 1, 10.0, 128.0);
+        let bw = c.levels[0].bandwidth;
+        let lat = c.levels[0].latency;
+        let bytes = bw; // 1 second of wire time
+        let mut d = Dag::new();
+        let first = d.transfer(0, 1, bytes, Tag::A2A, vec![], "in-flight");
+        d.transfer(0, 1, bytes, Tag::A2A, vec![first], "arrives-dead");
+        let t1 = lat + 0.25; // kills `first` 25% through
+        let trace = FailureTrace::empty().dc_loss(t1, 1);
+        let r = Simulator::new(&c).with_faults(&trace).run(&d);
+        let sent = 0.25 * bytes;
+        assert!(close_rel(r.bytes_delivered, sent), "delivered {} vs {sent}", r.bytes_delivered);
+        assert!(
+            close_rel(r.bytes_lost, (bytes - sent) + bytes),
+            "lost {} vs {}",
+            r.bytes_lost,
+            (bytes - sent) + bytes
+        );
+        assert!(close_rel(r.bytes_injected, 2.0 * bytes), "injected {}", r.bytes_injected);
+        // the second transfer dispatches at the kill time and dies on arrival
+        assert!(close_rel(r.finish[1], t1 + lat), "dead arrival finish {}", r.finish[1]);
+        assert!(close_rel(r.makespan, t1 + lat), "makespan {}", r.makespan);
+    }
+
+    /// Slow-node degradation rescales the max-min solve: a transfer over a
+    /// link degraded to factor f takes 1/f the wire time.
+    #[test]
+    fn slow_node_degradation_rescales_the_transfer() {
+        use crate::netsim::faults::FailureTrace;
+        let c = presets::dcs_x_gpus(2, 1, 10.0, 128.0);
+        let bw = c.levels[0].bandwidth;
+        let lat = c.levels[0].latency;
+        let mut d = Dag::new();
+        d.transfer(0, 1, bw, Tag::A2A, vec![], "x");
+        let trace = FailureTrace::empty().slow_node(0.0, 0, 1, 0.5);
+        let r = Simulator::new(&c).with_faults(&trace).run(&d);
+        assert!(close_rel(r.makespan, lat + 2.0), "degraded makespan {}", r.makespan);
+        assert_eq!(r.bytes_lost, 0.0);
+        assert!(close_rel(r.bytes_delivered, bw));
+    }
+
+    /// The scan baselines predate the fault layer and must refuse traces
+    /// loudly rather than silently ignore them.
+    #[test]
+    #[should_panic(expected = "failure traces require a calendar-family engine")]
+    fn scan_engines_refuse_failure_traces() {
+        use crate::netsim::faults::FailureTrace;
+        let c = presets::dcs_x_gpus(2, 1, 10.0, 128.0);
+        let trace = FailureTrace::empty().link_loss(1.0, 0, 0);
+        let mut d = Dag::new();
+        d.transfer(0, 1, 1e6, Tag::A2A, vec![], "x");
+        Simulator::with_mode(&c, RateMode::ScanIncremental).with_faults(&trace).run(&d);
     }
 
     /// Robustness satellite: zero-byte transfers are latency-only on every

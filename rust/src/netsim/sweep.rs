@@ -29,6 +29,8 @@ use anyhow::{bail, ensure, Result};
 
 use crate::cluster::{presets, ParallelismConfig};
 use crate::moe::{MoEWorkload, Routing};
+use crate::netsim::dag::Dag;
+use crate::netsim::faults::FailureTrace;
 use crate::netsim::sim::{RateMode, SimResult, Simulator};
 use crate::systems::aggregate::AggregateHybrid;
 use crate::systems::ep::VanillaEp;
@@ -85,6 +87,20 @@ where
     v.into_iter().map(|(_, r)| r).collect()
 }
 
+/// Failure-trace axis entry: what (if anything) breaks mid-scenario.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FailureSpec {
+    /// No faults — the identity. Grids without the axis expand to exactly
+    /// this, taking the untouched fault-free simulation path (bit-stable
+    /// with pre-axis sweeps; same contract the pp axis honors).
+    None,
+    /// A seeded random [`FailureTrace`] with `events` events. The trace seed
+    /// derives deterministically from the scenario seed, the horizon from a
+    /// fault-free probe of the EP side, and the **same** trace hits both the
+    /// EP and hybrid sides, so the speedup compares like against like.
+    Random { events: usize },
+}
+
 /// What each scenario simulates.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SweepMode {
@@ -119,6 +135,10 @@ pub struct SweepGrid {
     /// always divisible) and must divide the workload's `moe_layers`. `1` is
     /// the identity; aggregate and replanning sweeps only accept it.
     pub pp_degrees: Vec<usize>,
+    /// Failure-trace axis (innermost): each entry re-runs the grid point
+    /// under that failure spec. Defaults to `[FailureSpec::None]`, which
+    /// keeps existing fig16/fig17 per-scenario seeds bit-stable.
+    pub failures: Vec<FailureSpec>,
     /// Iterations per replanning scenario.
     pub replan_iters: usize,
     pub workload: MoEWorkload,
@@ -146,6 +166,7 @@ impl SweepGrid {
             drift_rates: vec![0.0],
             parallelism: vec![(1, 1)],
             pp_degrees: vec![1],
+            failures: vec![FailureSpec::None],
             replan_iters: 8,
             workload: MoEWorkload {
                 tokens_per_gpu: 8192,
@@ -175,24 +196,27 @@ impl SweepGrid {
                         for &drift in &self.drift_rates {
                             for &(tp, dp) in &self.parallelism {
                                 for &pp in &self.pp_degrees {
-                                    let index = out.len();
-                                    out.push(Scenario {
-                                        index,
-                                        dcs,
-                                        bw_gbps: bw,
-                                        p,
-                                        heterogeneity: het,
-                                        drift,
-                                        tp,
-                                        dp,
-                                        pp,
-                                        seed: scenario_seed(self.base_seed, index as u64),
-                                        workload: self.workload,
-                                        compression_ratio: self.compression_ratio,
-                                        latency_us: self.latency_us,
-                                        mode: self.mode,
-                                        engine: self.engine,
-                                    });
+                                    for &failure in &self.failures {
+                                        let index = out.len();
+                                        out.push(Scenario {
+                                            index,
+                                            dcs,
+                                            bw_gbps: bw,
+                                            p,
+                                            heterogeneity: het,
+                                            drift,
+                                            tp,
+                                            dp,
+                                            pp,
+                                            failure,
+                                            seed: scenario_seed(self.base_seed, index as u64),
+                                            workload: self.workload,
+                                            compression_ratio: self.compression_ratio,
+                                            latency_us: self.latency_us,
+                                            mode: self.mode,
+                                            engine: self.engine,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -216,6 +240,7 @@ impl SweepGrid {
             ("drift_rates", self.drift_rates.is_empty()),
             ("parallelism", self.parallelism.is_empty()),
             ("pp_degrees", self.pp_degrees.is_empty()),
+            ("failures", self.failures.is_empty()),
         ];
         for (name, empty) in axes {
             ensure!(
@@ -247,6 +272,14 @@ impl SweepGrid {
                  configs) — split the sweep into separate grids"
             );
         }
+        if self.failures.iter().any(|&f| f != FailureSpec::None) {
+            ensure!(
+                !matches!(self.engine, RateMode::ScanIncremental | RateMode::Reference),
+                "the failure axis requires a calendar-family engine \
+                 (Incremental/Parallel/Folded/Approx) — the scan baselines \
+                 predate the fault layer and would silently ignore the trace"
+            );
+        }
         Ok(())
     }
 }
@@ -270,6 +303,8 @@ pub struct Scenario {
     /// pipeline stages for the hybrid side (pairwise mode; runs with `pp`
     /// microbatches so the token split is always integral)
     pub pp: usize,
+    /// failure spec applied to both sides of the scenario
+    pub failure: FailureSpec,
     pub seed: u64,
     pub workload: MoEWorkload,
     pub compression_ratio: f64,
@@ -326,6 +361,36 @@ fn apply_heterogeneity(cluster: crate::cluster::ClusterSpec, sc: &Scenario) -> c
     }
 }
 
+/// Run both sides of a scenario under its engine and failure spec.
+/// [`FailureSpec::None`] takes the exact fault-free path (bit-stable with
+/// pre-axis grids — no trace is even constructed); [`FailureSpec::Random`]
+/// derives the trace seed from the scenario seed, sizes the horizon from a
+/// fault-free probe of the EP side, and applies the **same** trace to both
+/// sides so the speedup compares like against like.
+fn simulate_pair(
+    cluster: &crate::cluster::ClusterSpec,
+    sc: &Scenario,
+    ep_dag: &Dag,
+    hy_dag: &Dag,
+) -> (SimResult, SimResult) {
+    match sc.failure {
+        FailureSpec::None => (
+            Simulator::with_mode(cluster, sc.engine).run(ep_dag),
+            Simulator::with_mode(cluster, sc.engine).run(hy_dag),
+        ),
+        FailureSpec::Random { events } => {
+            let probe = Simulator::with_mode(cluster, sc.engine).run(ep_dag);
+            let horizon = probe.makespan.max(1e-6);
+            let trace =
+                FailureTrace::random(cluster, horizon, events, scenario_seed(sc.seed, 0xFA17));
+            (
+                Simulator::with_mode(cluster, sc.engine).with_faults(&trace).run(ep_dag),
+                Simulator::with_mode(cluster, sc.engine).with_faults(&trace).run(hy_dag),
+            )
+        }
+    }
+}
+
 /// Simulate one scenario (EP baseline + hybrid at the scenario's `p`).
 /// Errors when the scenario's `(pp, tp, dp)` does not factor its cluster (or
 /// is non-identity in [`SweepMode::Aggregate`], whose O(G) ring schedules are
@@ -351,8 +416,7 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioOutcome> {
             let ctx = SchedCtx::new(&cluster, &w, &routing);
             let ep_dag = AggregateHybrid::ep().build_iteration(&ctx);
             let hy_dag = AggregateHybrid::with_p(sc.dcs, sc.p, pe_tx).build_iteration(&ctx);
-            let sim = |dag| Simulator::with_mode(&cluster, sc.engine).run(dag);
-            (sim(&ep_dag), sim(&hy_dag))
+            simulate_pair(&cluster, sc, &ep_dag, &hy_dag)
         }
         SweepMode::Pairwise { gpus_per_dc, zipf_skew } => {
             let cluster = apply_heterogeneity(
@@ -383,8 +447,7 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioOutcome> {
                 }),
             };
             let hy_dag = hy.build_iteration(&hy_ctx);
-            let sim = |dag| Simulator::with_mode(&cluster, sc.engine).run(dag);
-            (sim(&ep_dag), sim(&hy_dag))
+            simulate_pair(&cluster, sc, &ep_dag, &hy_dag)
         }
     };
     let speedup = ep.makespan / hybrid.makespan;
@@ -440,6 +503,15 @@ pub fn run_replan_scenario(
             sc.tp,
             sc.dp,
             sc.pp
+        );
+    }
+    if sc.failure != FailureSpec::None {
+        bail!(
+            "the failure axis is not supported in replanning sweeps \
+             (scenario {} carries {:?}) — use plan::replanner::elastic for \
+             failure recovery",
+            sc.index,
+            sc.failure
         );
     }
     let cluster = apply_heterogeneity(
@@ -871,5 +943,61 @@ mod tests {
         bad.pp_degrees = vec![2];
         let err = run_sweep(&bad, 1).unwrap_err().to_string();
         assert!(err.contains("stage blocks"), "unexpected error: {err}");
+    }
+
+    /// The failure axis defaults to `[FailureSpec::None]`, so every
+    /// pre-existing grid — fig16/fig17 included — keeps its scenario count,
+    /// per-scenario seeds, and outcomes **bit-for-bit**. A non-None point
+    /// must stay thread-count deterministic, conserve bytes on both sides,
+    /// and be rejected up front by scan engines and replanning sweeps.
+    #[test]
+    fn failure_axis_reshapes_scenarios_and_keeps_identity_bit_stable() {
+        let mut grid = small_grid(SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 });
+        grid.dc_counts = vec![2];
+        grid.hybrid_ps = vec![0.5];
+        grid.failures = vec![FailureSpec::None, FailureSpec::Random { events: 3 }];
+        let out = run_sweep(&grid, 2).unwrap();
+        assert_eq!(out.len(), 2);
+        // the identity point matches a grid without the axis bit-for-bit
+        // (failures is the innermost loop, so scenario 0 keeps its seed)
+        let mut base = grid.clone();
+        base.failures = vec![FailureSpec::None];
+        let base_out = run_sweep(&base, 1).unwrap();
+        assert_eq!(base_out.len(), 1);
+        assert_eq!(out[0].ep.makespan.to_bits(), base_out[0].ep.makespan.to_bits());
+        assert_eq!(out[0].hybrid.makespan.to_bits(), base_out[0].hybrid.makespan.to_bits());
+        assert_eq!(out[0].hybrid.bytes_ag.to_bits(), base_out[0].hybrid.bytes_ag.to_bits());
+        assert_eq!(out[0].ep.events, base_out[0].ep.events);
+        assert_eq!(out[0].hybrid.events, base_out[0].hybrid.events);
+        assert_eq!(out[0].ep.bytes_lost, 0.0, "the identity point must lose nothing");
+        // the faulty point is deterministic under thread count…
+        let serial = run_sweep(&grid, 1).unwrap();
+        assert_eq!(out[1].ep.makespan.to_bits(), serial[1].ep.makespan.to_bits());
+        assert_eq!(out[1].hybrid.makespan.to_bits(), serial[1].hybrid.makespan.to_bits());
+        assert_eq!(out[1].ep.bytes_lost.to_bits(), serial[1].ep.bytes_lost.to_bits());
+        // …and conserves bytes on both sides of the comparison
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * (1.0 + b.abs());
+        for side in [&out[1].ep, &out[1].hybrid] {
+            assert!(side.makespan.is_finite() && side.makespan > 0.0);
+            assert!(
+                close(side.bytes_delivered + side.bytes_lost, side.bytes_injected),
+                "conservation: {} + {} vs {}",
+                side.bytes_delivered,
+                side.bytes_lost,
+                side.bytes_injected
+            );
+        }
+        // rejected up front where it cannot apply: scan engines…
+        let mut scan = grid.clone();
+        scan.engine = RateMode::ScanIncremental;
+        let err = run_sweep(&scan, 1).unwrap_err().to_string();
+        assert!(err.contains("calendar-family"), "unexpected error: {err}");
+        // …and replanning sweeps
+        let mut replan = small_grid(SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 });
+        replan.dc_counts = vec![2];
+        replan.hybrid_ps = vec![1.0];
+        replan.failures = vec![FailureSpec::Random { events: 2 }];
+        let err = run_replan_sweep(&replan, 1).unwrap_err().to_string();
+        assert!(err.contains("replanning"), "unexpected error: {err}");
     }
 }

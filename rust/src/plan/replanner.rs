@@ -269,6 +269,376 @@ pub fn compare_policies(
     ])
 }
 
+/// Elastic failure recovery: on a [`FailureTrace`](crate::netsim::faults)
+/// event (times in **iteration** units), re-solve the layout on the
+/// surviving sub-cluster and splice the new plan mid-run, versus a
+/// `StaticRestart` baseline that waits for a replacement allocation and
+/// reruns the original plan. Both pay the same checkpoint policy
+/// ([`CheckpointCfg`](crate::migration::checkpoint::CheckpointCfg)) and both
+/// roll back to the latest checkpoint on a loss; they differ only in what
+/// happens next:
+///
+/// * **Elastic** — shrink the [`ClusterSpec`] to the survivors, re-host the
+///   lost experts there (restore priced like a migration prologue via the
+///   SR codec), re-solve the domain partition (and, on homogeneous
+///   survivors, the joint `{pp,tp,ep,dp}` config via
+///   [`solve_joint`](crate::model::solver::solve_joint)), and keep training
+///   on a smaller, slower cluster.
+/// * **StaticRestart** — wait `replacement_delay_secs` for an identical
+///   replacement DC, restore the lost experts onto it, and rerun the
+///   original plan unchanged.
+///
+/// Slow-node degradations hit both modes identically (bandwidth override
+/// for the degradation window); elastic may additionally replan through
+/// the adaptive amortization criterion. Link loss is modeled at level 0
+/// (a DC uplink — the container drops off the cluster exactly like a DC
+/// loss); deeper losses are rejected since a dead intra-DC link has no
+/// re-hosting semantics in the stream model.
+pub mod elastic {
+    use std::collections::{BTreeMap, BTreeSet};
+
+    use anyhow::{ensure, Result};
+
+    use crate::cluster::{ClusterSpec, ParallelismConfig};
+    use crate::migration::checkpoint::CheckpointCfg;
+    use crate::model::solver::solve_joint;
+    use crate::moe::{GpuSpec, MoEWorkload, Routing};
+    use crate::netsim::faults::{FailureEvent, FailureTrace, FaultKind};
+
+    use super::{iter_time, optimal_partition, switch_cost, ReplanCfg};
+
+    /// Knobs shared by both recovery modes.
+    #[derive(Clone, Debug)]
+    pub struct ElasticCfg {
+        /// Partition re-solve + switch pricing (SR codec, amortization).
+        pub replan: ReplanCfg,
+        /// Checkpoint interval policy + restore pricing.
+        pub checkpoint: CheckpointCfg,
+        /// Seconds the static baseline waits for a replacement allocation
+        /// before it can restore and rerun. Ten minutes is optimistic for
+        /// cross-DC capacity (spot pools, re-imaging, warm standby).
+        pub replacement_delay_secs: f64,
+        /// Accelerator model for the joint `{pp,tp,ep,dp}` re-solve.
+        pub gpu: GpuSpec,
+    }
+
+    impl Default for ElasticCfg {
+        fn default() -> Self {
+            Self {
+                replan: ReplanCfg::default(),
+                checkpoint: CheckpointCfg::default(),
+                replacement_delay_secs: 600.0,
+                gpu: GpuSpec::a800(),
+            }
+        }
+    }
+
+    /// What to do when a container dies.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum RecoveryMode {
+        Elastic,
+        StaticRestart,
+    }
+
+    /// One failure-recovery scenario: a workload trained for `iters`
+    /// iterations on `cluster` while `trace` strikes (event times in
+    /// iteration units; events at `t ≥ iters` never fire).
+    #[derive(Clone, Debug)]
+    pub struct RecoveryScenario {
+        pub cluster: ClusterSpec,
+        pub workload: MoEWorkload,
+        pub trace: FailureTrace,
+        pub iters: usize,
+        /// Zipf skew of the (fixed) routing distribution.
+        pub skew: f64,
+        pub seed: u64,
+    }
+
+    /// Outcome of one recovery run.
+    #[derive(Clone, Debug)]
+    pub struct RecoveryReport {
+        pub mode: RecoveryMode,
+        /// Wall-clock seconds to finish all `iters` iterations of progress,
+        /// including checkpoints, rollback redo, restores and replans.
+        pub total_secs: f64,
+        /// Failure events processed.
+        pub failures: usize,
+        /// Loss events that triggered a checkpoint restore.
+        pub restores: usize,
+        /// Partition switches actually paid for.
+        pub replans: usize,
+        /// Checkpoints taken.
+        pub checkpoints: usize,
+        /// GPUs still training when the run finished.
+        pub survivor_gpus: usize,
+        /// Joint config from the last homogeneous-survivor re-solve.
+        pub joint: Option<ParallelismConfig>,
+    }
+
+    /// Remap an original-coordinates container at `level` into the survivor
+    /// cluster's numbering, or `None` if its DC was lost.
+    fn remap_container(
+        original: &ClusterSpec,
+        lost: &BTreeSet<usize>,
+        level: usize,
+        container: usize,
+    ) -> Option<usize> {
+        let per: usize = original.levels[1..=level].iter().map(|l| l.fanout).product();
+        let dc = container / per;
+        if lost.contains(&dc) {
+            return None;
+        }
+        let new_dc = dc - lost.iter().filter(|&&d| d < dc).count();
+        Some(new_dc * per + container % per)
+    }
+
+    /// Drop `lost` DCs from `original`: level-0 fanout shrinks and every
+    /// override is remapped into the survivors' numbering (overrides on
+    /// lost DCs vanish with them).
+    pub fn shrink_cluster(original: &ClusterSpec, lost: &BTreeSet<usize>) -> Result<ClusterSpec> {
+        let dcs = original.levels[0].fanout;
+        for &d in lost {
+            ensure!(d < dcs, "lost DC {d} out of range (cluster has {dcs})");
+        }
+        ensure!(
+            lost.len() < dcs,
+            "every DC in the trace died — no survivors to re-plan onto"
+        );
+        let mut levels = original.levels.clone();
+        levels[0].fanout = dcs - lost.len();
+        let mut out = ClusterSpec {
+            name: format!("{}-minus{}dc", original.name, lost.len()),
+            levels,
+            overrides: Vec::new(),
+        };
+        for o in &original.overrides {
+            if let Some(c) = remap_container(original, lost, o.level, o.container) {
+                out = out.with_override(o.level, c, o.bandwidth);
+            }
+        }
+        Ok(out)
+    }
+
+    /// The survivor cluster with every degradation active at iteration `t`
+    /// applied as a bandwidth override (factors on one container compose
+    /// multiplicatively, mirroring `netsim::faults`).
+    fn effective_cluster(
+        base: &ClusterSpec,
+        original: &ClusterSpec,
+        lost: &BTreeSet<usize>,
+        degradations: &[FailureEvent],
+        t: f64,
+    ) -> ClusterSpec {
+        let mut factors: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+        for e in degradations {
+            let FaultKind::SlowNode { level, container, factor } = e.kind else { continue };
+            if e.at > t || e.recover_at.is_some_and(|r| r <= t) {
+                continue;
+            }
+            if let Some(c) = remap_container(original, lost, level, container) {
+                *factors.entry((level, c)).or_insert(1.0) *= factor;
+            }
+        }
+        let mut out = base.clone();
+        for ((level, container), f) in factors {
+            let bw = out.container_bandwidth(level, container) * f;
+            out = out.with_override(level, container, bw);
+        }
+        out
+    }
+
+    /// Clamp a partition solved on a larger cluster into the survivors'
+    /// level arity (domain sizes cannot exceed the shrunk fanout).
+    fn clamp_partition(partition: &[usize], cluster: &ClusterSpec) -> Vec<usize> {
+        partition
+            .iter()
+            .zip(&cluster.levels)
+            .map(|(&s, l)| s.min(l.fanout).max(1))
+            .collect()
+    }
+
+    /// Simulate one recovery mode over the scenario. Returns wall-clock
+    /// accounting for completing all `iters` iterations of *useful*
+    /// progress (rolled-back iterations are re-executed and re-billed).
+    pub fn run_recovery(
+        s: &RecoveryScenario,
+        cfg: &ElasticCfg,
+        mode: RecoveryMode,
+    ) -> Result<RecoveryReport> {
+        ensure!(s.iters >= 1, "recovery scenario needs at least one iteration");
+        s.trace.validate(&s.cluster)?;
+        for e in &s.trace.events {
+            if let FaultKind::LinkLoss { level, .. } = e.kind {
+                ensure!(
+                    level == 0,
+                    "elastic recovery models level-0 (DC-uplink) link loss only; a dead \
+                     level-{level} intra-DC link has no re-hosting semantics"
+                );
+            }
+        }
+        let mut events = s.trace.events.clone();
+        events.sort_by(|a, b| a.at.total_cmp(&b.at));
+
+        let g0 = s.cluster.total_gpus();
+        let experts0 = g0 * s.workload.experts_per_gpu;
+        let tokens_total = g0 * s.workload.tokens_per_gpu;
+        let gpus_per_dc: usize = s.cluster.levels[1..].iter().map(|l| l.fanout).product();
+        let pe = s.workload.pe_bytes();
+        let interval = cfg.checkpoint.interval_iters.max(1);
+
+        let mut lost: BTreeSet<usize> = BTreeSet::new();
+        let mut degradations: Vec<FailureEvent> = Vec::new();
+        let mut cluster = s.cluster.clone();
+        let mut workload = s.workload;
+        let mut routing =
+            Routing::zipf(g0, experts0, workload.tokens_per_gpu, workload.k, s.skew, s.seed);
+        let mut partition = optimal_partition(&cluster, &workload, &routing, &cfg.replan);
+
+        let mut total = 0.0;
+        let (mut failures, mut restores, mut replans, mut checkpoints) = (0, 0, 0, 0);
+        let mut joint = None;
+        let mut progress = 0usize;
+        let mut last_ckpt = 0usize;
+        let mut ev_i = 0usize;
+
+        while progress < s.iters {
+            if progress > 0 && progress % interval == 0 && last_ckpt != progress {
+                let experts = cluster.total_gpus() * workload.experts_per_gpu;
+                total += cfg.checkpoint.checkpoint_secs(experts, pe);
+                checkpoints += 1;
+                last_ckpt = progress;
+            }
+            while ev_i < events.len() && events[ev_i].at <= progress as f64 {
+                let e = events[ev_i];
+                ev_i += 1;
+                failures += 1;
+                match e.kind {
+                    FaultKind::SlowNode { .. } => {
+                        degradations.push(e);
+                        if mode == RecoveryMode::Elastic {
+                            let eff = effective_cluster(
+                                &cluster,
+                                &s.cluster,
+                                &lost,
+                                &degradations,
+                                progress as f64,
+                            );
+                            let cand = optimal_partition(&eff, &workload, &routing, &cfg.replan);
+                            if cand != partition {
+                                let cost =
+                                    switch_cost(&eff, &workload, &cfg.replan, &partition, &cand);
+                                let t_cur =
+                                    iter_time(&eff, &workload, &routing, &partition, &cfg.replan);
+                                let t_new =
+                                    iter_time(&eff, &workload, &routing, &cand, &cfg.replan);
+                                if (t_cur - t_new) * cfg.replan.window as f64 > cost {
+                                    total += cost;
+                                    partition = cand;
+                                    replans += 1;
+                                }
+                            }
+                        }
+                    }
+                    FaultKind::DcLoss { dc } | FaultKind::LinkLoss { level: 0, container: dc } => {
+                        match mode {
+                            RecoveryMode::StaticRestart => {
+                                // the replacement re-creates the DC in place,
+                                // so every loss event costs a full cycle
+                                let lost_experts = gpus_per_dc * workload.experts_per_gpu;
+                                total += cfg.replacement_delay_secs
+                                    + cfg.checkpoint.restore_secs(&s.cluster, lost_experts, pe);
+                                restores += 1;
+                                progress -= cfg.checkpoint.redo_iters(progress);
+                                last_ckpt = progress;
+                            }
+                            RecoveryMode::Elastic => {
+                                if lost.contains(&dc) {
+                                    continue; // already shrunk away from it
+                                }
+                                let lost_experts = gpus_per_dc * workload.experts_per_gpu;
+                                lost.insert(dc);
+                                let survivors = shrink_cluster(&s.cluster, &lost)?;
+                                let g_new = survivors.total_gpus();
+                                total += cfg.checkpoint.restore_secs(&survivors, lost_experts, pe);
+                                restores += 1;
+                                progress -= cfg.checkpoint.redo_iters(progress);
+                                last_ckpt = progress;
+                                // re-host: conserve total tokens and experts
+                                let epg = experts0.div_ceil(g_new);
+                                let tpg = tokens_total.div_ceil(g_new);
+                                workload = MoEWorkload {
+                                    tokens_per_gpu: tpg,
+                                    experts_per_gpu: epg,
+                                    ..s.workload
+                                };
+                                routing = Routing::zipf(
+                                    g_new,
+                                    g_new * epg,
+                                    tpg,
+                                    workload.k,
+                                    s.skew,
+                                    s.seed,
+                                );
+                                let old = clamp_partition(&partition, &survivors);
+                                cluster = survivors;
+                                let eff = effective_cluster(
+                                    &cluster,
+                                    &s.cluster,
+                                    &lost,
+                                    &degradations,
+                                    progress as f64,
+                                );
+                                let cand =
+                                    optimal_partition(&eff, &workload, &routing, &cfg.replan);
+                                if cand != old {
+                                    total +=
+                                        switch_cost(&eff, &workload, &cfg.replan, &old, &cand);
+                                    replans += 1;
+                                }
+                                partition = cand;
+                                if cluster.overrides.is_empty() {
+                                    let pe_tx = pe / cfg.replan.migration.compression_ratio;
+                                    joint = solve_joint(&cluster, &workload, &cfg.gpu, pe_tx)
+                                        .ok()
+                                        .map(|c| c.config);
+                                }
+                            }
+                        }
+                    }
+                    FaultKind::LinkLoss { .. } => unreachable!("validated above"),
+                }
+            }
+            let eff = effective_cluster(
+                &cluster,
+                &s.cluster,
+                &lost,
+                &degradations,
+                progress as f64,
+            );
+            total += iter_time(&eff, &workload, &routing, &partition, &cfg.replan);
+            progress += 1;
+        }
+        Ok(RecoveryReport {
+            mode,
+            total_secs: total,
+            failures,
+            restores,
+            replans,
+            checkpoints,
+            survivor_gpus: cluster.total_gpus(),
+            joint,
+        })
+    }
+
+    /// Run both modes on the same scenario: `[elastic, static_restart]`.
+    pub fn compare(s: &RecoveryScenario, cfg: &ElasticCfg) -> Result<[RecoveryReport; 2]> {
+        Ok([
+            run_recovery(s, cfg, RecoveryMode::Elastic)?,
+            run_recovery(s, cfg, RecoveryMode::StaticRestart)?,
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -402,5 +772,171 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("window"), "unexpected error: {err}");
+    }
+
+    mod elastic {
+        use std::collections::BTreeSet;
+
+        use super::super::elastic::*;
+        use super::{shift_workload, MoEWorkload};
+        use crate::cluster::presets;
+        use crate::migration::checkpoint::CheckpointCfg;
+        use crate::netsim::faults::FailureTrace;
+        use crate::util::rng::Rng;
+
+        fn cfg() -> ElasticCfg {
+            ElasticCfg {
+                checkpoint: CheckpointCfg { interval_iters: 5, ..CheckpointCfg::default() },
+                ..ElasticCfg::default()
+            }
+        }
+
+        /// A seeded DC-loss/link-loss/slow-node mix; every trace carries at
+        /// least one loss so the static baseline must buy a replacement.
+        fn seeded_scenario(seed: u64) -> RecoveryScenario {
+            let dcs = 4;
+            let cluster = presets::dcs_x_gpus(dcs, 2, 10.0, 128.0);
+            let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9).wrapping_add(1));
+            let at = 2.0 + rng.f64() * 8.0;
+            let dc = rng.below(dcs);
+            let mut trace = if rng.below(2) == 0 {
+                FailureTrace::empty().dc_loss(at, dc)
+            } else {
+                FailureTrace::empty().link_loss(at, 0, dc)
+            };
+            if seed % 3 == 0 {
+                // second loss on a distinct DC
+                trace = trace.dc_loss(at + 1.0 + rng.f64() * 2.0, (dc + 1) % dcs);
+            }
+            if seed % 2 == 0 {
+                let t = 1.0 + rng.f64() * 6.0;
+                trace = trace
+                    .slow_node(t, 0, rng.below(dcs), 0.3 + rng.f64() * 0.6)
+                    .recovering_at(t + 2.0 + rng.f64() * 3.0);
+            }
+            RecoveryScenario {
+                cluster,
+                workload: shift_workload(),
+                trace,
+                iters: 12,
+                skew: 1.2,
+                seed,
+            }
+        }
+
+        #[test]
+        fn shrink_drops_dcs_and_remaps_overrides() {
+            let c = presets::dcs_x_gpus(4, 2, 10.0, 128.0)
+                .with_override(0, 1, presets::gbps(2.5))
+                .with_override(0, 3, presets::gbps(5.0))
+                .with_override(1, 6, presets::gbps(64.0)); // DC 3, inner 0
+            let lost: BTreeSet<usize> = [1].into_iter().collect();
+            let s = shrink_cluster(&c, &lost).unwrap();
+            assert_eq!(s.levels[0].fanout, 3);
+            assert_eq!(s.total_gpus(), 6);
+            // DC 1's override vanished; DC 3 renumbered to 2 at both levels
+            assert_eq!(s.container_bandwidth(0, 0), c.levels[0].bandwidth);
+            assert_eq!(s.container_bandwidth(0, 2), presets::gbps(5.0));
+            assert_eq!(s.container_bandwidth(1, 4), presets::gbps(64.0));
+            // losing everything is an error, not a panic
+            let all: BTreeSet<usize> = (0..4).collect();
+            let err = shrink_cluster(&c, &all).unwrap_err().to_string();
+            assert!(err.contains("no survivors"), "unexpected error: {err}");
+        }
+
+        /// Acceptance criterion (recorded in EXPERIMENTS.md): elastic
+        /// replanning beats static-restart on ≥ 16 seeded failure traces
+        /// mixing DC loss, link loss and slow-node degradation.
+        #[test]
+        fn elastic_beats_static_restart_on_sixteen_seeded_traces() {
+            let cfg = cfg();
+            for seed in 0..16u64 {
+                let s = seeded_scenario(seed);
+                let [el, st] = compare(&s, &cfg).unwrap();
+                assert!(
+                    el.total_secs.is_finite() && el.total_secs > 0.0,
+                    "seed {seed}: bad elastic total {}",
+                    el.total_secs
+                );
+                assert!(
+                    el.total_secs < st.total_secs,
+                    "seed {seed}: elastic {:.3}s must beat static {:.3}s",
+                    el.total_secs,
+                    st.total_secs
+                );
+                assert!(el.restores >= 1, "seed {seed}: elastic never restored");
+                assert!(st.restores >= 1, "seed {seed}: static never restored");
+                assert_eq!(st.survivor_gpus, 8, "static keeps the original cluster");
+                assert!(el.survivor_gpus < 8, "elastic must shrink: {}", el.survivor_gpus);
+                assert_eq!(el.failures, st.failures, "both see the same trace");
+                // the static baseline's gap is dominated by the replacement
+                // wait, so the margin must exceed one replacement delay per
+                // restore minus everything elastic paid
+                assert!(
+                    st.total_secs - el.total_secs > 0.5 * cfg.replacement_delay_secs,
+                    "seed {seed}: win margin suspiciously thin: {:.3}s vs {:.3}s",
+                    el.total_secs,
+                    st.total_secs
+                );
+            }
+        }
+
+        #[test]
+        fn elastic_resolves_joint_config_on_homogeneous_survivors() {
+            let s = RecoveryScenario {
+                cluster: presets::dcs_x_gpus(4, 2, 10.0, 128.0),
+                workload: shift_workload(),
+                trace: FailureTrace::empty().dc_loss(3.0, 2),
+                iters: 10,
+                skew: 0.8,
+                seed: 7,
+            };
+            let rep = run_recovery(&s, &cfg(), RecoveryMode::Elastic).unwrap();
+            assert_eq!(rep.restores, 1);
+            assert_eq!(rep.survivor_gpus, 6);
+            assert!(rep.joint.is_some(), "homogeneous survivors must get a joint re-solve");
+            assert!(rep.checkpoints >= 1, "interval 5 over 10 iters must checkpoint");
+        }
+
+        #[test]
+        fn recovery_rejects_deep_link_loss_and_degenerate_scenarios() {
+            let base = RecoveryScenario {
+                cluster: presets::dcs_x_gpus(2, 2, 10.0, 128.0),
+                workload: shift_workload(),
+                trace: FailureTrace::empty().link_loss(1.0, 1, 0),
+                iters: 4,
+                skew: 0.5,
+                seed: 1,
+            };
+            let err = run_recovery(&base, &cfg(), RecoveryMode::Elastic).unwrap_err().to_string();
+            assert!(err.contains("level-0"), "unexpected error: {err}");
+
+            let no_iters = RecoveryScenario { iters: 0, trace: FailureTrace::empty(), ..base };
+            let err =
+                run_recovery(&no_iters, &cfg(), RecoveryMode::Elastic).unwrap_err().to_string();
+            assert!(err.contains("at least one iteration"), "unexpected error: {err}");
+        }
+
+        #[test]
+        fn failure_free_scenarios_tie_and_pay_no_recovery() {
+            let s = RecoveryScenario {
+                cluster: presets::dcs_x_gpus(3, 2, 10.0, 128.0),
+                workload: MoEWorkload { tokens_per_gpu: 512, ..shift_workload() },
+                trace: FailureTrace::empty(),
+                iters: 8,
+                skew: 1.0,
+                seed: 11,
+            };
+            let [el, st] = compare(&s, &cfg()).unwrap();
+            assert_eq!(el.failures, 0);
+            assert_eq!(el.restores + st.restores, 0);
+            assert_eq!(el.replans, 0, "nothing to replan without failures");
+            assert!(
+                (el.total_secs - st.total_secs).abs() <= 1e-12 * st.total_secs,
+                "modes must agree on a healthy run: {} vs {}",
+                el.total_secs,
+                st.total_secs
+            );
+        }
     }
 }

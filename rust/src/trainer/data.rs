@@ -110,6 +110,23 @@ mod tests {
         assert_ne!(a.batch(2, 50), b.batch(2, 50));
     }
 
+    /// The analytic loss floor (`Trainer::corpus_entropy` delegates here)
+    /// depends only on the branching factor: zero for a deterministic
+    /// chain, growing with branching, bounded by the uniform `ln(b)`.
+    #[test]
+    fn entropy_floor_tracks_branching() {
+        assert_eq!(MarkovCorpus::new(8, 1, 0).entropy(), 0.0);
+        let mut prev = 0.0;
+        for b in [2usize, 3, 4, 8] {
+            let h = MarkovCorpus::new(16, b, 0).entropy();
+            assert!(h > prev, "entropy must grow with branching: {h} vs {prev}");
+            assert!(h <= (b as f64).ln() + 1e-12, "entropy above the uniform bound at b={b}");
+            prev = h;
+        }
+        // seed and vocab don't move the floor — only branching does
+        assert_eq!(MarkovCorpus::new(16, 4, 0).entropy(), MarkovCorpus::new(64, 4, 9).entropy());
+    }
+
     #[test]
     fn chain_is_predictable() {
         // empirical conditional entropy ≪ uniform entropy

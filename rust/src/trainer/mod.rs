@@ -172,16 +172,27 @@ impl Trainer {
         self.history.iter().map(|m| m.loss).collect()
     }
 
-    /// Mean loss over the last `n` steps.
+    /// Mean loss over the last `n` steps (`n` clamped to the history;
+    /// `NaN` before the first step).
     pub fn recent_loss(&self, n: usize) -> f32 {
-        let h = &self.history;
-        let n = n.min(h.len()).max(1);
-        h[h.len() - n..].iter().map(|m| m.loss).sum::<f32>() / n as f32
+        mean_tail(&self.losses(), n)
     }
 
     pub fn corpus_entropy(&self) -> f64 {
         self.corpus.entropy()
     }
+}
+
+/// Mean of the last `n` entries of `xs`, with `n` clamped to
+/// `[1, xs.len()]`. `NaN` on an empty slice — there is no loss to report
+/// before the first step (the old inline clamp underflowed `xs[len - n..]`
+/// on an empty history).
+fn mean_tail(xs: &[f32], n: usize) -> f32 {
+    if xs.is_empty() {
+        return f32::NAN;
+    }
+    let n = n.clamp(1, xs.len());
+    xs[xs.len() - n..].iter().sum::<f32>() / n as f32
 }
 
 #[allow(dead_code)]
@@ -192,6 +203,23 @@ fn clone_literal(l: &xla::Literal) -> xla::Literal {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Regression (bugfix): `recent_loss` used to slice `h[len - n..]` with
+    /// `n = n.min(len).max(1)`, which underflows on an empty history. The
+    /// `mean_tail` kernel behind it needs no runtime artifacts to test.
+    #[test]
+    fn recent_loss_window_clamps_and_survives_empty_history() {
+        let h = [1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(mean_tail(&h, 2), 3.5);
+        assert_eq!(mean_tail(&h, 1), 4.0);
+        // n = 0 clamps to the last step…
+        assert_eq!(mean_tail(&h, 0), 4.0);
+        // …and n > len to the whole history
+        assert_eq!(mean_tail(&h, 100), 2.5);
+        // before the first step there is no loss: NaN, not a slice panic
+        assert!(mean_tail(&[], 5).is_nan());
+        assert!(mean_tail(&[], 0).is_nan());
+    }
 
     fn trainer(profile: &str) -> Option<(Engine, Trainer)> {
         let Ok(arts) = Artifacts::discover() else {
