@@ -1,0 +1,78 @@
+//! Detection & degraded mode — replica failover vs elastic vs static restart
+//! under an in-simulation heartbeat detector, plus a detector-armed netsim
+//! sweep. Not a paper figure: exercises `netsim::detect`, `plan::replica`
+//! and the `ReplicaFailover` recovery mode end to end. `--quick` /
+//! `BENCH_FAST=1` runs the three-mode table alone (the CI smoke); rows are
+//! merged into `BENCH_netsim.json`.
+
+use hybrid_ep::bench::{header, time_once, JsonReport};
+use hybrid_ep::netsim::sweep::{self, DetectorSpec, SweepGrid, SweepMode};
+use hybrid_ep::report::experiments;
+use hybrid_ep::util::args::Args;
+use hybrid_ep::util::json;
+
+fn main() {
+    header("detection_failover", "replica failover vs checkpoint rollback (not in paper)");
+    let args = Args::from_env().unwrap_or_default();
+    let quick = args.bool("quick") || std::env::var("BENCH_FAST").is_ok();
+    let mut report = JsonReport::open();
+
+    let ((table, rows), secs) = time_once(experiments::fig_detection);
+    table.print();
+    let wins = rows
+        .iter()
+        .filter(|r| r.failover_secs < r.elastic_secs && r.failover_secs < r.static_secs)
+        .count();
+    let geomean = (rows.iter().map(|r| r.speedup.ln()).sum::<f64>() / rows.len() as f64).exp();
+    let false_susp: usize = rows.iter().map(|r| r.false_suspicions).sum();
+    println!(
+        "{wins}/{} cells with failover beating both rollback modes (geomean {geomean:.2}×, \
+         {false_susp} false suspicions, {secs:.2}s)",
+        rows.len()
+    );
+    assert_eq!(wins, rows.len(), "failover must win every covered cell");
+    let key = "detection_failover_table/failover_vs_rollback";
+    report.record(key, secs * 1e3, rows.len(), None);
+    report.record_extra(key, "geomean_speedup", json::num(geomean));
+    report.record_extra(key, "false_suspicions", json::num(false_susp as f64));
+
+    if quick {
+        println!("[--quick] skipping the detector-armed sweep");
+    } else {
+        // detector-armed scenario sweep: the heartbeats ride the same
+        // constrained uplinks as the workload, so a fault-free sweep doubles
+        // as a false-positive check — no suspicion may be raised anywhere
+        println!();
+        let mut grid = SweepGrid::fig17(vec![4, 8]);
+        grid.mode = SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 };
+        grid.bandwidths_gbps = vec![5.0];
+        grid.hybrid_ps = vec![0.5];
+        grid.workload.moe_layers = 1;
+        grid.workload.tokens_per_gpu = 512;
+        grid.detectors = vec![DetectorSpec::On { period_secs: 0.25, timeout_beats: 3 }];
+        let threads = sweep::default_threads();
+        let (outcomes, t) =
+            time_once(|| sweep::run_sweep(&grid, threads).expect("non-empty grid"));
+        let s = sweep::summarize(&outcomes);
+        for o in &outcomes {
+            for side in [&o.ep, &o.hybrid] {
+                assert!(
+                    side.detections.is_empty(),
+                    "fault-free suspicion at scenario {}",
+                    o.scenario.index
+                );
+            }
+        }
+        println!(
+            "detector-armed sweep: {} scenarios across {threads} threads in {t:.2}s, \
+             no false suspicion",
+            s.scenarios
+        );
+        report.record("detection_failover_sweep/detector_on", t * 1e3, s.total_events, None);
+    }
+
+    match report.write() {
+        Ok(path) => println!("\n[perf trajectory merged into {}]", path.display()),
+        Err(e) => eprintln!("\n[warning] could not write perf trajectory: {e}"),
+    }
+}

@@ -12,13 +12,68 @@
 //! The communicator owns independent channel endpoints, so the worker thread
 //! never blocks on migration traffic — that is exactly the overlap the
 //! stream model's Eq. 7 `min(Lat^PE, Lat^AG)` term claims.
+//!
+//! Hand-offs to a peer inbox are retried with bounded exponential backoff
+//! ([`RetryCfg`]) before the message is counted as dropped: a briefly wedged
+//! receiver loses nothing, while a peer that stays gone degrades to a
+//! counted drop instead of wedging the communicator (the persistent-failure
+//! half of degraded mode lives in `netsim::detect` / `plan::replica`).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::comm::cluster::Message;
 use crate::comm::fabric::Fabric;
+
+/// Bounded-retry policy for transient send failures.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryCfg {
+    /// Total tries including the first (>= 1).
+    pub max_attempts: usize,
+    /// Backoff before the first retry; doubles on each subsequent retry.
+    pub base_backoff: Duration,
+    /// Ceiling on any single backoff sleep.
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryCfg {
+    fn default() -> Self {
+        Self {
+            max_attempts: 4,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(100),
+        }
+    }
+}
+
+impl RetryCfg {
+    /// Backoff before retry `attempt` (1-based): `base * 2^(attempt - 1)`,
+    /// capped at [`max_backoff`](Self::max_backoff).
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let doublings = attempt.saturating_sub(1).min(16);
+        self.base_backoff.saturating_mul(1 << doublings).min(self.max_backoff)
+    }
+}
+
+/// Run `op` under `cfg`: return the first `Ok`, sleeping the exponential
+/// backoff between tries, or the last `Err` once attempts are exhausted.
+pub fn with_retry<T, E>(cfg: &RetryCfg, mut op: impl FnMut() -> Result<T, E>) -> Result<T, E> {
+    let mut attempt = 0u32;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                attempt += 1;
+                if attempt as usize >= cfg.max_attempts.max(1) {
+                    return Err(e);
+                }
+                std::thread::sleep(cfg.backoff(attempt));
+            }
+        }
+    }
+}
 
 /// One queued outbound migration.
 #[derive(Debug)]
@@ -34,19 +89,42 @@ pub struct AsyncCommunicator {
 }
 
 impl AsyncCommunicator {
-    /// Start the communicator thread for worker `id`.
+    /// Start the communicator thread for worker `id` with the default
+    /// transient-failure retry policy.
     pub fn start(id: usize, fabric: Arc<Fabric>, peers: Vec<Sender<Message>>) -> Self {
+        Self::start_with_retry(id, fabric, peers, RetryCfg::default())
+    }
+
+    /// Start with an explicit transient-failure retry policy.
+    pub fn start_with_retry(
+        id: usize,
+        fabric: Arc<Fabric>,
+        peers: Vec<Sender<Message>>,
+        retry: RetryCfg,
+    ) -> Self {
         let (tx, rx): (Sender<Outbound>, Receiver<Outbound>) = channel();
         let worker = std::thread::Builder::new()
             .name(format!("asyncomm-{id}"))
             .spawn(move || {
                 let mut sent = 0usize;
                 while let Ok(out) = rx.recv() {
+                    let Outbound { to, tag, bytes } = out;
                     // pacing happens here, off the compute thread
-                    fabric.transmit(id, out.to, out.bytes.len());
-                    let _ = peers[out.to]
-                        .send(Message { from: id, tag: out.tag, bytes: out.bytes });
-                    sent += 1;
+                    fabric.transmit(id, to, bytes.len());
+                    // the hand-off is retried with backoff; a peer that
+                    // stays gone past max_attempts drops the message, which
+                    // keeps it out of the delivered count below
+                    let mut pending = Some(Message { from: id, tag, bytes });
+                    let delivered = with_retry(&retry, || {
+                        match peers[to].send(pending.take().expect("pending message")) {
+                            Ok(()) => Ok(()),
+                            Err(back) => {
+                                pending = Some(back.0);
+                                Err(())
+                            }
+                        }
+                    });
+                    sent += usize::from(delivered.is_ok());
                 }
                 sent
             })
@@ -127,5 +205,67 @@ mod tests {
             }
         });
         assert_eq!(out[1], (0..10).collect::<Vec<u8>>());
+    }
+
+    #[test]
+    fn backoff_doubles_then_caps() {
+        let cfg = RetryCfg {
+            max_attempts: 8,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(8),
+        };
+        let ms: Vec<u128> = (1..=6).map(|a| cfg.backoff(a).as_millis()).collect();
+        assert_eq!(ms, vec![1, 2, 4, 8, 8, 8]);
+    }
+
+    #[test]
+    fn retry_recovers_from_transient_failures() {
+        let cfg = RetryCfg { base_backoff: Duration::from_micros(10), ..Default::default() };
+        let mut calls = 0u32;
+        let out: Result<u32, &str> = with_retry(&cfg, || {
+            calls += 1;
+            if calls < 3 {
+                Err("transient")
+            } else {
+                Ok(99)
+            }
+        });
+        assert_eq!(out, Ok(99));
+        assert_eq!(calls, 3, "two transient failures then the success");
+    }
+
+    #[test]
+    fn retry_gives_up_after_max_attempts() {
+        let cfg = RetryCfg {
+            max_attempts: 3,
+            base_backoff: Duration::from_micros(10),
+            max_backoff: Duration::from_micros(10),
+        };
+        let mut calls = 0u32;
+        let out: Result<(), &str> = with_retry(&cfg, || {
+            calls += 1;
+            Err("permanent")
+        });
+        assert_eq!(out, Err("permanent"));
+        assert_eq!(calls, 3, "the bound is total tries, not retries");
+    }
+
+    #[test]
+    fn dropped_peer_exhausts_retries_without_wedging() {
+        // peer 1's inbox receiver is gone before the send: every attempt
+        // fails, the bounded retry gives up, and finish() reports zero
+        // delivered instead of hanging or panicking the communicator thread
+        let fabric = Arc::new(Fabric::new(presets::dcs_x_gpus(2, 1, 1000.0, 1000.0), 100.0));
+        let (tx_live, _rx_live) = channel::<Message>();
+        let (tx_dead, rx_dead) = channel::<Message>();
+        drop(rx_dead);
+        let cfg = RetryCfg {
+            max_attempts: 3,
+            base_backoff: Duration::from_micros(100),
+            max_backoff: Duration::from_millis(1),
+        };
+        let comm = AsyncCommunicator::start_with_retry(0, fabric, vec![tx_live, tx_dead], cfg);
+        comm.enqueue(Outbound { to: 1, tag: 9, bytes: vec![0u8; 64] });
+        assert_eq!(comm.finish(), 0, "a send to a departed peer must not count as delivered");
     }
 }

@@ -103,6 +103,23 @@ mod tests {
     }
 
     #[test]
+    fn sleep_until_past_deadline_returns_immediately() {
+        // the timeout path: an already-expired slot end must not sleep
+        let t0 = Instant::now();
+        sleep_until(t0 - Duration::from_millis(10));
+        assert!(t0.elapsed().as_secs_f64() < 0.05, "slept on an expired deadline");
+    }
+
+    #[test]
+    fn reserve_queues_fifo_slots_under_back_pressure() {
+        let link = Link::new(1e8, Duration::ZERO); // 100 MB/s
+        let first = link.reserve(1_000_000); // 10 ms slot
+        let second = link.reserve(1_000_000);
+        let gap = second.duration_since(first).as_secs_f64();
+        assert!(gap >= 0.009, "second slot must queue behind the first, gap {gap}s");
+    }
+
+    #[test]
     fn multi_link_takes_slowest() {
         let fast = Link::new(1e9, Duration::ZERO);
         let slow = Link::new(1e8, Duration::ZERO);

@@ -62,6 +62,8 @@ fn run() -> Result<()> {
                    plan        --cluster S|M|L --data-mb D --expert-mb E [--cr CR] [--joint]\n\
                                (--joint searches the 4D PP × TP × EP × DP grid)\n\
                                [--joint-sim]  (memoized simulation-backed search)\n\
+                               [--replicas R]  (risk-aware hot-standby scan up to r = R,\n\
+                               expected makespan under the MTBF failure prior)\n\
                    topo        --gpus G --s-ed S\n\
                    simulate    --cluster S|M|L --data-mb D --expert-mb E --system NAME\n\
                                [--tp T --dp R] [--pp P --microbatches M] [--no-overlap]\n\
@@ -72,9 +74,12 @@ fn run() -> Result<()> {
                                [--epsilon 0.05]  (approx: certified payload band)\n\
                                [--failures N]  (inject an N-event random failure trace\n\
                                per scenario, seeded from the scenario seed)\n\
+                               [--detector P,B]  (heartbeat monitoring per scenario:\n\
+                               period P seconds, suspect after B missed beats)\n\
                    train       --profile test|small|large --steps N [--compression ws|wos --cr CR]\n\
                    experiments --exp fig2b|fig12|table5|fig13|table6|fig16|table7|fig17|\n\
-                               perlayer|straggler|replan|tedjoint|ppoverlap|failure|all\n\
+                               perlayer|straggler|replan|tedjoint|ppoverlap|failure|\n\
+                               detection|all\n\
                                [--threads N]\n\
                                [--per-dc 1,4,8]  (fig17: folded dense rows at N GPUs/DC)\n\
                    bench-all   [--quick] [--only fig17,hotpath]  (runs cargo bench per target,\n\
@@ -121,6 +126,32 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
     t.print();
     println!("predicted per-layer latency: {}", hybrid_ep::util::fmt_secs(plan.predicted_latency));
+    // --replicas R: risk-aware hot-standby scan (expected makespan under the
+    // default MTBF prior), choosing the replication degree r ∈ [1, R]
+    let replicas = args.usize_or("replicas", 0)?;
+    if replicas > 0 {
+        let risk = solver::RiskCfg { max_replicas: replicas, ..Default::default() };
+        let rp = solver::solve_replicated(&cluster, &w, &gpu, pe_tx, &risk)?;
+        let mut rt = Table::new(
+            "Risk-aware replication scan (expected makespan under the MTBF prior)",
+            &["r", "expected", "memory/GPU"],
+        );
+        for p in &rp.scan {
+            rt.row(vec![
+                p.r.to_string(),
+                hybrid_ep::util::fmt_secs(p.expected_secs),
+                hybrid_ep::util::fmt_bytes(p.memory_bytes_per_gpu),
+            ]);
+        }
+        rt.print();
+        println!(
+            "risk-aware pick: r = {} (expected {} over {} iterations{})",
+            rp.r,
+            hybrid_ep::util::fmt_secs(rp.expected_secs),
+            risk.horizon_iters,
+            if rp.replica.is_some() { ", ring placement armed" } else { "" }
+        );
+    }
     if args.bool("joint") {
         let mut jt = Table::new(
             "Joint PP × TP × EP × DP candidates (score = passes × layers × layer-latency \
@@ -253,7 +284,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    use hybrid_ep::netsim::sweep::{self, FailureSpec, SweepGrid, SweepMode};
+    use hybrid_ep::netsim::sweep::{self, DetectorSpec, FailureSpec, SweepGrid, SweepMode};
     use hybrid_ep::netsim::RateMode;
     let threads = args.usize_or("threads", sweep::default_threads())?;
     if threads == 0 {
@@ -293,6 +324,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let fail_events = args.usize_or("failures", 0)?;
     if fail_events > 0 {
         grid.failures = vec![FailureSpec::Random { events: fail_events }];
+    }
+    // --detector P,B arms heartbeat monitoring per scenario (period P
+    // seconds, suspicion after B missed beats); observer verdicts are
+    // summarized after the sweep. Absent = off, keeping grids bit-stable.
+    if let Some(spec) = args.get("detector") {
+        let (p, b) = spec.split_once(',').with_context(|| {
+            format!("--detector expects `period,beats` (e.g. 0.25,3), got {spec:?}")
+        })?;
+        let period: f64 = p.trim().parse().with_context(|| format!("bad period {p:?}"))?;
+        let beats: usize = b.trim().parse().with_context(|| format!("bad beats {b:?}"))?;
+        grid.detectors = vec![DetectorSpec::On { period_secs: period, timeout_beats: beats }];
     }
     grid.replan_iters = args.usize_or("iters", 8)?;
     let mode = args.get_or("mode", "aggregate");
@@ -371,6 +413,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 "failure traces: {fail_events} events per scenario, {} lost across all runs",
                 hybrid_ep::util::fmt_bytes(lost)
             );
+        }
+        if args.get("detector").is_some() {
+            let mut raised = 0usize;
+            let mut cleared = 0usize;
+            for o in &outcomes {
+                for d in o.ep.detections.iter().chain(&o.hybrid.detections) {
+                    raised += 1;
+                    cleared += usize::from(d.is_false());
+                }
+            }
+            println!("detector: {raised} suspicions raised, {cleared} cleared (false)");
         }
     }
     Ok(())
@@ -453,12 +506,16 @@ fn cmd_experiments(args: &Args) -> Result<()> {
     if all || which == "failure" {
         exp::fig_failure().0.print();
     }
+    if all || which == "detection" {
+        exp::fig_detection().0.print();
+    }
     Ok(())
 }
 
 /// Every bench target, in deterministic order. Kept in sync with the
 /// `[[bench]]` sections of `Cargo.toml` (and EXPERIMENTS.md).
 const BENCH_TARGETS: &[&str] = &[
+    "detection_failover",
     "failure_recovery",
     "fig11_latency_verification",
     "fig12_modeling_verification",

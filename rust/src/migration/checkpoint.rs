@@ -68,6 +68,17 @@ impl CheckpointCfg {
         l * (frame / self.store_bytes_per_sec + frame / bw + self.codec.decode_secs(pe_bytes))
     }
 
+    /// Seconds of *foreground* stall to lazily re-host `lost` experts onto a
+    /// surviving hot replica (the `ReplicaFailover` recovery path). The
+    /// replica already holds live weights, so failover itself only re-routes
+    /// tokens; redundancy repair decodes the lost experts' frames from the
+    /// SR-coded shared expert every DC keeps resident — a decode-only stall,
+    /// no store read, no cross-DC wire transfer, no rollback. Strictly below
+    /// [`restore_secs`](Self::restore_secs) for any `lost > 0`.
+    pub fn lazy_rehost_secs(&self, lost: usize, pe_bytes: f64) -> f64 {
+        lost as f64 * self.codec.decode_secs(pe_bytes)
+    }
+
     /// Average per-iteration overhead of the checkpoint policy itself.
     pub fn amortized_secs_per_iter(&self, experts: usize, pe_bytes: f64) -> f64 {
         self.checkpoint_secs(experts, pe_bytes) / self.interval_iters.max(1) as f64
@@ -181,6 +192,35 @@ mod tests {
         // a straggler override on the survivors slows the restore
         let slow = c.clone().with_override(0, 1, presets::gbps(1.0));
         assert!(cfg.restore_secs(&slow, 1, pe) > got, "override ignored by restore pricing");
+    }
+
+    #[test]
+    fn lazy_rehost_is_strictly_cheaper_than_a_full_restore() {
+        testkit::check("ckpt-lazy-rehost", 60, |g| {
+            let c = presets::dcs_x_gpus(g.usize_in(2, 8), g.usize_in(1, 4), 10.0, 128.0);
+            let cfg = CheckpointCfg {
+                interval_iters: g.usize_in(1, 200),
+                codec: MigrationCfg {
+                    compression_ratio: 1.0 + g.rng.f64() * 99.0,
+                    codec_bytes_per_sec: 1e9 + g.rng.f64() * 1e12,
+                    fused: g.rng.below(2) == 0,
+                },
+                store_bytes_per_sec: 1e8 + g.rng.f64() * 1e10,
+            };
+            let pe = 1e6 + g.rng.f64() * 1e10;
+            prop_assert!(cfg.lazy_rehost_secs(0, pe) == 0.0, "nothing lost must be free");
+            for lost in 1..g.usize_in(2, 10) {
+                let lazy = cfg.lazy_rehost_secs(lost, pe);
+                let full = cfg.restore_secs(&c, lost, pe);
+                prop_assert!(lazy > 0.0 && lazy.is_finite(), "lazy_rehost({lost}) = {lazy}");
+                prop_assert!(
+                    lazy < full,
+                    "decode-only failover must undercut restore at lost={lost}: \
+                     {lazy} vs {full}"
+                );
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -546,10 +546,169 @@ pub fn solve_joint_simulated(
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// Risk-aware planning: expected makespan under a failure-rate prior
+// ---------------------------------------------------------------------------
+
+/// Failure-rate prior for risk-aware planning: mean time between failures of
+/// one DC and of one level-0 uplink, in seconds. Losses are assumed
+/// independent and memoryless, so the cluster-wide loss rate is
+/// `dcs · (1/dc + 1/link)` — every DC can die outright or drop off the
+/// cluster with its uplink, and both look identical to the recovery layer.
+#[derive(Clone, Copy, Debug)]
+pub struct FailurePrior {
+    /// MTBF of one DC (power, cooling, fabric), seconds.
+    pub dc_mtbf_secs: f64,
+    /// MTBF of one level-0 uplink, seconds.
+    pub link_mtbf_secs: f64,
+}
+
+impl Default for FailurePrior {
+    fn default() -> Self {
+        // 30-day DC MTBF, 7-day WAN-uplink MTBF: conservative figures for
+        // leased cross-DC capacity (uplinks fail an order of magnitude more
+        // often than the facility behind them)
+        Self { dc_mtbf_secs: 30.0 * 86_400.0, link_mtbf_secs: 7.0 * 86_400.0 }
+    }
+}
+
+impl FailurePrior {
+    /// Cluster-wide loss events per second: any of `dcs` containers lost to
+    /// a DC failure or to its uplink failing.
+    pub fn loss_rate(&self, dcs: usize) -> f64 {
+        dcs as f64 * (1.0 / self.dc_mtbf_secs + 1.0 / self.link_mtbf_secs)
+    }
+}
+
+/// Knobs of the risk-aware replication solver.
+#[derive(Clone, Debug)]
+pub struct RiskCfg {
+    pub prior: FailurePrior,
+    /// Iterations the plan is expected to run — the horizon replication
+    /// overhead amortizes against.
+    pub horizon_iters: usize,
+    /// Checkpoint/restore pricing shared with the recovery layer (rollback
+    /// redo, lazy re-host, amortized checkpoint tax).
+    pub checkpoint: crate::migration::checkpoint::CheckpointCfg,
+    /// Largest replication degree considered (clamped to the DC count — a
+    /// ring cannot place more distinct copies than there are DCs).
+    pub max_replicas: usize,
+    /// Worst-case detection stall (`timeout + period`) paid before any
+    /// recovery action can start.
+    pub detect_stall_secs: f64,
+}
+
+impl Default for RiskCfg {
+    fn default() -> Self {
+        Self {
+            prior: FailurePrior::default(),
+            horizon_iters: 10_000,
+            checkpoint: crate::migration::checkpoint::CheckpointCfg::default(),
+            max_replicas: 3,
+            detect_stall_secs: 1.0,
+        }
+    }
+}
+
+/// One scanned replication degree and its expected makespan.
+#[derive(Clone, Debug)]
+pub struct RiskPoint {
+    pub r: usize,
+    /// Expected horizon wall-clock: fault-free iterations + coherence tax +
+    /// `E[losses] ·` per-loss recovery cost.
+    pub expected_secs: f64,
+    /// Steady-state replica memory per GPU (`r · shard_bytes`).
+    pub memory_bytes_per_gpu: f64,
+}
+
+/// The risk-aware optimum: the replication degree (and ring placement)
+/// minimizing expected makespan under the failure prior.
+#[derive(Clone, Debug)]
+pub struct RiskAwarePlan {
+    pub r: usize,
+    /// Ring placement for the chosen degree (`None` at `r = 1` — nothing is
+    /// replicated, recovery falls back to checkpoint restore + rollback).
+    pub replica: Option<crate::plan::replica::ReplicaPlan>,
+    pub expected_secs: f64,
+    /// The full scan, one point per candidate `r` (ascending).
+    pub scan: Vec<RiskPoint>,
+}
+
+/// Choose the hot-standby replication degree `r` by **expected makespan**
+/// under [`FailurePrior`]: each candidate `r` pays the SR-coded coherence
+/// ring every iteration and, per expected loss event, either a decode-only
+/// lazy re-host (`r ≥ 2` — a surviving replica covers any single loss, no
+/// rollback) or a full checkpoint restore plus the expected half-interval
+/// rollback redo (`r = 1`). The fault-free iteration is priced by the
+/// stream model ([`plan_multilevel`] on the physical cluster), so the
+/// trade is: replication tax × horizon vs loss rate × avoided recovery.
+pub fn solve_replicated(
+    cluster: &ClusterSpec,
+    w: &MoEWorkload,
+    gpu: &GpuSpec,
+    pe_tx_bytes: f64,
+    cfg: &RiskCfg,
+) -> Result<RiskAwarePlan> {
+    ensure!(cfg.horizon_iters >= 1, "risk horizon needs at least one iteration");
+    ensure!(cfg.max_replicas >= 1, "max_replicas must be at least 1");
+    ensure!(
+        cfg.prior.dc_mtbf_secs > 0.0 && cfg.prior.link_mtbf_secs > 0.0,
+        "failure prior MTBFs must be positive"
+    );
+    let dcs = cluster.levels[0].fanout;
+    let gpus_per_dc: usize = cluster.levels[1..].iter().map(|l| l.fanout).product();
+    let pe = w.pe_bytes();
+    let lost_experts = gpus_per_dc.max(1) * w.experts_per_gpu;
+    let passes = if w.backward { 2.0 } else { 1.0 };
+    let plan = plan_multilevel(cluster, &w.plan_input(gpu, cluster.total_gpus(), pe_tx_bytes))?;
+    let t_base = passes * w.moe_layers as f64 * plan.predicted_latency
+        + cfg.checkpoint.amortized_secs_per_iter(cluster.total_gpus() * w.experts_per_gpu, pe);
+    let rate = cfg.prior.loss_rate(dcs);
+    let interval = cfg.checkpoint.interval_iters.max(1) as f64;
+
+    let mut scan = Vec::new();
+    let mut best: Option<(usize, f64)> = None;
+    for r in 1..=cfg.max_replicas.min(dcs) {
+        let rp = crate::plan::replica::ReplicaPlan::place(cluster, w, r)?;
+        // the coherence ring ships SR residual frames (see plan::replanner)
+        let coherence = rp.coherence_bytes_per_gpu()
+            / cfg.checkpoint.codec.compression_ratio
+            / cluster.min_bandwidth_at(0);
+        let t_iter = t_base + coherence;
+        let span = cfg.horizon_iters as f64 * t_iter;
+        // any *single* DC loss is covered by a ring replica when r ≥ 2: the
+        // copies sit on distinct DCs by construction
+        let recover = if r >= 2 {
+            cfg.checkpoint.lazy_rehost_secs(lost_experts, pe)
+        } else {
+            cfg.checkpoint.restore_secs(cluster, lost_experts, pe) + 0.5 * interval * t_iter
+        };
+        let per_loss = cfg.detect_stall_secs + recover;
+        let expected = span + rate * span * per_loss;
+        scan.push(RiskPoint {
+            r,
+            expected_secs: expected,
+            memory_bytes_per_gpu: rp.memory_bytes_per_gpu(),
+        });
+        // ties prefer the smaller degree (less memory, smaller ring)
+        if best.map_or(true, |(_, b)| expected < b) {
+            best = Some((r, expected));
+        }
+    }
+    let (r, expected_secs) = best.expect("max_replicas >= 1 yields a candidate");
+    let replica = if r >= 2 {
+        Some(crate::plan::replica::ReplicaPlan::place(cluster, w, r)?)
+    } else {
+        None
+    };
+    Ok(RiskAwarePlan { r, replica, expected_secs, scan })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cluster::presets;
+    use crate::migration::checkpoint::CheckpointCfg;
     use crate::prop_assert;
     use crate::testkit;
 
@@ -1100,6 +1259,94 @@ mod tests {
         assert!(best.config.is_identity(), "only the identity factors an overridden cluster");
         assert_eq!(best.stats.points, 3, "non-identity configs must drop out, not error");
         assert!(best.secs.is_finite() && best.secs > 0.0);
+    }
+
+    /// Risk-aware replication: a hot-failure regime (hours-scale MTBF on a
+    /// starved uplink) must open r ≥ 2 — the coherence tax is dwarfed by the
+    /// avoided rollback redo — while a near-zero failure rate keeps r = 1
+    /// (replication is pure overhead with nothing to recover from).
+    #[test]
+    fn risk_aware_replication_tracks_the_failure_prior() {
+        let cluster = presets::dcs_x_gpus(4, 2, 1.0, 128.0);
+        // raw expert transfers (pe_tx uncompressed) on a 1 Gbps uplink pin
+        // the fault-free iteration in the ≥ 10 ms range, so the avoided
+        // half-interval rollback dwarfs the SR-coded coherence ring
+        let w = MoEWorkload {
+            tokens_per_gpu: 4096,
+            hidden: 256,
+            ffn: 2048,
+            experts_per_gpu: 1,
+            k: 1,
+            moe_layers: 2,
+            pre_blocks: 1,
+            backward: false,
+        };
+        let gpu = GpuSpec::a800();
+        let pe_tx = w.pe_bytes();
+
+        let hot = RiskCfg {
+            // chaos-regime prior (losses every few minutes) with a long
+            // checkpoint interval: rollback redo is the dominant loss cost
+            prior: FailurePrior { dc_mtbf_secs: 60.0, link_mtbf_secs: 60.0 },
+            checkpoint: CheckpointCfg { interval_iters: 1000, ..CheckpointCfg::default() },
+            ..RiskCfg::default()
+        };
+        let risky = solve_replicated(&cluster, &w, &gpu, pe_tx, &hot).unwrap();
+        assert!(risky.r >= 2, "hours-scale MTBF must buy replicas, got r = {}", risky.r);
+        let rp = risky.replica.as_ref().expect("r >= 2 carries a placement");
+        assert_eq!(rp.r, risky.r);
+
+        let calm = RiskCfg {
+            prior: FailurePrior { dc_mtbf_secs: 1e15, link_mtbf_secs: 1e15 },
+            ..RiskCfg::default()
+        };
+        let safe = solve_replicated(&cluster, &w, &gpu, pe_tx, &calm).unwrap();
+        assert_eq!(safe.r, 1, "a failure-free prior must not pay for replicas");
+        assert!(safe.replica.is_none());
+        assert!(safe.expected_secs < risky.expected_secs, "risk must cost");
+
+        // the scan is complete, ascending in r, and the pick is its argmin
+        for plan in [&risky, &safe] {
+            assert_eq!(plan.scan.len(), 3, "max_replicas 3 on 4 DCs scans r = 1..=3");
+            for (i, pt) in plan.scan.iter().enumerate() {
+                assert_eq!(pt.r, i + 1);
+                assert!(pt.expected_secs.is_finite() && pt.expected_secs > 0.0);
+                assert!(pt.expected_secs >= plan.expected_secs, "scan beats the pick");
+                assert!(pt.memory_bytes_per_gpu >= pt.r as f64 * 0.9 * w.pe_bytes());
+            }
+        }
+
+        // degenerate priors and horizons are descriptive errors
+        let bad = RiskCfg { horizon_iters: 0, ..RiskCfg::default() };
+        let err = solve_replicated(&cluster, &w, &gpu, pe_tx, &bad).unwrap_err().to_string();
+        assert!(err.contains("horizon"), "unexpected error: {err}");
+        let bad = RiskCfg {
+            prior: FailurePrior { dc_mtbf_secs: 0.0, link_mtbf_secs: 1.0 },
+            ..RiskCfg::default()
+        };
+        assert!(solve_replicated(&cluster, &w, &gpu, pe_tx, &bad).is_err());
+    }
+
+    /// The ring cannot place more distinct copies than there are DCs:
+    /// `max_replicas` is clamped, never an error.
+    #[test]
+    fn risk_scan_clamps_replicas_to_the_dc_count() {
+        let cluster = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let w = MoEWorkload {
+            tokens_per_gpu: 256,
+            hidden: 64,
+            ffn: 128,
+            experts_per_gpu: 1,
+            k: 1,
+            moe_layers: 1,
+            pre_blocks: 1,
+            backward: false,
+        };
+        let cfg = RiskCfg { max_replicas: 8, ..RiskCfg::default() };
+        let plan =
+            solve_replicated(&cluster, &w, &GpuSpec::a800(), w.pe_bytes(), &cfg).unwrap();
+        assert_eq!(plan.scan.len(), 2, "two DCs cap the scan at r = 2");
+        assert!(plan.r <= 2);
     }
 
     #[test]

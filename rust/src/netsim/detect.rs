@@ -1,0 +1,521 @@
+//! Heartbeat/timeout failure detection modeled *inside* the simulation.
+//!
+//! PR 8's fault layer is an oracle: `plan::replanner::elastic` starts
+//! recovery the instant a [`FailureEvent`] fires. Real cross-DC training
+//! pays a **detection latency** first — and the heartbeats that measure it
+//! ride the *same* constrained uplinks as the data, so congestion delays
+//! them and a degraded (but alive) uplink can look exactly like a dead one.
+//! This module closes that gap:
+//!
+//! * [`Heartbeats::inject`] plants one heartbeat stream per DC into a task
+//!   DAG: a pacing chain of `period_secs` timer tasks releases one tiny
+//!   [`Tag::Other`] transfer per period from the DC's first GPU to an
+//!   observer GPU in the next DC. The timers live on **ghost GPUs** past the
+//!   cluster (one per stream, see `ghost_gpu_span` in [`sim`](super::sim)),
+//!   so the clock never contends with workload compute — but the beats
+//!   themselves are ordinary flows through the level-0 uplinks, sharing
+//!   max-min bandwidth with (and being delayed by) everything else.
+//! * [`Heartbeats::analyze`] replays the observer's timeout logic over the
+//!   simulated per-beat arrival times: a [`Detection`] fires when
+//!   `timeout_beats × period_secs` passes without a beat. A later arrival
+//!   **clears** the suspicion ([`Detection::is_false`]) — which is exactly
+//!   what a [`FaultKind::SlowNode`] degradation or a recoverable outage
+//!   produces — while permanently killed streams stay suspected for good.
+//! * [`measure`] + [`shifted_recovery`] connect detection to recovery:
+//!   repair in fault-timeline-driven runs starts at *detection* time, not
+//!   oracle event time, so every `recover_at` slips by the measured latency.
+//!
+//! Detection latency obeys `0 ≤ latency ≤ timeout + period + queueing`: the
+//! last pre-fault beat arrived at most one period plus its (congestion-
+//! dependent) traversal time before the fault, and the observer waits the
+//! full timeout from that arrival. Fault-free, consecutive arrivals are
+//! spaced by exactly the heartbeat period (both pinned by the property
+//! tests below).
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::ClusterSpec;
+
+use super::dag::{Dag, Tag, TaskId};
+use super::faults::{FailureEvent, FailureTrace, FaultKind};
+use super::sim::{SimResult, Simulator};
+
+/// Suspicion-window slack for float comparisons (seconds).
+const EPS: f64 = 1e-9;
+
+/// Failure-detector parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DetectorCfg {
+    /// Heartbeat send period (seconds).
+    pub period_secs: f64,
+    /// Missed beats before the observer suspects the sender; the suspicion
+    /// timeout is `timeout_beats × period_secs` after the last arrival.
+    pub timeout_beats: usize,
+    /// Heartbeat payload (bytes). Tiny relative to the workload, but real:
+    /// beats share uplink bandwidth, so congestion stretches their gaps.
+    pub beat_bytes: f64,
+}
+
+impl Default for DetectorCfg {
+    fn default() -> Self {
+        Self { period_secs: 0.25, timeout_beats: 3, beat_bytes: 1e3 }
+    }
+}
+
+impl DetectorCfg {
+    /// Observer timeout after the last heard beat (seconds).
+    pub fn timeout_secs(&self) -> f64 {
+        self.timeout_beats as f64 * self.period_secs
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.period_secs.is_finite() && self.period_secs > 0.0,
+            "detector period {} must be finite and positive",
+            self.period_secs
+        );
+        ensure!(self.timeout_beats >= 1, "detector timeout must be at least one missed beat");
+        ensure!(
+            self.beat_bytes.is_finite() && self.beat_bytes > 0.0,
+            "heartbeat payload {} must be finite and positive",
+            self.beat_bytes
+        );
+        Ok(())
+    }
+}
+
+/// One observer verdict: `observer` stopped hearing `monitored`'s beats.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Detection {
+    /// GPU whose heartbeat stream went silent.
+    pub monitored: usize,
+    /// GPU that timed the stream out.
+    pub observer: usize,
+    /// Simulated time the timeout expired (`last_heard + timeout_secs`).
+    pub suspected_at: f64,
+    /// Arrival time of the last beat heard before the suspicion (the
+    /// expected first-arrival time if nothing was ever heard).
+    pub last_heard: f64,
+    /// A later beat arrived at this time, clearing the suspicion — a
+    /// **false** suspicion (slow node, congestion, or a recovered outage).
+    /// `None` = the stream never resumed: a confirmed detection.
+    pub cleared_at: Option<f64>,
+}
+
+impl Detection {
+    /// Whether the suspicion was later cleared by a resumed beat stream.
+    pub fn is_false(&self) -> bool {
+        self.cleared_at.is_some()
+    }
+}
+
+/// One monitored heartbeat stream: beats from `monitored`'s DC uplink to an
+/// `observer` GPU in the next DC.
+#[derive(Clone, Debug)]
+pub struct HeartbeatStream {
+    pub monitored: usize,
+    pub observer: usize,
+    /// Beat transfer task ids, in send order (beat `k` is sent at
+    /// `(k + 1) × period_secs` by its ghost-GPU pacing chain).
+    pub beats: Vec<TaskId>,
+}
+
+/// Heartbeat instrumentation planted into a task DAG by [`inject`](Self::inject).
+#[derive(Clone, Debug)]
+pub struct Heartbeats {
+    pub cfg: DetectorCfg,
+    pub streams: Vec<HeartbeatStream>,
+    dcs: usize,
+    per_dc: usize,
+}
+
+impl Heartbeats {
+    /// Plant one heartbeat stream per DC into `dag`, pacing
+    /// `⌊horizon / period⌋` beats per stream. Stream `d` monitors DC `d`'s
+    /// first GPU from the first GPU of DC `(d + 1) mod dcs`, so every beat
+    /// crosses the level-0 uplink; the pacing chain computes on ghost GPU
+    /// `total_gpus + d` and steals no workload GPU time.
+    pub fn inject(
+        dag: &mut Dag,
+        cluster: &ClusterSpec,
+        cfg: &DetectorCfg,
+        horizon: f64,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        ensure!(horizon.is_finite() && horizon > 0.0, "heartbeat horizon must be positive");
+        let dcs = cluster.levels[0].fanout;
+        ensure!(dcs >= 2, "heartbeat monitoring needs at least two DCs");
+        let per_dc = cluster.total_gpus() / dcs;
+        let n_beats = (horizon / cfg.period_secs).floor() as usize;
+        ensure!(
+            n_beats >= cfg.timeout_beats + 1,
+            "horizon {horizon} too short for {} beats of {} s",
+            cfg.timeout_beats + 1,
+            cfg.period_secs
+        );
+        let mut streams = Vec::with_capacity(dcs);
+        for d in 0..dcs {
+            let monitored = d * per_dc;
+            let observer = ((d + 1) % dcs) * per_dc;
+            let ghost = cluster.total_gpus() + d;
+            let mut beats = Vec::with_capacity(n_beats);
+            let mut prev: Option<TaskId> = None;
+            for _ in 0..n_beats {
+                let deps = prev.map_or_else(Vec::new, |p| vec![p]);
+                let timer = dag.compute(ghost, cfg.period_secs, deps, "hb_timer");
+                beats.push(dag.transfer(
+                    monitored,
+                    observer,
+                    cfg.beat_bytes,
+                    Tag::Other,
+                    vec![timer],
+                    "heartbeat",
+                ));
+                prev = Some(timer);
+            }
+            streams.push(HeartbeatStream { monitored, observer, beats });
+        }
+        Ok(Self { cfg: *cfg, streams, dcs, per_dc })
+    }
+
+    /// Total heartbeat payload injected (bytes) — the detector's bandwidth
+    /// overhead, the bound detector-on fault-free runs are held to.
+    pub fn overhead_bytes(&self) -> f64 {
+        self.streams.iter().map(|s| s.beats.len() as f64 * self.cfg.beat_bytes).sum()
+    }
+
+    /// The simulated time a permanent fault killed `stream`'s beat path, if
+    /// any: the earliest permanent event covering either endpoint DC's
+    /// level-0 uplink. Beats finishing at or after this instant were killed
+    /// or abandoned by the engine, not delivered (the engine completes them
+    /// so dependents proceed, charging their payload to `bytes_lost`).
+    fn dead_at(&self, stream: &HeartbeatStream, trace: Option<&FailureTrace>) -> Option<f64> {
+        let (src_dc, dst_dc) = (stream.monitored / self.per_dc, stream.observer / self.per_dc);
+        let covers = |e: &FailureEvent| match e.kind {
+            FaultKind::DcLoss { dc } => dc == src_dc || dc == dst_dc,
+            FaultKind::LinkLoss { level: 0, container } => {
+                container == src_dc || container == dst_dc
+            }
+            _ => false,
+        };
+        trace?
+            .events
+            .iter()
+            .filter(|e| e.is_permanent() && covers(e))
+            .map(|e| e.at)
+            .min_by(f64::total_cmp)
+    }
+
+    /// Per-stream delivered-beat arrival times (ascending). A beat counts as
+    /// delivered only if it finished strictly before the stream's beat path
+    /// was permanently killed (see [`dead_at`](Self::dead_at)); stalled beats
+    /// that resume after a recoverable outage deliver late and do count.
+    pub fn delivered_arrivals(
+        &self,
+        result: &SimResult,
+        trace: Option<&FailureTrace>,
+    ) -> Vec<Vec<f64>> {
+        self.streams
+            .iter()
+            .map(|s| {
+                let dead = self.dead_at(s, trace);
+                let mut arr: Vec<f64> = s
+                    .beats
+                    .iter()
+                    .map(|&b| result.finish[b])
+                    .filter(|&t| dead.map_or(true, |d| t + EPS < d))
+                    .collect();
+                arr.sort_by(f64::total_cmp);
+                arr
+            })
+            .collect()
+    }
+
+    /// Replay every observer's timeout logic over the simulated arrivals.
+    /// One [`Detection`] per gap exceeding the timeout; a following arrival
+    /// marks it false, silence to the end of the stream leaves it confirmed.
+    pub fn analyze(&self, result: &SimResult, trace: Option<&FailureTrace>) -> Vec<Detection> {
+        let timeout = self.cfg.timeout_secs();
+        let mut out = Vec::new();
+        for (s, arrivals) in self.streams.iter().zip(self.delivered_arrivals(result, trace)) {
+            let dead = self.dead_at(s, trace);
+            let lost_tail = arrivals.len() < s.beats.len();
+            if arrivals.is_empty() {
+                if dead.is_some() || lost_tail {
+                    // never heard at all: the clock starts at the expected
+                    // first arrival (one period after t = 0)
+                    let expected = self.cfg.period_secs;
+                    out.push(Detection {
+                        monitored: s.monitored,
+                        observer: s.observer,
+                        suspected_at: expected + timeout,
+                        last_heard: expected,
+                        cleared_at: None,
+                    });
+                }
+                continue;
+            }
+            for w in arrivals.windows(2) {
+                if w[1] - w[0] > timeout + EPS {
+                    out.push(Detection {
+                        monitored: s.monitored,
+                        observer: s.observer,
+                        suspected_at: w[0] + timeout,
+                        last_heard: w[0],
+                        cleared_at: Some(w[1]),
+                    });
+                }
+            }
+            if lost_tail {
+                let last = *arrivals.last().expect("non-empty arrivals");
+                out.push(Detection {
+                    monitored: s.monitored,
+                    observer: s.observer,
+                    suspected_at: last + timeout,
+                    last_heard: last,
+                    cleared_at: None,
+                });
+            }
+        }
+        out.sort_by(|a, b| {
+            a.suspected_at.total_cmp(&b.suspected_at).then(a.monitored.cmp(&b.monitored))
+        });
+        out
+    }
+
+    /// [`analyze`](Self::analyze) and surface the verdicts on the result
+    /// ([`SimResult::detections`]).
+    pub fn attach(&self, result: &mut SimResult, trace: Option<&FailureTrace>) {
+        result.detections = self.analyze(result, trace);
+    }
+
+    /// Number of monitored DCs.
+    pub fn dcs(&self) -> usize {
+        self.dcs
+    }
+}
+
+/// Simulate a heartbeat-only probe run over `trace` on `cluster` and return
+/// the observer verdicts. This is how fault-timeline consumers (elastic
+/// recovery, `fig_detection`) obtain detection latencies without an oracle:
+/// the beats genuinely traverse the faulted uplinks.
+pub fn measure(
+    cluster: &ClusterSpec,
+    cfg: &DetectorCfg,
+    trace: &FailureTrace,
+    horizon: f64,
+) -> Result<Vec<Detection>> {
+    let mut dag = Dag::new();
+    let hb = Heartbeats::inject(&mut dag, cluster, cfg, horizon)?;
+    let result = if trace.is_empty() {
+        Simulator::new(cluster).run(&dag)
+    } else {
+        trace.validate(cluster)?;
+        Simulator::new(cluster).with_faults(trace).run(&dag)
+    };
+    Ok(hb.analyze(&result, Some(trace)))
+}
+
+/// Latency from a fault onset `at` to the first suspicion raised at or after
+/// it (false suspicions count: the observer cannot tell them apart when it
+/// acts). `None` = nothing was ever suspected after `at`.
+pub fn detection_delay(detections: &[Detection], at: f64) -> Option<f64> {
+    detections
+        .iter()
+        .filter(|d| d.suspected_at + EPS >= at)
+        .map(|d| (d.suspected_at - at).max(0.0))
+        .min_by(f64::total_cmp)
+}
+
+/// Shift every recovery in `trace` later by `delay` seconds: repair starts
+/// at detection time, not oracle onset time, so the whole repair window
+/// slips by the detection latency. Onsets (and permanence) are untouched —
+/// the fault itself strikes when it strikes.
+pub fn shifted_recovery(trace: &FailureTrace, delay: f64) -> FailureTrace {
+    assert!(delay >= 0.0, "detection delay cannot be negative");
+    let mut shifted = trace.clone();
+    for e in &mut shifted.events {
+        if let Some(r) = e.recover_at.as_mut() {
+            *r += delay;
+        }
+    }
+    shifted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * (1.0 + b.abs())
+    }
+
+    fn cfg() -> DetectorCfg {
+        DetectorCfg { period_secs: 0.5, timeout_beats: 3, beat_bytes: 1e3 }
+    }
+
+    #[test]
+    fn fault_free_arrivals_are_exactly_the_heartbeat_gap_and_raise_no_suspicion() {
+        let cluster = presets::dcs_x_gpus(3, 2, 10.0, 128.0);
+        let cfg = cfg();
+        let mut dag = Dag::new();
+        let hb = Heartbeats::inject(&mut dag, &cluster, &cfg, 5.0).unwrap();
+        let r = Simulator::new(&cluster).run(&dag);
+        assert!(hb.analyze(&r, None).is_empty(), "fault-free run must raise no suspicion");
+        let arrivals = hb.delivered_arrivals(&r, None);
+        assert_eq!(arrivals.len(), 3);
+        for arr in &arrivals {
+            assert_eq!(arr.len(), 10, "⌊5.0 / 0.5⌋ beats per stream");
+            for w in arr.windows(2) {
+                assert!(
+                    close(w[1] - w[0], cfg.period_secs),
+                    "fault-free inter-arrival gap {} must equal the period {}",
+                    w[1] - w[0],
+                    cfg.period_secs
+                );
+            }
+        }
+        // detector-off run of the same cluster is untouched by this module:
+        // the engines always report an empty detections field
+        assert!(r.detections.is_empty());
+    }
+
+    #[test]
+    fn permanent_dc_loss_detected_within_timeout_plus_period_plus_queueing() {
+        let cluster = presets::dcs_x_gpus(3, 2, 10.0, 128.0);
+        let cfg = cfg();
+        // sweep the onset across beat phases: the bound must hold at any
+        // alignment of fault vs. heartbeat clock
+        for i in 0..20 {
+            let at = 1.0 + 0.17 * i as f64;
+            let trace = FailureTrace::empty().dc_loss(at, 1);
+            let dets = measure(&cluster, &cfg, &trace, at + 6.0).unwrap();
+            let lat = detection_delay(&dets, at)
+                .unwrap_or_else(|| panic!("DC loss at {at} never detected"));
+            // queueing on an idle uplink is just the beat traversal time,
+            // far below one period at these payloads
+            let bound = cfg.timeout_secs() + cfg.period_secs + cfg.period_secs;
+            assert!(
+                (0.0..=bound).contains(&lat),
+                "detection latency {lat} outside [0, {bound}] for onset {at}"
+            );
+            // the dead DC's own stream and the stream it observes both die
+            assert!(dets.iter().all(|d| d.cleared_at.is_none()));
+        }
+    }
+
+    #[test]
+    fn recoverable_outage_raises_false_suspicion_cleared_at_recovery() {
+        let cluster = presets::dcs_x_gpus(3, 2, 10.0, 128.0);
+        let cfg = cfg();
+        let trace = FailureTrace::empty().link_loss(2.0, 0, 1).recovering_at(5.0);
+        let mut dag = Dag::new();
+        let hb = Heartbeats::inject(&mut dag, &cluster, &cfg, 8.0).unwrap();
+        let r = Simulator::new(&cluster).with_faults(&trace).run(&dag);
+        let dets = hb.analyze(&r, Some(&trace));
+        assert!(!dets.is_empty(), "a 3 s outage must outlast the 1.5 s timeout");
+        for d in &dets {
+            assert!(d.is_false(), "stalled beats resume at recovery: suspicion must clear");
+            let cleared = d.cleared_at.unwrap();
+            assert!(
+                cleared >= 5.0 - 1e-9,
+                "cleared at {cleared}, before the 5.0 s recovery revision"
+            );
+            assert!(d.suspected_at >= 2.0, "suspected before the fault even struck");
+        }
+        // recoverable outages lose nothing: conservation with zero loss
+        assert_eq!(r.bytes_lost, 0.0);
+        assert!(close(r.bytes_delivered, r.bytes_injected));
+    }
+
+    #[test]
+    fn slow_node_false_suspicion_never_corrupts_conservation() {
+        // 8 Mbit/s uplinks and 1 MB beats: healthy traversal ≈ 1 s per beat
+        // (period 2 s), so a 0.05× degradation stretches the gap to ~20 s —
+        // well past the 4 s timeout — without killing anything
+        let cluster = presets::dcs_x_gpus(2, 2, 0.008, 128.0);
+        let cfg = DetectorCfg { period_secs: 2.0, timeout_beats: 2, beat_bytes: 1e6 };
+        let trace = FailureTrace::empty().slow_node(4.0, 0, 0, 0.05).recovering_at(30.0);
+        let mut dag = Dag::new();
+        let hb = Heartbeats::inject(&mut dag, &cluster, &cfg, 40.0).unwrap();
+        let r = Simulator::new(&cluster).with_faults(&trace).run(&dag);
+        let dets = hb.analyze(&r, Some(&trace));
+        assert!(
+            dets.iter().any(|d| d.monitored == 0 && d.is_false()),
+            "a 20× slowdown must trip the detector falsely: {dets:?}"
+        );
+        // a degraded-but-alive node delivers everything eventually
+        assert_eq!(r.bytes_lost, 0.0, "slow node lost bytes");
+        assert!(
+            close(r.bytes_delivered + r.bytes_lost, r.bytes_injected),
+            "conservation violated: {} + {} != {}",
+            r.bytes_delivered,
+            r.bytes_lost,
+            r.bytes_injected
+        );
+    }
+
+    #[test]
+    fn heartbeats_stay_within_overhead_bound_on_a_loaded_cluster() {
+        use crate::netsim::dag::dense_mixed_a2a;
+        let cluster = presets::dcs_x_gpus(3, 2, 10.0, 128.0);
+        let workload = dense_mixed_a2a(3, 2, 2e9, 1e6, 0.3, 7);
+        let off = Simulator::new(&cluster).run(&workload);
+        let mut with_hb = workload.clone();
+        let cfg = DetectorCfg::default();
+        let hb =
+            Heartbeats::inject(&mut with_hb, &cluster, &cfg, 0.5 * off.makespan).unwrap();
+        let on = Simulator::new(&cluster).run(&with_hb);
+        // fault-free: no suspicion despite sharing the loaded uplinks
+        assert!(hb.analyze(&on, None).is_empty());
+        // detector overhead is bounded by its injected bytes through the
+        // slowest uplink (tiny beats: well under 1% here)
+        let bound = hb.overhead_bytes() / cluster.min_bandwidth_at(0);
+        assert!(
+            on.makespan <= off.makespan + bound + 1e-9,
+            "heartbeat overhead {} exceeds byte bound {bound}",
+            on.makespan - off.makespan
+        );
+        assert!(close(on.bytes_injected, off.bytes_injected + hb.overhead_bytes()));
+    }
+
+    #[test]
+    fn shifted_recovery_moves_repairs_not_onsets() {
+        let trace = FailureTrace::empty()
+            .dc_loss(2.0, 1)
+            .link_loss(3.0, 0, 2)
+            .recovering_at(4.0)
+            .slow_node(5.0, 0, 0, 0.5)
+            .recovering_at(7.0);
+        let shifted = shifted_recovery(&trace, 1.25);
+        assert_eq!(shifted.events.len(), 3);
+        for (a, b) in trace.events.iter().zip(&shifted.events) {
+            assert_eq!(a.at, b.at, "onset moved");
+            assert_eq!(a.kind, b.kind);
+            match (a.recover_at, b.recover_at) {
+                (None, None) => {}
+                (Some(x), Some(y)) => assert!(close(y, x + 1.25)),
+                _ => panic!("permanence changed"),
+            }
+        }
+    }
+
+    #[test]
+    fn inject_rejects_degenerate_configs() {
+        let cluster = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        let mut dag = Dag::new();
+        let bad = DetectorCfg { period_secs: 0.0, ..DetectorCfg::default() };
+        assert!(Heartbeats::inject(&mut dag, &cluster, &bad, 5.0).is_err());
+        let bad = DetectorCfg { timeout_beats: 0, ..DetectorCfg::default() };
+        assert!(Heartbeats::inject(&mut dag, &cluster, &bad, 5.0).is_err());
+        // horizon shorter than timeout_beats + 1 periods cannot detect
+        let err = Heartbeats::inject(&mut dag, &cluster, &DetectorCfg::default(), 0.6)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("horizon"), "unexpected error: {err}");
+        // single-DC clusters have no cross-DC uplink to monitor
+        let flat = presets::dcs_x_gpus(1, 4, 10.0, 128.0);
+        assert!(Heartbeats::inject(&mut dag, &flat, &DetectorCfg::default(), 5.0).is_err());
+    }
+}

@@ -502,6 +502,51 @@ mod tests {
         assert!(!tl.is_dead(0) && !tl.is_dead(4), "wrong containers died");
     }
 
+    /// End-to-end recovery path: a flow resident across a `recovering_at`
+    /// link outage sees the capacity revise down to zero and back up to
+    /// base, stalls for exactly the outage window, and conserves every byte
+    /// (`delivered + lost == injected` with `lost == 0`).
+    #[test]
+    fn resident_flow_survives_a_recoverable_link_outage() {
+        use crate::netsim::dag::{Dag, Tag};
+        use crate::netsim::sim::Simulator;
+        let c = presets::dcs_x_gpus(2, 1, 10.0, 128.0);
+        let bw = c.levels[0].bandwidth;
+        let lat = c.levels[0].latency;
+        let mut d = Dag::new();
+        d.transfer(0, 1, bw, Tag::A2A, vec![], "resident"); // 1 s of wire time
+        // the destination uplink drops mid-transfer and heals 0.4 s later
+        let (t1, t2) = (lat + 0.3, lat + 0.7);
+        let trace = FailureTrace::empty().link_loss(t1, 0, 1).recovering_at(t2);
+        // timeline view: capacity revises to zero at onset, back to base at
+        // the heal, and the recoverable loss never marks resources dead
+        let mut tl = FaultTimeline::compile(&trace, &c).expect("compile");
+        let down = tl.advance(t1, 1e-12).to_vec();
+        assert_eq!(down.len(), 2, "egress + ingress of the lost uplink");
+        assert!(down.iter().all(|ch| ch.cap == 0.0 && !ch.now_dead));
+        let up = tl.advance(t2, 1e-12).to_vec();
+        assert_eq!(up.len(), 2);
+        assert!(up.iter().all(|ch| ch.cap.to_bits() == bw.to_bits()), "heal must restore base");
+        // engine view: the resident flow stalls for the outage, then finishes
+        let r = Simulator::new(&c).with_faults(&trace).run(&d);
+        let want = lat + 1.0 + (t2 - t1);
+        assert!(
+            (r.makespan - want).abs() <= 1e-9 * want,
+            "stalled makespan {} vs {want}",
+            r.makespan
+        );
+        assert_eq!(r.bytes_lost, 0.0, "recoverable outage must not lose bytes");
+        assert!(
+            (r.bytes_delivered + r.bytes_lost - r.bytes_injected).abs()
+                <= 1e-9 * r.bytes_injected,
+            "conservation: {} + {} != {}",
+            r.bytes_delivered,
+            r.bytes_lost,
+            r.bytes_injected
+        );
+        assert!((r.bytes_delivered - bw).abs() <= 1e-9 * bw, "full payload must land");
+    }
+
     #[test]
     fn random_traces_validate_and_are_seed_deterministic() {
         let c = cluster();

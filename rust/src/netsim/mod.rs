@@ -56,6 +56,7 @@
 //! and an empty trace is bit-identical to the fault-free path.
 
 pub mod dag;
+pub mod detect;
 pub mod faults;
 pub mod flow;
 pub mod fold;
@@ -63,6 +64,7 @@ pub mod sim;
 pub mod sweep;
 
 pub use dag::{Dag, Tag, TaskId, TaskKind};
+pub use detect::{Detection, DetectorCfg, Heartbeats};
 pub use faults::{FailureEvent, FailureTrace, FaultKind};
 pub use fold::{approx_fold_dag, fold_dag, ApproxFoldedDag, FoldedDag};
 pub use sim::{RateMode, SimResult, Simulator};

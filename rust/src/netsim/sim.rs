@@ -185,6 +185,11 @@ pub struct SimResult {
     /// `bytes_delivered + bytes_lost == bytes_injected` — is pinned by the
     /// fault-trace property suite.
     pub bytes_lost: f64,
+    /// Failure-detector verdicts, filled in by
+    /// [`Heartbeats::attach`](super::detect::Heartbeats::attach) when the run
+    /// carried heartbeat probes. Always empty straight out of the engines, so
+    /// attaching no detector is bit-identical to the pre-detector simulator.
+    pub detections: Vec<super::detect::Detection>,
 }
 
 impl SimResult {
@@ -407,6 +412,22 @@ impl DepState {
     }
 }
 
+/// One past the largest compute-GPU index in `dag` — covers the ghost timer
+/// GPUs that [`detect::Heartbeats`](super::detect::Heartbeats) parks its
+/// pacing chains on (indices `≥ cluster.total_gpus()`, one per heartbeat
+/// stream, so the clocks never contend with workload compute). Transfers
+/// must still use real endpoints; only compute is ghost-tolerant.
+fn ghost_gpu_span(dag: &Dag) -> usize {
+    dag.tasks
+        .iter()
+        .map(|t| match t.kind {
+            TaskKind::Compute { gpu, .. } => gpu + 1,
+            _ => 0,
+        })
+        .max()
+        .unwrap_or(0)
+}
+
 pub struct Simulator<'a> {
     cluster: &'a ClusterSpec,
     mode: RateMode,
@@ -525,9 +546,13 @@ impl<'a> Simulator<'a> {
 
         // per-GPU compute queues; `gpu_check` holds the only GPUs whose idle
         // state can have changed since the last start pass (enqueue or
-        // completion), replacing the pre-change O(G) sweep per event
-        let mut gpu_queue: Vec<VecDeque<usize>> = vec![VecDeque::new(); g];
-        let mut gpu_running: Vec<Option<usize>> = vec![None; g];
+        // completion), replacing the pre-change O(G) sweep per event.
+        // Timer gadgets (heartbeat clocks, `netsim::detect`) may compute on
+        // ghost GPUs past the cluster — grow the queue tables to cover them,
+        // but keep the busy-GPU utilization integral over the real `g`.
+        let gq = g.max(ghost_gpu_span(dag));
+        let mut gpu_queue: Vec<VecDeque<usize>> = vec![VecDeque::new(); gq];
+        let mut gpu_running: Vec<Option<usize>> = vec![None; gq];
         let mut gpu_check: Vec<usize> = Vec::new();
         let mut busy_gpus = 0usize;
         let mut gpu_busy_integral = Kahan::default();
@@ -617,7 +642,7 @@ impl<'a> Simulator<'a> {
                             unreachable!()
                         };
                         gpu_running[gpu] = Some(task);
-                        busy_gpus += 1;
+                        busy_gpus += usize::from(gpu < g);
                         compute_cal.push(time + seconds, gpu, 0);
                     }
                 }
@@ -739,7 +764,7 @@ impl<'a> Simulator<'a> {
                 compute_cal.pop();
                 let gpu = e.key;
                 let task = gpu_running[gpu].take().expect("compute entry without a running task");
-                busy_gpus -= 1;
+                busy_gpus -= usize::from(gpu < g);
                 ds.complete(task, time);
                 gpu_check.push(gpu);
             }
@@ -830,6 +855,7 @@ impl<'a> Simulator<'a> {
             bytes_injected: bytes_injected.get(),
             bytes_delivered: bytes_delivered.get(),
             bytes_lost: bytes_lost.get(),
+            detections: Vec::new(),
         }
     }
 
@@ -845,10 +871,12 @@ impl<'a> Simulator<'a> {
         let n = dag.tasks.len();
         let mut ds = DepState::new(dag);
 
-        // per-GPU compute queues
-        let mut gpu_queue: Vec<VecDeque<usize>> = vec![VecDeque::new(); g];
-        let mut gpu_busy_until = vec![0.0f64; g];
-        let mut gpu_running: Vec<Option<usize>> = vec![None; g];
+        // per-GPU compute queues (ghost timer GPUs included, as in the
+        // calendar engine; only the first `g` feed the utilization integral)
+        let gq = g.max(ghost_gpu_span(dag));
+        let mut gpu_queue: Vec<VecDeque<usize>> = vec![VecDeque::new(); gq];
+        let mut gpu_busy_until = vec![0.0f64; gq];
+        let mut gpu_running: Vec<Option<usize>> = vec![None; gq];
         let mut gpu_busy_integral = Kahan::default();
 
         // pending flow starts (after latency): (start_time, task, level) —
@@ -898,7 +926,7 @@ impl<'a> Simulator<'a> {
                 }
             }
             // start compute on idle GPUs
-            for gpu in 0..g {
+            for gpu in 0..gq {
                 if gpu_running[gpu].is_none() {
                     if let Some(task) = gpu_queue[gpu].pop_front() {
                         let TaskKind::Compute { seconds, .. } = dag.tasks[task].kind else {
@@ -939,7 +967,7 @@ impl<'a> Simulator<'a> {
 
             // find the next event time
             let mut next = f64::INFINITY;
-            for gpu in 0..g {
+            for gpu in 0..gq {
                 if gpu_running[gpu].is_some() {
                     next = next.min(gpu_busy_until[gpu]);
                 }
@@ -962,7 +990,8 @@ impl<'a> Simulator<'a> {
             );
             // integrate utilization and advance flows
             let dt = (next - time).max(0.0);
-            gpu_busy_integral.add(dt * gpu_running.iter().filter(|r| r.is_some()).count() as f64);
+            gpu_busy_integral
+                .add(dt * gpu_running.iter().take(g).filter(|r| r.is_some()).count() as f64);
             for f in &mut flows {
                 if f.rate.is_finite() {
                     f.bytes_remaining -= f.rate * dt;
@@ -972,7 +1001,7 @@ impl<'a> Simulator<'a> {
             events += 1;
 
             // process: compute finishes
-            for gpu in 0..g {
+            for gpu in 0..gq {
                 if let Some(task) = gpu_running[gpu] {
                     if gpu_busy_until[gpu] <= time + EPS {
                         gpu_running[gpu] = None;
@@ -1057,6 +1086,7 @@ impl<'a> Simulator<'a> {
             bytes_injected: bytes_injected.get(),
             bytes_delivered: bytes_injected.get(),
             bytes_lost: 0.0,
+            detections: Vec::new(),
         }
     }
 }

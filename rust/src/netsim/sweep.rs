@@ -30,6 +30,7 @@ use anyhow::{bail, ensure, Result};
 use crate::cluster::{presets, ParallelismConfig};
 use crate::moe::{MoEWorkload, Routing};
 use crate::netsim::dag::Dag;
+use crate::netsim::detect::{DetectorCfg, Heartbeats};
 use crate::netsim::faults::FailureTrace;
 use crate::netsim::sim::{RateMode, SimResult, Simulator};
 use crate::systems::aggregate::AggregateHybrid;
@@ -101,6 +102,31 @@ pub enum FailureSpec {
     Random { events: usize },
 }
 
+/// Failure-detector axis entry: whether heartbeat monitoring rides along.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DetectorSpec {
+    /// No heartbeats — the identity. Grids without the axis expand to
+    /// exactly this, taking the untouched simulation path (bit-stable with
+    /// pre-axis sweeps; same contract the failure axis honors).
+    Off,
+    /// Inject [`Heartbeats`] into both sides of the scenario with this
+    /// period/timeout (payload stays [`DetectorCfg`]'s default) and attach
+    /// the observer verdicts to each side's [`SimResult::detections`].
+    On { period_secs: f64, timeout_beats: usize },
+}
+
+impl DetectorSpec {
+    /// The detector configuration of an [`On`](Self::On) point.
+    pub fn cfg(&self) -> Option<DetectorCfg> {
+        match *self {
+            DetectorSpec::Off => None,
+            DetectorSpec::On { period_secs, timeout_beats } => {
+                Some(DetectorCfg { period_secs, timeout_beats, ..DetectorCfg::default() })
+            }
+        }
+    }
+}
+
 /// What each scenario simulates.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SweepMode {
@@ -139,6 +165,10 @@ pub struct SweepGrid {
     /// under that failure spec. Defaults to `[FailureSpec::None]`, which
     /// keeps existing fig16/fig17 per-scenario seeds bit-stable.
     pub failures: Vec<FailureSpec>,
+    /// Failure-detector axis (innermost, inside `failures`): each entry
+    /// re-runs the grid point with that heartbeat configuration. Defaults to
+    /// `[DetectorSpec::Off]`, which keeps per-scenario seeds bit-stable.
+    pub detectors: Vec<DetectorSpec>,
     /// Iterations per replanning scenario.
     pub replan_iters: usize,
     pub workload: MoEWorkload,
@@ -167,6 +197,7 @@ impl SweepGrid {
             parallelism: vec![(1, 1)],
             pp_degrees: vec![1],
             failures: vec![FailureSpec::None],
+            detectors: vec![DetectorSpec::Off],
             replan_iters: 8,
             workload: MoEWorkload {
                 tokens_per_gpu: 8192,
@@ -197,25 +228,28 @@ impl SweepGrid {
                             for &(tp, dp) in &self.parallelism {
                                 for &pp in &self.pp_degrees {
                                     for &failure in &self.failures {
-                                        let index = out.len();
-                                        out.push(Scenario {
-                                            index,
-                                            dcs,
-                                            bw_gbps: bw,
-                                            p,
-                                            heterogeneity: het,
-                                            drift,
-                                            tp,
-                                            dp,
-                                            pp,
-                                            failure,
-                                            seed: scenario_seed(self.base_seed, index as u64),
-                                            workload: self.workload,
-                                            compression_ratio: self.compression_ratio,
-                                            latency_us: self.latency_us,
-                                            mode: self.mode,
-                                            engine: self.engine,
-                                        });
+                                        for &detector in &self.detectors {
+                                            let index = out.len();
+                                            out.push(Scenario {
+                                                index,
+                                                dcs,
+                                                bw_gbps: bw,
+                                                p,
+                                                heterogeneity: het,
+                                                drift,
+                                                tp,
+                                                dp,
+                                                pp,
+                                                failure,
+                                                detector,
+                                                seed: scenario_seed(self.base_seed, index as u64),
+                                                workload: self.workload,
+                                                compression_ratio: self.compression_ratio,
+                                                latency_us: self.latency_us,
+                                                mode: self.mode,
+                                                engine: self.engine,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -241,6 +275,7 @@ impl SweepGrid {
             ("parallelism", self.parallelism.is_empty()),
             ("pp_degrees", self.pp_degrees.is_empty()),
             ("failures", self.failures.is_empty()),
+            ("detectors", self.detectors.is_empty()),
         ];
         for (name, empty) in axes {
             ensure!(
@@ -280,6 +315,24 @@ impl SweepGrid {
                  predate the fault layer and would silently ignore the trace"
             );
         }
+        if self.detectors.iter().any(|&d| d != DetectorSpec::Off) {
+            for d in &self.detectors {
+                if let Some(cfg) = d.cfg() {
+                    cfg.validate()?;
+                }
+            }
+            ensure!(
+                matches!(self.engine, RateMode::Incremental | RateMode::Parallel),
+                "the detector axis requires an unfolded calendar engine \
+                 (Incremental/Parallel) — the fold transformations do not \
+                 model the per-stream ghost-GPU heartbeat pacing chains"
+            );
+            ensure!(
+                self.dc_counts.iter().all(|&d| d >= 2),
+                "heartbeat monitoring needs at least two DCs in every \
+                 scenario (the beats cross level-0 uplinks)"
+            );
+        }
         Ok(())
     }
 }
@@ -305,6 +358,8 @@ pub struct Scenario {
     pub pp: usize,
     /// failure spec applied to both sides of the scenario
     pub failure: FailureSpec,
+    /// heartbeat-detector spec applied to both sides of the scenario
+    pub detector: DetectorSpec,
     pub seed: u64,
     pub workload: MoEWorkload,
     pub compression_ratio: f64,
@@ -361,34 +416,52 @@ fn apply_heterogeneity(cluster: crate::cluster::ClusterSpec, sc: &Scenario) -> c
     }
 }
 
-/// Run both sides of a scenario under its engine and failure spec.
-/// [`FailureSpec::None`] takes the exact fault-free path (bit-stable with
-/// pre-axis grids — no trace is even constructed); [`FailureSpec::Random`]
+/// Run both sides of a scenario under its engine, failure spec, and detector
+/// spec. [`FailureSpec::None`] takes the exact fault-free path (bit-stable
+/// with pre-axis grids — no trace is even constructed); [`FailureSpec::Random`]
 /// derives the trace seed from the scenario seed, sizes the horizon from a
 /// fault-free probe of the EP side, and applies the **same** trace to both
-/// sides so the speedup compares like against like.
+/// sides so the speedup compares like against like. [`DetectorSpec::On`]
+/// re-runs each side with [`Heartbeats`] injected (horizon from that side's
+/// probe makespan) and attaches the observer verdicts to its result;
+/// [`DetectorSpec::Off`] leaves the dags untouched.
 fn simulate_pair(
     cluster: &crate::cluster::ClusterSpec,
     sc: &Scenario,
     ep_dag: &Dag,
     hy_dag: &Dag,
-) -> (SimResult, SimResult) {
-    match sc.failure {
-        FailureSpec::None => (
-            Simulator::with_mode(cluster, sc.engine).run(ep_dag),
-            Simulator::with_mode(cluster, sc.engine).run(hy_dag),
-        ),
+) -> Result<(SimResult, SimResult)> {
+    let trace = match sc.failure {
+        FailureSpec::None => None,
         FailureSpec::Random { events } => {
             let probe = Simulator::with_mode(cluster, sc.engine).run(ep_dag);
             let horizon = probe.makespan.max(1e-6);
-            let trace =
-                FailureTrace::random(cluster, horizon, events, scenario_seed(sc.seed, 0xFA17));
-            (
-                Simulator::with_mode(cluster, sc.engine).with_faults(&trace).run(ep_dag),
-                Simulator::with_mode(cluster, sc.engine).with_faults(&trace).run(hy_dag),
-            )
+            Some(FailureTrace::random(cluster, horizon, events, scenario_seed(sc.seed, 0xFA17)))
         }
-    }
+    };
+    let run = |dag: &Dag| -> Result<SimResult> {
+        let sim = || {
+            let s = Simulator::with_mode(cluster, sc.engine);
+            match &trace {
+                Some(t) => s.with_faults(t),
+                None => s,
+            }
+        };
+        match sc.detector.cfg() {
+            None => Ok(sim().run(dag)),
+            Some(cfg) => {
+                // enough beats to arm the observer even on tiny scenarios
+                let floor = (cfg.timeout_beats + 2) as f64 * cfg.period_secs;
+                let horizon = sim().run(dag).makespan.max(floor);
+                let mut monitored = dag.clone();
+                let hb = Heartbeats::inject(&mut monitored, cluster, &cfg, horizon)?;
+                let mut r = sim().run(&monitored);
+                hb.attach(&mut r, trace.as_ref());
+                Ok(r)
+            }
+        }
+    };
+    Ok((run(ep_dag)?, run(hy_dag)?))
 }
 
 /// Simulate one scenario (EP baseline + hybrid at the scenario's `p`).
@@ -416,7 +489,7 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioOutcome> {
             let ctx = SchedCtx::new(&cluster, &w, &routing);
             let ep_dag = AggregateHybrid::ep().build_iteration(&ctx);
             let hy_dag = AggregateHybrid::with_p(sc.dcs, sc.p, pe_tx).build_iteration(&ctx);
-            simulate_pair(&cluster, sc, &ep_dag, &hy_dag)
+            simulate_pair(&cluster, sc, &ep_dag, &hy_dag)?
         }
         SweepMode::Pairwise { gpus_per_dc, zipf_skew } => {
             let cluster = apply_heterogeneity(
@@ -447,7 +520,7 @@ pub fn run_scenario(sc: &Scenario) -> Result<ScenarioOutcome> {
                 }),
             };
             let hy_dag = hy.build_iteration(&hy_ctx);
-            simulate_pair(&cluster, sc, &ep_dag, &hy_dag)
+            simulate_pair(&cluster, sc, &ep_dag, &hy_dag)?
         }
     };
     let speedup = ep.makespan / hybrid.makespan;
@@ -512,6 +585,15 @@ pub fn run_replan_scenario(
              failure recovery",
             sc.index,
             sc.failure
+        );
+    }
+    if sc.detector != DetectorSpec::Off {
+        bail!(
+            "the detector axis is not supported in replanning sweeps \
+             (scenario {} carries {:?}) — use ElasticCfg::detector for \
+             detection-aware recovery",
+            sc.index,
+            sc.detector
         );
     }
     let cluster = apply_heterogeneity(
@@ -999,5 +1081,95 @@ mod tests {
         replan.failures = vec![FailureSpec::Random { events: 2 }];
         let err = run_replan_sweep(&replan, 1).unwrap_err().to_string();
         assert!(err.contains("replanning"), "unexpected error: {err}");
+    }
+
+    /// The detector axis defaults to `[DetectorSpec::Off]`, so every
+    /// pre-existing grid keeps its scenario count, per-scenario seeds, and
+    /// outcomes **bit-for-bit**. A fault-free `On` point must raise no
+    /// suspicion and cost at most the pacing-chain tail; combined with the
+    /// failure axis it must stay thread-count deterministic and conserve
+    /// bytes; and it is rejected up front where it cannot apply.
+    #[test]
+    fn detector_axis_attaches_verdicts_and_keeps_identity_bit_stable() {
+        let mut grid = small_grid(SweepMode::Pairwise { gpus_per_dc: 4, zipf_skew: 0.0 });
+        grid.dc_counts = vec![2];
+        grid.hybrid_ps = vec![0.5];
+        let on = DetectorSpec::On { period_secs: 0.25, timeout_beats: 3 };
+        grid.detectors = vec![DetectorSpec::Off, on];
+        let out = run_sweep(&grid, 2).unwrap();
+        assert_eq!(out.len(), 2);
+        // the identity point matches a grid without the axis bit-for-bit
+        // (detectors is the innermost loop, so scenario 0 keeps its seed)
+        let mut base = grid.clone();
+        base.detectors = vec![DetectorSpec::Off];
+        let base_out = run_sweep(&base, 1).unwrap();
+        assert_eq!(base_out.len(), 1);
+        assert_eq!(out[0].ep.makespan.to_bits(), base_out[0].ep.makespan.to_bits());
+        assert_eq!(out[0].hybrid.makespan.to_bits(), base_out[0].hybrid.makespan.to_bits());
+        assert_eq!(out[0].ep.events, base_out[0].ep.events);
+        assert!(out[0].ep.detections.is_empty() && out[0].hybrid.detections.is_empty());
+        // the fault-free On point raises no suspicion, injects more bytes
+        // (the beats), and ends no later than the pacing-chain tail allows
+        let hb = &out[1];
+        assert_eq!(hb.scenario.detector, on);
+        for (side, off_side) in [(&hb.ep, &out[0].ep), (&hb.hybrid, &out[0].hybrid)] {
+            assert!(side.detections.is_empty(), "fault-free suspicion: {:?}", side.detections);
+            assert!(side.bytes_injected > off_side.bytes_injected, "beats must be real bytes");
+            assert!(side.makespan >= off_side.makespan - 1e-9);
+            // the pacing chain runs to the injection horizon: the workload
+            // makespan or the 5-beat arming floor, whichever is larger
+            let horizon = off_side.makespan.max(5.0 * 0.25);
+            assert!(
+                side.makespan <= horizon + 2.0 * 0.25,
+                "heartbeat tail {} vs horizon {horizon}",
+                side.makespan
+            );
+        }
+        // combined with the failure axis: deterministic under thread count,
+        // conservation holds on both sides
+        let mut both = grid.clone();
+        both.failures = vec![FailureSpec::Random { events: 3 }];
+        both.detectors = vec![on];
+        let a = run_sweep(&both, 2).unwrap();
+        let b = run_sweep(&both, 1).unwrap();
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].ep.makespan.to_bits(), b[0].ep.makespan.to_bits());
+        assert_eq!(a[0].hybrid.makespan.to_bits(), b[0].hybrid.makespan.to_bits());
+        assert_eq!(a[0].ep.detections.len(), b[0].ep.detections.len());
+        let close = |x: f64, y: f64| (x - y).abs() <= 1e-9 * (1.0 + y.abs());
+        for side in [&a[0].ep, &a[0].hybrid] {
+            assert!(
+                close(side.bytes_delivered + side.bytes_lost, side.bytes_injected),
+                "conservation: {} + {} vs {}",
+                side.bytes_delivered,
+                side.bytes_lost,
+                side.bytes_injected
+            );
+        }
+        // rejected up front where it cannot apply: folded engines…
+        let mut folded = grid.clone();
+        folded.engine = RateMode::Folded;
+        let err = run_sweep(&folded, 1).unwrap_err().to_string();
+        assert!(err.contains("unfolded calendar"), "unexpected error: {err}");
+        // …single-DC grids…
+        let mut single = grid.clone();
+        single.dc_counts = vec![1];
+        let err = run_sweep(&single, 1).unwrap_err().to_string();
+        assert!(err.contains("two DCs"), "unexpected error: {err}");
+        // …degenerate detector configs…
+        let mut bad = grid.clone();
+        bad.detectors = vec![DetectorSpec::On { period_secs: 0.0, timeout_beats: 3 }];
+        let err = run_sweep(&bad, 1).unwrap_err().to_string();
+        assert!(err.contains("period"), "unexpected error: {err}");
+        // …replanning sweeps, and an emptied axis
+        let mut replan = grid.clone();
+        replan.detectors = vec![on];
+        replan.drift_rates = vec![1.0];
+        let err = run_replan_sweep(&replan, 1).unwrap_err().to_string();
+        assert!(err.contains("replanning"), "unexpected error: {err}");
+        let mut empty = grid.clone();
+        empty.detectors = Vec::new();
+        let err = run_sweep(&empty, 1).unwrap_err().to_string();
+        assert!(err.contains("detectors"), "unexpected error: {err}");
     }
 }

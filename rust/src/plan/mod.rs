@@ -61,6 +61,7 @@
 
 pub mod parallel;
 pub mod replanner;
+pub mod replica;
 
 use crate::netsim::{Dag, Tag, TaskId};
 

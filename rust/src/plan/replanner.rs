@@ -288,12 +288,30 @@ pub fn compare_policies(
 ///   replacement DC, restore the lost experts onto it, and rerun the
 ///   original plan unchanged.
 ///
-/// Slow-node degradations hit both modes identically (bandwidth override
-/// for the degradation window); elastic may additionally replan through
-/// the adaptive amortization criterion. Link loss is modeled at level 0
-/// (a DC uplink — the container drops off the cluster exactly like a DC
-/// loss); deeper losses are rejected since a dead intra-DC link has no
-/// re-hosting semantics in the stream model.
+/// A third policy trades steady-state overhead for rollback-free recovery:
+///
+/// * **ReplicaFailover** — keep `r` hot copies of every expert shard
+///   ([`ReplicaPlan`](crate::plan::replica::ReplicaPlan)), paying an
+///   SR-coded coherence ring every iteration; on a loss some replica
+///   survives, re-route tokens to the surviving copies and keep training
+///   with **no rollback**, re-hosting the lost experts lazily from the
+///   SR-coded shared expert (a decode-only stall — no store read, no wire
+///   transfer). Losses no replica covers fall back to the elastic
+///   checkpoint-restore path, rollback included.
+///
+/// When [`ElasticCfg::detector`] is set, every mode reacts to a loss at
+/// *detection* time rather than oracle event time: each loss pays one
+/// worst-case detection latency (`timeout + period`, the bound certified by
+/// [`netsim::detect`](crate::netsim::detect)) before recovery can start.
+///
+/// Slow-node degradations hit all modes identically (bandwidth override
+/// for the degradation window); elastic and replica-failover may
+/// additionally replan through the adaptive amortization criterion, and a
+/// straggler's late heartbeats are counted as a *false suspicion* for the
+/// failover layer (pre-arming it, never rolling anything back). Link loss
+/// is modeled at level 0 (a DC uplink — the container drops off the
+/// cluster exactly like a DC loss); deeper losses are rejected since a
+/// dead intra-DC link has no re-hosting semantics in the stream model.
 pub mod elastic {
     use std::collections::{BTreeMap, BTreeSet};
 
@@ -303,7 +321,9 @@ pub mod elastic {
     use crate::migration::checkpoint::CheckpointCfg;
     use crate::model::solver::solve_joint;
     use crate::moe::{GpuSpec, MoEWorkload, Routing};
+    use crate::netsim::detect::DetectorCfg;
     use crate::netsim::faults::{FailureEvent, FailureTrace, FaultKind};
+    use crate::plan::replica::ReplicaPlan;
 
     use super::{iter_time, optimal_partition, switch_cost, ReplanCfg};
 
@@ -320,6 +340,19 @@ pub mod elastic {
         pub replacement_delay_secs: f64,
         /// Accelerator model for the joint `{pp,tp,ep,dp}` re-solve.
         pub gpu: GpuSpec,
+        /// Hot-standby replication degree for
+        /// [`RecoveryMode::ReplicaFailover`] (`r = 1` disables replication;
+        /// the other modes ignore it). Copies are placed across distinct DCs
+        /// by [`ReplicaPlan::place`] and pay a per-iteration coherence ring
+        /// priced at the SR codec's wire rate (the ring ships residual
+        /// frames, not dense shards).
+        pub replicas: usize,
+        /// Failure-detector pricing: when set, every loss is reacted to at
+        /// *detection* time — one worst-case detection latency
+        /// (`timeout + period`, the bound certified by
+        /// [`netsim::detect`](crate::netsim::detect)) is paid before any
+        /// recovery action. `None` keeps oracle-time semantics.
+        pub detector: Option<DetectorCfg>,
     }
 
     impl Default for ElasticCfg {
@@ -329,6 +362,8 @@ pub mod elastic {
                 checkpoint: CheckpointCfg::default(),
                 replacement_delay_secs: 600.0,
                 gpu: GpuSpec::a800(),
+                replicas: 1,
+                detector: None,
             }
         }
     }
@@ -338,6 +373,11 @@ pub mod elastic {
     pub enum RecoveryMode {
         Elastic,
         StaticRestart,
+        /// Re-route tokens to surviving hot replicas and keep training with
+        /// **no rollback**; lost experts are re-hosted lazily from the
+        /// SR-coded shared expert. Losses no replica covers fall back to
+        /// the elastic checkpoint-restore path.
+        ReplicaFailover,
     }
 
     /// One failure-recovery scenario: a workload trained for `iters`
@@ -373,6 +413,10 @@ pub mod elastic {
         pub survivor_gpus: usize,
         /// Joint config from the last homogeneous-survivor re-solve.
         pub joint: Option<ParallelismConfig>,
+        /// Slow-node events the failover layer *falsely* suspected (late
+        /// heartbeats from a straggler, cleared when the beat lands). Only
+        /// counted when a detector is configured; never triggers rollback.
+        pub false_suspicions: usize,
     }
 
     /// Remap an original-coordinates container at `level` into the survivor
@@ -479,6 +523,21 @@ pub mod elastic {
         let mut events = s.trace.events.clone();
         events.sort_by(|a, b| a.at.total_cmp(&b.at));
 
+        let replica = if mode == RecoveryMode::ReplicaFailover && cfg.replicas > 1 {
+            Some(ReplicaPlan::place(&s.cluster, &s.workload, cfg.replicas)?)
+        } else {
+            None
+        };
+        // worst-case detection latency (timeout + period): the bound the
+        // netsim::detect property suite certifies, paid before any reaction
+        let detect_stall = match &cfg.detector {
+            Some(d) => {
+                d.validate()?;
+                d.timeout_secs() + d.period_secs
+            }
+            None => 0.0,
+        };
+
         let g0 = s.cluster.total_gpus();
         let experts0 = g0 * s.workload.experts_per_gpu;
         let tokens_total = g0 * s.workload.tokens_per_gpu;
@@ -496,6 +555,7 @@ pub mod elastic {
 
         let mut total = 0.0;
         let (mut failures, mut restores, mut replans, mut checkpoints) = (0, 0, 0, 0);
+        let mut false_suspicions = 0usize;
         let mut joint = None;
         let mut progress = 0usize;
         let mut last_ckpt = 0usize;
@@ -515,7 +575,14 @@ pub mod elastic {
                 match e.kind {
                     FaultKind::SlowNode { .. } => {
                         degradations.push(e);
-                        if mode == RecoveryMode::Elastic {
+                        if mode == RecoveryMode::ReplicaFailover && cfg.detector.is_some() {
+                            // the straggler's heartbeats arrive late enough
+                            // to be suspected; the suspicion only pre-arms
+                            // the failover path and clears when the late
+                            // beat lands — no state is lost or rolled back
+                            false_suspicions += 1;
+                        }
+                        if mode != RecoveryMode::StaticRestart {
                             let eff = effective_cluster(
                                 &cluster,
                                 &s.cluster,
@@ -545,13 +612,14 @@ pub mod elastic {
                                 // the replacement re-creates the DC in place,
                                 // so every loss event costs a full cycle
                                 let lost_experts = gpus_per_dc * workload.experts_per_gpu;
-                                total += cfg.replacement_delay_secs
+                                total += detect_stall
+                                    + cfg.replacement_delay_secs
                                     + cfg.checkpoint.restore_secs(&s.cluster, lost_experts, pe);
                                 restores += 1;
                                 progress -= cfg.checkpoint.redo_iters(progress);
                                 last_ckpt = progress;
                             }
-                            RecoveryMode::Elastic => {
+                            RecoveryMode::Elastic | RecoveryMode::ReplicaFailover => {
                                 if lost.contains(&dc) {
                                     continue; // already shrunk away from it
                                 }
@@ -559,10 +627,21 @@ pub mod elastic {
                                 lost.insert(dc);
                                 let survivors = shrink_cluster(&s.cluster, &lost)?;
                                 let g_new = survivors.total_gpus();
-                                total += cfg.checkpoint.restore_secs(&survivors, lost_experts, pe);
+                                total += detect_stall;
+                                if replica.as_ref().is_some_and(|rp| rp.covers(&lost)) {
+                                    // a hot copy of every lost shard is live:
+                                    // re-route tokens to the survivors and
+                                    // keep training — NO rollback. Redundancy
+                                    // is repaired lazily from the SR-coded
+                                    // shared expert (decode-only stall).
+                                    total += cfg.checkpoint.lazy_rehost_secs(lost_experts, pe);
+                                } else {
+                                    total +=
+                                        cfg.checkpoint.restore_secs(&survivors, lost_experts, pe);
+                                    progress -= cfg.checkpoint.redo_iters(progress);
+                                    last_ckpt = progress;
+                                }
                                 restores += 1;
-                                progress -= cfg.checkpoint.redo_iters(progress);
-                                last_ckpt = progress;
                                 // re-host: conserve total tokens and experts
                                 let epg = experts0.div_ceil(g_new);
                                 let tpg = tokens_total.div_ceil(g_new);
@@ -616,6 +695,14 @@ pub mod elastic {
                 progress as f64,
             );
             total += iter_time(&eff, &workload, &routing, &partition, &cfg.replan);
+            if let Some(rp) = &replica {
+                // steady-state replication tax: the r-way coherence ring
+                // ships SR residual frames (not dense shards) every
+                // iteration over the slowest surviving uplink
+                total += rp.coherence_bytes_per_gpu()
+                    / cfg.replan.migration.compression_ratio
+                    / eff.min_bandwidth_at(0);
+            }
             progress += 1;
         }
         Ok(RecoveryReport {
@@ -627,14 +714,17 @@ pub mod elastic {
             checkpoints,
             survivor_gpus: cluster.total_gpus(),
             joint,
+            false_suspicions,
         })
     }
 
-    /// Run both modes on the same scenario: `[elastic, static_restart]`.
-    pub fn compare(s: &RecoveryScenario, cfg: &ElasticCfg) -> Result<[RecoveryReport; 2]> {
+    /// Run all three modes on the same scenario:
+    /// `[elastic, static_restart, replica_failover]`.
+    pub fn compare(s: &RecoveryScenario, cfg: &ElasticCfg) -> Result<[RecoveryReport; 3]> {
         Ok([
             run_recovery(s, cfg, RecoveryMode::Elastic)?,
             run_recovery(s, cfg, RecoveryMode::StaticRestart)?,
+            run_recovery(s, cfg, RecoveryMode::ReplicaFailover)?,
         ])
     }
 }
@@ -781,7 +871,9 @@ mod tests {
         use super::{shift_workload, MoEWorkload};
         use crate::cluster::presets;
         use crate::migration::checkpoint::CheckpointCfg;
-        use crate::netsim::faults::FailureTrace;
+        use crate::netsim::detect::DetectorCfg;
+        use crate::netsim::faults::{FailureTrace, FaultKind};
+        use crate::plan::replica::ReplicaPlan;
         use crate::util::rng::Rng;
 
         fn cfg() -> ElasticCfg {
@@ -852,7 +944,7 @@ mod tests {
             let cfg = cfg();
             for seed in 0..16u64 {
                 let s = seeded_scenario(seed);
-                let [el, st] = compare(&s, &cfg).unwrap();
+                let [el, st, _rf] = compare(&s, &cfg).unwrap();
                 assert!(
                     el.total_secs.is_finite() && el.total_secs > 0.0,
                     "seed {seed}: bad elastic total {}",
@@ -927,15 +1019,181 @@ mod tests {
                 skew: 1.0,
                 seed: 11,
             };
-            let [el, st] = compare(&s, &cfg()).unwrap();
+            let [el, st, rf] = compare(&s, &cfg()).unwrap();
             assert_eq!(el.failures, 0);
-            assert_eq!(el.restores + st.restores, 0);
+            assert_eq!(el.restores + st.restores + rf.restores, 0);
             assert_eq!(el.replans, 0, "nothing to replan without failures");
+            for other in [&st, &rf] {
+                assert!(
+                    (el.total_secs - other.total_secs).abs() <= 1e-12 * el.total_secs,
+                    "modes must agree on a healthy run: {} vs {}",
+                    el.total_secs,
+                    other.total_secs
+                );
+            }
+        }
+
+        /// A seeded 1 Gbps-uplink loss mix engineered so every loss lands
+        /// strictly inside a checkpoint window (rollback bites) and any
+        /// second loss is two DCs over (an r = 2 ring replica survives).
+        fn failover_scenario(seed: u64) -> RecoveryScenario {
+            let dcs = 4;
+            let cluster = presets::dcs_x_gpus(dcs, 2, 1.0, 128.0);
+            let mut rng = Rng::new(seed.wrapping_mul(0x517c_c1b7).wrapping_add(3));
+            let at = 6.0 + rng.f64() * 2.5;
+            let dc = rng.below(dcs);
+            let mut trace = if rng.below(2) == 0 {
+                FailureTrace::empty().dc_loss(at, dc)
+            } else {
+                FailureTrace::empty().link_loss(at, 0, dc)
+            };
+            if seed % 4 == 0 {
+                trace = trace.dc_loss(at + 0.5 + rng.f64(), (dc + 2) % dcs);
+            }
+            if seed % 3 == 0 {
+                let t = 1.0 + rng.f64() * 4.0;
+                trace = trace.slow_node(t, 0, rng.below(dcs), 0.5).recovering_at(t + 2.0);
+            }
+            RecoveryScenario {
+                cluster,
+                workload: shift_workload(),
+                trace,
+                iters: 12,
+                skew: 1.2,
+                seed,
+            }
+        }
+
+        fn lost_dcs(trace: &FailureTrace) -> BTreeSet<usize> {
+            trace
+                .events
+                .iter()
+                .filter_map(|e| match e.kind {
+                    FaultKind::DcLoss { dc }
+                    | FaultKind::LinkLoss { level: 0, container: dc } => Some(dc),
+                    _ => None,
+                })
+                .collect()
+        }
+
+        /// Acceptance criterion (recorded in EXPERIMENTS.md): with r = 2 hot
+        /// replicas on a 1 Gbps uplink, replica failover strictly beats both
+        /// elastic replanning and static restart in recovered-iteration
+        /// throughput on every seeded trace where a replica survives — no
+        /// rollback and a decode-only re-host outweigh the coherence tax.
+        #[test]
+        fn replica_failover_beats_elastic_and_static_on_covered_traces() {
+            let cfg = ElasticCfg {
+                replicas: 2,
+                detector: Some(DetectorCfg::default()),
+                ..ElasticCfg::default()
+            };
+            let mut covered = 0;
+            for seed in 0..12u64 {
+                let s = failover_scenario(seed);
+                let rp = ReplicaPlan::place(&s.cluster, &s.workload, 2).unwrap();
+                if !rp.covers(&lost_dcs(&s.trace)) {
+                    continue;
+                }
+                covered += 1;
+                let [el, st, rf] = compare(&s, &cfg).unwrap();
+                assert_eq!(rf.failures, el.failures, "seed {seed}: same trace");
+                assert!(rf.restores >= 1, "seed {seed}: failover never fired");
+                let thr = |r: &RecoveryReport| s.iters as f64 / r.total_secs;
+                assert!(
+                    thr(&rf) > thr(&el),
+                    "seed {seed}: failover throughput {:.4} must strictly beat \
+                     elastic {:.4} ({:.3}s vs {:.3}s)",
+                    thr(&rf),
+                    thr(&el),
+                    rf.total_secs,
+                    el.total_secs
+                );
+                assert!(
+                    thr(&rf) > thr(&st),
+                    "seed {seed}: failover throughput {:.4} must strictly beat \
+                     static restart {:.4} ({:.3}s vs {:.3}s)",
+                    thr(&rf),
+                    thr(&st),
+                    rf.total_secs,
+                    st.total_secs
+                );
+                let straggles =
+                    s.trace.events.iter().any(|e| matches!(e.kind, FaultKind::SlowNode { .. }));
+                if straggles {
+                    assert!(
+                        rf.false_suspicions >= 1,
+                        "seed {seed}: straggler must raise a false suspicion"
+                    );
+                }
+            }
+            // the trace generator is engineered so the ring always covers
+            assert_eq!(covered, 12, "every seeded trace must be covered");
+        }
+
+        /// Losses the ring does not cover (two adjacent DCs kill both copies
+        /// of a shard) fall back to the elastic restore path — the run still
+        /// completes, rollback included, and conservation of the report's
+        /// failure accounting holds.
+        #[test]
+        fn uncovered_loss_falls_back_to_checkpoint_restore() {
+            let s = RecoveryScenario {
+                cluster: presets::dcs_x_gpus(4, 2, 1.0, 128.0),
+                workload: shift_workload(),
+                trace: FailureTrace::empty().dc_loss(3.0, 1).dc_loss(6.0, 2),
+                iters: 10,
+                skew: 1.0,
+                seed: 5,
+            };
+            let rp = ReplicaPlan::place(&s.cluster, &s.workload, 2).unwrap();
+            assert!(rp.covers(&[1].into_iter().collect()), "first loss is covered");
+            assert!(!rp.covers(&lost_dcs(&s.trace)), "second loss must break the ring");
+            let cfg = ElasticCfg { replicas: 2, ..cfg() };
+            let rf = run_recovery(&s, &cfg, RecoveryMode::ReplicaFailover).unwrap();
+            assert_eq!(rf.failures, 2);
+            assert_eq!(rf.restores, 2);
+            assert_eq!(rf.survivor_gpus, 4, "two of four DCs survive");
+            assert!(rf.total_secs.is_finite() && rf.total_secs > 0.0);
+        }
+
+        /// Fault-free runs: a configured detector prices nothing (stalls are
+        /// per-event), and r = 2 replication costs exactly the SR-coded
+        /// coherence ring per iteration — the degraded-mode analogue of the
+        /// netsim heartbeat-overhead bound.
+        #[test]
+        fn fault_free_detector_is_free_and_replicas_cost_only_coherence() {
+            let s = RecoveryScenario {
+                cluster: presets::dcs_x_gpus(3, 2, 10.0, 128.0),
+                workload: shift_workload(),
+                trace: FailureTrace::empty(),
+                iters: 8,
+                skew: 1.0,
+                seed: 11,
+            };
+            let [el0, _st0, rf0] = compare(&s, &cfg()).unwrap();
+            let with_det = ElasticCfg { detector: Some(DetectorCfg::default()), ..cfg() };
+            let [el1, _st1, rf1] = compare(&s, &with_det).unwrap();
+            assert_eq!(
+                el0.total_secs, el1.total_secs,
+                "a fault-free detector must add zero stall"
+            );
+            assert_eq!(rf0.total_secs, rf1.total_secs);
+            assert_eq!(rf1.false_suspicions, 0, "no straggler, no suspicion");
+
+            let with_rep = ElasticCfg { replicas: 2, ..cfg() };
+            let [el2, _st2, rf2] = compare(&s, &with_rep).unwrap();
+            assert_eq!(el2.total_secs, el0.total_secs, "elastic ignores replicas");
+            let rp = ReplicaPlan::place(&s.cluster, &s.workload, 2).unwrap();
+            let per_iter = rp.coherence_bytes_per_gpu()
+                / with_rep.replan.migration.compression_ratio
+                / s.cluster.min_bandwidth_at(0);
+            let want = rf0.total_secs + s.iters as f64 * per_iter;
             assert!(
-                (el.total_secs - st.total_secs).abs() <= 1e-12 * st.total_secs,
-                "modes must agree on a healthy run: {} vs {}",
-                el.total_secs,
-                st.total_secs
+                (rf2.total_secs - want).abs() <= 1e-9 * want,
+                "replication tax must be exactly the coded coherence ring: \
+                 {} vs {}",
+                rf2.total_secs,
+                want
             );
         }
     }

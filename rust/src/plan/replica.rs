@@ -1,0 +1,296 @@
+//! r-way hot-standby expert replication as a plan dimension.
+//!
+//! HybridEP keeps exactly one copy of every fluid expert; PR 8's elastic
+//! recovery therefore has to re-host lost experts from the SR-coded shared
+//! expert *before* training resumes. This module plans the alternative the
+//! DeepSpeed-TED-style dp dimension already prices implicitly: keep `r`
+//! **hot standbys** of every GPU's expert shard, spread round-robin across
+//! DCs, so a DC loss leaves at least one live replica and tokens re-route
+//! with **no rollback** (see `plan::replanner::elastic`'s `ReplicaFailover`
+//! policy).
+//!
+//! Replication is not free, and both costs are first-class plan quantities:
+//!
+//! * **memory** — every GPU stores its own shard plus `r − 1` standby
+//!   shards: `r × experts_per_gpu × P_E` bytes
+//!   ([`ReplicaPlan::memory_bytes_per_gpu`]);
+//! * **coherence** — replicas must see the same parameters each iteration,
+//!   paid as a per-iteration ring All-Reduce over each replica group. The
+//!   lowering reuses the dp gradient-ring shape (`2(r−1)/r × payload` per
+//!   member, the same formula `model::solver::score_candidate` charges the
+//!   dp dimension): [`inject_coherence`] plants the ring flows into every
+//!   layer's closing sync phase, and
+//!   [`ReplicaPlan::coherence_secs_per_iter`] is the analytic per-iteration
+//!   cost the risk-aware solver weighs against expected failure loss.
+//!
+//! Placement is deterministic: copy `j` of GPU `g`'s shard lives on the
+//! same-rank GPU of DC `(dc(g) + j) mod dcs`, so any `r ≤ dcs` distinct DCs
+//! hold each shard and [`ReplicaPlan::survivor_of`] finds a live copy after
+//! any loss of fewer than `r` DCs.
+
+use anyhow::{ensure, Result};
+use std::collections::BTreeSet;
+
+use crate::cluster::ClusterSpec;
+use crate::moe::MoEWorkload;
+
+use super::{CommPhase, Flow, Plan};
+
+/// Replication degree: `r = 1` is the unreplicated HybridEP baseline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplicaCfg {
+    pub r: usize,
+}
+
+impl Default for ReplicaCfg {
+    fn default() -> Self {
+        Self { r: 1 }
+    }
+}
+
+/// A placed replication plan over a concrete cluster.
+#[derive(Clone, Debug)]
+pub struct ReplicaPlan {
+    pub r: usize,
+    dcs: usize,
+    per_dc: usize,
+    /// Per-GPU expert-shard parameter bytes (one copy).
+    shard_bytes: f64,
+}
+
+impl ReplicaPlan {
+    /// Place `r`-way replication on `cluster`. Requires `1 ≤ r ≤ dcs`: a
+    /// replica in the same DC as its primary would die with it, so copies
+    /// must land in distinct DCs.
+    pub fn place(cluster: &ClusterSpec, workload: &MoEWorkload, r: usize) -> Result<Self> {
+        let dcs = cluster.levels[0].fanout;
+        ensure!(r >= 1, "replication degree must be at least 1");
+        ensure!(
+            r <= dcs,
+            "replication degree {r} exceeds the {dcs} DCs available for distinct placement"
+        );
+        let per_dc = cluster.total_gpus() / dcs;
+        ensure!(per_dc >= 1, "cluster has no GPUs");
+        Ok(Self { r, dcs, per_dc, shard_bytes: workload.experts_per_gpu as f64 * workload.pe_bytes() })
+    }
+
+    /// GPU hosting copy `j ∈ [0, r)` of `gpu`'s expert shard (copy 0 is the
+    /// primary itself): the same-rank GPU of DC `(dc + j) mod dcs`.
+    pub fn host(&self, gpu: usize, j: usize) -> usize {
+        debug_assert!(j < self.r, "copy index out of range");
+        let (dc, rank) = (gpu / self.per_dc, gpu % self.per_dc);
+        ((dc + j) % self.dcs) * self.per_dc + rank
+    }
+
+    /// All hosts of `gpu`'s shard, primary first.
+    pub fn hosts(&self, gpu: usize) -> Vec<usize> {
+        (0..self.r).map(|j| self.host(gpu, j)).collect()
+    }
+
+    /// Per-GPU parameter memory: its own shard plus the `r − 1` standby
+    /// shards it hosts for peers.
+    pub fn memory_bytes_per_gpu(&self) -> f64 {
+        self.r as f64 * self.shard_bytes
+    }
+
+    /// Per-member coherence ring payload (bytes): the dp-gradient-ring
+    /// formula `2(r−1)/r × shard` applied to the replica group. Zero at
+    /// `r = 1`.
+    pub fn coherence_bytes_per_gpu(&self) -> f64 {
+        if self.r < 2 {
+            return 0.0;
+        }
+        2.0 * (self.r as f64 - 1.0) / self.r as f64 * self.shard_bytes
+    }
+
+    /// Analytic per-iteration coherence cost: the ring always crosses the
+    /// level-0 uplink (replicas live in distinct DCs by construction), so
+    /// the member payload drains at the slowest uplink.
+    pub fn coherence_secs_per_iter(&self, cluster: &ClusterSpec) -> f64 {
+        self.coherence_bytes_per_gpu() / cluster.min_bandwidth_at(0)
+    }
+
+    /// A surviving host of `gpu`'s shard after `lost_dcs` dropped, preferring
+    /// the lowest copy index (the primary if it lives). `None` = every
+    /// replica was in a lost DC.
+    pub fn survivor_of(&self, gpu: usize, lost_dcs: &BTreeSet<usize>) -> Option<usize> {
+        (0..self.r).map(|j| self.host(gpu, j)).find(|h| !lost_dcs.contains(&(h / self.per_dc)))
+    }
+
+    /// Whether every GPU's shard keeps at least one live replica after
+    /// `lost_dcs` dropped — the precondition for no-rollback failover.
+    pub fn covers(&self, lost_dcs: &BTreeSet<usize>) -> bool {
+        // placement is DC-symmetric: shard coverage only depends on whether
+        // some window of `r` consecutive DCs (mod dcs) survives at its slot
+        (0..self.dcs).all(|dc| (0..self.r).any(|j| !lost_dcs.contains(&((dc + j) % self.dcs))))
+    }
+
+    /// The coherence ring flows: one ring per replica group (the group of
+    /// GPU `g` is `host(g, 0..r)`), `2(r−1)/r × shard` bytes per member —
+    /// the dp gradient-ring lowering re-aimed at replica groups. Empty at
+    /// `r = 1`.
+    pub fn coherence_flows(&self) -> Vec<Flow> {
+        if self.r < 2 {
+            return Vec::new();
+        }
+        let per_member = self.coherence_bytes_per_gpu();
+        let mut flows = Vec::with_capacity(self.dcs * self.per_dc * self.r);
+        // rings are indexed by (dc, rank): the group {(dc + j) mod dcs} × rank
+        for dc in 0..self.dcs {
+            for rank in 0..self.per_dc {
+                let base = dc * self.per_dc + rank;
+                for j in 0..self.r {
+                    flows.push(Flow {
+                        src: self.host(base, j),
+                        dst: self.host(base, (j + 1) % self.r),
+                        bytes: per_member,
+                    });
+                }
+            }
+        }
+        flows
+    }
+}
+
+/// Plant the replica coherence ring into every layer of `plan`, merged into
+/// the layer's closing sync phase (the same slot the TP activation ring
+/// occupies): a fresh `replica_coherence` phase when the layer had none,
+/// extra ring flows alongside the TP ring otherwise.
+pub fn inject_coherence(plan: &mut Plan, rp: &ReplicaPlan) {
+    let flows = rp.coherence_flows();
+    if flows.is_empty() {
+        return;
+    }
+    for layer in &mut plan.layers {
+        match &mut layer.tp_sync {
+            Some(phase) => phase.flows.extend(flows.iter().cloned()),
+            None => layer.tp_sync = Some(CommPhase::new(flows.clone(), "replica_coherence")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    fn wl() -> MoEWorkload {
+        MoEWorkload {
+            tokens_per_gpu: 1024,
+            hidden: 256,
+            ffn: 2048,
+            experts_per_gpu: 1,
+            k: 1,
+            moe_layers: 1,
+            pre_blocks: 1,
+            backward: false,
+        }
+    }
+
+    #[test]
+    fn placement_spreads_copies_across_distinct_dcs() {
+        let cluster = presets::dcs_x_gpus(4, 2, 10.0, 128.0);
+        let rp = ReplicaPlan::place(&cluster, &wl(), 3).unwrap();
+        for gpu in 0..8 {
+            let hosts = rp.hosts(gpu);
+            assert_eq!(hosts[0], gpu, "copy 0 must be the primary");
+            let dcs: BTreeSet<usize> = hosts.iter().map(|h| h / 2).collect();
+            assert_eq!(dcs.len(), 3, "replicas of {gpu} share a DC: {hosts:?}");
+            // same-rank placement keeps the intra-DC layout aligned
+            assert!(hosts.iter().all(|h| h % 2 == gpu % 2));
+        }
+    }
+
+    #[test]
+    fn memory_and_coherence_scale_with_r() {
+        let cluster = presets::dcs_x_gpus(4, 2, 10.0, 128.0);
+        let w = wl();
+        let shard = w.experts_per_gpu as f64 * w.pe_bytes();
+        let r1 = ReplicaPlan::place(&cluster, &w, 1).unwrap();
+        assert_eq!(r1.memory_bytes_per_gpu(), shard);
+        assert_eq!(r1.coherence_bytes_per_gpu(), 0.0);
+        assert!(r1.coherence_flows().is_empty());
+        assert_eq!(r1.coherence_secs_per_iter(&cluster), 0.0);
+        let r2 = ReplicaPlan::place(&cluster, &w, 2).unwrap();
+        assert_eq!(r2.memory_bytes_per_gpu(), 2.0 * shard);
+        // dp gradient-ring formula: 2(r−1)/r × payload per member
+        assert_eq!(r2.coherence_bytes_per_gpu(), shard);
+        assert!(r2.coherence_secs_per_iter(&cluster) > 0.0);
+        let r4 = ReplicaPlan::place(&cluster, &w, 4).unwrap();
+        assert_eq!(r4.coherence_bytes_per_gpu(), 1.5 * shard);
+        // ring structure: r flows per replica group, every one cross-DC
+        let flows = r2.coherence_flows();
+        assert_eq!(flows.len(), 8 * 2);
+        assert!(flows.iter().all(|f| f.src / 2 != f.dst / 2), "coherence must cross DCs");
+    }
+
+    #[test]
+    fn survivor_lookup_and_coverage_after_dc_loss() {
+        let cluster = presets::dcs_x_gpus(4, 2, 10.0, 128.0);
+        let rp = ReplicaPlan::place(&cluster, &wl(), 2).unwrap();
+        let lost: BTreeSet<usize> = [1].into_iter().collect();
+        assert!(rp.covers(&lost), "r = 2 must survive any single DC loss");
+        // DC 1's primaries fail over to their standby in DC 2
+        assert_eq!(rp.survivor_of(2, &lost), Some(4));
+        assert_eq!(rp.survivor_of(3, &lost), Some(5));
+        // a live primary stays put
+        assert_eq!(rp.survivor_of(0, &lost), Some(0));
+        // adjacent double loss kills the shards replicated 1 → 2
+        let both: BTreeSet<usize> = [1, 2].into_iter().collect();
+        assert!(!rp.covers(&both));
+        assert_eq!(rp.survivor_of(2, &both), None);
+        // r = 1 covers only the no-loss case
+        let r1 = ReplicaPlan::place(&cluster, &wl(), 1).unwrap();
+        assert!(r1.covers(&BTreeSet::new()));
+        assert!(!r1.covers(&lost));
+    }
+
+    #[test]
+    fn place_rejects_r_beyond_dcs() {
+        let cluster = presets::dcs_x_gpus(2, 2, 10.0, 128.0);
+        assert!(ReplicaPlan::place(&cluster, &wl(), 0).is_err());
+        let err = ReplicaPlan::place(&cluster, &wl(), 3).unwrap_err().to_string();
+        assert!(err.contains("distinct placement"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn inject_coherence_extends_the_layer_sync_phase() {
+        use crate::plan::{LayerPlan, MigratePlan};
+        let cluster = presets::dcs_x_gpus(4, 2, 10.0, 128.0);
+        let w = wl();
+        let rp = ReplicaPlan::place(&cluster, &w, 2).unwrap();
+        let bare_layer = || LayerPlan {
+            migrate: MigratePlan::none(),
+            pre_secs: vec![0.0; 8],
+            rounds: vec![],
+            tp_sync: None,
+        };
+        let mut plan = Plan { gpus: 8, layers: vec![bare_layer(), bare_layer()], pipeline: None };
+        assert_eq!(plan.allreduce_bytes(), 0.0);
+        inject_coherence(&mut plan, &rp);
+        for layer in &plan.layers {
+            let phase = layer.tp_sync.as_ref().expect("coherence phase missing");
+            assert_eq!(phase.label, "replica_coherence");
+            assert_eq!(phase.flows.len(), 16, "r flows per replica group, 8 groups");
+        }
+        let ring_bytes = plan.allreduce_bytes();
+        assert!(
+            (ring_bytes - 2.0 * 16.0 * rp.coherence_bytes_per_gpu()).abs() < 1e-6,
+            "ring traffic {ring_bytes} off the 2 layers × 16 members formula"
+        );
+        // a layer that already closes with a TP ring keeps its phase and
+        // gains the replica flows alongside
+        let mut tp_layer = bare_layer();
+        tp_layer.tp_sync =
+            Some(CommPhase::new(vec![Flow { src: 0, dst: 1, bytes: 64.0 }], "tp_sync"));
+        let mut mixed = Plan { gpus: 8, layers: vec![tp_layer], pipeline: None };
+        inject_coherence(&mut mixed, &rp);
+        let phase = mixed.layers[0].tp_sync.as_ref().unwrap();
+        assert_eq!(phase.label, "tp_sync");
+        assert_eq!(phase.flows.len(), 17);
+        // r = 1 leaves the plan untouched
+        let mut plain = Plan { gpus: 8, layers: vec![bare_layer()], pipeline: None };
+        inject_coherence(&mut plain, &ReplicaPlan::place(&cluster, &w, 1).unwrap());
+        assert!(plain.layers[0].tp_sync.is_none());
+    }
+}

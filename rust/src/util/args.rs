@@ -204,6 +204,39 @@ mod tests {
         assert!(parse(&["simulate", "--pp=-2"]).usize_or("pp", 1).is_err());
     }
 
+    /// The detection flags (`plan --replicas` via `usize_or`, `sweep
+    /// --detector P,B` parsed as a comma pair in `cmd_sweep`) follow the
+    /// same contract as the parallelism flags: off by default, well-formed
+    /// input parses, malformed input produces actionable messages.
+    #[test]
+    fn detection_flags_parse_and_report_malformed_input() {
+        // --replicas: off (0) by default, scalar otherwise
+        let a = parse(&["plan", "--replicas", "2"]);
+        assert_eq!(a.usize_or("replicas", 0).unwrap(), 2);
+        assert_eq!(parse(&["plan"]).usize_or("replicas", 0).unwrap(), 0);
+        let bad = parse(&["plan", "--replicas", "two"]);
+        let err = bad.usize_or("replicas", 0).unwrap_err().to_string();
+        assert!(err.contains("--replicas") && err.contains("two"), "unhelpful error: {err}");
+        // negative replication degrees are rejected by the unsigned parse
+        assert!(parse(&["plan", "--replicas=-1"]).usize_or("replicas", 0).is_err());
+
+        // --detector: absent by default; a `period,beats` pair when present
+        // (mirrors the cmd_sweep split_once parse)
+        assert!(parse(&["sweep"]).get("detector").is_none());
+        let a = parse(&["sweep", "--detector", "0.25,3"]);
+        let spec = a.get("detector").expect("flag present");
+        let (p, b) = spec.split_once(',').expect("comma pair");
+        assert_eq!(p.trim().parse::<f64>().unwrap(), 0.25);
+        assert_eq!(b.trim().parse::<usize>().unwrap(), 3);
+        // a bare value without the comma is rejected by the pair parse
+        let bare = parse(&["sweep", "--detector", "0.25"]);
+        assert!(bare.get("detector").unwrap().split_once(',').is_none());
+        // malformed halves fail their numeric parses
+        let a = parse(&["sweep", "--detector", "fast,3"]);
+        let (p, _) = a.get("detector").unwrap().split_once(',').unwrap();
+        assert!(p.trim().parse::<f64>().is_err());
+    }
+
     #[test]
     fn list_flags_parse_and_default() {
         let a = parse(&["--dcs", "8,16, 32", "--bw", "1.25,10"]);
