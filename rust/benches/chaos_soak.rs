@@ -1,0 +1,100 @@
+//! Chaos soak — live harness runs under seeded fault schedules. Not a
+//! paper figure: measures (a) recovery latency from lease-expiry broadcast
+//! to the first post-recovery commit and (b) the overhead a fault-free run
+//! pays for armed leases (heartbeat bytes riding the same fabric as data).
+//! `--quick` / `BENCH_FAST=1` shrinks the seed pool (the CI smoke); rows
+//! are merged into `BENCH_netsim.json`.
+
+use std::path::PathBuf;
+
+use hybrid_ep::bench::{header, time_once, JsonReport};
+use hybrid_ep::runtime::chaos::{ChaosCfg, ChaosSchedule};
+use hybrid_ep::runtime::harness::{reference_losses, run, HarnessCfg};
+use hybrid_ep::util::args::Args;
+use hybrid_ep::util::json;
+
+fn store_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hybrid_ep_bench_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn losses_ok(got: &[f64], want: &[f64]) -> bool {
+    got.len() == want.len()
+        && got.iter().zip(want).all(|(g, w)| (g - w).abs() <= 1e-9 * w.abs().max(1.0))
+}
+
+fn main() {
+    header("chaos_soak", "live chaos harness: recovery latency + lease overhead (not in paper)");
+    let args = Args::from_env().unwrap_or_default();
+    let quick = args.bool("quick") || std::env::var("BENCH_FAST").is_ok();
+    let mut report = JsonReport::open();
+
+    // -- clean-run overhead: leases armed, zero faults ---------------------
+    let cfg = HarnessCfg::quick(4, 12, 7, store_dir("clean"));
+    let (clean, clean_secs) = time_once(|| run(&cfg, &ChaosSchedule::none(7)).expect("clean run"));
+    assert_eq!(clean.lease_expiries, 0, "false lease expiry on a fault-free run");
+    assert_eq!(clean.committed, cfg.iters, "clean run must commit everything");
+    assert!(losses_ok(&clean.losses, &reference_losses(&cfg)), "clean losses drifted");
+    let hb_ratio = clean.heartbeat_bytes as f64 / clean.data_bytes.max(1) as f64;
+    assert!(hb_ratio < 0.2, "heartbeat overhead {hb_ratio:.3} out of bound");
+    println!(
+        "clean run: {} iters in {clean_secs:.2}s, {} beats ({:.1}% of data bytes), 0 expiries",
+        clean.committed,
+        clean.heartbeats,
+        100.0 * hb_ratio
+    );
+    let key = "chaos_soak/clean_run_overhead";
+    report.record(key, clean_secs * 1e3, clean.committed, None);
+    report.record_extra(key, "heartbeat_byte_ratio", json::num(hb_ratio));
+    report.record_extra(key, "heartbeats", json::num(clean.heartbeats as f64));
+
+    // -- recovery latency over seeded schedules ----------------------------
+    let seeds: u64 = if quick { 4 } else { 16 };
+    let mut recovery_ms: Vec<f64> = Vec::new();
+    let (mut recoveries, mut restores, mut redone) = (0usize, 0usize, 0usize);
+    let (_, soak_secs) = time_once(|| {
+        for seed in 0..seeds {
+            let cfg = HarnessCfg::quick(4, 10, seed, store_dir(&format!("s{seed}")));
+            let chaos = ChaosCfg {
+                seed,
+                faults: 2,
+                drop_p: 0.05,
+                delay_p: 0.10,
+                max_delay_sim_secs: 0.05,
+                revive: seed % 3 == 0,
+            };
+            let sched = ChaosSchedule::random(4, 10, cfg.lease.timeout_secs(), &chaos)
+                .expect("valid chaos cfg");
+            let r = run(&cfg, &sched)
+                .unwrap_or_else(|e| panic!("seed {seed} wedged or failed: {e:#}"));
+            assert_eq!(r.committed, cfg.iters, "seed {seed} under-committed");
+            assert!(losses_ok(&r.losses, &reference_losses(&cfg)), "seed {seed} losses drifted");
+            recovery_ms.extend(r.recovery_secs.iter().map(|s| s * 1e3));
+            recoveries += r.recoveries;
+            restores += r.restores;
+            redone += r.redone_iters;
+        }
+    });
+    let mean_ms = if recovery_ms.is_empty() {
+        0.0
+    } else {
+        recovery_ms.iter().sum::<f64>() / recovery_ms.len() as f64
+    };
+    let max_ms = recovery_ms.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "soak: {seeds} seeded schedules in {soak_secs:.2}s — {recoveries} recoveries \
+         ({restores} manifest restores, {redone} redone iters), recovery mean {mean_ms:.1}ms \
+         max {max_ms:.1}ms"
+    );
+    let key = "chaos_soak/recovery_ms";
+    report.record(key, mean_ms, recovery_ms.len(), None);
+    report.record_extra(key, "max_ms", json::num(max_ms));
+    report.record_extra(key, "seeds", json::num(seeds as f64));
+    report.record_extra(key, "manifest_restores", json::num(restores as f64));
+
+    match report.write() {
+        Ok(path) => println!("\n[perf trajectory merged into {}]", path.display()),
+        Err(e) => eprintln!("\n[warning] could not write perf trajectory: {e}"),
+    }
+}

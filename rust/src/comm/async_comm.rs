@@ -50,10 +50,26 @@ impl Default for RetryCfg {
 
 impl RetryCfg {
     /// Backoff before retry `attempt` (1-based): `base * 2^(attempt - 1)`,
-    /// capped at [`max_backoff`](Self::max_backoff).
+    /// saturating exactly at [`max_backoff`](Self::max_backoff).
+    ///
+    /// Doubling is checked, so large attempt counts can neither overflow
+    /// the `Duration` math nor plateau below the cap (the previous
+    /// hard-coded `2^16` exponent clamp pinned a 1 ns base at ~65 µs even
+    /// with a 100 ms ceiling). A zero base stays zero.
     pub fn backoff(&self, attempt: u32) -> Duration {
-        let doublings = attempt.saturating_sub(1).min(16);
-        self.base_backoff.saturating_mul(1 << doublings).min(self.max_backoff)
+        if self.base_backoff.is_zero() || self.base_backoff >= self.max_backoff {
+            return if self.base_backoff.is_zero() { Duration::ZERO } else { self.max_backoff };
+        }
+        let mut b = self.base_backoff;
+        // at most ~127 doublings fit below any max_backoff, so this loop is
+        // short regardless of the attempt count
+        for _ in 1..attempt {
+            match b.checked_mul(2) {
+                Some(d) if d < self.max_backoff => b = d,
+                _ => return self.max_backoff,
+            }
+        }
+        b
     }
 }
 
@@ -216,6 +232,37 @@ mod tests {
         };
         let ms: Vec<u128> = (1..=6).map(|a| cfg.backoff(a).as_millis()).collect();
         assert_eq!(ms, vec![1, 2, 4, 8, 8, 8]);
+    }
+
+    /// Regression: large attempt counts must saturate exactly at
+    /// `max_backoff` — no `Duration` overflow, no sub-cap plateau. The old
+    /// exponent clamp (`min(16)`) froze a 1 ns base at ~65 µs forever.
+    #[test]
+    fn backoff_saturates_at_max_for_large_attempts() {
+        let cfg = RetryCfg {
+            max_attempts: usize::MAX,
+            base_backoff: Duration::from_nanos(1),
+            max_backoff: Duration::from_secs(1),
+        };
+        for attempt in [64, 65, 100, 1_000, u32::MAX] {
+            assert_eq!(cfg.backoff(attempt), cfg.max_backoff, "attempt {attempt}");
+        }
+        // the cap is reachable, not merely an upper bound: 2^30 ns ≈ 1.07 s
+        assert_eq!(cfg.backoff(31), cfg.max_backoff);
+        assert_eq!(cfg.backoff(30), Duration::from_nanos(1 << 29));
+        // a base at/above the cap pins every retry to the cap
+        let flat = RetryCfg {
+            base_backoff: Duration::from_secs(2),
+            max_backoff: Duration::from_secs(1),
+            ..cfg
+        };
+        assert_eq!(flat.backoff(1), Duration::from_secs(1));
+        assert_eq!(flat.backoff(u32::MAX), Duration::from_secs(1));
+        // a zero base never sleeps, even at huge attempts (no infinite loop)
+        let zero = RetryCfg { base_backoff: Duration::ZERO, ..cfg };
+        assert_eq!(zero.backoff(u32::MAX), Duration::ZERO);
+        // attempt 0 (pre-first-try probe) behaves like attempt 1
+        assert_eq!(cfg.backoff(0), Duration::from_nanos(1));
     }
 
     #[test]

@@ -6,8 +6,9 @@
 //! rate-limited link, so measured iteration times reproduce the paper's
 //! bandwidth-ratio effects (DESIGN.md §Substitutions).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
 
 use crate::comm::fabric::Fabric;
 
@@ -31,10 +32,21 @@ pub struct WorkerCtx {
 
 impl WorkerCtx {
     /// Synchronous send: blocks for the transfer time, then delivers.
+    /// Routed through the fabric's chaos interposer when one is armed.
     pub fn send(&self, to: usize, tag: u32, bytes: Vec<u8>) {
-        self.fabric.transmit(self.id, to, bytes.len());
+        self.send_tracked(to, tag, bytes);
+    }
+
+    /// [`send`](Self::send) that reports whether the message survived the
+    /// (possibly chaos-interposed) network. Without an interposer this is
+    /// always `true`.
+    pub fn send_tracked(&self, to: usize, tag: u32, bytes: Vec<u8>) -> bool {
+        if !self.fabric.transmit_interposed(self.id, to, bytes.len()) {
+            return false;
+        }
         // receiver may have exited only at teardown; ignore then
         let _ = self.senders[to].send(Message { from: self.id, tag, bytes });
+        true
     }
 
     /// Hand out an independent sender handle + fabric for async use
@@ -54,6 +66,30 @@ impl WorkerCtx {
                 return m;
             }
             self.stash.push(m);
+        }
+    }
+
+    /// [`recv`](Self::recv) with a deadline: `None` on timeout (or teardown),
+    /// stashing non-matching arrivals either way. This is the wedge-free
+    /// receive the chaos harness builds on — a dead peer costs a timeout,
+    /// never a hang.
+    pub fn recv_timeout(&mut self, tag: u32, timeout: Duration) -> Option<Message> {
+        if let Some(pos) = self.stash.iter().position(|m| m.tag == tag) {
+            return Some(self.stash.swap_remove(pos));
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            match self.inbox.recv_timeout(deadline - now) {
+                Ok(m) if m.tag == tag => return Some(m),
+                Ok(m) => self.stash.push(m),
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                    return None;
+                }
+            }
         }
     }
 
@@ -149,6 +185,80 @@ mod tests {
             }
         });
         assert_eq!(out[1], 3);
+    }
+
+    /// Satellite: delivery order per channel pair is the sender's program
+    /// order, even with a chaos interposer delaying and dropping messages
+    /// in flight (the interposer acts inline on the sender, so surviving
+    /// messages of one pair can never overtake each other).
+    #[test]
+    fn per_pair_delivery_preserves_send_order_under_chaos() {
+        use crate::comm::fabric::{Interposer, Verdict};
+        struct Jitter;
+        impl Interposer for Jitter {
+            fn verdict(&self, _s: usize, _d: usize, _b: usize, seq: u64) -> Verdict {
+                match seq % 3 {
+                    0 => Verdict::Delay(0.2), // 2 ms of wall delay at scale 100
+                    1 => Verdict::Drop,
+                    _ => Verdict::Deliver,
+                }
+            }
+        }
+        let f = Arc::new(
+            Fabric::new(presets::dcs_x_gpus(2, 2, 100.0, 1000.0), 100.0)
+                .with_interposer(Arc::new(Jitter)),
+        );
+        let out = run_workers(f, |mut ctx| {
+            if ctx.id == 0 {
+                let delivered: Vec<u8> = (0..12u8)
+                    .filter(|&i| ctx.send_tracked(1, 5, vec![i]))
+                    .collect();
+                assert_eq!(delivered.len(), 8, "seq % 3 == 1 must be eaten");
+                // tell the receiver how many survived (reliable tag-9 note:
+                // retry until the interposer lets one through)
+                while !ctx.send_tracked(1, 9, vec![delivered.len() as u8]) {}
+                delivered
+            } else if ctx.id == 1 {
+                let n = ctx.recv(9).bytes[0] as usize;
+                ctx.recv_n(5, n).into_iter().map(|m| m.bytes[0]).collect()
+            } else {
+                vec![]
+            }
+        });
+        // the receiver sees exactly the survivors, in send order
+        let mut got = out[1].clone();
+        assert_eq!(got.len(), 8);
+        let mut sorted = got.clone();
+        sorted.sort_unstable();
+        assert_eq!(got, sorted, "per-pair order violated: {got:?}");
+        got.dedup();
+        assert_eq!(got.len(), 8, "duplicate delivery");
+    }
+
+    #[test]
+    fn recv_timeout_expires_instead_of_wedging() {
+        let f = small_fabric();
+        let out = run_workers(f, |mut ctx| {
+            if ctx.id == 0 {
+                // nobody ever sends tag 42: the receive must expire
+                let t0 = Instant::now();
+                let got = ctx.recv_timeout(42, Duration::from_millis(30));
+                assert!(got.is_none());
+                assert!(t0.elapsed() >= Duration::from_millis(25), "returned too early");
+                // non-matching arrivals are stashed, not lost
+                let m = ctx.recv_timeout(7, Duration::from_millis(500)).expect("tag 7");
+                assert_eq!(m.bytes, vec![1]);
+                let stashed = ctx.recv_timeout(8, Duration::from_millis(500)).expect("tag 8");
+                stashed.bytes[0]
+            } else if ctx.id == 1 {
+                ctx.send(0, 8, vec![9]); // out-of-order tag first
+                ctx.send(0, 7, vec![1]);
+                0
+            } else {
+                0
+            }
+        });
+        assert_eq!(out[0], 9);
     }
 
     #[test]

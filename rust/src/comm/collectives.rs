@@ -111,6 +111,39 @@ mod tests {
         Arc::new(Fabric::new(presets::dcs_x_gpus(2, gpus / 2, 1000.0, 8000.0), 1000.0))
     }
 
+    /// Satellite: a collective with one straggling participant completes
+    /// (nobody times out or deadlocks waiting) and still reduces correctly —
+    /// everyone is simply gated on the slowest member, which is the
+    /// bulk-synchronous behaviour the chaos harness's slow-node stalls lean
+    /// on.
+    #[test]
+    fn all_reduce_completes_and_is_correct_with_a_straggler() {
+        use std::time::{Duration, Instant};
+        let f = fast_fabric(4);
+        let stall = Duration::from_millis(80);
+        let out = run_workers(f, move |mut ctx| {
+            if ctx.id == 2 {
+                std::thread::sleep(stall); // the straggler joins late
+            }
+            let t0 = Instant::now();
+            let mut buf = vec![ctx.id as f32 + 1.0; 8];
+            all_reduce_f32(&mut ctx, 11, &mut buf);
+            (buf, t0.elapsed())
+        });
+        for (id, (buf, _)) in out.iter().enumerate() {
+            assert!(buf.iter().all(|&v| v == 10.0), "worker {id}: {buf:?}");
+        }
+        // non-stragglers are gated on the straggler's arrival: their
+        // collective wall time absorbs (most of) the stall
+        let fastest = out.iter().enumerate().filter(|(id, _)| *id != 2);
+        for (id, (_, dt)) in fastest {
+            assert!(
+                *dt >= Duration::from_millis(40),
+                "worker {id} finished in {dt:?} — cannot precede the straggler"
+            );
+        }
+    }
+
     #[test]
     fn a2a_delivers_correct_chunks() {
         let f = fast_fabric(4);

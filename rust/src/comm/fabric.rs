@@ -6,11 +6,32 @@
 //! demos of multi-second paper iterations finish quickly while preserving
 //! all bandwidth *ratios*.
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::cluster::{ClusterSpec, Multilevel};
 use crate::comm::throttle::Link;
+
+/// Per-message ruling from a fabric [`Interposer`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Verdict {
+    Deliver,
+    /// The bytes leave the sender's NIC (pacing is still paid) but never
+    /// arrive: the caller must *not* hand the message to the receiver.
+    Drop,
+    /// Deliver after an extra one-way delay of this many **simulated**
+    /// seconds (scaled down by `time_scale` like link latency).
+    Delay(f64),
+}
+
+/// A chaos hook consulted once per interposed transfer, in the sender's
+/// program order per `(src, dst)` pair. `seq` is the per-pair message
+/// sequence number, so seeded implementations rule deterministically
+/// regardless of cross-pair thread interleaving (see `runtime::chaos`).
+pub trait Interposer: Send + Sync {
+    fn verdict(&self, src: usize, dst: usize, bytes: usize, seq: u64) -> Verdict;
+}
 
 pub struct Fabric {
     pub cluster: ClusterSpec,
@@ -18,6 +39,9 @@ pub struct Fabric {
     /// `links[level][container]` = (egress, ingress)
     links: Vec<Vec<(Arc<Link>, Arc<Link>)>>,
     pub time_scale: f64,
+    interposer: Option<Arc<dyn Interposer>>,
+    /// Per-`(src, dst)` sequence counters for [`transmit_interposed`](Self::transmit_interposed).
+    seqs: Mutex<BTreeMap<(usize, usize), u64>>,
 }
 
 impl Fabric {
@@ -39,7 +63,20 @@ impl Fabric {
                     .collect(),
             );
         }
-        Self { cluster, ml, links, time_scale }
+        Self { cluster, ml, links, time_scale, interposer: None, seqs: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Arm a chaos interposer: [`transmit_interposed`](Self::transmit_interposed)
+    /// consults it per message. Plain [`transmit`](Self::transmit) callers
+    /// (the cross-DC demo coordinator, collectives) are deliberately exempt —
+    /// they assume reliable delivery.
+    pub fn with_interposer(mut self, ip: Arc<dyn Interposer>) -> Self {
+        self.interposer = Some(ip);
+        self
+    }
+
+    pub fn has_interposer(&self) -> bool {
+        self.interposer.is_some()
     }
 
     pub fn gpus(&self) -> usize {
@@ -55,6 +92,46 @@ impl Fabric {
         let e = &self.links[level][self.ml.worker_of(src, level)].0;
         let i = &self.links[level][self.ml.worker_of(dst, level)].1;
         Link::transmit_multi(&[e, i], bytes);
+    }
+
+    /// [`transmit`](Self::transmit) under the armed [`Interposer`]: pays
+    /// pacing either way (the bytes leave the NIC), returns whether the
+    /// message survived the network. `true` means the caller should hand
+    /// the message to the receiver; `false` means it was eaten in flight.
+    /// Loopback is exempt (always delivered, no sequence number drawn), and
+    /// with no interposer armed this is exactly `transmit` + `true`.
+    pub fn transmit_interposed(&self, src: usize, dst: usize, bytes: usize) -> bool {
+        if src == dst {
+            return true;
+        }
+        let Some(ip) = &self.interposer else {
+            self.transmit(src, dst, bytes);
+            return true;
+        };
+        let seq = {
+            let mut seqs = self.seqs.lock().unwrap();
+            let c = seqs.entry((src, dst)).or_insert(0);
+            let s = *c;
+            *c += 1;
+            s
+        };
+        match ip.verdict(src, dst, bytes, seq) {
+            Verdict::Deliver => {
+                self.transmit(src, dst, bytes);
+                true
+            }
+            Verdict::Drop => {
+                self.transmit(src, dst, bytes);
+                false
+            }
+            Verdict::Delay(sim_secs) => {
+                self.transmit(src, dst, bytes);
+                std::thread::sleep(Duration::from_secs_f64(
+                    sim_secs.max(0.0) / self.time_scale,
+                ));
+                true
+            }
+        }
     }
 
     /// Wall-clock seconds → simulated seconds (undo `time_scale`).
@@ -88,6 +165,56 @@ mod tests {
         let t0 = Instant::now();
         f.transmit(3, 3, 100_000_000);
         assert!(t0.elapsed().as_secs_f64() < 0.01);
+    }
+
+    /// A scripted interposer: drops every third message on each pair.
+    struct EveryThird;
+    impl Interposer for EveryThird {
+        fn verdict(&self, _s: usize, _d: usize, _b: usize, seq: u64) -> Verdict {
+            if seq % 3 == 2 {
+                Verdict::Drop
+            } else {
+                Verdict::Deliver
+            }
+        }
+    }
+
+    #[test]
+    fn interposer_rules_per_pair_in_sequence_order() {
+        let f = Fabric::new(presets::dcs_x_gpus(2, 1, 1000.0, 1000.0), 100.0)
+            .with_interposer(Arc::new(EveryThird));
+        assert!(f.has_interposer());
+        let got: Vec<bool> = (0..6).map(|_| f.transmit_interposed(0, 1, 8)).collect();
+        assert_eq!(got, vec![true, true, false, true, true, false]);
+        // each direction draws its own sequence counter
+        let rev: Vec<bool> = (0..3).map(|_| f.transmit_interposed(1, 0, 8)).collect();
+        assert_eq!(rev, vec![true, true, false]);
+        // loopback is exempt and draws no sequence number
+        assert!(f.transmit_interposed(2, 2, 8));
+        assert!(f.transmit_interposed(0, 1, 8), "seq 6 delivers");
+    }
+
+    #[test]
+    fn unarmed_fabric_delivers_everything() {
+        let f = Fabric::new(presets::dcs_x_gpus(2, 1, 1000.0, 1000.0), 100.0);
+        assert!(!f.has_interposer());
+        assert!((0..10).all(|_| f.transmit_interposed(0, 1, 8)));
+    }
+
+    #[test]
+    fn delay_verdict_stretches_delivery() {
+        struct SlowBy(f64);
+        impl Interposer for SlowBy {
+            fn verdict(&self, _s: usize, _d: usize, _b: usize, _q: u64) -> Verdict {
+                Verdict::Delay(self.0)
+            }
+        }
+        // 2 sim-seconds at time_scale 100 = 20 ms of wall delay
+        let f = Fabric::new(presets::dcs_x_gpus(2, 1, 1000.0, 1000.0), 100.0)
+            .with_interposer(Arc::new(SlowBy(2.0)));
+        let t0 = Instant::now();
+        assert!(f.transmit_interposed(0, 1, 8));
+        assert!(t0.elapsed().as_secs_f64() >= 0.018, "delay verdict not applied");
     }
 
     #[test]

@@ -52,6 +52,42 @@ pub struct CrossDcCfg {
     pub seed: u64,
 }
 
+impl CrossDcCfg {
+    /// Reject degenerate configs *before* any artifact access or worker
+    /// spawn (PR 3 zero-input convention: a descriptive error, never a
+    /// vacuous `Vec<IterStats>` or a worker-side panic).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.iterations >= 1,
+            "cross-DC run needs at least one iteration — a zero-iteration run \
+             would return vacuous stats"
+        );
+        anyhow::ensure!(
+            !self.cluster.levels.is_empty(),
+            "cross-DC run needs a cluster with at least one level — \
+             an empty topology has no workers to spawn"
+        );
+        anyhow::ensure!(
+            self.cluster.total_gpus() >= 1,
+            "cross-DC run needs at least one GPU, cluster {:?} has zero \
+             (a zero fanout collapses the worker set)",
+            self.cluster.name
+        );
+        anyhow::ensure!(
+            self.time_scale.is_finite() && self.time_scale > 0.0,
+            "time_scale {} must be finite and positive",
+            self.time_scale
+        );
+        anyhow::ensure!(
+            self.partition.len() == self.cluster.levels.len(),
+            "partition has {} levels but the cluster has {}",
+            self.partition.len(),
+            self.cluster.levels.len()
+        );
+        Ok(())
+    }
+}
+
 /// Per-iteration result (aggregated over workers).
 #[derive(Clone, Copy, Debug)]
 pub struct IterStats {
@@ -81,6 +117,7 @@ struct DemoDims {
 
 /// Run the configured cross-DC workload; returns per-iteration stats.
 pub fn run_cross_dc(arts: &Artifacts, cfg: &CrossDcCfg) -> Result<Vec<IterStats>> {
+    cfg.validate()?;
     let demo = arts.demo_config()?;
     let dims = DemoDims {
         batch: demo.req("batch")?.as_usize()?,
@@ -458,6 +495,35 @@ mod tests {
         assert_eq!(to_sim_secs(&stats, 1.0), vec![0.5, 2.0]);
         assert_eq!(to_sim_secs(&stats, 0.0), vec![0.0, 0.0]);
         assert!(to_sim_secs(&[], 40.0).is_empty());
+    }
+
+    /// PR 3 zero-input convention: degenerate configs are a descriptive
+    /// error *before* artifact access — never a vacuous `Vec<IterStats>`.
+    /// `validate()` needs no artifacts, so this runs everywhere.
+    #[test]
+    fn degenerate_configs_error_descriptively_instead_of_vacuous_stats() {
+        // the well-formed baseline passes
+        cfg(vec![1, 1], None).validate().unwrap();
+        // zero iterations
+        let zero_iters = CrossDcCfg { iterations: 0, ..cfg(vec![1, 1], None) };
+        let err = zero_iters.validate().unwrap_err().to_string();
+        assert!(err.contains("iteration"), "unhelpful error: {err}");
+        // zero workers: a level with fanout 0
+        let mut dead = cfg(vec![1, 1], None);
+        dead.cluster.levels[1].fanout = 0;
+        let err = dead.validate().unwrap_err().to_string();
+        assert!(err.contains("zero"), "unhelpful error: {err}");
+        // an empty topology
+        let mut empty = cfg(vec![], None);
+        empty.cluster.levels.clear();
+        let err = empty.validate().unwrap_err().to_string();
+        assert!(err.contains("level"), "unhelpful error: {err}");
+        // partition arity mismatch is caught up front, not at worker spawn
+        let err = cfg(vec![1], None).validate().unwrap_err().to_string();
+        assert!(err.contains("partition"), "unhelpful error: {err}");
+        // non-positive time compression
+        let frozen = CrossDcCfg { time_scale: 0.0, ..cfg(vec![1, 1], None) };
+        assert!(frozen.validate().is_err());
     }
 
     #[test]

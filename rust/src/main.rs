@@ -7,6 +7,8 @@
 //!   train        run real training through the PJRT runtime
 //!   experiments  regenerate paper tables/figures (fig2b, fig12, table5,
 //!                fig13, table6, fig16, table7, fig17, or `all`)
+//!   chaos        live multi-threaded chaos run: coordinator leases,
+//!                checkpointed recovery, elastic failover under seeded faults
 //!   bench-all    run every bench target in sequence and merge their rows
 //!                into one `BENCH_netsim.json` perf trajectory
 
@@ -54,11 +56,12 @@ fn run() -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "train" => cmd_train(&args),
         "experiments" => cmd_experiments(&args),
+        "chaos" => cmd_chaos(&args),
         "bench-all" => cmd_bench_all(&args),
         _ => {
             println!(
                 "hybrid-ep — cross-DC expert parallelism (paper reproduction)\n\n\
-                 usage: hybrid-ep <plan|topo|simulate|sweep|train|experiments|bench-all> [--flags]\n\
+                 usage: hybrid-ep <plan|topo|simulate|sweep|train|experiments|chaos|bench-all> [--flags]\n\
                    plan        --cluster S|M|L --data-mb D --expert-mb E [--cr CR] [--joint]\n\
                                (--joint searches the 4D PP × TP × EP × DP grid)\n\
                                [--joint-sim]  (memoized simulation-backed search)\n\
@@ -82,6 +85,13 @@ fn run() -> Result<()> {
                                detection|all\n\
                                [--threads N]\n\
                                [--per-dc 1,4,8]  (fig17: folded dense rows at N GPUs/DC)\n\
+                   chaos       --seed S --nodes N --faults F\n\
+                               --recovery-mode elastic|static|failover\n\
+                               [--iters I] [--replicas R] [--interval K]\n\
+                               [--drop-p P] [--delay-p P] [--revive] [--quick]\n\
+                               (live run: one OS thread per node, seeded kills/\n\
+                               stalls/drops, lease detection + recovery; prints\n\
+                               the replayable event log)\n\
                    bench-all   [--quick] [--only fig17,hotpath]  (runs cargo bench per target,\n\
                                merging rows into BENCH_netsim.json)"
             );
@@ -512,9 +522,98 @@ fn cmd_experiments(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `chaos`: a live multi-threaded run — one OS thread per node through the
+/// interposed fabric — under a seeded fault schedule, with coordinator
+/// leases, durable checkpoint manifests and the selected recovery mode.
+/// Prints the replayable event log (byte-identical across runs of the same
+/// seed) and a summary; exits non-zero if the run wedges past the watchdog.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use hybrid_ep::plan::replanner::elastic::RecoveryMode;
+    use hybrid_ep::runtime::chaos::{ChaosCfg, ChaosSchedule};
+    use hybrid_ep::runtime::harness::{self, HarnessCfg};
+    let seed = args.usize_or("seed", 0)? as u64;
+    let nodes = args.usize_or("nodes", 4)?;
+    let quick = args.bool("quick");
+    let iters = args.usize_or("iters", if quick { 12 } else { 32 })?;
+    let faults = args.usize_or("faults", 2)?;
+    let store = std::env::temp_dir().join(format!("hybrid_ep_chaos_cli_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store);
+    let mut cfg = HarnessCfg::quick(nodes, iters, seed, store);
+    cfg.replicas = args.usize_or("replicas", cfg.replicas.min(nodes))?;
+    cfg.checkpoint_interval = args.usize_or("interval", cfg.checkpoint_interval)?;
+    cfg.recovery = match args.get_or("recovery-mode", "elastic") {
+        "elastic" => RecoveryMode::Elastic,
+        "static" | "static-restart" => RecoveryMode::StaticRestart,
+        "failover" | "replica-failover" => RecoveryMode::ReplicaFailover,
+        other => bail!("unknown recovery mode {other:?} (elastic|static|failover)"),
+    };
+    let chaos = ChaosCfg {
+        seed,
+        faults,
+        drop_p: args.f64_or("drop-p", 0.05)?,
+        delay_p: args.f64_or("delay-p", 0.10)?,
+        max_delay_sim_secs: args.f64_or("max-delay", 0.05)?,
+        revive: args.bool("revive"),
+    };
+    chaos.validate()?;
+    let sched = if faults == 0 {
+        ChaosSchedule::none(seed).with_message_chaos(
+            chaos.drop_p,
+            chaos.delay_p,
+            chaos.max_delay_sim_secs,
+        )
+    } else {
+        ChaosSchedule::random(nodes, iters, cfg.lease.timeout_secs(), &chaos)?
+    };
+    println!(
+        "chaos: {nodes} nodes x {iters} iters, seed {seed}, recovery {:?}, \
+         drop {} delay {} (lease {}s x {} beats)",
+        cfg.recovery,
+        chaos.drop_p,
+        chaos.delay_p,
+        cfg.lease.period_secs,
+        cfg.lease.timeout_beats
+    );
+    for f in &sched.node_faults {
+        println!("  scheduled: node {} at iter {} {:?} revive_at {:?}", f.node, f.at_iter, f.kind, f.revive_at);
+    }
+    let r = harness::run(&cfg, &sched)?;
+    println!("\nevent log (replayable; diff across seeds):");
+    print!("{}", r.log.to_text());
+    let mean_rec =
+        if r.recovery_secs.is_empty() { 0.0 } else { r.recovery_secs.iter().sum::<f64>() / r.recovery_secs.len() as f64 };
+    println!(
+        "\ncommitted {}/{} iterations over {} epoch(s) in {:.2}s: {} lease expiries, \
+         {} recoveries ({} manifest restores, {} redone iters, mean recovery {:.0}ms), \
+         {} published checkpoints, {} heartbeats",
+        r.committed,
+        iters,
+        r.epochs,
+        r.wall_secs,
+        r.lease_expiries,
+        r.recoveries,
+        r.restores,
+        r.redone_iters,
+        mean_rec * 1e3,
+        r.checkpoints,
+        r.heartbeats
+    );
+    for p in &r.replans {
+        match &p.config {
+            Some(c) => println!(
+                "replan (epoch {}, {} survivors): pp={} tp={} ep={} dp={} mb={}",
+                p.epoch, p.survivors, c.pp, c.tp, c.ep, c.dp, c.microbatches
+            ),
+            None => println!("replan (epoch {}, {} survivors): no feasible joint config", p.epoch, p.survivors),
+        }
+    }
+    Ok(())
+}
+
 /// Every bench target, in deterministic order. Kept in sync with the
 /// `[[bench]]` sections of `Cargo.toml` (and EXPERIMENTS.md).
 const BENCH_TARGETS: &[&str] = &[
+    "chaos_soak",
     "detection_failover",
     "failure_recovery",
     "fig11_latency_verification",

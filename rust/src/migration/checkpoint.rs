@@ -16,6 +16,10 @@
 //! hold `w − 0 = w` verbatim — so the recovery path can be validated
 //! end-to-end without a tolerance.
 
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
 use crate::cluster::ClusterSpec;
 use crate::migration::sr_codec::{self, SrEncoded};
 use crate::systems::hybrid_ep::MigrationCfg;
@@ -119,6 +123,176 @@ impl Checkpoint {
     /// Total store bytes of the checkpoint (wire format).
     pub fn store_bytes(&self) -> usize {
         self.frames.iter().map(SrEncoded::wire_bytes).sum()
+    }
+
+    /// Serialize to the durable wire format:
+    /// `[shared_len: u32 LE][shared: f32 LE ×len][n_frames: u32 LE]`
+    /// followed by each frame as `[frame_len: u32 LE][SrEncoded::to_bytes]`.
+    /// The crash-consistency footer is *not* part of this payload — the
+    /// [`CheckpointStore`] appends it on write so every stored artifact
+    /// (checkpoints, manifests) shares one torn-file discipline.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + 4 * self.shared.len() + self.store_bytes());
+        out.extend_from_slice(&(self.shared.len() as u32).to_le_bytes());
+        for v in &self.shared {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.frames.len() as u32).to_le_bytes());
+        for f in &self.frames {
+            let b = f.to_bytes();
+            out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+            out.extend_from_slice(&b);
+        }
+        out
+    }
+
+    /// Inverse of [`to_bytes`](Self::to_bytes). Errors on truncation or
+    /// malformed frames (the store's footer check catches torn files first;
+    /// this guards against logic errors and hand-built payloads).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut cur = Cursor { b: bytes, at: 0 };
+        let shared_len = cur.u32()? as usize;
+        let mut shared = Vec::with_capacity(shared_len);
+        for _ in 0..shared_len {
+            shared.push(f32::from_le_bytes(cur.take(4)?.try_into().unwrap()));
+        }
+        let n_frames = cur.u32()? as usize;
+        let mut frames = Vec::with_capacity(n_frames);
+        for i in 0..n_frames {
+            let len = cur.u32()? as usize;
+            let frame = SrEncoded::from_bytes(cur.take(len)?)
+                .with_context(|| format!("checkpoint frame {i} is malformed"))?;
+            frames.push(frame);
+        }
+        ensure!(cur.at == bytes.len(), "checkpoint has {} trailing bytes", bytes.len() - cur.at);
+        Ok(Self { shared, frames })
+    }
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+struct Cursor<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.at + n <= self.b.len(),
+            "checkpoint truncated: need {n} bytes at offset {}, have {}",
+            self.at,
+            self.b.len() - self.at
+        );
+        let out = &self.b[self.at..self.at + n];
+        self.at += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+/// Footer magic: the store refuses files that do not end in it.
+const STORE_MAGIC: u64 = 0x4859_4250_434B_5031; // "HYBPCKP1"
+
+/// FNV-1a 64-bit — the footer checksum (dependency-free, byte-order stable).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A durable artifact store with crash-consistent writes.
+///
+/// Every artifact is written as `[payload][len: u64 LE][fnv1a(payload): u64
+/// LE][magic: u64 LE]` to a temporary file in the same directory and then
+/// atomically renamed into place, so a reader never observes a
+/// half-renamed file under POSIX rename semantics. A *torn* file — killed
+/// mid-write before the rename, or truncated/corrupted on disk — fails the
+/// footer check on load and is reported as an error so recovery can fall
+/// back to the previous checkpoint epoch (see `runtime::harness`).
+#[derive(Clone, Debug)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    /// Open (creating if needed) a store rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint store at {}", dir.display()))?;
+        Ok(Self { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn path_of(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    /// Atomically persist `payload` under `name` (footer appended).
+    pub fn save(&self, name: &str, payload: &[u8]) -> Result<PathBuf> {
+        let mut framed = Vec::with_capacity(payload.len() + 24);
+        framed.extend_from_slice(payload);
+        framed.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        framed.extend_from_slice(&fnv1a(payload).to_le_bytes());
+        framed.extend_from_slice(&STORE_MAGIC.to_le_bytes());
+        let final_path = self.path_of(name);
+        // unique temp name per (thread, name): concurrent writers of
+        // *different* artifacts never collide, and a crash leaves only a
+        // `.tmp-` orphan that load() ignores
+        let tmp = self.dir.join(format!(".tmp-{:x}-{name}", fnv1a(name.as_bytes())));
+        std::fs::write(&tmp, &framed)
+            .with_context(|| format!("writing checkpoint temp file {}", tmp.display()))?;
+        std::fs::rename(&tmp, &final_path)
+            .with_context(|| format!("publishing checkpoint {}", final_path.display()))?;
+        Ok(final_path)
+    }
+
+    /// Load and verify `name`, returning the payload with the footer
+    /// stripped. Torn/partial/corrupt files are a descriptive `Err` — the
+    /// caller decides whether to fall back to an older epoch.
+    pub fn load(&self, name: &str) -> Result<Vec<u8>> {
+        let path = self.path_of(name);
+        let framed = std::fs::read(&path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        if framed.len() < 24 {
+            bail!("checkpoint {name} is torn: {} bytes, below the 24-byte footer", framed.len());
+        }
+        let (payload, footer) = framed.split_at(framed.len() - 24);
+        let len = u64::from_le_bytes(footer[0..8].try_into().unwrap());
+        let sum = u64::from_le_bytes(footer[8..16].try_into().unwrap());
+        let magic = u64::from_le_bytes(footer[16..24].try_into().unwrap());
+        ensure!(magic == STORE_MAGIC, "checkpoint {name} has a foreign/torn footer");
+        ensure!(
+            len == payload.len() as u64,
+            "checkpoint {name} is torn: footer claims {len} payload bytes, file holds {}",
+            payload.len()
+        );
+        ensure!(sum == fnv1a(payload), "checkpoint {name} failed its checksum — corrupt or torn");
+        Ok(payload.to_vec())
+    }
+
+    /// Names of all published (non-temporary) artifacts, sorted.
+    pub fn list(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("listing checkpoint store {}", self.dir.display()))?
+        {
+            let name = entry?.file_name().to_string_lossy().into_owned();
+            if !name.starts_with(".tmp-") {
+                out.push(name);
+            }
+        }
+        out.sort();
+        Ok(out)
     }
 }
 
@@ -245,6 +419,72 @@ mod tests {
             prop_assert!(ck.store_bytes() == want, "store bytes");
             Ok(())
         });
+    }
+
+    fn tmp_store(tag: &str) -> CheckpointStore {
+        let dir = std::env::temp_dir()
+            .join(format!("hybrid_ep_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        CheckpointStore::open(dir).expect("open store")
+    }
+
+    #[test]
+    fn serialized_checkpoint_roundtrips_bit_exactly() {
+        let experts: Vec<Vec<f32>> =
+            (0..3).map(|e| (0..32).map(|i| (e * 100 + i) as f32 * 0.37 - 5.0).collect()).collect();
+        let shared: Vec<f32> = (0..32).map(|i| i as f32 * 0.01).collect();
+        let ck = Checkpoint::capture(&experts, &shared, 32);
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).expect("roundtrip");
+        assert_eq!(back.n_experts(), 3);
+        for (a, b) in back.shared.iter().zip(&ck.shared) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for i in 0..3 {
+            let (r, w) = (back.restore_expert(i), ck.restore_expert(i));
+            assert!(r.iter().zip(&w).all(|(a, b)| a.to_bits() == b.to_bits()), "expert {i}");
+        }
+        // truncation anywhere inside the payload is a descriptive error
+        let bytes = ck.to_bytes();
+        for cut in [3, bytes.len() / 2, bytes.len() - 1] {
+            assert!(Checkpoint::from_bytes(&bytes[..cut]).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn store_roundtrips_and_lists_published_artifacts() {
+        let store = tmp_store("roundtrip");
+        let payload = vec![7u8; 1000];
+        store.save("shard_e0000_i0004_n0.ckpt", &payload).unwrap();
+        assert_eq!(store.load("shard_e0000_i0004_n0.ckpt").unwrap(), payload);
+        // empty payloads are legal (footer-only files)
+        store.save("empty", &[]).unwrap();
+        assert_eq!(store.load("empty").unwrap(), Vec::<u8>::new());
+        assert_eq!(store.list().unwrap(), vec!["empty", "shard_e0000_i0004_n0.ckpt"]);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn torn_and_corrupt_files_are_detected_not_trusted() {
+        let store = tmp_store("torn");
+        let payload: Vec<u8> = (0..255).collect();
+        let path = store.save("victim", &payload).unwrap();
+        // torn: truncate mid-payload (simulates a crash before the footer)
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let err = store.load("victim").unwrap_err().to_string();
+        assert!(err.contains("victim"), "error must name the artifact: {err}");
+        // corrupt: flip one payload byte under an intact footer
+        let mut flipped = full.clone();
+        flipped[10] ^= 0xFF;
+        std::fs::write(&path, &flipped).unwrap();
+        let err = store.load("victim").unwrap_err().to_string();
+        assert!(err.contains("checksum"), "bit flip must fail the checksum: {err}");
+        // shorter than the footer itself
+        std::fs::write(&path, [1, 2, 3]).unwrap();
+        assert!(store.load("victim").is_err());
+        // missing entirely
+        assert!(store.load("never_written").is_err());
+        let _ = std::fs::remove_dir_all(store.dir());
     }
 
     #[test]

@@ -380,6 +380,24 @@ pub mod elastic {
         ReplicaFailover,
     }
 
+    /// CLI spelling of the modes (`chaos --recovery-mode`, sweep flags).
+    impl std::str::FromStr for RecoveryMode {
+        type Err = anyhow::Error;
+
+        fn from_str(s: &str) -> Result<Self> {
+            match s {
+                "elastic" => Ok(Self::Elastic),
+                "static-restart" | "scratch" | "restart" => Ok(Self::StaticRestart),
+                "replica-failover" | "failover" => Ok(Self::ReplicaFailover),
+                other => Err(anyhow::anyhow!(
+                    "unknown recovery mode {other:?} — expected elastic, \
+                     static-restart (alias: scratch), or replica-failover \
+                     (alias: failover)"
+                )),
+            }
+        }
+    }
+
     /// One failure-recovery scenario: a workload trained for `iters`
     /// iterations on `cluster` while `trace` strikes (event times in
     /// iteration units; events at `t ≥ iters` never fire).
@@ -734,6 +752,21 @@ mod tests {
     use super::*;
     use crate::cluster::presets;
     use crate::moe::routing::Placement;
+
+    /// `--recovery-mode` spellings round-trip; unknowns name the choices.
+    #[test]
+    fn recovery_mode_parses_cli_spellings() {
+        use elastic::RecoveryMode;
+        assert_eq!("elastic".parse::<RecoveryMode>().unwrap(), RecoveryMode::Elastic);
+        for s in ["static-restart", "scratch", "restart"] {
+            assert_eq!(s.parse::<RecoveryMode>().unwrap(), RecoveryMode::StaticRestart);
+        }
+        for s in ["replica-failover", "failover"] {
+            assert_eq!(s.parse::<RecoveryMode>().unwrap(), RecoveryMode::ReplicaFailover);
+        }
+        let err = "yolo".parse::<RecoveryMode>().unwrap_err().to_string();
+        assert!(err.contains("yolo") && err.contains("elastic"), "unhelpful: {err}");
+    }
 
     fn shift_workload() -> MoEWorkload {
         // chosen so the closed-form optimum is EP ([1, 1]) under even

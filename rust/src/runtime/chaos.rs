@@ -1,0 +1,552 @@
+//! Seeded chaos for the live harness: fault schedules, a deterministic
+//! message interposer, and the structured event log.
+//!
+//! The schedule speaks the same grammar as the simulator's
+//! [`netsim::faults`](crate::netsim::faults) traces — worker kills are DC
+//! losses, slow-node stalls are `SlowNode` degradations, revivals are
+//! `recover_at` — but strikes a *live* run: kills and stalls are executed
+//! by the worker threads at iteration boundaries, drops/delays are ruled
+//! per message by a [`ChaosInterposer`] armed on the
+//! [`Fabric`](crate::comm::fabric::Fabric). Everything derives from one
+//! SplitMix64 seed:
+//!
+//! * node faults come from [`ChaosSchedule::random`] (seeded
+//!   [`Rng`](crate::util::rng::Rng));
+//! * per-message verdicts hash `(seed, src, dst, seq)` statelessly, so the
+//!   ruling for the *k*-th message of a channel pair is a pure function of
+//!   the seed — independent of thread interleaving across pairs.
+//!
+//! The [`EventLog`] records only control-plane facts in deterministic
+//! units (epochs, node ids, committed iterations — never wall-clock), so
+//! two runs of the same seed render byte-identical logs and any divergence
+//! diffs down to the first differing line.
+
+use anyhow::{ensure, Result};
+
+use crate::comm::fabric::{Interposer, Verdict};
+use crate::netsim::faults::FailureTrace;
+use crate::plan::replanner::elastic::RecoveryMode;
+use crate::util::rng::Rng;
+
+/// SplitMix64 — the same mixer `util::rng` seeds with; used here as a
+/// stateless hash so verdicts need no shared mutable state.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Hash to `[0, 1)`.
+fn unit(x: u64) -> f64 {
+    (splitmix64(x) >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// What happens to a node at its scheduled iteration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NodeFaultKind {
+    /// The worker thread exits before executing the iteration (crash).
+    Kill,
+    /// The worker sleeps this many wall seconds before the iteration
+    /// (beats stop during the sleep). Stalls longer than the lease timeout
+    /// are evicted; shorter ones must ride out undetected.
+    Stall(f64),
+}
+
+/// One scheduled node fault, in *global iteration* units.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeFault {
+    pub node: usize,
+    /// Fires when the node is first about to execute this iteration.
+    pub at_iter: usize,
+    pub kind: NodeFaultKind,
+    /// For kills only: re-admit a fresh worker for this node id once the
+    /// committed iteration reaches this bound (`recovering_at` grammar).
+    pub revive_at: Option<usize>,
+}
+
+/// Knobs for [`ChaosSchedule::random`].
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosCfg {
+    pub seed: u64,
+    /// Number of node faults (kills/stalls) to schedule.
+    pub faults: usize,
+    /// Per-message drop probability on interposed channels.
+    pub drop_p: f64,
+    /// Per-message delay probability; delays are uniform in
+    /// `(0, max_delay_sim_secs]` **simulated** seconds.
+    pub delay_p: f64,
+    pub max_delay_sim_secs: f64,
+    /// Whether killed nodes are revived later in the run.
+    pub revive: bool,
+}
+
+impl Default for ChaosCfg {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            faults: 1,
+            drop_p: 0.05,
+            delay_p: 0.10,
+            max_delay_sim_secs: 0.5,
+            revive: false,
+        }
+    }
+}
+
+impl ChaosCfg {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            (0.0..=0.2).contains(&self.drop_p),
+            "drop probability {} outside [0, 0.2] — higher rates starve the \
+             bounded ack-retry data plane",
+            self.drop_p
+        );
+        ensure!(
+            (0.0..=1.0).contains(&self.delay_p),
+            "delay probability {} outside [0, 1]",
+            self.delay_p
+        );
+        ensure!(
+            self.max_delay_sim_secs.is_finite() && self.max_delay_sim_secs >= 0.0,
+            "max delay {} must be finite and non-negative",
+            self.max_delay_sim_secs
+        );
+        Ok(())
+    }
+}
+
+/// A fully resolved chaos schedule for one harness run.
+#[derive(Clone, Debug)]
+pub struct ChaosSchedule {
+    pub seed: u64,
+    pub node_faults: Vec<NodeFault>,
+    pub drop_p: f64,
+    pub delay_p: f64,
+    pub max_delay_sim_secs: f64,
+}
+
+impl ChaosSchedule {
+    /// A fault-free schedule (still seeded: the seed names the run).
+    pub fn none(seed: u64) -> Self {
+        Self { seed, node_faults: Vec::new(), drop_p: 0.0, delay_p: 0.0, max_delay_sim_secs: 0.0 }
+    }
+
+    /// Builder: crash `node` before it executes `at_iter`.
+    pub fn kill(mut self, node: usize, at_iter: usize) -> Self {
+        self.node_faults.push(NodeFault { node, at_iter, kind: NodeFaultKind::Kill, revive_at: None });
+        self.sort();
+        self
+    }
+
+    /// Builder: stall `node` for `secs` wall seconds before `at_iter`.
+    pub fn stall(mut self, node: usize, at_iter: usize, secs: f64) -> Self {
+        self.node_faults
+            .push(NodeFault { node, at_iter, kind: NodeFaultKind::Stall(secs), revive_at: None });
+        self.sort();
+        self
+    }
+
+    /// Builder: the most recently added fault revives at committed
+    /// iteration `revive_at` (kills only; `recovering_at` grammar).
+    pub fn reviving_at(mut self, revive_at: usize) -> Self {
+        if let Some(f) = self.node_faults.last_mut() {
+            f.revive_at = Some(revive_at);
+        }
+        self
+    }
+
+    /// Builder: per-message drop/delay chaos on the interposed channels.
+    pub fn with_message_chaos(mut self, drop_p: f64, delay_p: f64, max_delay_sim_secs: f64) -> Self {
+        self.drop_p = drop_p;
+        self.delay_p = delay_p;
+        self.max_delay_sim_secs = max_delay_sim_secs;
+        self
+    }
+
+    fn sort(&mut self) {
+        self.node_faults.sort_by_key(|f| (f.at_iter, f.node));
+    }
+
+    /// Seeded random schedule over `nodes` workers and `iters` iterations.
+    ///
+    /// Guarantees that make soak runs meaningful and deterministic:
+    /// * at least two nodes survive all kills (the re-solved layout keeps a
+    ///   cross-DC structure);
+    /// * at most one fault per node (no kill-the-corpse schedules);
+    /// * kills land in `[1, iters)` so at least one iteration commits first;
+    /// * stalls are either *short* (`0.3 ×` the lease timeout — must ride
+    ///   out undetected) or *long* (`3 ×` — must be evicted), never near
+    ///   the detection boundary where wall-clock jitter could flip the log.
+    pub fn random(nodes: usize, iters: usize, lease_timeout_secs: f64, cfg: &ChaosCfg) -> Result<Self> {
+        cfg.validate()?;
+        ensure!(nodes >= 3, "chaos schedules need >= 3 nodes, got {nodes}");
+        ensure!(iters >= 4, "chaos schedules need >= 4 iterations, got {iters}");
+        let mut rng = Rng::new(cfg.seed);
+        let mut out = Self::none(cfg.seed).with_message_chaos(
+            cfg.drop_p,
+            cfg.delay_p,
+            cfg.max_delay_sim_secs,
+        );
+        let max_kills = nodes - 2; // keep two survivors
+        let mut kills = 0usize;
+        let mut victims: Vec<usize> = (0..nodes).collect();
+        rng.shuffle(&mut victims);
+        for &node in victims.iter().take(cfg.faults) {
+            let at_iter = 1 + rng.below(iters - 1);
+            let kill = kills < max_kills && rng.below(2) == 0;
+            if kill {
+                kills += 1;
+                let revive_at = (cfg.revive && at_iter + 2 < iters)
+                    .then(|| at_iter + 1 + rng.below(iters - at_iter - 1));
+                out.node_faults.push(NodeFault {
+                    node,
+                    at_iter,
+                    kind: NodeFaultKind::Kill,
+                    revive_at,
+                });
+            } else {
+                let secs = if rng.below(2) == 0 {
+                    0.3 * lease_timeout_secs
+                } else {
+                    3.0 * lease_timeout_secs
+                };
+                out.node_faults.push(NodeFault {
+                    node,
+                    at_iter,
+                    kind: NodeFaultKind::Stall(secs),
+                    revive_at: None,
+                });
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Nudge every fault off checkpoint-boundary iterations (multiples of
+    /// `interval`), keeping `at_iter` in `[1, iters)`. A fault *at* a
+    /// boundary races the manifest publication for that boundary — whether
+    /// the last shard lands before the death is wall-clock luck, which
+    /// would make the event log timing-dependent. One iteration of drift
+    /// preserves the schedule's shape while keeping logs byte-stable.
+    /// Identity when `interval <= 1` (every iteration is a boundary) or the
+    /// fault already sits off-boundary.
+    pub fn aligned_to(mut self, interval: usize, iters: usize) -> Self {
+        if interval > 1 {
+            for f in &mut self.node_faults {
+                if f.at_iter % interval == 0 {
+                    // prefer drifting later; step back from the end of run
+                    f.at_iter = if f.at_iter + 1 < iters {
+                        f.at_iter + 1
+                    } else {
+                        f.at_iter.saturating_sub(1).max(1)
+                    };
+                }
+                if let Some(r) = f.revive_at {
+                    f.revive_at = (r > f.at_iter + 1).then_some(r).or(Some(f.at_iter + 2));
+                }
+            }
+            self.sort();
+        }
+        self
+    }
+
+    /// The simulator-side expression of this schedule: kills are DC losses,
+    /// stalls are `SlowNode` degradations, revivals are `recover_at` — the
+    /// bridge that lets `netsim` replay what the live harness executed.
+    pub fn as_failure_trace(&self, iter_secs: f64) -> FailureTrace {
+        let mut t = FailureTrace::empty();
+        for f in &self.node_faults {
+            let at = f.at_iter as f64 * iter_secs;
+            match f.kind {
+                NodeFaultKind::Kill => {
+                    t = t.dc_loss(at, f.node);
+                    if let Some(r) = f.revive_at {
+                        t = t.recovering_at(r as f64 * iter_secs);
+                    }
+                }
+                NodeFaultKind::Stall(secs) => {
+                    t = t.slow_node(at, 0, f.node, 0.1).recovering_at(at + secs);
+                }
+            }
+        }
+        t
+    }
+
+    /// Faults this node executes itself, sorted by iteration. `after`
+    /// filters to strictly later iterations (revived workers must not
+    /// re-fire the kill that created them).
+    pub fn faults_for(&self, node: usize, after: Option<usize>) -> Vec<NodeFault> {
+        self.node_faults
+            .iter()
+            .filter(|f| f.node == node && after.map_or(true, |a| f.at_iter > a))
+            .copied()
+            .collect()
+    }
+
+    /// The interposer expressing this schedule's message chaos.
+    pub fn interposer(&self) -> ChaosInterposer {
+        ChaosInterposer {
+            seed: self.seed,
+            drop_p: self.drop_p,
+            delay_p: self.delay_p,
+            max_delay_sim_secs: self.max_delay_sim_secs,
+        }
+    }
+}
+
+/// Stateless seeded interposer: the verdict for message `seq` of pair
+/// `(src, dst)` is a pure function of `(seed, src, dst, seq)`.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosInterposer {
+    pub seed: u64,
+    pub drop_p: f64,
+    pub delay_p: f64,
+    pub max_delay_sim_secs: f64,
+}
+
+impl Interposer for ChaosInterposer {
+    fn verdict(&self, src: usize, dst: usize, _bytes: usize, seq: u64) -> Verdict {
+        let key = self
+            .seed
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add((src as u64) << 42)
+            .wrapping_add((dst as u64) << 21)
+            .wrapping_add(seq);
+        let u = unit(key);
+        if u < self.drop_p {
+            Verdict::Drop
+        } else if u < self.drop_p + self.delay_p {
+            // an independent sub-draw sizes the delay
+            Verdict::Delay(unit(key ^ 0x5ca1_ab1e) * self.max_delay_sim_secs)
+        } else {
+            Verdict::Deliver
+        }
+    }
+}
+
+/// One control-plane fact. Every field is deterministic under a fixed
+/// schedule — node ids, epochs, committed iterations — never wall-clock.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// A new epoch began with this membership, executing from `start_iter`.
+    EpochStart { epoch: u64, members: Vec<usize>, start_iter: usize },
+    /// All members durably checkpointed `iter` (manifest published).
+    CheckpointSaved { epoch: u64, iter: usize },
+    /// A member's lease expired. `done` is the *node's* completed-iteration
+    /// count at detection — a deterministic quantity under a fixed schedule
+    /// (the node died/stalled at a scheduled iteration), unlike the run's
+    /// global committed count, which can wobble by one with message-chaos
+    /// timing.
+    LeaseExpired { epoch: u64, node: usize, done: usize },
+    /// Recovery ran: `dead` evicted (or `joined` admitted), rolling back to
+    /// `start_iter` under `mode`.
+    Recovery {
+        epoch: u64,
+        mode: RecoveryMode,
+        dead: Vec<usize>,
+        joined: Vec<usize>,
+        start_iter: usize,
+        restored_from: Option<usize>,
+    },
+    /// The run committed all requested iterations.
+    Finished { epoch: u64, committed: usize },
+}
+
+/// Append-only, deterministically renderable run journal.
+#[derive(Clone, Debug, Default)]
+pub struct EventLog {
+    pub events: Vec<Event>,
+}
+
+impl EventLog {
+    pub fn push(&mut self, e: Event) {
+        self.events.push(e);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn count(&self, pred: impl Fn(&Event) -> bool) -> usize {
+        self.events.iter().filter(|e| pred(e)).count()
+    }
+
+    /// Canonical one-line-per-event rendering; byte-identical across runs
+    /// of the same seed (the soak gate diffs this).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            match e {
+                Event::EpochStart { epoch, members, start_iter } => {
+                    out.push_str(&format!(
+                        "epoch {epoch} start members={members:?} from_iter={start_iter}\n"
+                    ));
+                }
+                Event::CheckpointSaved { epoch, iter } => {
+                    out.push_str(&format!("epoch {epoch} checkpoint iter={iter}\n"));
+                }
+                Event::LeaseExpired { epoch, node, done } => {
+                    out.push_str(&format!(
+                        "epoch {epoch} lease-expired node={node} done={done}\n"
+                    ));
+                }
+                Event::Recovery { epoch, mode, dead, joined, start_iter, restored_from } => {
+                    out.push_str(&format!(
+                        "epoch {epoch} recovery mode={mode:?} dead={dead:?} joined={joined:?} \
+                         resume_from={start_iter} restored_from={restored_from:?}\n"
+                    ));
+                }
+                Event::Finished { epoch, committed } => {
+                    out.push_str(&format!("epoch {epoch} finished committed={committed}\n"));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite: interposer drop/delay rulings are deterministic under a
+    /// fixed seed — per (src, dst, seq), independent of call order — and
+    /// empirical rates track the configured probabilities.
+    #[test]
+    fn interposer_is_deterministic_and_rate_faithful() {
+        let sched = ChaosSchedule::none(42).with_message_chaos(0.1, 0.2, 0.5);
+        let a = sched.interposer();
+        let b = sched.interposer();
+        let mut drops = 0usize;
+        let mut delays = 0usize;
+        let n = 20_000u64;
+        for seq in 0..n {
+            let (src, dst) = ((seq % 5) as usize, ((seq / 5) % 5) as usize);
+            let va = a.verdict(src, dst, 64, seq);
+            assert_eq!(va, b.verdict(src, dst, 64, seq), "divergence at seq {seq}");
+            match va {
+                Verdict::Drop => drops += 1,
+                Verdict::Delay(d) => {
+                    assert!((0.0..=0.5).contains(&d), "delay {d} out of range");
+                    delays += 1;
+                }
+                Verdict::Deliver => {}
+            }
+        }
+        let (dr, de) = (drops as f64 / n as f64, delays as f64 / n as f64);
+        assert!((dr - 0.1).abs() < 0.02, "drop rate {dr} far from 0.1");
+        assert!((de - 0.2).abs() < 0.02, "delay rate {de} far from 0.2");
+        // a different seed rules differently somewhere
+        let c = ChaosSchedule::none(43).with_message_chaos(0.1, 0.2, 0.5).interposer();
+        assert!(
+            (0..1000).any(|s| c.verdict(0, 1, 64, s) != a.verdict(0, 1, 64, s)),
+            "seed does not influence verdicts"
+        );
+    }
+
+    #[test]
+    fn random_schedules_are_reproducible_and_respect_invariants() {
+        let cfg = ChaosCfg { seed: 7, faults: 3, revive: true, ..ChaosCfg::default() };
+        let a = ChaosSchedule::random(5, 24, 0.4, &cfg).unwrap();
+        let b = ChaosSchedule::random(5, 24, 0.4, &cfg).unwrap();
+        assert_eq!(a.node_faults, b.node_faults, "same seed, same schedule");
+        for seed in 0..32u64 {
+            let s = ChaosSchedule::random(5, 24, 0.4, &ChaosCfg { seed, ..cfg }).unwrap();
+            assert_eq!(s.node_faults.len(), 3);
+            let kills: Vec<_> = s
+                .node_faults
+                .iter()
+                .filter(|f| matches!(f.kind, NodeFaultKind::Kill))
+                .collect();
+            assert!(kills.len() <= 3, "two survivors required");
+            let mut nodes: Vec<_> = s.node_faults.iter().map(|f| f.node).collect();
+            nodes.sort_unstable();
+            nodes.dedup();
+            assert_eq!(nodes.len(), 3, "at most one fault per node");
+            for f in &s.node_faults {
+                assert!(f.at_iter >= 1 && f.at_iter < 24);
+                if let Some(r) = f.revive_at {
+                    assert!(r > f.at_iter && r < 24, "revive window: {f:?}");
+                }
+                if let NodeFaultKind::Stall(secs) = f.kind {
+                    let ratio = secs / 0.4;
+                    assert!(
+                        (ratio - 0.3).abs() < 1e-9 || (ratio - 3.0).abs() < 1e-9,
+                        "stall {secs}s sits near the detection boundary"
+                    );
+                }
+            }
+        }
+        // degenerate inputs error descriptively
+        assert!(ChaosSchedule::random(2, 24, 0.4, &cfg).is_err());
+        assert!(ChaosSchedule::random(5, 2, 0.4, &cfg).is_err());
+        let bad = ChaosCfg { drop_p: 0.9, ..ChaosCfg::default() };
+        assert!(ChaosSchedule::random(5, 24, 0.4, &bad).is_err());
+    }
+
+    #[test]
+    fn schedule_bridges_to_the_netsim_trace_grammar() {
+        let s = ChaosSchedule::none(1).kill(2, 5).reviving_at(9).stall(0, 3, 1.2);
+        let t = s.as_failure_trace(2.0);
+        assert_eq!(t.events.len(), 2);
+        // builder sort puts the stall (iter 3) first
+        assert_eq!(t.events[0].at, 6.0);
+        assert!(!t.events[0].is_permanent(), "stalls recover");
+        assert_eq!(t.events[1].at, 10.0);
+        assert_eq!(t.events[1].recover_at, Some(18.0));
+    }
+
+    #[test]
+    fn aligned_to_keeps_faults_off_checkpoint_boundaries() {
+        let s = ChaosSchedule::none(3).kill(1, 8).reviving_at(9).stall(2, 5, 0.1).kill(0, 23);
+        let a = s.clone().aligned_to(4, 24);
+        for f in &a.node_faults {
+            assert!(f.at_iter % 4 != 0, "fault still on a boundary: {f:?}");
+            assert!(f.at_iter >= 1 && f.at_iter < 24);
+            if let Some(r) = f.revive_at {
+                assert!(r > f.at_iter, "revive precedes the kill: {f:?}");
+            }
+        }
+        // off-boundary faults are untouched; interval 1 is the identity
+        assert!(a.node_faults.iter().any(|f| f.node == 2 && f.at_iter == 5));
+        assert_eq!(s.clone().aligned_to(1, 24).node_faults, s.node_faults);
+        // end-of-run boundary faults step back, not past the horizon
+        let edge = ChaosSchedule::none(0).kill(0, 24).aligned_to(4, 24);
+        assert_eq!(edge.node_faults[0].at_iter, 23);
+    }
+
+    #[test]
+    fn faults_for_filters_by_node_and_revival_horizon() {
+        let s = ChaosSchedule::none(1).kill(2, 5).kill(1, 3).stall(2, 9, 0.1);
+        assert_eq!(s.faults_for(2, None).len(), 2);
+        assert_eq!(s.faults_for(1, None).len(), 1);
+        assert_eq!(s.faults_for(0, None).len(), 0);
+        // a worker revived after iter 5 must not re-fire the iter-5 kill
+        let later = s.faults_for(2, Some(5));
+        assert_eq!(later.len(), 1);
+        assert_eq!(later[0].at_iter, 9);
+    }
+
+    #[test]
+    fn event_log_renders_deterministically() {
+        let mut log = EventLog::default();
+        log.push(Event::EpochStart { epoch: 0, members: vec![0, 1, 2], start_iter: 0 });
+        log.push(Event::LeaseExpired { epoch: 0, node: 1, done: 4 });
+        log.push(Event::Recovery {
+            epoch: 1,
+            mode: RecoveryMode::Elastic,
+            dead: vec![1],
+            joined: vec![],
+            start_iter: 4,
+            restored_from: Some(4),
+        });
+        log.push(Event::Finished { epoch: 1, committed: 8 });
+        let text = log.to_text();
+        assert_eq!(text.lines().count(), 4);
+        assert!(text.contains("lease-expired node=1 done=4"));
+        assert!(text.contains("mode=Elastic dead=[1]"));
+        assert_eq!(log.count(|e| matches!(e, Event::LeaseExpired { .. })), 1);
+    }
+}

@@ -1,0 +1,1732 @@
+//! Live multi-node chaos harness: real worker threads, leases, durable
+//! checkpoints, and elastic recovery — executed, not simulated.
+//!
+//! Each "node" is an OS thread hosting a shard of a deterministic expert
+//! trainer, exchanging real bytes per iteration over the throttled
+//! [`Fabric`] (chaos-interposed). A coordinator thread runs the control
+//! plane: epoch-numbered membership, heartbeat *leases* parameterized by
+//! [`DetectorCfg`] (same knobs as the simulator's detector), interval
+//! checkpoints published as manifests through [`CheckpointStore`], and —
+//! on a confirmed lease expiry — live recovery mirroring the simulation's
+//! [`RecoveryMode`]s: pause, shrink membership, restore the last verified
+//! checkpoint, re-solve the layout ([`shrink_cluster`] + the joint
+//! solver), resume. `ReplicaFailover` skips the rollback when every lost
+//! primary has a surviving replica holder.
+//!
+//! # Determinism contract
+//!
+//! The [`EventLog`] must render byte-identically across runs of one seed.
+//! Everything logged is therefore derived from *scheduled* quantities:
+//! node faults fire at fixed global iterations (nudged off checkpoint
+//! boundaries by [`ChaosSchedule::aligned_to`]), `LeaseExpired` records
+//! the dead node's own progress (not the global commit, which can wobble
+//! by one with ack timing), rollback targets are computed from the dead
+//! node's progress (`floor((done - 1)/interval) * interval`) rather than
+//! from the wall-clock-dependent commit front, and revivals join at exact
+//! commit counts. Message drops/delays/retries are deliberately *not*
+//! logged — their timing is real.
+//!
+//! # Exactly-once iteration accounting
+//!
+//! Workers track a per-expert `applied` count. Re-executed iterations
+//! (after a no-rollback failover or a grow) re-run the *exchange* but
+//! skip the already-applied update and re-report the memoized loss, so
+//! no optimizer step is ever double-counted; the committed loss history
+//! of any chaotic run matches a fault-free run of the same seed.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::cluster::{presets, ClusterSpec, ParallelismConfig};
+use crate::comm::async_comm::RetryCfg;
+use crate::comm::cluster::Message;
+use crate::comm::collectives::{bytes_to_f32s, f32s_to_bytes};
+use crate::comm::fabric::Fabric;
+use crate::migration::checkpoint::{Checkpoint, CheckpointStore};
+use crate::model::solver::solve_joint;
+use crate::moe::{GpuSpec, MoEWorkload};
+use crate::netsim::detect::DetectorCfg;
+use crate::plan::replanner::elastic::{shrink_cluster, RecoveryMode};
+use crate::runtime::chaos::{ChaosSchedule, Event, EventLog, NodeFault, NodeFaultKind};
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Knobs of one harness run.
+#[derive(Clone, Debug)]
+pub struct HarnessCfg {
+    /// Worker threads (one per simulated DC; node ids are stable for the
+    /// whole run, eviction never renumbers).
+    pub nodes: usize,
+    /// Global iterations to commit.
+    pub iters: usize,
+    pub experts_per_node: usize,
+    pub expert_dim: usize,
+    /// Dispatch bytes each node sends to each peer per iteration.
+    pub payload_bytes: usize,
+    pub inter_gbps: f64,
+    pub intra_gbps: f64,
+    /// Fabric time compression (bandwidth ratios preserved).
+    pub time_scale: f64,
+    /// Heartbeat lease: period, timeout (in beats), beat size — the same
+    /// parameterization the simulator's failure detector uses.
+    pub lease: DetectorCfg,
+    /// Checkpoint every this many committed iterations.
+    pub checkpoint_interval: usize,
+    pub store_dir: PathBuf,
+    pub recovery: RecoveryMode,
+    /// Holders per expert (1 = no replication).
+    pub replicas: usize,
+    pub seed: u64,
+    /// Coordinator watchdog: the run aborts with an error (never wedges)
+    /// if it has not finished within this wall bound. Workers hard-stop
+    /// at twice this bound even if the control channel is lost.
+    pub watchdog_secs: f64,
+    /// Ack-retry policy for the reliable data plane (reuses the async
+    /// communicator's backoff).
+    pub retry: RetryCfg,
+}
+
+impl HarnessCfg {
+    /// A small, fast configuration for tests and the `--quick` bench.
+    pub fn quick(nodes: usize, iters: usize, seed: u64, store_dir: impl Into<PathBuf>) -> Self {
+        Self {
+            nodes,
+            iters,
+            experts_per_node: 2,
+            expert_dim: 16,
+            payload_bytes: 16 * 1024,
+            inter_gbps: 20.0,
+            intra_gbps: 100.0,
+            time_scale: 200.0,
+            lease: DetectorCfg { period_secs: 0.025, timeout_beats: 3, beat_bytes: 1e3 },
+            checkpoint_interval: 4,
+            store_dir: store_dir.into(),
+            recovery: RecoveryMode::Elastic,
+            replicas: 2,
+            seed,
+            watchdog_secs: 30.0,
+            retry: RetryCfg {
+                max_attempts: 12,
+                base_backoff: Duration::from_millis(2),
+                max_backoff: Duration::from_millis(20),
+            },
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.nodes >= 1, "harness needs at least one node");
+        ensure!(self.iters >= 1, "harness needs at least one iteration");
+        ensure!(self.experts_per_node >= 1, "need at least one expert per node");
+        ensure!(self.expert_dim >= 1, "expert dimension must be positive");
+        ensure!(self.payload_bytes >= 1, "per-peer payload must be positive");
+        ensure!(self.checkpoint_interval >= 1, "checkpoint interval must be >= 1");
+        ensure!(
+            (1..=self.nodes).contains(&self.replicas),
+            "replicas {} outside [1, {}]",
+            self.replicas,
+            self.nodes
+        );
+        ensure!(
+            self.time_scale.is_finite() && self.time_scale > 0.0,
+            "time_scale {} must be finite and positive",
+            self.time_scale
+        );
+        ensure!(
+            self.watchdog_secs.is_finite() && self.watchdog_secs > 0.0,
+            "watchdog {} must be finite and positive",
+            self.watchdog_secs
+        );
+        ensure!(self.retry.max_attempts >= 1, "retry needs at least one attempt");
+        self.lease.validate()?;
+        Ok(())
+    }
+
+    fn e_total(&self) -> usize {
+        self.nodes * self.experts_per_node
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire protocol: tags, control plane, data routing
+// ---------------------------------------------------------------------------
+
+const PH_DATA: u32 = 1;
+const PH_ACK: u32 = 2;
+const PH_XFER: u32 = 3;
+const PH_XACK: u32 = 4;
+/// Per-message framing overhead charged on the fabric.
+const FRAME_BYTES: usize = 64;
+
+/// Pack (phase, epoch, index) into a message tag. Epochs wrap at 4096 and
+/// indices at 65536 — far beyond any run this harness drives, and stale
+/// traffic is additionally fenced by the epoch check on receive.
+fn tag(phase: u32, epoch: u64, idx: usize) -> u32 {
+    (phase << 28) | ((epoch as u32 & 0xfff) << 16) | (idx as u32 & 0xffff)
+}
+
+fn untag(t: u32) -> (u32, u32, usize) {
+    (t >> 28, (t >> 16) & 0xfff, (t & 0xffff) as usize)
+}
+
+fn epoch_low(epoch: u64) -> u32 {
+    (epoch & 0xfff) as u32
+}
+
+/// How a worker (re)builds expert state when adopting an epoch plan.
+#[derive(Clone, Debug)]
+enum Restore {
+    /// Keep live state (failover / grow — no rollback).
+    Keep,
+    /// Deterministic fresh init from the run seed (epoch 0, static restart).
+    Scratch,
+    /// Load hosted experts from this verified manifest's shard files.
+    Manifest(Manifest),
+}
+
+/// Everything a worker needs to execute one epoch.
+#[derive(Clone, Debug)]
+struct EpochPlan {
+    epoch: u64,
+    members: Vec<usize>,
+    start_iter: usize,
+    /// Expert -> primary (reports the loss, saves the shard).
+    assignment: Vec<(u32, usize)>,
+    /// Expert -> all holders in copy order (every holder applies updates).
+    hosting: Vec<(u32, Vec<usize>)>,
+    restore: Restore,
+    /// Live weight migrations `(expert, from, to)` executed over the data
+    /// plane before the epoch starts (AG-style expert transmission).
+    transfers: Vec<(u32, usize, usize)>,
+}
+
+enum Ctrl {
+    Epoch(EpochPlan),
+    Shutdown,
+}
+
+enum ToCoord {
+    Beat { node: usize },
+    IterDone { node: usize, epoch: u64, iter: usize, loss: f64, experts: usize },
+    CkptDone { node: usize, epoch: u64, iter: usize },
+    /// Liveness backstop: a worker waited a full lease timeout inside one
+    /// exchange. Counted, not acted on — the lease machinery owns recovery.
+    Stalled { node: usize },
+}
+
+/// Mutable data-plane routing: revived nodes swap a fresh receiver into
+/// their slot; sends to dead receivers are silently dropped (the wire ate
+/// them — exactly what the ack-retry layer is for).
+struct Router {
+    slots: Mutex<Vec<Option<Sender<Message>>>>,
+}
+
+impl Router {
+    fn new(n: usize) -> Self {
+        Self { slots: Mutex::new((0..n).map(|_| None).collect()) }
+    }
+
+    fn install(&self, node: usize, tx: Sender<Message>) {
+        self.slots.lock().unwrap()[node] = Some(tx);
+    }
+
+    fn deliver(&self, to: usize, m: Message) {
+        if let Some(tx) = self.slots.lock().unwrap()[to].as_ref() {
+            let _ = tx.send(m);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Durable checkpoint manifests
+// ---------------------------------------------------------------------------
+
+fn shard_name(iter: usize, epoch: u64, node: usize) -> String {
+    format!("shard_i{iter:06}_e{epoch:04}_n{node:03}")
+}
+
+fn manifest_name(iter: usize, epoch: u64) -> String {
+    format!("manifest_i{iter:06}_e{epoch:04}")
+}
+
+/// A published checkpoint generation: every member's primary-expert shard
+/// at one boundary. The manifest is written *after* all shards (two-phase
+/// publish), so a manifest that exists names only fully-written shards —
+/// unless the disk tore them later, which verification catches.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub iter: usize,
+    pub epoch: u64,
+    pub shards: Vec<(usize, String)>,
+}
+
+impl Manifest {
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut s = format!("{}\n{}\n", self.iter, self.epoch);
+        for (node, file) in &self.shards {
+            s.push_str(&format!("{node} {file}\n"));
+        }
+        s.into_bytes()
+    }
+
+    fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let text = std::str::from_utf8(bytes).context("manifest is not UTF-8")?;
+        let mut lines = text.lines();
+        let iter: usize =
+            lines.next().context("manifest missing iter line")?.trim().parse()?;
+        let epoch: u64 =
+            lines.next().context("manifest missing epoch line")?.trim().parse()?;
+        let mut shards = Vec::new();
+        for l in lines {
+            let (node, file) = l.split_once(' ').context("malformed shard line")?;
+            shards.push((node.parse::<usize>()?, file.to_string()));
+        }
+        ensure!(!shards.is_empty(), "manifest names no shards");
+        Ok(Self { iter, epoch, shards })
+    }
+}
+
+fn save_shard(
+    store: &CheckpointStore,
+    iter: usize,
+    epoch: u64,
+    node: usize,
+    expert_ids: &[u32],
+    experts: &[Vec<f32>],
+    dim: usize,
+) -> Result<String> {
+    let shared = vec![0.0f32; dim];
+    // k = dim keeps every residual coordinate: bit-exact restore
+    let ck = Checkpoint::capture(experts, &shared, dim);
+    let mut payload = Vec::new();
+    payload.extend_from_slice(&(expert_ids.len() as u32).to_le_bytes());
+    for e in expert_ids {
+        payload.extend_from_slice(&e.to_le_bytes());
+    }
+    payload.extend_from_slice(&ck.to_bytes());
+    let name = shard_name(iter, epoch, node);
+    store.save(&name, &payload)?;
+    Ok(name)
+}
+
+fn load_shard(store: &CheckpointStore, name: &str) -> Result<(Vec<u32>, Checkpoint)> {
+    let payload = store.load(name)?;
+    ensure!(payload.len() >= 4, "shard {name} too short");
+    let n = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    ensure!(payload.len() >= 4 + 4 * n, "shard {name} truncated id table");
+    let ids: Vec<u32> = (0..n)
+        .map(|i| u32::from_le_bytes(payload[4 + 4 * i..8 + 4 * i].try_into().unwrap()))
+        .collect();
+    let ck = Checkpoint::from_bytes(&payload[4 + 4 * n..])?;
+    ensure!(ck.n_experts() == n, "shard {name}: id table and frames disagree");
+    Ok((ids, ck))
+}
+
+/// Crash-consistent restore selection: newest-first over the published
+/// manifests with `iter <= max_iter`, returning the first generation whose
+/// manifest *and every shard* pass the length+checksum footer check. A
+/// torn or corrupt generation is skipped in favor of the previous one.
+pub fn select_restore(
+    store: &CheckpointStore,
+    manifests: &[Manifest],
+    max_iter: usize,
+) -> Option<Manifest> {
+    manifests
+        .iter()
+        .rev()
+        .find(|m| {
+            let manifest_ok = match store.load(&manifest_name(m.iter, m.epoch)) {
+                Ok(b) => Manifest::from_bytes(&b).is_ok(),
+                Err(_) => false,
+            };
+            m.iter <= max_iter
+                && manifest_ok
+                && m.shards.iter().all(|(_, f)| load_shard(store, f).is_ok())
+        })
+        .cloned()
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic shard trainer
+// ---------------------------------------------------------------------------
+//
+// Every holder of expert `e` runs the identical f32 recurrence
+// `w <- w + lr (target_e - w)` per iteration, so replica copies are
+// bit-identical to the primary's and the loss of `(e, iter)` is a pure
+// function of the applied-update count — the property the conservation
+// gate checks against a fault-free reference run.
+
+const LR: f32 = 0.05;
+
+fn init_expert(seed: u64, e: u32, dim: usize) -> Vec<f32> {
+    let mut r = Rng::new(seed ^ 0x1111_0000 ^ e as u64);
+    (0..dim).map(|_| r.f32()).collect()
+}
+
+fn target_of(seed: u64, e: u32, dim: usize) -> Vec<f32> {
+    let mut r = Rng::new(seed ^ 0xa5a5_0000 ^ e as u64);
+    (0..dim).map(|_| r.f32()).collect()
+}
+
+fn apply_update(w: &mut [f32], tgt: &[f32]) {
+    for (wi, ti) in w.iter_mut().zip(tgt) {
+        *wi += LR * (ti - *wi);
+    }
+}
+
+fn sq_loss(w: &[f32], tgt: &[f32]) -> f64 {
+    let s: f64 = w.iter().zip(tgt).map(|(a, b)| ((b - a) as f64).powi(2)).sum();
+    s / w.len() as f64
+}
+
+/// The committed loss history of a fault-free run: what any chaotic run
+/// must reproduce (up to f64 summation order across reporting shards).
+pub fn reference_losses(cfg: &HarnessCfg) -> Vec<f64> {
+    let e_total = cfg.e_total();
+    let mut ws: Vec<Vec<f32>> =
+        (0..e_total as u32).map(|e| init_expert(cfg.seed, e, cfg.expert_dim)).collect();
+    let tgts: Vec<Vec<f32>> =
+        (0..e_total as u32).map(|e| target_of(cfg.seed, e, cfg.expert_dim)).collect();
+    (0..cfg.iters)
+        .map(|_| {
+            let mut s = 0.0;
+            for (w, t) in ws.iter_mut().zip(&tgts) {
+                apply_update(w, t);
+                s += sq_loss(w, t);
+            }
+            s
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Worker
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, Default)]
+struct WorkerStats {
+    executed: usize,
+    beats: usize,
+    beat_bytes: usize,
+    data_bytes: usize,
+    shards: usize,
+}
+
+/// Where a blocking worker phase ended.
+enum Flow {
+    Clean,
+    Preempt(EpochPlan),
+    Halt,
+}
+
+enum Apply {
+    Run(usize),
+    Preempt(EpochPlan),
+    Exit,
+    Halt,
+}
+
+struct Worker {
+    me: usize,
+    cfg: HarnessCfg,
+    fabric: Arc<Fabric>,
+    router: Arc<Router>,
+    inbox: Receiver<Message>,
+    ctrl: Receiver<Ctrl>,
+    coord: Sender<ToCoord>,
+    /// This node's scheduled faults (revived workers are born with the
+    /// kill that created them already filtered out).
+    faults: Vec<NodeFault>,
+    consumed_faults: BTreeSet<usize>,
+    store: CheckpointStore,
+    epoch: u64,
+    members: Vec<usize>,
+    weights: BTreeMap<u32, Vec<f32>>,
+    /// Updates applied per expert — the exactly-once ledger.
+    applied: BTreeMap<u32, usize>,
+    /// `(expert, iter) -> loss` memo for re-reported iterations.
+    memo: BTreeMap<(u32, usize), f64>,
+    primaries: Vec<u32>,
+    hosted: Vec<u32>,
+    stash: Vec<Message>,
+    seen: BTreeSet<(u32, usize)>,
+    acked: BTreeSet<(u32, usize)>,
+    last_beat: Option<Instant>,
+    hard_deadline: Instant,
+    stats: WorkerStats,
+}
+
+impl Worker {
+    fn run(mut self) -> WorkerStats {
+        let mut pending: Option<EpochPlan> = None;
+        'outer: loop {
+            let plan = match pending.take() {
+                Some(p) => p,
+                None => match self.await_plan() {
+                    Some(p) => p,
+                    None => break 'outer,
+                },
+            };
+            match self.apply_plan(plan) {
+                Apply::Run(start) => match self.run_iters(start) {
+                    Flow::Preempt(p) => pending = Some(p),
+                    Flow::Halt => break 'outer,
+                    Flow::Clean => match self.drain() {
+                        Flow::Preempt(p) => pending = Some(p),
+                        _ => break 'outer,
+                    },
+                },
+                Apply::Preempt(p) => pending = Some(p),
+                Apply::Exit | Apply::Halt => break 'outer,
+            }
+        }
+        self.stats
+    }
+
+    fn period(&self) -> Duration {
+        Duration::from_secs_f64(self.cfg.lease.period_secs)
+    }
+
+    fn await_plan(&mut self) -> Option<EpochPlan> {
+        loop {
+            if Instant::now() >= self.hard_deadline {
+                return None;
+            }
+            match self.ctrl.recv_timeout(self.period()) {
+                Ok(Ctrl::Epoch(p)) => return Some(p),
+                Ok(Ctrl::Shutdown) | Err(RecvTimeoutError::Disconnected) => return None,
+                Err(RecvTimeoutError::Timeout) => {
+                    self.beat();
+                    self.pump(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+
+    fn apply_plan(&mut self, plan: EpochPlan) -> Apply {
+        if !plan.members.contains(&self.me) {
+            return Apply::Exit; // fenced out — this worker is done
+        }
+        self.epoch = plan.epoch;
+        self.members = plan.members.clone();
+        self.stash.clear();
+        self.seen.clear();
+        self.acked.clear();
+        self.primaries =
+            plan.assignment.iter().filter(|(_, n)| *n == self.me).map(|(e, _)| *e).collect();
+        let hosted: Vec<u32> =
+            plan.hosting.iter().filter(|(_, hs)| hs.contains(&self.me)).map(|(e, _)| *e).collect();
+        match &plan.restore {
+            Restore::Keep => {}
+            Restore::Scratch => {
+                self.weights.clear();
+                self.applied.clear();
+                self.memo.clear();
+                for &e in &hosted {
+                    self.weights.insert(e, init_expert(self.cfg.seed, e, self.cfg.expert_dim));
+                    self.applied.insert(e, 0);
+                }
+            }
+            Restore::Manifest(m) => {
+                self.weights.clear();
+                self.applied.clear();
+                self.memo.clear();
+                for (_, file) in &m.shards {
+                    // the coordinator verified every shard before electing
+                    // this manifest; a failure here means the disk mutated
+                    // underneath us mid-recovery — fatal, not recoverable
+                    let Ok((ids, ck)) = load_shard(&self.store, file) else {
+                        return Apply::Halt;
+                    };
+                    for (i, e) in ids.iter().enumerate() {
+                        if hosted.contains(e) {
+                            self.weights.insert(*e, ck.restore_expert(i));
+                            self.applied.insert(*e, m.iter);
+                        }
+                    }
+                }
+            }
+        }
+        // live migrations run BEFORE dropping no-longer-hosted state: the
+        // transfer source may be shedding the very expert it ships
+        if !plan.transfers.is_empty() {
+            match self.run_transfers(&plan) {
+                Flow::Clean => {}
+                Flow::Preempt(p) => return Apply::Preempt(p),
+                Flow::Halt => return Apply::Halt,
+            }
+        }
+        self.weights.retain(|e, _| hosted.contains(e));
+        self.applied.retain(|e, _| hosted.contains(e));
+        self.memo.retain(|(e, it), _| hosted.contains(e) && *it >= plan.start_iter);
+        self.hosted = hosted;
+        Apply::Run(plan.start_iter)
+    }
+
+    fn run_iters(&mut self, start: usize) -> Flow {
+        let mut iter = start;
+        while iter < self.cfg.iters {
+            if Instant::now() >= self.hard_deadline {
+                return Flow::Halt;
+            }
+            match self.ctrl.try_recv() {
+                Ok(Ctrl::Epoch(p)) => return Flow::Preempt(p),
+                Ok(Ctrl::Shutdown) => return Flow::Halt,
+                Err(_) => {}
+            }
+            // scheduled chaos strikes before the iteration executes
+            if let Some(f) = self
+                .faults
+                .iter()
+                .find(|f| f.at_iter == iter && !self.consumed_faults.contains(&f.at_iter))
+                .copied()
+            {
+                self.consumed_faults.insert(f.at_iter);
+                match f.kind {
+                    NodeFaultKind::Kill => return Flow::Halt, // crash: vanish
+                    NodeFaultKind::Stall(secs) => {
+                        // beats stop for the whole sleep — detection is real
+                        std::thread::sleep(Duration::from_secs_f64(secs));
+                    }
+                }
+            }
+            self.beat();
+            match self.exchange(iter) {
+                Flow::Clean => {}
+                other => return other,
+            }
+            // apply + report: skip updates already applied (exactly-once)
+            let mut partial = 0.0f64;
+            for i in 0..self.hosted.len() {
+                let e = self.hosted[i];
+                let tgt = target_of(self.cfg.seed, e, self.cfg.expert_dim);
+                let w = self.weights.get_mut(&e).expect("hosted expert has state");
+                let a = self.applied.entry(e).or_insert(0);
+                if *a <= iter {
+                    apply_update(w, &tgt);
+                    *a = iter + 1;
+                }
+                let loss = *self.memo.entry((e, iter)).or_insert_with(|| sq_loss(w, &tgt));
+                if self.primaries.contains(&e) {
+                    partial += loss;
+                }
+            }
+            let _ = self.coord.send(ToCoord::IterDone {
+                node: self.me,
+                epoch: self.epoch,
+                iter,
+                loss: partial,
+                experts: self.primaries.len(),
+            });
+            self.stats.executed += 1;
+            // keep only the memo window a no-rollback resume can re-read
+            let keep_from = (iter + 1).saturating_sub(self.cfg.checkpoint_interval + 4);
+            self.memo.retain(|(_, it), _| *it >= keep_from);
+            let boundary = iter + 1;
+            if boundary % self.cfg.checkpoint_interval == 0 {
+                if self.save_shard(boundary).is_err() {
+                    return Flow::Halt; // disk gone — the lease will notice
+                }
+                let _ = self.coord.send(ToCoord::CkptDone {
+                    node: self.me,
+                    epoch: self.epoch,
+                    iter: boundary,
+                });
+                self.stats.shards += 1;
+            }
+            iter += 1;
+        }
+        Flow::Clean
+    }
+
+    fn save_shard(&mut self, boundary: usize) -> Result<()> {
+        let experts: Vec<Vec<f32>> =
+            self.primaries.iter().map(|e| self.weights[e].clone()).collect();
+        save_shard(
+            &self.store,
+            boundary,
+            self.epoch,
+            self.me,
+            &self.primaries,
+            &experts,
+            self.cfg.expert_dim,
+        )?;
+        Ok(())
+    }
+
+    /// Reliable all-to-all of `payload_bytes` for one iteration: DATA out
+    /// to every peer with ack-retry ([`RetryCfg`] backoff), completion
+    /// requires every peer's DATA in. Every wait is bounded: preemption is
+    /// polled each loop, a lease-timeout's worth of stalling notifies the
+    /// coordinator, and the hard deadline guarantees thread exit.
+    fn exchange(&mut self, iter: usize) -> Flow {
+        let peers: Vec<usize> =
+            self.members.iter().copied().filter(|&p| p != self.me).collect();
+        if peers.is_empty() {
+            return Flow::Clean;
+        }
+        let dtag = tag(PH_DATA, self.epoch, iter);
+        let atag = tag(PH_ACK, self.epoch, iter);
+        let payload = vec![0u8; self.cfg.payload_bytes];
+        let retry = self.cfg.retry.clone();
+        let rto = self.period();
+        let now = Instant::now();
+        let mut pend: BTreeMap<usize, (u32, Instant)> = BTreeMap::new();
+        for &p in &peers {
+            self.send_raw(p, dtag, payload.clone());
+            pend.insert(p, (1, now + rto));
+        }
+        let mut have: BTreeSet<usize> = BTreeSet::new();
+        let stall_at = now
+            + Duration::from_secs_f64(self.cfg.lease.timeout_secs())
+            + 2 * self.period();
+        let mut stall_notified = false;
+        loop {
+            if Instant::now() >= self.hard_deadline {
+                return Flow::Halt;
+            }
+            match self.ctrl.try_recv() {
+                Ok(Ctrl::Epoch(p)) => return Flow::Preempt(p),
+                Ok(Ctrl::Shutdown) => return Flow::Halt,
+                Err(_) => {}
+            }
+            self.beat();
+            self.pump(Duration::from_millis(2));
+            self.stash.retain(|m| {
+                if m.tag == dtag {
+                    have.insert(m.from);
+                    false
+                } else {
+                    true
+                }
+            });
+            let acked = &self.acked;
+            pend.retain(|p, _| !acked.contains(&(atag, *p)));
+            if pend.is_empty() && peers.iter().all(|p| have.contains(p)) {
+                return Flow::Clean;
+            }
+            let t = Instant::now();
+            let due: Vec<usize> = pend
+                .iter()
+                .filter(|(_, (att, next))| t >= *next && (*att as usize) < retry.max_attempts)
+                .map(|(p, _)| *p)
+                .collect();
+            for p in due {
+                self.send_raw(p, dtag, payload.clone());
+                let entry = pend.get_mut(&p).unwrap();
+                entry.0 += 1;
+                entry.1 = t + rto + retry.backoff(entry.0);
+            }
+            if t >= stall_at && !stall_notified {
+                stall_notified = true;
+                let _ = self.coord.send(ToCoord::Stalled { node: self.me });
+            }
+        }
+    }
+
+    /// Execute the epoch plan's live weight migrations this node is party
+    /// to: ship `(expert, applied, weights)` with ack-retry, absorb the
+    /// experts addressed to us. Same bounded-wait discipline as exchange.
+    fn run_transfers(&mut self, plan: &EpochPlan) -> Flow {
+        let outbound: Vec<(u32, usize)> = plan
+            .transfers
+            .iter()
+            .filter(|(_, from, _)| *from == self.me)
+            .map(|(e, _, to)| (*e, *to))
+            .collect();
+        let mut expect: BTreeSet<u32> = plan
+            .transfers
+            .iter()
+            .filter(|(_, _, to)| *to == self.me)
+            .map(|(e, _, _)| *e)
+            .collect();
+        if outbound.is_empty() && expect.is_empty() {
+            return Flow::Clean;
+        }
+        let retry = self.cfg.retry.clone();
+        let rto = self.period();
+        let now = Instant::now();
+        let mut pend: BTreeMap<(u32, usize), (u32, Instant)> = BTreeMap::new();
+        for &(e, to) in &outbound {
+            self.send_xfer(e, to);
+            pend.insert((e, to), (1, now + rto));
+        }
+        let mut stall_notified = false;
+        let stall_at = now
+            + Duration::from_secs_f64(self.cfg.lease.timeout_secs())
+            + 2 * self.period();
+        loop {
+            if pend.is_empty() && expect.is_empty() {
+                return Flow::Clean;
+            }
+            if Instant::now() >= self.hard_deadline {
+                return Flow::Halt;
+            }
+            match self.ctrl.try_recv() {
+                Ok(Ctrl::Epoch(p)) => return Flow::Preempt(p),
+                Ok(Ctrl::Shutdown) => return Flow::Halt,
+                Err(_) => {}
+            }
+            self.beat();
+            self.pump(Duration::from_millis(2));
+            // absorb arrived expert payloads addressed to us
+            let stash = std::mem::take(&mut self.stash);
+            for m in stash {
+                let (phase, _, idx) = untag(m.tag);
+                let e = idx as u32;
+                if phase == PH_XFER && expect.remove(&e) {
+                    let applied =
+                        u32::from_le_bytes(m.bytes[0..4].try_into().unwrap()) as usize;
+                    self.weights.insert(e, bytes_to_f32s(&m.bytes[4..]));
+                    self.applied.insert(e, applied);
+                    self.memo.retain(|(ee, _), _| *ee != e);
+                } else {
+                    self.stash.push(m);
+                }
+            }
+            let acked = &self.acked;
+            let epoch = self.epoch;
+            pend.retain(|(e, to), _| {
+                !acked.contains(&(tag(PH_XACK, epoch, *e as usize), *to))
+            });
+            let t = Instant::now();
+            let due: Vec<(u32, usize)> = pend
+                .iter()
+                .filter(|(_, (att, next))| t >= *next && (*att as usize) < retry.max_attempts)
+                .map(|(k, _)| *k)
+                .collect();
+            for (e, to) in due {
+                self.send_xfer(e, to);
+                let entry = pend.get_mut(&(e, to)).unwrap();
+                entry.0 += 1;
+                entry.1 = t + rto + retry.backoff(entry.0);
+            }
+            if t >= stall_at && !stall_notified {
+                stall_notified = true;
+                let _ = self.coord.send(ToCoord::Stalled { node: self.me });
+            }
+        }
+    }
+
+    fn send_xfer(&mut self, e: u32, to: usize) {
+        let mut bytes =
+            Vec::with_capacity(4 + 4 * self.cfg.expert_dim);
+        let applied = self.applied.get(&e).copied().unwrap_or(0) as u32;
+        bytes.extend_from_slice(&applied.to_le_bytes());
+        bytes.extend_from_slice(&f32s_to_bytes(
+            self.weights.get(&e).expect("transfer source holds the expert"),
+        ));
+        let t = tag(PH_XFER, self.epoch, e as usize);
+        self.send_raw(to, t, bytes);
+    }
+
+    /// Idle wait after finishing all iterations: keep beating (the lease
+    /// stays live), keep acking peers that are still behind, and stay
+    /// preemptible — a late recovery can still roll this worker back.
+    fn drain(&mut self) -> Flow {
+        loop {
+            if Instant::now() >= self.hard_deadline {
+                return Flow::Halt;
+            }
+            match self.ctrl.recv_timeout(Duration::from_millis(10)) {
+                Ok(Ctrl::Epoch(p)) => return Flow::Preempt(p),
+                Ok(Ctrl::Shutdown) | Err(RecvTimeoutError::Disconnected) => return Flow::Halt,
+                Err(RecvTimeoutError::Timeout) => {
+                    self.beat();
+                    self.pump(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+
+    /// Send one heartbeat per lease period. Beats are exempt from
+    /// per-message chaos on purpose: missed-beat detection is exercised by
+    /// the *node* faults (a kill or stall silences the beat source
+    /// entirely), and keeping beat delivery reliable is what makes lease
+    /// expiries a function of the schedule rather than of wall-clock
+    /// alignment between drop patterns and detection windows — the
+    /// determinism contract the soak gate diffs logs under.
+    fn beat(&mut self) {
+        if self.last_beat.is_some_and(|t| t.elapsed() < self.period()) {
+            return;
+        }
+        self.last_beat = Some(Instant::now());
+        self.stats.beats += 1;
+        self.stats.beat_bytes += self.cfg.lease.beat_bytes as usize;
+        let _ = self.coord.send(ToCoord::Beat { node: self.me });
+    }
+
+    /// Drain the data inbox for up to `wait`, acking DATA/XFER for the
+    /// current epoch (stale-epoch traffic is dropped unacked — the sender
+    /// will retry after it adopts the new epoch) and recording acks.
+    fn pump(&mut self, wait: Duration) {
+        let deadline = Instant::now() + wait;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                while let Ok(m) = self.inbox.try_recv() {
+                    self.sort_in(m);
+                }
+                return;
+            }
+            match self.inbox.recv_timeout(deadline - now) {
+                Ok(m) => self.sort_in(m),
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn sort_in(&mut self, m: Message) {
+        let (phase, ep, idx) = untag(m.tag);
+        if ep != epoch_low(self.epoch) {
+            return; // fenced: stale or future epoch
+        }
+        match phase {
+            PH_DATA | PH_XFER => {
+                let ack_phase = if phase == PH_DATA { PH_ACK } else { PH_XACK };
+                let from = m.from;
+                self.send_raw(from, tag(ack_phase, self.epoch, idx), Vec::new());
+                if self.seen.insert((m.tag, m.from)) {
+                    self.stash.push(m); // deduplicated: retransmits ack only
+                }
+            }
+            PH_ACK | PH_XACK => {
+                self.acked.insert((m.tag, m.from));
+            }
+            _ => {}
+        }
+    }
+
+    /// Put bytes on the wire: pays fabric pacing, consults the chaos
+    /// interposer, and only delivers to the receiver's inbox if the
+    /// message survived. Returns delivery for symmetry with
+    /// `WorkerCtx::send_tracked`; the ack layer is what makes it reliable.
+    fn send_raw(&mut self, to: usize, tag: u32, bytes: Vec<u8>) -> bool {
+        self.stats.data_bytes += bytes.len() + FRAME_BYTES;
+        if !self.fabric.transmit_interposed(self.me, to, bytes.len() + FRAME_BYTES) {
+            return false;
+        }
+        self.router.deliver(to, Message { from: self.me, tag, bytes });
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
+/// A membership re-solve recorded at recovery/grow time.
+#[derive(Clone, Debug)]
+pub struct Replan {
+    pub epoch: u64,
+    pub survivors: usize,
+    /// The joint solver's 4D config on the re-shaped cluster (`None` when
+    /// no candidate is feasible, e.g. a lone survivor).
+    pub config: Option<ParallelismConfig>,
+}
+
+/// Outcome of one harness run.
+#[derive(Clone, Debug)]
+pub struct HarnessReport {
+    pub committed: usize,
+    /// Committed per-iteration loss history (exactly-once: matches a
+    /// fault-free run of the same seed).
+    pub losses: Vec<f64>,
+    pub epochs: u64,
+    pub recoveries: usize,
+    pub lease_expiries: usize,
+    /// Published (all-member) checkpoint manifests.
+    pub checkpoints: usize,
+    /// Recoveries that restored from a durable manifest.
+    pub restores: usize,
+    /// Committed-front regressions summed over recoveries (iterations the
+    /// membership had to walk again).
+    pub redone_iters: usize,
+    /// Worker-iteration executions summed over all threads.
+    pub executed_iters: usize,
+    pub stall_backstops: usize,
+    pub heartbeats: usize,
+    pub heartbeat_bytes: usize,
+    pub data_bytes: usize,
+    pub wall_secs: f64,
+    /// Wall seconds from each recovery broadcast to its first new commit.
+    pub recovery_secs: Vec<f64>,
+    pub replans: Vec<Replan>,
+    pub log: EventLog,
+}
+
+struct Coordinator {
+    cfg: HarnessCfg,
+    schedule: ChaosSchedule,
+    fabric: Arc<Fabric>,
+    router: Arc<Router>,
+    store: CheckpointStore,
+    coord_tx: Sender<ToCoord>,
+    coord_rx: Receiver<ToCoord>,
+    ctrls: BTreeMap<usize, Sender<Ctrl>>,
+    handles: Vec<JoinHandle<WorkerStats>>,
+    members: Vec<usize>,
+    epoch: u64,
+    committed: usize,
+    losses: Vec<f64>,
+    /// Per-member completed-iteration high-water mark (current epoch).
+    done: BTreeMap<usize, usize>,
+    assignment: Vec<(u32, usize)>,
+    hosting: Vec<(u32, Vec<usize>)>,
+    /// Per-iteration (loss sum, experts reported) accumulator.
+    loss_acc: BTreeMap<usize, (f64, usize)>,
+    /// Per-boundary set of members whose shard landed (current epoch).
+    ckpt_acc: BTreeMap<usize, BTreeSet<usize>>,
+    manifests: Vec<Manifest>,
+    last_beat: BTreeMap<usize, Instant>,
+    /// Completed-iteration count of each expired node at detection.
+    dead_done: BTreeMap<usize, usize>,
+    revived: BTreeSet<usize>,
+    log: EventLog,
+    lease_expiries: usize,
+    recoveries: usize,
+    restores: usize,
+    redone: usize,
+    stall_backstops: usize,
+    published: usize,
+    recovery_t0: Option<Instant>,
+    recovery_secs: Vec<f64>,
+    replans: Vec<Replan>,
+    /// Nodes-as-DCs cluster tracking the live membership for the solver.
+    planner_cluster: ClusterSpec,
+    /// Node id at each surviving DC position of `planner_cluster`.
+    cluster_order: Vec<usize>,
+    t0: Instant,
+}
+
+impl Coordinator {
+    fn new(cfg: HarnessCfg, schedule: ChaosSchedule) -> Result<Self> {
+        let cluster = presets::dcs_x_gpus(cfg.nodes, 1, cfg.inter_gbps, cfg.intra_gbps);
+        let mut fabric = Fabric::new(cluster.clone(), cfg.time_scale);
+        if schedule.drop_p > 0.0 || schedule.delay_p > 0.0 {
+            fabric = fabric.with_interposer(Arc::new(schedule.interposer()));
+        }
+        let store = CheckpointStore::open(cfg.store_dir.clone())?;
+        let (coord_tx, coord_rx) = channel();
+        let mut co = Self {
+            members: (0..cfg.nodes).collect(),
+            cluster_order: (0..cfg.nodes).collect(),
+            planner_cluster: cluster,
+            fabric: Arc::new(fabric),
+            router: Arc::new(Router::new(cfg.nodes)),
+            store,
+            coord_tx,
+            coord_rx,
+            ctrls: BTreeMap::new(),
+            handles: Vec::new(),
+            epoch: 0,
+            committed: 0,
+            losses: Vec::new(),
+            done: (0..cfg.nodes).map(|n| (n, 0)).collect(),
+            assignment: Vec::new(),
+            hosting: Vec::new(),
+            loss_acc: BTreeMap::new(),
+            ckpt_acc: BTreeMap::new(),
+            manifests: Vec::new(),
+            last_beat: BTreeMap::new(),
+            dead_done: BTreeMap::new(),
+            revived: BTreeSet::new(),
+            log: EventLog::default(),
+            lease_expiries: 0,
+            recoveries: 0,
+            restores: 0,
+            redone: 0,
+            stall_backstops: 0,
+            published: 0,
+            recovery_t0: None,
+            recovery_secs: Vec::new(),
+            replans: Vec::new(),
+            t0: Instant::now(),
+            cfg,
+            schedule,
+        };
+        for node in 0..co.cfg.nodes {
+            co.spawn(node, None)?;
+        }
+        let (assignment, hosting) = co.layout();
+        co.assignment = assignment;
+        co.hosting = hosting;
+        co.log.push(Event::EpochStart {
+            epoch: 0,
+            members: co.members.clone(),
+            start_iter: 0,
+        });
+        co.broadcast(0, Restore::Scratch, Vec::new());
+        Ok(co)
+    }
+
+    /// Start (or restart, for revivals) the worker thread for `node`.
+    /// `born` is the iteration of the kill that created a revived worker —
+    /// its own faults are filtered to strictly later iterations.
+    fn spawn(&mut self, node: usize, born: Option<usize>) -> Result<()> {
+        let (data_tx, data_rx) = channel();
+        self.router.install(node, data_tx);
+        let (ctrl_tx, ctrl_rx) = channel();
+        self.ctrls.insert(node, ctrl_tx);
+        let w = Worker {
+            me: node,
+            cfg: self.cfg.clone(),
+            fabric: self.fabric.clone(),
+            router: self.router.clone(),
+            inbox: data_rx,
+            ctrl: ctrl_rx,
+            coord: self.coord_tx.clone(),
+            faults: self.schedule.faults_for(node, born),
+            consumed_faults: BTreeSet::new(),
+            store: CheckpointStore::open(self.cfg.store_dir.clone())?,
+            epoch: 0,
+            members: Vec::new(),
+            weights: BTreeMap::new(),
+            applied: BTreeMap::new(),
+            memo: BTreeMap::new(),
+            primaries: Vec::new(),
+            hosted: Vec::new(),
+            stash: Vec::new(),
+            seen: BTreeSet::new(),
+            acked: BTreeSet::new(),
+            last_beat: None,
+            hard_deadline: self.t0
+                + Duration::from_secs_f64(2.0 * self.cfg.watchdog_secs),
+            stats: WorkerStats::default(),
+        };
+        let h = std::thread::Builder::new()
+            .name(format!("harness-{node}"))
+            .spawn(move || w.run())
+            .context("spawning harness worker")?;
+        self.handles.push(h);
+        self.last_beat.insert(node, Instant::now());
+        Ok(())
+    }
+
+    /// Round-robin expert placement over the current membership: expert `e`
+    /// is primaried at position `e % m`, replicated on the next
+    /// `replicas - 1` positions (copy order = promotion order).
+    fn layout(&self) -> (Vec<(u32, usize)>, Vec<(u32, Vec<usize>)>) {
+        let m = self.members.len();
+        let r = self.cfg.replicas.min(m);
+        let mut assignment = Vec::new();
+        let mut hosting = Vec::new();
+        for e in 0..self.cfg.e_total() as u32 {
+            let pos = e as usize % m;
+            let holders: Vec<usize> =
+                (0..r).map(|j| self.members[(pos + j) % m]).collect();
+            assignment.push((e, holders[0]));
+            hosting.push((e, holders));
+        }
+        (assignment, hosting)
+    }
+
+    /// Send the current epoch plan to EVERY worker that ever ran — members
+    /// or not. Fencing: an evicted worker seeing a membership it is not in
+    /// exits instead of retrying into peers that no longer answer it.
+    fn broadcast(&self, start_iter: usize, restore: Restore, transfers: Vec<(u32, usize, usize)>) {
+        for tx in self.ctrls.values() {
+            let _ = tx.send(Ctrl::Epoch(EpochPlan {
+                epoch: self.epoch,
+                members: self.members.clone(),
+                start_iter,
+                assignment: self.assignment.clone(),
+                hosting: self.hosting.clone(),
+                restore: restore.clone(),
+                transfers: transfers.clone(),
+            }));
+        }
+    }
+
+    fn handle(&mut self, msg: ToCoord) {
+        match msg {
+            ToCoord::Beat { node } => {
+                if self.members.contains(&node) {
+                    self.last_beat.insert(node, Instant::now());
+                }
+            }
+            ToCoord::IterDone { node, epoch, iter, loss, experts } => {
+                if epoch != self.epoch || !self.members.contains(&node) {
+                    return; // fenced: a previous epoch's report
+                }
+                let d = self.done.entry(node).or_insert(0);
+                *d = (*d).max(iter + 1);
+                if iter >= self.committed && iter < self.cfg.iters {
+                    let acc = self.loss_acc.entry(iter).or_insert((0.0, 0));
+                    acc.0 += loss;
+                    acc.1 += experts;
+                }
+                self.advance();
+            }
+            ToCoord::CkptDone { node, epoch, iter } => {
+                if epoch != self.epoch || !self.members.contains(&node) {
+                    return;
+                }
+                self.ckpt_acc.entry(iter).or_default().insert(node);
+                self.try_publish(iter);
+            }
+            ToCoord::Stalled { .. } => self.stall_backstops += 1,
+        }
+    }
+
+    /// Advance the commit front: iteration `c` commits once every member
+    /// reported past it and all `e_total` expert losses accumulated.
+    fn advance(&mut self) {
+        while self.committed < self.cfg.iters {
+            let c = self.committed;
+            let all_past =
+                self.members.iter().all(|m| self.done.get(m).copied().unwrap_or(0) > c);
+            let full =
+                self.loss_acc.get(&c).map_or(false, |(_, n)| *n == self.cfg.e_total());
+            if !(all_past && full) {
+                return;
+            }
+            let (sum, _) = self.loss_acc.remove(&c).unwrap();
+            self.losses.push(sum);
+            self.committed += 1;
+            if let Some(t) = self.recovery_t0.take() {
+                self.recovery_secs.push(t.elapsed().as_secs_f64());
+            }
+            // revivals key on exact commit crossings: `committed` only
+            // moves in +1 steps here, so a pending revival fires the first
+            // time the front *equals* its bound — a deterministic instant,
+            // unlike detection-time commit values which wobble with acks
+            self.check_revivals();
+        }
+    }
+
+    fn check_revivals(&mut self) {
+        if self.committed >= self.cfg.iters {
+            return;
+        }
+        let due: Vec<NodeFault> = self
+            .schedule
+            .node_faults
+            .iter()
+            .filter(|f| {
+                matches!(f.kind, NodeFaultKind::Kill)
+                    && f.revive_at.map_or(false, |r| r <= self.committed)
+                    && !self.members.contains(&f.node)
+                    && !self.revived.contains(&f.node)
+            })
+            .copied()
+            .collect();
+        for f in due {
+            self.revived.insert(f.node);
+            // a spawn failure forfeits the revival; the run continues on
+            // the surviving membership
+            let _ = self.grow(f.node, f.at_iter);
+        }
+    }
+
+    /// Re-admit a revived node: new epoch, grown membership, re-laid-out
+    /// experts shipped to their new holders over the data plane, no
+    /// rollback (survivors keep live state).
+    fn grow(&mut self, node: usize, killed_at: usize) -> Result<()> {
+        self.epoch += 1;
+        self.recoveries += 1;
+        self.spawn(node, Some(killed_at))?;
+        let old_hosting = self.hosting.clone();
+        self.members.push(node);
+        self.members.sort_unstable();
+        let (assignment, hosting) = self.layout();
+        // each expert reaches its new holders from the old primary (the
+        // sender may itself be shedding the expert — workers migrate
+        // before dropping state)
+        let mut transfers = Vec::new();
+        for ((e, new_holders), (_, old_holders)) in hosting.iter().zip(&old_hosting) {
+            for &h in new_holders {
+                if !old_holders.contains(&h) {
+                    transfers.push((*e, old_holders[0], h));
+                }
+            }
+        }
+        self.assignment = assignment;
+        self.hosting = hosting;
+        let start = self.committed;
+        self.done = self.members.iter().map(|&m| (m, start)).collect();
+        self.loss_acc.clear();
+        self.ckpt_acc.clear();
+        let now = Instant::now();
+        for &m in &self.members {
+            self.last_beat.insert(m, now);
+        }
+        self.log.push(Event::Recovery {
+            epoch: self.epoch,
+            mode: RecoveryMode::Elastic,
+            dead: vec![],
+            joined: vec![node],
+            start_iter: start,
+            restored_from: None,
+        });
+        self.log.push(Event::EpochStart {
+            epoch: self.epoch,
+            members: self.members.clone(),
+            start_iter: start,
+        });
+        self.broadcast(start, Restore::Keep, transfers);
+        self.planner_cluster = presets::dcs_x_gpus(
+            self.members.len(),
+            1,
+            self.cfg.inter_gbps,
+            self.cfg.intra_gbps,
+        );
+        self.cluster_order = self.members.clone();
+        self.record_replan();
+        self.recovery_t0 = Some(Instant::now());
+        Ok(())
+    }
+
+    fn expired(&self) -> Vec<usize> {
+        let timeout = Duration::from_secs_f64(self.cfg.lease.timeout_secs());
+        self.members
+            .iter()
+            .copied()
+            .filter(|m| self.last_beat.get(m).map_or(true, |t| t.elapsed() > timeout))
+            .collect()
+    }
+
+    fn check_leases(&mut self) -> Result<()> {
+        if self.expired().is_empty() {
+            return Ok(());
+        }
+        // settle: drain in-flight beats for two periods before confirming —
+        // a beat racing the check clears its lease
+        let settle_until =
+            Instant::now() + 2 * Duration::from_secs_f64(self.cfg.lease.period_secs);
+        loop {
+            let now = Instant::now();
+            if now >= settle_until {
+                break;
+            }
+            match self.coord_rx.recv_timeout(settle_until - now) {
+                Ok(m) => self.handle(m),
+                Err(_) => break,
+            }
+        }
+        let dead = self.expired();
+        if dead.is_empty() {
+            return Ok(());
+        }
+        for &d in &dead {
+            let done = self.done.get(&d).copied().unwrap_or(0);
+            self.dead_done.insert(d, done);
+            self.log.push(Event::LeaseExpired { epoch: self.epoch, node: d, done });
+            self.lease_expiries += 1;
+        }
+        self.recover(&dead)
+    }
+
+    /// Evict `dead` and resume under the configured [`RecoveryMode`]:
+    ///
+    /// | mode            | rollback                         | restore        |
+    /// |-----------------|----------------------------------|----------------|
+    /// | ReplicaFailover (covered) | none — promote holders | live state     |
+    /// | Elastic         | last verified manifest `<= B`    | durable shards |
+    /// | StaticRestart   | everything                       | scratch init   |
+    ///
+    /// `B = floor((min_dead_done - 1) / interval) * interval` — derived from
+    /// the dead nodes' own progress, a schedule-deterministic quantity.
+    /// An uncovered failover falls back to (and logs) Elastic.
+    fn recover(&mut self, dead: &[usize]) -> Result<()> {
+        self.recoveries += 1;
+        let pre = self.committed;
+        self.members.retain(|m| !dead.contains(m));
+        ensure!(!self.members.is_empty(), "every node's lease expired — no survivors");
+        let min_dead_done = dead
+            .iter()
+            .filter_map(|d| self.dead_done.get(d))
+            .copied()
+            .min()
+            .unwrap_or(0);
+        let covered = self.cfg.recovery == RecoveryMode::ReplicaFailover
+            && self
+                .hosting
+                .iter()
+                .all(|(_, hs)| hs.iter().any(|h| self.members.contains(h)));
+        let (start, restore, restored_from, exec_mode) = if covered {
+            // promote the next surviving holder in copy order; the commit
+            // front stands. Resume one iteration early: a survivor may be
+            // wedged in the exchange *before* its compute of that
+            // iteration (the victim died owing it an ack), and re-running
+            // it is harmless for everyone else — applied-counts skip the
+            // update and the memoized loss is re-reported.
+            for (_, hs) in &mut self.hosting {
+                hs.retain(|h| self.members.contains(h));
+            }
+            for ((_, hs), a) in self.hosting.iter().zip(self.assignment.iter_mut()) {
+                a.1 = hs[0];
+            }
+            (
+                min_dead_done.saturating_sub(1),
+                Restore::Keep,
+                None,
+                RecoveryMode::ReplicaFailover,
+            )
+        } else if self.cfg.recovery == RecoveryMode::StaticRestart {
+            self.committed = 0;
+            self.losses.clear();
+            let (assignment, hosting) = self.layout();
+            self.assignment = assignment;
+            self.hosting = hosting;
+            (0, Restore::Scratch, None, RecoveryMode::StaticRestart)
+        } else {
+            let target = if min_dead_done == 0 {
+                0
+            } else {
+                ((min_dead_done - 1) / self.cfg.checkpoint_interval)
+                    * self.cfg.checkpoint_interval
+            };
+            let picked = select_restore(&self.store, &self.manifests, target);
+            let (assignment, hosting) = self.layout();
+            self.assignment = assignment;
+            self.hosting = hosting;
+            match picked {
+                Some(m) => {
+                    self.committed = m.iter;
+                    self.losses.truncate(m.iter);
+                    self.restores += 1;
+                    let it = m.iter;
+                    (it, Restore::Manifest(m), Some(it), RecoveryMode::Elastic)
+                }
+                None => {
+                    self.committed = 0;
+                    self.losses.clear();
+                    (0, Restore::Scratch, None, RecoveryMode::Elastic)
+                }
+            }
+        };
+        self.redone += pre.saturating_sub(start);
+        self.epoch += 1;
+        self.done = self.members.iter().map(|&m| (m, start)).collect();
+        self.loss_acc.clear();
+        self.ckpt_acc.clear();
+        let now = Instant::now();
+        for &m in &self.members {
+            self.last_beat.insert(m, now);
+        }
+        for d in dead {
+            self.last_beat.remove(d);
+        }
+        self.log.push(Event::Recovery {
+            epoch: self.epoch,
+            mode: exec_mode,
+            dead: dead.to_vec(),
+            joined: vec![],
+            start_iter: start,
+            restored_from,
+        });
+        self.log.push(Event::EpochStart {
+            epoch: self.epoch,
+            members: self.members.clone(),
+            start_iter: start,
+        });
+        self.broadcast(start, restore, Vec::new());
+        // re-solve parallelism on the shrunk cluster (simulation mirror:
+        // shrink_cluster + the joint solver)
+        let lost: BTreeSet<usize> = dead
+            .iter()
+            .filter_map(|d| self.cluster_order.iter().position(|n| n == d))
+            .collect();
+        if let Ok(shrunk) = shrink_cluster(&self.planner_cluster, &lost) {
+            self.planner_cluster = shrunk;
+            self.cluster_order.retain(|n| !dead.contains(n));
+            self.record_replan();
+        }
+        self.recovery_t0 = Some(Instant::now());
+        Ok(())
+    }
+
+    fn record_replan(&mut self) {
+        let w = MoEWorkload {
+            tokens_per_gpu: 64,
+            hidden: 32,
+            ffn: 64,
+            experts_per_gpu: self.cfg.experts_per_node,
+            k: 1,
+            moe_layers: 1,
+            pre_blocks: 1,
+            backward: false,
+        };
+        let pe_tx = (self.cfg.expert_dim * 4) as f64;
+        let config = solve_joint(&self.planner_cluster, &w, &GpuSpec::a800(), pe_tx)
+            .ok()
+            .map(|c| c.config);
+        self.replans.push(Replan {
+            epoch: self.epoch,
+            survivors: self.members.len(),
+            config,
+        });
+    }
+
+    /// Two-phase publish: once every current member's shard for boundary
+    /// `b` landed, write the manifest naming them. A crash between shards
+    /// and manifest leaves no manifest — the generation never existed.
+    fn try_publish(&mut self, b: usize) {
+        let complete = self
+            .ckpt_acc
+            .get(&b)
+            .map_or(false, |got| self.members.iter().all(|m| got.contains(m)));
+        if !complete {
+            return;
+        }
+        self.ckpt_acc.remove(&b);
+        let m = Manifest {
+            iter: b,
+            epoch: self.epoch,
+            shards: self
+                .members
+                .iter()
+                .map(|&n| (n, shard_name(b, self.epoch, n)))
+                .collect(),
+        };
+        if self.store.save(&manifest_name(b, self.epoch), &m.to_bytes()).is_ok() {
+            self.manifests.push(m);
+            self.log.push(Event::CheckpointSaved { epoch: self.epoch, iter: b });
+            self.published += 1;
+        }
+    }
+
+    fn drive(&mut self) -> Result<()> {
+        let tick =
+            Duration::from_secs_f64((self.cfg.lease.period_secs / 4.0).max(0.002));
+        loop {
+            ensure!(
+                self.t0.elapsed().as_secs_f64() <= self.cfg.watchdog_secs,
+                "harness watchdog: no finish within {}s (committed {}/{})",
+                self.cfg.watchdog_secs,
+                self.committed,
+                self.cfg.iters
+            );
+            if let Ok(m) = self.coord_rx.recv_timeout(tick) {
+                self.handle(m);
+            }
+            while let Ok(m) = self.coord_rx.try_recv() {
+                self.handle(m);
+            }
+            if self.committed >= self.cfg.iters {
+                return Ok(());
+            }
+            self.check_leases()?;
+        }
+    }
+
+    fn shutdown(&self) {
+        for tx in self.ctrls.values() {
+            let _ = tx.send(Ctrl::Shutdown);
+        }
+    }
+
+    fn join(&mut self) -> Result<WorkerStats> {
+        let mut agg = WorkerStats::default();
+        for h in self.handles.drain(..) {
+            match h.join() {
+                Ok(s) => {
+                    agg.executed += s.executed;
+                    agg.beats += s.beats;
+                    agg.beat_bytes += s.beat_bytes;
+                    agg.data_bytes += s.data_bytes;
+                    agg.shards += s.shards;
+                }
+                Err(_) => bail!("a harness worker panicked"),
+            }
+        }
+        Ok(agg)
+    }
+
+    fn finish(mut self) -> Result<HarnessReport> {
+        // grace window for the final boundary's shards to land and publish
+        let grace = Instant::now() + Duration::from_secs(1);
+        while !self.ckpt_acc.is_empty() && Instant::now() < grace {
+            if let Ok(m) = self.coord_rx.recv_timeout(Duration::from_millis(5)) {
+                self.handle(m);
+            }
+        }
+        self.log.push(Event::Finished {
+            epoch: self.epoch,
+            committed: self.committed,
+        });
+        self.shutdown();
+        let stats = self.join()?;
+        Ok(HarnessReport {
+            committed: self.committed,
+            losses: self.losses,
+            epochs: self.epoch + 1,
+            recoveries: self.recoveries,
+            lease_expiries: self.lease_expiries,
+            checkpoints: self.published,
+            restores: self.restores,
+            redone_iters: self.redone,
+            executed_iters: stats.executed,
+            stall_backstops: self.stall_backstops,
+            heartbeats: stats.beats,
+            heartbeat_bytes: stats.beat_bytes,
+            data_bytes: stats.data_bytes,
+            wall_secs: self.t0.elapsed().as_secs_f64(),
+            recovery_secs: self.recovery_secs,
+            replans: self.replans,
+            log: self.log,
+        })
+    }
+}
+
+/// Execute one chaos-harness run to completion (or watchdog abort).
+///
+/// The schedule is first nudged off checkpoint boundaries
+/// ([`ChaosSchedule::aligned_to`]) so fault/publication races cannot make
+/// the event log timing-dependent. Returns the report once all
+/// `cfg.iters` iterations committed; errors (never hangs) on watchdog
+/// expiry, worker panic, or total membership loss.
+pub fn run(cfg: &HarnessCfg, schedule: &ChaosSchedule) -> Result<HarnessReport> {
+    cfg.validate()?;
+    let schedule =
+        schedule.clone().aligned_to(cfg.checkpoint_interval, cfg.iters);
+    for f in &schedule.node_faults {
+        ensure!(
+            f.node < cfg.nodes,
+            "fault targets node {} but the run has {}",
+            f.node,
+            cfg.nodes
+        );
+    }
+    let mut co = Coordinator::new(cfg.clone(), schedule)?;
+    match co.drive() {
+        Ok(()) => co.finish(),
+        Err(e) => {
+            // bounded teardown even on abort: workers poll the control
+            // channel and hard-stop at 2x the watchdog regardless
+            co.shutdown();
+            let _ = co.join();
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(tag: &str) -> CheckpointStore {
+        let dir = std::env::temp_dir()
+            .join(format!("hybrid_ep_harness_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        CheckpointStore::open(dir).expect("open store")
+    }
+
+    #[test]
+    fn tags_round_trip_phase_epoch_and_index() {
+        for (phase, epoch, idx) in
+            [(PH_DATA, 0u64, 0usize), (PH_ACK, 4095, 65535), (PH_XFER, 7, 123), (PH_XACK, 4099, 42)]
+        {
+            let t = tag(phase, epoch, idx);
+            assert_eq!(untag(t), (phase, epoch_low(epoch), idx));
+        }
+    }
+
+    #[test]
+    fn cfg_validation_rejects_degenerate_runs() {
+        let ok = HarnessCfg::quick(4, 8, 1, std::env::temp_dir());
+        assert!(ok.validate().is_ok());
+        let mut c = ok.clone();
+        c.nodes = 0;
+        assert!(c.validate().is_err());
+        let mut c = ok.clone();
+        c.replicas = 9; // > nodes
+        assert!(c.validate().is_err());
+        let mut c = ok.clone();
+        c.replicas = 0;
+        assert!(c.validate().is_err());
+        let mut c = ok.clone();
+        c.checkpoint_interval = 0;
+        assert!(c.validate().is_err());
+        let mut c = ok.clone();
+        c.time_scale = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ok.clone();
+        c.watchdog_secs = f64::INFINITY;
+        assert!(c.validate().is_err());
+        let mut c = ok;
+        c.retry.max_attempts = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn manifest_codec_round_trips_and_rejects_garbage() {
+        let m = Manifest {
+            iter: 8,
+            epoch: 2,
+            shards: vec![(0, shard_name(8, 2, 0)), (3, shard_name(8, 2, 3))],
+        };
+        assert_eq!(Manifest::from_bytes(&m.to_bytes()).unwrap(), m);
+        assert!(Manifest::from_bytes(b"\n\n").is_err());
+        assert!(Manifest::from_bytes(b"8\n2\n").is_err(), "no shards");
+        assert!(Manifest::from_bytes(b"8\n2\nmalformed-line\n").is_err());
+    }
+
+    #[test]
+    fn shards_restore_bit_exact() {
+        let store = tmp_store("shard");
+        let experts: Vec<Vec<f32>> = (0..3u32).map(|e| init_expert(9, e, 16)).collect();
+        let name = save_shard(&store, 4, 0, 1, &[5, 7, 9], &experts, 16).unwrap();
+        let (ids, ck) = load_shard(&store, &name).unwrap();
+        assert_eq!(ids, vec![5, 7, 9]);
+        for (i, w) in experts.iter().enumerate() {
+            assert_eq!(&ck.restore_expert(i), w, "expert {i} not bit-exact");
+        }
+    }
+
+    #[test]
+    fn select_restore_skips_torn_generations() {
+        let store = tmp_store("torn");
+        let dim = 8;
+        let mut manifests = Vec::new();
+        for b in [4usize, 8] {
+            let mut shards = Vec::new();
+            for node in 0..2usize {
+                let experts: Vec<Vec<f32>> =
+                    (0..2u32).map(|e| init_expert(1, e, dim)).collect();
+                let ids = [node as u32 * 2, node as u32 * 2 + 1];
+                shards.push((node, save_shard(&store, b, 0, node, &ids, &experts, dim).unwrap()));
+            }
+            let m = Manifest { iter: b, epoch: 0, shards };
+            store.save(&manifest_name(b, 0), &m.to_bytes()).unwrap();
+            manifests.push(m);
+        }
+        // newest generation first, bounded by max_iter
+        assert_eq!(select_restore(&store, &manifests, 8).unwrap().iter, 8);
+        assert_eq!(select_restore(&store, &manifests, 7).unwrap().iter, 4);
+        assert!(select_restore(&store, &manifests, 3).is_none());
+        // tear a generation-8 shard on disk: fall back to generation 4
+        let victim = store.path_of(&shard_name(8, 0, 1));
+        let bytes = std::fs::read(&victim).unwrap();
+        std::fs::write(&victim, &bytes[..bytes.len() - 3]).unwrap();
+        assert_eq!(select_restore(&store, &manifests, 8).unwrap().iter, 4);
+        // tear generation 4's manifest too: nothing survives
+        let mpath = store.path_of(&manifest_name(4, 0));
+        let bytes = std::fs::read(&mpath).unwrap();
+        std::fs::write(&mpath, &bytes[..bytes.len() - 2]).unwrap();
+        assert!(select_restore(&store, &manifests, 8).is_none());
+    }
+
+    #[test]
+    fn reference_losses_are_deterministic_and_decreasing() {
+        let cfg = HarnessCfg::quick(3, 12, 77, std::env::temp_dir());
+        let a = reference_losses(&cfg);
+        assert_eq!(a, reference_losses(&cfg));
+        assert_eq!(a.len(), 12);
+        for w in a.windows(2) {
+            assert!(w[1] < w[0], "losses must strictly decrease: {w:?}");
+        }
+        let other = HarnessCfg::quick(3, 12, 78, std::env::temp_dir());
+        assert_ne!(reference_losses(&other), a);
+    }
+}
+

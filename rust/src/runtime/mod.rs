@@ -1,14 +1,24 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//! Runtime: PJRT execution of AOT-compiled JAX/Pallas artifacts, plus the
+//! live multi-node chaos harness.
 //!
-//! Python runs once at build time (`make artifacts`); this module is the
-//! request-path half: [`artifacts`] parses `manifest.json`, [`exec`] loads
-//! HLO **text** (`HloModuleProto::from_text_file` — the text parser reassigns
+//! Python runs once at build time (`make artifacts`); [`artifacts`] parses
+//! `manifest.json`, [`exec`] loads HLO **text**
+//! (`HloModuleProto::from_text_file` — the text parser reassigns
 //! instruction ids, which is why text, not serialized protos, is the
 //! interchange format with jax ≥ 0.5), compiles on `PjRtClient::cpu()` and
 //! executes with concrete inputs.
+//!
+//! [`harness`] runs a real concurrent trainer (one OS thread per node)
+//! under [`chaos`]-scheduled faults: coordinator leases, durable
+//! checkpoint manifests, and elastic/failover recovery — the live
+//! counterpart of the `netsim` failure simulations.
 
 pub mod artifacts;
+pub mod chaos;
 pub mod exec;
+pub mod harness;
 
 pub use artifacts::{Artifacts, ParamSpec, Profile};
+pub use chaos::{ChaosCfg, ChaosSchedule, Event, EventLog};
 pub use exec::{Engine, Executable};
+pub use harness::{reference_losses, HarnessCfg, HarnessReport};

@@ -237,6 +237,42 @@ mod tests {
         assert!(p.trim().parse::<f64>().is_err());
     }
 
+    /// The chaos flags (`chaos --seed/--nodes/--faults/--recovery-mode/
+    /// --drop-p/--delay-p/--revive/--quick`) follow the same contract as the
+    /// other subcommand flags: sane defaults when absent, well-formed input
+    /// parses, malformed input produces actionable messages.
+    #[test]
+    fn chaos_flags_parse_and_report_malformed_input() {
+        let a = parse(&[
+            "chaos", "--seed", "7", "--nodes", "5", "--faults", "2", "--recovery-mode",
+            "failover", "--drop-p", "0.05", "--delay-p", "0.1", "--revive", "--quick",
+        ]);
+        assert_eq!(a.usize_or("seed", 0).unwrap(), 7);
+        assert_eq!(a.usize_or("nodes", 4).unwrap(), 5);
+        assert_eq!(a.usize_or("faults", 2).unwrap(), 2);
+        assert_eq!(a.get_or("recovery-mode", "elastic"), "failover");
+        assert_eq!(a.f64_or("drop-p", 0.0).unwrap(), 0.05);
+        assert_eq!(a.f64_or("delay-p", 0.0).unwrap(), 0.1);
+        assert!(a.bool("revive") && a.bool("quick"));
+        // defaults when every flag is absent (mirrors cmd_chaos)
+        let none = parse(&["chaos"]);
+        assert_eq!(none.usize_or("seed", 0).unwrap(), 0);
+        assert_eq!(none.usize_or("nodes", 4).unwrap(), 4);
+        assert_eq!(none.get_or("recovery-mode", "elastic"), "elastic");
+        assert!(!none.bool("revive") && !none.bool("quick"));
+        // malformed scalars name the flag and echo the bad value
+        let bad = parse(&["chaos", "--nodes", "many"]);
+        let err = bad.usize_or("nodes", 4).unwrap_err().to_string();
+        assert!(err.contains("--nodes") && err.contains("many"), "unhelpful error: {err}");
+        let bad = parse(&["chaos", "--drop-p", "lots"]);
+        let err = bad.f64_or("drop-p", 0.0).unwrap_err().to_string();
+        assert!(err.contains("--drop-p") && err.contains("lots"), "unhelpful error: {err}");
+        // negative counts are rejected by the unsigned parse
+        assert!(parse(&["chaos", "--faults=-1"]).usize_or("faults", 2).is_err());
+        // fractional seeds are rejected (seeds are integers)
+        assert!(parse(&["chaos", "--seed", "1.5"]).usize_or("seed", 0).is_err());
+    }
+
     #[test]
     fn list_flags_parse_and_default() {
         let a = parse(&["--dcs", "8,16, 32", "--bw", "1.25,10"]);

@@ -1,0 +1,200 @@
+//! Chaos-harness integration: real concurrent runs under seeded fault
+//! schedules, checked against the fault-free reference.
+//!
+//! Acceptance gates exercised here:
+//! * soak over seeded random schedules — every run finishes (watchdog-
+//!   bounded, never wedges) and its committed loss history matches the
+//!   fault-free reference (no lost or double-counted optimizer steps);
+//! * identical seeds render byte-identical event logs;
+//! * elastic recovery strictly beats restart-from-scratch on late kills;
+//! * fault-free runs report zero false lease expiries and bounded
+//!   heartbeat overhead;
+//! * replica failover skips the checkpoint rollback entirely;
+//! * a killed node revives and rejoins at its scheduled commit.
+
+use std::path::PathBuf;
+
+use hybrid_ep::plan::replanner::elastic::RecoveryMode;
+use hybrid_ep::runtime::chaos::{ChaosCfg, ChaosSchedule, Event};
+use hybrid_ep::runtime::harness::{reference_losses, run, HarnessCfg};
+
+fn store_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hybrid_ep_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Committed histories must agree with the reference up to f64 summation
+/// order across reporting shards (~1e-16 relative; 1e-9 is generous).
+fn assert_losses_match(got: &[f64], want: &[f64], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: committed history length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= 1e-9 * w.abs().max(1.0),
+            "{ctx}: iteration {i} loss {g} diverged from reference {w}"
+        );
+    }
+}
+
+#[test]
+fn fault_free_run_commits_everything_with_zero_false_expiries() {
+    let cfg = HarnessCfg::quick(4, 10, 11, store_dir("clean"));
+    let r = run(&cfg, &ChaosSchedule::none(11)).expect("clean run");
+    assert_eq!(r.committed, 10);
+    assert_losses_match(&r.losses, &reference_losses(&cfg), "clean");
+    assert_eq!(r.lease_expiries, 0, "false expiry on a healthy run");
+    assert_eq!(r.recoveries, 0);
+    assert_eq!(r.epochs, 1);
+    assert_eq!(r.executed_iters, 4 * 10, "clean runs execute each iteration exactly once");
+    assert_eq!(r.checkpoints, 2, "boundaries 4 and 8");
+    assert!(r.heartbeats > 0);
+    assert!(
+        (r.heartbeat_bytes as f64) < 0.2 * r.data_bytes as f64,
+        "heartbeat overhead {} out of bound vs data {}",
+        r.heartbeat_bytes,
+        r.data_bytes
+    );
+    assert!(matches!(r.log.events.last(), Some(Event::Finished { committed: 10, .. })));
+}
+
+#[test]
+fn elastic_recovery_restores_last_checkpoint_and_conserves_losses() {
+    let cfg = HarnessCfg::quick(4, 14, 23, store_dir("elastic"));
+    let r = run(&cfg, &ChaosSchedule::none(23).kill(2, 9)).expect("elastic run");
+    assert_eq!(r.committed, 14);
+    assert_losses_match(&r.losses, &reference_losses(&cfg), "elastic");
+    assert_eq!(r.lease_expiries, 1);
+    assert_eq!(r.recoveries, 1);
+    assert_eq!(r.restores, 1, "must restore from the boundary-8 manifest");
+    assert_eq!(r.epochs, 2);
+    assert!(r.redone_iters >= 1, "rollback re-walks at least one iteration");
+    let text = r.log.to_text();
+    assert!(text.contains("lease-expired node=2 done=9"), "{text}");
+    assert!(text.contains("restored_from=Some(8)"), "{text}");
+    assert!(!r.replans.is_empty(), "recovery must re-solve the layout");
+    assert_eq!(r.replans[0].survivors, 3);
+    assert!(!r.recovery_secs.is_empty());
+}
+
+#[test]
+fn elastic_strictly_beats_static_restart_on_a_late_kill() {
+    let sched = ChaosSchedule::none(5).kill(1, 21);
+    let e_cfg = HarnessCfg::quick(4, 24, 5, store_dir("beats_elastic"));
+    let e = run(&e_cfg, &sched).expect("elastic");
+    let mut s_cfg = HarnessCfg::quick(4, 24, 5, store_dir("beats_static"));
+    s_cfg.recovery = RecoveryMode::StaticRestart;
+    let s = run(&s_cfg, &sched).expect("static restart");
+    assert_eq!(e.committed, 24);
+    assert_eq!(s.committed, 24);
+    assert_losses_match(&e.losses, &reference_losses(&e_cfg), "elastic");
+    assert_losses_match(&s.losses, &reference_losses(&s_cfg), "static");
+    assert_eq!(e.restores, 1);
+    assert_eq!(s.restores, 0);
+    assert!(s.log.to_text().contains("mode=StaticRestart"), "static restart must be logged");
+    assert!(
+        e.redone_iters < s.redone_iters,
+        "elastic redid {} iterations, static only {}",
+        e.redone_iters,
+        s.redone_iters
+    );
+    assert!(
+        e.executed_iters < s.executed_iters,
+        "elastic executed {} worker-iterations, static only {}",
+        e.executed_iters,
+        s.executed_iters
+    );
+    assert!(
+        e.wall_secs < s.wall_secs,
+        "elastic took {:.3}s, not faster than static {:.3}s",
+        e.wall_secs,
+        s.wall_secs
+    );
+}
+
+#[test]
+fn replica_failover_skips_rollback_when_a_replica_covers() {
+    let mut cfg = HarnessCfg::quick(4, 14, 31, store_dir("failover"));
+    cfg.recovery = RecoveryMode::ReplicaFailover;
+    let r = run(&cfg, &ChaosSchedule::none(31).kill(3, 9)).expect("failover run");
+    assert_eq!(r.committed, 14);
+    assert_losses_match(&r.losses, &reference_losses(&cfg), "failover");
+    assert_eq!(r.restores, 0, "failover must not touch the checkpoint store");
+    assert!(r.redone_iters <= 2, "no rollback: redid {}", r.redone_iters);
+    let text = r.log.to_text();
+    assert!(text.contains("mode=ReplicaFailover"), "{text}");
+    assert!(text.contains("restored_from=None"), "{text}");
+}
+
+#[test]
+fn killed_node_revives_and_rejoins_at_the_scheduled_commit() {
+    let cfg = HarnessCfg::quick(4, 16, 47, store_dir("revive"));
+    let sched = ChaosSchedule::none(47).kill(2, 6).reviving_at(10);
+    let r = run(&cfg, &sched).expect("revival run");
+    assert_eq!(r.committed, 16);
+    assert_losses_match(&r.losses, &reference_losses(&cfg), "revival");
+    assert_eq!(r.recoveries, 2, "one eviction + one grow");
+    assert_eq!(r.epochs, 3);
+    let text = r.log.to_text();
+    assert!(text.contains("joined=[2]"), "{text}");
+    assert!(text.contains("resume_from=10"), "{text}");
+}
+
+#[test]
+fn identical_seeds_produce_byte_identical_event_logs() {
+    for seed in [3u64, 9, 17, 29] {
+        let chaos = ChaosCfg {
+            seed,
+            faults: 2,
+            drop_p: 0.05,
+            delay_p: 0.10,
+            max_delay_sim_secs: 0.05,
+            revive: seed % 2 == 1,
+        };
+        let cfg_a = HarnessCfg::quick(4, 12, seed, store_dir(&format!("det_{seed}_a")));
+        let sched =
+            ChaosSchedule::random(4, 12, cfg_a.lease.timeout_secs(), &chaos).unwrap();
+        let a = run(&cfg_a, &sched).expect("run a");
+        let cfg_b = HarnessCfg::quick(4, 12, seed, store_dir(&format!("det_{seed}_b")));
+        let b = run(&cfg_b, &sched).expect("run b");
+        assert_eq!(a.log.to_text(), b.log.to_text(), "seed {seed}: event logs diverged");
+    }
+}
+
+#[test]
+fn soak_sixteen_seeded_schedules_never_wedge_and_conserve_losses() {
+    for seed in 0..16u64 {
+        let cfg = HarnessCfg::quick(4, 10, seed, store_dir(&format!("soak_{seed}")));
+        let chaos = ChaosCfg {
+            seed,
+            faults: 2,
+            drop_p: 0.05,
+            delay_p: 0.10,
+            max_delay_sim_secs: 0.05,
+            revive: seed % 3 == 0,
+        };
+        let sched =
+            ChaosSchedule::random(4, 10, cfg.lease.timeout_secs(), &chaos).unwrap();
+        let r = run(&cfg, &sched)
+            .unwrap_or_else(|e| panic!("seed {seed} wedged or failed: {e:#}"));
+        assert_eq!(r.committed, 10, "seed {seed}");
+        assert_losses_match(&r.losses, &reference_losses(&cfg), &format!("soak seed {seed}"));
+        assert_eq!(
+            r.log.count(|e| matches!(e, Event::Finished { .. })),
+            1,
+            "seed {seed}: exactly one Finished event"
+        );
+    }
+}
+
+#[test]
+fn watchdog_bounds_the_run_instead_of_wedging() {
+    let mut cfg = HarnessCfg::quick(4, 400, 3, store_dir("watchdog"));
+    cfg.watchdog_secs = 0.2; // far too tight for 400 iterations
+    let t0 = std::time::Instant::now();
+    let err = run(&cfg, &ChaosSchedule::none(3)).expect_err("must abort, not hang");
+    assert!(format!("{err:#}").contains("watchdog"), "{err:#}");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(10),
+        "teardown after the watchdog abort is not bounded"
+    );
+}
